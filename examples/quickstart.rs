@@ -1,0 +1,70 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Generate a synthetic UCR-style dataset (CBF).
+//! 2. Learn the alignment-path occupancy grid on the train split.
+//! 3. Threshold it into the sparse LOC search space.
+//! 4. Compare DTW vs SP-DTW: same decisions, far fewer visited cells.
+
+use spdtw::classify::nn::classify_1nn;
+use spdtw::data::synthetic;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::euclidean::Euclidean;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::sparse::learn::learn_occupancy_grid;
+
+fn main() -> spdtw::Result<()> {
+    // 1. data -------------------------------------------------------------
+    let ds = synthetic::generate_scaled("CBF", 42, 30, 120)?;
+    println!(
+        "dataset: {} (T={}, train={}, test={})",
+        ds.name,
+        ds.series_len(),
+        ds.train.len(),
+        ds.test.len()
+    );
+
+    // 2. learn the occupancy grid (Fig. 3 of the paper) --------------------
+    let grid = learn_occupancy_grid(&ds.train, 8);
+    println!(
+        "occupancy grid: {} of {} cells ever visited by an optimal path",
+        grid.support(),
+        grid.t * grid.t
+    );
+
+    // 3. sparsify ----------------------------------------------------------
+    let theta = 2.0; // percent of max occupancy (tuned by LOO in the full pipeline)
+    let loc = grid.threshold(theta).to_loc(1.0);
+    println!(
+        "LOC sparse search space: {} cells ({:.1}% speed-up vs full DTW)",
+        loc.nnz(),
+        loc.speedup_pct()
+    );
+
+    // 4. one pair, then a whole classification -----------------------------
+    let (a, b) = (&ds.test.series[0], &ds.test.series[1]);
+    let sp = SpDtw::new(loc);
+    let d_full = Dtw.dist(a, b);
+    let d_sp = sp.dist(a, b);
+    println!(
+        "pair distance: DTW={:.4} ({} cells) | SP-DTW={:.4} ({} cells)",
+        d_full.value, d_full.visited_cells, d_sp.value, d_sp.visited_cells
+    );
+
+    for (name, m) in [
+        ("Ed", &Euclidean as &dyn Measure),
+        ("DTW", &Dtw as &dyn Measure),
+        ("SP-DTW", &sp as &dyn Measure),
+    ] {
+        let r = classify_1nn(m, &ds.train, &ds.test, 8);
+        println!(
+            "1-NN [{name:>6}]: error={:.3}  visited cells={}",
+            r.error_rate, r.visited_cells
+        );
+    }
+    Ok(())
+}

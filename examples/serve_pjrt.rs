@@ -1,0 +1,105 @@
+//! Serving end-to-end driver: boots the full three-layer stack — AOT
+//! Pallas/XLA artifacts loaded by the PJRT runtime, fronted by the Rust
+//! coordinator with its length-bucket batcher — then drives a batched
+//! distance workload through BOTH backends and reports latency /
+//! throughput plus numeric parity.  This is the proof that all layers
+//! compose on a real workload (results recorded in EXPERIMENTS.md).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_pjrt
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::runtime::PjrtRuntime;
+use spdtw::sparse::learn::learn_occupancy_grid;
+
+fn main() -> spdtw::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let dataset = "SyntheticControl"; // T=60 — has dtw + krdtw buckets
+    let n_queries = 512;
+
+    // ---- model prep: learn + sparsify on train ---------------------------
+    let ds = synthetic::generate_scaled(dataset, 42, 60, 64)?;
+    let t = ds.series_len();
+    let grid = learn_occupancy_grid(&ds.train, 8);
+    let loc = grid.threshold(2.0).to_loc(1.0);
+    println!(
+        "{dataset}: T={t}, LOC {} cells ({:.1}% sparsity)",
+        loc.nnz(),
+        100.0 * loc.sparsity()
+    );
+
+    // ---- stack boot -------------------------------------------------------
+    let runtime = PjrtRuntime::start(&artifacts)?;
+    println!("pjrt: {}", runtime.handle().info()?.platform);
+
+    let queries: Vec<_> = (0..n_queries)
+        .map(|i| {
+            let a = &ds.test.series[i % ds.test.len()];
+            let b = &ds.train.series[(i * 7) % ds.train.len()];
+            (a.clone(), b.clone())
+        })
+        .collect();
+
+    let mut parity: Vec<(f64, f64)> = Vec::new();
+    for (label, prefer_pjrt) in [("native", false), ("pjrt", true)] {
+        let cfg = CoordinatorConfig {
+            prefer_pjrt,
+            flush_us: 2_000,
+            ..Default::default()
+        };
+        let coord = Arc::new(Coordinator::start(cfg, Some(runtime.handle()))?);
+        let key = coord.register_grid(loc.clone())?;
+
+        // warmup (compile on first batch)
+        let w = coord.submit_spdtw(key, &queries[0].0, &queries[0].1)?;
+        coord.flush();
+        w.wait()?;
+
+        let t0 = Instant::now();
+        let tickets: Vec<_> = queries
+            .iter()
+            .map(|(x, y)| coord.submit_spdtw(key, x, y))
+            .collect::<spdtw::Result<_>>()?;
+        coord.flush();
+        let values: Vec<f64> = tickets
+            .into_iter()
+            .map(|t| t.wait().map(|r| r.value))
+            .collect::<spdtw::Result<_>>()?;
+        let dt = t0.elapsed();
+        let snap = coord.metrics();
+        println!(
+            "\n[{label}] {n_queries} queries in {:.1} ms -> {:.0} pairs/s",
+            dt.as_secs_f64() * 1e3,
+            n_queries as f64 / dt.as_secs_f64()
+        );
+        println!("{}", snap.report());
+        if parity.is_empty() {
+            parity = values.iter().map(|&v| (v, 0.0)).collect();
+        } else {
+            for (p, &v) in parity.iter_mut().zip(&values) {
+                p.1 = v;
+            }
+        }
+    }
+
+    // ---- parity check ------------------------------------------------------
+    let sp = SpDtw::new(loc);
+    let direct = sp.dist(&queries[3].0, &queries[3].1).value;
+    let max_rel = parity
+        .iter()
+        .map(|&(a, b)| (a - b).abs() / a.abs().max(1e-9))
+        .fold(0.0f64, f64::max);
+    println!("\nnative vs pjrt max relative diff over {n_queries} queries: {max_rel:.2e}");
+    println!("spot check vs direct eval: {direct:.6} (native path {:.6})", parity[3].0);
+    assert!(max_rel < 1e-3, "backend parity violated");
+    println!("\nOK: three-layer stack (Pallas → HLO → PJRT → coordinator) verified.");
+    Ok(())
+}

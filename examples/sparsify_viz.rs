@@ -1,0 +1,52 @@
+//! Regenerates the paper's Figures 5-8: per-dataset panels comparing the
+//! optimal Sakoe-Chiba corridor, the raw sparse-paths occupancy grid and
+//! the thresholded grid.  Writes PPM/PGM images + ASCII previews under
+//! `out/figs/` and prints the ASCII art.
+//!
+//! ```bash
+//! cargo run --release --example sparsify_viz -- [dataset ...]
+//! ```
+
+use spdtw::data::synthetic;
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::tuning;
+use spdtw::viz::Heatmap;
+
+fn main() -> spdtw::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let datasets: Vec<String> = if args.is_empty() {
+        // the paper's Fig. 5-8 subjects
+        ["Beef", "BeetleFly", "ElectricDevices", "MedicalImages"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        args
+    };
+    let out = std::path::PathBuf::from("out/figs");
+    for name in &datasets {
+        let ds = synthetic::generate_scaled(name, 42, 24, 0)?;
+        let t = ds.series_len();
+        let grid = learn_occupancy_grid(&ds.train, 8);
+        let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), 8);
+        let (theta, _) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), 8);
+        let band = ((band_pct / 100.0) * t as f64).round() as usize;
+        println!("\n== {name} (T={t}) — optimal band={band}, θ={theta} ==");
+        let panels = [
+            ("sakoe_chiba", Heatmap::corridor(t, band)),
+            ("sparse_paths", Heatmap::from_occupancy(&grid)),
+            (
+                "thresholded",
+                Heatmap::from_loc_support(&grid.threshold(theta).to_loc_mask()),
+            ),
+        ];
+        for (panel, hm) in &panels {
+            let dir = out.join(name);
+            hm.write_ppm(&dir.join(format!("{panel}.ppm")), 256)?;
+            hm.write_pgm(&dir.join(format!("{panel}.pgm")), 256)?;
+            println!("\n-- {panel} --\n{}", hm.ascii(40));
+        }
+    }
+    println!("images written under out/figs/");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! End-to-end driver (DESIGN.md: the mandated full-system workload):
+//! run the complete paper pipeline — synthetic archive generation, grid
+//! learning, LOO meta-parameter tuning, 1-NN + SVM evaluation of every
+//! measure, visited-cell accounting — over a slice of the archive, and
+//! print Table II / IV / VI-style rows.  Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example ucr_classification -- [dataset ...]
+//! ```
+
+use spdtw::config::ExperimentConfig;
+use spdtw::experiments::runner::{evaluate_dataset, NN_METHODS, SVM_METHODS};
+use spdtw::util::timer::Stopwatch;
+
+fn main() -> spdtw::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let datasets: Vec<String> = if args.is_empty() {
+        ["CBF", "SyntheticControl", "Gun-Point", "ECGFiveDays", "Wine"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        args
+    };
+    let cfg = ExperimentConfig {
+        max_train: 30,
+        max_test: 40,
+        datasets: datasets.clone(),
+        ..Default::default()
+    };
+
+    println!(
+        "== SP-DTW end-to-end pipeline (seed={}, caps {}x{}) ==\n",
+        cfg.seed, cfg.max_train, cfg.max_test
+    );
+    let mut header = format!("{:<18}", "dataset");
+    for m in NN_METHODS {
+        header.push_str(&format!("{m:>10}"));
+    }
+    println!("-- Table II shape: 1-NN error rates --\n{header}");
+
+    let mut evals = Vec::new();
+    let mut sw = Stopwatch::new();
+    for name in &datasets {
+        let ev = sw.measure(name, || evaluate_dataset(&cfg, name, true))?;
+        let mut row = format!("{:<18}", ev.name);
+        for m in NN_METHODS {
+            row.push_str(&format!("{:>10.3}", ev.err_1nn[*m]));
+        }
+        println!("{row}");
+        evals.push(ev);
+    }
+
+    println!("\n-- Table IV shape: SVM error rates --");
+    let mut header = format!("{:<18}", "dataset");
+    for m in SVM_METHODS {
+        header.push_str(&format!("{m:>10}"));
+    }
+    println!("{header}");
+    for ev in &evals {
+        let mut row = format!("{:<18}", ev.name);
+        for m in SVM_METHODS {
+            row.push_str(&format!("{:>10.3}", ev.err_svm[*m]));
+        }
+        println!("{row}");
+    }
+
+    println!("\n-- Table VI shape: visited cells per comparison --");
+    println!(
+        "{:<18}{:>12}{:>12}{:>9}{:>12}{:>9}",
+        "dataset", "DTW", "SP-DTW", "S(%)", "SP-Krdtw", "S(%)"
+    );
+    for ev in &evals {
+        let full = ev.cells["DTW"] as f64;
+        let sp = ev.cells["SP-DTW"] as f64;
+        let spk = ev.cells["SP-Krdtw"] as f64;
+        println!(
+            "{:<18}{:>12}{:>12}{:>9.1}{:>12}{:>9.1}",
+            ev.name,
+            full as u64,
+            sp as u64,
+            100.0 * (1.0 - sp / full),
+            spk as u64,
+            100.0 * (1.0 - spk / full),
+        );
+    }
+
+    println!("\n-- tuned meta-parameters --");
+    for ev in &evals {
+        println!(
+            "{:<18} θ={:<4} γ={:<5} ν={:<6} band={}%",
+            ev.name, ev.theta, ev.gamma, ev.nu, ev.band_pct
+        );
+    }
+
+    println!("\n-- wall clock --\n{}", sw.report());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime — the Rust binary only
+consumes the HLO text artifacts produced by ``python -m compile.aot``.
+"""

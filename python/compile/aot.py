@@ -1,0 +1,105 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (kernel, T, B) bucket plus ``manifest.json``
+describing every artifact (kernel name, shapes, dtypes, argument order)
+for ``rust/src/runtime/artifact.rs``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # K_rdtw artifacts are f64
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Length buckets: chosen to cover the datasets the serving demo and the
+# runtime integration tests exercise (SyntheticControl T=60, CBF T=128,
+# Gun-Point T=150) plus a longer perf bucket.  Unknown lengths route to
+# the native backend (coordinator/router.rs fallback).
+DTW_BUCKETS = [(32, 60), (32, 128), (32, 150), (16, 512)]
+KRDTW_BUCKETS = [(32, 60), (32, 128), (32, 150)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, spec):
+    return jax.jit(fn).lower(*spec)
+
+
+def build(out_dir: str) -> dict:
+    entries = []
+    for b, t in DTW_BUCKETS:
+        name = f"dtw_T{t}_B{b}"
+        text = to_hlo_text(lower_entry(model.dtw_batch, model.dtw_batch_spec(b, t)))
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kernel": "dtw",
+                "name": name,
+                "file": name + ".hlo.txt",
+                "batch": b,
+                "length": t,
+                "dtype": "f32",
+                "args": ["x[B,T]", "y[B,T]", "wdiag[2T-1,T]"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    for b, t in KRDTW_BUCKETS:
+        name = f"krdtw_T{t}_B{b}"
+        text = to_hlo_text(
+            lower_entry(model.krdtw_batch, model.krdtw_batch_spec(b, t))
+        )
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kernel": "krdtw",
+                "name": name,
+                "file": name + ".hlo.txt",
+                "batch": b,
+                "length": t,
+                "dtype": "f64",
+                "args": ["x[B,T]", "y[B,T]", "mdiag[2T-1,T]", "nu[1]"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    return {"version": 1, "entries": entries}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = build(args.out_dir)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['entries'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

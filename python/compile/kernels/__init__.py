@@ -1,0 +1,28 @@
+"""Layer-1 Pallas kernels for SP-DTW / SP-Krdtw.
+
+Two wavefront (anti-diagonal) dynamic-programming kernels:
+
+- ``dtw_wavefront``   : weighted, masked DTW (covers DTW / DTW_sc / SP-DTW
+                        through the weight plane).
+- ``krdtw_wavefront`` : log-domain K_rdtw recurrence (covers K_rdtw,
+                        K_rdtw_sc and SP-K_rdtw through the binary mask
+                        plane).
+
+Both kernels consume the weight/mask matrix *packed per anti-diagonal*
+(shape ``(2T-1, T)``) so the DP inner loop performs no gathers; see
+``pack_diagonals``.  All kernels are lowered with ``interpret=True`` —
+the CPU PJRT client cannot execute Mosaic custom-calls.
+"""
+
+from .common import BIG, BIG_THRESH, NEG, pack_diagonals
+from .dtw_wavefront import dtw_wavefront
+from .krdtw_wavefront import krdtw_wavefront
+
+__all__ = [
+    "BIG",
+    "BIG_THRESH",
+    "NEG",
+    "pack_diagonals",
+    "dtw_wavefront",
+    "krdtw_wavefront",
+]

@@ -1,0 +1,36 @@
+"""Shared constants and helpers for the wavefront kernels.
+
+The sentinel conventions here MUST match ``rust/src/sparse/loc.rs``
+(`pack_weight_plane`) — the Rust coordinator packs the same planes at
+request time and feeds them to the AOT-compiled executables.
+"""
+
+import numpy as np
+
+# Additive "unreachable" sentinel for the min-plus DTW recurrence.
+# f32-safe: worst-case accumulation BIG * 2T stays < f32::MAX for T <= 4096.
+BIG = 1.0e30
+# Any weight >= BIG_THRESH marks a sparsified-out cell.
+BIG_THRESH = 1.0e29
+# Log-domain "zero" (log of 0) for the K_rdtw recurrence.
+NEG = -1.0e30
+
+
+def pack_diagonals(w, sentinel):
+    """Pack a (T, T) cell matrix into per-anti-diagonal rows (2T-1, T).
+
+    Row ``k`` holds the cells of anti-diagonal ``i + j == k`` indexed by
+    ``i``: ``out[k, i] = w[i, k - i]`` when ``0 <= k - i < T``, else
+    ``sentinel``.  Build-time / test helper; the Rust runtime implements
+    the identical packing natively.
+    """
+    w = np.asarray(w)
+    t = w.shape[0]
+    assert w.shape == (t, t), "weight matrix must be square"
+    out = np.full((2 * t - 1, t), sentinel, dtype=w.dtype)
+    for k in range(2 * t - 1):
+        lo = max(0, k - t + 1)
+        hi = min(k, t - 1)
+        i = np.arange(lo, hi + 1)
+        out[k, i] = w[i, k - i]
+    return out

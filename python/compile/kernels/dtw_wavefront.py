@@ -1,0 +1,112 @@
+"""Weighted, masked DTW as an anti-diagonal wavefront Pallas kernel.
+
+The DP recurrence (paper Eq. 4 generalized with SP-DTW cell weights,
+Algorithm 1):
+
+    D(i, j) = w(i, j) * (x_i - y_j)^2  +  min(D(i-1, j), D(i-1, j-1), D(i, j-1))
+
+is evaluated along anti-diagonals ``k = i + j``.  Cells on diagonal ``k``
+depend only on diagonals ``k-1`` and ``k-2``, so the kernel carries two
+``(B_tile, T)`` buffers in VMEM and never materializes the ``T x T`` DP
+matrix — this is the TPU-shaped formulation of the paper's CPU algorithm
+(DESIGN.md §Hardware-Adaptation).
+
+Sparsified-out cells arrive as weights ``>= BIG_THRESH`` in the packed
+weight plane; they contribute an additive ``BIG`` so no admissible path
+crosses them, mirroring the Max_Float initialization of Algorithm 1.
+
+The weight plane is shared across the batch (one plane per
+(dataset, measure-variant), computed once by the Rust coordinator), while
+``x`` and ``y`` carry the batched pairs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BIG, BIG_THRESH
+
+
+def _shift_right(d, fill):
+    """d[i] -> d[i-1] with ``fill`` entering at i = 0 (lane shift on TPU)."""
+    return jnp.concatenate([jnp.full_like(d[:, :1], fill), d[:, :-1]], axis=1)
+
+
+def _dtw_kernel(x_ref, y_ref, w_ref, o_ref):
+    x = x_ref[...]  # (bb, T)
+    y = y_ref[...]  # (bb, T)
+    w = w_ref[...]  # (2T-1, T) packed per anti-diagonal
+    bb, t = x.shape
+    dtype = x.dtype
+    big = jnp.asarray(BIG, dtype)
+    big_thresh = jnp.asarray(BIG_THRESH, dtype)
+
+    # y[k - i] for all i on diagonal k is a contiguous window of reversed y:
+    # with yrp = pad(flip(y), T on both sides), window_k[i] = yrp[2T-1-k+i].
+    yrp = jnp.concatenate(
+        [jnp.zeros((bb, t), dtype), jnp.flip(y, axis=1), jnp.zeros((bb, t), dtype)],
+        axis=1,
+    )
+    idx = jnp.arange(t)
+
+    def cell_cost(k, dmin):
+        """w(i, k-i) * (x_i - y_{k-i})^2 + dmin, BIG-masked, for all i."""
+        win = jax.lax.dynamic_slice(yrp, (0, 2 * t - 1 - k), (bb, t))
+        cost = (x - win) ** 2
+        wk = jax.lax.dynamic_slice(w, (k, 0), (1, t))[0]  # (T,)
+        masked = wk >= big_thresh
+        local = jnp.where(masked[None, :], big, cost * wk[None, :])
+        valid = (k - idx >= 0) & (k - idx <= t - 1)
+        return jnp.where(valid[None, :], local + dmin, big)
+
+    # Diagonal 0: single cell (0, 0) with no predecessor.
+    d0 = cell_cost(0, jnp.where((idx == 0)[None, :], 0.0, big).astype(dtype))
+    dm1 = jnp.full((bb, t), big, dtype)
+
+    def body(k, carry):
+        dprev2, dprev1 = carry
+        # Predecessors of (i, k-i): (i, k-1-i) = dprev1[i],
+        # (i-1, k-i) = dprev1[i-1], (i-1, k-1-i) = dprev2[i-1].
+        dmin = jnp.minimum(dprev1, _shift_right(dprev1, big))
+        dmin = jnp.minimum(dmin, _shift_right(dprev2, big))
+        return (dprev1, cell_cost(k, dmin))
+
+    _, dlast = jax.lax.fori_loop(1, 2 * t - 1, body, (dm1, d0))
+    o_ref[...] = dlast[:, t - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dtw_wavefront(x, y, wdiag, *, block_b=None):
+    """Batched weighted masked DTW.
+
+    Args:
+      x, y:   ``(B, T)`` batched series pairs (same dtype).
+      wdiag:  ``(2T-1, T)`` weight plane packed per anti-diagonal
+              (``pack_diagonals``); entries ``>= BIG_THRESH`` are
+              sparsified-out cells.
+      block_b: batch tile size (must divide B); defaults to B.
+
+    Returns:
+      ``(B,)`` DTW values.  A value ``>= BIG_THRESH`` means no admissible
+      path exists under the mask.
+    """
+    b, t = x.shape
+    assert y.shape == (b, t), (x.shape, y.shape)
+    assert wdiag.shape == (2 * t - 1, t), wdiag.shape
+    bb = block_b or b
+    assert b % bb == 0, (b, bb)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _dtw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((2 * t - 1, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, wdiag)

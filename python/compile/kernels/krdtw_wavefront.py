@@ -1,0 +1,167 @@
+"""Log-domain K_rdtw recurrence as an anti-diagonal wavefront Pallas kernel.
+
+Implements the recursion of the paper's Algorithm 2 (the Marteau-Gibet
+recursive edit-distance kernel, Eq. 6-7) over an arbitrary admissible cell
+set P (binary mask plane): K_rdtw, K_rdtw_sc and SP-K_rdtw are all this
+kernel with different masks.
+
+Plain-domain products of ``kappa/3 < 1`` underflow even f64 beyond
+T ~ 150, so the whole DP runs in log domain:
+
+    lK1(i,j) = log kappa(x_i, y_j) - log 3
+               + logsumexp(lK1(i-1,j-1), lK1(i-1,j), lK1(i,j-1))
+    lK2(i,j) = -log 3 + logsumexp(
+                 log((kappa_ii + kappa_jj) / 2) + lK2(i-1,j-1),
+                 lK2(i-1,j) + log kappa_ii,
+                 lK2(i,j-1) + log kappa_jj)
+    result   = logsumexp(lK1(T-1,T-1), lK2(T-1,T-1))
+
+with ``kappa(a, b) = exp(-nu * (a - b)^2)``, ``kappa_ii = kappa(x_i, y_i)``
+and ``kappa_jj = kappa(x_j, y_j)``.  Cells outside P (or outside the grid)
+hold NEG, the log-domain zero, which reproduces Algorithm 2's semantics of
+never visiting them: the boundary recursions of lines 10-19 are exactly the
+general recursion with zero (NEG) out-of-grid neighbors.
+
+The kernel returns ``log(K1 + K2)``; the Rust side classifies with the
+normalized kernel ``exp(lK(x,y) - (lK(x,x) + lK(y,y)) / 2)``, which is
+exactly the usual cosine-normalized Gram matrix computed stably.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import NEG
+
+_NEG_THRESH = -1.0e29
+
+
+def _shift_right(d, fill):
+    return jnp.concatenate([jnp.full_like(d[:, :1], fill), d[:, :-1]], axis=1)
+
+
+def _lse3(a, b, c):
+    """Elementwise logsumexp over three stacked operands, NEG-safe."""
+    m = jnp.maximum(jnp.maximum(a, b), c)
+    msafe = jnp.where(m <= _NEG_THRESH, 0.0, m)
+    s = (
+        jnp.exp(jnp.maximum(a - msafe, _NEG_THRESH))
+        + jnp.exp(jnp.maximum(b - msafe, _NEG_THRESH))
+        + jnp.exp(jnp.maximum(c - msafe, _NEG_THRESH))
+    )
+    out = msafe + jnp.log(s)
+    return jnp.where(m <= _NEG_THRESH, NEG, out)
+
+
+def _krdtw_kernel(x_ref, y_ref, m_ref, nu_ref, o_ref):
+    x = x_ref[...]  # (bb, T)
+    y = y_ref[...]
+    mask = m_ref[...]  # (2T-1, T), 1.0 = admissible cell
+    nu = nu_ref[0]
+    bb, t = x.shape
+    dtype = x.dtype
+    neg = jnp.asarray(NEG, dtype)
+    log3 = jnp.log(jnp.asarray(3.0, dtype))
+    idx = jnp.arange(t)
+
+    # Window machinery for j = k - i terms (see dtw_wavefront).
+    def pad_rev(v):
+        return jnp.concatenate(
+            [jnp.zeros((bb, t), dtype), jnp.flip(v, axis=1), jnp.zeros((bb, t), dtype)],
+            axis=1,
+        )
+
+    yrp = pad_rev(y)
+    # Same-index local log-kernel ls[i] = log kappa(x_i, y_i) = -nu (x_i-y_i)^2
+    ls = -nu * (x - y) ** 2  # (bb, T)
+    lsrp = pad_rev(ls)
+
+    def diag_parts(k):
+        """Per-diagonal gathers: lk(i, k-i), ls_i, ls_j, validity, mask."""
+        win_y = jax.lax.dynamic_slice(yrp, (0, 2 * t - 1 - k), (bb, t))
+        lk = -nu * (x - win_y) ** 2  # log kappa(x_i, y_{k-i})
+        ls_j = jax.lax.dynamic_slice(lsrp, (0, 2 * t - 1 - k), (bb, t))
+        mk = jax.lax.dynamic_slice(mask, (k, 0), (1, t))[0]  # (T,)
+        valid = (k - idx >= 0) & (k - idx <= t - 1)
+        keep = valid[None, :] & (mk > 0.5)[None, :]
+        return lk, ls, ls_j, keep
+
+    # Diagonal 0: K1(0,0) = K2(0,0) = kappa(x_0, y_0) on admissible grids.
+    lk0, ls_i0, _, keep0 = diag_parts(0)
+    first = (idx == 0)[None, :]
+    l1_0 = jnp.where(first & keep0, lk0, neg)
+    l2_0 = jnp.where(first & keep0, ls_i0, neg)
+    carry0 = (
+        jnp.full((bb, t), neg, dtype),  # lK1 diag k-2
+        l1_0,  # lK1 diag k-1
+        jnp.full((bb, t), neg, dtype),  # lK2 diag k-2
+        l2_0,  # lK2 diag k-1
+    )
+
+    def body(k, carry):
+        l1p2, l1p1, l2p2, l2p1 = carry
+        lk, ls_i, ls_j, keep = diag_parts(k)
+        # K1: local kernel times the 3-neighbor sum.
+        n11 = _shift_right(l1p2, neg)  # (i-1, j-1)
+        n10 = _shift_right(l1p1, neg)  # (i-1, j)
+        n01 = l1p1  # (i, j-1)
+        l1 = lk - log3 + _lse3(n11, n10, n01)
+        # K2: diagonal term averages the two same-index kernels.
+        k_ii = jnp.exp(ls_i)
+        k_jj = jnp.exp(ls_j)
+        avg = jnp.log(jnp.maximum((k_ii + k_jj) * 0.5, 1e-300))
+        t11 = avg + _shift_right(l2p2, neg)
+        t10 = ls_i + _shift_right(l2p1, neg)
+        t01 = ls_j + l2p1
+        l2 = -log3 + _lse3(t11, t10, t01)
+        l1 = jnp.where(keep, l1, neg)
+        l2 = jnp.where(keep, l2, neg)
+        return (l1p1, l1, l2p1, l2)
+
+    _, l1last, _, l2last = jax.lax.fori_loop(1, 2 * t - 1, body, carry0)
+    a = l1last[:, t - 1]
+    b = l2last[:, t - 1]
+    m = jnp.maximum(a, b)
+    msafe = jnp.where(m <= _NEG_THRESH, 0.0, m)
+    s = jnp.exp(jnp.maximum(a - msafe, _NEG_THRESH)) + jnp.exp(
+        jnp.maximum(b - msafe, _NEG_THRESH)
+    )
+    o_ref[...] = jnp.where(m <= _NEG_THRESH, neg, msafe + jnp.log(s))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def krdtw_wavefront(x, y, mdiag, nu, *, block_b=None):
+    """Batched log-domain K_rdtw over an admissible cell mask.
+
+    Args:
+      x, y:   ``(B, T)`` batched series pairs (f64 recommended).
+      mdiag:  ``(2T-1, T)`` binary mask plane packed per anti-diagonal
+              (1.0 = cell in P, 0.0 = sparsified out / out of grid).
+      nu:     ``(1,)`` local-kernel bandwidth (kappa = exp(-nu d^2)).
+      block_b: batch tile size (must divide B); defaults to B.
+
+    Returns:
+      ``(B,)`` values of ``log(K1 + K2)``; NEG if the mask admits no path.
+    """
+    b, t = x.shape
+    assert y.shape == (b, t), (x.shape, y.shape)
+    assert mdiag.shape == (2 * t - 1, t), mdiag.shape
+    nu = jnp.asarray(nu, x.dtype).reshape((1,))
+    bb = block_b or b
+    assert b % bb == 0, (b, bb)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _krdtw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((2 * t - 1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, mdiag, nu)

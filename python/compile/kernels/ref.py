@@ -1,0 +1,139 @@
+"""Pure-numpy O(T^2) oracles for the wavefront kernels.
+
+These are the correctness anchors: straightforward transcriptions of the
+paper's Eq. 4 / Algorithm 1 (weighted masked DTW) and Algorithm 2
+(K_rdtw over an admissible cell set), with no wavefront reformulation.
+The Rust native implementations mirror the same semantics and are
+cross-checked against the same worked examples in `rust/tests/`.
+"""
+
+import math
+
+import numpy as np
+
+from .common import BIG, BIG_THRESH
+
+
+def dtw_ref(x, y, w):
+    """Weighted masked DTW over full (T, T) weight matrix ``w``.
+
+    Mirrors the kernel's BIG arithmetic exactly: sparsified-out cells
+    (``w >= BIG_THRESH``) contribute an additive BIG instead of their
+    local cost, unreachable cells hold BIG, so finite results match the
+    kernel bit-for-bit-ish (same operation order up to reassociation).
+    """
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    t = len(x)
+    assert len(y) == t and w.shape == (t, t)
+    d = np.full((t, t), BIG, np.float64)
+    for i in range(t):
+        for j in range(t):
+            if w[i, j] >= BIG_THRESH:
+                local = BIG
+            else:
+                local = w[i, j] * (x[i] - y[j]) ** 2
+            if i == 0 and j == 0:
+                d[0, 0] = local
+                continue
+            best = BIG
+            if i > 0:
+                best = min(best, d[i - 1, j])
+            if j > 0:
+                best = min(best, d[i, j - 1])
+            if i > 0 and j > 0:
+                best = min(best, d[i - 1, j - 1])
+            d[i, j] = local + best
+    return d[t - 1, t - 1]
+
+
+def dtw_plain_ref(x, y):
+    """Unweighted DTW (all-ones weights) — the textbook recurrence."""
+    t = len(x)
+    return dtw_ref(x, y, np.ones((t, t)))
+
+
+def krdtw_plain_ref(x, y, mask, nu):
+    """Plain-domain Algorithm 2 (only valid for small T: underflows fast).
+
+    ``mask`` is a (T, T) boolean admissible-cell matrix.  Returns
+    K1(T-1, T-1) + K2(T-1, T-1).
+    """
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    t = len(x)
+
+    def kap(a, b):
+        return math.exp(-nu * (a - b) ** 2)
+
+    k1 = np.zeros((t, t))
+    k2 = np.zeros((t, t))
+    for i in range(t):
+        for j in range(t):
+            if not mask[i, j]:
+                continue
+            if i == 0 and j == 0:
+                k1[0, 0] = kap(x[0], y[0])
+                k2[0, 0] = kap(x[0], y[0])
+                continue
+            p11 = k1[i - 1, j - 1] if i > 0 and j > 0 else 0.0
+            p10 = k1[i - 1, j] if i > 0 else 0.0
+            p01 = k1[i, j - 1] if j > 0 else 0.0
+            k1[i, j] = (1.0 / 3.0) * kap(x[i], y[j]) * (p11 + p10 + p01)
+            q11 = k2[i - 1, j - 1] if i > 0 and j > 0 else 0.0
+            q10 = k2[i - 1, j] if i > 0 else 0.0
+            q01 = k2[i, j - 1] if j > 0 else 0.0
+            k_ii = kap(x[i], y[i])
+            k_jj = kap(x[j], y[j])
+            k2[i, j] = (1.0 / 3.0) * (
+                (k_ii + k_jj) * 0.5 * q11 + q10 * k_ii + q01 * k_jj
+            )
+    return k1[t - 1, t - 1] + k2[t - 1, t - 1]
+
+
+def krdtw_log_ref(x, y, mask, nu):
+    """Log-domain Algorithm 2 — valid for any T. Returns log(K1 + K2)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    t = len(x)
+    neg = -1.0e30
+
+    def lkap(a, b):
+        return -nu * (a - b) ** 2
+
+    def lse(vals):
+        m = max(vals)
+        if m <= -1.0e29:
+            return neg
+        return m + math.log(sum(math.exp(max(v - m, -700.0)) for v in vals))
+
+    l1 = np.full((t, t), neg)
+    l2 = np.full((t, t), neg)
+    log3 = math.log(3.0)
+    for i in range(t):
+        for j in range(t):
+            if not mask[i, j]:
+                continue
+            if i == 0 and j == 0:
+                l1[0, 0] = lkap(x[0], y[0])
+                l2[0, 0] = lkap(x[0], y[0])
+                continue
+            p11 = l1[i - 1, j - 1] if i > 0 and j > 0 else neg
+            p10 = l1[i - 1, j] if i > 0 else neg
+            p01 = l1[i, j - 1] if j > 0 else neg
+            l1[i, j] = lkap(x[i], y[j]) - log3 + lse([p11, p10, p01])
+            q11 = l2[i - 1, j - 1] if i > 0 and j > 0 else neg
+            q10 = l2[i - 1, j] if i > 0 else neg
+            q01 = l2[i, j - 1] if j > 0 else neg
+            ls_i = lkap(x[i], y[i])
+            ls_j = lkap(x[j], y[j])
+            avg = math.log(max((math.exp(ls_i) + math.exp(ls_j)) * 0.5, 1e-300))
+            l2[i, j] = -log3 + lse([avg + q11, ls_i + q10, ls_j + q01])
+    return lse([l1[t - 1, t - 1], l2[t - 1, t - 1]])
+
+
+def sakoe_chiba_mask(t, band):
+    """Boolean (T, T) corridor mask |i - j| <= band."""
+    i = np.arange(t)[:, None]
+    j = np.arange(t)[None, :]
+    return np.abs(i - j) <= band

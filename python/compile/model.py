@@ -1,0 +1,57 @@
+"""Layer-2 JAX compute graphs (build-time only).
+
+Thin batched graphs around the Layer-1 Pallas kernels; these are what
+``aot.py`` lowers to HLO text for the Rust runtime.  One weighted-DTW
+graph covers DTW / DTW_sc / SP-DTW; one masked K_rdtw graph covers
+K_rdtw / K_rdtw_sc / SP-K_rdtw — the variant lives entirely in the
+weight/mask plane the Rust coordinator feeds at request time (DESIGN.md
+§1), so a single compiled executable per (T, B) bucket serves every
+measure.
+
+Input z-normalization is deliberately NOT part of the graph: the Rust
+data layer normalizes once per dataset, not once per pair.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dtw_wavefront, krdtw_wavefront
+
+
+def dtw_batch(x, y, wdiag):
+    """Batched weighted masked DTW; see kernels.dtw_wavefront.
+
+    Shapes: x, y (B, T) f32; wdiag (2T-1, T) f32.  Returns (B,) f32.
+    Wrapped in a 1-tuple: the AOT bridge lowers with return_tuple=True.
+    """
+    return (dtw_wavefront(x, y, wdiag),)
+
+
+def krdtw_batch(x, y, mdiag, nu):
+    """Batched log-domain K_rdtw; see kernels.krdtw_wavefront.
+
+    Shapes: x, y (B, T) f64; mdiag (2T-1, T) f64 binary; nu (1,) f64.
+    Returns (B,) f64 values of log(K1 + K2).
+    """
+    return (krdtw_wavefront(x, y, mdiag, nu),)
+
+
+def dtw_batch_spec(b, t):
+    """ShapeDtypeStructs for lowering dtw_batch at a (B, T) bucket."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((b, t), f32),
+        jax.ShapeDtypeStruct((b, t), f32),
+        jax.ShapeDtypeStruct((2 * t - 1, t), f32),
+    )
+
+
+def krdtw_batch_spec(b, t):
+    """ShapeDtypeStructs for lowering krdtw_batch at a (B, T) bucket."""
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((b, t), f64),
+        jax.ShapeDtypeStruct((b, t), f64),
+        jax.ShapeDtypeStruct((2 * t - 1, t), f64),
+        jax.ShapeDtypeStruct((1,), f64),
+    )

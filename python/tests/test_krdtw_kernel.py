@@ -1,0 +1,151 @@
+"""Pallas krdtw_wavefront kernel vs the numpy oracles.
+
+Checks the log-domain wavefront against both the log-domain reference and
+(for small T where it does not underflow) the plain-domain Algorithm 2
+transcription.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import NEG, krdtw_wavefront, pack_diagonals
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+NEG_THRESH = -1.0e29
+
+
+def run_kernel(x, y, mask, nu, block_b=None):
+    md = pack_diagonals(mask.astype(np.float64), np.float64(0.0))
+    out = krdtw_wavefront(
+        jnp.asarray(x, np.float64),
+        jnp.asarray(y, np.float64),
+        jnp.asarray(md),
+        nu,
+        block_b=block_b,
+    )
+    return np.asarray(out)
+
+
+@st.composite
+def pair_batch(draw, max_b=4, max_t=16):
+    b = draw(st.integers(1, max_b))
+    t = draw(st.integers(2, max_t))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, t))
+    y = rng.normal(size=(b, t))
+    nu = draw(st.sampled_from([0.1, 0.5, 1.0, 5.0]))
+    return x, y, nu, rng
+
+
+@given(pair_batch())
+@settings(**SETTINGS)
+def test_full_grid_matches_log_ref(batch):
+    x, y, nu, _ = batch
+    t = x.shape[1]
+    mask = np.ones((t, t), bool)
+    got = run_kernel(x, y, mask, nu)
+    for i in range(x.shape[0]):
+        exp = ref.krdtw_log_ref(x[i], y[i], mask, nu)
+        np.testing.assert_allclose(got[i], exp, rtol=1e-10, atol=1e-10)
+
+
+@given(pair_batch())
+@settings(**SETTINGS)
+def test_matches_plain_algorithm2_small_t(batch):
+    """exp(kernel) == plain-domain Algorithm 2 while it still has headroom."""
+    x, y, nu, _ = batch
+    t = x.shape[1]
+    mask = np.ones((t, t), bool)
+    got = run_kernel(x, y, mask, nu)
+    for i in range(x.shape[0]):
+        plain = ref.krdtw_plain_ref(x[i], y[i], mask, nu)
+        if plain > 1e-280:
+            np.testing.assert_allclose(np.exp(got[i]), plain, rtol=1e-8)
+
+
+@given(pair_batch(), st.integers(0, 8))
+@settings(**SETTINGS)
+def test_corridor_mask_matches_ref(batch, band):
+    x, y, nu, _ = batch
+    t = x.shape[1]
+    mask = ref.sakoe_chiba_mask(t, band)
+    got = run_kernel(x, y, mask, nu)
+    for i in range(x.shape[0]):
+        exp = ref.krdtw_log_ref(x[i], y[i], mask, nu)
+        np.testing.assert_allclose(got[i], exp, rtol=1e-10, atol=1e-10)
+
+
+@given(pair_batch())
+@settings(**SETTINGS)
+def test_sparse_mask_matches_ref(batch):
+    x, y, nu, rng = batch
+    t = x.shape[1]
+    mask = rng.uniform(size=(t, t)) < 0.6
+    np.fill_diagonal(mask, True)  # keep a path alive
+    got = run_kernel(x, y, mask, nu)
+    for i in range(x.shape[0]):
+        exp = ref.krdtw_log_ref(x[i], y[i], mask, nu)
+        np.testing.assert_allclose(got[i], exp, rtol=1e-10, atol=1e-10)
+
+
+def test_empty_mask_returns_neg():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(2, 10))
+    y = rng.normal(size=(2, 10))
+    got = run_kernel(x, y, np.zeros((10, 10), bool), 1.0)
+    assert (got <= NEG_THRESH).all()
+
+
+def test_symmetry():
+    """K_rdtw(x, y) == K_rdtw(y, x) on symmetric masks."""
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(3, 12))
+    y = rng.normal(size=(3, 12))
+    mask = ref.sakoe_chiba_mask(12, 4)
+    a = run_kernel(x, y, mask, 0.5)
+    b = run_kernel(y, x, mask, 0.5)
+    np.testing.assert_allclose(a, b, rtol=1e-10)
+
+
+def test_no_underflow_long_series():
+    """T = 256 underflows plain f64 ((kappa/3)^512 ~ 1e-240-...) but the
+    log-domain kernel must stay finite and match the log reference."""
+    rng = np.random.default_rng(21)
+    t = 256
+    x = rng.normal(size=(1, t))
+    y = rng.normal(size=(1, t))
+    mask = ref.sakoe_chiba_mask(t, 20)
+    got = run_kernel(x, y, mask, 1.0)
+    assert np.isfinite(got).all() and got[0] > NEG_THRESH
+    exp = ref.krdtw_log_ref(x[0], y[0], mask, 1.0)
+    np.testing.assert_allclose(got[0], exp, rtol=1e-9)
+
+
+def test_batch_tiling_invariance():
+    rng = np.random.default_rng(31)
+    x = rng.normal(size=(4, 14))
+    y = rng.normal(size=(4, 14))
+    mask = np.ones((14, 14), bool)
+    full = run_kernel(x, y, mask, 0.7, block_b=4)
+    for bb in (1, 2):
+        np.testing.assert_allclose(run_kernel(x, y, mask, 0.7, block_b=bb), full)
+
+
+def test_gram_positive_definite():
+    """Small Gram matrix of normalized SP-Krdtw values is p.s.d. — the
+    paper's core claim for the kernelized variant (Eq. 6)."""
+    rng = np.random.default_rng(17)
+    n, t = 8, 12
+    series = rng.normal(size=(n, t))
+    mask = ref.sakoe_chiba_mask(t, 5)
+    lk = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            lk[i, j] = run_kernel(series[i : i + 1], series[j : j + 1], mask, 0.5)[0]
+    diag = np.diag(lk)
+    gram = np.exp(lk - 0.5 * (diag[:, None] + diag[None, :]))
+    eig = np.linalg.eigvalsh(gram)
+    assert eig.min() > -1e-10, eig

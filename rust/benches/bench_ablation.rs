@@ -1,0 +1,131 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//!  A1. γ sweep        — weighting exponent vs accuracy (γ=0 sanity: plain
+//!                       DTW costs on the retained cells).
+//!  A2. θ sweep        — sparsity vs accuracy trade-off (the Fig. 4 curve
+//!                       plus the cell counts the paper never shows).
+//!  A3. weighted vs unweighted SP-DTW at the tuned θ.
+//!  A4. symmetrization — learned grid vs its transpose-stripped half.
+
+use spdtw::classify::nn::classify_1nn;
+use spdtw::config::ExperimentConfig;
+use spdtw::data::synthetic;
+use spdtw::experiments::runner::load_dataset;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::sparse::LocMatrix;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        max_train: 24,
+        max_test: 40,
+        ..Default::default()
+    };
+    let name = std::env::var("SPDTW_BENCH_DATASET").unwrap_or_else(|_| "CBF".into());
+    let ds = load_dataset(&cfg, &name).unwrap();
+    let t = ds.series_len();
+    let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+    let full_err = classify_1nn(&Dtw, &ds.train, &ds.test, cfg.threads).error_rate;
+    println!("== ablations on {name} (T={t}) — DTW reference error {full_err:.3} ==");
+
+    println!("\nA1: γ sweep (θ=2)");
+    println!("{:>8}{:>10}{:>12}", "γ", "error", "cells");
+    for gamma in [0.0, 0.25, 0.5, 1.0, 2.0, 4.0] {
+        let loc = grid.threshold(2.0).to_loc(gamma);
+        let cells = loc.nnz();
+        let sp = SpDtw::new(loc);
+        let err = classify_1nn(&sp, &ds.train, &ds.test, cfg.threads).error_rate;
+        println!("{gamma:>8}{err:>10.3}{cells:>12}");
+    }
+
+    println!("\nA2: θ sweep (γ=1) — sparsity vs accuracy");
+    println!("{:>8}{:>10}{:>12}{:>10}", "θ", "error", "cells", "S(%)");
+    for theta in [0.0, 0.5, 1.0, 2.0, 5.0, 10.0, 15.0, 25.0] {
+        let loc = grid.threshold(theta).to_loc(1.0);
+        let cells = loc.nnz();
+        let s = 100.0 * (1.0 - cells as f64 / (t * t) as f64);
+        let sp = SpDtw::new(loc);
+        let err = classify_1nn(&sp, &ds.train, &ds.test, cfg.threads).error_rate;
+        println!("{theta:>8}{err:>10.3}{cells:>12}{s:>10.1}");
+    }
+
+    println!("\nA3: weighted vs unweighted at θ=2");
+    for (label, gamma) in [("unweighted (mask only)", 0.0), ("weighted f(p)=p^-1", 1.0)] {
+        let sp = SpDtw::new(grid.threshold(2.0).to_loc(gamma));
+        let err = classify_1nn(&sp, &ds.train, &ds.test, cfg.threads).error_rate;
+        println!("  {label:<26} error={err:.3}");
+    }
+
+    println!("\nA4: symmetrized grid vs upper-triangle-only");
+    let loc = grid.threshold(2.0).to_loc(1.0);
+    let upper = LocMatrix::from_triples(
+        t,
+        loc.to_triples().into_iter().filter(|&(r, c, _)| c >= r).collect(),
+    );
+    for (label, l) in [("symmetrized", loc), ("upper-only", upper)] {
+        let cells = l.nnz();
+        let sp = SpDtw::new(l);
+        let err = classify_1nn(&sp, &ds.train, &ds.test, cfg.threads).error_rate;
+        println!("  {label:<14} error={err:.3} cells={cells}");
+    }
+
+    println!("\nA6: the three speed-up families of §II-B.2 on one workload");
+    println!("    (constraint = Sakoe-Chiba/Itakura, indexing = LB_Keogh cascade,");
+    println!("     learned sparsification = SP-DTW — the paper's contribution)");
+    {
+        use spdtw::measures::itakura::{itakura_cells, ItakuraDtw};
+        use spdtw::measures::lb_keogh::classify_1nn_lb;
+        use spdtw::measures::sakoe_chiba::{band_cells, SakoeChibaDtw};
+        let band = ((0.1 * t as f64) as usize).max(1);
+        let full = (t * t) as f64;
+        let sc = SakoeChibaDtw::new(10.0);
+        let e_sc = classify_1nn(&sc, &ds.train, &ds.test, cfg.threads);
+        let e_it = classify_1nn(&ItakuraDtw, &ds.train, &ds.test, cfg.threads);
+        let (e_lb, skipped, total) = classify_1nn_lb(&ds.train, &ds.test, band);
+        let loc = grid.threshold(2.0).to_loc(1.0);
+        let spc = loc.nnz() as f64;
+        let sp = SpDtw::new(loc);
+        let e_sp = classify_1nn(&sp, &ds.train, &ds.test, cfg.threads);
+        println!(
+            "  {:<26} error={:.3}  cells/cmp={:>8}  S={:>5.1}%",
+            "Sakoe-Chiba (10%)",
+            e_sc.error_rate,
+            band_cells(t, sc.band_for(t)),
+            100.0 * (1.0 - band_cells(t, sc.band_for(t)) as f64 / full)
+        );
+        println!(
+            "  {:<26} error={:.3}  cells/cmp={:>8}  S={:>5.1}%",
+            "Itakura parallelogram",
+            e_it.error_rate,
+            itakura_cells(t),
+            100.0 * (1.0 - itakura_cells(t) as f64 / full)
+        );
+        println!(
+            "  {:<26} error={:.3}  DTW evals pruned: {}/{} ({:.1}%)",
+            "LB_Keogh cascade (10%)",
+            e_lb,
+            skipped,
+            total,
+            100.0 * skipped as f64 / total as f64
+        );
+        println!(
+            "  {:<26} error={:.3}  cells/cmp={:>8}  S={:>5.1}%",
+            "SP-DTW (θ=2, learned)",
+            e_sp.error_rate,
+            spc as u64,
+            100.0 * (1.0 - spc / full)
+        );
+    }
+
+    // A5: learning-phase cost amortization
+    let n = ds.train.len();
+    let learn_cells = spdtw::sparse::learn::learning_cost_cells(n, t);
+    let per_query_saved = (t * t) as u64 - grid.threshold(2.0).to_loc(1.0).nnz() as u64;
+    println!(
+        "\nA5: one-off learning cost = {learn_cells} cells; per-query saving = {per_query_saved} cells \
+         -> break-even after {} queries",
+        learn_cells / per_query_saved.max(1)
+    );
+    let _ = synthetic::generate_scaled("CBF", 1, 4, 2).unwrap(); // keep linkage honest
+}

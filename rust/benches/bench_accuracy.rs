@@ -1,0 +1,105 @@
+//! Tables II & IV regeneration (scaled): 1-NN + SVM error rates for all
+//! measures over a slice of the archive, with Wilcoxon p-values (Tables
+//! III & V).  The full sweep is `spdtw experiment all`; this bench is a
+//! fast-feedback subset.
+//!
+//! `SPDTW_BENCH_DATASETS=a,b,c cargo bench --bench bench_accuracy`
+
+use spdtw::config::ExperimentConfig;
+use spdtw::experiments::runner::{evaluate_dataset, NN_METHODS, SVM_METHODS};
+use spdtw::stats::mean_ranks;
+use spdtw::stats::wilcoxon::wilcoxon_signed_rank;
+
+fn main() {
+    let datasets: Vec<String> = std::env::var("SPDTW_BENCH_DATASETS")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|_| {
+            ["CBF", "SyntheticControl", "Gun-Point", "ECGFiveDays", "Wine", "FacesUCR"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        });
+    let cfg = ExperimentConfig {
+        max_train: 24,
+        max_test: 30,
+        ..Default::default()
+    };
+
+    let mut header = format!("{:<18}", "dataset");
+    for m in NN_METHODS {
+        header.push_str(&format!("{m:>10}"));
+    }
+    println!("== Table II (1-NN error, scaled) ==\n{header}");
+
+    let mut evals = Vec::new();
+    let mut nn_rows: Vec<Vec<f64>> = Vec::new();
+    for name in &datasets {
+        let t0 = std::time::Instant::now();
+        let ev = match evaluate_dataset(&cfg, name, true) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skip {name}: {e}");
+                continue;
+            }
+        };
+        let mut row = format!("{:<18}", ev.name);
+        let mut numeric = Vec::new();
+        for m in NN_METHODS {
+            row.push_str(&format!("{:>10.3}", ev.err_1nn[*m]));
+            numeric.push(ev.err_1nn[*m]);
+        }
+        println!("{row}   ({:.1}s)", t0.elapsed().as_secs_f64());
+        nn_rows.push(numeric);
+        evals.push(ev);
+    }
+    let ranks = mean_ranks(&nn_rows);
+    let mut row = format!("{:<18}", "Mean rank");
+    for r in &ranks {
+        row.push_str(&format!("{r:>10.2}"));
+    }
+    println!("{row}");
+
+    println!("\n== Table III (Wilcoxon p-values, 1-NN) ==");
+    let pick = |m: &str| -> Vec<f64> { evals.iter().map(|e| e.err_1nn[m]).collect() };
+    for (a, b) in [
+        ("DTW", "SP-DTW"),
+        ("DTW_sc", "SP-DTW"),
+        ("DTW_sc", "SP-Krdtw"),
+        ("Krdtw", "SP-Krdtw"),
+        ("Ed", "SP-Krdtw"),
+    ] {
+        let w = wilcoxon_signed_rank(&pick(a), &pick(b));
+        println!("  {a:>8} vs {b:<9}: p = {:.4} (W = {}, n = {})", w.p_value, w.w, w.n_used);
+    }
+
+    println!("\n== Table IV (SVM error, scaled) ==");
+    let mut header = format!("{:<18}", "dataset");
+    for m in SVM_METHODS {
+        header.push_str(&format!("{m:>10}"));
+    }
+    println!("{header}");
+    let mut svm_rows = Vec::new();
+    for ev in &evals {
+        let mut row = format!("{:<18}", ev.name);
+        let mut numeric = Vec::new();
+        for m in SVM_METHODS {
+            row.push_str(&format!("{:>10.3}", ev.err_svm[*m]));
+            numeric.push(ev.err_svm[*m]);
+        }
+        println!("{row}");
+        svm_rows.push(numeric);
+    }
+    let ranks = mean_ranks(&svm_rows);
+    let mut row = format!("{:<18}", "Mean rank");
+    for r in &ranks {
+        row.push_str(&format!("{r:>10.2}"));
+    }
+    println!("{row}");
+
+    println!("\n== Table V (Wilcoxon p-values, SVM) ==");
+    let pick = |m: &str| -> Vec<f64> { evals.iter().map(|e| e.err_svm[m]).collect() };
+    for (a, b) in [("Ed", "SP-Krdtw"), ("Krdtw", "SP-Krdtw"), ("Krdtw_sc", "SP-Krdtw")] {
+        let w = wilcoxon_signed_rank(&pick(a), &pick(b));
+        println!("  {a:>8} vs {b:<9}: p = {:.4}", w.p_value);
+    }
+}

@@ -1,0 +1,125 @@
+//! Coordinator throughput/latency benches (§Perf): native vs PJRT
+//! backends, batch-size sensitivity, flush-policy sweep, and the
+//! coordinator-overhead measurement (submit/dispatch/respond cost vs
+//! direct evaluation).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::data::TimeSeries;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::runtime::PjrtRuntime;
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::sparse::LocMatrix;
+
+fn throughput(
+    coord: &Coordinator,
+    key: spdtw::coordinator::state::GridKey,
+    queries: &[(TimeSeries, TimeSeries)],
+) -> (f64, f64) {
+    let t0 = Instant::now();
+    let tickets: Vec<_> = queries
+        .iter()
+        .map(|(x, y)| coord.submit_spdtw(key, x, y).unwrap())
+        .collect();
+    coord.flush();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (queries.len() as f64 / dt, dt)
+}
+
+fn main() {
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 60, 64).unwrap();
+    let grid = learn_occupancy_grid(&ds.train, 8);
+    let loc = grid.threshold(2.0).to_loc(1.0);
+    let n = 1024;
+    let queries: Vec<_> = (0..n)
+        .map(|i| {
+            (
+                ds.test.series[i % ds.test.len()].clone(),
+                ds.train.series[(i * 7) % ds.train.len()].clone(),
+            )
+        })
+        .collect();
+
+    // ---- direct-eval baseline (no coordinator) ---------------------------
+    let sp = SpDtw::new(loc.clone());
+    let t0 = Instant::now();
+    for (x, y) in &queries {
+        std::hint::black_box(sp.dist(x, y).value);
+    }
+    let direct = queries.len() as f64 / t0.elapsed().as_secs_f64();
+    println!("direct eval (single thread):     {direct:>10.0} pairs/s");
+
+    // ---- native backend, worker sweep -------------------------------------
+    for workers in [1usize, 2, 4, 8] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let key = coord.register_grid(loc.clone()).unwrap();
+        let (rate, _) = throughput(&coord, key, &queries);
+        println!("native backend, {workers} workers:     {rate:>10.0} pairs/s");
+    }
+
+    // ---- pjrt backend, flush-policy sweep ----------------------------------
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let Ok(rt) = PjrtRuntime::start(&artifacts) else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+        return;
+    };
+    for flush_us in [200u64, 1_000, 5_000] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                prefer_pjrt: true,
+                flush_us,
+                ..Default::default()
+            },
+            Some(rt.handle()),
+        )
+        .unwrap();
+        let key = coord.register_grid(loc.clone()).unwrap();
+        // warmup (first batch compiles the executable)
+        let w = coord.submit_spdtw(key, &queries[0].0, &queries[0].1).unwrap();
+        coord.flush();
+        w.wait().unwrap();
+        let (rate, _) = throughput(&coord, key, &queries);
+        let snap = coord.metrics();
+        println!(
+            "pjrt backend, flush={flush_us:>5}µs:   {rate:>10.0} pairs/s  ({} batches, {} padded, p99 ≤ {:.0}µs)",
+            snap.batches,
+            snap.padded_slots,
+            snap.latency_percentile_us(99.0)
+        );
+    }
+
+    // ---- coordinator overhead (tiny jobs stress the dispatch path) --------
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let tiny = LocMatrix::corridor(8, 1);
+    let key = coord.register_grid(tiny).unwrap();
+    let x = TimeSeries::new(0, vec![0.5; 8]);
+    let y = TimeSeries::new(0, vec![-0.5; 8]);
+    let t0 = Instant::now();
+    let m = 20_000;
+    let tickets: Vec<_> = (0..m)
+        .map(|_| coord.submit_spdtw(key, &x, &y).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let per_job = t0.elapsed().as_secs_f64() / m as f64;
+    println!(
+        "coordinator overhead (T=8 jobs): {:>10.2} µs/job end-to-end",
+        per_job * 1e6
+    );
+}

@@ -1,0 +1,90 @@
+//! Per-measure microbenchmarks: single-pair evaluation cost as a
+//! function of T, plus cells/second throughput for the DP measures.
+//! (in-tree harness; criterion is unavailable offline — DESIGN.md §2).
+
+use spdtw::data::TimeSeries;
+use spdtw::measures::corr::CorrDist;
+use spdtw::measures::daco::Daco;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::euclidean::Euclidean;
+use spdtw::measures::kga::Kga;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::{KernelMeasure, Measure};
+use spdtw::sparse::LocMatrix;
+use spdtw::util::bench::Bench;
+use spdtw::util::rng::Pcg64;
+
+fn series(rng: &mut Pcg64, t: usize) -> TimeSeries {
+    TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect())
+}
+
+fn main() {
+    let mut rng = Pcg64::new(42);
+    for t in [64usize, 128, 256, 512] {
+        let x = series(&mut rng, t);
+        let y = series(&mut rng, t);
+        let band = (0.1 * t as f64) as usize;
+        let loc10 = LocMatrix::corridor(t, band); // ~matched cell budget
+        let spdtw = SpDtw::new(loc10.clone());
+        let spk = SpKrdtw::new(loc10, 1.0);
+
+        Bench::header(&format!("single pair, T={t}"));
+        let mut b = Bench::default();
+        b.run("Ed", || Euclidean.dist(&x, &y).value);
+        b.run("CORR", || CorrDist.dist(&x, &y).value);
+        b.run("DACO(10)", || Daco::new(10).dist(&x, &y).value);
+        b.run("DTW (full)", || Dtw.dist(&x, &y).value);
+        b.run("DTW_sc (10%)", || SakoeChibaDtw::new(10.0).dist(&x, &y).value);
+        b.run("SP-DTW (10% budget)", || spdtw.dist(&x, &y).value);
+        b.run("Krdtw (full)", || Krdtw::new(1.0).log_k(&x, &y).value);
+        b.run("Krdtw_sc", || {
+            Krdtw::with_band(1.0, band).log_k(&x, &y).value
+        });
+        b.run("SP-Krdtw", || spk.log_k(&x, &y).value);
+        b.run("Kga (full)", || Kga::new(1.0).log_k(&x, &y).value);
+
+        // cells/second for the DP engines (roofline-style view)
+        let full_cells = (t * t) as f64;
+        let dtw_rate = full_cells * b.results()[3].per_sec();
+        let sp_cells = SpDtw::new(LocMatrix::corridor(t, band))
+            .dist(&x, &y)
+            .visited_cells as f64;
+        let sp_rate = sp_cells * b.results()[5].per_sec();
+        println!(
+            "-> DTW {:.1} Mcells/s | SP-DTW {:.1} Mcells/s (sparse iteration overhead visible here)",
+            dtw_rate / 1e6,
+            sp_rate / 1e6
+        );
+
+        // §Perf before/after: optimized hot loops vs the reference
+        // implementations they replaced (EXPERIMENTS.md §Perf log).
+        Bench::header(&format!("§Perf before/after, T={t}"));
+        let mut p = Bench::default();
+        let xs = &x.values;
+        let ys = &y.values;
+        p.run("dtw_banded_ref (before)", || {
+            spdtw::measures::dtw::dtw_banded_ref(xs, ys, usize::MAX).value
+        });
+        p.run("dtw_banded (after)", || {
+            spdtw::measures::dtw::dtw_banded(xs, ys, usize::MAX).value
+        });
+        p.run("spdtw eval_scan (before)", || spdtw_scan(&spdtw, xs, ys));
+        p.run("spdtw eval (after)", || spdtw.eval(xs, ys).value);
+        p.run("spkrdtw scan (before)", || spk.log_kernel_scan(xs, ys).value);
+        p.run("spkrdtw (after)", || spk.log_kernel(xs, ys).value);
+        let r = p.results();
+        println!(
+            "-> speedups: dtw {:.2}x | spdtw {:.2}x | spkrdtw {:.2}x",
+            r[0].mean_s / r[1].mean_s,
+            r[2].mean_s / r[3].mean_s,
+            r[4].mean_s / r[5].mean_s
+        );
+    }
+}
+
+fn spdtw_scan(sp: &SpDtw, x: &[f64], y: &[f64]) -> f64 {
+    sp.eval_scan(x, y).value
+}

@@ -1,0 +1,86 @@
+//! Table VI regeneration as a bench: per-dataset visited cells AND
+//! measured wall-clock for DTW vs DTW_sc vs SP-DTW vs SP-Krdtw, showing
+//! that the cell-count speed-up translates into real time.
+//!
+//! `SPDTW_BENCH_DATASETS=a,b,c cargo bench --bench bench_table6`
+//! defaults to a representative slice of Table I.
+
+use spdtw::config::ExperimentConfig;
+use spdtw::data::synthetic;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::sakoe_chiba::{band_cells, SakoeChibaDtw};
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::{KernelMeasure, Measure};
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::tuning;
+use spdtw::util::bench::Bench;
+
+fn main() {
+    let datasets: Vec<String> = std::env::var("SPDTW_BENCH_DATASETS")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|_| {
+            ["SyntheticControl", "CBF", "Gun-Point", "ECGFiveDays", "Wine", "Adiac"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        });
+    let cfg = ExperimentConfig::default();
+    println!(
+        "{:<18}{:>10}{:>10}{:>8}{:>10}{:>8}{:>10}{:>8}  (cells per comparison, S% = speed-up)",
+        "dataset", "DTW", "SC", "S%", "SP-DTW", "S%", "SP-Krdtw", "S%"
+    );
+
+    for name in &datasets {
+        let ds = match synthetic::generate_scaled(name, cfg.seed, 24, 8) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("skip {name}: {e}");
+                continue;
+            }
+        };
+        let t = ds.series_len();
+        let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+        let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), cfg.threads);
+        let (theta, _) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
+        let sc = SakoeChibaDtw::new(band_pct);
+        let loc_w = grid.threshold(theta).to_loc(1.0);
+        let loc_m = grid.threshold(theta).to_loc_mask();
+
+        let full = (t * t) as f64;
+        let c_sc = band_cells(t, sc.band_for(t)) as f64;
+        let c_sp = loc_w.nnz() as f64;
+        let c_spk = loc_m.nnz() as f64;
+        println!(
+            "{:<18}{:>10}{:>10}{:>8.1}{:>10}{:>8.1}{:>10}{:>8.1}",
+            name,
+            full as u64,
+            c_sc as u64,
+            100.0 * (1.0 - c_sc / full),
+            c_sp as u64,
+            100.0 * (1.0 - c_sp / full),
+            c_spk as u64,
+            100.0 * (1.0 - c_spk / full),
+        );
+
+        // wall-clock confirmation on one representative pair
+        let x = &ds.test.series[0];
+        let y = &ds.train.series[0];
+        let spdtw = SpDtw::new(loc_w);
+        let spk = SpKrdtw::new(loc_m, 1.0);
+        Bench::header(&format!("{name} wall-clock (T={t}, θ={theta}, band={band_pct}%)"));
+        let mut b = Bench::new(2, 8);
+        b.run("DTW", || Dtw.dist(x, y).value);
+        b.run("DTW_sc", || sc.dist(x, y).value);
+        b.run("SP-DTW", || spdtw.dist(x, y).value);
+        b.run("Krdtw", || Krdtw::new(1.0).log_k(x, y).value);
+        b.run("SP-Krdtw", || spk.log_k(x, y).value);
+        let r = b.results();
+        println!(
+            "-> wall-clock speed-up: SP-DTW {:.1}x vs DTW | SP-Krdtw {:.1}x vs Krdtw\n",
+            r[0].mean_s / r[2].mean_s,
+            r[3].mean_s / r[4].mean_s
+        );
+    }
+}

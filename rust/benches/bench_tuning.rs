@@ -1,0 +1,43 @@
+//! Fig. 4 regeneration + tuning-cost bench: the LOO θ grid-search curves
+//! for the paper's three example datasets, with the wall-clock cost of
+//! each tuning stage.
+
+use spdtw::config::ExperimentConfig;
+use spdtw::experiments::runner::load_dataset;
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::tuning;
+use spdtw::util::timer::Stopwatch;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        max_train: 24,
+        max_test: 8,
+        ..Default::default()
+    };
+    for name in ["50Words", "FacesUCR", "Wine"] {
+        let ds = match load_dataset(&cfg, name) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("skip {name}: {e}");
+                continue;
+            }
+        };
+        let mut sw = Stopwatch::new();
+        let grid = sw.measure("learn grid", || learn_occupancy_grid(&ds.train, cfg.threads));
+        let (best, curve) = sw.measure("θ grid search (LOO)", || {
+            tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads)
+        });
+        let (band, _) = sw.measure("band grid search (LOO)", || {
+            tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), cfg.threads)
+        });
+        println!("\n== Fig. 4 curve — {name} (T={}) ==", ds.series_len());
+        println!("{:>6} {:>10} {:>12}", "θ", "LOO err", "cells");
+        for (theta, err) in &curve {
+            let cells = grid.threshold(*theta).to_loc(1.0).nnz();
+            let mark = if *theta == best { "  <- θ*" } else { "" };
+            println!("{theta:>6} {err:>10.3} {cells:>12}{mark}");
+        }
+        println!("optimal θ={best}, optimal band={band}%");
+        println!("{}", sw.report());
+    }
+}

@@ -1,0 +1,174 @@
+//! Normalized Gram matrices over a [`KernelMeasure`].
+//!
+//! All kernel DPs run in log domain (DESIGN.md §6); the Gram entries are
+//! the cosine-normalized `K̃(x,y) = exp(lK(x,y) - (lK(x,x)+lK(y,y))/2)`,
+//! which keeps long-series kernels inside f64 range, preserves positive
+//! definiteness, and puts the diagonal at exactly 1.
+
+use crate::data::LabeledSet;
+use crate::measures::KernelMeasure;
+use crate::pool;
+
+/// A dense row-major matrix with visited-cell accounting.
+#[derive(Clone, Debug)]
+pub struct Gram {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+    pub visited_cells: u64,
+}
+
+impl Gram {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+}
+
+/// Symmetric train Gram: computes the N(N-1)/2 upper triangle + diagonal
+/// self-kernels, mirrors the rest.
+pub fn train_gram(kernel: &dyn KernelMeasure, set: &LabeledSet, threads: usize) -> Gram {
+    let n = set.len();
+    let selfk = pool::par_map(n, threads, |i| {
+        kernel.log_k(&set.series[i], &set.series[i])
+    });
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+        .collect();
+    let vals = pool::par_map(pairs.len(), threads, |k| {
+        let (i, j) = pairs[k];
+        kernel.log_k(&set.series[i], &set.series[j])
+    });
+    let mut data = vec![0.0; n * n];
+    let mut visited: u64 = selfk.iter().map(|d| d.visited_cells).sum();
+    for i in 0..n {
+        data[i * n + i] = 1.0;
+    }
+    for (k, &(i, j)) in pairs.iter().enumerate() {
+        let lk = vals[k].value - 0.5 * (selfk[i].value + selfk[j].value);
+        let v = lk.exp();
+        data[i * n + j] = v;
+        data[j * n + i] = v;
+        visited += vals[k].visited_cells;
+    }
+    Gram {
+        rows: n,
+        cols: n,
+        data,
+        visited_cells: visited,
+    }
+}
+
+/// Rectangular test-vs-train Gram (rows = test, cols = train).
+pub fn cross_gram(
+    kernel: &dyn KernelMeasure,
+    test: &LabeledSet,
+    train: &LabeledSet,
+    threads: usize,
+) -> Gram {
+    let nr = test.len();
+    let nc = train.len();
+    let self_test = pool::par_map(nr, threads, |i| {
+        kernel.log_k(&test.series[i], &test.series[i])
+    });
+    let self_train = pool::par_map(nc, threads, |j| {
+        kernel.log_k(&train.series[j], &train.series[j])
+    });
+    let vals = pool::par_map(nr * nc, threads, |k| {
+        let (i, j) = (k / nc, k % nc);
+        kernel.log_k(&test.series[i], &train.series[j])
+    });
+    let mut data = vec![0.0; nr * nc];
+    let mut visited: u64 = self_test.iter().chain(self_train.iter()).map(|d| d.visited_cells).sum();
+    for k in 0..nr * nc {
+        let (i, j) = (k / nc, k % nc);
+        data[k] = (vals[k].value - 0.5 * (self_test[i].value + self_train[j].value)).exp();
+        visited += vals[k].visited_cells;
+    }
+    Gram {
+        rows: nr,
+        cols: nc,
+        data,
+        visited_cells: visited,
+    }
+}
+
+/// 1-NN directly from a cross Gram (larger K̃ = closer) — the kernel
+/// variant of the Table II protocol, reusing self-kernels instead of
+/// recomputing them per pair as the naive `KrdtwDist` wrapper would.
+pub fn gram_1nn_error(cross: &Gram, test: &LabeledSet, train: &LabeledSet) -> f64 {
+    assert_eq!(cross.rows, test.len());
+    assert_eq!(cross.cols, train.len());
+    let mut wrong = 0usize;
+    for i in 0..test.len() {
+        let mut best = (f64::NEG_INFINITY, usize::MAX);
+        for j in 0..train.len() {
+            let v = cross.get(i, j);
+            if v > best.0 {
+                best = (v, train.series[j].label);
+            }
+        }
+        if best.1 != test.series[i].label {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / test.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::measures::krdtw::Krdtw;
+
+    fn toy() -> (LabeledSet, LabeledSet) {
+        let train = from_pairs(vec![
+            (0, vec![0.0, 0.1, 0.0, -0.1, 0.0]),
+            (0, vec![0.05, 0.12, -0.02, -0.08, 0.01]),
+            (1, vec![1.0, 2.0, 3.0, 2.0, 1.0]),
+            (1, vec![1.1, 2.1, 2.9, 1.9, 1.0]),
+        ]);
+        let test = from_pairs(vec![
+            (0, vec![0.02, 0.09, 0.01, -0.12, 0.03]),
+            (1, vec![0.9, 2.0, 3.1, 2.1, 0.9]),
+        ]);
+        (train, test)
+    }
+
+    #[test]
+    fn train_gram_unit_diagonal_symmetric() {
+        let (train, _) = toy();
+        let g = train_gram(&Krdtw::new(1.0), &train, 2);
+        for i in 0..4 {
+            assert!((g.get(i, i) - 1.0).abs() < 1e-12);
+            for j in 0..4 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-12);
+                assert!(g.get(i, j) <= 1.0 + 1e-9);
+                assert!(g.get(i, j) >= 0.0);
+            }
+        }
+        assert!(g.visited_cells > 0);
+    }
+
+    #[test]
+    fn same_class_more_similar() {
+        let (train, _) = toy();
+        let g = train_gram(&Krdtw::new(1.0), &train, 1);
+        assert!(g.get(0, 1) > g.get(0, 2));
+        assert!(g.get(2, 3) > g.get(1, 3));
+    }
+
+    #[test]
+    fn gram_1nn_classifies_toy_perfectly() {
+        let (train, test) = toy();
+        let cg = cross_gram(&Krdtw::new(1.0), &test, &train, 2);
+        assert_eq!(gram_1nn_error(&cg, &test, &train), 0.0);
+    }
+
+    #[test]
+    fn cross_gram_shape() {
+        let (train, test) = toy();
+        let cg = cross_gram(&Krdtw::new(0.5), &test, &train, 1);
+        assert_eq!((cg.rows, cg.cols), (2, 4));
+    }
+}

@@ -1,0 +1,38 @@
+//! Classification algorithms of the paper's evaluation: 1-NN over any
+//! [`Measure`] and SVM (SMO) over any [`KernelMeasure`], plus the Gram
+//! matrix machinery shared by both kernel paths.
+
+pub mod gram;
+pub mod nn;
+pub mod svm;
+
+use crate::data::LabeledSet;
+
+/// Classification outcome on a test split.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// Fraction of misclassified test series in [0, 1].
+    pub error_rate: f64,
+    /// Total DP cells visited across every pairwise evaluation (Table VI
+    /// accounting).
+    pub visited_cells: u64,
+    /// Total pairwise evaluations performed.
+    pub comparisons: u64,
+}
+
+impl EvalResult {
+    pub fn from_predictions(truth: &LabeledSet, pred: &[usize], visited: u64, cmp: u64) -> Self {
+        assert_eq!(truth.len(), pred.len());
+        let wrong = truth
+            .series
+            .iter()
+            .zip(pred)
+            .filter(|(s, &p)| s.label != p)
+            .count();
+        EvalResult {
+            error_rate: wrong as f64 / truth.len().max(1) as f64,
+            visited_cells: visited,
+            comparisons: cmp,
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Nearest-neighbor classification over an arbitrary [`Measure`]
+//! (parallel across test series) — the evaluation protocol of Table II.
+
+use crate::classify::EvalResult;
+use crate::data::LabeledSet;
+use crate::measures::Measure;
+use crate::pool;
+
+/// 1-NN classification of `test` against `train`.
+pub fn classify_1nn(measure: &dyn Measure, train: &LabeledSet, test: &LabeledSet, threads: usize) -> EvalResult {
+    classify_knn(measure, train, test, 1, threads)
+}
+
+/// k-NN (majority vote, ties broken by the nearer neighbor set).
+pub fn classify_knn(
+    measure: &dyn Measure,
+    train: &LabeledSet,
+    test: &LabeledSet,
+    k: usize,
+    threads: usize,
+) -> EvalResult {
+    assert!(k >= 1 && !train.is_empty() && !test.is_empty());
+    let rows = pool::par_map(test.len(), threads, |i| {
+        let probe = &test.series[i];
+        let mut dists: Vec<(f64, usize)> = Vec::with_capacity(train.len());
+        let mut visited = 0u64;
+        for tr in &train.series {
+            let d = measure.dist(probe, tr);
+            visited += d.visited_cells;
+            dists.push((d.value, tr.label));
+        }
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let label = vote(&dists[..k.min(dists.len())]);
+        (label, visited, train.len() as u64)
+    });
+    let pred: Vec<usize> = rows.iter().map(|r| r.0).collect();
+    let visited: u64 = rows.iter().map(|r| r.1).sum();
+    let cmp: u64 = rows.iter().map(|r| r.2).sum();
+    EvalResult::from_predictions(test, &pred, visited, cmp)
+}
+
+/// Majority vote over the k nearest (distance-weighted tie-break).
+fn vote(nearest: &[(f64, usize)]) -> usize {
+    let mut counts: Vec<(usize, usize, f64)> = Vec::new(); // (label, count, min_dist)
+    for &(d, l) in nearest {
+        match counts.iter_mut().find(|(lab, _, _)| *lab == l) {
+            Some((_, c, md)) => {
+                *c += 1;
+                if d < *md {
+                    *md = d;
+                }
+            }
+            None => counts.push((l, 1, d)),
+        }
+    }
+    counts
+        .into_iter()
+        .max_by(|a, b| (a.1, std::cmp::Reverse(OrderedF64(a.2))).partial_cmp(&(b.1, std::cmp::Reverse(OrderedF64(b.2)))).unwrap())
+        .map(|(l, _, _)| l)
+        .unwrap()
+}
+
+/// Total-order f64 wrapper for the vote tie-break.
+#[derive(PartialEq, PartialOrd)]
+struct OrderedF64(f64);
+
+/// Leave-one-out 1-NN error on a single set — the paper's protocol for
+/// tuning θ / ν / band on the train split (Fig. 4).
+pub fn loo_error_1nn(measure: &dyn Measure, set: &LabeledSet, threads: usize) -> f64 {
+    let n = set.len();
+    assert!(n >= 2);
+    let wrong = pool::par_map(n, threads, |i| {
+        let probe = &set.series[i];
+        let mut best = (f64::INFINITY, usize::MAX);
+        for (j, tr) in set.series.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            let d = measure.dist(probe, tr).value;
+            if d < best.0 {
+                best = (d, tr.label);
+            }
+        }
+        (best.1 != probe.label) as u64
+    });
+    wrong.iter().sum::<u64>() as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+    use crate::measures::euclidean::Euclidean;
+
+    #[test]
+    fn perfectly_separable_zero_error() {
+        let train = from_pairs(vec![
+            (0, vec![0.0, 0.0, 0.0]),
+            (1, vec![10.0, 10.0, 10.0]),
+        ]);
+        let test = from_pairs(vec![
+            (0, vec![0.1, -0.1, 0.0]),
+            (1, vec![9.9, 10.1, 10.0]),
+        ]);
+        let r = classify_1nn(&Euclidean, &train, &test, 2);
+        assert_eq!(r.error_rate, 0.0);
+        assert_eq!(r.comparisons, 4);
+        assert_eq!(r.visited_cells, 4 * 3);
+    }
+
+    #[test]
+    fn always_wrong_is_one() {
+        let train = from_pairs(vec![(1, vec![0.0]), (0, vec![10.0])]);
+        let test = from_pairs(vec![(0, vec![0.0]), (1, vec![10.0])]);
+        let r = classify_1nn(&Euclidean, &train, &test, 1);
+        assert_eq!(r.error_rate, 1.0);
+    }
+
+    #[test]
+    fn knn_majority_beats_single_outlier() {
+        let train = from_pairs(vec![
+            (0, vec![0.0]),
+            (0, vec![0.2]),
+            (0, vec![-0.2]),
+            (1, vec![0.05]), // outlier of class 1 closest to probe
+        ]);
+        let test = from_pairs(vec![(0, vec![0.04])]);
+        let r1 = classify_knn(&Euclidean, &train, &test, 1, 1);
+        assert_eq!(r1.error_rate, 1.0); // 1-NN fooled
+        let r3 = classify_knn(&Euclidean, &train, &test, 3, 1);
+        assert_eq!(r3.error_rate, 0.0); // 3-NN majority correct
+    }
+
+    #[test]
+    fn loo_error_on_separable_data_is_low() {
+        let ds = synthetic::generate_scaled("CBF", 13, 18, 0).unwrap();
+        let err = loo_error_1nn(&Euclidean, &ds.train, 2);
+        assert!(err <= 0.5, "LOO error {err} unexpectedly high");
+    }
+
+    #[test]
+    fn threads_invariant() {
+        let ds = synthetic::generate_scaled("Gun-Point", 3, 16, 10).unwrap();
+        let a = classify_1nn(&Euclidean, &ds.train, &ds.test, 1);
+        let b = classify_1nn(&Euclidean, &ds.train, &ds.test, 4);
+        assert_eq!(a.error_rate, b.error_rate);
+        assert_eq!(a.visited_cells, b.visited_cells);
+    }
+}

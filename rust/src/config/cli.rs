@@ -1,0 +1,156 @@
+//! Hand-rolled CLI argument parser (clap is not in the vendored crate
+//! set).  Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and generates usage text from a declarative spec.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative option spec for usage/help text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against a spec.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let known = spec.iter().find(|s| s.name == key);
+                match known {
+                    None => {
+                        return Err(Error::config(format!(
+                            "unknown option --{key}\n{}",
+                            usage(spec)
+                        )))
+                    }
+                    Some(s) if s.takes_value => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| Error::config(format!("--{key} needs a value")))?
+                            }
+                        };
+                        out.options.insert(key, val);
+                    }
+                    Some(_) => {
+                        if inline_val.is_some() {
+                            return Err(Error::config(format!("--{key} takes no value")));
+                        }
+                        out.flags.push(key);
+                    }
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+}
+
+/// Render usage text for a spec.
+pub fn usage(spec: &[OptSpec]) -> String {
+    let mut out = String::from("options:\n");
+    for s in spec {
+        let val = if s.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{:<14} {}\n", s.name, val, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "seed", takes_value: true, help: "rng seed" },
+            OptSpec { name: "full", takes_value: false, help: "full sizes" },
+            OptSpec { name: "gamma", takes_value: true, help: "weight exponent" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(&sv(&["run", "--seed", "7", "--full", "--gamma=2.5", "CBF"]), &spec()).unwrap();
+        assert_eq!(a.positional, vec!["run", "CBF"]);
+        assert_eq!(a.get_usize("seed").unwrap(), Some(7));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_f64("gamma").unwrap(), Some(2.5));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--seed"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--full=yes"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = Args::parse(&sv(&["--seed", "abc"]), &spec()).unwrap();
+        assert!(a.get_usize("seed").is_err());
+    }
+}

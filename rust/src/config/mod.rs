@@ -1,0 +1,223 @@
+//! Configuration system: experiment + coordinator settings with JSON
+//! file loading, CLI overrides and validation.
+
+pub mod cli;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::pool;
+use crate::util::json::Json;
+
+/// Settings for experiment runs (tables/figures regeneration).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Master seed for the synthetic archive + all tie-breaking RNGs.
+    pub seed: u64,
+    /// Stratified caps applied to every dataset split (`--full` lifts
+    /// them to the Table-I sizes).
+    pub max_train: usize,
+    pub max_test: usize,
+    /// Run the full Table-I sizes (can take many hours for the biggest
+    /// datasets — the paper's own protocol).
+    pub full: bool,
+    /// Worker threads.
+    pub threads: usize,
+    /// Datasets to include (empty = all 30).
+    pub datasets: Vec<String>,
+    /// Output directory for reports, figures, JSON results.
+    pub out_dir: PathBuf,
+    /// Artifacts directory for the PJRT backend.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 42,
+            max_train: 40,
+            max_test: 60,
+            full: false,
+            threads: pool::default_threads(),
+            datasets: Vec::new(),
+            out_dir: PathBuf::from("out"),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing fields fall back to defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = json.get("seed").and_then(Json::as_usize) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = json.get("max_train").and_then(Json::as_usize) {
+            cfg.max_train = v;
+        }
+        if let Some(v) = json.get("max_test").and_then(Json::as_usize) {
+            cfg.max_test = v;
+        }
+        if let Some(v) = json.get("full").and_then(Json::as_bool) {
+            cfg.full = v;
+        }
+        if let Some(v) = json.get("threads").and_then(Json::as_usize) {
+            cfg.threads = v;
+        }
+        if let Some(arr) = json.get("datasets").and_then(Json::as_arr) {
+            cfg.datasets = arr
+                .iter()
+                .filter_map(|d| d.as_str().map(String::from))
+                .collect();
+        }
+        if let Some(v) = json.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = PathBuf::from(v);
+        }
+        if let Some(v) = json.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.threads == 0 {
+            return Err(Error::config("threads must be >= 1"));
+        }
+        if self.max_train < 2 && !self.full {
+            return Err(Error::config("max_train must be >= 2"));
+        }
+        for d in &self.datasets {
+            if crate::data::registry::find(d).is_none() {
+                return Err(Error::Unknown {
+                    kind: "dataset",
+                    name: d.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Dataset list resolved against the registry (empty = all).
+    pub fn dataset_names(&self) -> Vec<&str> {
+        if self.datasets.is_empty() {
+            crate::data::registry::names()
+        } else {
+            self.datasets.iter().map(String::as_str).collect()
+        }
+    }
+
+    /// Effective split caps.
+    pub fn caps(&self) -> (usize, usize) {
+        if self.full {
+            (usize::MAX, usize::MAX)
+        } else {
+            (self.max_train, self.max_test)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("max_train", Json::num(self.max_train as f64)),
+            ("max_test", Json::num(self.max_test as f64)),
+            ("full", Json::Bool(self.full)),
+            ("threads", Json::num(self.threads as f64)),
+            (
+                "datasets",
+                Json::arr(self.datasets.iter().map(|d| Json::str(d.clone()))),
+            ),
+            ("out_dir", Json::str(self.out_dir.display().to_string())),
+            (
+                "artifacts_dir",
+                Json::str(self.artifacts_dir.display().to_string()),
+            ),
+        ])
+    }
+}
+
+/// Coordinator service settings.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Max pairs per PJRT batch (must match an artifact's B to use the
+    /// PJRT backend; the batcher pads the final partial batch).
+    pub batch_size: usize,
+    /// Flush a partial batch after this many microseconds of inactivity.
+    pub flush_us: u64,
+    /// Bound on queued batches (backpressure).
+    pub queue_cap: usize,
+    /// Prefer the PJRT backend when an artifact bucket matches.
+    pub prefer_pjrt: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: pool::default_threads(),
+            batch_size: 32,
+            flush_us: 2_000,
+            queue_cap: 64,
+            prefer_pjrt: false,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.batch_size == 0 || self.queue_cap == 0 {
+            return Err(Error::config(
+                "workers, batch_size and queue_cap must be >= 1",
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_valid() {
+        ExperimentConfig::default().validate().unwrap();
+        CoordinatorConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = 7;
+        cfg.datasets = vec!["CBF".into(), "Wine".into()];
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.datasets, cfg.datasets);
+    }
+
+    #[test]
+    fn rejects_unknown_dataset() {
+        let j = Json::parse(r#"{"datasets": ["NotReal"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_threads() {
+        let j = Json::parse(r#"{"threads": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn caps_full_mode() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.full = true;
+        assert_eq!(cfg.caps(), (usize::MAX, usize::MAX));
+    }
+}

@@ -1,0 +1,241 @@
+//! Length-bucket dynamic batcher (pure logic; the dispatcher thread in
+//! `mod.rs` drives it).  Jobs accumulate per [`BucketKey`]; a bucket is
+//! flushed when it reaches the artifact batch size or when its oldest
+//! job exceeds the flush timeout.  Partial batches are padded by
+//! repeating the last pair (the executable has a fixed B); padded slots
+//! are dropped on unpack and counted in the metrics.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{BucketKey, PjrtJob};
+
+/// A batch ready for the PJRT runner.
+pub(crate) struct ReadyBatch {
+    pub bucket: BucketKey,
+    /// Row-major (B, T) in f64 (cast at the runtime boundary).
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    /// Real (unpadded) jobs; `xs` may contain `batch_size` rows.
+    pub jobs: Vec<PjrtJob>,
+    pub padded: usize,
+    pub by_timeout: bool,
+}
+
+struct Pending {
+    jobs: Vec<PjrtJob>,
+    oldest: Instant,
+}
+
+/// Accumulates jobs into per-bucket buffers.
+pub(crate) struct Batcher {
+    batch_size_of: Box<dyn Fn(&BucketKey) -> usize + Send>,
+    flush_after: Duration,
+    pending: HashMap<BucketKey, Pending>,
+}
+
+impl Batcher {
+    pub fn new(
+        batch_size_of: Box<dyn Fn(&BucketKey) -> usize + Send>,
+        flush_after: Duration,
+    ) -> Self {
+        Batcher {
+            batch_size_of,
+            flush_after,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Add a job; returns a full batch if the bucket reached its size.
+    pub fn push(&mut self, job: PjrtJob, now: Instant) -> Option<ReadyBatch> {
+        let bucket = job.bucket;
+        let entry = self.pending.entry(bucket).or_insert_with(|| Pending {
+            jobs: Vec::new(),
+            oldest: now,
+        });
+        if entry.jobs.is_empty() {
+            entry.oldest = now;
+        }
+        entry.jobs.push(job);
+        let cap = (self.batch_size_of)(&bucket);
+        if entry.jobs.len() >= cap {
+            let pending = self.pending.remove(&bucket).unwrap();
+            Some(Self::materialize(bucket, pending.jobs, cap, false))
+        } else {
+            None
+        }
+    }
+
+    /// Flush buckets whose oldest job is older than the timeout.
+    pub fn flush_stale(&mut self, now: Instant) -> Vec<ReadyBatch> {
+        let stale: Vec<BucketKey> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| !p.jobs.is_empty() && now.duration_since(p.oldest) >= self.flush_after)
+            .map(|(k, _)| *k)
+            .collect();
+        stale
+            .into_iter()
+            .map(|k| {
+                let p = self.pending.remove(&k).unwrap();
+                let cap = (self.batch_size_of)(&k);
+                Self::materialize(k, p.jobs, cap, true)
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<ReadyBatch> {
+        let keys: Vec<BucketKey> = self.pending.keys().copied().collect();
+        keys.into_iter()
+            .filter_map(|k| {
+                let p = self.pending.remove(&k)?;
+                if p.jobs.is_empty() {
+                    return None;
+                }
+                let cap = (self.batch_size_of)(&k);
+                Some(Self::materialize(k, p.jobs, cap, true))
+            })
+            .collect()
+    }
+
+    /// Time until the next stale flush is due (for the dispatcher's
+    /// recv_timeout), if any bucket is pending.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter(|p| !p.jobs.is_empty())
+            .map(|p| {
+                self.flush_after
+                    .checked_sub(now.duration_since(p.oldest))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min()
+    }
+
+    /// Diagnostic/test API.
+    #[allow(dead_code)]
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.values().map(|p| p.jobs.len()).sum()
+    }
+
+    fn materialize(bucket: BucketKey, jobs: Vec<PjrtJob>, cap: usize, by_timeout: bool) -> ReadyBatch {
+        let t = bucket.t;
+        let n = jobs.len();
+        assert!(n >= 1 && n <= cap);
+        let mut xs = Vec::with_capacity(cap * t);
+        let mut ys = Vec::with_capacity(cap * t);
+        for j in &jobs {
+            debug_assert_eq!(j.x.len(), t);
+            debug_assert_eq!(j.y.len(), t);
+            xs.extend_from_slice(&j.x);
+            ys.extend_from_slice(&j.y);
+        }
+        // pad by repeating the last pair
+        let padded = cap - n;
+        for _ in 0..padded {
+            let last = &jobs[n - 1];
+            xs.extend_from_slice(&last.x);
+            ys.extend_from_slice(&last.y);
+        }
+        ReadyBatch {
+            bucket,
+            xs,
+            ys,
+            jobs,
+            padded,
+            by_timeout,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::KernelKind;
+    use std::sync::mpsc;
+
+    fn job(t: usize, key: u64, v: f64) -> PjrtJob {
+        let (tx, _rx) = mpsc::channel();
+        // keep rx alive via leak-free: tests that need responses build
+        // their own channels; here the sender is enough.
+        std::mem::forget(_rx);
+        PjrtJob {
+            bucket: BucketKey {
+                kind: KernelKind::Dtw,
+                t,
+                plane_key: key,
+                nu_bits: 0,
+            },
+            x: vec![v; t],
+            y: vec![-v; t],
+            cells: 1,
+            resp: tx,
+        }
+    }
+
+    fn batcher(cap: usize) -> Batcher {
+        Batcher::new(Box::new(move |_| cap), Duration::from_millis(5))
+    }
+
+    #[test]
+    fn full_bucket_flushes_exactly_at_cap() {
+        let mut b = batcher(3);
+        let now = Instant::now();
+        assert!(b.push(job(4, 1, 1.0), now).is_none());
+        assert!(b.push(job(4, 1, 2.0), now).is_none());
+        let ready = b.push(job(4, 1, 3.0), now).expect("flush at cap");
+        assert_eq!(ready.jobs.len(), 3);
+        assert_eq!(ready.padded, 0);
+        assert!(!ready.by_timeout);
+        assert_eq!(ready.xs.len(), 3 * 4);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn buckets_never_mix() {
+        let mut b = batcher(2);
+        let now = Instant::now();
+        assert!(b.push(job(4, 1, 1.0), now).is_none());
+        assert!(b.push(job(4, 2, 2.0), now).is_none()); // different plane
+        assert!(b.push(job(8, 1, 3.0), now).is_none()); // different T
+        assert_eq!(b.pending_jobs(), 3);
+        let ready = b.push(job(4, 1, 4.0), now).unwrap();
+        assert!(ready.jobs.iter().all(|j| j.bucket.plane_key == 1 && j.bucket.t == 4));
+    }
+
+    #[test]
+    fn stale_flush_pads() {
+        let mut b = batcher(4);
+        let t0 = Instant::now();
+        assert!(b.push(job(4, 1, 1.0), t0).is_none());
+        let later = t0 + Duration::from_millis(10);
+        let ready = b.flush_stale(later);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].jobs.len(), 1);
+        assert_eq!(ready[0].padded, 3);
+        assert!(ready[0].by_timeout);
+        // padded rows replicate the last pair
+        assert_eq!(ready[0].xs, vec![1.0; 16]);
+    }
+
+    #[test]
+    fn not_stale_before_deadline() {
+        let mut b = batcher(4);
+        let t0 = Instant::now();
+        b.push(job(4, 1, 1.0), t0);
+        assert!(b.flush_stale(t0 + Duration::from_millis(1)).is_empty());
+        assert!(b.next_deadline(t0).unwrap() <= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = batcher(4);
+        let now = Instant::now();
+        b.push(job(4, 1, 1.0), now);
+        b.push(job(8, 2, 2.0), now);
+        let all = b.flush_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+}

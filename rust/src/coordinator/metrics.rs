@@ -1,0 +1,155 @@
+//! Coordinator metrics: lock-free counters plus a coarse log-scale
+//! latency histogram; snapshots feed the CLI, the TCP `info` op and the
+//! §Perf benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram, 1µs .. ~1s.
+const LAT_BUCKETS: usize = 22;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub native_jobs: AtomicU64,
+    pub pjrt_jobs: AtomicU64,
+    pub batches: AtomicU64,
+    /// Wasted slots from padding partial batches.
+    pub padded_slots: AtomicU64,
+    /// Flushes triggered by the timeout rather than a full batch.
+    pub timeout_flushes: AtomicU64,
+    pub visited_cells: AtomicU64,
+    lat: [AtomicU64; LAT_BUCKETS],
+    lat_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.lat[bucket].fetch_add(1, Ordering::Relaxed);
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let lat: Vec<u64> = self.lat.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            native_jobs: self.native_jobs.load(Ordering::Relaxed),
+            pjrt_jobs: self.pjrt_jobs.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            timeout_flushes: self.timeout_flushes.load(Ordering::Relaxed),
+            visited_cells: self.visited_cells.load(Ordering::Relaxed),
+            mean_latency_us: if completed > 0 {
+                self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
+            } else {
+                0.0
+            },
+            latency_hist: lat,
+        }
+    }
+}
+
+/// A point-in-time copy of every counter.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub native_jobs: u64,
+    pub pjrt_jobs: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub timeout_flushes: u64,
+    pub visited_cells: u64,
+    pub mean_latency_us: f64,
+    pub latency_hist: Vec<u64>,
+}
+
+impl Snapshot {
+    /// Approximate latency percentile from the log2 histogram (upper
+    /// bucket bound, µs).
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        let total: u64 = self.latency_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.latency_hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << (self.latency_hist.len() - 1)) as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "jobs: {} submitted, {} completed ({} native / {} pjrt), {} failed\n\
+             batches: {} ({} padded slots, {} timeout flushes)\n\
+             cells: {}\n\
+             latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
+            self.submitted,
+            self.completed,
+            self.native_jobs,
+            self.pjrt_jobs,
+            self.failed,
+            self.batches,
+            self.padded_slots,
+            self.timeout_flushes,
+            self.visited_cells,
+            self.mean_latency_us,
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(100));
+        m.record_latency(Duration::from_micros(300));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert!(s.mean_latency_us > 0.0);
+        assert!(s.latency_percentile_us(50.0) >= 64.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let m = Metrics::new();
+        for us in [1u64, 10, 100, 1000, 10000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        m.completed.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!(s.latency_percentile_us(99.0) >= s.latency_percentile_us(50.0));
+    }
+
+    #[test]
+    fn report_contains_sections() {
+        let s = Metrics::new().snapshot();
+        let r = s.report();
+        assert!(r.contains("jobs:") && r.contains("batches:") && r.contains("latency:"));
+    }
+}

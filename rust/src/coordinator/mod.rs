@@ -1,0 +1,541 @@
+//! The L3 coordinator: a batched distance-computation service.
+//!
+//! Architecture (no tokio in the vendored set — std threads + channels,
+//! DESIGN.md §2):
+//!
+//! ```text
+//!  submit_*()              dispatcher thread            pjrt runner
+//!  ──────────► dispatch ──► Batcher (per-bucket) ──► bounded queue ──► PjrtHandle
+//!      │                        │ full/stale flush                    (executor thread)
+//!      │                        ▼
+//!      └──────► native WorkerPool (backpressured)  ──► response channels
+//! ```
+//!
+//! * Jobs are routed per (kernel, T) by [`router::Router`] — PJRT when an
+//!   artifact bucket exists and `prefer_pjrt` is set, native otherwise.
+//! * PJRT jobs accumulate in per-[`BucketKey`] buffers; flushed at the
+//!   artifact batch size or after `flush_us` of inactivity (padded).
+//! * The bounded runner queue (`queue_cap`) provides backpressure.
+//! * Every submitted job is answered exactly once (property-tested in
+//!   `rust/tests/prop_invariants.rs`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod state;
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::CoordinatorConfig;
+use crate::data::TimeSeries;
+use crate::error::{Error, Result};
+use crate::measures::spdtw::SpDtw;
+use crate::measures::spkrdtw::SpKrdtw;
+use crate::measures::{KernelMeasure, Measure};
+use crate::pool::WorkerPool;
+use crate::runtime::{DtwBatch, KernelKind, KrdtwBatch, PjrtHandle};
+use crate::sparse::LocMatrix;
+
+use batcher::{Batcher, ReadyBatch};
+use metrics::{Metrics, Snapshot};
+use request::{Backend, BucketKey, JobTicket, PairResult, PjrtJob};
+use router::Router;
+use state::{GridKey, GridRegistry};
+
+enum DispatchMsg {
+    Job(Box<PjrtJob>, Instant),
+    Drain(mpsc::Sender<()>),
+}
+
+/// The coordinator service.  Create with [`Coordinator::start`]; dropped
+/// coordinators drain and join all threads.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    native_pool: WorkerPool,
+    dispatch_tx: Option<mpsc::Sender<DispatchMsg>>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    runner: Option<thread::JoinHandle<()>>,
+    router: Router,
+    grids: Mutex<GridRegistry>,
+    pjrt: Option<PjrtHandle>,
+}
+
+impl Coordinator {
+    /// Start the service.  `pjrt` is optional: without it every job runs
+    /// on the native backend.
+    pub fn start(cfg: CoordinatorConfig, pjrt: Option<PjrtHandle>) -> Result<Coordinator> {
+        cfg.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        let info = match &pjrt {
+            Some(h) => Some(h.info()?),
+            None => None,
+        };
+        let router = Router::new(info, cfg.prefer_pjrt);
+        let native_pool = WorkerPool::new(cfg.workers, cfg.queue_cap.max(cfg.workers) * 4);
+
+        // dispatcher -> runner bounded queue (backpressure on batches)
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<ReadyBatch>(cfg.queue_cap);
+        let (dispatch_tx, dispatch_rx) = mpsc::channel::<DispatchMsg>();
+
+        // ---- pjrt runner thread -----------------------------------------
+        let runner = match &pjrt {
+            Some(handle) => {
+                let handle = handle.clone();
+                let metrics2 = Arc::clone(&metrics);
+                Some(
+                    thread::Builder::new()
+                        .name("spdtw-pjrt-runner".into())
+                        .spawn(move || {
+                            while let Ok(batch) = batch_rx.recv() {
+                                run_batch(&handle, batch, &metrics2);
+                            }
+                        })?,
+                )
+            }
+            None => {
+                drop(batch_rx);
+                None
+            }
+        };
+
+        // ---- dispatcher thread -------------------------------------------
+        let dispatcher = {
+            let flush = Duration::from_micros(cfg.flush_us);
+            let router2 = router.clone();
+            let metrics2 = Arc::clone(&metrics);
+            let batch_tx = batch_tx;
+            Some(
+                thread::Builder::new()
+                    .name("spdtw-dispatcher".into())
+                    .spawn(move || {
+                        let mut batcher = Batcher::new(
+                            Box::new(move |k: &BucketKey| {
+                                router2.batch_size(k.kind, k.t).unwrap_or(1)
+                            }),
+                            flush,
+                        );
+                        loop {
+                            let now = Instant::now();
+                            let timeout = batcher.next_deadline(now).unwrap_or(flush);
+                            match dispatch_rx.recv_timeout(timeout) {
+                                Ok(DispatchMsg::Job(job, at)) => {
+                                    if let Some(ready) = batcher.push(*job, at) {
+                                        metrics2.batches.fetch_add(1, Ordering::Relaxed);
+                                        metrics2
+                                            .padded_slots
+                                            .fetch_add(ready.padded as u64, Ordering::Relaxed);
+                                        if batch_tx.send(ready).is_err() {
+                                            break;
+                                        }
+                                    }
+                                }
+                                Ok(DispatchMsg::Drain(ack)) => {
+                                    for ready in batcher.flush_all() {
+                                        metrics2.batches.fetch_add(1, Ordering::Relaxed);
+                                        metrics2
+                                            .padded_slots
+                                            .fetch_add(ready.padded as u64, Ordering::Relaxed);
+                                        if ready.by_timeout {
+                                            metrics2.timeout_flushes.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        if batch_tx.send(ready).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    let _ = ack.send(());
+                                }
+                                Err(mpsc::RecvTimeoutError::Timeout) => {
+                                    for ready in batcher.flush_stale(Instant::now()) {
+                                        metrics2.batches.fetch_add(1, Ordering::Relaxed);
+                                        metrics2
+                                            .padded_slots
+                                            .fetch_add(ready.padded as u64, Ordering::Relaxed);
+                                        if ready.by_timeout {
+                                            metrics2.timeout_flushes.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        if batch_tx.send(ready).is_err() {
+                                            break;
+                                        }
+                                    }
+                                }
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    // drain leftovers, then stop
+                                    for ready in batcher.flush_all() {
+                                        let _ = batch_tx.send(ready);
+                                    }
+                                    break;
+                                }
+                            }
+                        }
+                    })?,
+            )
+        };
+
+        Ok(Coordinator {
+            cfg,
+            metrics,
+            native_pool,
+            dispatch_tx: Some(dispatch_tx),
+            dispatcher,
+            runner,
+            router,
+            grids: Mutex::new(GridRegistry::new()),
+            pjrt,
+        })
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Register a learned LOC grid.  Uploads its planes to the PJRT
+    /// engine when one is attached and an artifact bucket exists for its
+    /// length.
+    pub fn register_grid(&self, loc: LocMatrix) -> Result<GridKey> {
+        let loc = Arc::new(loc);
+        let t = loc.t;
+        let mut on_device = false;
+        // Reserve the key first so plane keys match the grid key.
+        let key = {
+            let mut reg = self.grids.lock().unwrap();
+            reg.insert(Arc::clone(&loc), false)
+        };
+        if let Some(h) = &self.pjrt {
+            if self.router.has_bucket(KernelKind::Dtw, t) {
+                h.register_plane_f32(key.0, t, loc.pack_weight_plane_f32())?;
+                on_device = true;
+            }
+            if self.router.has_bucket(KernelKind::Krdtw, t) {
+                h.register_plane_f64(key.0, t, loc.pack_mask_plane_f64())?;
+                on_device = true;
+            }
+        }
+        if on_device {
+            self.grids.lock().unwrap().set_on_device(key);
+        }
+        Ok(key)
+    }
+
+    fn grid(&self, key: GridKey) -> Result<Arc<LocMatrix>> {
+        self.grids
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|e| Arc::clone(&e.loc))
+            .ok_or_else(|| Error::coordinator(format!("unknown grid key {key:?}")))
+    }
+
+    /// Submit an SP-DTW pair (routed native or PJRT).
+    pub fn submit_spdtw(&self, key: GridKey, x: &TimeSeries, y: &TimeSeries) -> Result<JobTicket> {
+        let loc = self.grid(key)?;
+        let t = loc.t;
+        if x.len() != t || y.len() != t {
+            return Err(Error::coordinator(format!(
+                "series length {}/{} != grid T={t}",
+                x.len(),
+                y.len()
+            )));
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.router.route(KernelKind::Dtw, t) {
+            Backend::Pjrt => self.submit_pjrt_job(
+                BucketKey {
+                    kind: KernelKind::Dtw,
+                    t,
+                    plane_key: key.0,
+                    nu_bits: 0,
+                },
+                x.values.clone(),
+                y.values.clone(),
+                loc.nnz() as u64,
+            ),
+            Backend::Native => {
+                let sp = SpDtw::from_arc(loc);
+                let xs = x.values.clone();
+                let ys = y.values.clone();
+                Ok(self.submit_native_closure(move || {
+                    let d = sp.eval(&xs, &ys);
+                    (d.value, d.visited_cells)
+                }))
+            }
+        }
+    }
+
+    /// Submit an SP-K_rdtw pair (returns log K(x, y); routed).
+    pub fn submit_spkrdtw(
+        &self,
+        key: GridKey,
+        nu: f64,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        let loc = self.grid(key)?;
+        let t = loc.t;
+        if x.len() != t || y.len() != t {
+            return Err(Error::coordinator("series length != grid T"));
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.router.route(KernelKind::Krdtw, t) {
+            Backend::Pjrt => self.submit_pjrt_job(
+                BucketKey {
+                    kind: KernelKind::Krdtw,
+                    t,
+                    plane_key: key.0,
+                    nu_bits: nu.to_bits(),
+                },
+                x.values.clone(),
+                y.values.clone(),
+                loc.nnz() as u64,
+            ),
+            Backend::Native => {
+                let sp = SpKrdtw::from_arc(loc, nu);
+                let xs = TimeSeries::new(0, x.values.clone());
+                let ys = TimeSeries::new(0, y.values.clone());
+                Ok(self.submit_native_closure(move || {
+                    let d = sp.log_k(&xs, &ys);
+                    (d.value, d.visited_cells)
+                }))
+            }
+        }
+    }
+
+    /// Submit an arbitrary native measure evaluation.
+    pub fn submit_native(
+        &self,
+        measure: Arc<dyn Measure>,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> JobTicket {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let xs = x.clone();
+        let ys = y.clone();
+        self.submit_native_closure(move || {
+            let d = measure.dist(&xs, &ys);
+            (d.value, d.visited_cells)
+        })
+    }
+
+    fn submit_native_closure(
+        &self,
+        f: impl FnOnce() -> (f64, u64) + Send + 'static,
+    ) -> JobTicket {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::clone(&self.metrics);
+        let start = Instant::now();
+        self.native_pool.submit(move || {
+            let (value, cells) = f();
+            metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.visited_cells.fetch_add(cells, Ordering::Relaxed);
+            metrics.record_latency(start.elapsed());
+            let _ = tx.send(Ok(PairResult {
+                value,
+                visited_cells: cells,
+                backend: Backend::Native,
+            }));
+        });
+        JobTicket { rx }
+    }
+
+    fn submit_pjrt_job(
+        &self,
+        bucket: BucketKey,
+        x: Vec<f64>,
+        y: Vec<f64>,
+        cells: u64,
+    ) -> Result<JobTicket> {
+        let (tx, rx) = mpsc::channel();
+        let job = PjrtJob {
+            bucket,
+            x,
+            y,
+            cells,
+            resp: tx,
+        };
+        self.dispatch_tx
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("coordinator shut down"))?
+            .send(DispatchMsg::Job(Box::new(job), Instant::now()))
+            .map_err(|_| Error::coordinator("dispatcher gone"))?;
+        Ok(JobTicket { rx })
+    }
+
+    /// SP-DTW distance matrix rows×cols (convenience bulk API used by
+    /// the serving demo and the backend-parity tests).
+    pub fn spdtw_matrix(
+        &self,
+        key: GridKey,
+        rows: &[TimeSeries],
+        cols: &[TimeSeries],
+    ) -> Result<Vec<f64>> {
+        let tickets: Vec<JobTicket> = rows
+            .iter()
+            .flat_map(|x| cols.iter().map(move |y| (x, y)))
+            .map(|(x, y)| self.submit_spdtw(key, x, y))
+            .collect::<Result<_>>()?;
+        self.flush();
+        tickets.into_iter().map(|t| t.wait().map(|r| r.value)).collect()
+    }
+
+    /// Force pending partial batches out (blocks until the dispatcher
+    /// acknowledges the drain).
+    pub fn flush(&self) {
+        if let Some(tx) = &self.dispatch_tx {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            if tx.send(DispatchMsg::Drain(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Wait for every native job to finish (tests / clean shutdown).
+    pub fn wait_native_idle(&self) {
+        self.native_pool.wait_idle();
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.flush();
+        self.dispatch_tx.take(); // closes dispatcher channel
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        if let Some(r) = self.runner.take() {
+            let _ = r.join();
+        }
+        self.native_pool.wait_idle();
+    }
+}
+
+/// Execute one ready batch on the PJRT handle and fan results out.
+fn run_batch(handle: &PjrtHandle, batch: ReadyBatch, metrics: &Metrics) {
+    let start = Instant::now();
+    let n = batch.jobs.len();
+    let t = batch.bucket.t;
+    let outcome: Result<Vec<f64>> = match batch.bucket.kind {
+        KernelKind::Dtw => {
+            let x32: Vec<f32> = batch.xs.iter().map(|&v| v as f32).collect();
+            let y32: Vec<f32> = batch.ys.iter().map(|&v| v as f32).collect();
+            handle
+                .run_dtw(DtwBatch {
+                    t,
+                    x: x32,
+                    y: y32,
+                    plane_key: batch.bucket.plane_key,
+                })
+                .map(|v| v.into_iter().map(|f| f as f64).collect())
+        }
+        KernelKind::Krdtw => handle.run_krdtw(KrdtwBatch {
+            t,
+            x: batch.xs.clone(),
+            y: batch.ys.clone(),
+            plane_key: batch.bucket.plane_key,
+            nu: f64::from_bits(batch.bucket.nu_bits),
+        }),
+    };
+    match outcome {
+        Ok(values) => {
+            for (i, job) in batch.jobs.into_iter().enumerate() {
+                metrics.pjrt_jobs.fetch_add(1, Ordering::Relaxed);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.visited_cells.fetch_add(job.cells, Ordering::Relaxed);
+                metrics.record_latency(start.elapsed());
+                let _ = job.resp.send(Ok(PairResult {
+                    value: values[i],
+                    visited_cells: job.cells,
+                    backend: Backend::Pjrt,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in batch.jobs {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = job.resp.send(Err(Error::runtime(msg.clone())));
+            }
+        }
+    }
+    let _ = n;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::measures::euclidean::Euclidean;
+
+    fn coord() -> Coordinator {
+        Coordinator::start(CoordinatorConfig::default(), None).unwrap()
+    }
+
+    #[test]
+    fn native_submit_roundtrip() {
+        let c = coord();
+        let set = from_pairs(vec![(0, vec![0.0, 0.0]), (1, vec![3.0, 4.0])]);
+        let t = c.submit_native(Arc::new(Euclidean), &set.series[0], &set.series[1]);
+        let r = t.wait().unwrap();
+        assert!((r.value - 5.0).abs() < 1e-12);
+        assert_eq!(r.backend, Backend::Native);
+        let snap = c.metrics();
+        assert_eq!(snap.submitted, 1);
+    }
+
+    #[test]
+    fn spdtw_native_matches_direct_eval() {
+        let c = coord();
+        let loc = LocMatrix::corridor(8, 2);
+        let key = c.register_grid(loc.clone()).unwrap();
+        let x = TimeSeries::new(0, (0..8).map(|i| i as f64).collect());
+        let y = TimeSeries::new(0, (0..8).map(|i| (i as f64) * 0.5).collect());
+        let got = c.submit_spdtw(key, &x, &y).unwrap().wait().unwrap();
+        let direct = SpDtw::new(loc).dist(&x, &y);
+        assert!((got.value - direct.value).abs() < 1e-12);
+        assert_eq!(got.visited_cells, direct.visited_cells);
+    }
+
+    #[test]
+    fn unknown_grid_rejected() {
+        let c = coord();
+        let x = TimeSeries::new(0, vec![0.0; 4]);
+        assert!(c.submit_spdtw(GridKey(42), &x, &x).is_err());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let c = coord();
+        let key = c.register_grid(LocMatrix::full(4)).unwrap();
+        let x = TimeSeries::new(0, vec![0.0; 5]);
+        assert!(c.submit_spdtw(key, &x, &x).is_err());
+    }
+
+    #[test]
+    fn matrix_bulk_api_counts() {
+        let c = coord();
+        let key = c.register_grid(LocMatrix::full(4)).unwrap();
+        let rows = vec![
+            TimeSeries::new(0, vec![0.0, 1.0, 2.0, 3.0]),
+            TimeSeries::new(0, vec![1.0, 1.0, 1.0, 1.0]),
+        ];
+        let m = c.spdtw_matrix(key, &rows, &rows).unwrap();
+        assert_eq!(m.len(), 4);
+        assert!(m[0].abs() < 1e-12 && m[3].abs() < 1e-12); // self distances
+        assert!((m[1] - m[2]).abs() < 1e-12); // symmetry
+        c.wait_native_idle();
+        assert_eq!(c.metrics().completed, 4);
+    }
+}

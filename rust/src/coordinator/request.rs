@@ -1,0 +1,108 @@
+//! Job and result types flowing through the coordinator.
+
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+use crate::runtime::KernelKind;
+
+/// Which execution backend produced a result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process Rust DP (measures::*).
+    Native,
+    /// AOT XLA executable via PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Result of one pairwise evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct PairResult {
+    pub value: f64,
+    pub visited_cells: u64,
+    pub backend: Backend,
+}
+
+/// Completion handle for a submitted job.
+pub struct JobTicket {
+    pub(crate) rx: mpsc::Receiver<Result<PairResult>>,
+}
+
+impl JobTicket {
+    /// Block until the result is available.
+    pub fn wait(self) -> Result<PairResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::coordinator("job dropped before completion"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<Result<PairResult>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Batching bucket identity: jobs may share a PJRT batch only if they
+/// agree on everything the executable closes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub kind: KernelKind,
+    pub t: usize,
+    pub plane_key: u64,
+    /// `nu.to_bits()` for K_rdtw buckets, 0 for DTW.
+    pub nu_bits: u64,
+}
+
+/// A PJRT-routed pairwise job.
+pub(crate) struct PjrtJob {
+    pub bucket: BucketKey,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    /// Visited-cell accounting carried from the registered grid (nnz).
+    pub cells: u64,
+    pub resp: mpsc::Sender<Result<PairResult>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_roundtrip() {
+        let (tx, rx) = mpsc::channel();
+        let t = JobTicket { rx };
+        tx.send(Ok(PairResult {
+            value: 1.5,
+            visited_cells: 10,
+            backend: Backend::Native,
+        }))
+        .unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.value, 1.5);
+        assert_eq!(r.backend.as_str(), "native");
+    }
+
+    #[test]
+    fn dropped_sender_is_error() {
+        let (tx, rx) = mpsc::channel::<Result<PairResult>>();
+        drop(tx);
+        assert!(JobTicket { rx }.wait().is_err());
+    }
+
+    #[test]
+    fn bucket_key_equality() {
+        let a = BucketKey { kind: KernelKind::Dtw, t: 60, plane_key: 1, nu_bits: 0 };
+        let b = BucketKey { kind: KernelKind::Dtw, t: 60, plane_key: 1, nu_bits: 0 };
+        let c = BucketKey { kind: KernelKind::Dtw, t: 60, plane_key: 2, nu_bits: 0 };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,98 @@
+//! Routing policy: decide per job whether it runs on the native Rust DP
+//! or on an AOT PJRT executable.  Pure and unit-testable.
+//!
+//! Policy (DESIGN.md §7): a job is PJRT-eligible iff the manifest has an
+//! artifact for its (kernel, exact T) bucket; otherwise it falls back to
+//! native.  `prefer_pjrt = false` keeps everything native (the default
+//! for the experiment sweeps, where the native path is faster for the
+//! short series of the archive); the serving demo flips it on.
+
+use crate::coordinator::request::Backend;
+use crate::runtime::{EngineInfo, KernelKind};
+
+#[derive(Clone, Debug)]
+pub struct Router {
+    info: Option<EngineInfo>,
+    pub prefer_pjrt: bool,
+}
+
+impl Router {
+    pub fn new(info: Option<EngineInfo>, prefer_pjrt: bool) -> Self {
+        Router { info, prefer_pjrt }
+    }
+
+    /// Does an artifact bucket exist for (kernel, T)?
+    pub fn has_bucket(&self, kind: KernelKind, t: usize) -> bool {
+        match &self.info {
+            None => false,
+            Some(i) => match kind {
+                KernelKind::Dtw => i.dtw_lengths.contains(&t),
+                KernelKind::Krdtw => i.krdtw_lengths.contains(&t),
+            },
+        }
+    }
+
+    /// Batch size of the bucket, if it exists.
+    pub fn batch_size(&self, kind: KernelKind, t: usize) -> Option<usize> {
+        self.info.as_ref().and_then(|i| match kind {
+            KernelKind::Dtw => i.dtw_batch(t),
+            KernelKind::Krdtw => i.krdtw_batch(t),
+        })
+    }
+
+    /// Routing decision for a job.
+    pub fn route(&self, kind: KernelKind, t: usize) -> Backend {
+        if self.prefer_pjrt && self.has_bucket(kind, t) {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info() -> EngineInfo {
+        EngineInfo {
+            platform: "cpu".into(),
+            dtw_lengths: vec![60, 128],
+            krdtw_lengths: vec![60],
+            batch_of: vec![
+                ("dtw".into(), 60, 32),
+                ("dtw".into(), 128, 32),
+                ("krdtw".into(), 60, 32),
+            ],
+        }
+    }
+
+    #[test]
+    fn no_engine_all_native() {
+        let r = Router::new(None, true);
+        assert_eq!(r.route(KernelKind::Dtw, 60), Backend::Native);
+        assert!(!r.has_bucket(KernelKind::Dtw, 60));
+    }
+
+    #[test]
+    fn prefer_pjrt_routes_matching_lengths() {
+        let r = Router::new(Some(info()), true);
+        assert_eq!(r.route(KernelKind::Dtw, 60), Backend::Pjrt);
+        assert_eq!(r.route(KernelKind::Dtw, 61), Backend::Native); // no bucket
+        assert_eq!(r.route(KernelKind::Krdtw, 60), Backend::Pjrt);
+        assert_eq!(r.route(KernelKind::Krdtw, 128), Backend::Native);
+    }
+
+    #[test]
+    fn native_preference_wins() {
+        let r = Router::new(Some(info()), false);
+        assert_eq!(r.route(KernelKind::Dtw, 60), Backend::Native);
+    }
+
+    #[test]
+    fn batch_size_lookup() {
+        let r = Router::new(Some(info()), true);
+        assert_eq!(r.batch_size(KernelKind::Dtw, 60), Some(32));
+        assert_eq!(r.batch_size(KernelKind::Dtw, 61), None);
+    }
+}

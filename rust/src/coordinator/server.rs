@@ -1,0 +1,300 @@
+//! TCP line-protocol server exposing the coordinator: one JSON object
+//! per line in, one JSON object per line out.  Used by the serving demo
+//! (`examples/serve_pjrt.rs`) and the runtime integration tests.
+//!
+//! Operations:
+//! ```json
+//! {"op":"ping"}
+//! {"op":"info"}
+//! {"op":"register_grid","t":60,"band":5}            // corridor grid
+//! {"op":"spdtw","grid":0,"x":[...],"y":[...]}
+//! {"op":"spkrdtw","grid":0,"nu":0.5,"x":[...],"y":[...]}
+//! {"op":"metrics"}
+//! {"op":"shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::coordinator::state::GridKey;
+use crate::coordinator::Coordinator;
+use crate::data::TimeSeries;
+use crate::error::Result;
+use crate::sparse::LocMatrix;
+use crate::util::json::Json;
+
+/// A running server; dropping stops accepting (existing connections
+/// finish their in-flight line).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = thread::Builder::new()
+            .name("spdtw-server".into())
+            .spawn(move || {
+                // Connection threads are detached: joining them here would
+                // deadlock `stop()` against clients that keep their socket
+                // open (they hold only an Arc<Coordinator> and exit when
+                // the peer disconnects or the stop flag is observed).
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = Arc::clone(&coordinator);
+                            let stop3 = Arc::clone(&stop2);
+                            thread::spawn(move || {
+                                let _ = handle_conn(stream, &coord, &stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match dispatch(&line, coord, stop) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(e.to_string()))]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn parse_series(json: &Json, field: &str) -> Result<TimeSeries> {
+    let arr = json.req_arr(field)?;
+    let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+    values
+        .map(|v| TimeSeries::new(0, v))
+        .ok_or_else(|| crate::error::Error::config(format!("'{field}' must be numbers")))
+}
+
+fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> {
+    let req = Json::parse(line)?;
+    let op = req.req_str("op")?;
+    match op {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+        "info" => {
+            let snap = coord.metrics();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("workers", Json::num(coord.config().workers as f64)),
+                ("batch_size", Json::num(coord.config().batch_size as f64)),
+                ("prefer_pjrt", Json::Bool(coord.config().prefer_pjrt)),
+                ("completed", Json::num(snap.completed as f64)),
+            ]))
+        }
+        "register_grid" => {
+            let t = req.req_usize("t")?;
+            let loc = match req.get("band").and_then(Json::as_usize) {
+                Some(band) => LocMatrix::corridor(t, band),
+                None => LocMatrix::full(t),
+            };
+            let key = coord.register_grid(loc)?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("grid", Json::num(key.0 as f64))]))
+        }
+        "spdtw" => {
+            let key = GridKey(req.req_usize("grid")? as u64);
+            let x = parse_series(&req, "x")?;
+            let y = parse_series(&req, "y")?;
+            let r = coord.submit_spdtw(key, &x, &y)?;
+            coord.flush();
+            let out = r.wait()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("value", Json::num(out.value)),
+                ("cells", Json::num(out.visited_cells as f64)),
+                ("backend", Json::str(out.backend.as_str())),
+            ]))
+        }
+        "spkrdtw" => {
+            let key = GridKey(req.req_usize("grid")? as u64);
+            let nu = req.req_f64("nu")?;
+            let x = parse_series(&req, "x")?;
+            let y = parse_series(&req, "y")?;
+            let r = coord.submit_spkrdtw(key, nu, &x, &y)?;
+            coord.flush();
+            let out = r.wait()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("log_k", Json::num(out.value)),
+                ("cells", Json::num(out.visited_cells as f64)),
+                ("backend", Json::str(out.backend.as_str())),
+            ]))
+        }
+        "metrics" => {
+            let s = coord.metrics();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("submitted", Json::num(s.submitted as f64)),
+                ("completed", Json::num(s.completed as f64)),
+                ("failed", Json::num(s.failed as f64)),
+                ("native", Json::num(s.native_jobs as f64)),
+                ("pjrt", Json::num(s.pjrt_jobs as f64)),
+                ("batches", Json::num(s.batches as f64)),
+                ("padded", Json::num(s.padded_slots as f64)),
+                ("mean_latency_us", Json::num(s.mean_latency_us)),
+            ]))
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(crate::error::Error::Unknown {
+            kind: "op",
+            name: other.to_string(),
+        }),
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CoordinatorConfig;
+
+    #[test]
+    fn malformed_requests_get_error_replies_not_disconnects() {
+        use std::io::{BufRead, BufReader, Write};
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let stream = std::net::TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        for bad in [
+            "not json at all",
+            r#"{"no_op": 1}"#,
+            r#"{"op":"spdtw"}"#,                           // missing fields
+            r#"{"op":"spdtw","grid":99,"x":[1],"y":[1]}"#, // unknown grid
+            r#"{"op":"register_grid"}"#,                   // missing t
+            r#"{"op":"spdtw","grid":0,"x":["a"],"y":[1]}"#, // non-numeric
+            r#"{"op":"nosuchop"}"#,
+        ] {
+            writer.write_all(bad.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let reply = Json::parse(line.trim()).expect("reply must be valid JSON");
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        }
+        // connection still alive after every failure
+        writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"));
+        server.stop();
+    }
+
+    #[test]
+    fn ping_register_dist_metrics() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let pong = client.call(&Json::parse(r#"{"op":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+        let reg = client
+            .call(&Json::parse(r#"{"op":"register_grid","t":4,"band":1}"#).unwrap())
+            .unwrap();
+        let gid = reg.req_usize("grid").unwrap();
+
+        let d = client
+            .call(
+                &Json::parse(&format!(
+                    r#"{{"op":"spdtw","grid":{gid},"x":[0,1,2,3],"y":[0,1,2,3]}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(d.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(d.req_f64("value").unwrap(), 0.0);
+        assert_eq!(d.req_str("backend").unwrap(), "native");
+
+        let m = client.call(&Json::parse(r#"{"op":"metrics"}"#).unwrap()).unwrap();
+        assert!(m.req_f64("completed").unwrap() >= 1.0);
+
+        let bad = client.call(&Json::parse(r#"{"op":"nope"}"#).unwrap()).unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+        server.stop();
+    }
+}

@@ -1,0 +1,73 @@
+//! Model store: learned LOC grids registered with the coordinator.
+//! Each grid gets a stable key; when a PJRT engine is attached, its
+//! weight (f32, SP-DTW) and mask (f64, SP-K_rdtw) planes are uploaded
+//! once at registration time and stay device-resident.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::sparse::LocMatrix;
+
+/// Opaque registered-grid identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridKey(pub u64);
+
+pub struct GridEntry {
+    pub loc: Arc<LocMatrix>,
+    /// Whether the planes were uploaded to the PJRT engine.
+    pub on_device: bool,
+}
+
+#[derive(Default)]
+pub struct GridRegistry {
+    next: u64,
+    grids: HashMap<u64, GridEntry>,
+}
+
+impl GridRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, loc: Arc<LocMatrix>, on_device: bool) -> GridKey {
+        let key = self.next;
+        self.next += 1;
+        self.grids.insert(key, GridEntry { loc, on_device });
+        GridKey(key)
+    }
+
+    pub fn get(&self, key: GridKey) -> Option<&GridEntry> {
+        self.grids.get(&key.0)
+    }
+
+    pub fn set_on_device(&mut self, key: GridKey) {
+        if let Some(e) = self.grids.get_mut(&key.0) {
+            e.on_device = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.grids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grids.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_unique_and_resolvable() {
+        let mut r = GridRegistry::new();
+        let a = r.insert(Arc::new(LocMatrix::full(4)), false);
+        let b = r.insert(Arc::new(LocMatrix::corridor(4, 1)), true);
+        assert_ne!(a, b);
+        assert_eq!(r.get(a).unwrap().loc.nnz(), 16);
+        assert!(r.get(b).unwrap().on_device);
+        assert_eq!(r.len(), 2);
+        assert!(r.get(GridKey(99)).is_none());
+    }
+}

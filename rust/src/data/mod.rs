@@ -1,0 +1,158 @@
+//! Time-series data substrate: core types, z-normalization, UCR-format
+//! IO, the Table-I dataset registry and the synthetic archive generators.
+
+pub mod registry;
+pub mod splits;
+pub mod synthetic;
+pub mod ucr;
+
+/// A single univariate time series with a class label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeries {
+    pub label: usize,
+    pub values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(label: usize, values: Vec<f64>) -> Self {
+        TimeSeries { label, values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Z-normalize in place (mean 0, std 1).  Constant series are left
+    /// centered at 0 (std guard), matching the UCR archive convention.
+    pub fn znormalize(&mut self) {
+        let n = self.values.len();
+        if n == 0 {
+            return;
+        }
+        let mean = self.values.iter().sum::<f64>() / n as f64;
+        let var = self
+            .values
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f64>()
+            / n as f64;
+        let std = var.sqrt();
+        if std > 1e-12 {
+            for v in &mut self.values {
+                *v = (*v - mean) / std;
+            }
+        } else {
+            for v in &mut self.values {
+                *v -= mean;
+            }
+        }
+    }
+
+    /// Z-normalized copy.
+    pub fn znormalized(&self) -> TimeSeries {
+        let mut c = self.clone();
+        c.znormalize();
+        c
+    }
+}
+
+/// A labeled set of equal-length series (one UCR split).
+#[derive(Clone, Debug, Default)]
+pub struct LabeledSet {
+    pub series: Vec<TimeSeries>,
+}
+
+impl LabeledSet {
+    pub fn new(series: Vec<TimeSeries>) -> Self {
+        LabeledSet { series }
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Series length (asserts homogeneity in debug builds).
+    pub fn series_len(&self) -> usize {
+        let t = self.series.first().map(|s| s.len()).unwrap_or(0);
+        debug_assert!(self.series.iter().all(|s| s.len() == t));
+        t
+    }
+
+    /// Distinct labels, sorted.
+    pub fn labels(&self) -> Vec<usize> {
+        let mut l: Vec<usize> = self.series.iter().map(|s| s.label).collect();
+        l.sort_unstable();
+        l.dedup();
+        l
+    }
+
+    pub fn znormalize(&mut self) {
+        for s in &mut self.series {
+            s.znormalize();
+        }
+    }
+}
+
+/// A full dataset: name + train/test splits.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: LabeledSet,
+    pub test: LabeledSet,
+}
+
+impl Dataset {
+    pub fn series_len(&self) -> usize {
+        self.train.series_len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        let mut l = self.train.labels();
+        for s in &self.test.series {
+            l.push(s.label);
+        }
+        l.sort_unstable();
+        l.dedup();
+        l.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn znorm_moments() {
+        let mut s = TimeSeries::new(0, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        s.znormalize();
+        let mean = s.values.iter().sum::<f64>() / 5.0;
+        let var = s.values.iter().map(|v| v * v).sum::<f64>() / 5.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn znorm_constant_series_is_centered() {
+        let mut s = TimeSeries::new(0, vec![3.0; 8]);
+        s.znormalize();
+        assert!(s.values.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn labels_sorted_dedup() {
+        let set = LabeledSet::new(vec![
+            TimeSeries::new(2, vec![0.0]),
+            TimeSeries::new(0, vec![0.0]),
+            TimeSeries::new(2, vec![0.0]),
+        ]);
+        assert_eq!(set.labels(), vec![0, 2]);
+    }
+}

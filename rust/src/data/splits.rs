@@ -1,0 +1,133 @@
+//! Split utilities: stratified subsampling and k-fold partitions used by
+//! the tuning (cross-validation) and the scaled experiment runs.
+
+use crate::data::{LabeledSet, TimeSeries};
+use crate::util::rng::Pcg64;
+
+/// Stratified subsample of at most `max` series (keeps class proportions,
+/// ensures every present class keeps at least one instance when possible).
+pub fn stratified_subsample(set: &LabeledSet, max: usize, seed: u64) -> LabeledSet {
+    if set.len() <= max {
+        return set.clone();
+    }
+    let mut rng = Pcg64::new(seed);
+    let labels = set.labels();
+    let mut by_class: Vec<Vec<usize>> = labels.iter().map(|_| Vec::new()).collect();
+    for (i, s) in set.series.iter().enumerate() {
+        let ci = labels.binary_search(&s.label).unwrap();
+        by_class[ci].push(i);
+    }
+    for idxs in &mut by_class {
+        rng.shuffle(idxs);
+    }
+    // Round-robin across classes until `max` picks.
+    let mut picks: Vec<usize> = Vec::with_capacity(max);
+    let mut cursor = vec![0usize; by_class.len()];
+    'outer: loop {
+        let mut progressed = false;
+        for (c, idxs) in by_class.iter().enumerate() {
+            if cursor[c] < idxs.len() {
+                picks.push(idxs[cursor[c]]);
+                cursor[c] += 1;
+                progressed = true;
+                if picks.len() == max {
+                    break 'outer;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    picks.sort_unstable();
+    LabeledSet::new(picks.into_iter().map(|i| set.series[i].clone()).collect())
+}
+
+/// Deterministic k-fold partition indices (stratified by label).
+/// Returns for each fold the (train_indices, valid_indices).
+pub fn kfold_indices(set: &LabeledSet, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2);
+    let k = k.min(set.len().max(2));
+    let mut rng = Pcg64::new(seed ^ 0xf01d);
+    let labels = set.labels();
+    let mut by_class: Vec<Vec<usize>> = labels.iter().map(|_| Vec::new()).collect();
+    for (i, s) in set.series.iter().enumerate() {
+        let ci = labels.binary_search(&s.label).unwrap();
+        by_class[ci].push(i);
+    }
+    let mut fold_of = vec![0usize; set.len()];
+    for idxs in &mut by_class {
+        rng.shuffle(idxs);
+        for (pos, &i) in idxs.iter().enumerate() {
+            fold_of[i] = pos % k;
+        }
+    }
+    (0..k)
+        .map(|f| {
+            let valid: Vec<usize> = (0..set.len()).filter(|&i| fold_of[i] == f).collect();
+            let train: Vec<usize> = (0..set.len()).filter(|&i| fold_of[i] != f).collect();
+            (train, valid)
+        })
+        .collect()
+}
+
+/// Materialize a subset of a LabeledSet by indices.
+pub fn subset(set: &LabeledSet, idxs: &[usize]) -> LabeledSet {
+    LabeledSet::new(idxs.iter().map(|&i| set.series[i].clone()).collect())
+}
+
+/// Build a LabeledSet from raw (label, values) pairs — test helper.
+pub fn from_pairs(pairs: Vec<(usize, Vec<f64>)>) -> LabeledSet {
+    LabeledSet::new(
+        pairs
+            .into_iter()
+            .map(|(l, v)| TimeSeries::new(l, v))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, classes: usize) -> LabeledSet {
+        from_pairs((0..n).map(|i| (i % classes, vec![i as f64, 0.0])).collect())
+    }
+
+    #[test]
+    fn subsample_keeps_classes() {
+        let set = toy(100, 5);
+        let sub = stratified_subsample(&set, 20, 1);
+        assert_eq!(sub.len(), 20);
+        assert_eq!(sub.labels().len(), 5);
+    }
+
+    #[test]
+    fn subsample_noop_when_small() {
+        let set = toy(10, 2);
+        let sub = stratified_subsample(&set, 50, 1);
+        assert_eq!(sub.len(), 10);
+    }
+
+    #[test]
+    fn kfold_partitions_cover_everything_once() {
+        let set = toy(53, 4);
+        let folds = kfold_indices(&set, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; set.len()];
+        for (train, valid) in &folds {
+            assert_eq!(train.len() + valid.len(), set.len());
+            for &i in valid {
+                seen[i] += 1;
+                assert!(!train.contains(&i));
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each index in exactly one validation fold");
+    }
+
+    #[test]
+    fn kfold_deterministic() {
+        let set = toy(30, 3);
+        assert_eq!(kfold_indices(&set, 3, 7), kfold_indices(&set, 3, 7));
+    }
+}

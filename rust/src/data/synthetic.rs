@@ -1,0 +1,414 @@
+//! Synthetic UCR archive (DESIGN.md §2 substitution).
+//!
+//! The real UCR archive is unavailable offline, so every Table-I dataset
+//! is synthesized by a seeded, class-structured generator that matches
+//! the paper's (k, N_train, N_test, T) exactly.  Design goals:
+//!
+//! 1. **Class structure**: each class has a stable prototype; instances
+//!    are *time-warped* and noisy variants, so elastic measures (DTW
+//!    family) genuinely outperform lock-step ones (Ed) — the property all
+//!    of the paper's comparisons rest on.
+//! 2. **Determinism**: a dataset is a pure function of (name, seed); the
+//!    train/test streams are independent forks, so scaled subsets used by
+//!    the default experiment runs are prefixes of the full data.
+//! 3. **Family diversity**: eight generator families approximating the
+//!    morphology of the corresponding UCR data (see `registry::Family`).
+//!
+//! Every emitted series is z-normalized, matching the UCR convention the
+//! paper's Appendix A relies on (CORR ≡ Ed equivalence).
+
+use crate::data::registry::{self, DatasetSpec, Family};
+use crate::data::{Dataset, LabeledSet, TimeSeries};
+use crate::error::{Error, Result};
+use crate::util::rng::{hash64, Pcg64};
+
+/// Generate the full dataset for a Table-I name.
+pub fn generate(name: &str, seed: u64) -> Result<Dataset> {
+    let spec = registry::find(name).ok_or_else(|| Error::Unknown {
+        kind: "dataset",
+        name: name.to_string(),
+    })?;
+    Ok(generate_with_sizes(spec, seed, spec.train, spec.test))
+}
+
+/// Generate with capped split sizes (stratified). Used by the scaled
+/// experiment runs; the full run passes the Table-I sizes.
+pub fn generate_scaled(name: &str, seed: u64, max_train: usize, max_test: usize) -> Result<Dataset> {
+    let spec = registry::find(name).ok_or_else(|| Error::Unknown {
+        kind: "dataset",
+        name: name.to_string(),
+    })?;
+    let n_train = spec.train.min(max_train).max(spec.classes.min(spec.train));
+    let n_test = spec.test.min(max_test).max(1);
+    Ok(generate_with_sizes(spec, seed, n_train, n_test))
+}
+
+/// Generate `n_train`/`n_test` series for a spec (stratified labels).
+pub fn generate_with_sizes(spec: &DatasetSpec, seed: u64, n_train: usize, n_test: usize) -> Dataset {
+    let base = hash64(spec.name) ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut proto_rng = Pcg64::new(base);
+    // Class prototypes are shared between splits (drawn once).
+    let protos: Vec<ClassProto> = (0..spec.classes)
+        .map(|c| ClassProto::draw(spec, c, &mut proto_rng))
+        .collect();
+    let mut train_rng = Pcg64::new(base ^ 0x7261_696e); // "rain"
+    let mut test_rng = Pcg64::new(base ^ 0x7465_7374); // "test"
+    let train = make_split(spec, &protos, n_train, &mut train_rng);
+    let test = make_split(spec, &protos, n_test, &mut test_rng);
+    Dataset {
+        name: spec.name.to_string(),
+        train,
+        test,
+    }
+}
+
+fn make_split(spec: &DatasetSpec, protos: &[ClassProto], n: usize, rng: &mut Pcg64) -> LabeledSet {
+    let mut series = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = i % spec.classes; // stratified round-robin
+        let mut s = TimeSeries::new(label, protos[label].instance(spec, rng));
+        s.znormalize();
+        series.push(s);
+    }
+    // Shuffle so class order carries no information.
+    rng.shuffle(&mut series);
+    LabeledSet::new(series)
+}
+
+/// Per-class generator state.
+enum ClassProto {
+    Cbf { kind: usize },
+    ControlChart { kind: usize },
+    Bumps { centers: Vec<f64>, widths: Vec<f64>, amps: Vec<f64> },
+    Harmonics { freqs: Vec<f64>, phases: Vec<f64>, amps: Vec<f64> },
+    Device { edges: Vec<f64>, levels: Vec<f64> },
+    WarpedWalk { proto: Vec<f64> },
+    Motion { rise: f64, fall: f64, level: f64, sharp: f64 },
+    Spikes { positions: Vec<f64>, signs: Vec<f64>, decay: f64 },
+}
+
+impl ClassProto {
+    fn draw(spec: &DatasetSpec, class: usize, rng: &mut Pcg64) -> ClassProto {
+        let mut r = rng.fork(class as u64 + 1);
+        match spec.family {
+            Family::Cbf => ClassProto::Cbf { kind: class % 3 },
+            Family::ControlChart => ClassProto::ControlChart { kind: class % 6 },
+            Family::Bumps => {
+                let nb = 2 + (class % 4) + r.below(2);
+                let centers = (0..nb).map(|_| r.range(0.08, 0.92)).collect();
+                let widths = (0..nb).map(|_| r.range(0.02, 0.10)).collect();
+                let amps = (0..nb).map(|_| r.range(0.5, 2.0) * if r.f64() < 0.25 { -1.0 } else { 1.0 }).collect();
+                ClassProto::Bumps { centers, widths, amps }
+            }
+            Family::Harmonics => {
+                let nh = 3 + r.below(3);
+                let freqs = (0..nh).map(|_| r.range(1.0, 9.0)).collect();
+                let phases = (0..nh).map(|_| r.range(0.0, std::f64::consts::TAU)).collect();
+                let amps = (0..nh).map(|_| r.range(0.3, 1.4)).collect();
+                ClassProto::Harmonics { freqs, phases, amps }
+            }
+            Family::Device => {
+                let ne = 2 + r.below(4);
+                let mut edges: Vec<f64> = (0..ne).map(|_| r.range(0.05, 0.95)).collect();
+                edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let levels = (0..=ne).map(|_| if r.f64() < 0.5 { r.range(0.0, 0.4) } else { r.range(1.2, 3.0) }).collect();
+                ClassProto::Device { edges, levels }
+            }
+            Family::WarpedWalk => {
+                let t = spec.length;
+                let mut walk = Vec::with_capacity(t);
+                let mut acc = 0.0;
+                for _ in 0..t {
+                    acc += r.normal();
+                    walk.push(acc);
+                }
+                ClassProto::WarpedWalk { proto: smooth(&walk, (t / 20).max(3)) }
+            }
+            Family::Motion => ClassProto::Motion {
+                rise: r.range(0.15, 0.40),
+                fall: r.range(0.60, 0.85),
+                level: r.range(1.0, 2.5),
+                sharp: r.range(15.0, 60.0),
+            },
+            Family::Spikes => {
+                let ns = 1 + class % 5 + r.below(2);
+                let positions = (0..ns).map(|_| r.range(0.1, 0.9)).collect();
+                let signs = (0..ns).map(|_| if r.f64() < 0.3 { -1.0 } else { 1.0 }).collect();
+                ClassProto::Spikes { positions, signs, decay: r.range(30.0, 120.0) }
+            }
+        }
+    }
+
+    /// Draw one noisy, time-warped instance of this class.
+    fn instance(&self, spec: &DatasetSpec, rng: &mut Pcg64) -> Vec<f64> {
+        let t = spec.length;
+        let noise = 0.25;
+        match self {
+            ClassProto::Cbf { kind } => cbf_instance(*kind, t, rng),
+            ClassProto::ControlChart { kind } => control_chart_instance(*kind, t, rng),
+            ClassProto::Bumps { centers, widths, amps } => {
+                let shift = rng.range(-0.04, 0.04);
+                let stretch = rng.range(0.92, 1.08);
+                (0..t)
+                    .map(|i| {
+                        let u = i as f64 / (t - 1) as f64;
+                        let mut v = 0.0;
+                        for ((c, w), a) in centers.iter().zip(widths).zip(amps) {
+                            let cc = (c * stretch + shift).clamp(0.0, 1.0);
+                            let d = (u - cc) / w;
+                            v += a * (-0.5 * d * d).exp();
+                        }
+                        v + noise * 0.4 * rng.normal()
+                    })
+                    .collect()
+            }
+            ClassProto::Harmonics { freqs, phases, amps } => {
+                let phase_jit = rng.range(-0.35, 0.35);
+                let freq_jit = rng.range(0.97, 1.03);
+                (0..t)
+                    .map(|i| {
+                        let u = i as f64 / (t - 1) as f64;
+                        let mut v = 0.0;
+                        for ((f, p), a) in freqs.iter().zip(phases).zip(amps) {
+                            v += a * (std::f64::consts::TAU * f * freq_jit * u + p + phase_jit).sin();
+                        }
+                        v + noise * 0.5 * rng.normal()
+                    })
+                    .collect()
+            }
+            ClassProto::Device { edges, levels } => {
+                let jit: Vec<f64> = edges.iter().map(|e| (e + rng.range(-0.05, 0.05)).clamp(0.0, 1.0)).collect();
+                (0..t)
+                    .map(|i| {
+                        let u = i as f64 / (t - 1) as f64;
+                        let seg = jit.iter().filter(|&&e| u >= e).count();
+                        levels[seg] + noise * 0.3 * rng.normal()
+                    })
+                    .collect()
+            }
+            ClassProto::WarpedWalk { proto } => {
+                let warped = warp_resample(proto, t, rng, 0.35);
+                warped.iter().map(|v| v + noise * 0.3 * rng.normal()).collect()
+            }
+            ClassProto::Motion { rise, fall, level, sharp } => {
+                let r_jit = rise + rng.range(-0.05, 0.05);
+                let f_jit = fall + rng.range(-0.05, 0.05);
+                (0..t)
+                    .map(|i| {
+                        let u = i as f64 / (t - 1) as f64;
+                        let up = 1.0 / (1.0 + (-sharp * (u - r_jit)).exp());
+                        let down = 1.0 / (1.0 + (-sharp * (u - f_jit)).exp());
+                        level * (up - down) + noise * 0.25 * rng.normal()
+                    })
+                    .collect()
+            }
+            ClassProto::Spikes { positions, signs, decay } => {
+                let jit: Vec<f64> = positions.iter().map(|p| (p + rng.range(-0.03, 0.03)).clamp(0.0, 1.0)).collect();
+                (0..t)
+                    .map(|i| {
+                        let u = i as f64 / (t - 1) as f64;
+                        let mut v = 0.0;
+                        for (p, s) in jit.iter().zip(signs) {
+                            let d = (u - p).abs();
+                            v += s * 3.0 * (-decay * d).exp();
+                        }
+                        v + noise * 0.35 * rng.normal()
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Classic CBF generator (Saito 1994): class 0 cylinder, 1 bell, 2 funnel.
+fn cbf_instance(kind: usize, t: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let a = rng.range(0.125, 0.375) * t as f64;
+    let b = a + rng.range(0.25, 0.5) * t as f64;
+    let amp = 6.0 + rng.normal();
+    (0..t)
+        .map(|i| {
+            let x = i as f64;
+            let inside = x >= a && x <= b;
+            let shape = if !inside {
+                0.0
+            } else {
+                match kind {
+                    0 => 1.0,                       // cylinder
+                    1 => (x - a) / (b - a),         // bell (ramp up)
+                    _ => (b - x) / (b - a),         // funnel (ramp down)
+                }
+            };
+            amp * shape + rng.normal()
+        })
+        .collect()
+}
+
+/// Classic control-chart patterns (Alcock & Manolopoulos 1999).
+fn control_chart_instance(kind: usize, t: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let shift_point = rng.range(0.33, 0.66) * t as f64;
+    (0..t)
+        .map(|i| {
+            let x = i as f64;
+            let base = 30.0 + 2.0 * rng.normal();
+            match kind {
+                0 => base,                                                   // normal
+                1 => base + 8.0 * (std::f64::consts::TAU * x / rng.range(10.0, 15.0).max(1.0)).sin(), // cyclic
+                2 => base + 0.4 * x,                                         // increasing trend
+                3 => base - 0.4 * x,                                         // decreasing trend
+                4 => base + if x >= shift_point { 10.0 } else { 0.0 },       // upward shift
+                _ => base - if x >= shift_point { 10.0 } else { 0.0 },       // downward shift
+            }
+        })
+        .collect()
+}
+
+/// Moving-average smoother (reflective bounds).
+fn smooth(xs: &[f64], w: usize) -> Vec<f64> {
+    let n = xs.len();
+    (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(w);
+            let hi = (i + w + 1).min(n);
+            xs[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+/// Random smooth monotone time warp: resample `proto` (any length) to
+/// length `t` along a warped time axis.  `strength` in [0, 1) controls
+/// deviation from identity.
+fn warp_resample(proto: &[f64], t: usize, rng: &mut Pcg64, strength: f64) -> Vec<f64> {
+    let knots = 8;
+    // Positive increments -> monotone warp; normalized to [0,1].
+    let mut incs: Vec<f64> = (0..knots).map(|_| (1.0 - strength) + strength * rng.range(0.0, 2.0)).collect();
+    let total: f64 = incs.iter().sum();
+    for v in &mut incs {
+        *v /= total;
+    }
+    let mut cum = vec![0.0];
+    for v in &incs {
+        cum.push(cum.last().unwrap() + v);
+    }
+    let n = proto.len();
+    (0..t)
+        .map(|i| {
+            let u = i as f64 / (t - 1).max(1) as f64;
+            // piecewise-linear warp through the knots
+            let seg = ((u * knots as f64).floor() as usize).min(knots - 1);
+            let frac = u * knots as f64 - seg as f64;
+            let wu = cum[seg] + frac * (cum[seg + 1] - cum[seg]);
+            let pos = wu * (n - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = (lo + 1).min(n - 1);
+            let f = pos - lo as f64;
+            proto[lo] * (1.0 - f) + proto[hi] * f
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate("CBF", 42).unwrap();
+        let b = generate("CBF", 42).unwrap();
+        assert_eq!(a.train.series[0].values, b.train.series[0].values);
+        assert_eq!(a.test.series[5].label, b.test.series[5].label);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate("CBF", 1).unwrap();
+        let b = generate("CBF", 2).unwrap();
+        assert_ne!(a.train.series[0].values, b.train.series[0].values);
+    }
+
+    #[test]
+    fn sizes_match_table1() {
+        for name in ["CBF", "SyntheticControl", "Gun-Point", "Wine"] {
+            let spec = registry::find(name).unwrap();
+            let ds = generate(name, 7).unwrap();
+            assert_eq!(ds.train.len(), spec.train, "{name} train");
+            assert_eq!(ds.test.len(), spec.test, "{name} test");
+            assert_eq!(ds.series_len(), spec.length, "{name} length");
+            assert_eq!(ds.n_classes(), spec.classes, "{name} classes");
+        }
+    }
+
+    #[test]
+    fn scaled_sizes_and_stratification() {
+        let ds = generate_scaled("SwedishLeaf", 3, 60, 45).unwrap();
+        assert_eq!(ds.train.len(), 60);
+        assert_eq!(ds.test.len(), 45);
+        // all 15 classes present in train (60 = 4 per class)
+        assert_eq!(ds.train.labels().len(), 15);
+    }
+
+    #[test]
+    fn series_are_znormalized() {
+        let ds = generate("Beef", 11).unwrap();
+        for s in ds.train.series.iter().take(5) {
+            let m: f64 = s.values.iter().sum::<f64>() / s.len() as f64;
+            let v: f64 = s.values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / s.len() as f64;
+            assert!(m.abs() < 1e-9);
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_thirty_generate_quickly_scaled() {
+        for spec in registry::TABLE1 {
+            let ds = generate_scaled(spec.name, 5, 12, 6).unwrap();
+            assert!(ds.train.len() >= spec.classes.min(12));
+            assert_eq!(ds.series_len(), spec.length);
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(generate("NotADataset", 0).is_err());
+    }
+
+    #[test]
+    fn classes_are_separable_by_euclid_on_average() {
+        // weak sanity: intra-class distance < inter-class distance in
+        // the mean, otherwise classification results are meaningless.
+        let ds = generate_scaled("CBF", 9, 30, 0).unwrap();
+        let series = &ds.train.series;
+        let (mut intra, mut inter, mut ni, mut nx) = (0.0, 0.0, 0usize, 0usize);
+        for i in 0..series.len() {
+            for j in (i + 1)..series.len() {
+                let d: f64 = series[i]
+                    .values
+                    .iter()
+                    .zip(&series[j].values)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if series[i].label == series[j].label {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f64 <= inter / nx as f64);
+    }
+
+    #[test]
+    fn warp_resample_preserves_endpoints_roughly() {
+        let proto: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut rng = Pcg64::new(3);
+        let w = warp_resample(&proto, 50, &mut rng, 0.3);
+        assert_eq!(w.len(), 50);
+        assert!((w[0] - 0.0).abs() < 1e-9);
+        assert!((w[49] - 99.0).abs() < 1e-9);
+        // monotone
+        for i in 1..50 {
+            assert!(w[i] >= w[i - 1] - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! UCR time-series archive text format IO.
+//!
+//! The classic UCR format is one series per line: `label,v1,v2,...,vT`
+//! (comma- or tab-separated; the 2015 archive uses commas, the 2018 one
+//! tabs — we accept both and also whitespace).  Files written by
+//! `write_split` round-trip losslessly through `read_split`.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::data::{Dataset, LabeledSet, TimeSeries};
+use crate::error::{Error, Result};
+
+/// Read one split (train or test file).
+pub fn read_split(path: &Path) -> Result<LabeledSet> {
+    let file = File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut series = Vec::new();
+    let mut expect_len: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = trimmed
+            .split(|c: char| c == ',' || c == '\t' || c == ' ')
+            .filter(|t| !t.is_empty())
+            .collect();
+        if toks.len() < 2 {
+            return Err(Error::data(format!(
+                "{}:{}: expected 'label,v1,...' got {} tokens",
+                path.display(),
+                lineno + 1,
+                toks.len()
+            )));
+        }
+        // UCR labels may be floats like "1.0" or negative ("-1"); map to
+        // a usize by rounding and offsetting negatives.
+        let raw: f64 = toks[0].parse().map_err(|_| {
+            Error::data(format!("{}:{}: bad label '{}'", path.display(), lineno + 1, toks[0]))
+        })?;
+        let label = normalize_label(raw);
+        let values: Result<Vec<f64>> = toks[1..]
+            .iter()
+            .map(|t| {
+                t.parse::<f64>().map_err(|_| {
+                    Error::data(format!("{}:{}: bad value '{t}'", path.display(), lineno + 1))
+                })
+            })
+            .collect();
+        let values = values?;
+        if let Some(el) = expect_len {
+            if values.len() != el {
+                return Err(Error::data(format!(
+                    "{}:{}: length {} != first series length {el}",
+                    path.display(),
+                    lineno + 1,
+                    values.len()
+                )));
+            }
+        } else {
+            expect_len = Some(values.len());
+        }
+        series.push(TimeSeries::new(label, values));
+    }
+    if series.is_empty() {
+        return Err(Error::data(format!("{}: empty split", path.display())));
+    }
+    Ok(LabeledSet::new(series))
+}
+
+/// Map a raw UCR float label to a stable usize (handles "-1", "1.0", ...).
+fn normalize_label(raw: f64) -> usize {
+    let r = raw.round() as i64;
+    if r < 0 {
+        (1_000_000 + (-r)) as usize // keep negatives distinct
+    } else {
+        r as usize
+    }
+}
+
+/// Write one split in comma-separated UCR format.
+pub fn write_split(path: &Path, set: &LabeledSet) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    for s in &set.series {
+        write!(w, "{}", s.label)?;
+        for v in &s.values {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Read `<dir>/<name>_TRAIN` + `<dir>/<name>_TEST` (UCR layout).
+pub fn read_dataset(dir: &Path, name: &str) -> Result<Dataset> {
+    let train = read_split(&dir.join(format!("{name}_TRAIN")))?;
+    let test = read_split(&dir.join(format!("{name}_TEST")))?;
+    if train.series_len() != test.series_len() {
+        return Err(Error::data(format!(
+            "{name}: train length {} != test length {}",
+            train.series_len(),
+            test.series_len()
+        )));
+    }
+    Ok(Dataset {
+        name: name.to_string(),
+        train,
+        test,
+    })
+}
+
+/// Write a dataset in UCR layout.
+pub fn write_dataset(dir: &Path, ds: &Dataset) -> Result<()> {
+    write_split(&dir.join(format!("{}_TRAIN", ds.name)), &ds.train)?;
+    write_split(&dir.join(format!("{}_TEST", ds.name)), &ds.test)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("spdtw_ucr_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_dataset() {
+        let dir = tmpdir("rt");
+        let ds = synthetic::generate_scaled("CBF", 1, 9, 6).unwrap();
+        write_dataset(&dir, &ds).unwrap();
+        let back = read_dataset(&dir, "CBF").unwrap();
+        assert_eq!(back.train.len(), ds.train.len());
+        assert_eq!(back.test.len(), ds.test.len());
+        for (a, b) in back.train.series.iter().zip(&ds.train.series) {
+            assert_eq!(a.label, b.label);
+            for (x, y) in a.values.iter().zip(&b.values) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_tabs_and_float_labels() {
+        let dir = tmpdir("tabs");
+        let p = dir.join("X_TRAIN");
+        std::fs::write(&p, "1.0\t0.5\t0.25\n-1\t1.5\t2.5\n").unwrap();
+        let set = read_split(&p).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.series[0].label, 1);
+        assert_ne!(set.series[1].label, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_and_empty() {
+        let dir = tmpdir("bad");
+        let p = dir.join("BAD_TRAIN");
+        std::fs::write(&p, "1,1,2,3\n2,1,2\n").unwrap();
+        assert!(read_split(&p).is_err());
+        let e = dir.join("EMPTY_TRAIN");
+        std::fs::write(&e, "\n\n").unwrap();
+        assert!(read_split(&e).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = tmpdir("cmt");
+        let p = dir.join("C_TRAIN");
+        std::fs::write(&p, "# header\n\n0,1,2\n1,3,4\n").unwrap();
+        let set = read_split(&p).unwrap();
+        assert_eq!(set.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (`thiserror` is not in the vendored crate set); converts
+//! from IO / xla / parse errors and carries enough context for the CLI to
+//! print actionable messages.
+
+use std::fmt;
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem / socket IO.
+    Io(std::io::Error),
+    /// JSON parse errors from `util::json`.
+    Json { msg: String, offset: usize },
+    /// Configuration / CLI validation.
+    Config(String),
+    /// Unknown dataset, measure or experiment name.
+    Unknown { kind: &'static str, name: String },
+    /// Data format violations (UCR parsing, length mismatches...).
+    Data(String),
+    /// PJRT runtime errors (compile, execute, artifact lookup).
+    Runtime(String),
+    /// Coordinator lifecycle errors (queue closed, worker panic...).
+    Coordinator(String),
+    /// Numerical failure (SVM non-convergence, NaN propagation...).
+    Numeric(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json { msg, offset } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Unknown { kind, name } => write!(f, "unknown {kind}: '{name}'"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Numeric(m) => write!(f, "numeric error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand constructor used across the crate.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn data(msg: impl Into<String>) -> Self {
+        Error::Data(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+}

@@ -1,0 +1,441 @@
+//! Experiments harness: regenerates every table and figure of the
+//! paper's evaluation section (see DESIGN.md §4 for the index).
+//!
+//! `run("all", &cfg)` executes the per-dataset pipeline once and derives
+//! Tables II/III/IV/V/VI from the shared results; figures re-use the
+//! cached grids.  Reports land in `cfg.out_dir` as markdown + JSON (+
+//! PGM/PPM for the figures).
+
+pub mod report;
+pub mod runner;
+
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::data::registry;
+use crate::error::{Error, Result};
+use crate::sparse::learn::learn_occupancy_grid;
+use crate::stats::mean_ranks;
+use crate::stats::wilcoxon::wilcoxon_signed_rank;
+use crate::tuning;
+use crate::viz::Heatmap;
+use report::{fmt_err, fmt_p, Table};
+use runner::{evaluate_dataset, DatasetEval, NN_METHODS, SVM_METHODS};
+
+/// Known experiment ids.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "fig4", "fig5", "fig6", "fig7",
+    "fig8",
+];
+
+/// Entry point: run one experiment id (or "all").
+pub fn run(id: &str, cfg: &ExperimentConfig) -> Result<()> {
+    match id {
+        "all" => run_all(cfg),
+        "table1" => table1(cfg),
+        "table2" | "table3" | "table6" => {
+            let evals = run_pipeline(cfg, false)?;
+            table2(cfg, &evals)?;
+            table3(cfg, &evals)?;
+            table6(cfg, &evals)
+        }
+        "table4" | "table5" => {
+            let evals = run_pipeline(cfg, true)?;
+            table4(cfg, &evals)?;
+            table5(cfg, &evals)
+        }
+        "fig4" => fig4(cfg),
+        "fig5" => figure_grid(cfg, "Beef", "fig5"),
+        "fig6" => figure_grid(cfg, "BeetleFly", "fig6"),
+        "fig7" => figure_grid(cfg, "ElectricDevices", "fig7"),
+        "fig8" => figure_grid(cfg, "MedicalImages", "fig8"),
+        other => Err(Error::Unknown {
+            kind: "experiment",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn run_all(cfg: &ExperimentConfig) -> Result<()> {
+    table1(cfg)?;
+    let evals = run_pipeline(cfg, true)?;
+    table2(cfg, &evals)?;
+    table3(cfg, &evals)?;
+    table4(cfg, &evals)?;
+    table5(cfg, &evals)?;
+    table6(cfg, &evals)?;
+    fig4(cfg)?;
+    for (ds, fig) in [
+        ("Beef", "fig5"),
+        ("BeetleFly", "fig6"),
+        ("ElectricDevices", "fig7"),
+        ("MedicalImages", "fig8"),
+    ] {
+        figure_grid(cfg, ds, fig)?;
+    }
+    Ok(())
+}
+
+/// Run the per-dataset pipeline over the configured datasets.
+pub fn run_pipeline(cfg: &ExperimentConfig, with_svm: bool) -> Result<Vec<DatasetEval>> {
+    let names = cfg.dataset_names();
+    let mut evals = Vec::with_capacity(names.len());
+    for (i, name) in names.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let ev = evaluate_dataset(cfg, name, with_svm)?;
+        eprintln!(
+            "[{}/{}] {name}: T={} train={} test={} θ={} γ={} ν={} band={}%  ({:.1}s)",
+            i + 1,
+            names.len(),
+            ev.t,
+            ev.n_train,
+            ev.n_test,
+            ev.theta,
+            ev.gamma,
+            ev.nu,
+            ev.band_pct,
+            t0.elapsed().as_secs_f64()
+        );
+        evals.push(ev);
+    }
+    Ok(evals)
+}
+
+// ---------------------------------------------------------------------------
+// Table I — dataset inventory
+// ---------------------------------------------------------------------------
+
+fn table1(cfg: &ExperimentConfig) -> Result<()> {
+    let mut t = Table::new(
+        "Table I — data description (paper sizes; scaled caps in brackets)",
+        &["DataSet", "k", "N(train)", "N(test)", "T", "family"],
+    );
+    let (cap_tr, cap_te) = cfg.caps();
+    for spec in registry::TABLE1 {
+        let tr = if cfg.full {
+            format!("{}", spec.train)
+        } else {
+            format!("{} [{}]", spec.train, spec.train.min(cap_tr))
+        };
+        let te = if cfg.full {
+            format!("{}", spec.test)
+        } else {
+            format!("{} [{}]", spec.test, spec.test.min(cap_te))
+        };
+        t.push_row(vec![
+            spec.name.to_string(),
+            spec.classes.to_string(),
+            tr,
+            te,
+            spec.length.to_string(),
+            format!("{:?}", spec.family),
+        ]);
+    }
+    t.write(&cfg.out_dir, "table1")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table II — 1-NN error rates + mean rank
+// ---------------------------------------------------------------------------
+
+fn table2(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    let mut header = vec!["DataSet"];
+    header.extend(NN_METHODS);
+    let mut t = Table::new("Table II — 1-NN classification error rate", &header);
+    let mut rows_numeric: Vec<Vec<f64>> = Vec::new();
+    for ev in evals {
+        let mut row = vec![ev.name.clone()];
+        let mut numeric = Vec::new();
+        for m in NN_METHODS {
+            let e = ev.err_1nn[*m];
+            numeric.push(e);
+            if *m == "DTW_sc" {
+                row.push(format!("{}({})", fmt_err(e), ev.band_pct as i64));
+            } else {
+                row.push(fmt_err(e));
+            }
+        }
+        rows_numeric.push(numeric);
+        t.push_row(row);
+    }
+    let ranks = mean_ranks(&rows_numeric);
+    let mut rank_row = vec!["Mean rank".to_string()];
+    rank_row.extend(ranks.iter().map(|r| format!("{r:.2}")));
+    t.push_row(rank_row);
+    t.write(&cfg.out_dir, "table2")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables III / V — Wilcoxon signed-rank p-values
+// ---------------------------------------------------------------------------
+
+fn wilcoxon_table(
+    title: &str,
+    methods: &[&str],
+    errors_of: impl Fn(&DatasetEval, &str) -> f64,
+    evals: &[DatasetEval],
+) -> Table {
+    let mut header = vec!["Method"];
+    header.extend(&methods[1..]);
+    let mut t = Table::new(title, &header);
+    for (i, a) in methods.iter().enumerate().take(methods.len() - 1) {
+        let mut row = vec![a.to_string()];
+        for b in &methods[1..] {
+            if methods.iter().position(|m| m == b).unwrap() <= i {
+                row.push("-".to_string());
+                continue;
+            }
+            let ea: Vec<f64> = evals.iter().map(|ev| errors_of(ev, a)).collect();
+            let eb: Vec<f64> = evals.iter().map(|ev| errors_of(ev, b)).collect();
+            let w = wilcoxon_signed_rank(&ea, &eb);
+            row.push(fmt_p(w.p_value));
+        }
+        t.push_row(row);
+    }
+    t
+}
+
+fn table3(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    // paper groups CORR/Ed together (identical on z-normalized data)
+    let methods = ["CORR", "DACO", "DTW", "DTW_sc", "Krdtw", "SP-DTW", "SP-Krdtw"];
+    let t = wilcoxon_table(
+        "Table III — Wilcoxon signed-rank p-values (1-NN)",
+        &methods,
+        |ev, m| ev.err_1nn[m],
+        evals,
+    );
+    t.write(&cfg.out_dir, "table3")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — SVM error rates + mean rank
+// ---------------------------------------------------------------------------
+
+fn table4(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    let mut header = vec!["DataSet"];
+    header.extend(SVM_METHODS);
+    let mut t = Table::new("Table IV — SVM classification error rate", &header);
+    let mut rows_numeric = Vec::new();
+    for ev in evals {
+        if ev.err_svm.is_empty() {
+            continue;
+        }
+        let mut row = vec![ev.name.clone()];
+        let mut numeric = Vec::new();
+        for m in SVM_METHODS {
+            let e = ev.err_svm[*m];
+            numeric.push(e);
+            row.push(fmt_err(e));
+        }
+        rows_numeric.push(numeric);
+        t.push_row(row);
+    }
+    if !rows_numeric.is_empty() {
+        let ranks = mean_ranks(&rows_numeric);
+        let mut rank_row = vec!["Mean rank".to_string()];
+        rank_row.extend(ranks.iter().map(|r| format!("{r:.2}")));
+        t.push_row(rank_row);
+    }
+    t.write(&cfg.out_dir, "table4")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn table5(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    let with_svm: Vec<DatasetEval> = evals.iter().filter(|e| !e.err_svm.is_empty()).cloned().collect();
+    let t = wilcoxon_table(
+        "Table V — Wilcoxon signed-rank p-values (SVM)",
+        SVM_METHODS,
+        |ev, m| ev.err_svm[m],
+        &with_svm,
+    );
+    t.write(&cfg.out_dir, "table5")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table VI — visited cells / speed-up
+// ---------------------------------------------------------------------------
+
+fn table6(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    let mut t = Table::new(
+        "Table VI — time speed-up vs standard DTW (visited cells per comparison)",
+        &[
+            "DataSet", "DTW cells", "SC cells", "SC S(%)", "SP-DTW cells", "SP-DTW S(%)",
+            "SP-Krdtw cells", "SP-Krdtw S(%)",
+        ],
+    );
+    let (mut s_sc, mut s_sp, mut s_spk) = (0.0, 0.0, 0.0);
+    for ev in evals {
+        let full = ev.cells["DTW"] as f64;
+        let sc = ev.cells["DTW_sc"] as f64;
+        let sp = ev.cells["SP-DTW"] as f64;
+        let spk = ev.cells["SP-Krdtw"] as f64;
+        let pct = |c: f64| 100.0 * (1.0 - c / full);
+        s_sc += pct(sc);
+        s_sp += pct(sp);
+        s_spk += pct(spk);
+        t.push_row(vec![
+            ev.name.clone(),
+            format!("{}", full as u64),
+            format!("{}", sc as u64),
+            format!("{:.1}", pct(sc)),
+            format!("{}", sp as u64),
+            format!("{:.1}", pct(sp)),
+            format!("{}", spk as u64),
+            format!("{:.1}", pct(spk)),
+        ]);
+    }
+    let n = evals.len().max(1) as f64;
+    t.push_row(vec![
+        "Average (speed-up)".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", s_sc / n),
+        "-".into(),
+        format!("{:.1}", s_sp / n),
+        "-".into(),
+        format!("{:.1}", s_spk / n),
+    ]);
+    t.write(&cfg.out_dir, "table6")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — θ grid-search curves
+// ---------------------------------------------------------------------------
+
+fn fig4(cfg: &ExperimentConfig) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 4 — LOO error rate vs θ (train split)",
+        &["DataSet", "θ", "LOO error"],
+    );
+    for name in ["50Words", "FacesUCR", "Wine"] {
+        // LOO needs >= 2 series per class to be meaningful; lift the cap
+        // to 3 per class for the many-class figure subjects.
+        let mut fcfg = cfg.clone();
+        if let Some(spec) = registry::find(name) {
+            fcfg.max_train = fcfg.max_train.max(3 * spec.classes);
+        }
+        let cfg = &fcfg;
+        let ds = runner::load_dataset(cfg, name)?;
+        let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+        let (best, curve) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
+        for (theta, err) in &curve {
+            let marker = if *theta == best { " *" } else { "" };
+            t.push_row(vec![
+                name.to_string(),
+                format!("{theta}{marker}"),
+                fmt_err(*err),
+            ]);
+        }
+    }
+    t.write(&cfg.out_dir, "fig4")?;
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 5-8 — occupancy-grid panels
+// ---------------------------------------------------------------------------
+
+fn figure_grid(cfg: &ExperimentConfig, dataset: &str, fig: &str) -> Result<()> {
+    let ds = runner::load_dataset(cfg, dataset)?;
+    let threads = cfg.threads;
+    let grid = learn_occupancy_grid(&ds.train, threads);
+    let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), threads);
+    let (theta, _) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), threads);
+    let t = ds.series_len();
+    let band = ((band_pct / 100.0) * t as f64).round() as usize;
+
+    let dir = cfg.out_dir.join(fig);
+    let panels = [
+        ("sakoe_chiba", Heatmap::corridor(t, band)),
+        ("sparse_paths", Heatmap::from_occupancy(&grid)),
+        (
+            "sparse_thresholded",
+            Heatmap::from_loc_support(&grid.threshold(theta).to_loc_mask()),
+        ),
+    ];
+    let mut md = format!(
+        "### {fig} — {dataset}: occupancy grids (T={t}, band={band}, θ={theta})\n\n"
+    );
+    for (name, hm) in &panels {
+        hm.write_ppm(&dir.join(format!("{name}.ppm")), 256)?;
+        hm.write_pgm(&dir.join(format!("{name}.pgm")), 256)?;
+        md.push_str(&format!("**{name}**\n\n```\n{}```\n\n", hm.ascii(48)));
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("panels.md"), &md)?;
+    println!("{md}");
+    Ok(())
+}
+
+/// Used by fig writers in `figure_grid` and the CLI.
+pub fn out_dir_of(cfg: &ExperimentConfig) -> &Path {
+    &cfg.out_dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(dir: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            max_train: 10,
+            max_test: 6,
+            threads: 4,
+            datasets: vec!["CBF".into(), "SyntheticControl".into(), "Gun-Point".into()],
+            out_dir: std::env::temp_dir().join(format!("spdtw_exp_{dir}_{}", std::process::id())),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let cfg = tiny_cfg("unknown");
+        assert!(run("table99", &cfg).is_err());
+    }
+
+    #[test]
+    fn table1_writes_files() {
+        let cfg = tiny_cfg("t1");
+        run("table1", &cfg).unwrap();
+        assert!(cfg.out_dir.join("table1.md").exists());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn tables_2_3_6_from_shared_pipeline() {
+        let cfg = tiny_cfg("t236");
+        let evals = run_pipeline(&cfg, false).unwrap();
+        assert_eq!(evals.len(), 3);
+        table2(&cfg, &evals).unwrap();
+        table3(&cfg, &evals).unwrap();
+        table6(&cfg, &evals).unwrap();
+        for f in ["table2.md", "table3.md", "table6.md"] {
+            assert!(cfg.out_dir.join(f).exists(), "{f}");
+        }
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn figure_grid_writes_panels() {
+        let mut cfg = tiny_cfg("fig");
+        cfg.datasets = vec!["CBF".into()];
+        figure_grid(&cfg, "CBF", "fig5").unwrap();
+        let dir = cfg.out_dir.join("fig5");
+        for f in ["sakoe_chiba.ppm", "sparse_paths.ppm", "sparse_thresholded.ppm", "panels.md"] {
+            assert!(dir.join(f).exists(), "{f}");
+        }
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

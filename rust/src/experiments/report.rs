@@ -1,0 +1,135 @@
+//! Report writers: aligned markdown tables + JSON dumps for every
+//! regenerated table/figure.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// A simple table: header + rows of strings, rendered as markdown.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "ragged row");
+        self.rows.push(row);
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&line(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        let _ = ncol;
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "header",
+                Json::arr(self.header.iter().map(|h| Json::str(h.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c.clone())))),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<stem>.md` and `<dir>/<stem>.json`.
+    pub fn write(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json().to_pretty())?;
+        Ok(())
+    }
+}
+
+/// Format an error rate like the paper (3 decimals).
+pub fn fmt_err(e: f64) -> String {
+    format!("{e:.3}")
+}
+
+/// Format a p-value like the paper's Tables III/V.
+pub fn fmt_p(p: f64) -> String {
+    if p < 0.0001 {
+        "p<0.0001".to_string()
+    } else {
+        format!("{p:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_render_and_files() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a"));
+        let dir = std::env::temp_dir().join(format!("spdtw_rep_{}", std::process::id()));
+        t.write(&dir, "demo").unwrap();
+        assert!(dir.join("demo.md").exists());
+        assert!(dir.join("demo.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_err(0.12345), "0.123");
+        assert_eq!(fmt_p(0.00005), "p<0.0001");
+        assert_eq!(fmt_p(0.0125), "0.0125");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_rejected() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+}

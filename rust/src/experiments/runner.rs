@@ -1,0 +1,247 @@
+//! Per-dataset evaluation pipeline shared by every table/figure:
+//! generate → learn occupancy grid → tune meta-parameters on train →
+//! evaluate all measures on test → one [`DatasetEval`] row.
+
+use std::collections::BTreeMap;
+
+use crate::classify::gram::{cross_gram, gram_1nn_error};
+use crate::classify::nn::classify_1nn;
+use crate::classify::svm::{classify_svm, SvmParams};
+use crate::config::ExperimentConfig;
+use crate::data::synthetic;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::measures::corr::CorrDist;
+use crate::measures::daco::Daco;
+use crate::measures::dtw::Dtw;
+use crate::measures::euclidean::{Euclidean, GaussianEd};
+use crate::measures::krdtw::Krdtw;
+use crate::measures::sakoe_chiba::{band_cells, SakoeChibaDtw};
+use crate::measures::spdtw::SpDtw;
+use crate::measures::spkrdtw::SpKrdtw;
+use crate::sparse::learn::learn_occupancy_grid;
+use crate::sparse::OccupancyGrid;
+use crate::tuning;
+
+/// Everything the tables need about one dataset run.
+#[derive(Clone, Debug)]
+pub struct DatasetEval {
+    pub name: String,
+    pub t: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Tuned meta-parameters.
+    pub band_pct: f64,
+    pub theta: f64,
+    pub gamma: f64,
+    pub nu: f64,
+    /// 1-NN error per measure (Table II columns).
+    pub err_1nn: BTreeMap<String, f64>,
+    /// SVM error per kernel (Table IV columns).
+    pub err_svm: BTreeMap<String, f64>,
+    /// Visited cells per single pairwise comparison (Table VI).
+    pub cells: BTreeMap<String, u64>,
+    /// θ grid-search curve (Fig. 4).
+    pub theta_curve: Vec<(f64, f64)>,
+}
+
+/// Order of the 1-NN columns (paper Table II).
+pub const NN_METHODS: &[&str] = &[
+    "CORR", "DACO", "Ed", "DTW", "DTW_sc", "Krdtw", "SP-DTW", "SP-Krdtw",
+];
+
+/// Order of the SVM columns (paper Table IV).
+pub const SVM_METHODS: &[&str] = &["Ed", "Krdtw", "Krdtw_sc", "SP-Krdtw"];
+
+/// Generate the (possibly capped) dataset for a config.
+pub fn load_dataset(cfg: &ExperimentConfig, name: &str) -> Result<Dataset> {
+    let (mut cap_train, mut cap_test) = cfg.caps();
+    if !cfg.full {
+        // long-series datasets get smaller caps so the default sweep
+        // stays laptop-scale (documented in DESIGN.md §4)
+        let t = crate::data::registry::find(name).map(|s| s.length).unwrap_or(0);
+        if t > 800 {
+            cap_train = cap_train.min(20);
+            cap_test = cap_test.min(20);
+        } else if t > 400 {
+            cap_train = cap_train.min(30);
+            cap_test = cap_test.min(40);
+        }
+    }
+    synthetic::generate_scaled(name, cfg.seed, cap_train, cap_test)
+}
+
+/// Learn grid + tune parameters only (the cheap prefix used by the
+/// figures and by `evaluate_dataset`).
+pub struct TunedModels {
+    pub grid: OccupancyGrid,
+    pub band_pct: f64,
+    pub theta: f64,
+    pub gamma: f64,
+    pub nu: f64,
+    pub daco_lags: usize,
+    pub theta_curve: Vec<(f64, f64)>,
+}
+
+pub fn tune_on_train(cfg: &ExperimentConfig, ds: &Dataset) -> TunedModels {
+    let threads = cfg.threads;
+    let grid = learn_occupancy_grid(&ds.train, threads);
+    let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), threads);
+    let (theta, theta_curve) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), threads);
+    let (gamma, _) = tuning::tune_gamma(&grid, &ds.train, theta, &tuning::gamma_grid(), threads);
+    // nu tuned on a corridor for tractability; reused by all kernels
+    let t = ds.series_len();
+    let tune_band = ((0.1 * t as f64) as usize).max(2);
+    let (nu, _) = tuning::tune_nu(&ds.train, &tuning::nu_grid(), Some(tune_band), threads);
+    let (daco_lags, _) = tuning::tune_daco_lags(&ds.train, &tuning::lag_grid(), threads);
+    TunedModels {
+        grid,
+        band_pct,
+        theta,
+        gamma,
+        nu,
+        daco_lags,
+        theta_curve,
+    }
+}
+
+/// The full pipeline for one dataset.
+pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> Result<DatasetEval> {
+    let ds = load_dataset(cfg, name)?;
+    let threads = cfg.threads;
+    let t = ds.series_len();
+    let tuned = tune_on_train(cfg, &ds);
+
+    let mut err_1nn = BTreeMap::new();
+    let mut cells = BTreeMap::new();
+
+    // ---- behavior-based + lock-step baselines -----------------------------
+    err_1nn.insert("CORR".into(), classify_1nn(&CorrDist, &ds.train, &ds.test, threads).error_rate);
+    err_1nn.insert(
+        "DACO".into(),
+        classify_1nn(&Daco::new(tuned.daco_lags), &ds.train, &ds.test, threads).error_rate,
+    );
+    err_1nn.insert("Ed".into(), classify_1nn(&Euclidean, &ds.train, &ds.test, threads).error_rate);
+
+    // ---- DTW family --------------------------------------------------------
+    err_1nn.insert("DTW".into(), classify_1nn(&Dtw, &ds.train, &ds.test, threads).error_rate);
+    cells.insert("DTW".into(), (t * t) as u64);
+
+    let sc = SakoeChibaDtw::new(tuned.band_pct);
+    err_1nn.insert("DTW_sc".into(), classify_1nn(&sc, &ds.train, &ds.test, threads).error_rate);
+    cells.insert("DTW_sc".into(), band_cells(t, sc.band_for(t)));
+
+    let loc_w = tuned.grid.threshold(tuned.theta).to_loc(tuned.gamma);
+    cells.insert("SP-DTW".into(), loc_w.nnz() as u64);
+    let spdtw = SpDtw::new(loc_w);
+    err_1nn.insert("SP-DTW".into(), classify_1nn(&spdtw, &ds.train, &ds.test, threads).error_rate);
+
+    // ---- kernel family (via normalized Grams) ------------------------------
+    let krdtw = Krdtw::new(tuned.nu);
+    let cg = cross_gram(&krdtw, &ds.test, &ds.train, threads);
+    err_1nn.insert("Krdtw".into(), gram_1nn_error(&cg, &ds.test, &ds.train));
+    cells.insert("Krdtw".into(), (t * t) as u64);
+
+    let loc_m = tuned.grid.threshold(tuned.theta).to_loc_mask();
+    cells.insert("SP-Krdtw".into(), loc_m.nnz() as u64);
+    let spk = SpKrdtw::new(loc_m, tuned.nu);
+    let cg = cross_gram(&spk, &ds.test, &ds.train, threads);
+    err_1nn.insert("SP-Krdtw".into(), gram_1nn_error(&cg, &ds.test, &ds.train));
+
+    // ---- SVM (Table IV) -----------------------------------------------------
+    let mut err_svm = BTreeMap::new();
+    if with_svm {
+        let params = SvmParams::default();
+        let ed_nu = GaussianEd::median_heuristic(&ds.train);
+        err_svm.insert(
+            "Ed".into(),
+            classify_svm(&GaussianEd::new(ed_nu), &ds.train, &ds.test, &params, threads, cfg.seed).error_rate,
+        );
+        err_svm.insert(
+            "Krdtw".into(),
+            classify_svm(&Krdtw::new(tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed).error_rate,
+        );
+        let sc_band = sc.band_for(t).max(1);
+        err_svm.insert(
+            "Krdtw_sc".into(),
+            classify_svm(
+                &Krdtw::with_band(tuned.nu, sc_band),
+                &ds.train,
+                &ds.test,
+                &params,
+                threads,
+                cfg.seed,
+            )
+            .error_rate,
+        );
+        let loc_m2 = tuned.grid.threshold(tuned.theta).to_loc_mask();
+        err_svm.insert(
+            "SP-Krdtw".into(),
+            classify_svm(&SpKrdtw::new(loc_m2, tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed)
+                .error_rate,
+        );
+    }
+
+    Ok(DatasetEval {
+        name: name.to_string(),
+        t,
+        n_train: ds.train.len(),
+        n_test: ds.test.len(),
+        band_pct: tuned.band_pct,
+        theta: tuned.theta,
+        gamma: tuned.gamma,
+        nu: tuned.nu,
+        err_1nn,
+        err_svm,
+        cells,
+        theta_curve: tuned.theta_curve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            max_train: 12,
+            max_test: 9,
+            threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_produces_all_columns() {
+        let cfg = tiny_cfg();
+        let ev = evaluate_dataset(&cfg, "CBF", true).unwrap();
+        for m in NN_METHODS {
+            assert!(ev.err_1nn.contains_key(*m), "missing 1-NN column {m}");
+            let e = ev.err_1nn[*m];
+            assert!((0.0..=1.0).contains(&e), "{m}: {e}");
+        }
+        for m in SVM_METHODS {
+            assert!(ev.err_svm.contains_key(*m), "missing SVM column {m}");
+        }
+        // Table VI accounting
+        assert_eq!(ev.cells["DTW"], (ev.t * ev.t) as u64);
+        assert!(ev.cells["SP-DTW"] <= ev.cells["DTW"]);
+        assert!(ev.cells["DTW_sc"] <= ev.cells["DTW"]);
+        assert!(!ev.theta_curve.is_empty());
+    }
+
+    #[test]
+    fn corr_equals_ed_observation() {
+        // the Appendix A equivalence must show up in the pipeline output
+        let cfg = tiny_cfg();
+        let ev = evaluate_dataset(&cfg, "SyntheticControl", false).unwrap();
+        assert_eq!(ev.err_1nn["CORR"], ev.err_1nn["Ed"]);
+    }
+
+    #[test]
+    fn long_series_caps_applied() {
+        let cfg = tiny_cfg();
+        let ds = load_dataset(&cfg, "InlineSkate").unwrap();
+        assert!(ds.train.len() <= 20);
+    }
+}

@@ -1,0 +1,61 @@
+//! # spdtw — Sparsified-Paths search space DTW
+//!
+//! Production-quality reproduction of *"Sparsification of the Alignment
+//! Path Search Space in Dynamic Time Warping"* (Soheily-Khah & Marteau,
+//! 2017): the SP-DTW and SP-K_rdtw (dis)similarity measures, every
+//! baseline the paper evaluates (CORR, DACO, Euclidean/L_p, DTW,
+//! Sakoe-Chiba DTW, K_rdtw, K_ga), the occupancy-grid sparsification
+//! pipeline, 1-NN and SVM classification, Wilcoxon significance testing,
+//! and a batched distance-computation coordinator that can execute the
+//! DP hot loop either natively or through AOT-compiled XLA executables
+//! (JAX/Pallas → HLO text → PJRT; see `runtime`).
+//!
+//! ## Layout
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`data`]      | time-series types, z-normalization, UCR IO, the 30-dataset synthetic archive |
+//! | [`measures`]  | all (dis)similarity measures with visited-cell accounting |
+//! | [`sparse`]    | occupancy-grid learning, thresholding, LOC sparse format |
+//! | [`classify`]  | 1-NN and SMO SVM (one-vs-one) |
+//! | [`stats`]     | Wilcoxon signed-rank test, rank aggregation |
+//! | [`tuning`]    | LOO / k-fold grid search for θ, ν, γ, band width |
+//! | [`pool`]      | thread-pool substrate (no rayon in the vendored set) |
+//! | [`runtime`]   | PJRT client, artifact manifest, executable cache |
+//! | [`coordinator`]| router + length-bucket batcher + workers + metrics + TCP server |
+//! | [`experiments`]| regenerates every table and figure of the paper |
+//! | [`util`]      | RNG, JSON, math/stat helpers, bench + property harnesses |
+//! | [`viz`]       | PGM/PPM + ASCII heatmaps (Figs. 5–8) |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use spdtw::data::synthetic;
+//! use spdtw::measures::{Measure, dtw::Dtw};
+//! use spdtw::sparse::learn::learn_occupancy_grid;
+//! use spdtw::measures::spdtw::SpDtw;
+//!
+//! let ds = synthetic::generate("CBF", 42).unwrap();
+//! let grid = learn_occupancy_grid(&ds.train, 1);
+//! let loc = grid.threshold(0.5).to_loc(1.0);
+//! let sp = SpDtw::new(loc);
+//! let d = sp.dist(&ds.train.series[0], &ds.train.series[1]);
+//! assert!(d.value >= 0.0);
+//! ```
+
+pub mod classify;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod measures;
+pub mod pool;
+pub mod runtime;
+pub mod sparse;
+pub mod stats;
+pub mod tuning;
+pub mod util;
+pub mod viz;
+
+pub use error::{Error, Result};

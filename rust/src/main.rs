@@ -1,0 +1,274 @@
+//! spdtw CLI — the leader entrypoint.
+//!
+//! ```text
+//! spdtw experiment <id|all> [opts]   regenerate paper tables/figures
+//! spdtw classify <dataset> [opts]    quick 1-NN run with one measure
+//! spdtw gen-data <dataset> [opts]    write the synthetic dataset as UCR files
+//! spdtw serve [opts]                 start the TCP coordinator service
+//! spdtw info [opts]                  show artifact manifest + platform
+//! spdtw bench-backend [opts]         native vs PJRT parity + throughput
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spdtw::classify::nn::classify_1nn;
+use spdtw::config::cli::{usage, Args, OptSpec};
+use spdtw::config::{CoordinatorConfig, ExperimentConfig};
+use spdtw::coordinator::server::Server;
+use spdtw::coordinator::Coordinator;
+use spdtw::data::registry;
+use spdtw::data::synthetic;
+use spdtw::error::{Error, Result};
+use spdtw::experiments;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::euclidean::Euclidean;
+use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::runtime::PjrtRuntime;
+use spdtw::sparse::learn::learn_occupancy_grid;
+
+fn opt_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "seed", takes_value: true, help: "master RNG seed (default 42)" },
+        OptSpec { name: "max-train", takes_value: true, help: "train-split cap for scaled runs" },
+        OptSpec { name: "max-test", takes_value: true, help: "test-split cap for scaled runs" },
+        OptSpec { name: "full", takes_value: false, help: "use the full Table-I sizes" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads" },
+        OptSpec { name: "datasets", takes_value: true, help: "comma-separated dataset names" },
+        OptSpec { name: "out", takes_value: true, help: "output directory (default out/)" },
+        OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts/)" },
+        OptSpec { name: "measure", takes_value: true, help: "classify: Ed|DTW|DTW_sc|SP-DTW" },
+        OptSpec { name: "band", takes_value: true, help: "Sakoe-Chiba band %% for DTW_sc" },
+        OptSpec { name: "theta", takes_value: true, help: "SP-DTW threshold override" },
+        OptSpec { name: "gamma", takes_value: true, help: "SP-DTW weight exponent (default 1)" },
+        OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7878)" },
+        OptSpec { name: "prefer-pjrt", takes_value: false, help: "route matching jobs to PJRT" },
+        OptSpec { name: "config", takes_value: true, help: "JSON config file" },
+    ]
+}
+
+fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get_usize("max-train")? {
+        cfg.max_train = v;
+    }
+    if let Some(v) = args.get_usize("max-test")? {
+        cfg.max_test = v;
+    }
+    if args.flag("full") {
+        cfg.full = true;
+    }
+    if let Some(v) = args.get_usize("threads")? {
+        cfg.threads = v;
+    }
+    if let Some(v) = args.get("datasets") {
+        cfg.datasets = v.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(v) = args.get("out") {
+        cfg.out_dir = PathBuf::from(v);
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(v);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let spec = opt_spec();
+    let args = Args::parse(argv, &spec)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "experiment" => cmd_experiment(&args),
+        "classify" => cmd_classify(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "bench-backend" => cmd_bench_backend(&args),
+        "help" | "--help" => {
+            println!(
+                "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
+                 commands: experiment <id|all> | classify <dataset> | gen-data <dataset> |\n\
+                 \x20         serve | info | bench-backend\n\n{}",
+                usage(&spec)
+            );
+            println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
+            println!("datasets: {}", registry::names().join(", "));
+            Ok(())
+        }
+        other => Err(Error::Unknown {
+            kind: "command",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: spdtw experiment <id|all>"))?;
+    let cfg = build_cfg(args)?;
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_pretty())?;
+    experiments::run(id, &cfg)
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: spdtw classify <dataset> --measure <m>"))?;
+    let cfg = build_cfg(args)?;
+    let (cap_tr, cap_te) = cfg.caps();
+    let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
+    let measure = args.get("measure").unwrap_or("DTW");
+    let m: Box<dyn Measure> = match measure {
+        "Ed" => Box::new(Euclidean),
+        "DTW" => Box::new(Dtw),
+        "DTW_sc" => Box::new(SakoeChibaDtw::new(args.get_f64("band")?.unwrap_or(10.0))),
+        "SP-DTW" => {
+            let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+            let theta = args.get_f64("theta")?.unwrap_or(0.0);
+            let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
+            Box::new(SpDtw::new(grid.threshold(theta).to_loc(gamma)))
+        }
+        other => {
+            return Err(Error::Unknown {
+                kind: "measure",
+                name: other.to_string(),
+            })
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let r = classify_1nn(m.as_ref(), &ds.train, &ds.test, cfg.threads);
+    println!(
+        "{name} [{measure}] error={:.3} comparisons={} cells={} wall={:.2}s",
+        r.error_rate,
+        r.comparisons,
+        r.visited_cells,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: spdtw gen-data <dataset|all> [--out DIR]"))?;
+    let cfg = build_cfg(args)?;
+    let dir = cfg.out_dir.join("data");
+    let names: Vec<&str> = if name == "all" {
+        registry::names()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let (cap_tr, cap_te) = cfg.caps();
+        let ds = synthetic::generate_scaled(n, cfg.seed, cap_tr, cap_te)?;
+        spdtw::data::ucr::write_dataset(&dir, &ds)?;
+        println!(
+            "wrote {n}: train={} test={} T={} -> {}",
+            ds.train.len(),
+            ds.test.len(),
+            ds.series_len(),
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = build_cfg(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let mut ccfg = CoordinatorConfig::default();
+    ccfg.workers = cfg.threads;
+    ccfg.prefer_pjrt = args.flag("prefer-pjrt");
+    let runtime = if ccfg.prefer_pjrt {
+        match PjrtRuntime::start(&cfg.artifacts_dir) {
+            Ok(rt) => {
+                println!("pjrt engine up (artifacts: {})", cfg.artifacts_dir.display());
+                Some(rt)
+            }
+            Err(e) => {
+                eprintln!("warning: pjrt unavailable ({e}); native backend only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let coord = Arc::new(Coordinator::start(ccfg, runtime.as_ref().map(|r| r.handle()))?);
+    let server = Server::start(Arc::clone(&coord), addr)?;
+    println!("spdtw coordinator listening on {}", server.addr);
+    println!("protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, spkrdtw, metrics, shutdown");
+    // Serve until the process is killed (the TCP `shutdown` op stops the
+    // accept loop; we poll for it).
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = build_cfg(args)?;
+    match PjrtRuntime::start(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            let info = rt.handle().info()?;
+            println!("platform: {}", info.platform);
+            println!("dtw buckets (T): {:?}", info.dtw_lengths);
+            println!("krdtw buckets (T): {:?}", info.krdtw_lengths);
+            for (k, t, b) in &info.batch_of {
+                println!("  {k} T={t} B={b}");
+            }
+        }
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_bench_backend(args: &Args) -> Result<()> {
+    let cfg = build_cfg(args)?;
+    let name = args.positional.get(1).map(String::as_str).unwrap_or("SyntheticControl");
+    let ds = synthetic::generate_scaled(name, cfg.seed, 32, 32)?;
+    let t = ds.series_len();
+    let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+    let loc = grid.threshold(1.0).to_loc(1.0);
+    println!("{name}: T={t} loc nnz={} ({:.1}% sparsity)", loc.nnz(), 100.0 * loc.sparsity());
+
+    let runtime = PjrtRuntime::start(&cfg.artifacts_dir).ok();
+    let mut ccfg = CoordinatorConfig::default();
+    ccfg.prefer_pjrt = runtime.is_some();
+    let coord = Coordinator::start(ccfg, runtime.as_ref().map(|r| r.handle()))?;
+    let key = coord.register_grid(loc)?;
+    let rows = &ds.train.series[..ds.train.len().min(16)];
+    let t0 = std::time::Instant::now();
+    let m = coord.spdtw_matrix(key, rows, rows)?;
+    let dt = t0.elapsed();
+    let snap = coord.metrics();
+    println!(
+        "matrix {}x{} in {:.1} ms ({:.0} pairs/s)",
+        rows.len(),
+        rows.len(),
+        dt.as_secs_f64() * 1e3,
+        m.len() as f64 / dt.as_secs_f64()
+    );
+    println!("{}", snap.report());
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Pearson correlation coefficient as a behavior-based (dis)similarity
+//! (paper Eq. 1) with the distance form `1 - CORR`.
+//!
+//! Appendix A of the paper proves that on z-normalized data
+//! `CORR(x, y) = 1 - d_E^2(x, y) / (2T)`, hence 1-NN under `1 - CORR`
+//! ranks identically to 1-NN under Ed — reproduced in the tests.
+
+use crate::data::TimeSeries;
+use crate::measures::{DistResult, Measure};
+
+/// Pearson correlation coefficient in [-1, 1].
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut num, mut dx, mut dy) = (0.0, 0.0, 0.0);
+    for (a, b) in x.iter().zip(y) {
+        let u = a - mx;
+        let v = b - my;
+        num += u * v;
+        dx += u * u;
+        dy += v * v;
+    }
+    let den = (dx.sqrt()) * (dy.sqrt());
+    if den <= 1e-300 {
+        0.0
+    } else {
+        (num / den).clamp(-1.0, 1.0)
+    }
+}
+
+/// CORR-based dissimilarity: `1 - CORR` (0 for perfectly correlated).
+#[derive(Clone, Debug, Default)]
+pub struct CorrDist;
+
+impl Measure for CorrDist {
+    fn name(&self) -> String {
+        "CORR".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        DistResult::new(1.0 - pearson(&x.values, &y.values), x.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TimeSeries;
+    use crate::measures::euclidean::Euclidean;
+    use crate::util::rng::Pcg64;
+
+    fn ts(v: Vec<f64>) -> TimeSeries {
+        TimeSeries::new(0, v)
+    }
+
+    #[test]
+    fn perfect_and_anti_correlation() {
+        let x = ts(vec![1.0, 2.0, 3.0, 4.0]);
+        let y = ts(vec![2.0, 4.0, 6.0, 8.0]);
+        assert!((CorrDist.dist(&x, &y).value).abs() < 1e-12); // corr = +1
+        let z = ts(vec![4.0, 3.0, 2.0, 1.0]);
+        assert!((CorrDist.dist(&x, &z).value - 2.0).abs() < 1e-12); // corr = -1
+    }
+
+    #[test]
+    fn appendix_a_identity_on_znormalized() {
+        // corr(x, y) = 1 - dE^2 / (2T) for z-normalized series
+        let mut rng = Pcg64::new(5);
+        for _ in 0..20 {
+            let t = 32;
+            let mut x = ts((0..t).map(|_| rng.normal()).collect());
+            let mut y = ts((0..t).map(|_| rng.normal()).collect());
+            x.znormalize();
+            y.znormalize();
+            let corr = pearson(&x.values, &y.values);
+            let de = Euclidean.dist(&x, &y).value;
+            let rhs = 1.0 - de * de / (2.0 * t as f64);
+            assert!((corr - rhs).abs() < 1e-9, "corr={corr} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn corr_and_ed_rank_identically_on_znormalized() {
+        // The Table II observation: 1-NN(CORR) == 1-NN(Ed) on UCR data.
+        let mut rng = Pcg64::new(9);
+        let t = 24;
+        let probe = ts((0..t).map(|_| rng.normal()).collect()).znormalized();
+        let cands: Vec<TimeSeries> = (0..10)
+            .map(|_| ts((0..t).map(|_| rng.normal()).collect()).znormalized())
+            .collect();
+        let by_corr: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..cands.len()).collect();
+            idx.sort_by(|&a, &b| {
+                CorrDist
+                    .dist(&probe, &cands[a])
+                    .value
+                    .partial_cmp(&CorrDist.dist(&probe, &cands[b]).value)
+                    .unwrap()
+            });
+            idx
+        };
+        let by_ed: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..cands.len()).collect();
+            idx.sort_by(|&a, &b| {
+                Euclidean
+                    .dist(&probe, &cands[a])
+                    .value
+                    .partial_cmp(&Euclidean.dist(&probe, &cands[b]).value)
+                    .unwrap()
+            });
+            idx
+        };
+        assert_eq!(by_corr, by_ed);
+    }
+
+    #[test]
+    fn constant_series_yield_zero_corr() {
+        let x = ts(vec![1.0; 8]);
+        let y = ts(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert!((CorrDist.dist(&x, &y).value - 1.0).abs() < 1e-12);
+    }
+}

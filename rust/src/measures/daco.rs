@@ -1,0 +1,108 @@
+//! Difference of Auto-Correlation Operators (paper Eq. 2): compares the
+//! *dynamics* of two series through their auto-correlation vectors.
+
+use crate::data::TimeSeries;
+use crate::measures::{DistResult, Measure};
+
+/// Auto-correlation vector ρ_1..ρ_k of a series.
+pub fn autocorr(x: &[f64], lags: usize) -> Vec<f64> {
+    let t = x.len();
+    assert!(lags >= 1 && lags < t, "lags must be in [1, T)");
+    let mean = x.iter().sum::<f64>() / t as f64;
+    let denom: f64 = x.iter().map(|v| (v - mean) * (v - mean)).sum();
+    (1..=lags)
+        .map(|tau| {
+            if denom <= 1e-300 {
+                return 0.0;
+            }
+            let num: f64 = (0..t - tau)
+                .map(|i| (x[i] - mean) * (x[i + tau] - mean))
+                .sum();
+            num / denom
+        })
+        .collect()
+}
+
+/// DACO(x, y) = || ρ(x) - ρ(y) ||² over `lags` auto-correlation lags.
+#[derive(Clone, Debug)]
+pub struct Daco {
+    pub lags: usize,
+}
+
+impl Daco {
+    pub fn new(lags: usize) -> Self {
+        assert!(lags >= 1);
+        Daco { lags }
+    }
+}
+
+impl Default for Daco {
+    /// The lag count is a meta-parameter selected by CV in the paper's
+    /// protocol; 10 is the grid midpoint used as default.
+    fn default() -> Self {
+        Daco { lags: 10 }
+    }
+}
+
+impl Measure for Daco {
+    fn name(&self) -> String {
+        "DACO".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let lags = self.lags.min(x.len() - 1).min(y.len() - 1).max(1);
+        let rx = autocorr(&x.values, lags);
+        let ry = autocorr(&y.values, lags);
+        let d: f64 = rx.iter().zip(&ry).map(|(a, b)| (a - b) * (a - b)).sum();
+        // Cost model: one pass per lag over each series.
+        DistResult::new(d, (lags * (x.len() + y.len())) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TimeSeries;
+
+    fn ts(v: Vec<f64>) -> TimeSeries {
+        TimeSeries::new(0, v)
+    }
+
+    #[test]
+    fn identical_series_zero() {
+        let x = ts(vec![0.1, 0.9, 0.2, 0.8, 0.3, 0.7, 0.4, 0.6]);
+        assert!(Daco::new(4).dist(&x, &x).value.abs() < 1e-15);
+    }
+
+    #[test]
+    fn autocorr_lag1_of_alternating_is_negative() {
+        let x: Vec<f64> = (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let r = autocorr(&x, 2);
+        assert!(r[0] < -0.9, "lag-1 of alternating ~ -1, got {}", r[0]);
+        assert!(r[1] > 0.9, "lag-2 of alternating ~ +1, got {}", r[1]);
+    }
+
+    #[test]
+    fn shift_invariance_of_dynamics() {
+        // DACO compares dynamics: adding a constant changes nothing.
+        let x = ts(vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+        let y = ts(x.values.iter().map(|v| v + 100.0).collect());
+        assert!(Daco::new(3).dist(&x, &y).value.abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_dynamics_nonzero() {
+        let fast = ts((0..64).map(|i| ((i as f64) * 1.5).sin()).collect());
+        let slow = ts((0..64).map(|i| ((i as f64) * 0.1).sin()).collect());
+        assert!(Daco::new(8).dist(&fast, &slow).value > 0.1);
+    }
+
+    #[test]
+    fn lags_clamped_to_series_length() {
+        let x = ts(vec![1.0, 2.0, 3.0]);
+        let y = ts(vec![3.0, 2.0, 1.0]);
+        // lags=10 > T-1=2 — must not panic
+        let d = Daco::new(10).dist(&x, &y);
+        assert!(d.value.is_finite());
+    }
+}

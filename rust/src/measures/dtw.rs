@@ -1,0 +1,394 @@
+//! Dynamic Time Warping (paper Eq. 4) with optimal-path backtracking.
+//!
+//! The banded core (`dtw_banded`) implements both plain DTW (band = T)
+//! and the Sakoe-Chiba corridor in O(T·band) time and O(band) memory
+//! (two rolling rows).  `dtw_with_path` keeps the full DP matrix to
+//! backtrack the optimal alignment path — this is the building block of
+//! the occupancy-grid learning phase (Fig. 3-b).
+
+use crate::data::TimeSeries;
+use crate::measures::{phi, DistResult, Measure, BIG};
+
+/// Plain DTW over the full T×T grid.
+#[derive(Clone, Debug, Default)]
+pub struct Dtw;
+
+impl Measure for Dtw {
+    fn name(&self) -> String {
+        "DTW".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        dtw_banded(&x.values, &y.values, usize::MAX)
+    }
+}
+
+/// Banded DTW: cells with |i - j| > band are inadmissible.
+/// `band = usize::MAX` (or >= T) degenerates to plain DTW.
+/// Works for unequal lengths; the band is applied around the rescaled
+/// diagonal j ≈ i·Ty/Tx (the standard generalization).
+///
+/// Hot path (§Perf): two rolling rows with the three DP neighbors
+/// carried in registers — one load of `prev[j]` per cell instead of
+/// three row reads (see `dtw_banded_ref`, the straightforward version
+/// kept for before/after measurement and cross-checking).
+pub fn dtw_banded(x: &[f64], y: &[f64], band: usize) -> DistResult {
+    let tx = x.len();
+    let ty = y.len();
+    assert!(tx > 0 && ty > 0, "empty series");
+    let slope = ty as f64 / tx as f64;
+    let unbounded = band == usize::MAX || band >= tx.max(ty);
+    let mut prev = vec![BIG; ty];
+    let mut cur = vec![BIG; ty];
+    let mut visited: u64 = 0;
+
+    for (i, &xi) in x.iter().enumerate() {
+        let center = (i as f64 * slope) as usize;
+        let (lo, hi) = if unbounded {
+            (0, ty - 1)
+        } else {
+            (center.saturating_sub(band), (center + band).min(ty - 1))
+        };
+        visited += (hi - lo + 1) as u64;
+        if i == 0 {
+            // row 0: only left-to-right accumulation
+            let mut acc = 0.0f64;
+            for j in lo..=hi {
+                acc += phi(xi, y[j]);
+                cur[j] = acc;
+                // cells right of (0,0) accumulate the full prefix; but a
+                // fresh start beyond j=0 is inadmissible, so prefix sum
+                // is exactly D(0,j).
+            }
+        } else {
+            let mut prev_jm1 = if lo > 0 { prev[lo - 1] } else { BIG };
+            let mut cur_jm1 = BIG;
+            let yrow = &y[lo..=hi];
+            let prow = &prev[lo..=hi];
+            let crow = &mut cur[lo..=hi];
+            for ((&yj, &pj), cj) in yrow.iter().zip(prow).zip(crow.iter_mut()) {
+                let mut b = pj;
+                if prev_jm1 < b {
+                    b = prev_jm1;
+                }
+                if cur_jm1 < b {
+                    b = cur_jm1;
+                }
+                let v = phi(xi, yj) + b;
+                *cj = v;
+                cur_jm1 = v;
+                prev_jm1 = pj;
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        if !unbounded {
+            for c in cur.iter_mut() {
+                *c = BIG;
+            }
+        }
+    }
+    DistResult::new(prev[ty - 1], visited)
+}
+
+/// Reference implementation of [`dtw_banded`] (kept for §Perf and tests).
+pub fn dtw_banded_ref(x: &[f64], y: &[f64], band: usize) -> DistResult {
+    let tx = x.len();
+    let ty = y.len();
+    assert!(tx > 0 && ty > 0, "empty series");
+    let slope = ty as f64 / tx as f64;
+    let mut prev = vec![BIG; ty];
+    let mut cur = vec![BIG; ty];
+    let mut visited: u64 = 0;
+
+    for (i, &xi) in x.iter().enumerate() {
+        // Admissible column range for this row.
+        let center = (i as f64 * slope) as usize;
+        let (lo, hi) = if band == usize::MAX || band >= tx.max(ty) {
+            (0, ty - 1)
+        } else {
+            (center.saturating_sub(band), (center + band).min(ty - 1))
+        };
+        for c in cur[lo..=hi].iter_mut() {
+            *c = BIG;
+        }
+        for j in lo..=hi {
+            let local = phi(xi, y[j]);
+            visited += 1;
+            let best = if i == 0 && j == 0 {
+                0.0
+            } else {
+                let mut b = BIG;
+                if i > 0 {
+                    b = b.min(prev[j]); // (i-1, j)
+                    if j > 0 {
+                        b = b.min(prev[j - 1]); // (i-1, j-1)
+                    }
+                }
+                if j > 0 {
+                    b = b.min(cur[j - 1]); // (i, j-1)
+                }
+                b
+            };
+            cur[j] = local + best;
+        }
+        // Clear cells outside the band in `prev` for the next row reuse.
+        std::mem::swap(&mut prev, &mut cur);
+        if band != usize::MAX && band < tx.max(ty) {
+            // reset scratch row fully — cheap relative to band loop
+            for c in cur.iter_mut() {
+                *c = BIG;
+            }
+        }
+    }
+    DistResult::new(prev[ty - 1], visited)
+}
+
+/// An alignment path as (i, j) pairs from (0,0) to (Tx-1, Ty-1).
+pub type Path = Vec<(usize, usize)>;
+
+/// Full DTW with optimal-path backtracking. O(Tx·Ty) memory.
+pub fn dtw_with_path(x: &[f64], y: &[f64]) -> (DistResult, Path) {
+    let tx = x.len();
+    let ty = y.len();
+    assert!(tx > 0 && ty > 0);
+    let mut d = vec![0.0f64; tx * ty];
+    for i in 0..tx {
+        for j in 0..ty {
+            let local = phi(x[i], y[j]);
+            let best = if i == 0 && j == 0 {
+                0.0
+            } else {
+                let mut b = BIG;
+                if i > 0 {
+                    b = b.min(d[(i - 1) * ty + j]);
+                    if j > 0 {
+                        b = b.min(d[(i - 1) * ty + (j - 1)]);
+                    }
+                }
+                if j > 0 {
+                    b = b.min(d[i * ty + (j - 1)]);
+                }
+                b
+            };
+            d[i * ty + j] = local + best;
+        }
+    }
+    // Backtrack (diagonal preferred on ties — shortest path convention).
+    let mut path = Vec::with_capacity(tx + ty);
+    let (mut i, mut j) = (tx - 1, ty - 1);
+    path.push((i, j));
+    while i > 0 || j > 0 {
+        if i == 0 {
+            j -= 1;
+        } else if j == 0 {
+            i -= 1;
+        } else {
+            let diag = d[(i - 1) * ty + (j - 1)];
+            let up = d[(i - 1) * ty + j];
+            let left = d[i * ty + (j - 1)];
+            if diag <= up && diag <= left {
+                i -= 1;
+                j -= 1;
+            } else if up <= left {
+                i -= 1;
+            } else {
+                j -= 1;
+            }
+        }
+        path.push((i, j));
+    }
+    path.reverse();
+    (
+        DistResult::new(d[tx * ty - 1], (tx * ty) as u64),
+        path,
+    )
+}
+
+/// Validate the alignment-path invariants of §II-B.2 (boundary,
+/// monotonicity, continuity). Used in tests and debug assertions.
+pub fn is_valid_path(path: &[(usize, usize)], tx: usize, ty: usize) -> bool {
+    if path.is_empty() || path[0] != (0, 0) || *path.last().unwrap() != (tx - 1, ty - 1) {
+        return false;
+    }
+    for w in path.windows(2) {
+        let (i0, j0) = w[0];
+        let (i1, j1) = w[1];
+        let di = i1 as i64 - i0 as i64;
+        let dj = j1 as i64 - j0 as i64;
+        // monotone, unit steps, at least one axis advances
+        if !(0..=1).contains(&di) || !(0..=1).contains(&dj) || di + dj < 1 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TimeSeries;
+    use crate::measures::euclidean::Euclidean;
+    use crate::util::rng::Pcg64;
+
+    fn ts(v: &[f64]) -> TimeSeries {
+        TimeSeries::new(0, v.to_vec())
+    }
+
+    #[test]
+    fn identity_zero_and_visited_count() {
+        let x = ts(&[1.0, 2.0, 3.0, 2.0]);
+        let d = Dtw.dist(&x, &x);
+        assert_eq!(d.value, 0.0);
+        assert_eq!(d.visited_cells, 16);
+    }
+
+    #[test]
+    fn fast_dtw_matches_reference() {
+        // §Perf invariant: register-carried loop == straightforward loop.
+        let mut rng = Pcg64::new(91);
+        for _ in 0..30 {
+            let tx = 2 + rng.below(40);
+            let ty = 2 + rng.below(40);
+            let x: Vec<f64> = (0..tx).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..ty).map(|_| rng.normal()).collect();
+            for band in [0usize, 1, 3, 10, usize::MAX] {
+                let a = dtw_banded(&x, &y, band);
+                let b = dtw_banded_ref(&x, &y, band);
+                assert_eq!(a.visited_cells, b.visited_cells, "band={band}");
+                if b.value < BIG {
+                    assert!((a.value - b.value).abs() < 1e-9, "band={band}");
+                } else {
+                    assert!(a.value >= BIG);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+            let a = dtw_banded(&x, &y, usize::MAX).value;
+            let b = dtw_banded(&y, &x, usize::MAX).value;
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dtw_leq_squared_euclidean() {
+        // The diagonal path is admissible -> DTW <= sum of squared diffs.
+        let mut rng = Pcg64::new(3);
+        for _ in 0..20 {
+            let x = ts((0..16).map(|_| rng.normal()).collect::<Vec<_>>().as_slice());
+            let y = ts((0..16).map(|_| rng.normal()).collect::<Vec<_>>().as_slice());
+            let d = Dtw.dist(&x, &y).value;
+            let e = Euclidean.dist(&x, &y).value;
+            assert!(d <= e * e + 1e-9);
+        }
+    }
+
+    #[test]
+    fn warp_invariance_shines_over_euclid() {
+        // A shifted bump: DTW nearly 0, Euclid large.
+        let bump = |c: usize| -> Vec<f64> {
+            (0..64)
+                .map(|i| (-(0.02 * (i as f64 - c as f64).powi(2))).exp())
+                .collect()
+        };
+        let x = ts(&bump(20));
+        let y = ts(&bump(30));
+        let d = Dtw.dist(&x, &y).value;
+        let e = Euclidean.dist(&x, &y).value;
+        assert!(d < 0.05 * e * e, "dtw={d} ed2={}", e * e);
+    }
+
+    #[test]
+    fn paper_footnote_counterexample_shape() {
+        // The paper's footnote uses |.| costs; with φ = (.)² the same
+        // series still violate the triangle inequality.
+        let xi = ts(&[0.0]);
+        let xj = ts(&[1.0, 2.0]);
+        let xk = ts(&[2.0, 3.0, 3.0]);
+        let ab = Dtw.dist(&xi, &xj).value; // 1 + 4 = 5
+        let bc = Dtw.dist(&xj, &xk).value; // 1 + 1 + 1 = 3
+        let ac = Dtw.dist(&xi, &xk).value; // 4 + 9 + 9 = 22
+        assert!((ab - 5.0).abs() < 1e-12);
+        assert!((bc - 3.0).abs() < 1e-12);
+        assert!((ac - 22.0).abs() < 1e-12);
+        assert!(ab + bc < ac, "DTW is not a metric");
+    }
+
+    #[test]
+    fn unequal_lengths_supported() {
+        let x = ts(&[0.0, 1.0, 2.0]);
+        let y = ts(&[0.0, 0.5, 1.0, 1.5, 2.0]);
+        let d = Dtw.dist(&x, &y);
+        assert!(d.value.is_finite());
+        assert_eq!(d.visited_cells, 15);
+    }
+
+    #[test]
+    fn band_zero_is_diagonal_cost() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [1.5, 2.5, 3.5, 4.5];
+        let d = dtw_banded(&x, &y, 0);
+        let diag: f64 = x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!((d.value - diag).abs() < 1e-12);
+        assert_eq!(d.visited_cells, 4);
+    }
+
+    #[test]
+    fn band_wide_equals_full() {
+        let mut rng = Pcg64::new(7);
+        let x: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let full = dtw_banded(&x, &y, usize::MAX).value;
+        let wide = dtw_banded(&x, &y, 24).value;
+        assert!((full - wide).abs() < 1e-12);
+    }
+
+    #[test]
+    fn band_cost_monotone_nonincreasing_in_width() {
+        let mut rng = Pcg64::new(11);
+        let x: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+        let mut last = f64::INFINITY;
+        for band in [0, 1, 2, 4, 8, 16, 32] {
+            let v = dtw_banded(&x, &y, band).value;
+            assert!(v <= last + 1e-12, "band={band}: {v} > {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn path_is_valid_and_costs_match() {
+        let mut rng = Pcg64::new(13);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+            let (d, path) = dtw_with_path(&x, &y);
+            assert!(is_valid_path(&path, 17, 17));
+            // path cost recomputed = DP value
+            let cost: f64 = path.iter().map(|&(i, j)| phi(x[i], y[j])).sum();
+            assert!((cost - d.value).abs() < 1e-9);
+            // banded core agrees
+            let b = dtw_banded(&x, &y, usize::MAX);
+            assert!((b.value - d.value).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn path_length_bounds() {
+        // T <= |path| <= 2T - 1 (paper §II-B.2)
+        let mut rng = Pcg64::new(17);
+        let t = 25;
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let (_, path) = dtw_with_path(&x, &y);
+            assert!(path.len() >= t && path.len() <= 2 * t - 1);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Euclidean and Minkowski (L_p) distances — the lock-step baselines
+//! (paper Eq. 3).  Linear complexity; visited cells = T.
+
+use crate::data::TimeSeries;
+use crate::measures::{DistResult, Measure};
+
+/// Euclidean distance (L2).
+#[derive(Clone, Debug, Default)]
+pub struct Euclidean;
+
+impl Measure for Euclidean {
+    fn name(&self) -> String {
+        "Ed".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        assert_eq!(x.len(), y.len(), "Ed requires equal lengths");
+        let s: f64 = x
+            .values
+            .iter()
+            .zip(&y.values)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        DistResult::new(s.sqrt(), x.len() as u64)
+    }
+}
+
+/// Minkowski distance of order p (p=1 Manhattan, p=2 Euclidean, ...).
+#[derive(Clone, Debug)]
+pub struct Minkowski {
+    pub p: f64,
+}
+
+impl Minkowski {
+    pub fn new(p: f64) -> Self {
+        assert!(p >= 1.0, "Minkowski order must be >= 1");
+        Minkowski { p }
+    }
+}
+
+impl Measure for Minkowski {
+    fn name(&self) -> String {
+        format!("L{}", self.p)
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        assert_eq!(x.len(), y.len(), "L_p requires equal lengths");
+        if self.p.is_infinite() {
+            let m = x
+                .values
+                .iter()
+                .zip(&y.values)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            return DistResult::new(m, x.len() as u64);
+        }
+        let s: f64 = x
+            .values
+            .iter()
+            .zip(&y.values)
+            .map(|(a, b)| (a - b).abs().powf(self.p))
+            .sum();
+        DistResult::new(s.powf(1.0 / self.p), x.len() as u64)
+    }
+}
+
+/// Gaussian (RBF) kernel on the Euclidean distance — the "Ed" column of
+/// the paper's SVM comparison (Table IV): `K(x,y) = exp(-nu d_E^2)`.
+/// Exposed as a log-kernel so it plugs into the same normalized-Gram
+/// machinery as the elastic kernels.
+#[derive(Clone, Debug)]
+pub struct GaussianEd {
+    pub nu: f64,
+}
+
+impl GaussianEd {
+    pub fn new(nu: f64) -> Self {
+        assert!(nu > 0.0);
+        GaussianEd { nu }
+    }
+
+    /// Median heuristic: `nu = 1 / median(d_E^2)` over a sample of pairs.
+    pub fn median_heuristic(set: &crate::data::LabeledSet) -> f64 {
+        let n = set.len().min(40);
+        let mut d2s = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d: f64 = set.series[i]
+                    .values
+                    .iter()
+                    .zip(&set.series[j].values)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                d2s.push(d);
+            }
+        }
+        if d2s.is_empty() {
+            return 1.0;
+        }
+        d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = d2s[d2s.len() / 2].max(1e-12);
+        1.0 / med
+    }
+}
+
+impl crate::measures::KernelMeasure for GaussianEd {
+    fn name(&self) -> String {
+        "Ed".into()
+    }
+
+    fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let d2: f64 = x
+            .values
+            .iter()
+            .zip(&y.values)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        DistResult::new(-self.nu * d2, x.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TimeSeries;
+    use crate::measures::KernelMeasure;
+
+    fn ts(v: &[f64]) -> TimeSeries {
+        TimeSeries::new(0, v.to_vec())
+    }
+
+    #[test]
+    fn gaussian_ed_self_is_log_one() {
+        let k = GaussianEd::new(0.5);
+        let x = ts(&[1.0, 2.0, 3.0]);
+        assert_eq!(k.log_k(&x, &x).value, 0.0);
+        assert!(k.log_k(&x, &ts(&[0.0, 0.0, 0.0])).value < 0.0);
+    }
+
+    #[test]
+    fn median_heuristic_positive() {
+        use crate::data::splits::from_pairs;
+        let set = from_pairs(vec![
+            (0, vec![0.0, 1.0]),
+            (0, vec![1.0, 0.0]),
+            (1, vec![5.0, 5.0]),
+        ]);
+        let nu = GaussianEd::median_heuristic(&set);
+        assert!(nu > 0.0 && nu.is_finite());
+    }
+
+    #[test]
+    fn euclidean_basics() {
+        let e = Euclidean;
+        let d = e.dist(&ts(&[0.0, 0.0]), &ts(&[3.0, 4.0]));
+        assert!((d.value - 5.0).abs() < 1e-12);
+        assert_eq!(d.visited_cells, 2);
+        assert_eq!(e.dist(&ts(&[1.0, 2.0]), &ts(&[1.0, 2.0])).value, 0.0);
+    }
+
+    #[test]
+    fn minkowski_orders() {
+        let x = ts(&[0.0, 0.0, 0.0]);
+        let y = ts(&[1.0, -2.0, 2.0]);
+        assert!((Minkowski::new(1.0).dist(&x, &y).value - 5.0).abs() < 1e-12);
+        assert!((Minkowski::new(2.0).dist(&x, &y).value - 3.0).abs() < 1e-12);
+        assert!((Minkowski::new(f64::INFINITY).dist(&x, &y).value - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lp_monotone_in_p() {
+        // ||.||_p is non-increasing in p
+        let x = ts(&[0.3, -1.2, 0.7, 2.0]);
+        let y = ts(&[-0.5, 0.2, 1.9, 0.0]);
+        let d1 = Minkowski::new(1.0).dist(&x, &y).value;
+        let d2 = Minkowski::new(2.0).dist(&x, &y).value;
+        let d4 = Minkowski::new(4.0).dist(&x, &y).value;
+        assert!(d1 >= d2 && d2 >= d4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Itakura parallelogram DTW — the other classic global *constraint*
+//! baseline (paper §II-B.2 category 1, ref [15]): admissible cells lie
+//! inside a parallelogram enforcing local slope bounds [1/2, 2] from
+//! both endpoints.  Included alongside Sakoe-Chiba so the learned
+//! sparsification can be compared against both fixed-shape search
+//! spaces.
+
+use crate::data::TimeSeries;
+use crate::measures::{phi, DistResult, Measure, BIG};
+
+/// Column range [lo, hi] of the Itakura parallelogram on row `i` of a
+/// `t`×`t` grid (slope bounds 1/2 and 2 through (0,0) and (t-1,t-1)).
+pub fn itakura_range(i: usize, t: usize) -> (usize, usize) {
+    let n = (t - 1) as f64;
+    let fi = i as f64;
+    // from the start: j <= 2i, j >= i/2 ; from the end: mirrored
+    let lo = (0.5 * fi).max(n - 2.0 * (n - fi)).ceil().max(0.0) as usize;
+    let hi = (2.0 * fi).min(n - 0.5 * (n - fi)).floor() as usize;
+    (lo.min(t - 1), hi.min(t - 1))
+}
+
+/// Number of admissible cells (Table-VI style accounting).
+pub fn itakura_cells(t: usize) -> u64 {
+    (0..t)
+        .map(|i| {
+            let (lo, hi) = itakura_range(i, t);
+            if hi >= lo {
+                (hi - lo + 1) as u64
+            } else {
+                0
+            }
+        })
+        .sum()
+}
+
+/// DTW constrained to the Itakura parallelogram (equal lengths).
+#[derive(Clone, Debug, Default)]
+pub struct ItakuraDtw;
+
+impl Measure for ItakuraDtw {
+    fn name(&self) -> String {
+        "DTW_it".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let t = x.len();
+        assert_eq!(t, y.len(), "Itakura DTW requires equal lengths");
+        assert!(t > 0);
+        let mut prev = vec![BIG; t];
+        let mut cur = vec![BIG; t];
+        let mut visited = 0u64;
+        for i in 0..t {
+            let (lo, hi) = itakura_range(i, t);
+            for c in cur.iter_mut() {
+                *c = BIG;
+            }
+            for j in lo..=hi.max(lo) {
+                visited += 1;
+                let local = phi(x.values[i], y.values[j]);
+                let best = if i == 0 && j == 0 {
+                    0.0
+                } else {
+                    let mut b = BIG;
+                    if i > 0 {
+                        b = b.min(prev[j]);
+                        if j > 0 {
+                            b = b.min(prev[j - 1]);
+                        }
+                    }
+                    if j > 0 {
+                        b = b.min(cur[j - 1]);
+                    }
+                    b
+                };
+                cur[j] = local + best;
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        DistResult::new(prev[t - 1], visited)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::dtw::Dtw;
+    use crate::util::rng::Pcg64;
+
+    fn ts(rng: &mut Pcg64, t: usize) -> TimeSeries {
+        TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn range_contains_endpoints_and_diagonal() {
+        for t in [2usize, 5, 17, 100] {
+            let (lo0, hi0) = itakura_range(0, t);
+            assert_eq!((lo0, hi0), (0, 0), "t={t}");
+            let (lon, hin) = itakura_range(t - 1, t);
+            assert_eq!((lon, hin), (t - 1, t - 1));
+            for i in 0..t {
+                let (lo, hi) = itakura_range(i, t);
+                assert!(lo <= i && i <= hi, "diagonal cell (i,i) must be admissible");
+            }
+        }
+    }
+
+    #[test]
+    fn cells_fewer_than_full_grid() {
+        for t in [8usize, 64, 256] {
+            let c = itakura_cells(t);
+            assert!(c < (t * t) as u64);
+            assert!(c >= t as u64);
+        }
+    }
+
+    #[test]
+    fn upper_bounds_unconstrained_dtw() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10 {
+            let x = ts(&mut rng, 24);
+            let y = ts(&mut rng, 24);
+            let full = Dtw.dist(&x, &y).value;
+            let ita = ItakuraDtw.dist(&x, &y).value;
+            assert!(ita >= full - 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_zero_and_symmetry() {
+        let mut rng = Pcg64::new(2);
+        let x = ts(&mut rng, 20);
+        let y = ts(&mut rng, 20);
+        assert!(ItakuraDtw.dist(&x, &x).value.abs() < 1e-12);
+        let a = ItakuraDtw.dist(&x, &y).value;
+        let b = ItakuraDtw.dist(&y, &x).value;
+        assert!((a - b).abs() < 1e-9, "parallelogram is symmetric");
+    }
+
+    #[test]
+    fn visited_matches_cell_formula() {
+        let mut rng = Pcg64::new(3);
+        let t = 50;
+        let x = ts(&mut rng, t);
+        let y = ts(&mut rng, t);
+        assert_eq!(ItakuraDtw.dist(&x, &y).visited_cells, itakura_cells(t));
+    }
+}

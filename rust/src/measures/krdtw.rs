@@ -1,0 +1,310 @@
+//! K_rdtw — the recursive edit-distance time-elastic kernel of Marteau &
+//! Gibet (paper Eq. 6-7, Algorithm 2), computed in **log domain**: the
+//! plain recursion multiplies `kappa/3 < 1` factors ~2T times and
+//! underflows f64 beyond T ≈ 150 (DESIGN.md §6).  `log K(x,y)` values
+//! feed the normalized Gram construction in `classify::gram`.
+//!
+//! The corridor variant K_rdtw_sc restricts the admissible cells to a
+//! Sakoe-Chiba band; the sparsified variant lives in `spkrdtw.rs`.
+
+use crate::data::TimeSeries;
+use crate::measures::{phi, DistResult, KernelMeasure, Measure, NEG, NEG_THRESH};
+
+/// Elementwise logsumexp over three values, NEG-safe.
+#[inline(always)]
+pub(crate) fn lse3(a: f64, b: f64, c: f64) -> f64 {
+    let m = a.max(b).max(c);
+    if m <= NEG_THRESH {
+        return NEG;
+    }
+    m + ((a - m).exp() + (b - m).exp() + (c - m).exp()).ln()
+}
+
+#[inline(always)]
+pub(crate) fn lse2(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m <= NEG_THRESH {
+        return NEG;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// K_rdtw with local kernel `kappa(a,b) = exp(-nu * (a-b)^2)` and an
+/// optional Sakoe-Chiba corridor (`band = None` = full grid).
+#[derive(Clone, Debug)]
+pub struct Krdtw {
+    pub nu: f64,
+    /// Corridor half-width in *cells* (None = unconstrained).
+    pub band: Option<usize>,
+}
+
+impl Krdtw {
+    pub fn new(nu: f64) -> Self {
+        assert!(nu > 0.0);
+        Krdtw { nu, band: None }
+    }
+
+    pub fn with_band(nu: f64, band: usize) -> Self {
+        assert!(nu > 0.0);
+        Krdtw {
+            nu,
+            band: Some(band),
+        }
+    }
+
+    /// Core DP: returns log(K1 + K2) at the corner + visited cell count.
+    /// Equal lengths are assumed (UCR setting); the K2 term requires it.
+    pub fn log_kernel(&self, x: &[f64], y: &[f64]) -> DistResult {
+        let t = x.len();
+        assert_eq!(t, y.len(), "K_rdtw requires equal lengths");
+        assert!(t > 0);
+        let nu = self.nu;
+        let log3 = 3.0f64.ln();
+        // Same-index local log kernel ls[i] = -nu (x_i - y_i)^2.
+        let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
+
+        let mut prev = vec![(NEG, NEG); t]; // (lK1, lK2) row i-1
+        let mut cur = vec![(NEG, NEG); t];
+        let mut visited = 0u64;
+
+        for i in 0..t {
+            let (lo, hi) = match self.band {
+                Some(b) => (i.saturating_sub(b), (i + b).min(t - 1)),
+                None => (0, t - 1),
+            };
+            for c in cur.iter_mut() {
+                *c = (NEG, NEG);
+            }
+            for j in lo..=hi {
+                visited += 1;
+                let lk = -nu * phi(x[i], y[j]);
+                if i == 0 && j == 0 {
+                    cur[0] = (lk, ls[0]);
+                    continue;
+                }
+                let p11 = if i > 0 && j > 0 { prev[j - 1].0 } else { NEG };
+                let p10 = if i > 0 { prev[j].0 } else { NEG };
+                let p01 = if j > 0 { cur[j - 1].0 } else { NEG };
+                let l1 = lk - log3 + lse3(p11, p10, p01);
+
+                let q11 = if i > 0 && j > 0 { prev[j - 1].1 } else { NEG };
+                let q10 = if i > 0 { prev[j].1 } else { NEG };
+                let q01 = if j > 0 { cur[j - 1].1 } else { NEG };
+                let ls_i = ls[i];
+                let ls_j = ls[j];
+                let avg = (((ls_i.exp() + ls_j.exp()) * 0.5).max(1e-300)).ln();
+                let l2 = -log3 + lse3(avg + q11, ls_i + q10, ls_j + q01);
+                cur[j] = (l1, l2);
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        let (l1, l2) = prev[t - 1];
+        DistResult::new(lse2(l1, l2), visited)
+    }
+}
+
+impl KernelMeasure for Krdtw {
+    fn name(&self) -> String {
+        match self.band {
+            None => "Krdtw".into(),
+            Some(b) => format!("Krdtw_sc({b})"),
+        }
+    }
+
+    fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.log_kernel(&x.values, &y.values)
+    }
+}
+
+/// Distance wrapper for 1-NN: `d(x,y) = -(log K(x,y) - (log K(x,x) +
+/// log K(y,y))/2)` — the negative log of the cosine-normalized kernel,
+/// which ranks identically to the kernel-induced distance
+/// `sqrt(2 - 2 K̃)` (both are monotone decreasing in K̃).
+pub struct KrdtwDist {
+    pub kernel: Krdtw,
+}
+
+impl KrdtwDist {
+    pub fn new(kernel: Krdtw) -> Self {
+        KrdtwDist { kernel }
+    }
+}
+
+impl Measure for KrdtwDist {
+    fn name(&self) -> String {
+        KernelMeasure::name(&self.kernel)
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_kernel(&x.values, &y.values);
+        let kxx = self.kernel.log_kernel(&x.values, &x.values);
+        let kyy = self.kernel.log_kernel(&y.values, &y.values);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(-norm, kxy.visited_cells + kxx.visited_cells + kyy.visited_cells)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Plain-domain Algorithm 2 (small T only) — the textbook oracle.
+    fn krdtw_plain(x: &[f64], y: &[f64], nu: f64, band: Option<usize>) -> f64 {
+        let t = x.len();
+        let kap = |a: f64, b: f64| (-nu * (a - b) * (a - b)).exp();
+        let mut k1 = vec![vec![0.0f64; t]; t];
+        let mut k2 = vec![vec![0.0f64; t]; t];
+        for i in 0..t {
+            for j in 0..t {
+                if let Some(b) = band {
+                    if i.abs_diff(j) > b {
+                        continue;
+                    }
+                }
+                if i == 0 && j == 0 {
+                    k1[0][0] = kap(x[0], y[0]);
+                    k2[0][0] = kap(x[0], y[0]);
+                    continue;
+                }
+                let p11 = if i > 0 && j > 0 { k1[i - 1][j - 1] } else { 0.0 };
+                let p10 = if i > 0 { k1[i - 1][j] } else { 0.0 };
+                let p01 = if j > 0 { k1[i][j - 1] } else { 0.0 };
+                k1[i][j] = kap(x[i], y[j]) / 3.0 * (p11 + p10 + p01);
+                let q11 = if i > 0 && j > 0 { k2[i - 1][j - 1] } else { 0.0 };
+                let q10 = if i > 0 { k2[i - 1][j] } else { 0.0 };
+                let q01 = if j > 0 { k2[i][j - 1] } else { 0.0 };
+                let kii = kap(x[i], y[i]);
+                let kjj = kap(x[j], y[j]);
+                k2[i][j] = ((kii + kjj) * 0.5 * q11 + q10 * kii + q01 * kjj) / 3.0;
+            }
+        }
+        k1[t - 1][t - 1] + k2[t - 1][t - 1]
+    }
+
+    #[test]
+    fn log_matches_plain_small_t() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            let t = 3 + rng.below(10);
+            let x: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            for nu in [0.1, 1.0, 5.0] {
+                let plain = krdtw_plain(&x, &y, nu, None);
+                let log = Krdtw::new(nu).log_kernel(&x, &y).value;
+                assert!(
+                    (log - plain.ln()).abs() < 1e-9,
+                    "t={t} nu={nu}: {log} vs {}",
+                    plain.ln()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corridor_matches_plain_small_t() {
+        let mut rng = Pcg64::new(2);
+        let t = 9;
+        let x: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+        for band in [1usize, 2, 4] {
+            let plain = krdtw_plain(&x, &y, 0.5, Some(band));
+            let log = Krdtw::with_band(0.5, band).log_kernel(&x, &y).value;
+            assert!((log - plain.ln()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut rng = Pcg64::new(3);
+        let x: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let k = Krdtw::new(1.0);
+        assert!((k.log_kernel(&x, &y).value - k.log_kernel(&y, &x).value).abs() < 1e-10);
+    }
+
+    #[test]
+    fn long_series_stay_finite() {
+        // T = 600 underflows plain f64; log domain must survive.
+        let mut rng = Pcg64::new(4);
+        let x: Vec<f64> = (0..600).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..600).map(|_| rng.normal()).collect();
+        let v = Krdtw::new(1.0).log_kernel(&x, &y).value;
+        assert!(v.is_finite() && v > NEG_THRESH && v < 0.0);
+    }
+
+    #[test]
+    fn self_kernel_dominates_cross() {
+        // normalized K̃(x,y) <= 1 = K̃(x,x)
+        let mut rng = Pcg64::new(5);
+        let x: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let k = Krdtw::new(1.0);
+        let kxy = k.log_kernel(&x, &y).value;
+        let kxx = k.log_kernel(&x, &x).value;
+        let kyy = k.log_kernel(&y, &y).value;
+        assert!(kxy - 0.5 * (kxx + kyy) <= 1e-9);
+    }
+
+    #[test]
+    fn dist_wrapper_zero_on_self() {
+        use crate::data::TimeSeries;
+        let mut rng = Pcg64::new(6);
+        let x = TimeSeries::new(0, (0..25).map(|_| rng.normal()).collect());
+        let d = KrdtwDist::new(Krdtw::new(1.0)).dist(&x, &x);
+        assert!(d.value.abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_gram_is_positive_definite() {
+        // Eq. 6's p.d. claim, checked via eigen-free Cholesky attempt.
+        let mut rng = Pcg64::new(7);
+        let n = 6;
+        let series: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..15).map(|_| rng.normal()).collect())
+            .collect();
+        let k = Krdtw::new(0.8);
+        let mut lk = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                lk[i][j] = k.log_kernel(&series[i], &series[j]).value;
+            }
+        }
+        let mut g = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                g[i][j] = (lk[i][j] - 0.5 * (lk[i][i] + lk[j][j])).exp();
+            }
+        }
+        // Cholesky with small jitter must succeed for a p.s.d. matrix.
+        let mut a = g.clone();
+        for i in 0..n {
+            a[i][i] += 1e-10;
+        }
+        for c in 0..n {
+            for r in c..n {
+                let mut sum = a[r][c];
+                for k2 in 0..c {
+                    sum -= a[r][k2] * a[c][k2];
+                }
+                if r == c {
+                    assert!(sum > 0.0, "not p.d. at {c}: {sum}");
+                    a[r][c] = sum.sqrt();
+                } else {
+                    a[r][c] = sum / a[c][c];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn visited_cells_band_vs_full() {
+        let mut rng = Pcg64::new(8);
+        let x: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let full = Krdtw::new(1.0).log_kernel(&x, &y).visited_cells;
+        let banded = Krdtw::with_band(1.0, 5).log_kernel(&x, &y).visited_cells;
+        assert_eq!(full, 2500);
+        assert!(banded < full);
+    }
+}

@@ -1,0 +1,149 @@
+//! LB_Keogh lower bounding — the classic *indexing*-family DTW speed-up
+//! (paper §II-B.2 category 2, ref [27]): a cheap O(T) lower bound on the
+//! banded DTW that lets a 1-NN search skip most full DP evaluations.
+//! Included so the learned sparsification can be compared against the
+//! pruning approach on the same workloads.
+
+use crate::data::{LabeledSet, TimeSeries};
+use crate::measures::dtw::dtw_banded;
+
+/// Upper/lower envelope of a series under warping radius `r`.
+pub fn envelope(y: &[f64], r: usize) -> (Vec<f64>, Vec<f64>) {
+    let t = y.len();
+    let mut upper = vec![0.0; t];
+    let mut lower = vec![0.0; t];
+    for i in 0..t {
+        let lo = i.saturating_sub(r);
+        let hi = (i + r).min(t - 1);
+        let mut mx = f64::NEG_INFINITY;
+        let mut mn = f64::INFINITY;
+        for &v in &y[lo..=hi] {
+            mx = mx.max(v);
+            mn = mn.min(v);
+        }
+        upper[i] = mx;
+        lower[i] = mn;
+    }
+    (upper, lower)
+}
+
+/// LB_Keogh(x, y): squared-cost lower bound on banded DTW(x, y, r).
+pub fn lb_keogh(x: &[f64], upper: &[f64], lower: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for ((&xi, &u), &l) in x.iter().zip(upper).zip(lower) {
+        if xi > u {
+            s += (xi - u) * (xi - u);
+        } else if xi < l {
+            s += (l - xi) * (l - xi);
+        }
+    }
+    s
+}
+
+/// 1-NN with the LB_Keogh cascade: candidates are scanned in ascending
+/// lower-bound order; the full banded DP runs only while the bound beats
+/// the best-so-far.  Returns (error rate, full DTW evaluations skipped,
+/// total candidates).
+pub fn classify_1nn_lb(
+    train: &LabeledSet,
+    test: &LabeledSet,
+    band: usize,
+) -> (f64, u64, u64) {
+    let envs: Vec<(Vec<f64>, Vec<f64>)> = train
+        .series
+        .iter()
+        .map(|s| envelope(&s.values, band))
+        .collect();
+    let mut wrong = 0usize;
+    let mut skipped = 0u64;
+    let mut total = 0u64;
+    for probe in &test.series {
+        // ascending-LB candidate order maximizes pruning
+        let mut order: Vec<(f64, usize)> = envs
+            .iter()
+            .enumerate()
+            .map(|(j, (u, l))| (lb_keogh(&probe.values, u, l), j))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut best = (f64::INFINITY, usize::MAX);
+        for (lb, j) in order {
+            total += 1;
+            if lb >= best.0 {
+                skipped += 1; // bound proves this candidate cannot win
+                continue;
+            }
+            let d = dtw_banded(&probe.values, &train.series[j].values, band).value;
+            if d < best.0 {
+                best = (d, train.series[j].label);
+            }
+        }
+        if best.1 != probe.label {
+            wrong += 1;
+        }
+    }
+    (wrong as f64 / test.len().max(1) as f64, skipped, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classify::nn::classify_1nn;
+    use crate::data::synthetic;
+    use crate::measures::sakoe_chiba::SakoeChibaDtw;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn envelope_bounds_the_series() {
+        let mut rng = Pcg64::new(1);
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        for r in [0usize, 2, 5] {
+            let (u, l) = envelope(&y, r);
+            for i in 0..y.len() {
+                assert!(l[i] <= y[i] && y[i] <= u[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn lb_is_a_true_lower_bound() {
+        // THE correctness property: LB_Keogh <= banded DTW, always.
+        let mut rng = Pcg64::new(2);
+        for _ in 0..50 {
+            let t = 4 + rng.below(40);
+            let x: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            for r in [1usize, 3, 8] {
+                let (u, l) = envelope(&y, r);
+                let lb = lb_keogh(&x, &u, &l);
+                let d = dtw_banded(&x, &y, r).value;
+                assert!(lb <= d + 1e-9, "LB {lb} > DTW {d} (r={r})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_radius_envelope_gives_euclidean_bound() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 2.0, 2.0];
+        let (u, l) = envelope(&y, 0);
+        let lb = lb_keogh(&x, &u, &l);
+        assert!((lb - 2.0).abs() < 1e-12); // (1-2)^2 + 0 + (3-2)^2
+    }
+
+    #[test]
+    fn cascade_matches_plain_1nn_and_prunes() {
+        let ds = synthetic::generate_scaled("CBF", 9, 20, 40).unwrap();
+        let t = ds.series_len();
+        let band = (0.1 * t as f64) as usize;
+        let (err_lb, skipped, total) = classify_1nn_lb(&ds.train, &ds.test, band);
+        let plain = classify_1nn(
+            &SakoeChibaDtw::new(100.0 * band as f64 / t as f64),
+            &ds.train,
+            &ds.test,
+            2,
+        );
+        assert_eq!(err_lb, plain.error_rate, "cascade must be exact");
+        assert!(skipped > 0, "no pruning happened");
+        assert!(skipped < total);
+    }
+}

@@ -1,0 +1,85 @@
+//! All (dis)similarity measures evaluated by the paper.
+//!
+//! | module | measure | paper ref |
+//! |--------|---------|-----------|
+//! | [`euclidean`] | Ed / L_p norms | Eq. 3 |
+//! | [`corr`]      | Pearson CORR distance | Eq. 1 |
+//! | [`daco`]      | auto-correlation operator distance | Eq. 2 |
+//! | [`dtw`]       | DTW (+ optimal path backtracking) | Eq. 4 |
+//! | [`sakoe_chiba`] | DTW_sc corridor | [25], [26] |
+//! | [`krdtw`]     | K_rdtw / K_rdtw_sc | Eq. 6-7, Alg. 2 |
+//! | [`kga`]       | global alignment kernel (extra baseline) | Eq. 5 |
+//! | [`spdtw`]     | SP-DTW over the LOC sparse grid | Eq. 9, Alg. 1 |
+//! | [`spkrdtw`]   | SP-K_rdtw over the LOC sparse grid | Alg. 2 |
+//!
+//! Every DP measure reports the number of **visited cells**, the unit of
+//! the paper's Table VI speed-up comparison.
+
+pub mod corr;
+pub mod daco;
+pub mod dtw;
+pub mod euclidean;
+pub mod itakura;
+pub mod kga;
+pub mod krdtw;
+pub mod lb_keogh;
+pub mod sakoe_chiba;
+pub mod spdtw;
+pub mod spkrdtw;
+
+use crate::data::TimeSeries;
+
+/// Result of one pairwise evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistResult {
+    /// Dissimilarity value — smaller means closer (kernel measures are
+    /// wrapped so this holds uniformly; see [`krdtw::KrdtwDist`]).
+    pub value: f64,
+    /// DP cells visited to produce the value (Table VI unit). Linear
+    /// measures report T.
+    pub visited_cells: u64,
+}
+
+impl DistResult {
+    pub fn new(value: f64, visited_cells: u64) -> Self {
+        DistResult {
+            value,
+            visited_cells,
+        }
+    }
+}
+
+/// A (dis)similarity measure on time series.
+pub trait Measure: Send + Sync {
+    /// Stable identifier used in tables and the CLI.
+    fn name(&self) -> String;
+
+    /// Dissimilarity between two series (smaller = closer).
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult;
+}
+
+/// A kernel (similarity) measure exposing log-kernel values, from which
+/// normalized Gram matrices are built (`classify::gram`).
+pub trait KernelMeasure: Send + Sync {
+    fn name(&self) -> String;
+
+    /// `log K(x, y)` plus visited-cell count.
+    fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult;
+}
+
+/// The "unreachable" sentinel shared with the Pallas kernels
+/// (`python/compile/kernels/common.py`): any DP value at or above
+/// [`BIG_THRESH`] means no admissible path existed.
+pub const BIG: f64 = 1.0e30;
+pub const BIG_THRESH: f64 = 1.0e29;
+/// Log-domain zero for kernel DPs.
+pub const NEG: f64 = -1.0e30;
+pub const NEG_THRESH: f64 = -1.0e29;
+
+/// Squared pointwise divergence φ used by all DP measures (the paper's
+/// choice: squared Euclidean norm).
+#[inline(always)]
+pub fn phi(a: f64, b: f64) -> f64 {
+    let d = a - b;
+    d * d
+}

@@ -1,0 +1,115 @@
+//! DTW with a Sakoe-Chiba corridor (paper refs [25], [26]) — the classic
+//! symmetric band constraint the paper's sparsified search space is
+//! benchmarked against.  The band is expressed as a *percentage of T*
+//! (the convention of the UCR baselines and of the paper's Table II
+//! parenthesized values, e.g. `0.242(6)` = 6% band).
+
+use crate::data::TimeSeries;
+use crate::measures::dtw::dtw_banded;
+use crate::measures::{DistResult, Measure};
+
+/// Sakoe-Chiba DTW with band = `pct`% of the series length.
+#[derive(Clone, Debug)]
+pub struct SakoeChibaDtw {
+    /// Corridor half-width as a percentage of T (0 = diagonal only).
+    pub band_pct: f64,
+}
+
+impl SakoeChibaDtw {
+    pub fn new(band_pct: f64) -> Self {
+        assert!((0.0..=100.0).contains(&band_pct));
+        SakoeChibaDtw { band_pct }
+    }
+
+    /// Absolute band width for series of length `t`.
+    pub fn band_for(&self, t: usize) -> usize {
+        ((self.band_pct / 100.0) * t as f64).round() as usize
+    }
+}
+
+impl Measure for SakoeChibaDtw {
+    fn name(&self) -> String {
+        format!("DTW_sc({}%)", self.band_pct)
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let t = x.len().max(y.len());
+        dtw_banded(&x.values, &y.values, self.band_for(t))
+    }
+}
+
+/// Number of cells inside a Sakoe-Chiba band for a T×T grid — the
+/// denominator bookkeeping of Table VI.
+pub fn band_cells(t: usize, band: usize) -> u64 {
+    let mut n = 0u64;
+    for i in 0..t {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band).min(t - 1);
+        n += (hi - lo + 1) as u64;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TimeSeries;
+    use crate::measures::dtw::Dtw;
+    use crate::util::rng::Pcg64;
+
+    fn rand_ts(rng: &mut Pcg64, t: usize) -> TimeSeries {
+        TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn full_band_equals_dtw() {
+        let mut rng = Pcg64::new(1);
+        let x = rand_ts(&mut rng, 40);
+        let y = rand_ts(&mut rng, 40);
+        let sc = SakoeChibaDtw::new(100.0);
+        assert!((sc.dist(&x, &y).value - Dtw.dist(&x, &y).value).abs() < 1e-12);
+    }
+
+    #[test]
+    fn narrower_band_visits_fewer_cells() {
+        let mut rng = Pcg64::new(2);
+        let x = rand_ts(&mut rng, 64);
+        let y = rand_ts(&mut rng, 64);
+        let wide = SakoeChibaDtw::new(20.0).dist(&x, &y).visited_cells;
+        let narrow = SakoeChibaDtw::new(5.0).dist(&x, &y).visited_cells;
+        assert!(narrow < wide);
+        assert!(wide < 64 * 64);
+    }
+
+    #[test]
+    fn visited_matches_band_cells_formula() {
+        let mut rng = Pcg64::new(3);
+        let t = 50;
+        let x = rand_ts(&mut rng, t);
+        let y = rand_ts(&mut rng, t);
+        let sc = SakoeChibaDtw::new(10.0);
+        let d = sc.dist(&x, &y);
+        assert_eq!(d.visited_cells, band_cells(t, sc.band_for(t)));
+    }
+
+    #[test]
+    fn band_cells_extremes() {
+        assert_eq!(band_cells(10, 0), 10);
+        assert_eq!(band_cells(10, 9), 100);
+        // band=1: 10 diag + 2*9 off-diag
+        assert_eq!(band_cells(10, 1), 28);
+    }
+
+    #[test]
+    fn sc_upper_bounds_dtw() {
+        // Constraining the search space can only increase the cost.
+        let mut rng = Pcg64::new(4);
+        for _ in 0..10 {
+            let x = rand_ts(&mut rng, 32);
+            let y = rand_ts(&mut rng, 32);
+            let full = Dtw.dist(&x, &y).value;
+            let banded = SakoeChibaDtw::new(5.0).dist(&x, &y).value;
+            assert!(banded >= full - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! SP-DTW — Sparsified-Paths search space DTW (paper Eq. 9, Algorithm 1).
+//!
+//! The DP iterates ONLY over the cells of the learned LOC sparse matrix
+//! (sorted by row, then column), so the complexity is linear in the
+//! number of retained cells — between O(T) and O(T²) (paper §IV).
+//! Cells absent from LOC behave as Max_Float (here `BIG`), exactly as in
+//! Algorithm 1's initialization.
+
+use crate::data::TimeSeries;
+use crate::measures::{phi, DistResult, Measure, BIG};
+use crate::sparse::LocMatrix;
+use std::sync::Arc;
+
+/// SP-DTW over a learned sparse alignment-path matrix.
+#[derive(Clone)]
+pub struct SpDtw {
+    pub loc: Arc<LocMatrix>,
+}
+
+impl SpDtw {
+    pub fn new(loc: LocMatrix) -> Self {
+        SpDtw { loc: Arc::new(loc) }
+    }
+
+    pub fn from_arc(loc: Arc<LocMatrix>) -> Self {
+        SpDtw { loc }
+    }
+
+    /// Algorithm 1 over raw slices — flat loop over LOC entries using the
+    /// precomputed predecessor table (§Perf: ~3x over the row-cursor scan
+    /// of [`Self::eval_scan`], which is kept as the reference).
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> DistResult {
+        let loc = &*self.loc;
+        let t = loc.t;
+        assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
+        assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
+        let n = loc.nnz();
+        let mut d = vec![BIG; n];
+        for k in 0..n {
+            let r = loc.rows[k] as usize;
+            let c = loc.cols[k] as usize;
+            let local = loc.weights[k] * phi(x[r], y[c]);
+            let best = if r == 0 && c == 0 {
+                0.0
+            } else {
+                let p = loc.preds[k];
+                let mut b = BIG;
+                for &pi in &p {
+                    if pi != crate::sparse::loc::NO_PRED {
+                        let v = d[pi as usize];
+                        if v < b {
+                            b = v;
+                        }
+                    }
+                }
+                b
+            };
+            d[k] = local + best;
+        }
+        let corner = loc
+            .index_of(t - 1, t - 1)
+            .map(|k| d[k])
+            .unwrap_or(BIG + BIG);
+        DistResult::new(corner, n as u64)
+    }
+
+    /// Reference implementation: row-cursor predecessor scan (the direct
+    /// transcription of Algorithm 1's iteration).  Kept for §Perf
+    /// before/after measurement and as a cross-check oracle.
+    pub fn eval_scan(&self, x: &[f64], y: &[f64]) -> DistResult {
+        let loc = &*self.loc;
+        let t = loc.t;
+        assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
+        assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
+        // DP values parallel to the LOC entry array.
+        let mut d = vec![BIG; loc.nnz()];
+        // Fast predecessor lookup inside the current and previous rows:
+        // rows are contiguous CSR ranges, so we walk them with cursors.
+        for r in 0..t {
+            let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);
+            let (ps, pe) = if r > 0 {
+                (loc.row_ptr[r - 1], loc.row_ptr[r])
+            } else {
+                (0, 0)
+            };
+            let mut p_cursor = ps;
+            for k in rs..re {
+                let c = loc.cols[k] as usize;
+                let w = loc.weights[k];
+                let local = w * phi(x[r], y[c]);
+                if r == 0 && c == 0 {
+                    d[k] = local;
+                    continue;
+                }
+                // advance previous-row cursor to the first col >= c-1
+                while p_cursor < pe && (loc.cols[p_cursor] as usize) < c.saturating_sub(1) {
+                    p_cursor += 1;
+                }
+                let mut best = BIG;
+                // (r-1, c-1) and (r-1, c): at p_cursor / p_cursor+1 if match
+                if r > 0 {
+                    let mut q = p_cursor;
+                    while q < pe && (loc.cols[q] as usize) <= c {
+                        let pc = loc.cols[q] as usize;
+                        if (c > 0 && pc == c - 1) || pc == c {
+                            if d[q] < best {
+                                best = d[q];
+                            }
+                        }
+                        q += 1;
+                    }
+                }
+                // (r, c-1): the immediately preceding entry of this row
+                if c > 0 && k > rs && loc.cols[k - 1] as usize == c - 1 && d[k - 1] < best {
+                    best = d[k - 1];
+                }
+                d[k] = local + best;
+            }
+        }
+        let corner = loc
+            .index_of(t - 1, t - 1)
+            .map(|k| d[k])
+            .unwrap_or(BIG + BIG);
+        DistResult::new(corner, loc.nnz() as u64)
+    }
+}
+
+impl Measure for SpDtw {
+    fn name(&self) -> String {
+        "SP-DTW".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.eval(&x.values, &y.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::dtw::{dtw_banded, Dtw};
+    use crate::measures::sakoe_chiba::SakoeChibaDtw;
+    use crate::measures::BIG_THRESH;
+    use crate::sparse::OccupancyGrid;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+        (0..t).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn full_grid_equals_dtw() {
+        let mut rng = Pcg64::new(1);
+        for t in [2usize, 5, 17, 40] {
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            let sp = SpDtw::new(LocMatrix::full(t));
+            let got = sp.eval(&x, &y).value;
+            let exp = dtw_banded(&x, &y, usize::MAX).value;
+            assert!((got - exp).abs() < 1e-9, "t={t}: {got} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn fast_eval_matches_scan_reference() {
+        // §Perf invariant: the flat predecessor-table DP must agree with
+        // the row-cursor reference on arbitrary sparse supports.
+        let mut rng = Pcg64::new(99);
+        for t in [3usize, 9, 21, 33] {
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            let mut triples = vec![(0usize, 0usize, 1.0f64), (t - 1, t - 1, 1.0)];
+            for i in 0..t {
+                for j in 0..t {
+                    if rng.f64() < 0.4 {
+                        triples.push((i, j, rng.range(0.5, 3.0)));
+                    }
+                }
+            }
+            let sp = SpDtw::new(LocMatrix::from_triples(t, triples));
+            let a = sp.eval(&x, &y);
+            let b = sp.eval_scan(&x, &y);
+            assert_eq!(a.visited_cells, b.visited_cells);
+            if a.value < crate::measures::BIG_THRESH {
+                assert!((a.value - b.value).abs() < 1e-9, "t={t}");
+            } else {
+                assert!(b.value >= crate::measures::BIG_THRESH);
+            }
+        }
+    }
+
+    #[test]
+    fn corridor_grid_equals_sakoe_chiba() {
+        let mut rng = Pcg64::new(2);
+        let t = 30;
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        for band in [0usize, 1, 3, 7] {
+            let sp = SpDtw::new(LocMatrix::corridor(t, band));
+            let got = sp.eval(&x, &y);
+            let exp = dtw_banded(&x, &y, band);
+            assert!((got.value - exp.value).abs() < 1e-9);
+            assert_eq!(got.visited_cells, exp.visited_cells);
+        }
+    }
+
+    #[test]
+    fn visited_equals_nnz() {
+        let loc = LocMatrix::corridor(20, 2);
+        let nnz = loc.nnz() as u64;
+        let sp = SpDtw::new(loc);
+        let mut rng = Pcg64::new(3);
+        let x = rand_vec(&mut rng, 20);
+        let y = rand_vec(&mut rng, 20);
+        assert_eq!(sp.eval(&x, &y).visited_cells, nnz);
+    }
+
+    #[test]
+    fn weighted_cells_scale_cost() {
+        // doubling all weights doubles the optimal cost
+        let t = 10;
+        let mut rng = Pcg64::new(4);
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let base = LocMatrix::full(t);
+        let doubled = LocMatrix::from_triples(
+            t,
+            base.to_triples().into_iter().map(|(r, c, w)| (r, c, 2.0 * w)).collect(),
+        );
+        let a = SpDtw::new(base).eval(&x, &y).value;
+        let b = SpDtw::new(doubled).eval(&x, &y).value;
+        assert!((b - 2.0 * a).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diagonal_only_grid_is_weighted_euclid() {
+        let t = 8;
+        let mut rng = Pcg64::new(5);
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let sp = SpDtw::new(LocMatrix::corridor(t, 0));
+        let got = sp.eval(&x, &y).value;
+        let exp: f64 = x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!((got - exp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disconnected_grid_unreachable() {
+        // cells (0,0) and (2,2) only: no continuity step can bridge them
+        let loc = LocMatrix::from_triples(3, vec![(0, 0, 1.0), (2, 2, 1.0)]);
+        let sp = SpDtw::new(loc);
+        let d = sp.eval(&[0.0, 0.0, 0.0], &[0.0, 0.0, 0.0]);
+        assert!(d.value >= BIG_THRESH);
+    }
+
+    #[test]
+    fn missing_origin_unreachable() {
+        let loc = LocMatrix::from_triples(2, vec![(0, 1, 1.0), (1, 1, 1.0)]);
+        let sp = SpDtw::new(loc);
+        let d = sp.eval(&[1.0, 2.0], &[1.0, 2.0]);
+        assert!(d.value >= BIG_THRESH);
+    }
+
+    #[test]
+    fn sparsification_never_decreases_cost() {
+        // P ⊂ A: restricting the path set can only raise the minimum.
+        let mut rng = Pcg64::new(6);
+        let t = 16;
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let full = SpDtw::new(LocMatrix::full(t)).eval(&x, &y).value;
+        for band in [1usize, 2, 5] {
+            let sparse = SpDtw::new(LocMatrix::corridor(t, band)).eval(&x, &y).value;
+            assert!(sparse >= full - 1e-12);
+        }
+    }
+
+    #[test]
+    fn learned_grid_gamma0_interpolates_dtw_and_band() {
+        // end-to-end shape: a learned LOC (θ=0, γ=0) must produce costs
+        // >= full DTW (restriction) on cells it retains.
+        use crate::data::synthetic;
+        let ds = synthetic::generate_scaled("CBF", 11, 10, 4).unwrap();
+        let grid: OccupancyGrid =
+            crate::sparse::learn::learn_occupancy_grid(&ds.train, 2);
+        let loc = grid.threshold(0.0).to_loc(0.0);
+        let sp = SpDtw::new(loc);
+        let a = &ds.test.series[0];
+        let b = &ds.test.series[1];
+        let d_sp = sp.dist(a, b).value;
+        let d_full = Dtw.dist(a, b).value;
+        assert!(d_sp >= d_full - 1e-9);
+        assert!(d_sp < BIG_THRESH, "learned grid must keep pairs reachable");
+        let _ = SakoeChibaDtw::new(10.0); // (referenced for comparison tests elsewhere)
+    }
+}

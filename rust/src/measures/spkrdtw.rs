@@ -1,0 +1,351 @@
+//! SP-K_rdtw — the sparsified-paths K_rdtw kernel (paper §IV,
+//! Algorithm 2): the K_rdtw recursion evaluated only on the cells of the
+//! learned LOC matrix.  Cell weights are deliberately IGNORED (mask
+//! semantics only) — restricting the summation of Eq. 6 to any subset
+//! P ⊂ A preserves positive definiteness, weighting the terms would not.
+//!
+//! Log-domain like `krdtw.rs`; cells outside LOC contribute the
+//! log-domain zero `NEG`.
+
+use crate::data::TimeSeries;
+use crate::measures::krdtw::{lse2, lse3};
+use crate::measures::{phi, DistResult, KernelMeasure, Measure, NEG};
+use crate::sparse::LocMatrix;
+use std::sync::Arc;
+
+/// SP-K_rdtw over a learned sparse alignment-path matrix.
+#[derive(Clone)]
+pub struct SpKrdtw {
+    pub loc: Arc<LocMatrix>,
+    pub nu: f64,
+}
+
+impl SpKrdtw {
+    pub fn new(loc: LocMatrix, nu: f64) -> Self {
+        assert!(nu > 0.0);
+        SpKrdtw {
+            loc: Arc::new(loc),
+            nu,
+        }
+    }
+
+    pub fn from_arc(loc: Arc<LocMatrix>, nu: f64) -> Self {
+        SpKrdtw { loc, nu }
+    }
+
+    /// Algorithm 2 restricted to LOC cells; returns log(K1 + K2).
+    /// Flat loop over LOC entries via the precomputed predecessor table
+    /// (§Perf; `log_kernel_scan` is the row-cursor reference).
+    pub fn log_kernel(&self, x: &[f64], y: &[f64]) -> DistResult {
+        let loc = &*self.loc;
+        let t = loc.t;
+        assert_eq!(x.len(), t);
+        assert_eq!(y.len(), t);
+        let nu = self.nu;
+        let log3 = 3.0f64.ln();
+        let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
+        let n = loc.nnz();
+        let mut vals = vec![(NEG, NEG); n];
+        for k in 0..n {
+            let r = loc.rows[k] as usize;
+            let c = loc.cols[k] as usize;
+            let lk = -nu * phi(x[r], y[c]);
+            if r == 0 && c == 0 {
+                vals[k] = (lk, ls[0]);
+                continue;
+            }
+            let p = loc.preds[k];
+            let no = crate::sparse::loc::NO_PRED;
+            let (p11, q11) = if p[0] != no { vals[p[0] as usize] } else { (NEG, NEG) };
+            let (p10, q10) = if p[1] != no { vals[p[1] as usize] } else { (NEG, NEG) };
+            let (p01, q01) = if p[2] != no { vals[p[2] as usize] } else { (NEG, NEG) };
+            let l1 = lk - log3 + lse3(p11, p10, p01);
+            let ls_i = ls[r];
+            let ls_j = ls[c];
+            let avg = (((ls_i.exp() + ls_j.exp()) * 0.5).max(1e-300)).ln();
+            let l2 = -log3 + lse3(avg + q11, ls_i + q10, ls_j + q01);
+            vals[k] = (l1, l2);
+        }
+        let corner = loc
+            .index_of(t - 1, t - 1)
+            .map(|k| lse2(vals[k].0, vals[k].1))
+            .unwrap_or(NEG);
+        DistResult::new(corner, n as u64)
+    }
+
+    /// Row-cursor reference implementation (kept for §Perf before/after
+    /// and cross-checking).
+    pub fn log_kernel_scan(&self, x: &[f64], y: &[f64]) -> DistResult {
+        let loc = &*self.loc;
+        let t = loc.t;
+        assert_eq!(x.len(), t);
+        assert_eq!(y.len(), t);
+        let nu = self.nu;
+        let log3 = 3.0f64.ln();
+        let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
+
+        // (lK1, lK2) per LOC entry.
+        let mut vals = vec![(NEG, NEG); loc.nnz()];
+        for r in 0..t {
+            let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);
+            let (ps, pe) = if r > 0 {
+                (loc.row_ptr[r - 1], loc.row_ptr[r])
+            } else {
+                (0, 0)
+            };
+            let mut p_cursor = ps;
+            for k in rs..re {
+                let c = loc.cols[k] as usize;
+                let lk = -nu * phi(x[r], y[c]);
+                if r == 0 && c == 0 {
+                    vals[0] = (lk, ls[0]);
+                    continue;
+                }
+                while p_cursor < pe && (loc.cols[p_cursor] as usize) < c.saturating_sub(1) {
+                    p_cursor += 1;
+                }
+                let (mut p11, mut p10) = (NEG, NEG);
+                let (mut q11, mut q10) = (NEG, NEG);
+                if r > 0 {
+                    let mut q = p_cursor;
+                    while q < pe && (loc.cols[q] as usize) <= c {
+                        let pc = loc.cols[q] as usize;
+                        if c > 0 && pc == c - 1 {
+                            p11 = vals[q].0;
+                            q11 = vals[q].1;
+                        } else if pc == c {
+                            p10 = vals[q].0;
+                            q10 = vals[q].1;
+                        }
+                        q += 1;
+                    }
+                }
+                let (mut p01, mut q01) = (NEG, NEG);
+                if c > 0 && k > rs && loc.cols[k - 1] as usize == c - 1 {
+                    p01 = vals[k - 1].0;
+                    q01 = vals[k - 1].1;
+                }
+                let l1 = lk - log3 + lse3(p11, p10, p01);
+                let ls_i = ls[r];
+                let ls_j = ls[c];
+                let avg = (((ls_i.exp() + ls_j.exp()) * 0.5).max(1e-300)).ln();
+                let l2 = -log3 + lse3(avg + q11, ls_i + q10, ls_j + q01);
+                vals[k] = (l1, l2);
+            }
+        }
+        let corner = loc
+            .index_of(t - 1, t - 1)
+            .map(|k| lse2(vals[k].0, vals[k].1))
+            .unwrap_or(NEG);
+        DistResult::new(corner, loc.nnz() as u64)
+    }
+}
+
+impl KernelMeasure for SpKrdtw {
+    fn name(&self) -> String {
+        "SP-Krdtw".into()
+    }
+
+    fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.log_kernel(&x.values, &y.values)
+    }
+}
+
+/// Distance wrapper for 1-NN (normalized-kernel ranking, cf.
+/// `krdtw::KrdtwDist`).
+pub struct SpKrdtwDist {
+    pub kernel: SpKrdtw,
+}
+
+impl SpKrdtwDist {
+    pub fn new(kernel: SpKrdtw) -> Self {
+        SpKrdtwDist { kernel }
+    }
+}
+
+impl Measure for SpKrdtwDist {
+    fn name(&self) -> String {
+        "SP-Krdtw".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_kernel(&x.values, &y.values);
+        let kxx = self.kernel.log_kernel(&x.values, &x.values);
+        let kyy = self.kernel.log_kernel(&y.values, &y.values);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(
+            -norm,
+            kxy.visited_cells + kxx.visited_cells + kyy.visited_cells,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::krdtw::Krdtw;
+    use crate::measures::NEG_THRESH;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+        (0..t).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fast_log_kernel_matches_scan_reference() {
+        let mut rng = Pcg64::new(77);
+        for t in [3usize, 10, 22] {
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            let mut triples = vec![(0usize, 0usize, 1.0f64), (t - 1, t - 1, 1.0)];
+            for i in 0..t {
+                for j in 0..t {
+                    if rng.f64() < 0.5 {
+                        triples.push((i, j, 1.0));
+                    }
+                }
+            }
+            let sp = SpKrdtw::new(LocMatrix::from_triples(t, triples), 0.8);
+            let a = sp.log_kernel(&x, &y);
+            let b = sp.log_kernel_scan(&x, &y);
+            assert_eq!(a.visited_cells, b.visited_cells);
+            if a.value > NEG_THRESH {
+                assert!((a.value - b.value).abs() < 1e-10, "t={t}");
+            } else {
+                assert!(b.value <= NEG_THRESH);
+            }
+        }
+    }
+
+    #[test]
+    fn full_grid_equals_krdtw() {
+        let mut rng = Pcg64::new(1);
+        for t in [2usize, 7, 20] {
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            let sp = SpKrdtw::new(LocMatrix::full(t), 0.7);
+            let kr = Krdtw::new(0.7);
+            let a = sp.log_kernel(&x, &y).value;
+            let b = kr.log_kernel(&x, &y).value;
+            assert!((a - b).abs() < 1e-9, "t={t}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn corridor_grid_equals_banded_krdtw() {
+        let mut rng = Pcg64::new(2);
+        let t = 24;
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        for band in [1usize, 3, 6] {
+            let sp = SpKrdtw::new(LocMatrix::corridor(t, band), 1.0);
+            let kr = Krdtw::with_band(1.0, band);
+            let a = sp.log_kernel(&x, &y);
+            let b = kr.log_kernel(&x, &y);
+            assert!((a.value - b.value).abs() < 1e-9);
+            assert_eq!(a.visited_cells, b.visited_cells);
+        }
+    }
+
+    #[test]
+    fn weights_are_ignored() {
+        // scaling LOC weights must not change the kernel value
+        let mut rng = Pcg64::new(3);
+        let t = 12;
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let base = LocMatrix::corridor(t, 3);
+        let reweighted = LocMatrix::from_triples(
+            t,
+            base.to_triples()
+                .into_iter()
+                .map(|(r, c, _)| (r, c, 17.5))
+                .collect(),
+        );
+        let a = SpKrdtw::new(base, 0.5).log_kernel(&x, &y).value;
+        let b = SpKrdtw::new(reweighted, 0.5).log_kernel(&x, &y).value;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn symmetry_on_symmetric_support() {
+        let mut rng = Pcg64::new(4);
+        let t = 15;
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let sp = SpKrdtw::new(LocMatrix::corridor(t, 4), 1.0);
+        let a = sp.log_kernel(&x, &y).value;
+        let b = sp.log_kernel(&y, &x).value;
+        assert!((a - b).abs() < 1e-10);
+    }
+
+    #[test]
+    fn empty_corner_returns_neg() {
+        let loc = LocMatrix::from_triples(3, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        let sp = SpKrdtw::new(loc, 1.0);
+        let v = sp.log_kernel(&[0.0; 3], &[0.0; 3]).value;
+        assert!(v <= NEG_THRESH);
+    }
+
+    #[test]
+    fn dist_wrapper_self_zero_and_nonnegative() {
+        use crate::data::TimeSeries;
+        let mut rng = Pcg64::new(5);
+        let x = TimeSeries::new(0, rand_vec(&mut rng, 18));
+        let y = TimeSeries::new(0, rand_vec(&mut rng, 18));
+        let d = SpKrdtwDist::new(SpKrdtw::new(LocMatrix::corridor(18, 5), 1.0));
+        assert!(d.dist(&x, &x).value.abs() < 1e-9);
+        assert!(d.dist(&x, &y).value >= -1e-9);
+    }
+
+    #[test]
+    fn sparse_gram_positive_definite() {
+        // the headline §IV property: restriction to any P ⊂ A stays p.d.
+        let mut rng = Pcg64::new(6);
+        let n = 6;
+        let t = 12;
+        let series: Vec<Vec<f64>> = (0..n).map(|_| rand_vec(&mut rng, t)).collect();
+        // random symmetric sparse support + diagonal
+        let mut triples = vec![];
+        for i in 0..t {
+            for j in i..t {
+                if i == j || rng.f64() < 0.4 {
+                    triples.push((i, j, 1.0));
+                    triples.push((j, i, 1.0));
+                }
+            }
+        }
+        let sp = SpKrdtw::new(LocMatrix::from_triples(t, triples), 0.8);
+        let mut lk = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                lk[i][j] = sp.log_kernel(&series[i], &series[j]).value;
+            }
+        }
+        let mut g = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                g[i][j] = (lk[i][j] - 0.5 * (lk[i][i] + lk[j][j])).exp();
+            }
+        }
+        // Cholesky with jitter
+        let mut a = g.clone();
+        for i in 0..n {
+            a[i][i] += 1e-10;
+        }
+        for c in 0..n {
+            for r in c..n {
+                let mut sum = a[r][c];
+                for k in 0..c {
+                    sum -= a[r][k] * a[c][k];
+                }
+                if r == c {
+                    assert!(sum > 0.0, "not p.d.");
+                    a[r][c] = sum.sqrt();
+                } else {
+                    a[r][c] = sum / a[c][c];
+                }
+            }
+        }
+    }
+}

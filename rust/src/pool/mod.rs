@@ -1,0 +1,224 @@
+//! Thread-pool substrate (rayon is not in the vendored crate set).
+//!
+//! Two tools:
+//! - [`par_map`] / [`par_map_chunked`]: scoped data-parallel map over an
+//!   index space with an atomic work counter — used for pairwise distance
+//!   matrices, occupancy-grid learning and 1-NN search.
+//! - [`WorkerPool`]: a persistent pool consuming boxed jobs from a shared
+//!   queue — the execution engine under `coordinator::worker`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (min(cores, 16)).
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Parallel map over `0..n` with dynamic (work-stealing-ish) scheduling:
+/// each worker grabs chunks of indices from a shared atomic counter.
+/// Returns results in index order.
+pub fn par_map<R: Send, F: Fn(usize) -> R + Sync>(n: usize, threads: usize, f: F) -> Vec<R> {
+    par_map_chunked(n, threads, 1, f)
+}
+
+/// Like [`par_map`] but workers claim `chunk` indices at a time — use a
+/// larger chunk when the per-item body is tiny.
+pub fn par_map_chunked<R: Send, F: Fn(usize) -> R + Sync>(
+    n: usize,
+    threads: usize,
+    chunk: usize,
+    f: F,
+) -> Vec<R> {
+    assert!(chunk > 0);
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    // SAFETY-free approach: split `out` into per-index cells via raw
+    // pointers is unnecessary — instead collect (idx, value) pairs per
+    // worker and merge. Memory overhead is one Vec per worker.
+    let mut partials: Vec<Vec<(usize, R)>> = Vec::new();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + chunk).min(n);
+                        for i in start..end {
+                            local.push((i, f(i)));
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            partials.push(h.join().expect("pool worker panicked"));
+        }
+    });
+    for part in partials {
+        for (i, v) in part {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("index not produced")).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent worker pool with a bounded job queue.
+///
+/// Bounded submission gives the coordinator backpressure: `submit` blocks
+/// when `capacity` jobs are in flight.  Dropping the pool joins all
+/// workers after draining the queue.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    capacity: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize, capacity: usize) -> Self {
+        assert!(threads > 0 && capacity > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("pool rx poisoned");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            let (lock, cv) = &*inflight;
+                            let mut n = lock.lock().unwrap();
+                            *n -= 1;
+                            cv.notify_all();
+                        }
+                        Err(_) => break, // channel closed: shut down
+                    }
+                })
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+            inflight,
+            capacity,
+        }
+    }
+
+    /// Submit a job, blocking while the queue is at capacity
+    /// (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let (lock, cv) = &*self.inflight;
+        {
+            let mut n = lock.lock().unwrap();
+            while *n >= self.capacity {
+                n = cv.wait(n).unwrap();
+            }
+            *n += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn inflight(&self) -> usize {
+        *self.inflight.0.lock().unwrap()
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers drain & exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64) * 3 + 1).collect();
+        let parallel = par_map(257, 4, |i| (i as u64) * 3 + 1);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_chunked_matches_serial() {
+        let parallel = par_map_chunked(1000, 8, 13, |i| i * i);
+        assert_eq!(parallel, (0..1000).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert!(par_map(0, 4, |i| i).is_empty());
+        assert_eq!(par_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn worker_pool_runs_everything_once() {
+        let pool = WorkerPool::new(4, 16);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn worker_pool_backpressure_bounds_inflight() {
+        let pool = WorkerPool::new(1, 2);
+        for _ in 0..10 {
+            pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+            assert!(pool.inflight() <= 2);
+        }
+        pool.wait_idle();
+        assert_eq!(pool.inflight(), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  `artifacts/manifest.json` lists every AOT-lowered
+//! HLO-text module with its kernel kind, batch size, series length and
+//! dtype; the runtime picks buckets from here and never guesses shapes.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which DP kernel an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Weighted masked DTW, f32: args (x[B,T], y[B,T], wdiag[2T-1,T]).
+    Dtw,
+    /// Log-domain K_rdtw, f64: args (x, y, mdiag[2T-1,T], nu[1]).
+    Krdtw,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dtw" => Ok(KernelKind::Dtw),
+            "krdtw" => Ok(KernelKind::Krdtw),
+            other => Err(Error::runtime(format!("unknown kernel kind '{other}'"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::Dtw => "dtw",
+            KernelKind::Krdtw => "krdtw",
+        }
+    }
+}
+
+/// One AOT-compiled module.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub kernel: KernelKind,
+    pub name: String,
+    pub path: PathBuf,
+    pub batch: usize,
+    pub length: usize,
+    pub dtype: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        let mut entries = Vec::new();
+        for e in json.req_arr("entries")? {
+            let kernel = KernelKind::parse(e.req_str("kernel")?)?;
+            let file = e.req_str("file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::runtime(format!(
+                    "manifest entry '{file}' missing on disk"
+                )));
+            }
+            entries.push(ArtifactEntry {
+                kernel,
+                name: e.req_str("name")?.to_string(),
+                path,
+                batch: e.req_usize("batch")?,
+                length: e.req_usize("length")?,
+                dtype: e.req_str("dtype")?.to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find the bucket for an exact series length (same-length batching
+    /// policy, DESIGN.md §7).
+    pub fn find(&self, kernel: KernelKind, length: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kernel == kernel && e.length == length)
+    }
+
+    /// Supported lengths for a kernel kind.
+    pub fn lengths(&self, kernel: KernelKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel)
+            .map(|e| e.length)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake(dir: &Path, with_file: bool) {
+        std::fs::create_dir_all(dir).unwrap();
+        if with_file {
+            std::fs::write(dir.join("dtw_T8_B4.hlo.txt"), "HloModule m\n").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"entries":[{"kernel":"dtw","name":"dtw_T8_B4","file":"dtw_T8_B4.hlo.txt","batch":4,"length":8,"dtype":"f32","args":[]}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_find() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man_{}", std::process::id()));
+        write_fake(&dir, true);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert!(m.find(KernelKind::Dtw, 8).is_some());
+        assert!(m.find(KernelKind::Dtw, 9).is_none());
+        assert!(m.find(KernelKind::Krdtw, 8).is_none());
+        assert_eq!(m.lengths(KernelKind::Dtw), vec![8]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man2_{}", std::process::id()));
+        write_fake(&dir, false);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_helpful_error() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

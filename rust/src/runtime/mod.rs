@@ -1,0 +1,402 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client from the Rust hot path (no Python anywhere).
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so a dedicated **executor thread** owns the client and all
+//! compiled executables; the rest of the system talks to it through the
+//! cloneable [`PjrtHandle`] (an mpsc request channel).  The PJRT CPU
+//! client parallelizes internally, so one executor thread is not a
+//! throughput limiter — see EXPERIMENTS.md §Perf.
+//!
+//! Device-resident weight planes: the `(2T-1, T)` weight/mask plane is
+//! shared by every pair of a (dataset, measure-variant), so the engine
+//! caches it as a `PjRtBuffer` keyed by a caller-provided u64 and runs
+//! `execute_b` with only x/y re-uploaded per batch.
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::error::{Error, Result};
+pub use artifact::{ArtifactEntry, KernelKind, Manifest};
+
+/// A batched DTW request (f32): `b` pairs of length-`t` series.
+#[derive(Clone, Debug)]
+pub struct DtwBatch {
+    pub t: usize,
+    /// Row-major (B, T).
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    /// Cache key of the weight plane previously registered via
+    /// [`PjrtHandle::register_plane_f32`].
+    pub plane_key: u64,
+}
+
+/// A batched K_rdtw request (f64).
+#[derive(Clone, Debug)]
+pub struct KrdtwBatch {
+    pub t: usize,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub plane_key: u64,
+    pub nu: f64,
+}
+
+enum Request {
+    RegisterPlaneF32 {
+        key: u64,
+        t: usize,
+        plane: Vec<f32>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    RegisterPlaneF64 {
+        key: u64,
+        t: usize,
+        plane: Vec<f64>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Dtw {
+        batch: DtwBatch,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Krdtw {
+        batch: KrdtwBatch,
+        resp: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Info {
+        resp: mpsc::Sender<EngineInfo>,
+    },
+}
+
+/// Engine facts exposed for routing decisions and reports.
+#[derive(Clone, Debug)]
+pub struct EngineInfo {
+    pub platform: String,
+    pub dtw_lengths: Vec<usize>,
+    pub krdtw_lengths: Vec<usize>,
+    /// (kernel, T) -> batch size B of the artifact.
+    pub batch_of: Vec<(String, usize, usize)>,
+}
+
+impl EngineInfo {
+    pub fn dtw_batch(&self, t: usize) -> Option<usize> {
+        self.batch_of
+            .iter()
+            .find(|(k, tt, _)| k == "dtw" && *tt == t)
+            .map(|&(_, _, b)| b)
+    }
+    pub fn krdtw_batch(&self, t: usize) -> Option<usize> {
+        self.batch_of
+            .iter()
+            .find(|(k, tt, _)| k == "krdtw" && *tt == t)
+            .map(|&(_, _, b)| b)
+    }
+}
+
+/// Send-able handle to the executor thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The executor thread plus its handle; dropping joins the thread.
+pub struct PjrtRuntime {
+    handle: PjrtHandle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl PjrtRuntime {
+    /// Spawn the executor thread; compiles artifacts lazily on first use.
+    pub fn start(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let dir = artifacts_dir.to_path_buf();
+        // Validate the manifest on the caller thread for early errors.
+        Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || match Engine::new(&dir) {
+                Ok(mut engine) => {
+                    let _ = ready_tx.send(Ok(()));
+                    engine.serve(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::runtime("pjrt executor died during startup"))??;
+        Ok(PjrtRuntime {
+            handle: PjrtHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        // Closing the channel stops `serve`.
+        let (tx, _) = mpsc::channel();
+        self.handle = PjrtHandle { tx };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    fn call<T>(&self, build: impl FnOnce(mpsc::Sender<T>) -> Request) -> Result<T> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(build(resp_tx))
+            .map_err(|_| Error::runtime("pjrt executor gone"))?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::runtime("pjrt executor dropped the request"))
+    }
+
+    /// Upload a DTW weight plane (2T-1, T) once; later batches reference
+    /// it by key.
+    pub fn register_plane_f32(&self, key: u64, t: usize, plane: Vec<f32>) -> Result<()> {
+        self.call(|resp| Request::RegisterPlaneF32 { key, t, plane, resp })?
+    }
+
+    /// Upload a K_rdtw mask plane (2T-1, T) once.
+    pub fn register_plane_f64(&self, key: u64, t: usize, plane: Vec<f64>) -> Result<()> {
+        self.call(|resp| Request::RegisterPlaneF64 { key, t, plane, resp })?
+    }
+
+    /// Execute one batched DTW; returns B distances.
+    pub fn run_dtw(&self, batch: DtwBatch) -> Result<Vec<f32>> {
+        self.call(|resp| Request::Dtw { batch, resp })?
+    }
+
+    /// Execute one batched K_rdtw; returns B log-kernel values.
+    pub fn run_krdtw(&self, batch: KrdtwBatch) -> Result<Vec<f64>> {
+        self.call(|resp| Request::Krdtw { batch, resp })?
+    }
+
+    pub fn info(&self) -> Result<EngineInfo> {
+        self.call(|resp| Request::Info { resp })
+    }
+}
+
+/// The executor-thread state: PJRT client, lazily compiled executables,
+/// device-resident planes.
+struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    planes_f32: HashMap<u64, (usize, xla::PjRtBuffer)>,
+    planes_f64: HashMap<u64, (usize, xla::PjRtBuffer)>,
+}
+
+impl Engine {
+    fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        // PJRT CPU client creation is not safe to race from multiple
+        // threads (observed hangs when several runtimes start at once,
+        // e.g. under the parallel test harness) — serialize it globally.
+        static CLIENT_INIT: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let client = {
+            let _guard = CLIENT_INIT.lock().unwrap();
+            xla::PjRtClient::cpu().map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?
+        };
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            executables: HashMap::new(),
+            planes_f32: HashMap::new(),
+            planes_f64: HashMap::new(),
+        })
+    }
+
+    fn serve(&mut self, rx: mpsc::Receiver<Request>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::RegisterPlaneF32 { key, t, plane, resp } => {
+                    let r = self.upload_f32(&plane, t).map(|buf| {
+                        self.planes_f32.insert(key, (t, buf));
+                    });
+                    let _ = resp.send(r);
+                }
+                Request::RegisterPlaneF64 { key, t, plane, resp } => {
+                    let r = self.upload_f64(&plane, t).map(|buf| {
+                        self.planes_f64.insert(key, (t, buf));
+                    });
+                    let _ = resp.send(r);
+                }
+                Request::Dtw { batch, resp } => {
+                    let _ = resp.send(self.run_dtw(&batch));
+                }
+                Request::Krdtw { batch, resp } => {
+                    let _ = resp.send(self.run_krdtw(&batch));
+                }
+                Request::Info { resp } => {
+                    let _ = resp.send(self.info());
+                }
+            }
+        }
+    }
+
+    fn info(&self) -> EngineInfo {
+        EngineInfo {
+            platform: self.client.platform_name(),
+            dtw_lengths: self.manifest.lengths(KernelKind::Dtw),
+            krdtw_lengths: self.manifest.lengths(KernelKind::Krdtw),
+            batch_of: self
+                .manifest
+                .entries
+                .iter()
+                .map(|e| (e.kernel.as_str().to_string(), e.length, e.batch))
+                .collect(),
+        }
+    }
+
+    fn upload_f32(&self, plane: &[f32], t: usize) -> Result<xla::PjRtBuffer> {
+        let dims = [2 * t - 1, t];
+        self.client
+            .buffer_from_host_buffer(plane, &dims, None)
+            .map_err(|e| Error::runtime(format!("plane upload: {e}")))
+    }
+
+    fn upload_f64(&self, plane: &[f64], t: usize) -> Result<xla::PjRtBuffer> {
+        let dims = [2 * t - 1, t];
+        self.client
+            .buffer_from_host_buffer(plane, &dims, None)
+            .map_err(|e| Error::runtime(format!("plane upload: {e}")))
+    }
+
+    /// Lazily compile the artifact for (kernel, t).
+    fn executable(&mut self, kernel: KernelKind, t: usize) -> Result<(&xla::PjRtLoadedExecutable, usize)> {
+        let entry = self
+            .manifest
+            .find(kernel, t)
+            .ok_or_else(|| {
+                Error::runtime(format!(
+                    "no {} artifact for T={t} in {} (lengths: {:?})",
+                    kernel.as_str(),
+                    self.dir.display(),
+                    self.manifest.lengths(kernel)
+                ))
+            })?
+            .clone();
+        if !self.executables.contains_key(&entry.name) {
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(|e| Error::runtime(format!("parse {}: {e}", entry.path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {}: {e}", entry.name)))?;
+            self.executables.insert(entry.name.clone(), exe);
+        }
+        Ok((self.executables.get(&entry.name).unwrap(), entry.batch))
+    }
+
+    fn run_dtw(&mut self, batch: &DtwBatch) -> Result<Vec<f32>> {
+        let t = batch.t;
+        let b_have = batch.x.len() / t;
+        if batch.x.len() != b_have * t || batch.y.len() != batch.x.len() {
+            return Err(Error::runtime("malformed dtw batch shapes"));
+        }
+        let (_, b_need) = self.executable(KernelKind::Dtw, t)?;
+        if b_have != b_need {
+            return Err(Error::runtime(format!(
+                "dtw batch size {b_have} != artifact batch {b_need} (batcher must pad)"
+            )));
+        }
+        let plane = self
+            .planes_f32
+            .get(&batch.plane_key)
+            .ok_or_else(|| Error::runtime(format!("unregistered f32 plane {}", batch.plane_key)))?;
+        if plane.0 != t {
+            return Err(Error::runtime("plane length mismatch"));
+        }
+        let xb = self
+            .client
+            .buffer_from_host_buffer(&batch.x, &[b_have, t], None)
+            .map_err(|e| Error::runtime(format!("x upload: {e}")))?;
+        let yb = self
+            .client
+            .buffer_from_host_buffer(&batch.y, &[b_have, t], None)
+            .map_err(|e| Error::runtime(format!("y upload: {e}")))?;
+        // compile (if needed) before borrowing the plane immutably
+        self.executable(KernelKind::Dtw, t)?;
+        let exe = {
+            let entry = self.manifest.find(KernelKind::Dtw, t).unwrap();
+            self.executables.get(&entry.name).unwrap()
+        };
+        let plane = self.planes_f32.get(&batch.plane_key).unwrap();
+        let out = exe
+            .execute_b(&[&xb, &yb, &plane.1])
+            .map_err(|e| Error::runtime(format!("dtw execute: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch: {e}")))?;
+        let tup = lit
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        tup.to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+    }
+
+    fn run_krdtw(&mut self, batch: &KrdtwBatch) -> Result<Vec<f64>> {
+        let t = batch.t;
+        let b_have = batch.x.len() / t;
+        if batch.x.len() != b_have * t || batch.y.len() != batch.x.len() {
+            return Err(Error::runtime("malformed krdtw batch shapes"));
+        }
+        let (_, b_need) = self.executable(KernelKind::Krdtw, t)?;
+        if b_have != b_need {
+            return Err(Error::runtime(format!(
+                "krdtw batch size {b_have} != artifact batch {b_need}"
+            )));
+        }
+        if self.planes_f64.get(&batch.plane_key).map(|p| p.0) != Some(t) {
+            return Err(Error::runtime(format!(
+                "unregistered f64 plane {} for T={t}",
+                batch.plane_key
+            )));
+        }
+        let xb = self
+            .client
+            .buffer_from_host_buffer(&batch.x, &[b_have, t], None)
+            .map_err(|e| Error::runtime(format!("x upload: {e}")))?;
+        let yb = self
+            .client
+            .buffer_from_host_buffer(&batch.y, &[b_have, t], None)
+            .map_err(|e| Error::runtime(format!("y upload: {e}")))?;
+        let nub = self
+            .client
+            .buffer_from_host_buffer(&[batch.nu], &[1], None)
+            .map_err(|e| Error::runtime(format!("nu upload: {e}")))?;
+        self.executable(KernelKind::Krdtw, t)?;
+        let exe = {
+            let entry = self.manifest.find(KernelKind::Krdtw, t).unwrap();
+            self.executables.get(&entry.name).unwrap()
+        };
+        let plane = self.planes_f64.get(&batch.plane_key).unwrap();
+        let out = exe
+            .execute_b(&[&xb, &yb, &plane.1, &nub])
+            .map_err(|e| Error::runtime(format!("krdtw execute: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch: {e}")))?;
+        let tup = lit
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        tup.to_vec::<f64>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+    }
+}

@@ -1,0 +1,106 @@
+//! Occupancy-grid learning (Fig. 3-a/b/c): compute the optimal DTW
+//! alignment path for every unordered training pair and accumulate the
+//! symmetrized occupancy counts.  The N(N-1)/2 pairwise DPs are
+//! embarrassingly parallel (`pool::par_map`).
+
+use crate::data::LabeledSet;
+use crate::measures::dtw::dtw_with_path;
+use crate::pool;
+use crate::sparse::OccupancyGrid;
+
+/// Learn the occupancy grid from a training set.
+pub fn learn_occupancy_grid(train: &LabeledSet, threads: usize) -> OccupancyGrid {
+    let n = train.len();
+    let t = train.series_len();
+    assert!(t > 0, "empty series");
+    let mut grid = OccupancyGrid::new(t);
+    if n < 2 {
+        return grid;
+    }
+    // Enumerate unordered pairs (i < j).
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+        .collect();
+    let paths = pool::par_map(pairs.len(), threads, |k| {
+        let (i, j) = pairs[k];
+        let (_, path) = dtw_with_path(&train.series[i].values, &train.series[j].values);
+        path
+    });
+    for path in &paths {
+        grid.add_path(path);
+    }
+    grid
+}
+
+/// Learning-phase cost in DP cells (N(N-1)/2 full grids) — reported by
+/// the experiments so the one-off sparsification cost is visible next to
+/// the per-query savings it buys.
+pub fn learning_cost_cells(n: usize, t: usize) -> u64 {
+    (n as u64) * (n as u64 - 1) / 2 * (t as u64) * (t as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+
+    #[test]
+    fn grid_accumulates_all_pairs() {
+        let set = from_pairs(vec![
+            (0, vec![0.0, 1.0, 2.0, 3.0]),
+            (0, vec![0.0, 1.0, 2.0, 3.0]),
+            (1, vec![3.0, 2.0, 1.0, 0.0]),
+        ]);
+        let grid = learn_occupancy_grid(&set, 2);
+        assert_eq!(grid.pairs, 3); // C(3,2)
+        assert_eq!(grid.t, 4);
+        // identical series pair aligns on the diagonal
+        assert!(grid.count(0, 0) >= 1);
+        assert!(grid.count(3, 3) >= 1);
+    }
+
+    #[test]
+    fn corners_always_occupied() {
+        // boundary condition: every path contains (0,0) and (T-1,T-1)
+        let ds = synthetic::generate_scaled("CBF", 3, 10, 0).unwrap();
+        let grid = learn_occupancy_grid(&ds.train, 4);
+        let n_pairs = grid.pairs as u32;
+        assert_eq!(grid.count(0, 0), n_pairs);
+        assert_eq!(grid.count(grid.t - 1, grid.t - 1), n_pairs);
+    }
+
+    #[test]
+    fn grid_concentrates_near_diagonal_for_warped_classes() {
+        // The paper's premise: optimal paths of structured data occupy a
+        // narrow region; off-corner cells far from the diagonal stay 0.
+        let ds = synthetic::generate_scaled("CBF", 7, 14, 0).unwrap();
+        let grid = learn_occupancy_grid(&ds.train, 4);
+        let t = grid.t;
+        // a far-off-diagonal cell like (5, T-5) should be unvisited
+        assert_eq!(grid.count(5, t - 5), 0);
+        // support far below T^2
+        assert!(grid.support() < t * t / 2, "support={} t2={}", grid.support(), t * t);
+    }
+
+    #[test]
+    fn single_series_empty_grid() {
+        let set = from_pairs(vec![(0, vec![1.0, 2.0])]);
+        let grid = learn_occupancy_grid(&set, 2);
+        assert_eq!(grid.pairs, 0);
+        assert_eq!(grid.support(), 0);
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let ds = synthetic::generate_scaled("Gun-Point", 5, 10, 0).unwrap();
+        let g1 = learn_occupancy_grid(&ds.train, 1);
+        let g4 = learn_occupancy_grid(&ds.train, 4);
+        assert_eq!(g1.counts, g4.counts);
+    }
+
+    #[test]
+    fn cost_formula() {
+        assert_eq!(learning_cost_cells(10, 100), 45 * 10_000);
+    }
+}

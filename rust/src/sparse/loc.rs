@@ -1,0 +1,274 @@
+//! LOC sparse alignment-path matrix (paper §III): the thresholded
+//! occupancy grid stored as a list of (row, col, weight) coordinates
+//! sorted by increasing row then column — exactly the iteration order
+//! Algorithms 1 and 2 require.  Internally CSR for O(log nnz_row)
+//! predecessor lookups in the sparse DP.
+
+use crate::measures::BIG;
+
+/// Sentinel for "no predecessor" in the precomputed DP dependency lists.
+pub const NO_PRED: u32 = u32::MAX;
+
+/// Sparse cell matrix in CSR layout with per-cell weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LocMatrix {
+    /// Grid side (T).
+    pub t: usize,
+    /// CSR row pointers, len = t + 1.
+    pub row_ptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub cols: Vec<u32>,
+    /// Row index of every entry (parallel to `cols`) — lets the DP hot
+    /// loop run flat over entries without re-deriving the row.
+    pub rows: Vec<u32>,
+    /// Cell weights, parallel to `cols` (SP-DTW's f(p) values; all-ones
+    /// for the kernel variants).
+    pub weights: Vec<f64>,
+    /// Precomputed DP dependency indices per entry:
+    /// `[diag (r-1,c-1), up (r-1,c), left (r,c-1)]`, `NO_PRED` when the
+    /// predecessor cell is not in the LOC set.  Data-independent, built
+    /// once at construction — turns Algorithms 1 & 2 into flat loops
+    /// with three indexed loads per cell (§Perf, EXPERIMENTS.md).
+    pub preds: Vec<[u32; 3]>,
+}
+
+impl LocMatrix {
+    /// Build from (row, col, weight) triples (any order; deduplicated by
+    /// keeping the last weight).
+    pub fn from_triples(t: usize, mut triples: Vec<(usize, usize, f64)>) -> Self {
+        triples.sort_by_key(|&(r, c, _)| (r, c));
+        triples.dedup_by_key(|&mut (r, c, _)| (r, c));
+        let mut row_ptr = vec![0usize; t + 1];
+        for &(r, _, _) in &triples {
+            assert!(r < t, "row {r} out of range (t={t})");
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..t {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let cols: Vec<u32> = triples.iter().map(|&(_, c, _)| {
+            assert!(c < t, "col {c} out of range (t={t})");
+            c as u32
+        }).collect();
+        let rows: Vec<u32> = triples.iter().map(|&(r, _, _)| r as u32).collect();
+        let weights = triples.iter().map(|&(_, _, w)| w).collect();
+        let mut m = LocMatrix {
+            t,
+            row_ptr,
+            cols,
+            rows,
+            weights,
+            preds: Vec::new(),
+        };
+        m.preds = m.build_preds();
+        m
+    }
+
+    /// Predecessor index table (see field docs).  One binary search per
+    /// (entry, predecessor) at build time; O(1) loads at eval time.
+    fn build_preds(&self) -> Vec<[u32; 3]> {
+        let mut preds = vec![[NO_PRED; 3]; self.cols.len()];
+        for r in 0..self.t {
+            let (rs, re) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            for k in rs..re {
+                let c = self.cols[k] as usize;
+                let p = &mut preds[k];
+                if r > 0 {
+                    if c > 0 {
+                        if let Some(i) = self.index_of(r - 1, c - 1) {
+                            p[0] = i as u32;
+                        }
+                    }
+                    if let Some(i) = self.index_of(r - 1, c) {
+                        p[1] = i as u32;
+                    }
+                }
+                // left neighbor is simply the previous entry when adjacent
+                if c > 0 && k > rs && self.cols[k - 1] as usize == c - 1 {
+                    p[2] = (k - 1) as u32;
+                }
+            }
+        }
+        preds
+    }
+
+    /// Full grid with unit weights (SP-DTW degenerates to DTW on it).
+    pub fn full(t: usize) -> Self {
+        let mut triples = Vec::with_capacity(t * t);
+        for r in 0..t {
+            for c in 0..t {
+                triples.push((r, c, 1.0));
+            }
+        }
+        Self::from_triples(t, triples)
+    }
+
+    /// Sakoe-Chiba corridor with unit weights.
+    pub fn corridor(t: usize, band: usize) -> Self {
+        let mut triples = Vec::new();
+        for r in 0..t {
+            let lo = r.saturating_sub(band);
+            let hi = (r + band).min(t - 1);
+            for c in lo..=hi {
+                triples.push((r, c, 1.0));
+            }
+        }
+        Self::from_triples(t, triples)
+    }
+
+    /// Number of stored (admissible) cells = the paper's "# visited
+    /// cells" for SP measures (Table VI).
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Sparsity ratio = 1 - nnz / T².
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.t * self.t) as f64
+    }
+
+    /// Paper Table VI speed-up percentage vs the full grid.
+    pub fn speedup_pct(&self) -> f64 {
+        100.0 * self.sparsity()
+    }
+
+    /// Weight at (r, c), or None if the cell is sparsified out.
+    pub fn get(&self, r: usize, c: usize) -> Option<f64> {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        self.cols[s..e]
+            .binary_search(&(c as u32))
+            .ok()
+            .map(|k| self.weights[s + k])
+    }
+
+    /// Position in the value arrays of cell (r, c), if present.
+    #[inline]
+    pub fn index_of(&self, r: usize, c: usize) -> Option<usize> {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        self.cols[s..e]
+            .binary_search(&(c as u32))
+            .ok()
+            .map(|k| s + k)
+    }
+
+    /// Iterate cells in (row, col) order as (row, col, weight, flat_idx).
+    pub fn iter_cells(&self) -> impl Iterator<Item = (usize, usize, f64, usize)> + '_ {
+        (0..self.t).flat_map(move |r| {
+            (self.row_ptr[r]..self.row_ptr[r + 1]).map(move |k| {
+                (r, self.cols[k] as usize, self.weights[k], k)
+            })
+        })
+    }
+
+    /// Contains the full main diagonal? (guarantees every pair has at
+    /// least one admissible path).
+    pub fn has_diagonal(&self) -> bool {
+        (0..self.t).all(|i| self.get(i, i).is_some())
+    }
+
+    /// Symmetric as a cell set? (paper: grids are symmetrized).
+    pub fn is_symmetric_support(&self) -> bool {
+        self.iter_cells().all(|(r, c, _, _)| self.get(c, r).is_some())
+    }
+
+    /// Dense weight plane packed per anti-diagonal: row k holds cells of
+    /// anti-diagonal i + j = k indexed by i; missing cells get `BIG`
+    /// (DTW) — the exact input layout of the AOT Pallas artifacts
+    /// (`python/compile/kernels/common.py::pack_diagonals`).
+    pub fn pack_weight_plane_f32(&self) -> Vec<f32> {
+        let t = self.t;
+        let mut plane = vec![BIG as f32; (2 * t - 1) * t];
+        for (r, c, w, _) in self.iter_cells() {
+            plane[(r + c) * t + r] = w as f32;
+        }
+        plane
+    }
+
+    /// Binary mask plane (1.0 = admissible), f64 — the K_rdtw artifact
+    /// layout (weights intentionally dropped to preserve definiteness,
+    /// paper §IV).
+    pub fn pack_mask_plane_f64(&self) -> Vec<f64> {
+        let t = self.t;
+        let mut plane = vec![0.0f64; (2 * t - 1) * t];
+        for (r, c, _, _) in self.iter_cells() {
+            plane[(r + c) * t + r] = 1.0;
+        }
+        plane
+    }
+
+    /// Serialize as sorted triples (for persistence / the TCP protocol).
+    pub fn to_triples(&self) -> Vec<(usize, usize, f64)> {
+        self.iter_cells().map(|(r, c, w, _)| (r, c, w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_triples_sorted_csr() {
+        let m = LocMatrix::from_triples(3, vec![(2, 1, 0.5), (0, 0, 1.0), (2, 0, 0.25), (1, 1, 2.0)]);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.get(0, 0), Some(1.0));
+        assert_eq!(m.get(2, 0), Some(0.25));
+        assert_eq!(m.get(2, 1), Some(0.5));
+        assert_eq!(m.get(0, 1), None);
+        // row-major sorted iteration
+        let order: Vec<(usize, usize)> = m.iter_cells().map(|(r, c, _, _)| (r, c)).collect();
+        assert_eq!(order, vec![(0, 0), (1, 1), (2, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn dedup_keeps_one_entry() {
+        let m = LocMatrix::from_triples(2, vec![(0, 0, 1.0), (0, 0, 3.0), (1, 1, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn full_and_corridor_counts() {
+        assert_eq!(LocMatrix::full(5).nnz(), 25);
+        assert_eq!(LocMatrix::corridor(5, 0).nnz(), 5);
+        assert_eq!(LocMatrix::corridor(5, 1).nnz(), 13);
+        assert!(LocMatrix::corridor(5, 1).has_diagonal());
+        assert!(LocMatrix::corridor(5, 1).is_symmetric_support());
+    }
+
+    #[test]
+    fn sparsity_and_speedup() {
+        let m = LocMatrix::corridor(10, 0);
+        assert!((m.sparsity() - 0.9).abs() < 1e-12);
+        assert!((m.speedup_pct() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_plane_layout_matches_python() {
+        // mirror of python pack_diagonals: plane[k][i] = w[i, k-i]
+        let m = LocMatrix::from_triples(3, vec![(0, 0, 1.0), (1, 1, 2.0), (2, 1, 4.0)]);
+        let plane = m.pack_weight_plane_f32();
+        let t = 3;
+        let get = |k: usize, i: usize| plane[k * t + i];
+        assert_eq!(get(0, 0), 1.0); // (0,0) on diag 0
+        assert_eq!(get(2, 1), 2.0); // (1,1) on diag 2
+        assert_eq!(get(3, 2), 4.0); // (2,1) on diag 3
+        // everything else BIG
+        let big = BIG as f32;
+        assert_eq!(get(1, 0), big);
+        assert_eq!(get(4, 2), big);
+    }
+
+    #[test]
+    fn mask_plane_counts() {
+        let m = LocMatrix::corridor(4, 1);
+        let plane = m.pack_mask_plane_f64();
+        let ones = plane.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, m.nnz());
+    }
+
+    #[test]
+    fn triples_roundtrip() {
+        let m = LocMatrix::corridor(6, 2);
+        let back = LocMatrix::from_triples(6, m.to_triples());
+        assert_eq!(m, back);
+    }
+}

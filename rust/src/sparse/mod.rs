@@ -1,0 +1,203 @@
+//! Occupancy-grid sparsification (paper §III, Fig. 3): accumulate the
+//! optimal alignment paths of all training pairs into a T×T frequency
+//! grid, threshold it, and export the sparse LOC matrix that SP-DTW /
+//! SP-K_rdtw iterate over.
+
+pub mod learn;
+pub mod loc;
+
+pub use loc::LocMatrix;
+
+/// Absolute path-occupancy counts over a T×T grid (Fig. 3-c).
+#[derive(Clone, Debug)]
+pub struct OccupancyGrid {
+    pub t: usize,
+    /// Row-major absolute frequencies (symmetrized).
+    pub counts: Vec<u32>,
+    /// Number of (unordered) training pairs accumulated.
+    pub pairs: usize,
+}
+
+impl OccupancyGrid {
+    pub fn new(t: usize) -> Self {
+        OccupancyGrid {
+            t,
+            counts: vec![0; t * t],
+            pairs: 0,
+        }
+    }
+
+    /// Accumulate one optimal path, symmetrized: cell (i, j) and its
+    /// mirror (j, i) both count (the paper computes N(N-1)/2 pairs and
+    /// symmetrizes instead of running all N² orderings).
+    pub fn add_path(&mut self, path: &[(usize, usize)]) {
+        for &(i, j) in path {
+            debug_assert!(i < self.t && j < self.t);
+            self.counts[i * self.t + j] += 1;
+            if i != j {
+                self.counts[j * self.t + i] += 1;
+            }
+        }
+        self.pairs += 1;
+    }
+
+    pub fn count(&self, i: usize, j: usize) -> u32 {
+        self.counts[i * self.t + j]
+    }
+
+    pub fn max_count(&self) -> u32 {
+        self.counts.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Cells with non-zero occupancy (Fig. 3-d support).
+    pub fn support(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Normalized frequency p(m_tt') ∈ [0, 1] (Fig. 3-d): counts scaled
+    /// by the maximum cell count.
+    pub fn normalized(&self, i: usize, j: usize) -> f64 {
+        let m = self.max_count();
+        if m == 0 {
+            0.0
+        } else {
+            self.count(i, j) as f64 / m as f64
+        }
+    }
+
+    /// Apply the occupancy threshold θ (Fig. 3-e).  θ is expressed as a
+    /// *percentage of the maximum cell count* — the paper's grid search
+    /// sweeps θ over [0, 15] (Fig. 4), and a relative threshold keeps
+    /// that range meaningful for any train-set size: a cell survives iff
+    /// `count > θ/100 · max_count`.  θ = 0 keeps every visited cell.
+    pub fn threshold(&self, theta: f64) -> ThresholdedGrid {
+        ThresholdedGrid {
+            grid: self.clone(),
+            theta,
+        }
+    }
+
+    /// Absolute count a cell must exceed to survive threshold θ.
+    pub fn cutoff(&self, theta: f64) -> f64 {
+        if theta <= 0.0 {
+            0.0
+        } else {
+            theta / 100.0 * self.max_count() as f64
+        }
+    }
+}
+
+/// An occupancy grid with a threshold applied (Fig. 3-e) — convertible
+/// into the final LOC sparse matrix (Fig. 3-f).
+#[derive(Clone, Debug)]
+pub struct ThresholdedGrid {
+    pub grid: OccupancyGrid,
+    pub theta: f64,
+}
+
+impl ThresholdedGrid {
+    /// Retained-cell count.
+    pub fn nnz(&self) -> usize {
+        let cut = self.grid.cutoff(self.theta);
+        self.grid
+            .counts
+            .iter()
+            .filter(|&&c| c as f64 > cut)
+            .count()
+    }
+
+    /// Export the LOC matrix with SP-DTW weights `f(p) = p^-gamma`
+    /// (paper Eq. 9; gamma = 0 gives unit weights = plain DTW costs on
+    /// the retained cells).  The main diagonal is always retained so
+    /// every pair keeps at least one admissible path — without it, test
+    /// pairs whose optimal path strays from the training distribution
+    /// would become unreachable (Algorithm 1 returns Max_Float).
+    pub fn to_loc(&self, gamma: f64) -> LocMatrix {
+        let t = self.grid.t;
+        let max = self.grid.max_count().max(1) as f64;
+        let cut = self.grid.cutoff(self.theta);
+        let mut triples = Vec::new();
+        for i in 0..t {
+            for j in 0..t {
+                let c = self.grid.count(i, j) as f64;
+                let keep = c > cut || i == j;
+                if keep {
+                    let p = (c / max).max(1.0 / max); // avoid p = 0 on forced diagonal
+                    let w = if gamma == 0.0 { 1.0 } else { p.powf(-gamma) };
+                    triples.push((i, j, w));
+                }
+            }
+        }
+        LocMatrix::from_triples(t, triples)
+    }
+
+    /// Export with unit weights (the kernel variants drop weights to
+    /// preserve definiteness, paper §IV).
+    pub fn to_loc_mask(&self) -> LocMatrix {
+        self.to_loc(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_path_symmetrizes() {
+        let mut g = OccupancyGrid::new(4);
+        g.add_path(&[(0, 0), (1, 2), (3, 3)]);
+        assert_eq!(g.count(1, 2), 1);
+        assert_eq!(g.count(2, 1), 1);
+        assert_eq!(g.count(0, 0), 1); // diagonal not double-counted
+        assert_eq!(g.pairs, 1);
+    }
+
+    #[test]
+    fn threshold_monotone() {
+        let mut g = OccupancyGrid::new(3);
+        g.add_path(&[(0, 0), (1, 1), (2, 2)]);
+        g.add_path(&[(0, 0), (0, 1), (1, 2), (2, 2)]);
+        let n0 = g.threshold(0.0).nnz();
+        let n1 = g.threshold(1.0).nnz();
+        assert!(n1 <= n0);
+        assert!(n0 <= 9);
+    }
+
+    #[test]
+    fn loc_always_has_diagonal() {
+        let g = OccupancyGrid::new(5); // empty grid
+        let loc = g.threshold(0.0).to_loc(1.0);
+        assert!(loc.has_diagonal());
+        assert_eq!(loc.nnz(), 5);
+    }
+
+    #[test]
+    fn weights_follow_negative_power_law() {
+        let mut g = OccupancyGrid::new(2);
+        // (0,0) visited twice, (1,1) once, (0,1)+(1,0) once
+        g.add_path(&[(0, 0), (1, 1)]);
+        g.add_path(&[(0, 0), (0, 1), (1, 1)]);
+        let loc = g.threshold(0.0).to_loc(1.0);
+        let w00 = loc.get(0, 0).unwrap(); // p = 1.0 -> w = 1.0
+        let w01 = loc.get(0, 1).unwrap(); // p = 0.5 -> w = 2.0
+        assert!((w00 - 1.0).abs() < 1e-12);
+        assert!((w01 - 2.0).abs() < 1e-12);
+        // higher-frequency cells get SMALLER weights (privileged)
+        assert!(w00 < w01);
+    }
+
+    #[test]
+    fn gamma_zero_unit_weights() {
+        let mut g = OccupancyGrid::new(3);
+        g.add_path(&[(0, 0), (1, 1), (2, 2)]);
+        let loc = g.threshold(0.0).to_loc(0.0);
+        assert!(loc.iter_cells().all(|(_, _, w, _)| w == 1.0));
+    }
+
+    #[test]
+    fn support_counts_nonzero_cells() {
+        let mut g = OccupancyGrid::new(3);
+        g.add_path(&[(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(g.support(), 3);
+    }
+}

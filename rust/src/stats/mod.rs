@@ -1,0 +1,47 @@
+//! Statistical machinery for the evaluation tables: the Wilcoxon
+//! signed-rank test (Tables III and V) and mean-rank aggregation (the
+//! last rows of Tables II and IV).
+
+pub mod wilcoxon;
+
+use crate::util::mathx::avg_ranks;
+
+/// Mean rank of each method across datasets (rows = datasets, columns =
+/// methods; lower error -> better -> rank 1).  The "Mean rank" row of
+/// Tables II/IV.
+pub fn mean_ranks(rows: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rows.is_empty());
+    let m = rows[0].len();
+    let mut acc = vec![0.0; m];
+    for row in rows {
+        assert_eq!(row.len(), m, "ragged results table");
+        let r = avg_ranks(row);
+        for (a, v) in acc.iter_mut().zip(&r) {
+            *a += v;
+        }
+    }
+    for a in &mut acc {
+        *a /= rows.len() as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_ranks_basic() {
+        // method 1 always best, method 0 always worst
+        let rows = vec![vec![0.5, 0.1, 0.3], vec![0.4, 0.2, 0.3]];
+        let r = mean_ranks(&rows);
+        assert_eq!(r, vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn ties_share_rank() {
+        let rows = vec![vec![0.2, 0.2, 0.5]];
+        let r = mean_ranks(&rows);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+}

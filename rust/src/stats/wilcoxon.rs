@@ -1,0 +1,216 @@
+//! Wilcoxon signed-rank test (two-sided), the significance machinery of
+//! the paper's Tables III and V.
+//!
+//! - Exact null distribution by dynamic programming for n <= 25 zero-
+//!   excluded pairs (feasible: 2^n states collapse to rank-sum counts).
+//! - Normal approximation with tie correction and continuity correction
+//!   for larger n (n = 30 datasets in the paper).
+//! Zero differences are dropped (the standard Wilcoxon convention, also
+//! matching the paper's treatment of equal error rates).
+
+use crate::util::mathx::{avg_ranks, norm_cdf};
+
+/// Test result.
+#[derive(Clone, Debug)]
+pub struct WilcoxonResult {
+    /// Two-sided p-value.
+    pub p_value: f64,
+    /// W statistic = min(W+, W-).
+    pub w: f64,
+    /// Non-zero differences used.
+    pub n_used: usize,
+    /// Whether the exact distribution was used.
+    pub exact: bool,
+}
+
+/// Two-sided Wilcoxon signed-rank test on paired samples.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> WilcoxonResult {
+    assert_eq!(a.len(), b.len(), "paired samples must match");
+    let diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| x - y)
+        .filter(|d| d.abs() > 1e-12)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return WilcoxonResult {
+            p_value: 1.0,
+            w: 0.0,
+            n_used: 0,
+            exact: true,
+        };
+    }
+    let abs: Vec<f64> = diffs.iter().map(|d| d.abs()).collect();
+    let ranks = avg_ranks(&abs);
+    let w_plus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d > 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+    let w_minus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d < 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+    let w = w_plus.min(w_minus);
+
+    let has_ties = {
+        let mut s = abs.clone();
+        s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        s.windows(2).any(|p| (p[0] - p[1]).abs() < 1e-12)
+    };
+
+    // Exact DP only valid for integer ranks (no ties) and small n.
+    if n <= 25 && !has_ties {
+        let p = exact_p_two_sided(n, w as usize);
+        return WilcoxonResult {
+            p_value: p,
+            w,
+            n_used: n,
+            exact: true,
+        };
+    }
+
+    // Normal approximation with tie + continuity corrections.
+    let nn = n as f64;
+    let mean = nn * (nn + 1.0) / 4.0;
+    let mut var = nn * (nn + 1.0) * (2.0 * nn + 1.0) / 24.0;
+    // tie correction: subtract sum(t^3 - t)/48 over tie groups
+    {
+        let mut s = abs.clone();
+        s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let mut i = 0;
+        while i < n {
+            let mut j = i;
+            while j + 1 < n && (s[j + 1] - s[i]).abs() < 1e-12 {
+                j += 1;
+            }
+            let t = (j - i + 1) as f64;
+            if t > 1.0 {
+                var -= (t * t * t - t) / 48.0;
+            }
+            i = j + 1;
+        }
+    }
+    let sd = var.sqrt();
+    if sd <= 0.0 {
+        return WilcoxonResult {
+            p_value: 1.0,
+            w,
+            n_used: n,
+            exact: false,
+        };
+    }
+    let z = (w - mean + 0.5) / sd; // continuity correction toward the mean
+    let p = (2.0 * norm_cdf(z)).min(1.0);
+    WilcoxonResult {
+        p_value: p,
+        w,
+        n_used: n,
+        exact: false,
+    }
+}
+
+/// Exact two-sided p-value: P(W <= w_obs) * 2 under the exact null
+/// (rank-sum distribution over all 2^n sign assignments, computed by DP
+/// over achievable sums).
+fn exact_p_two_sided(n: usize, w_obs: usize) -> f64 {
+    let max_sum = n * (n + 1) / 2;
+    // counts[s] = number of subsets of {1..n} with sum s
+    let mut counts = vec![0.0f64; max_sum + 1];
+    counts[0] = 1.0;
+    for r in 1..=n {
+        for s in (r..=max_sum).rev() {
+            counts[s] += counts[s - r];
+        }
+    }
+    let total = 2.0f64.powi(n as i32);
+    // P(W+ <= w_obs) ; W = min tail, two-sided doubles it
+    let tail: f64 = counts[..=w_obs.min(max_sum)].iter().sum();
+    (2.0 * tail / total).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_samples_p_one() {
+        let a = [0.1, 0.2, 0.3];
+        let r = wilcoxon_signed_rank(&a, &a);
+        assert_eq!(r.p_value, 1.0);
+        assert_eq!(r.n_used, 0);
+    }
+
+    #[test]
+    fn textbook_exact_example() {
+        // classic example (Conover): n=8 distinct diffs, all positive
+        // => W = 0, exact two-sided p = 2/2^8 = 0.0078125
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let b = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.exact);
+        assert!((r.p_value - 2.0 / 256.0).abs() < 1e-12, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn exact_symmetric_case() {
+        // diffs +1, -2: ranks 1, 2 -> W+ = 1, W- = 2, W = 1
+        // exact: P(W+ <= 1) = (#{sum<=1} = 2)/4 -> p = 1.0
+        let a = [1.0, 0.0];
+        let b = [0.0, 2.0];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.exact);
+        assert!((r.p_value - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn approx_used_for_large_or_tied() {
+        let a: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..30).map(|i| i as f64 + 1.0).collect(); // all diffs tied
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(!r.exact);
+        assert!(r.p_value < 0.001, "uniform improvement must be significant, p={}", r.p_value);
+    }
+
+    #[test]
+    fn one_sided_dominance_is_significant() {
+        // method B better on 28/30 datasets by varying margins
+        let a: Vec<f64> = (0..30).map(|i| 0.3 + 0.001 * i as f64).collect();
+        let mut b = a.clone();
+        for (i, v) in b.iter_mut().enumerate() {
+            *v -= if i < 28 { 0.02 + 0.001 * i as f64 } else { -0.005 };
+        }
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.p_value < 0.01, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn noise_is_not_significant() {
+        // symmetric ± noise
+        let a: Vec<f64> = (0..30).map(|i| 0.3 + 0.01 * ((i * 37 % 11) as f64)).collect();
+        let b: Vec<f64> = (0..30)
+            .map(|i| 0.3 + 0.01 * (((i * 37 + 5) % 11) as f64))
+            .collect();
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.p_value > 0.05, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn symmetry_in_arguments() {
+        let a = [0.1, 0.5, 0.3, 0.9, 0.2, 0.8];
+        let b = [0.2, 0.4, 0.6, 0.5, 0.1, 0.3];
+        let r1 = wilcoxon_signed_rank(&a, &b);
+        let r2 = wilcoxon_signed_rank(&b, &a);
+        assert!((r1.p_value - r2.p_value).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_dp_total_mass() {
+        // sanity on the DP: tail at max W is 1.0 (doubled then clamped)
+        assert_eq!(exact_p_two_sided(5, 15), 1.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Meta-parameter selection (paper §V-B): every tunable knob (θ, γ, ν,
+//! the Sakoe-Chiba band, DACO's lag count) is selected on the TRAIN split
+//! only, by leave-one-out 1-NN error through a grid/line search — the
+//! protocol behind Fig. 4.
+
+use crate::classify::nn::loo_error_1nn;
+use crate::data::LabeledSet;
+use crate::measures::daco::Daco;
+use crate::measures::krdtw::{Krdtw, KrdtwDist};
+use crate::measures::sakoe_chiba::SakoeChibaDtw;
+use crate::measures::spdtw::SpDtw;
+use crate::measures::spkrdtw::{SpKrdtw, SpKrdtwDist};
+use crate::sparse::OccupancyGrid;
+
+/// One grid-search curve: (parameter value, LOO error) — Fig. 4's data.
+pub type Curve = Vec<(f64, f64)>;
+
+/// Default grids (paper: θ ∈ [0, 15]; ν and band by convention).
+pub fn theta_grid() -> Vec<f64> {
+    (0..=15).map(|v| v as f64).collect()
+}
+
+pub fn nu_grid() -> Vec<f64> {
+    vec![0.001, 0.01, 0.1, 0.5, 1.0, 5.0]
+}
+
+pub fn band_pct_grid() -> Vec<f64> {
+    vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 10.0, 12.0, 14.0, 17.0, 20.0]
+}
+
+pub fn gamma_grid() -> Vec<f64> {
+    vec![0.0, 0.25, 0.5, 1.0, 2.0]
+}
+
+pub fn lag_grid() -> Vec<usize> {
+    vec![2, 5, 10, 20, 40]
+}
+
+/// Argmin over a curve (first minimum wins, matching a left-to-right
+/// line search).
+pub fn argmin(curve: &Curve) -> (f64, f64) {
+    let mut best = (curve[0].0, curve[0].1);
+    for &(x, e) in curve {
+        if e < best.1 {
+            best = (x, e);
+        }
+    }
+    best
+}
+
+/// Argmin preferring the LAST minimum: used for θ, where ties should
+/// resolve toward the sparsest search space ("important speed-up without
+/// loss of accuracy" — larger θ at equal LOO error costs nothing and
+/// maximizes the Table-VI saving).
+pub fn argmin_prefer_last(curve: &Curve) -> (f64, f64) {
+    let mut best = (curve[0].0, curve[0].1);
+    for &(x, e) in curve {
+        if e <= best.1 {
+            best = (x, e);
+        }
+    }
+    best
+}
+
+/// θ selection for SP-DTW (Fig. 4): LOO 1-NN error on the train split
+/// for each threshold.  Returns (best θ, curve).
+pub fn tune_theta(
+    grid_counts: &OccupancyGrid,
+    train: &LabeledSet,
+    gamma: f64,
+    thetas: &[f64],
+    threads: usize,
+) -> (f64, Curve) {
+    let curve: Curve = thetas
+        .iter()
+        .map(|&theta| {
+            let loc = grid_counts.threshold(theta).to_loc(gamma);
+            let sp = SpDtw::new(loc);
+            (theta, loo_error_1nn(&sp, train, threads))
+        })
+        .collect();
+    let (best, _) = argmin_prefer_last(&curve);
+    (best, curve)
+}
+
+/// γ selection for SP-DTW at a fixed θ.
+pub fn tune_gamma(
+    grid_counts: &OccupancyGrid,
+    train: &LabeledSet,
+    theta: f64,
+    gammas: &[f64],
+    threads: usize,
+) -> (f64, Curve) {
+    let curve: Curve = gammas
+        .iter()
+        .map(|&g| {
+            let loc = grid_counts.threshold(theta).to_loc(g);
+            let sp = SpDtw::new(loc);
+            (g, loo_error_1nn(&sp, train, threads))
+        })
+        .collect();
+    let (best, _) = argmin(&curve);
+    (best, curve)
+}
+
+/// Sakoe-Chiba band width (percent of T) by LOO — the "adjusted corridor"
+/// the paper compares against (parenthesized values of Table II).
+pub fn tune_band_pct(train: &LabeledSet, pcts: &[f64], threads: usize) -> (f64, Curve) {
+    let curve: Curve = pcts
+        .iter()
+        .map(|&p| {
+            let sc = SakoeChibaDtw::new(p);
+            (p, loo_error_1nn(&sc, train, threads))
+        })
+        .collect();
+    let (best, _) = argmin(&curve);
+    (best, curve)
+}
+
+/// ν selection for K_rdtw by LOO over the normalized-kernel distance.
+pub fn tune_nu(train: &LabeledSet, nus: &[f64], band: Option<usize>, threads: usize) -> (f64, Curve) {
+    let curve: Curve = nus
+        .iter()
+        .map(|&nu| {
+            let k = match band {
+                None => Krdtw::new(nu),
+                Some(b) => Krdtw::with_band(nu, b),
+            };
+            let d = KrdtwDist::new(k);
+            (nu, loo_error_1nn(&d, train, threads))
+        })
+        .collect();
+    let (best, _) = argmin(&curve);
+    (best, curve)
+}
+
+/// ν selection for SP-K_rdtw over a fixed LOC mask.
+pub fn tune_nu_sparse(
+    grid_counts: &OccupancyGrid,
+    train: &LabeledSet,
+    theta: f64,
+    nus: &[f64],
+    threads: usize,
+) -> (f64, Curve) {
+    let loc = grid_counts.threshold(theta).to_loc_mask();
+    let loc = std::sync::Arc::new(loc);
+    let curve: Curve = nus
+        .iter()
+        .map(|&nu| {
+            let d = SpKrdtwDist::new(SpKrdtw::from_arc(loc.clone(), nu));
+            (nu, loo_error_1nn(&d, train, threads))
+        })
+        .collect();
+    let (best, _) = argmin(&curve);
+    (best, curve)
+}
+
+/// DACO lag-count selection by LOO.
+pub fn tune_daco_lags(train: &LabeledSet, lags: &[usize], threads: usize) -> (usize, Curve) {
+    let curve: Curve = lags
+        .iter()
+        .map(|&l| (l as f64, loo_error_1nn(&Daco::new(l), train, threads)))
+        .collect();
+    let (best, _) = argmin(&curve);
+    (best as usize, curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::sparse::learn::learn_occupancy_grid;
+
+    #[test]
+    fn argmin_first_minimum() {
+        let c = vec![(0.0, 0.5), (1.0, 0.2), (2.0, 0.2), (3.0, 0.4)];
+        assert_eq!(argmin(&c), (1.0, 0.2));
+    }
+
+    #[test]
+    fn argmin_prefer_last_takes_sparsest_tie() {
+        let c = vec![(0.0, 0.2), (1.0, 0.2), (2.0, 0.2), (3.0, 0.4)];
+        assert_eq!(argmin_prefer_last(&c), (2.0, 0.2));
+    }
+
+    #[test]
+    fn tune_theta_returns_grid_member_and_full_curve() {
+        let ds = synthetic::generate_scaled("CBF", 21, 12, 0).unwrap();
+        let grid = learn_occupancy_grid(&ds.train, 4);
+        let thetas = [0.0, 2.0, 5.0];
+        let (best, curve) = tune_theta(&grid, &ds.train, 1.0, &thetas, 4);
+        assert!(thetas.contains(&best));
+        assert_eq!(curve.len(), 3);
+        assert!(curve.iter().all(|&(_, e)| (0.0..=1.0).contains(&e)));
+    }
+
+    #[test]
+    fn tune_band_prefers_some_elasticity_on_warped_data() {
+        let ds = synthetic::generate_scaled("CBF", 23, 15, 0).unwrap();
+        let (best, curve) = tune_band_pct(&ds.train, &[0.0, 10.0], 4);
+        assert!(curve.len() == 2);
+        // CBF is the canonical warped dataset: some band should not hurt
+        let e0 = curve[0].1;
+        let e10 = curve[1].1;
+        assert!(e10 <= e0 + 1e-9 || best == 0.0);
+    }
+
+    #[test]
+    fn tune_nu_small_grid_runs() {
+        let ds = synthetic::generate_scaled("Gun-Point", 25, 10, 0).unwrap();
+        let (best, curve) = tune_nu(&ds.train, &[0.1, 1.0], Some(10), 4);
+        assert!([0.1, 1.0].contains(&best));
+        assert_eq!(curve.len(), 2);
+    }
+
+    #[test]
+    fn tune_daco_lags_runs() {
+        let ds = synthetic::generate_scaled("SyntheticControl", 27, 12, 0).unwrap();
+        let (best, _) = tune_daco_lags(&ds.train, &[2, 5], 4);
+        assert!([2usize, 5].contains(&best));
+    }
+}

@@ -1,0 +1,163 @@
+//! In-tree micro-benchmark harness (criterion is not in the vendored
+//! crate set).  Used by every `rust/benches/*.rs` target via
+//! `[[bench]] harness = false`, so `cargo bench` runs them unchanged.
+//!
+//! Discipline: warmup iterations, then timed samples; reports mean, σ,
+//! p50/p95 and throughput.  Samples are wall-clock per *batch* of
+//! `inner` iterations to keep timer overhead negligible for fast bodies.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::util::mathx::{mean, percentile, std_pop};
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn report_row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>10} {:>10} {:>10} {:>12}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            format!("{:.1}/s", self.per_sec()),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with fixed sample counts (deterministic duration).
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 3,
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench {
+            warmup,
+            samples,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, auto-choosing an inner batch size so one sample takes
+    /// at least ~2 ms.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // calibrate
+        let mut inner = 1usize;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt >= 2e-3 || inner >= 1 << 20 {
+                break;
+            }
+            inner = (inner * 2).max((inner as f64 * 2.5e-3 / dt.max(1e-9)) as usize);
+        }
+        for _ in 0..self.warmup {
+            for _ in 0..inner {
+                black_box(f());
+            }
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                black_box(f());
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / inner as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_s: mean(&per_iter),
+            std_s: std_pop(&per_iter),
+            p50_s: percentile(&per_iter, 50.0),
+            p95_s: percentile(&per_iter, 95.0),
+            samples: self.samples,
+            iters_per_sample: inner,
+        };
+        println!("{}", res.report_row());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>10} {:>10} {:>10} {:>12}",
+            "benchmark", "mean", "σ", "p50", "p95", "rate"
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new(1, 4);
+        let r = b.run("noop-ish", || (0..100).sum::<u64>());
+        assert!(r.mean_s >= 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates: seeded RNG, minimal JSON, math/stat helpers, and
+//! the in-tree bench + property-testing harnesses (the vendored crate set
+//! has no rand/serde/criterion/proptest — see DESIGN.md §2).
+
+pub mod bench;
+pub mod json;
+pub mod mathx;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,143 @@
+//! Property-testing harness (proptest is not in the vendored crate set).
+//!
+//! Seeded random case generation with a simple halving shrinker for
+//! numeric/vector inputs.  Each `forall_*` helper runs `N_CASES` cases;
+//! on failure it tries to shrink the input and panics with the minimal
+//! reproduction plus the seed, so failures are replayable.
+
+use crate::util::rng::Pcg64;
+
+pub const N_CASES: usize = 64;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Honor SPDTW_PROP_SEED for replaying failures.
+        let seed = std::env::var("SPDTW_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xdead_beef);
+        PropConfig {
+            cases: N_CASES,
+            seed,
+        }
+    }
+}
+
+/// Run `prop` over `cases` random f64 vectors with lengths in
+/// `[min_len, max_len]` and values in `[-scale, scale]`.
+pub fn forall_vec(
+    cfg: &PropConfig,
+    min_len: usize,
+    max_len: usize,
+    scale: f64,
+    mut prop: impl FnMut(&[f64]) -> bool,
+) {
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let len = min_len + rng.below(max_len - min_len + 1);
+        let xs: Vec<f64> = (0..len).map(|_| rng.range(-scale, scale)).collect();
+        if !prop(&xs) {
+            // shrink: halve the vector while the property still fails
+            let mut cur = xs.clone();
+            loop {
+                if cur.len() <= min_len.max(1) {
+                    break;
+                }
+                let half: Vec<f64> = cur[..cur.len() / 2].to_vec();
+                if half.len() >= min_len && !prop(&half) {
+                    cur = half;
+                } else {
+                    let tail: Vec<f64> = cur[cur.len() / 2..].to_vec();
+                    if tail.len() >= min_len && !prop(&tail) {
+                        cur = tail;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {}):\n  minimal input ({} elems): {:?}",
+                cfg.seed,
+                cur.len(),
+                &cur[..cur.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Run `prop` over `cases` random *pairs* of equal-length vectors.
+pub fn forall_pairs(
+    cfg: &PropConfig,
+    min_len: usize,
+    max_len: usize,
+    scale: f64,
+    mut prop: impl FnMut(&[f64], &[f64]) -> bool,
+) {
+    let mut rng = Pcg64::new(cfg.seed ^ 0x5bd1_e995);
+    for case in 0..cfg.cases {
+        let len = min_len + rng.below(max_len - min_len + 1);
+        let xs: Vec<f64> = (0..len).map(|_| rng.range(-scale, scale)).collect();
+        let ys: Vec<f64> = (0..len).map(|_| rng.range(-scale, scale)).collect();
+        if !prop(&xs, &ys) {
+            panic!(
+                "pair property failed (case {case}, seed {}): len={len}\n  x={:?}\n  y={:?}",
+                cfg.seed,
+                &xs[..len.min(24)],
+                &ys[..len.min(24)]
+            );
+        }
+    }
+}
+
+/// Run `prop` over random usize tuples (for batching/queueing invariants).
+pub fn forall_usizes(
+    cfg: &PropConfig,
+    ranges: &[(usize, usize)],
+    mut prop: impl FnMut(&[usize]) -> bool,
+) {
+    let mut rng = Pcg64::new(cfg.seed ^ 0xc2b2_ae35);
+    for case in 0..cfg.cases {
+        let vals: Vec<usize> = ranges
+            .iter()
+            .map(|&(lo, hi)| lo + rng.below(hi - lo + 1))
+            .collect();
+        if !prop(&vals) {
+            panic!(
+                "usize property failed (case {case}, seed {}): {vals:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_vec(&PropConfig::default(), 1, 10, 5.0, |xs| {
+            count += 1;
+            xs.len() <= 10
+        });
+        assert_eq!(count, N_CASES);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall_vec(&PropConfig::default(), 1, 16, 5.0, |xs| xs.len() < 8);
+    }
+
+    #[test]
+    fn pair_lengths_match() {
+        forall_pairs(&PropConfig::default(), 2, 12, 1.0, |x, y| x.len() == y.len());
+    }
+}

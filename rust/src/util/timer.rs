@@ -1,0 +1,63 @@
+//! Tiny wall-clock timing helpers used by the bench harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of a closure, returning (result, dt).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A stopwatch accumulating named segments (coarse profiling in examples).
+#[derive(Default)]
+pub struct Stopwatch {
+    segments: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` and record its duration under `name`.
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.segments.push((name.to_string(), dt));
+        out
+    }
+
+    pub fn segments(&self) -> &[(String, Duration)] {
+        &self.segments
+    }
+
+    /// Render a small aligned report.
+    pub fn report(&self) -> String {
+        let total: Duration = self.segments.iter().map(|(_, d)| *d).sum();
+        let mut out = String::new();
+        for (name, d) in &self.segments {
+            let pct = if total.as_nanos() > 0 {
+                100.0 * d.as_secs_f64() / total.as_secs_f64()
+            } else {
+                0.0
+            };
+            out.push_str(&format!("{name:<28} {:>10.3} ms  {pct:>5.1}%\n", d.as_secs_f64() * 1e3));
+        }
+        out.push_str(&format!("{:<28} {:>10.3} ms\n", "TOTAL", total.as_secs_f64() * 1e3));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        let v = sw.measure("work", || 2 + 2);
+        assert_eq!(v, 4);
+        assert_eq!(sw.segments().len(), 1);
+        assert!(sw.report().contains("work"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Grid visualization (paper Figs. 5-8): PGM/PPM image writers and ASCII
+//! heatmaps of occupancy grids / corridors / thresholded LOC matrices.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+use crate::sparse::{LocMatrix, OccupancyGrid};
+
+/// A dense grayscale intensity grid in [0, 1], row-major.
+#[derive(Clone, Debug)]
+pub struct Heatmap {
+    pub t: usize,
+    pub values: Vec<f64>,
+}
+
+impl Heatmap {
+    pub fn from_occupancy(grid: &OccupancyGrid) -> Heatmap {
+        let m = grid.max_count().max(1) as f64;
+        Heatmap {
+            t: grid.t,
+            values: grid.counts.iter().map(|&c| c as f64 / m).collect(),
+        }
+    }
+
+    pub fn from_loc(loc: &LocMatrix) -> Heatmap {
+        let mut values = vec![0.0; loc.t * loc.t];
+        let wmax = loc
+            .weights
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        for (r, c, w, _) in loc.iter_cells() {
+            values[r * loc.t + c] = (w / wmax).clamp(0.0, 1.0);
+        }
+        Heatmap { t: loc.t, values }
+    }
+
+    /// Binary support map of a LOC matrix (cells in P = 1).
+    pub fn from_loc_support(loc: &LocMatrix) -> Heatmap {
+        let mut values = vec![0.0; loc.t * loc.t];
+        for (r, c, _, _) in loc.iter_cells() {
+            values[r * loc.t + c] = 1.0;
+        }
+        Heatmap { t: loc.t, values }
+    }
+
+    /// Sakoe-Chiba corridor map for comparison panels.
+    pub fn corridor(t: usize, band: usize) -> Heatmap {
+        let mut values = vec![0.0; t * t];
+        for i in 0..t {
+            let lo = i.saturating_sub(band);
+            let hi = (i + band).min(t - 1);
+            for j in lo..=hi {
+                values[i * t + j] = 1.0;
+            }
+        }
+        Heatmap { t, values }
+    }
+
+    /// Write a binary PGM (grayscale) image, optionally downsampled to at
+    /// most `max_px` pixels per side.
+    pub fn write_pgm(&self, path: &Path, max_px: usize) -> Result<()> {
+        let (side, img) = self.downsample(max_px);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        write!(w, "P5\n{side} {side}\n255\n")?;
+        let bytes: Vec<u8> = img
+            .iter()
+            .map(|&v| (255.0 * (1.0 - v.clamp(0.0, 1.0))) as u8) // dark = occupied
+            .collect();
+        w.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Write a color PPM using a blue→yellow→red colormap.
+    pub fn write_ppm(&self, path: &Path, max_px: usize) -> Result<()> {
+        let (side, img) = self.downsample(max_px);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        write!(w, "P6\n{side} {side}\n255\n")?;
+        let mut bytes = Vec::with_capacity(side * side * 3);
+        for &v in &img {
+            let (r, g, b) = colormap(v.clamp(0.0, 1.0));
+            bytes.extend_from_slice(&[r, g, b]);
+        }
+        w.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// ASCII rendering (for terminals / EXPERIMENTS.md), `width` chars.
+    pub fn ascii(&self, width: usize) -> String {
+        let (side, img) = self.downsample(width);
+        let ramp: &[u8] = b" .:-=+*#%@";
+        let mut out = String::with_capacity(side * (side + 1));
+        for r in 0..side {
+            for c in 0..side {
+                let v = img[r * side + c].clamp(0.0, 1.0);
+                let idx = ((v * (ramp.len() - 1) as f64).round()) as usize;
+                out.push(ramp[idx] as char);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Box-average downsample to at most `max_px` per side.
+    fn downsample(&self, max_px: usize) -> (usize, Vec<f64>) {
+        let t = self.t;
+        if t <= max_px {
+            return (t, self.values.clone());
+        }
+        let side = max_px.max(1);
+        let mut out = vec![0.0f64; side * side];
+        let scale = t as f64 / side as f64;
+        for r in 0..side {
+            for c in 0..side {
+                let r0 = (r as f64 * scale) as usize;
+                let r1 = (((r + 1) as f64 * scale) as usize).min(t).max(r0 + 1);
+                let c0 = (c as f64 * scale) as usize;
+                let c1 = (((c + 1) as f64 * scale) as usize).min(t).max(c0 + 1);
+                let mut acc = 0.0;
+                for i in r0..r1 {
+                    for j in c0..c1 {
+                        acc += self.values[i * t + j];
+                    }
+                }
+                out[r * side + c] = acc / ((r1 - r0) * (c1 - c0)) as f64;
+            }
+        }
+        (side, out)
+    }
+}
+
+/// Blue (cold) → yellow → red (hot) colormap.
+fn colormap(v: f64) -> (u8, u8, u8) {
+    if v <= 0.0 {
+        return (250, 250, 252); // near-white background
+    }
+    let (r, g, b) = if v < 0.5 {
+        let u = v / 0.5;
+        (u, u, 1.0 - u) // blue -> yellow
+    } else {
+        let u = (v - 0.5) / 0.5;
+        (1.0, 1.0 - u, 0.0) // yellow -> red
+    };
+    ((r * 255.0) as u8, (g * 255.0) as u8, (b * 255.0) as u8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_has_expected_shape() {
+        let hm = Heatmap::corridor(20, 2);
+        let a = hm.ascii(20);
+        assert_eq!(a.lines().count(), 20);
+        assert!(a.contains('@')); // band cells saturate the ramp
+        assert!(a.contains(' ')); // off-band cells empty
+    }
+
+    #[test]
+    fn downsample_bounds() {
+        let hm = Heatmap::corridor(100, 5);
+        let (side, img) = hm.downsample(32);
+        assert_eq!(side, 32);
+        assert_eq!(img.len(), 32 * 32);
+        assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn pgm_ppm_written() {
+        let dir = std::env::temp_dir().join(format!("spdtw_viz_{}", std::process::id()));
+        let hm = Heatmap::corridor(30, 3);
+        let pgm = dir.join("x.pgm");
+        let ppm = dir.join("x.ppm");
+        hm.write_pgm(&pgm, 16).unwrap();
+        hm.write_ppm(&ppm, 16).unwrap();
+        let head = std::fs::read(&pgm).unwrap();
+        assert_eq!(&head[..2], b"P5");
+        let head = std::fs::read(&ppm).unwrap();
+        assert_eq!(&head[..2], b"P6");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_loc_support_binary() {
+        let loc = crate::sparse::LocMatrix::corridor(8, 1);
+        let hm = Heatmap::from_loc_support(&loc);
+        let ones = hm.values.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, loc.nnz());
+    }
+}

@@ -1,0 +1,210 @@
+//! Coordinator integration: routing, batching, backend parity, metrics,
+//! TCP server — with and without the PJRT engine.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::request::Backend;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::data::TimeSeries;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::{KernelMeasure, Measure};
+use spdtw::runtime::PjrtRuntime;
+use spdtw::sparse::LocMatrix;
+use spdtw::util::json::Json;
+use spdtw::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_series(rng: &mut Pcg64, t: usize) -> TimeSeries {
+    TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn pjrt_backend_parity_spdtw() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        prefer_pjrt: true,
+        flush_us: 500,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, Some(rt.handle())).unwrap();
+    let t = 60;
+    let loc = LocMatrix::corridor(t, 8);
+    let key = coord.register_grid(loc.clone()).unwrap();
+    let mut rng = Pcg64::new(5);
+    let pairs: Vec<(TimeSeries, TimeSeries)> = (0..50)
+        .map(|_| (rand_series(&mut rng, t), rand_series(&mut rng, t)))
+        .collect();
+    let tickets: Vec<_> = pairs
+        .iter()
+        .map(|(x, y)| coord.submit_spdtw(key, x, y).unwrap())
+        .collect();
+    coord.flush();
+    let sp = SpDtw::new(loc);
+    let mut pjrt_seen = 0;
+    for (ticket, (x, y)) in tickets.into_iter().zip(&pairs) {
+        let r = ticket.wait().unwrap();
+        if r.backend == Backend::Pjrt {
+            pjrt_seen += 1;
+        }
+        let native = sp.dist(x, y).value;
+        let rel = (r.value - native).abs() / native.max(1e-9);
+        assert!(rel < 1e-3, "pjrt={} native={native}", r.value);
+    }
+    assert!(pjrt_seen > 0, "expected pjrt routing with prefer_pjrt");
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 50);
+    assert!(snap.batches >= 1);
+}
+
+#[test]
+fn pjrt_backend_parity_spkrdtw() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        prefer_pjrt: true,
+        flush_us: 500,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, Some(rt.handle())).unwrap();
+    let t = 60;
+    let nu = 0.3;
+    let loc = LocMatrix::corridor(t, 10);
+    let key = coord.register_grid(loc.clone()).unwrap();
+    let mut rng = Pcg64::new(6);
+    let pairs: Vec<(TimeSeries, TimeSeries)> = (0..40)
+        .map(|_| (rand_series(&mut rng, t), rand_series(&mut rng, t)))
+        .collect();
+    let tickets: Vec<_> = pairs
+        .iter()
+        .map(|(x, y)| coord.submit_spkrdtw(key, nu, x, y).unwrap())
+        .collect();
+    coord.flush();
+    let spk = SpKrdtw::new(loc, nu);
+    for (ticket, (x, y)) in tickets.into_iter().zip(&pairs) {
+        let r = ticket.wait().unwrap();
+        let native = spk.log_k(x, y).value;
+        assert!(
+            (r.value - native).abs() < 1e-8,
+            "pjrt={} native={native}",
+            r.value
+        );
+    }
+}
+
+#[test]
+fn unknown_length_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        prefer_pjrt: true,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, Some(rt.handle())).unwrap();
+    let t = 73; // no artifact bucket
+    let key = coord.register_grid(LocMatrix::corridor(t, 3)).unwrap();
+    let mut rng = Pcg64::new(7);
+    let x = rand_series(&mut rng, t);
+    let y = rand_series(&mut rng, t);
+    let r = coord.submit_spdtw(key, &x, &y).unwrap().wait().unwrap();
+    assert_eq!(r.backend, Backend::Native);
+    coord.wait_native_idle();
+    assert!(coord.metrics().native_jobs >= 1);
+}
+
+#[test]
+fn partial_batches_flush_by_timeout() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        prefer_pjrt: true,
+        flush_us: 1_000, // 1ms
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, Some(rt.handle())).unwrap();
+    let t = 60;
+    let key = coord.register_grid(LocMatrix::full(t)).unwrap();
+    let mut rng = Pcg64::new(8);
+    let x = rand_series(&mut rng, t);
+    let y = rand_series(&mut rng, t);
+    // single job (batch of 32 never fills) — must still complete
+    let ticket = coord.submit_spdtw(key, &x, &y).unwrap();
+    let r = ticket.wait().unwrap();
+    assert_eq!(r.backend, Backend::Pjrt);
+    let snap = coord.metrics();
+    assert!(snap.padded_slots >= 31, "padded={}", snap.padded_slots);
+    assert!(snap.timeout_flushes >= 1);
+}
+
+#[test]
+fn server_over_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        prefer_pjrt: true,
+        flush_us: 500,
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg, Some(rt.handle())).unwrap());
+    let mut server = Server::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let reg = client
+        .call(&Json::parse(r#"{"op":"register_grid","t":60,"band":5}"#).unwrap())
+        .unwrap();
+    assert_eq!(reg.get("ok"), Some(&Json::Bool(true)));
+    let gid = reg.req_usize("grid").unwrap();
+
+    let mut rng = Pcg64::new(9);
+    let x: Vec<String> = (0..60).map(|_| format!("{:.4}", rng.normal())).collect();
+    let y: Vec<String> = (0..60).map(|_| format!("{:.4}", rng.normal())).collect();
+    let req = format!(
+        r#"{{"op":"spdtw","grid":{gid},"x":[{}],"y":[{}]}}"#,
+        x.join(","),
+        y.join(",")
+    );
+    let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(resp.req_str("backend").unwrap(), "pjrt");
+    assert!(resp.req_f64("value").unwrap() > 0.0);
+    server.stop();
+}
+
+#[test]
+fn native_only_coordinator_handles_concurrent_load() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), None).unwrap();
+    let t = 40;
+    let key = coord.register_grid(LocMatrix::corridor(t, 5)).unwrap();
+    let mut rng = Pcg64::new(10);
+    let tickets: Vec<_> = (0..200)
+        .map(|_| {
+            let x = rand_series(&mut rng, t);
+            let y = rand_series(&mut rng, t);
+            coord.submit_spdtw(key, &x, &y).unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.value.is_finite());
+        ok += 1;
+    }
+    assert_eq!(ok, 200);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 200);
+    assert_eq!(snap.failed, 0);
+}

@@ -1,0 +1,134 @@
+//! Cross-measure integration: the paper's qualitative claims verified on
+//! the synthetic archive (elasticity helps on warped data, sparsification
+//! preserves accuracy while cutting cells, CORR == Ed, etc).
+
+use spdtw::classify::gram::{cross_gram, gram_1nn_error};
+use spdtw::classify::nn::classify_1nn;
+use spdtw::data::synthetic;
+use spdtw::measures::corr::CorrDist;
+use spdtw::measures::dtw::Dtw;
+use spdtw::measures::euclidean::Euclidean;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::sparse::learn::learn_occupancy_grid;
+
+const THREADS: usize = 8;
+
+#[test]
+fn dtw_beats_euclid_on_cbf() {
+    // CBF is the canonical time-warped dataset: elastic matching must
+    // win (this is the premise of the whole paper).
+    let ds = synthetic::generate_scaled("CBF", 42, 24, 60).unwrap();
+    let ed = classify_1nn(&Euclidean, &ds.train, &ds.test, THREADS).error_rate;
+    let dtw = classify_1nn(&Dtw, &ds.train, &ds.test, THREADS).error_rate;
+    assert!(
+        dtw <= ed,
+        "DTW ({dtw}) should not lose to Ed ({ed}) on warped data"
+    );
+}
+
+#[test]
+fn corr_identical_to_ed_on_archive() {
+    // Appendix A: z-normalized => identical 1-NN decisions.
+    for name in ["CBF", "Gun-Point", "Wine"] {
+        let ds = synthetic::generate_scaled(name, 7, 16, 24).unwrap();
+        let ed = classify_1nn(&Euclidean, &ds.train, &ds.test, THREADS).error_rate;
+        let corr = classify_1nn(&CorrDist, &ds.train, &ds.test, THREADS).error_rate;
+        assert_eq!(ed, corr, "{name}");
+    }
+}
+
+#[test]
+fn spdtw_accuracy_close_to_dtw_with_far_fewer_cells() {
+    // The headline claim: big speed-up (fewer visited cells) without
+    // losing accuracy.
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 36, 48).unwrap();
+    let t = ds.series_len();
+    let grid = learn_occupancy_grid(&ds.train, THREADS);
+    let loc = grid.threshold(5.0).to_loc(1.0);
+    let nnz = loc.nnz() as f64;
+    let full = (t * t) as f64;
+    assert!(
+        nnz < 0.6 * full,
+        "sparsification too weak: {nnz} of {full} cells"
+    );
+    let sp = SpDtw::new(loc);
+    let e_sp = classify_1nn(&sp, &ds.train, &ds.test, THREADS).error_rate;
+    let e_dtw = classify_1nn(&Dtw, &ds.train, &ds.test, THREADS).error_rate;
+    assert!(
+        e_sp <= e_dtw + 0.12,
+        "SP-DTW error {e_sp} much worse than DTW {e_dtw}"
+    );
+}
+
+#[test]
+fn spkrdtw_matches_krdtw_accuracy_on_sparse_grid() {
+    let ds = synthetic::generate_scaled("CBF", 11, 18, 36).unwrap();
+    let grid = learn_occupancy_grid(&ds.train, THREADS);
+    let loc = grid.threshold(0.0).to_loc_mask();
+    let nu = 0.1;
+    let full = cross_gram(&Krdtw::new(nu), &ds.test, &ds.train, THREADS);
+    let e_full = gram_1nn_error(&full, &ds.test, &ds.train);
+    let sparse = cross_gram(&SpKrdtw::new(loc, nu), &ds.test, &ds.train, THREADS);
+    let e_sparse = gram_1nn_error(&sparse, &ds.test, &ds.train);
+    assert!(
+        e_sparse <= e_full + 0.12,
+        "SP-Krdtw {e_sparse} vs Krdtw {e_full}"
+    );
+}
+
+#[test]
+fn learned_grid_beats_equal_budget_corridor_on_shifted_data() {
+    // The paper's key comparison (Tables II/III): a learned, asymmetric
+    // search space outperforms a symmetric corridor of similar size on
+    // data whose warping is structured.  CBF bumps shift right, so the
+    // occupancy mass is off-diagonal in a structured way.
+    let ds = synthetic::generate_scaled("CBF", 13, 30, 90).unwrap();
+    let t = ds.series_len();
+    let grid = learn_occupancy_grid(&ds.train, THREADS);
+    let loc = grid.threshold(1.0).to_loc(1.0);
+    let nnz = loc.nnz();
+    // corridor with the same cell budget
+    let band = (((nnz as f64) / t as f64 - 1.0) / 2.0).round().max(0.0) as usize;
+    let sp = SpDtw::new(loc);
+    let sc = SakoeChibaDtw::new(100.0 * band as f64 / t as f64);
+    let e_sp = classify_1nn(&sp, &ds.train, &ds.test, THREADS);
+    let e_sc = classify_1nn(&sc, &ds.train, &ds.test, THREADS);
+    // same order of visited cells...
+    let ratio = e_sp.visited_cells as f64 / e_sc.visited_cells.max(1) as f64;
+    assert!(ratio < 2.0, "cell budgets differ too much: {ratio}");
+    // ...and the learned grid should not be notably worse
+    assert!(
+        e_sp.error_rate <= e_sc.error_rate + 0.10,
+        "SP-DTW {} vs DTW_sc {}",
+        e_sp.error_rate,
+        e_sc.error_rate
+    );
+}
+
+#[test]
+fn gamma_zero_spdtw_on_full_grid_equals_dtw_classification() {
+    let ds = synthetic::generate_scaled("Gun-Point", 5, 14, 20).unwrap();
+    let t = ds.series_len();
+    let sp = SpDtw::new(spdtw::sparse::LocMatrix::full(t));
+    let a = classify_1nn(&sp, &ds.train, &ds.test, THREADS);
+    let b = classify_1nn(&Dtw, &ds.train, &ds.test, THREADS);
+    assert_eq!(a.error_rate, b.error_rate);
+    assert_eq!(a.visited_cells, b.visited_cells);
+}
+
+#[test]
+fn speedup_grows_with_threshold_until_accuracy_collapses() {
+    // ablation shape: cells monotonically drop with θ; error stays flat
+    // then degrades — the trade-off Fig. 4 tunes.
+    let ds = synthetic::generate_scaled("SyntheticControl", 21, 24, 30).unwrap();
+    let grid = learn_occupancy_grid(&ds.train, THREADS);
+    let mut last_cells = usize::MAX;
+    for theta in [0.0, 1.0, 3.0, 8.0] {
+        let loc = grid.threshold(theta).to_loc(1.0);
+        assert!(loc.nnz() <= last_cells, "cells must shrink with theta");
+        last_cells = loc.nnz();
+    }
+}

@@ -1,0 +1,83 @@
+//! End-to-end pipeline integration: the experiment runner over a small
+//! dataset slice, report writing, Fig-panels, config round-trips.
+
+use spdtw::config::ExperimentConfig;
+use spdtw::experiments::{self, runner};
+
+fn cfg(tag: &str, datasets: &[&str]) -> ExperimentConfig {
+    ExperimentConfig {
+        max_train: 10,
+        max_test: 8,
+        threads: 8,
+        datasets: datasets.iter().map(|s| s.to_string()).collect(),
+        out_dir: std::env::temp_dir().join(format!("spdtw_pipe_{tag}_{}", std::process::id())),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn experiment_all_on_tiny_slice() {
+    let cfg = cfg("all", &["CBF", "SyntheticControl"]);
+    experiments::run("all", &cfg).unwrap();
+    for f in [
+        "table1.md",
+        "table2.md",
+        "table2.json",
+        "table3.md",
+        "table4.md",
+        "table5.md",
+        "table6.md",
+        "fig4.md",
+    ] {
+        assert!(cfg.out_dir.join(f).exists(), "{f} missing");
+    }
+    for fig in ["fig5", "fig6", "fig7", "fig8"] {
+        assert!(cfg.out_dir.join(fig).join("panels.md").exists(), "{fig}");
+    }
+    // table2.md has one row per dataset + mean rank
+    let t2 = std::fs::read_to_string(cfg.out_dir.join("table2.md")).unwrap();
+    assert!(t2.contains("CBF") && t2.contains("SyntheticControl") && t2.contains("Mean rank"));
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn runner_is_deterministic_given_seed() {
+    let c = cfg("det", &["Gun-Point"]);
+    let a = runner::evaluate_dataset(&c, "Gun-Point", false).unwrap();
+    let b = runner::evaluate_dataset(&c, "Gun-Point", false).unwrap();
+    assert_eq!(a.err_1nn, b.err_1nn);
+    assert_eq!(a.theta, b.theta);
+    assert_eq!(a.cells, b.cells);
+}
+
+#[test]
+fn different_seeds_change_data_not_structure() {
+    let mut c1 = cfg("seed1", &["CBF"]);
+    c1.seed = 1;
+    let mut c2 = cfg("seed2", &["CBF"]);
+    c2.seed = 2;
+    let a = runner::evaluate_dataset(&c1, "CBF", false).unwrap();
+    let b = runner::evaluate_dataset(&c2, "CBF", false).unwrap();
+    assert_eq!(a.t, b.t);
+    assert_eq!(a.n_train, b.n_train);
+    // columns present either way
+    assert_eq!(
+        a.err_1nn.keys().collect::<Vec<_>>(),
+        b.err_1nn.keys().collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn table6_shape_holds_on_slice() {
+    // SP methods must report fewer cells than full DTW on every dataset
+    // (the paper's average speed-up claim, scaled down).
+    let c = cfg("t6", &["CBF", "SyntheticControl", "Gun-Point"]);
+    for name in ["CBF", "SyntheticControl", "Gun-Point"] {
+        let ev = runner::evaluate_dataset(&c, name, false).unwrap();
+        let full = ev.cells["DTW"];
+        assert!(ev.cells["SP-DTW"] < full, "{name}: SP-DTW not sparser");
+        assert!(ev.cells["SP-Krdtw"] < full, "{name}: SP-Krdtw not sparser");
+        let speedup = 100.0 * (1.0 - ev.cells["SP-DTW"] as f64 / full as f64);
+        assert!(speedup > 10.0, "{name}: speed-up only {speedup:.1}%");
+    }
+}

@@ -1,0 +1,237 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! verify numeric parity with the native Rust DPs.  This is the proof
+//! that all three layers (Pallas kernel -> JAX graph -> HLO text ->
+//! PJRT -> Rust) compose.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use std::path::PathBuf;
+
+use spdtw::data::synthetic;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::{BIG_THRESH, NEG_THRESH};
+use spdtw::runtime::{DtwBatch, KrdtwBatch, PjrtRuntime};
+use spdtw::sparse::LocMatrix;
+use spdtw::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_batch(rng: &mut Pcg64, b: usize, t: usize) -> (Vec<f64>, Vec<f64>) {
+    let x: Vec<f64> = (0..b * t).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..b * t).map(|_| rng.normal()).collect();
+    (x, y)
+}
+
+#[test]
+fn dtw_artifact_matches_native_full_grid() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let h = rt.handle();
+    let info = h.info().unwrap();
+    assert!(info.platform.to_lowercase().contains("cpu") || !info.platform.is_empty());
+
+    let t = 60;
+    let b = info.dtw_batch(t).expect("T=60 dtw bucket");
+    let mut rng = Pcg64::new(1);
+    let (x, y) = rand_batch(&mut rng, b, t);
+
+    let loc = LocMatrix::full(t);
+    h.register_plane_f32(100, t, loc.pack_weight_plane_f32()).unwrap();
+    let out = h
+        .run_dtw(DtwBatch {
+            t,
+            x: x.iter().map(|&v| v as f32).collect(),
+            y: y.iter().map(|&v| v as f32).collect(),
+            plane_key: 100,
+        })
+        .unwrap();
+    assert_eq!(out.len(), b);
+
+    let sp = SpDtw::new(loc);
+    for i in 0..b {
+        let native = sp.eval(&x[i * t..(i + 1) * t], &y[i * t..(i + 1) * t]).value;
+        let got = out[i] as f64;
+        let rel = (got - native).abs() / native.max(1e-6);
+        assert!(rel < 1e-3, "pair {i}: pjrt={got} native={native}");
+    }
+}
+
+#[test]
+fn dtw_artifact_matches_native_sparse_grid() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let h = rt.handle();
+    let t = 128;
+    let b = h.info().unwrap().dtw_batch(t).expect("T=128 bucket");
+    let mut rng = Pcg64::new(2);
+    let (x, y) = rand_batch(&mut rng, b, t);
+
+    // corridor + varying weights (SP-DTW shape)
+    let mut triples: Vec<(usize, usize, f64)> = Vec::new();
+    for i in 0..t {
+        for j in i.saturating_sub(4)..=(i + 4).min(t - 1) {
+            triples.push((i, j, 1.0 + ((i + j) % 3) as f64));
+        }
+    }
+    let loc = LocMatrix::from_triples(t, triples);
+    h.register_plane_f32(7, t, loc.pack_weight_plane_f32()).unwrap();
+    let out = h
+        .run_dtw(DtwBatch {
+            t,
+            x: x.iter().map(|&v| v as f32).collect(),
+            y: y.iter().map(|&v| v as f32).collect(),
+            plane_key: 7,
+        })
+        .unwrap();
+    let sp = SpDtw::new(loc);
+    for i in 0..b {
+        let native = sp.eval(&x[i * t..(i + 1) * t], &y[i * t..(i + 1) * t]).value;
+        let got = out[i] as f64;
+        if native >= BIG_THRESH {
+            assert!(got >= BIG_THRESH / 10.0);
+        } else {
+            let rel = (got - native).abs() / native.max(1e-6);
+            assert!(rel < 1e-3, "pair {i}: pjrt={got} native={native}");
+        }
+    }
+}
+
+#[test]
+fn krdtw_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let h = rt.handle();
+    let t = 60;
+    let b = h.info().unwrap().krdtw_batch(t).expect("krdtw T=60 bucket");
+    let mut rng = Pcg64::new(3);
+    let (x, y) = rand_batch(&mut rng, b, t);
+    let nu = 0.5;
+
+    // full mask == plain Krdtw
+    let loc = LocMatrix::full(t);
+    h.register_plane_f64(200, t, loc.pack_mask_plane_f64()).unwrap();
+    let out = h
+        .run_krdtw(KrdtwBatch {
+            t,
+            x: x.clone(),
+            y: y.clone(),
+            plane_key: 200,
+            nu,
+        })
+        .unwrap();
+    let native = Krdtw::new(nu);
+    for i in 0..b {
+        let exp = native
+            .log_kernel(&x[i * t..(i + 1) * t], &y[i * t..(i + 1) * t])
+            .value;
+        assert!(
+            (out[i] - exp).abs() < 1e-8,
+            "pair {i}: pjrt={} native={exp}",
+            out[i]
+        );
+    }
+
+    // sparse mask == SpKrdtw
+    let sparse = LocMatrix::corridor(t, 6);
+    h.register_plane_f64(201, t, sparse.pack_mask_plane_f64()).unwrap();
+    let out = h
+        .run_krdtw(KrdtwBatch {
+            t,
+            x: x.clone(),
+            y: y.clone(),
+            plane_key: 201,
+            nu,
+        })
+        .unwrap();
+    let spk = SpKrdtw::new(sparse, nu);
+    for i in 0..b {
+        let exp = spk
+            .log_kernel(&x[i * t..(i + 1) * t], &y[i * t..(i + 1) * t])
+            .value;
+        if exp <= NEG_THRESH {
+            assert!(out[i] <= NEG_THRESH);
+        } else {
+            assert!((out[i] - exp).abs() < 1e-8, "pair {i}");
+        }
+    }
+}
+
+#[test]
+fn errors_are_reported_not_panicked() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let h = rt.handle();
+    // unregistered plane
+    let err = h
+        .run_dtw(DtwBatch {
+            t: 60,
+            x: vec![0.0; 32 * 60],
+            y: vec![0.0; 32 * 60],
+            plane_key: 999,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("unregistered"), "{err}");
+    // unknown length bucket
+    let err = h
+        .run_dtw(DtwBatch {
+            t: 61,
+            x: vec![0.0; 32 * 61],
+            y: vec![0.0; 32 * 61],
+            plane_key: 999,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("no dtw artifact"), "{err}");
+    // wrong batch size
+    let loc = LocMatrix::full(60);
+    h.register_plane_f32(1, 60, loc.pack_weight_plane_f32()).unwrap();
+    let err = h
+        .run_dtw(DtwBatch {
+            t: 60,
+            x: vec![0.0; 5 * 60],
+            y: vec![0.0; 5 * 60],
+            plane_key: 1,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("batch"), "{err}");
+}
+
+#[test]
+fn end_to_end_identical_series_zero_distance() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::start(&dir).unwrap();
+    let h = rt.handle();
+    let t = 60;
+    let b = h.info().unwrap().dtw_batch(t).unwrap();
+    let ds = synthetic::generate_scaled("SyntheticControl", 4, b, 1).unwrap();
+    let x: Vec<f32> = ds
+        .train
+        .series
+        .iter()
+        .cycle()
+        .take(b)
+        .flat_map(|s| s.values.iter().map(|&v| v as f32))
+        .collect();
+    let loc = LocMatrix::full(t);
+    h.register_plane_f32(3, t, loc.pack_weight_plane_f32()).unwrap();
+    let out = h
+        .run_dtw(DtwBatch {
+            t,
+            x: x.clone(),
+            y: x,
+            plane_key: 3,
+        })
+        .unwrap();
+    for v in out {
+        assert!(v.abs() < 1e-4, "self-distance {v}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Property-based invariants (in-tree harness, `util::prop`) over the
+//! measures, the sparsification pipeline and the coordinator.
+
+use std::sync::Arc;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::Coordinator;
+use spdtw::data::TimeSeries;
+use spdtw::measures::dtw::{dtw_banded, dtw_with_path, is_valid_path};
+use spdtw::measures::euclidean::Euclidean;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::sparse::{LocMatrix, OccupancyGrid};
+use spdtw::util::prop::{forall_pairs, forall_usizes, forall_vec, PropConfig};
+
+#[test]
+fn prop_dtw_nonnegative_symmetric_zero_on_self() {
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 40, 5.0, |x, y| {
+        let d = dtw_banded(x, y, usize::MAX).value;
+        let d2 = dtw_banded(y, x, usize::MAX).value;
+        let dself = dtw_banded(x, x, usize::MAX).value;
+        d >= 0.0 && (d - d2).abs() < 1e-9 && dself.abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_banded_cost_decreases_with_band() {
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 4, 32, 3.0, |x, y| {
+        let narrow = dtw_banded(x, y, 1).value;
+        let mid = dtw_banded(x, y, 4).value;
+        let full = dtw_banded(x, y, usize::MAX).value;
+        narrow + 1e-12 >= mid && mid + 1e-12 >= full
+    });
+}
+
+#[test]
+fn prop_backtracked_path_always_valid() {
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 28, 4.0, |x, y| {
+        let (d, path) = dtw_with_path(x, y);
+        let cost: f64 = path
+            .iter()
+            .map(|&(i, j)| (x[i] - y[j]) * (x[i] - y[j]))
+            .sum();
+        is_valid_path(&path, x.len(), y.len()) && (cost - d.value).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_spdtw_full_grid_equals_dtw() {
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 24, 4.0, |x, y| {
+        let sp = SpDtw::new(LocMatrix::full(x.len()));
+        let a = sp.eval(x, y).value;
+        let b = dtw_banded(x, y, usize::MAX).value;
+        (a - b).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_krdtw_normalized_kernel_bounded() {
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 24, 3.0, |x, y| {
+        let k = Krdtw::new(1.0);
+        let kxy = k.log_kernel(x, y).value;
+        let kxx = k.log_kernel(x, x).value;
+        let kyy = k.log_kernel(y, y).value;
+        // normalized kernel in (0, 1]
+        kxy - 0.5 * (kxx + kyy) <= 1e-9
+    });
+}
+
+#[test]
+fn prop_occupancy_path_cells_all_present_prethreshold() {
+    let cfg = PropConfig::default();
+    forall_vec(&cfg, 4, 24, 2.0, |x| {
+        let y: Vec<f64> = x.iter().rev().cloned().collect();
+        let (_, path) = dtw_with_path(x, &y);
+        let mut grid = OccupancyGrid::new(x.len());
+        grid.add_path(&path);
+        let loc = grid.threshold(0.0).to_loc(1.0);
+        path.iter().all(|&(i, j)| loc.get(i, j).is_some())
+    });
+}
+
+#[test]
+fn prop_threshold_monotone_shrinks_support() {
+    let cfg = PropConfig::default();
+    forall_usizes(&cfg, &[(2, 16), (1, 9)], |vals| {
+        let (t, npaths) = (vals[0], vals[1]);
+        let mut grid = OccupancyGrid::new(t);
+        // deterministic pseudo-paths: staircases with different offsets
+        for p in 0..npaths {
+            let path: Vec<(usize, usize)> = (0..t)
+                .map(|i| (i, ((i + p) % t).min(t - 1)))
+                .collect();
+            // make monotone: clamp to sorted columns
+            let mut mono = Vec::new();
+            let mut maxj = 0;
+            for (i, j) in path {
+                maxj = maxj.max(j.min(i + 1));
+                mono.push((i, maxj.min(t - 1)));
+            }
+            grid.add_path(&mono);
+        }
+        let mut last = usize::MAX;
+        for theta in 0..4 {
+            let n = grid.threshold(theta as f64).nnz();
+            if n > last {
+                return false;
+            }
+            last = n;
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_coordinator_answers_every_job_exactly_once() {
+    // THE coordinator invariant: N submissions -> N completions, values
+    // matching the direct evaluation, regardless of worker/batch config.
+    let cfg = PropConfig { cases: 8, ..Default::default() };
+    forall_usizes(&cfg, &[(1, 4), (1, 50), (4, 24)], |vals| {
+        let (workers, njobs, t) = (vals[0], vals[1], vals[2]);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                queue_cap: 4,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let key = coord.register_grid(LocMatrix::corridor(t, 2)).unwrap();
+        let mk = |i: usize| {
+            TimeSeries::new(0, (0..t).map(|k| ((i * 7 + k) % 13) as f64).collect())
+        };
+        let tickets: Vec<_> = (0..njobs)
+            .map(|i| coord.submit_spdtw(key, &mk(i), &mk(i + 1)).unwrap())
+            .collect();
+        let direct = SpDtw::new(LocMatrix::corridor(t, 2));
+        let mut ok = true;
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let r = ticket.wait().unwrap();
+            let want = direct.dist(&mk(i), &mk(i + 1)).value;
+            ok &= (r.value - want).abs() < 1e-9;
+        }
+        coord.wait_native_idle();
+        let snap = coord.metrics();
+        ok && snap.completed == njobs as u64 && snap.submitted == njobs as u64
+    });
+}
+
+#[test]
+fn prop_native_submissions_under_churn() {
+    // failure-injection-ish: interleave submissions from several threads
+    // while the coordinator is running; all must resolve.
+    let coord = Arc::new(
+        Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                queue_cap: 2,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for th in 0..4 {
+        let c = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut acc = 0usize;
+            for i in 0..50 {
+                let x = TimeSeries::new(0, vec![(th + i) as f64; 8]);
+                let y = TimeSeries::new(0, vec![i as f64; 8]);
+                let t = c.submit_native(Arc::new(Euclidean), &x, &y);
+                let r = t.wait().unwrap();
+                if r.value.is_finite() {
+                    acc += 1;
+                }
+            }
+            acc
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 200);
+    assert_eq!(coord.metrics().completed, 200);
+}
