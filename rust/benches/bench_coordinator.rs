@@ -122,4 +122,41 @@ fn main() {
         "coordinator overhead (T=8 jobs): {:>10.2} µs/job end-to-end",
         per_job * 1e6
     );
+
+    // ---- search path: cascade pruning through the coordinator -------------
+    use spdtw::search::{Cascade, Index};
+    let coord = Coordinator::start(CoordinatorConfig::default(), None).unwrap();
+    let band = (ds.series_len() as f64 * 0.1).round() as usize;
+    let key = coord.register_index(Index::build(&ds.train, band, 8));
+    let t0 = Instant::now();
+    let tickets: Vec<_> = ds
+        .test
+        .series
+        .iter()
+        .map(|probe| coord.submit_search(key, probe, 1, Cascade::default()).unwrap())
+        .collect();
+    let nq = tickets.len();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    coord.wait_native_idle();
+    let snap = coord.metrics();
+    println!(
+        "search requests: {} queries in {:.1} ms ({:.0} q/s), prune ratio {:.1}%",
+        nq,
+        dt * 1e3,
+        nq as f64 / dt,
+        100.0 * snap.search_prune_ratio()
+    );
+    println!(
+        "  stage exits: {} kim / {} keogh / {} rev / {} abandons / {} full DPs over {} candidates",
+        snap.lb_kim_skips,
+        snap.lb_keogh_skips,
+        snap.lb_rev_skips,
+        snap.early_abandons,
+        snap.full_dp_evals,
+        snap.search_candidates
+    );
+    println!("{}", snap.report());
 }

@@ -1,0 +1,131 @@
+//! Search-cascade benches (§Perf): pruning power and wall-clock of the
+//! cascaded lower-bound + early-abandoning k-NN engine vs brute-force
+//! scanning, on synthetic UCR-style workloads — for both banded DTW and
+//! the SP-DTW sparse-grid composition.
+//!
+//! Reported per configuration: error rate, per-stage prune counts, the
+//! pruning ratio (candidates resolved without a completed full DP), DP
+//! cells vs the brute-force cell count, and throughput.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spdtw::classify::nn::classify_knn;
+use spdtw::data::synthetic;
+use spdtw::measures::dtw::BandedDtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::sparse::learn::learn_occupancy_grid;
+
+fn run_engine(
+    label: &str,
+    index: &Arc<Index>,
+    cascade: Cascade,
+    ds: &spdtw::data::Dataset,
+    k: usize,
+    brute_cells: u64,
+    brute_secs: f64,
+) {
+    let engine = SearchEngine::new(Arc::clone(index), cascade);
+    let t0 = Instant::now();
+    let (eval, stats) = engine.classify(&ds.test, k, 8);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  {label:<22} error={:.3}  pruned {:>5.1}%  (kim {} / keogh {} / rev {} / abandon {})  \
+         DP cells {:>10} ({:>5.1}% of brute)  {:>7.0} q/s ({:.2}x)",
+        eval.error_rate,
+        100.0 * stats.prune_ratio(),
+        stats.kim_pruned,
+        stats.keogh_pruned,
+        stats.rev_pruned,
+        stats.abandoned,
+        stats.dp_cells,
+        100.0 * stats.dp_cells as f64 / brute_cells.max(1) as f64,
+        ds.test.len() as f64 / dt,
+        brute_secs / dt.max(1e-9),
+    );
+}
+
+fn main() {
+    let k = 1;
+    for name in ["CBF", "SyntheticControl", "Gun-Point"] {
+        let ds = synthetic::generate_scaled(name, 42, 60, 60).unwrap();
+        let t = ds.series_len();
+        let band = ((t as f64) * 0.1).round().max(1.0) as usize;
+        println!(
+            "{name}: T={t} train={} test={} band={band}",
+            ds.train.len(),
+            ds.test.len()
+        );
+
+        // ---- brute-force baseline (exhaustive banded DTW) ----------------
+        let t0 = Instant::now();
+        let brute = classify_knn(&BandedDtw(band), &ds.train, &ds.test, k, 8);
+        let brute_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<22} error={:.3}  DP cells {:>10}  {:>7.0} q/s",
+            "brute force",
+            brute.error_rate,
+            brute.visited_cells,
+            ds.test.len() as f64 / brute_secs
+        );
+
+        // ---- cascade ablation over the banded-DTW index -------------------
+        let index = Arc::new(Index::build(&ds.train, band, 8));
+        run_engine("full cascade", &index, Cascade::default(), &ds, k, brute.visited_cells, brute_secs);
+        run_engine(
+            "no early abandon",
+            &index,
+            Cascade { early_abandon: false, ..Cascade::default() },
+            &ds,
+            k,
+            brute.visited_cells,
+            brute_secs,
+        );
+        run_engine(
+            "lower bounds only",
+            &index,
+            Cascade { kim: true, keogh: true, keogh_rev: false, early_abandon: false, order_by_lb: true },
+            &ds,
+            k,
+            brute.visited_cells,
+            brute_secs,
+        );
+        run_engine(
+            "abandon only",
+            &index,
+            Cascade { kim: false, keogh: false, keogh_rev: false, early_abandon: true, order_by_lb: false },
+            &ds,
+            k,
+            brute.visited_cells,
+            brute_secs,
+        );
+
+        // ---- SP-DTW composition: sparse grid × cascade --------------------
+        let grid = learn_occupancy_grid(&ds.train, 8);
+        let loc = Arc::new(grid.threshold(1.0).to_loc(1.0));
+        let t0 = Instant::now();
+        let sp = SpDtw::from_arc(Arc::clone(&loc));
+        let sp_brute = classify_knn(&sp, &ds.train, &ds.test, k, 8);
+        let sp_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<22} error={:.3}  DP cells {:>10}  ({} nnz, {:.1}% sparse)",
+            "sp-dtw brute",
+            sp_brute.error_rate,
+            sp_brute.visited_cells,
+            loc.nnz(),
+            100.0 * loc.sparsity()
+        );
+        let sp_index = Arc::new(Index::build_spdtw(&ds.train, loc, 8));
+        run_engine(
+            "sp-dtw + cascade",
+            &sp_index,
+            Cascade::default(),
+            &ds,
+            k,
+            sp_brute.visited_cells,
+            sp_secs,
+        );
+        println!();
+    }
+}

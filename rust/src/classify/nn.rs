@@ -1,10 +1,13 @@
 //! Nearest-neighbor classification over an arbitrary [`Measure`]
 //! (parallel across test series) — the evaluation protocol of Table II.
 
+use std::sync::Arc;
+
 use crate::classify::EvalResult;
 use crate::data::LabeledSet;
 use crate::measures::Measure;
 use crate::pool;
+use crate::search::{Cascade, Index, PruneStats, SearchEngine};
 
 /// 1-NN classification of `test` against `train`.
 pub fn classify_1nn(measure: &dyn Measure, train: &LabeledSet, test: &LabeledSet, threads: usize) -> EvalResult {
@@ -29,7 +32,10 @@ pub fn classify_knn(
             visited += d.visited_cells;
             dists.push((d.value, tr.label));
         }
-        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN distance (e.g. a
+        // degenerate kernel value) must not panic the whole run — it
+        // sorts after every real distance instead.
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
         let label = vote(&dists[..k.min(dists.len())]);
         (label, visited, train.len() as u64)
     });
@@ -39,8 +45,10 @@ pub fn classify_knn(
     EvalResult::from_predictions(test, &pred, visited, cmp)
 }
 
-/// Majority vote over the k nearest (distance-weighted tie-break).
-fn vote(nearest: &[(f64, usize)]) -> usize {
+/// Majority vote over the k nearest `(distance, label)` pairs: largest
+/// count wins, count ties broken by the smaller minimum distance.
+/// Public so the index-backed search path votes identically.
+pub fn vote(nearest: &[(f64, usize)]) -> usize {
     let mut counts: Vec<(usize, usize, f64)> = Vec::new(); // (label, count, min_dist)
     for &(d, l) in nearest {
         match counts.iter_mut().find(|(lab, _, _)| *lab == l) {
@@ -55,14 +63,25 @@ fn vote(nearest: &[(f64, usize)]) -> usize {
     }
     counts
         .into_iter()
-        .max_by(|a, b| (a.1, std::cmp::Reverse(OrderedF64(a.2))).partial_cmp(&(b.1, std::cmp::Reverse(OrderedF64(b.2)))).unwrap())
+        // NaN-safe: total_cmp ranks a NaN min-dist as farthest.
+        .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.2.total_cmp(&a.2)))
         .map(|(l, _, _)| l)
         .unwrap()
 }
 
-/// Total-order f64 wrapper for the vote tie-break.
-#[derive(PartialEq, PartialOrd)]
-struct OrderedF64(f64);
+/// Index-backed k-NN: identical decisions to [`classify_knn`] over the
+/// same DP measure, but served through the `search` cascade (lower
+/// bounds + early abandoning) instead of exhaustive evaluation.
+/// Returns the usual [`EvalResult`] plus the cascade's [`PruneStats`].
+pub fn classify_knn_indexed(
+    index: &Arc<Index>,
+    cascade: Cascade,
+    test: &LabeledSet,
+    k: usize,
+    threads: usize,
+) -> (EvalResult, PruneStats) {
+    SearchEngine::new(Arc::clone(index), cascade).classify(test, k, threads)
+}
 
 /// Leave-one-out 1-NN error on a single set — the paper's protocol for
 /// tuning θ / ν / band on the train split (Fig. 4).
@@ -137,6 +156,48 @@ mod tests {
         let ds = synthetic::generate_scaled("CBF", 13, 18, 0).unwrap();
         let err = loo_error_1nn(&Euclidean, &ds.train, 2);
         assert!(err <= 0.5, "LOO error {err} unexpectedly high");
+    }
+
+    #[test]
+    fn nan_distance_does_not_panic_and_loses() {
+        use crate::data::TimeSeries;
+        use crate::measures::DistResult;
+
+        /// Returns NaN against one poisoned train series, Euclidean else.
+        struct NanAgainstFirst;
+        impl Measure for NanAgainstFirst {
+            fn name(&self) -> String {
+                "nan-probe".into()
+            }
+            fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+                if y.label == 9 {
+                    DistResult::new(f64::NAN, 1)
+                } else {
+                    Euclidean.dist(x, y)
+                }
+            }
+        }
+
+        let train = from_pairs(vec![(9, vec![0.0]), (0, vec![0.1]), (1, vec![10.0])]);
+        let test = from_pairs(vec![(0, vec![0.0])]);
+        // pre-fix this panicked in sort_by(partial_cmp().unwrap());
+        // post-fix the NaN candidate simply sorts last.
+        let r = classify_1nn(&NanAgainstFirst, &train, &test, 1);
+        assert_eq!(r.error_rate, 0.0);
+    }
+
+    #[test]
+    fn indexed_path_matches_exhaustive() {
+        use crate::measures::dtw::BandedDtw;
+
+        let ds = synthetic::generate_scaled("CBF", 2, 14, 10).unwrap();
+        let band = 6;
+        let index = Arc::new(Index::build(&ds.train, band, 2));
+        let (eval, stats) = classify_knn_indexed(&index, Cascade::default(), &ds.test, 1, 2);
+        let brute = classify_1nn(&BandedDtw(band), &ds.train, &ds.test, 2);
+        assert_eq!(eval.error_rate, brute.error_rate);
+        assert!(stats.pruned() > 0);
+        assert!(stats.dp_cells < brute.visited_cells);
     }
 
     #[test]

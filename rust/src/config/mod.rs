@@ -143,6 +143,100 @@ impl ExperimentConfig {
     }
 }
 
+/// Similarity-search settings: cascade stage toggles + query shape
+/// (the `spdtw search` CLI knobs; see `search::Cascade`).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Neighbors per query.
+    pub k: usize,
+    /// Sakoe-Chiba band in *cells* for the banded-DTW engine;
+    /// `usize::MAX` = unconstrained DTW.
+    pub band_cells: usize,
+    /// Cascade stage toggles (all default on).
+    pub kim: bool,
+    pub keogh: bool,
+    pub keogh_rev: bool,
+    pub early_abandon: bool,
+    pub order_by_lb: bool,
+    /// z-normalize train series at index build and queries at query
+    /// time (banded-DTW indexes only).
+    pub znormalize: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            k: 1,
+            band_cells: usize::MAX,
+            kim: true,
+            keogh: true,
+            keogh_rev: true,
+            early_abandon: true,
+            order_by_lb: true,
+            znormalize: false,
+        }
+    }
+}
+
+impl SearchConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            return Err(Error::config("search k must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// The stage-toggle view consumed by the engine.
+    pub fn cascade(&self) -> crate::search::Cascade {
+        crate::search::Cascade {
+            kim: self.kim,
+            keogh: self.keogh,
+            keogh_rev: self.keogh_rev,
+            early_abandon: self.early_abandon,
+            order_by_lb: self.order_by_lb,
+        }
+    }
+
+    /// Load from JSON; missing fields fall back to defaults
+    /// (`band_cells` omitted or null means unconstrained).
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = SearchConfig::default();
+        if let Some(v) = json.get("k").and_then(Json::as_usize) {
+            cfg.k = v;
+        }
+        if let Some(v) = json.get("band_cells").and_then(Json::as_usize) {
+            cfg.band_cells = v;
+        }
+        let flag = |key: &str, default: bool| -> bool {
+            json.get(key).and_then(Json::as_bool).unwrap_or(default)
+        };
+        cfg.kim = flag("kim", cfg.kim);
+        cfg.keogh = flag("keogh", cfg.keogh);
+        cfg.keogh_rev = flag("keogh_rev", cfg.keogh_rev);
+        cfg.early_abandon = flag("early_abandon", cfg.early_abandon);
+        cfg.order_by_lb = flag("order_by_lb", cfg.order_by_lb);
+        cfg.znormalize = flag("znormalize", cfg.znormalize);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("k", Json::num(self.k as f64)),
+            ("kim", Json::Bool(self.kim)),
+            ("keogh", Json::Bool(self.keogh)),
+            ("keogh_rev", Json::Bool(self.keogh_rev)),
+            ("early_abandon", Json::Bool(self.early_abandon)),
+            ("order_by_lb", Json::Bool(self.order_by_lb)),
+            ("znormalize", Json::Bool(self.znormalize)),
+        ];
+        if self.band_cells != usize::MAX {
+            fields.push(("band_cells", Json::num(self.band_cells as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
 /// Coordinator service settings.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -212,6 +306,27 @@ mod tests {
     fn rejects_zero_threads() {
         let j = Json::parse(r#"{"threads": 0}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn search_config_roundtrip_and_validation() {
+        let mut cfg = SearchConfig::default();
+        cfg.k = 3;
+        cfg.band_cells = 12;
+        cfg.keogh_rev = false;
+        let back = SearchConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.k, 3);
+        assert_eq!(back.band_cells, 12);
+        assert!(!back.keogh_rev && back.kim);
+
+        // omitted band_cells means unconstrained
+        let open = SearchConfig::from_json(&Json::parse(r#"{"k":2}"#).unwrap()).unwrap();
+        assert_eq!(open.band_cells, usize::MAX);
+
+        assert!(SearchConfig::from_json(&Json::parse(r#"{"k":0}"#).unwrap()).is_err());
+
+        let cas = cfg.cascade();
+        assert!(cas.kim && !cas.keogh_rev && cas.early_abandon);
     }
 
     #[test]

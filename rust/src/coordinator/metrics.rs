@@ -5,6 +5,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::search::PruneStats;
+
 /// Log2-bucketed latency histogram, 1µs .. ~1s.
 const LAT_BUCKETS: usize = 22;
 
@@ -21,6 +23,14 @@ pub struct Metrics {
     /// Flushes triggered by the timeout rather than a full batch.
     pub timeout_flushes: AtomicU64,
     pub visited_cells: AtomicU64,
+    // ---- search-cascade counters (per-stage exits, `search` subsystem) ----
+    pub search_queries: AtomicU64,
+    pub search_candidates: AtomicU64,
+    pub lb_kim_skips: AtomicU64,
+    pub lb_keogh_skips: AtomicU64,
+    pub lb_rev_skips: AtomicU64,
+    pub early_abandons: AtomicU64,
+    pub full_dp_evals: AtomicU64,
     lat: [AtomicU64; LAT_BUCKETS],
     lat_sum_us: AtomicU64,
 }
@@ -37,6 +47,18 @@ impl Metrics {
         self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Fold one query's cascade counters into the service totals.
+    pub fn record_search(&self, s: &PruneStats) {
+        self.search_queries.fetch_add(s.queries, Ordering::Relaxed);
+        self.search_candidates.fetch_add(s.candidates, Ordering::Relaxed);
+        self.lb_kim_skips.fetch_add(s.kim_pruned, Ordering::Relaxed);
+        self.lb_keogh_skips.fetch_add(s.keogh_pruned, Ordering::Relaxed);
+        self.lb_rev_skips.fetch_add(s.rev_pruned, Ordering::Relaxed);
+        self.early_abandons.fetch_add(s.abandoned, Ordering::Relaxed);
+        self.full_dp_evals.fetch_add(s.full_evals, Ordering::Relaxed);
+        self.visited_cells.fetch_add(s.total_cells(), Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let lat: Vec<u64> = self.lat.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -50,6 +72,13 @@ impl Metrics {
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             timeout_flushes: self.timeout_flushes.load(Ordering::Relaxed),
             visited_cells: self.visited_cells.load(Ordering::Relaxed),
+            search_queries: self.search_queries.load(Ordering::Relaxed),
+            search_candidates: self.search_candidates.load(Ordering::Relaxed),
+            lb_kim_skips: self.lb_kim_skips.load(Ordering::Relaxed),
+            lb_keogh_skips: self.lb_keogh_skips.load(Ordering::Relaxed),
+            lb_rev_skips: self.lb_rev_skips.load(Ordering::Relaxed),
+            early_abandons: self.early_abandons.load(Ordering::Relaxed),
+            full_dp_evals: self.full_dp_evals.load(Ordering::Relaxed),
             mean_latency_us: if completed > 0 {
                 self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
             } else {
@@ -72,6 +101,13 @@ pub struct Snapshot {
     pub padded_slots: u64,
     pub timeout_flushes: u64,
     pub visited_cells: u64,
+    pub search_queries: u64,
+    pub search_candidates: u64,
+    pub lb_kim_skips: u64,
+    pub lb_keogh_skips: u64,
+    pub lb_rev_skips: u64,
+    pub early_abandons: u64,
+    pub full_dp_evals: u64,
     pub mean_latency_us: f64,
     pub latency_hist: Vec<u64>,
 }
@@ -95,11 +131,27 @@ impl Snapshot {
         (1u64 << (self.latency_hist.len() - 1)) as f64
     }
 
+    /// Fraction of search candidates resolved without a completed full
+    /// DP (skipped by a bound or abandoned mid-DP).
+    pub fn search_prune_ratio(&self) -> f64 {
+        if self.search_candidates == 0 {
+            0.0
+        } else {
+            let pruned = self.lb_kim_skips
+                + self.lb_keogh_skips
+                + self.lb_rev_skips
+                + self.early_abandons;
+            pruned as f64 / self.search_candidates as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "jobs: {} submitted, {} completed ({} native / {} pjrt), {} failed\n\
              batches: {} ({} padded slots, {} timeout flushes)\n\
              cells: {}\n\
+             search: {} queries, {} candidates -> {} kim / {} keogh / {} rev skips, \
+             {} abandons, {} full DPs ({:.1}% pruned)\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
             self.submitted,
             self.completed,
@@ -110,6 +162,14 @@ impl Snapshot {
             self.padded_slots,
             self.timeout_flushes,
             self.visited_cells,
+            self.search_queries,
+            self.search_candidates,
+            self.lb_kim_skips,
+            self.lb_keogh_skips,
+            self.lb_rev_skips,
+            self.early_abandons,
+            self.full_dp_evals,
+            100.0 * self.search_prune_ratio(),
             self.mean_latency_us,
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
@@ -151,5 +211,32 @@ mod tests {
         let s = Metrics::new().snapshot();
         let r = s.report();
         assert!(r.contains("jobs:") && r.contains("batches:") && r.contains("latency:"));
+        assert!(r.contains("search:"));
+    }
+
+    #[test]
+    fn search_counters_fold_prune_stats() {
+        let m = Metrics::new();
+        let s = PruneStats {
+            queries: 2,
+            candidates: 20,
+            kim_pruned: 5,
+            keogh_pruned: 4,
+            rev_pruned: 2,
+            abandoned: 3,
+            full_evals: 6,
+            dp_cells: 500,
+            lb_cells: 120,
+        };
+        m.record_search(&s);
+        m.record_search(&s);
+        let snap = m.snapshot();
+        assert_eq!(snap.search_queries, 4);
+        assert_eq!(snap.search_candidates, 40);
+        assert_eq!(snap.lb_kim_skips, 10);
+        assert_eq!(snap.early_abandons, 6);
+        assert_eq!(snap.full_dp_evals, 12);
+        assert_eq!(snap.visited_cells, 1240);
+        assert!((snap.search_prune_ratio() - 0.7).abs() < 1e-12);
     }
 }

@@ -13,6 +13,9 @@
 //!
 //! * Jobs are routed per (kernel, T) by [`router::Router`] — PJRT when an
 //!   artifact bucket exists and `prefer_pjrt` is set, native otherwise.
+//! * k-NN `Search` requests resolve against a registered
+//!   [`crate::search::Index`] on the native pool, with per-stage prune
+//!   counters exported through [`metrics`].
 //! * PJRT jobs accumulate in per-[`BucketKey`] buffers; flushed at the
 //!   artifact batch size or after `flush_us` of inactivity (padded).
 //! * The bounded runner queue (`queue_cap`) provides backpressure.
@@ -39,13 +42,14 @@ use crate::measures::spkrdtw::SpKrdtw;
 use crate::measures::{KernelMeasure, Measure};
 use crate::pool::WorkerPool;
 use crate::runtime::{DtwBatch, KernelKind, KrdtwBatch, PjrtHandle};
+use crate::search::{Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
 
 use batcher::{Batcher, ReadyBatch};
 use metrics::{Metrics, Snapshot};
-use request::{Backend, BucketKey, JobTicket, PairResult, PjrtJob};
+use request::{Backend, BucketKey, JobTicket, PairResult, PjrtJob, SearchOutcome, SearchTicket};
 use router::Router;
-use state::{GridKey, GridRegistry};
+use state::{GridKey, GridRegistry, IndexKey, IndexRegistry};
 
 enum DispatchMsg {
     Job(Box<PjrtJob>, Instant),
@@ -63,6 +67,7 @@ pub struct Coordinator {
     runner: Option<thread::JoinHandle<()>>,
     router: Router,
     grids: Mutex<GridRegistry>,
+    indexes: Mutex<IndexRegistry>,
     pjrt: Option<PjrtHandle>,
 }
 
@@ -186,6 +191,7 @@ impl Coordinator {
             runner,
             router,
             grids: Mutex::new(GridRegistry::new()),
+            indexes: Mutex::new(IndexRegistry::new()),
             pjrt,
         })
     }
@@ -233,6 +239,61 @@ impl Coordinator {
             .get(key)
             .map(|e| Arc::clone(&e.loc))
             .ok_or_else(|| Error::coordinator(format!("unknown grid key {key:?}")))
+    }
+
+    /// Register a prebuilt similarity-search [`Index`] and get a stable
+    /// key for [`Self::submit_search`].
+    pub fn register_index(&self, index: Index) -> IndexKey {
+        self.indexes.lock().unwrap().insert(Arc::new(index))
+    }
+
+    fn index(&self, key: IndexKey) -> Result<Arc<Index>> {
+        self.indexes
+            .lock()
+            .unwrap()
+            .get(key)
+            .ok_or_else(|| Error::coordinator(format!("unknown index key {key:?}")))
+    }
+
+    /// Submit a k-NN search against a registered index.  Runs on the
+    /// native pool (the cascade is CPU work); per-stage prune counters
+    /// are folded into the service metrics.
+    pub fn submit_search(
+        &self,
+        key: IndexKey,
+        query: &TimeSeries,
+        k: usize,
+        cascade: Cascade,
+    ) -> Result<SearchTicket> {
+        let index = self.index(key)?;
+        if query.len() != index.t {
+            return Err(Error::coordinator(format!(
+                "query length {} != indexed length {}",
+                query.len(),
+                index.t
+            )));
+        }
+        if k == 0 {
+            return Err(Error::coordinator("search k must be >= 1"));
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::clone(&self.metrics);
+        let values = query.values.clone();
+        let start = Instant::now();
+        self.native_pool.submit(move || {
+            let engine = SearchEngine::new(index, cascade);
+            let r = engine.knn_values(&values, k);
+            metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.record_search(&r.stats);
+            metrics.record_latency(start.elapsed());
+            let _ = tx.send(Ok(SearchOutcome {
+                neighbors: r.neighbors,
+                stats: r.stats,
+            }));
+        });
+        Ok(SearchTicket { rx })
     }
 
     /// Submit an SP-DTW pair (routed native or PJRT).
@@ -506,6 +567,43 @@ mod tests {
         let direct = SpDtw::new(loc).dist(&x, &y);
         assert!((got.value - direct.value).abs() < 1e-12);
         assert_eq!(got.visited_cells, direct.visited_cells);
+    }
+
+    #[test]
+    fn search_submit_roundtrip_updates_metrics() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 3, 10, 4).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 4, 2));
+        let probe = &ds.test.series[0];
+        let out = c
+            .submit_search(key, probe, 3, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.neighbors.len(), 3);
+        assert!(out.neighbors[0].dist <= out.neighbors[1].dist);
+        assert_eq!(out.stats.candidates, ds.train.len() as u64);
+        c.wait_native_idle();
+        let snap = c.metrics();
+        assert_eq!(snap.search_queries, 1);
+        assert_eq!(snap.search_candidates, ds.train.len() as u64);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn search_rejects_bad_requests() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 3, 8, 2).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 2, 1));
+        let probe = &ds.test.series[0];
+        assert!(c
+            .submit_search(IndexKey(99), probe, 1, Cascade::default())
+            .is_err());
+        let short = TimeSeries::new(0, vec![0.0; 3]);
+        assert!(c.submit_search(key, &short, 1, Cascade::default()).is_err());
+        assert!(c.submit_search(key, probe, 0, Cascade::default()).is_err());
     }
 
     #[test]

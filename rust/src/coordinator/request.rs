@@ -4,6 +4,7 @@ use std::sync::mpsc;
 
 use crate::error::{Error, Result};
 use crate::runtime::KernelKind;
+use crate::search::{Neighbor, PruneStats};
 
 /// Which execution backend produced a result.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +47,35 @@ impl JobTicket {
 
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<Result<PairResult>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Result of one k-NN search request served by the `search` engine.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// Ascending `(dist, train index)` order, length ≤ k.
+    pub neighbors: Vec<Neighbor>,
+    /// Cascade counters for this query (also folded into the service
+    /// metrics).
+    pub stats: PruneStats,
+}
+
+/// Completion handle for a submitted search request.
+pub struct SearchTicket {
+    pub(crate) rx: mpsc::Receiver<Result<SearchOutcome>>,
+}
+
+impl SearchTicket {
+    /// Block until the k-NN result is available.
+    pub fn wait(self) -> Result<SearchOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::coordinator("search job dropped before completion"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<Result<SearchOutcome>> {
         self.rx.try_recv().ok()
     }
 }

@@ -9,6 +9,8 @@
 //! {"op":"register_grid","t":60,"band":5}            // corridor grid
 //! {"op":"spdtw","grid":0,"x":[...],"y":[...]}
 //! {"op":"spkrdtw","grid":0,"nu":0.5,"x":[...],"y":[...]}
+//! {"op":"register_index","band":5,"series":[[...],...],"labels":[...]}
+//! {"op":"search","index":0,"k":3,"x":[...]}         // optional "cascade":"none"
 //! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
@@ -19,10 +21,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 
-use crate::coordinator::state::GridKey;
+use crate::coordinator::state::{GridKey, IndexKey};
 use crate::coordinator::Coordinator;
-use crate::data::TimeSeries;
+use crate::data::{LabeledSet, TimeSeries};
 use crate::error::Result;
+use crate::search::{Cascade, Index};
 use crate::sparse::LocMatrix;
 use crate::util::json::Json;
 
@@ -173,6 +176,85 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 ("backend", Json::str(out.backend.as_str())),
             ]))
         }
+        "register_index" => {
+            let band = req.get("band").and_then(Json::as_usize).unwrap_or(usize::MAX);
+            let arr = req.req_arr("series")?;
+            if arr.is_empty() {
+                return Err(crate::error::Error::config("'series' must be non-empty"));
+            }
+            let labels: Vec<usize> = match req.get("labels").and_then(Json::as_arr) {
+                Some(ls) => {
+                    let parsed: Option<Vec<usize>> = ls.iter().map(Json::as_usize).collect();
+                    parsed.ok_or_else(|| {
+                        crate::error::Error::config(
+                            "'labels' must be non-negative integers",
+                        )
+                    })?
+                }
+                None => vec![0; arr.len()],
+            };
+            if labels.len() != arr.len() {
+                return Err(crate::error::Error::config(
+                    "'labels' length must match 'series'",
+                ));
+            }
+            let mut series = Vec::with_capacity(arr.len());
+            for (i, row) in arr.iter().enumerate() {
+                let vals: Option<Vec<f64>> = row
+                    .as_arr()
+                    .map(|r| r.iter().map(Json::as_f64).collect())
+                    .unwrap_or(None);
+                let vals = vals.ok_or_else(|| {
+                    crate::error::Error::config("'series' must be arrays of numbers")
+                })?;
+                series.push(TimeSeries::new(labels[i], vals));
+            }
+            let t0 = series[0].len();
+            if t0 == 0 || series.iter().any(|s| s.len() != t0) {
+                return Err(crate::error::Error::config(
+                    "'series' must be equal-length and non-empty",
+                ));
+            }
+            let train = LabeledSet::new(series);
+            let index = Index::build(&train, band, coord.config().workers);
+            let bytes = index.memory_bytes();
+            let key = coord.register_index(index);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("index", Json::num(key.0 as f64)),
+                ("memory_bytes", Json::num(bytes as f64)),
+            ]))
+        }
+        "search" => {
+            let key = IndexKey(req.req_usize("index")? as u64);
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let x = parse_series(&req, "x")?;
+            let cascade = match req.get("cascade").and_then(Json::as_str) {
+                Some("none") => Cascade::none(),
+                Some("full") | None => Cascade::default(),
+                Some(other) => {
+                    return Err(crate::error::Error::config(format!(
+                        "unknown cascade '{other}' (expected 'full' or 'none')"
+                    )))
+                }
+            };
+            let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
+            let neighbors = Json::arr(out.neighbors.iter().map(|n| {
+                Json::obj(vec![
+                    ("dist", Json::num(n.dist)),
+                    ("label", Json::num(n.label as f64)),
+                    ("idx", Json::num(n.train_idx as f64)),
+                ])
+            }));
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("neighbors", neighbors),
+                ("candidates", Json::num(out.stats.candidates as f64)),
+                ("pruned", Json::num(out.stats.pruned() as f64)),
+                ("full_evals", Json::num(out.stats.full_evals as f64)),
+                ("dp_cells", Json::num(out.stats.dp_cells as f64)),
+            ]))
+        }
         "metrics" => {
             let s = coord.metrics();
             Ok(Json::obj(vec![
@@ -260,6 +342,52 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("pong"));
+        server.stop();
+    }
+
+    #[test]
+    fn register_index_and_search_roundtrip() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let reg = client
+            .call(
+                &Json::parse(
+                    r#"{"op":"register_index","band":1,"series":[[0,0,0],[5,5,5],[0.1,0.1,0.1]],"labels":[0,1,0]}"#,
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(reg.get("ok"), Some(&Json::Bool(true)), "{reg:?}");
+        let idx = reg.req_usize("index").unwrap();
+
+        let r = client
+            .call(
+                &Json::parse(&format!(
+                    r#"{{"op":"search","index":{idx},"k":2,"x":[0,0,0]}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        let ns = r.req_arr("neighbors").unwrap();
+        assert_eq!(ns.len(), 2);
+        assert_eq!(ns[0].req_f64("dist").unwrap(), 0.0);
+        assert_eq!(ns[0].req_usize("label").unwrap(), 0);
+        assert!(r.req_f64("candidates").unwrap() == 3.0);
+
+        for bad in [
+            r#"{"op":"search","index":99,"k":1,"x":[0,0,0]}"#, // unknown index
+            r#"{"op":"search","index":0,"k":1,"x":[0,0]}"#,    // wrong length
+            r#"{"op":"search","index":0,"k":1,"x":[0,0,0],"cascade":"off"}"#, // bad cascade
+            r#"{"op":"register_index","series":[]}"#,          // empty
+            r#"{"op":"register_index","series":[[1,2],[1]]}"#, // ragged
+            r#"{"op":"register_index","series":[[1,2]],"labels":["a"]}"#, // bad label
+        ] {
+            let rep = client.call(&Json::parse(bad).unwrap()).unwrap();
+            assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        }
         server.stop();
     }
 

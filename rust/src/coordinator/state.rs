@@ -1,11 +1,14 @@
-//! Model store: learned LOC grids registered with the coordinator.
-//! Each grid gets a stable key; when a PJRT engine is attached, its
-//! weight (f32, SP-DTW) and mask (f64, SP-K_rdtw) planes are uploaded
-//! once at registration time and stay device-resident.
+//! Model store: learned LOC grids and search indexes registered with
+//! the coordinator.  Each gets a stable key; when a PJRT engine is
+//! attached, a grid's weight (f32, SP-DTW) and mask (f64, SP-K_rdtw)
+//! planes are uploaded once at registration time and stay
+//! device-resident.  Search indexes are always host-resident (the
+//! cascade is branchy, pointer-light CPU work).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::search::Index;
 use crate::sparse::LocMatrix;
 
 /// Opaque registered-grid identifier.
@@ -55,9 +58,58 @@ impl GridRegistry {
     }
 }
 
+/// Opaque registered-search-index identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct IndexKey(pub u64);
+
+/// Registry of prebuilt [`Index`]es served by `submit_search`.
+#[derive(Default)]
+pub struct IndexRegistry {
+    next: u64,
+    indexes: HashMap<u64, Arc<Index>>,
+}
+
+impl IndexRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, index: Arc<Index>) -> IndexKey {
+        let key = self.next;
+        self.next += 1;
+        self.indexes.insert(key, index);
+        IndexKey(key)
+    }
+
+    pub fn get(&self, key: IndexKey) -> Option<Arc<Index>> {
+        self.indexes.get(&key.0).map(Arc::clone)
+    }
+
+    pub fn len(&self) -> usize {
+        self.indexes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indexes.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_keys_are_unique_and_resolvable() {
+        use crate::data::splits::from_pairs;
+        let train = from_pairs(vec![(0, vec![0.0, 1.0]), (1, vec![1.0, 0.0])]);
+        let mut r = IndexRegistry::new();
+        let a = r.insert(Arc::new(Index::build(&train, 1, 1)));
+        let b = r.insert(Arc::new(Index::build(&train, 2, 1)));
+        assert_ne!(a, b);
+        assert_eq!(r.get(a).unwrap().radius, 1);
+        assert_eq!(r.len(), 2);
+        assert!(r.get(IndexKey(17)).is_none());
+    }
 
     #[test]
     fn keys_are_unique_and_resolvable() {

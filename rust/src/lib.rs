@@ -20,6 +20,7 @@
 //! | [`classify`]  | 1-NN and SMO SVM (one-vs-one) |
 //! | [`stats`]     | Wilcoxon signed-rank test, rank aggregation |
 //! | [`tuning`]    | LOO / k-fold grid search for θ, ν, γ, band width |
+//! | [`search`]    | cascaded lower-bound + early-abandoning k-NN engine |
 //! | [`pool`]      | thread-pool substrate (no rayon in the vendored set) |
 //! | [`runtime`]   | PJRT client, artifact manifest, executable cache |
 //! | [`coordinator`]| router + length-bucket batcher + workers + metrics + TCP server |
@@ -52,6 +53,7 @@ pub mod experiments;
 pub mod measures;
 pub mod pool;
 pub mod runtime;
+pub mod search;
 pub mod sparse;
 pub mod stats;
 pub mod tuning;

@@ -3,6 +3,7 @@
 //! ```text
 //! spdtw experiment <id|all> [opts]   regenerate paper tables/figures
 //! spdtw classify <dataset> [opts]    quick 1-NN run with one measure
+//! spdtw search <dataset> [opts]      cascade k-NN search vs brute force
 //! spdtw gen-data <dataset> [opts]    write the synthetic dataset as UCR files
 //! spdtw serve [opts]                 start the TCP coordinator service
 //! spdtw info [opts]                  show artifact manifest + platform
@@ -12,21 +13,22 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use spdtw::classify::nn::classify_1nn;
+use spdtw::classify::nn::{classify_1nn, classify_knn, classify_knn_indexed};
 use spdtw::config::cli::{usage, Args, OptSpec};
-use spdtw::config::{CoordinatorConfig, ExperimentConfig};
+use spdtw::config::{CoordinatorConfig, ExperimentConfig, SearchConfig};
 use spdtw::coordinator::server::Server;
 use spdtw::coordinator::Coordinator;
 use spdtw::data::registry;
 use spdtw::data::synthetic;
 use spdtw::error::{Error, Result};
 use spdtw::experiments;
-use spdtw::measures::dtw::Dtw;
+use spdtw::measures::dtw::{BandedDtw, Dtw};
 use spdtw::measures::euclidean::Euclidean;
 use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
 use spdtw::measures::spdtw::SpDtw;
 use spdtw::measures::Measure;
 use spdtw::runtime::PjrtRuntime;
+use spdtw::search::Index;
 use spdtw::sparse::learn::learn_occupancy_grid;
 
 fn opt_spec() -> Vec<OptSpec> {
@@ -46,6 +48,16 @@ fn opt_spec() -> Vec<OptSpec> {
         OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7878)" },
         OptSpec { name: "prefer-pjrt", takes_value: false, help: "route matching jobs to PJRT" },
         OptSpec { name: "config", takes_value: true, help: "JSON config file" },
+        OptSpec { name: "k", takes_value: true, help: "search: neighbors per query (default 1)" },
+        OptSpec { name: "band-cells", takes_value: true, help: "search: DP band in cells (default 10% of T)" },
+        OptSpec { name: "spdtw-index", takes_value: false, help: "search: learn a LOC grid and search under SP-DTW" },
+        OptSpec { name: "no-kim", takes_value: false, help: "search: disable the O(1) LB_Kim stage" },
+        OptSpec { name: "no-keogh", takes_value: false, help: "search: disable the LB_Keogh stage" },
+        OptSpec { name: "no-rev", takes_value: false, help: "search: disable the reversed LB_Keogh stage" },
+        OptSpec { name: "no-abandon", takes_value: false, help: "search: disable DP early abandoning" },
+        OptSpec { name: "no-order", takes_value: false, help: "search: scan candidates in train order" },
+        OptSpec { name: "znorm", takes_value: false, help: "search: z-normalize index + queries (banded mode)" },
+        OptSpec { name: "verify", takes_value: false, help: "search: cross-check against brute-force k-NN" },
     ]
 }
 
@@ -97,6 +109,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "experiment" => cmd_experiment(&args),
         "classify" => cmd_classify(&args),
+        "search" => cmd_search(&args),
         "gen-data" => cmd_gen_data(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
@@ -104,8 +117,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "help" | "--help" => {
             println!(
                 "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
-                 commands: experiment <id|all> | classify <dataset> | gen-data <dataset> |\n\
-                 \x20         serve | info | bench-backend\n\n{}",
+                 commands: experiment <id|all> | classify <dataset> | search <dataset> |\n\
+                 \x20         gen-data <dataset> | serve | info | bench-backend\n\n{}",
                 usage(&spec)
             );
             println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
@@ -168,6 +181,146 @@ fn cmd_classify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_search(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: spdtw search <dataset> [--k N] [--band-cells N]"))?;
+    let cfg = build_cfg(args)?;
+    let (cap_tr, cap_te) = cfg.caps();
+    let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
+    let t = ds.series_len();
+
+    // Settings precedence: defaults < `search` section of --config JSON
+    // < explicit CLI flags.  The 10%-of-T band default applies only
+    // when no config section exists: a config that omits `band_cells`
+    // means unconstrained DTW (SearchConfig::from_json's contract).
+    let cfg_section = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            spdtw::util::json::Json::parse(&text)?.get("search").cloned()
+        }
+        None => None,
+    };
+    let had_cfg_section = cfg_section.is_some();
+    let mut scfg = match &cfg_section {
+        Some(section) => SearchConfig::from_json(section)?,
+        None => SearchConfig::default(),
+    };
+    if let Some(k) = args.get_usize("k")? {
+        scfg.k = k;
+    }
+    if let Some(b) = args.get_usize("band-cells")? {
+        scfg.band_cells = b;
+    } else if !had_cfg_section && scfg.band_cells == usize::MAX {
+        scfg.band_cells = ((0.1 * t as f64).round() as usize).max(1);
+    }
+    if args.flag("no-kim") {
+        scfg.kim = false;
+    }
+    if args.flag("no-keogh") {
+        scfg.keogh = false;
+    }
+    if args.flag("no-rev") {
+        scfg.keogh_rev = false;
+    }
+    if args.flag("no-abandon") {
+        scfg.early_abandon = false;
+    }
+    if args.flag("no-order") {
+        scfg.order_by_lb = false;
+    }
+    if args.flag("znorm") {
+        scfg.znormalize = true;
+    }
+    scfg.validate()?;
+    if scfg.znormalize && args.flag("spdtw-index") {
+        return Err(Error::config(
+            "--znorm is only supported for banded-DTW indexes (not --spdtw-index)",
+        ));
+    }
+
+    let index = if args.flag("spdtw-index") {
+        let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+        let theta = args.get_f64("theta")?.unwrap_or(0.0);
+        let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
+        let loc = Arc::new(grid.threshold(theta).to_loc(gamma));
+        println!(
+            "LOC grid: nnz={} ({:.1}% sparsity), envelope radius {}",
+            loc.nnz(),
+            100.0 * loc.sparsity(),
+            loc.max_band_offset()
+        );
+        Index::build_spdtw(&ds.train, loc, cfg.threads)
+    } else if scfg.znormalize {
+        Index::build_znormalized(&ds.train, scfg.band_cells, cfg.threads)
+    } else {
+        Index::build(&ds.train, scfg.band_cells, cfg.threads)
+    };
+    let index = Arc::new(index);
+
+    let t0 = std::time::Instant::now();
+    let (eval, stats) = classify_knn_indexed(&index, scfg.cascade(), &ds.test, scfg.k, cfg.threads);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{name} [search k={} band={}] error={:.3} wall={:.2}s",
+        scfg.k,
+        if index.loc.is_some() { "sp-dtw".to_string() } else { scfg.band_cells.to_string() },
+        eval.error_rate,
+        wall
+    );
+    println!("{}", stats.report());
+    let brute_cells = index.full_eval_cells() * stats.candidates;
+    println!(
+        "DP cells: {} vs {} brute force ({:.1}% saved)",
+        stats.dp_cells,
+        brute_cells,
+        100.0 * (1.0 - stats.dp_cells as f64 / brute_cells.max(1) as f64)
+    );
+
+    if args.flag("verify") {
+        let t1 = std::time::Instant::now();
+        // The brute-force pass must see the exact series the engine
+        // compared: z-normalize both splits when the index did.
+        let (vtrain, vtest) = if index.znormalized {
+            let mut tr = ds.train.clone();
+            let mut te = ds.test.clone();
+            tr.znormalize();
+            te.znormalize();
+            (tr, te)
+        } else {
+            (ds.train.clone(), ds.test.clone())
+        };
+        let brute = match &index.loc {
+            Some(loc) => {
+                let sp = SpDtw::from_arc(Arc::clone(loc));
+                classify_knn(&sp, &vtrain, &vtest, scfg.k, cfg.threads)
+            }
+            None => classify_knn(
+                &BandedDtw(scfg.band_cells),
+                &vtrain,
+                &vtest,
+                scfg.k,
+                cfg.threads,
+            ),
+        };
+        let ok = brute.error_rate == eval.error_rate;
+        println!(
+            "verify: brute error={:.3} in {:.2}s -> {}",
+            brute.error_rate,
+            t1.elapsed().as_secs_f64(),
+            if ok { "MATCH" } else { "MISMATCH" }
+        );
+        if !ok {
+            return Err(Error::config(format!(
+                "search results diverge from brute force ({} vs {})",
+                eval.error_rate, brute.error_rate
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_gen_data(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -218,7 +371,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = Arc::new(Coordinator::start(ccfg, runtime.as_ref().map(|r| r.handle()))?);
     let server = Server::start(Arc::clone(&coord), addr)?;
     println!("spdtw coordinator listening on {}", server.addr);
-    println!("protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, spkrdtw, metrics, shutdown");
+    println!("protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, spkrdtw, register_index, search, metrics, shutdown");
     // Serve until the process is killed (the TCP `shutdown` op stops the
     // accept loop; we poll for it).
     loop {

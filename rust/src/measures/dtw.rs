@@ -23,6 +23,23 @@ impl Measure for Dtw {
     }
 }
 
+/// Banded DTW as a [`Measure`] with the band in *cells* — the
+/// cell-exact counterpart of `sakoe_chiba::SakoeChibaDtw`'s percentage
+/// band, and the brute-force baseline the `search` engine is verified
+/// against (both must agree on the band to the cell).
+#[derive(Clone, Debug)]
+pub struct BandedDtw(pub usize);
+
+impl Measure for BandedDtw {
+    fn name(&self) -> String {
+        format!("DTW_band({})", self.0)
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        dtw_banded(&x.values, &y.values, self.0)
+    }
+}
+
 /// Banded DTW: cells with |i - j| > band are inadmissible.
 /// `band = usize::MAX` (or >= T) degenerates to plain DTW.
 /// Works for unequal lengths; the band is applied around the rescaled

@@ -4,25 +4,49 @@
 //! Included so the learned sparsification can be compared against the
 //! pruning approach on the same workloads.
 
+use std::collections::VecDeque;
+
 use crate::data::{LabeledSet, TimeSeries};
 use crate::measures::dtw::dtw_banded;
 
 /// Upper/lower envelope of a series under warping radius `r`.
+///
+/// O(T) monotonic-deque sliding min/max (Lemire's streaming algorithm):
+/// each index enters and leaves each deque at most once, independent of
+/// `r` — the seed's per-window rescan was O(T·r), which dominated index
+/// builds at realistic radii.  `search::Index` builds all train
+/// envelopes through this path.
 pub fn envelope(y: &[f64], r: usize) -> (Vec<f64>, Vec<f64>) {
     let t = y.len();
     let mut upper = vec![0.0; t];
     let mut lower = vec![0.0; t];
+    // Deque fronts hold the argmax/argmin of the current window
+    // [i - r, min(i + r, t-1)]; backs stay monotone.
+    let mut maxq: VecDeque<usize> = VecDeque::new();
+    let mut minq: VecDeque<usize> = VecDeque::new();
+    let mut next = 0usize; // first index not yet pushed
     for i in 0..t {
         let lo = i.saturating_sub(r);
         let hi = (i + r).min(t - 1);
-        let mut mx = f64::NEG_INFINITY;
-        let mut mn = f64::INFINITY;
-        for &v in &y[lo..=hi] {
-            mx = mx.max(v);
-            mn = mn.min(v);
+        while next <= hi {
+            while maxq.back().map_or(false, |&b| y[b] <= y[next]) {
+                maxq.pop_back();
+            }
+            maxq.push_back(next);
+            while minq.back().map_or(false, |&b| y[b] >= y[next]) {
+                minq.pop_back();
+            }
+            minq.push_back(next);
+            next += 1;
         }
-        upper[i] = mx;
-        lower[i] = mn;
+        while *maxq.front().expect("window never empty") < lo {
+            maxq.pop_front();
+        }
+        while *minq.front().expect("window never empty") < lo {
+            minq.pop_front();
+        }
+        upper[i] = y[*maxq.front().unwrap()];
+        lower[i] = y[*minq.front().unwrap()];
     }
     (upper, lower)
 }
@@ -64,7 +88,9 @@ pub fn classify_1nn_lb(
             .enumerate()
             .map(|(j, (u, l))| (lb_keogh(&probe.values, u, l), j))
             .collect();
-        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: NaN-safe (a NaN bound sorts last instead of
+        // panicking mid-classification).
+        order.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut best = (f64::INFINITY, usize::MAX);
         for (lb, j) in order {
             total += 1;
@@ -100,6 +126,34 @@ mod tests {
             let (u, l) = envelope(&y, r);
             for i in 0..y.len() {
                 assert!(l[i] <= y[i] && y[i] <= u[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn lemire_envelope_matches_naive_rescan() {
+        // the O(T) deque must reproduce the per-window rescan exactly
+        let naive = |y: &[f64], r: usize| -> (Vec<f64>, Vec<f64>) {
+            let t = y.len();
+            let mut u = vec![0.0; t];
+            let mut l = vec![0.0; t];
+            for i in 0..t {
+                let lo = i.saturating_sub(r);
+                let hi = (i + r).min(t - 1);
+                u[i] = y[lo..=hi].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                l[i] = y[lo..=hi].iter().cloned().fold(f64::INFINITY, f64::min);
+            }
+            (u, l)
+        };
+        let mut rng = Pcg64::new(19);
+        for _ in 0..30 {
+            let t = 1 + rng.below(60);
+            let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            for r in [0usize, 1, 3, 7, 100] {
+                let (u1, l1) = envelope(&y, r);
+                let (u2, l2) = naive(&y, r);
+                assert_eq!(u1, u2, "upper t={t} r={r}");
+                assert_eq!(l1, l2, "lower t={t} r={r}");
             }
         }
     }

@@ -11,9 +11,15 @@
 //! | [`kga`]       | global alignment kernel (extra baseline) | Eq. 5 |
 //! | [`spdtw`]     | SP-DTW over the LOC sparse grid | Eq. 9, Alg. 1 |
 //! | [`spkrdtw`]   | SP-K_rdtw over the LOC sparse grid | Alg. 2 |
+//! | [`lb_keogh`]  | LB_Keogh envelopes + 1-NN pruning baseline | §II-B.2 [27] |
 //!
 //! Every DP measure reports the number of **visited cells**, the unit of
 //! the paper's Table VI speed-up comparison.
+//!
+//! The [`lb_keogh`] envelopes also power [`crate::search`], the cascaded
+//! lower-bound + early-abandoning k-NN subsystem, which cuts the number
+//! of full comparisons per query the same way the LOC grid cuts the
+//! cells per comparison.
 
 pub mod corr;
 pub mod daco;

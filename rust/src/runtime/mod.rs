@@ -14,6 +14,7 @@
 //! `execute_b` with only x/y re-uploaded per batch.
 
 pub mod artifact;
+pub mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,259 @@
+//! Early-abandoning DP kernels: banded DTW and SP-DTW variants that
+//! stop as soon as a completed DP row proves the final distance cannot
+//! beat an upper bound.
+//!
+//! Soundness: DP values only accumulate non-negative cell costs, and
+//! every admissible alignment path visits every row, so the final
+//! distance is ≥ the minimum DP value of any completed row.  Once that
+//! row minimum reaches `ub`, the candidate can be abandoned ("Early
+//! Abandoned PrunedDTW", Herrmann & Webb 2020 — the lower-bound view of
+//! the same cascade the UCR suite popularized).
+//!
+//! Bit-exactness: both kernels replicate the floating-point operation
+//! order of their exhaustive counterparts
+//! ([`crate::measures::dtw::dtw_banded`] and
+//! [`crate::measures::spdtw::SpDtw::eval`]) — tracking the row minimum
+//! adds comparisons, never arithmetic — so a non-abandoned evaluation
+//! returns the exact same `f64` the exhaustive kernel would (property:
+//! `prop_early_abandon_exact_when_completed`).
+
+use crate::measures::{phi, BIG};
+use crate::sparse::loc::NO_PRED;
+use crate::sparse::LocMatrix;
+
+/// Outcome of one early-abandoning evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EaResult {
+    /// The exact DP distance, or `None` if the evaluation abandoned
+    /// (in which case the true distance is provably ≥ the `ub` given).
+    pub value: Option<f64>,
+    /// DP cells computed before returning (≤ the exhaustive count).
+    pub visited: u64,
+}
+
+/// Early-abandoning banded DTW.  `ub = f64::INFINITY` disables
+/// abandoning, making this an exact drop-in for
+/// [`crate::measures::dtw::dtw_banded`].
+pub fn dtw_banded_ea(x: &[f64], y: &[f64], band: usize, ub: f64) -> EaResult {
+    let tx = x.len();
+    let ty = y.len();
+    assert!(tx > 0 && ty > 0, "empty series");
+    let slope = ty as f64 / tx as f64;
+    let unbounded = band == usize::MAX || band >= tx.max(ty);
+    let mut prev = vec![BIG; ty];
+    let mut cur = vec![BIG; ty];
+    let mut visited: u64 = 0;
+
+    for (i, &xi) in x.iter().enumerate() {
+        let center = (i as f64 * slope) as usize;
+        let (lo, hi) = if unbounded {
+            (0, ty - 1)
+        } else {
+            (center.saturating_sub(band), (center + band).min(ty - 1))
+        };
+        visited += (hi - lo + 1) as u64;
+        let mut row_min = f64::INFINITY;
+        if i == 0 {
+            let mut acc = 0.0f64;
+            for j in lo..=hi {
+                acc += phi(xi, y[j]);
+                cur[j] = acc;
+                if acc < row_min {
+                    row_min = acc;
+                }
+            }
+        } else {
+            let mut prev_jm1 = if lo > 0 { prev[lo - 1] } else { BIG };
+            let mut cur_jm1 = BIG;
+            let yrow = &y[lo..=hi];
+            let prow = &prev[lo..=hi];
+            let crow = &mut cur[lo..=hi];
+            for ((&yj, &pj), cj) in yrow.iter().zip(prow).zip(crow.iter_mut()) {
+                let mut b = pj;
+                if prev_jm1 < b {
+                    b = prev_jm1;
+                }
+                if cur_jm1 < b {
+                    b = cur_jm1;
+                }
+                let v = phi(xi, yj) + b;
+                *cj = v;
+                cur_jm1 = v;
+                prev_jm1 = pj;
+                if v < row_min {
+                    row_min = v;
+                }
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        if !unbounded {
+            for c in cur.iter_mut() {
+                *c = BIG;
+            }
+        }
+        if ub.is_finite() && row_min >= ub {
+            return EaResult {
+                value: None,
+                visited,
+            };
+        }
+    }
+    EaResult {
+        value: Some(prev[ty - 1]),
+        visited,
+    }
+}
+
+/// Early-abandoning SP-DTW over a LOC sparse grid: the best-so-far
+/// upper bound is threaded through the grid's CSR rows, abandoning as
+/// soon as a row's minimum DP value reaches it.  Per-cell arithmetic is
+/// identical to [`crate::measures::spdtw::SpDtw::eval`].
+///
+/// Note on empty rows: a row with no retained cell means no admissible
+/// path exists at all; with a finite `ub` the evaluation abandons there
+/// (the true distance is `Max_Float` ≥ any finite bound).
+pub fn spdtw_ea(loc: &LocMatrix, x: &[f64], y: &[f64], ub: f64) -> EaResult {
+    let t = loc.t;
+    assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
+    assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
+    let n = loc.nnz();
+    let mut d = vec![BIG; n];
+    let mut visited: u64 = 0;
+    for r in 0..t {
+        let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);
+        let mut row_min = f64::INFINITY;
+        for k in rs..re {
+            let c = loc.cols[k] as usize;
+            let local = loc.weights[k] * phi(x[r], y[c]);
+            let best = if r == 0 && c == 0 {
+                0.0
+            } else {
+                let p = loc.preds[k];
+                let mut b = BIG;
+                for &pi in &p {
+                    if pi != NO_PRED {
+                        let v = d[pi as usize];
+                        if v < b {
+                            b = v;
+                        }
+                    }
+                }
+                b
+            };
+            let v = local + best;
+            d[k] = v;
+            if v < row_min {
+                row_min = v;
+            }
+        }
+        visited += (re - rs) as u64;
+        if ub.is_finite() && row_min >= ub {
+            return EaResult {
+                value: None,
+                visited,
+            };
+        }
+    }
+    let corner = loc
+        .index_of(t - 1, t - 1)
+        .map(|k| d[k])
+        .unwrap_or(BIG + BIG);
+    EaResult {
+        value: Some(corner),
+        visited,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::dtw::dtw_banded;
+    use crate::measures::spdtw::SpDtw;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+        (0..t).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn infinite_ub_is_bitwise_exhaustive_dtw() {
+        let mut rng = Pcg64::new(11);
+        for _ in 0..30 {
+            let tx = 2 + rng.below(30);
+            let ty = 2 + rng.below(30);
+            let x = rand_vec(&mut rng, tx);
+            let y = rand_vec(&mut rng, ty);
+            for band in [1usize, 4, usize::MAX] {
+                let exact = dtw_banded(&x, &y, band);
+                let ea = dtw_banded_ea(&x, &y, band, f64::INFINITY);
+                assert_eq!(ea.visited, exact.visited_cells);
+                assert_eq!(
+                    ea.value.unwrap().to_bits(),
+                    exact.value.to_bits(),
+                    "band={band}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abandons_are_sound_and_save_cells() {
+        let mut rng = Pcg64::new(13);
+        let mut abandoned_seen = 0;
+        let mut cells_saved = 0u64;
+        for _ in 0..40 {
+            let t = 8 + rng.below(24);
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            let exact = dtw_banded(&x, &y, usize::MAX);
+            for frac in [0.1, 0.5, 0.9, 1.0] {
+                let ub = frac * exact.value;
+                let ea = dtw_banded_ea(&x, &y, usize::MAX, ub);
+                match ea.value {
+                    Some(v) => assert_eq!(v.to_bits(), exact.value.to_bits()),
+                    None => {
+                        abandoned_seen += 1;
+                        assert!(exact.value >= ub, "abandoned but true {} < ub {ub}", exact.value);
+                        assert!(ea.visited <= exact.visited_cells);
+                        cells_saved += exact.visited_cells - ea.visited;
+                    }
+                }
+            }
+        }
+        assert!(abandoned_seen > 0, "no abandonment ever triggered");
+        assert!(cells_saved > 0, "abandoning never saved any cells");
+    }
+
+    #[test]
+    fn spdtw_ea_matches_eval_and_abandons() {
+        let mut rng = Pcg64::new(17);
+        for t in [6usize, 15, 28] {
+            let x = rand_vec(&mut rng, t);
+            let y = rand_vec(&mut rng, t);
+            for band in [1usize, 3] {
+                let loc = LocMatrix::corridor(t, band);
+                let sp = SpDtw::new(loc.clone());
+                let exact = sp.eval(&x, &y);
+                let ea = spdtw_ea(&loc, &x, &y, f64::INFINITY);
+                assert_eq!(ea.visited, exact.visited_cells);
+                assert_eq!(ea.value.unwrap().to_bits(), exact.value.to_bits());
+                let tight = spdtw_ea(&loc, &x, &y, 0.5 * exact.value);
+                if let Some(v) = tight.value {
+                    assert_eq!(v.to_bits(), exact.value.to_bits());
+                } else {
+                    assert!(exact.value >= 0.5 * exact.value);
+                    assert!(tight.visited <= exact.visited_cells);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_ub_abandons_on_first_row() {
+        let x = vec![1.0; 16];
+        let y = vec![2.0; 16];
+        let ea = dtw_banded_ea(&x, &y, usize::MAX, 0.0);
+        assert_eq!(ea.value, None);
+        assert_eq!(ea.visited, 16); // exactly one row
+    }
+}

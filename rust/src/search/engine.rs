@@ -1,0 +1,447 @@
+//! The cascade k-NN [`SearchEngine`]: exact nearest-neighbor queries
+//! that prune with lower bounds and abandon DPs early, plus the batch /
+//! classification APIs parallelized over [`crate::pool::par_map`].
+//!
+//! ## Exactness contract
+//!
+//! Candidates are ranked by `(distance, train index)` lexicographically
+//! (`f64::total_cmp` on the distance) — exactly the order a stable sort
+//! over brute-force distances produces, so the returned neighbor list is
+//! bit-identical to `classify::nn::classify_knn`'s top-k.  The prune
+//! test accounts for boundary ties: a candidate whose lower bound
+//! *equals* the current k-th distance is only skipped when its index
+//! also loses the tie-break.
+
+use std::cmp::Ordering;
+use std::sync::Arc;
+
+use crate::classify::nn::vote;
+use crate::classify::EvalResult;
+use crate::data::{LabeledSet, TimeSeries};
+use crate::measures::lb_keogh::envelope;
+use crate::pool;
+use crate::search::lower_bounds::{lb_keogh_sum, lb_kim};
+use crate::search::{Cascade, Index, PruneStats};
+use crate::util::mathx::next_up_f64;
+
+/// One retrieved neighbor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub dist: f64,
+    pub label: usize,
+    pub train_idx: usize,
+}
+
+/// Result of one k-NN query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// The k nearest train series, ascending by `(dist, train_idx)`.
+    pub neighbors: Vec<Neighbor>,
+    pub stats: PruneStats,
+}
+
+impl QueryResult {
+    /// Majority-vote label over the neighbors (same tie-break as the
+    /// brute-force k-NN path).
+    pub fn predicted_label(&self) -> usize {
+        let pairs: Vec<(f64, usize)> =
+            self.neighbors.iter().map(|n| (n.dist, n.label)).collect();
+        vote(&pairs)
+    }
+}
+
+/// Cascade k-NN searcher over a shared [`Index`].
+#[derive(Clone)]
+pub struct SearchEngine {
+    pub index: Arc<Index>,
+    pub cascade: Cascade,
+}
+
+impl SearchEngine {
+    pub fn new(index: Arc<Index>, cascade: Cascade) -> SearchEngine {
+        SearchEngine { index, cascade }
+    }
+
+    /// k nearest neighbors of `query`.
+    pub fn knn(&self, query: &TimeSeries, k: usize) -> QueryResult {
+        self.knn_values(&query.values, k)
+    }
+
+    /// k nearest neighbors of a raw value slice.
+    pub fn knn_values(&self, query: &[f64], k: usize) -> QueryResult {
+        let idx = &*self.index;
+        assert!(k >= 1, "k must be >= 1");
+        assert_eq!(
+            query.len(),
+            idx.t,
+            "query length {} != indexed length {}",
+            query.len(),
+            idx.t
+        );
+        let normalized: Vec<f64>;
+        let q: &[f64] = if idx.znormalized {
+            normalized = TimeSeries::new(0, query.to_vec()).znormalized().values;
+            &normalized
+        } else {
+            query
+        };
+
+        let cas = self.cascade.effective(idx);
+        let mut stats = PruneStats {
+            queries: 1,
+            ..Default::default()
+        };
+
+        // Query-side envelope, built once per query (reversed LB_Keogh).
+        let qenv: Option<(Vec<f64>, Vec<f64>)> = if cas.keogh_rev {
+            stats.lb_cells += idx.t as u64;
+            Some(envelope(q, idx.radius))
+        } else {
+            None
+        };
+
+        // O(1)-per-candidate LB_Kim values, also reused as the visit
+        // order (ascending bound tightens best-so-far early).
+        let n = idx.len();
+        let kim_lbs: Option<Vec<f64>> = if cas.kim || cas.order_by_lb {
+            Some(
+                (0..n)
+                    .map(|j| {
+                        let (u, l) = &idx.envs[j];
+                        lb_kim(q, u, l)
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        if cas.order_by_lb {
+            if let Some(lbs) = &kim_lbs {
+                order.sort_by(|&a, &b| lbs[a].total_cmp(&lbs[b]).then(a.cmp(&b)));
+            }
+        }
+
+        // Current best k as (dist, train_idx), ascending lexicographic.
+        let mut top: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        for &j in &order {
+            stats.candidates += 1;
+            if cas.kim {
+                if let Some(lbs) = &kim_lbs {
+                    if cannot_beat(lbs[j], j, &top, k) {
+                        stats.kim_pruned += 1;
+                        continue;
+                    }
+                }
+            }
+            if cas.keogh {
+                let (u, l) = &idx.envs[j];
+                let lb = lb_keogh_sum(q, u, l);
+                stats.lb_cells += idx.t as u64;
+                if cannot_beat(lb, j, &top, k) {
+                    stats.keogh_pruned += 1;
+                    continue;
+                }
+            }
+            if let Some((qu, ql)) = &qenv {
+                let lb = lb_keogh_sum(&idx.series[j], qu, ql);
+                stats.lb_cells += idx.t as u64;
+                if cannot_beat(lb, j, &top, k) {
+                    stats.rev_pruned += 1;
+                    continue;
+                }
+            }
+            let ub = abandon_threshold(j, &top, k, cas.early_abandon);
+            let ea = idx.full_eval(q, j, ub);
+            stats.dp_cells += ea.visited;
+            match ea.value {
+                None => stats.abandoned += 1,
+                Some(v) => {
+                    stats.full_evals += 1;
+                    insert_neighbor(&mut top, k, v, j);
+                }
+            }
+        }
+        QueryResult {
+            neighbors: top
+                .into_iter()
+                .map(|(dist, j)| Neighbor {
+                    dist,
+                    label: idx.labels[j],
+                    train_idx: j,
+                })
+                .collect(),
+            stats,
+        }
+    }
+
+    /// Batch k-NN over a whole query set (parallel across queries).
+    pub fn batch_knn(&self, queries: &LabeledSet, k: usize, threads: usize) -> Vec<QueryResult> {
+        pool::par_map(queries.len(), threads, |i| self.knn(&queries.series[i], k))
+    }
+
+    /// k-NN classification of `test`, with aggregate prune counters.
+    /// `EvalResult::visited_cells` counts every cell touched (DP + LB
+    /// scans) so it stays comparable to the brute-force path;
+    /// `comparisons` counts candidates that entered the cascade.
+    pub fn classify(
+        &self,
+        test: &LabeledSet,
+        k: usize,
+        threads: usize,
+    ) -> (EvalResult, PruneStats) {
+        let results = self.batch_knn(test, k, threads);
+        let mut stats = PruneStats::default();
+        let pred: Vec<usize> = results
+            .iter()
+            .map(|r| {
+                stats.merge(&r.stats);
+                r.predicted_label()
+            })
+            .collect();
+        let eval =
+            EvalResult::from_predictions(test, &pred, stats.total_cells(), stats.candidates);
+        (eval, stats)
+    }
+}
+
+/// Exact prune test under the `(dist, idx)` lexicographic order: true
+/// iff a candidate with true distance ≥ `lb` can no longer enter the
+/// current top-k.
+fn cannot_beat(lb: f64, j: usize, top: &[(f64, usize)], k: usize) -> bool {
+    if top.len() < k {
+        return false;
+    }
+    let (wd, wj) = top[k - 1];
+    match lb.total_cmp(&wd) {
+        // dist >= lb > worst: can never displace it.
+        Ordering::Greater => true,
+        // dist >= lb == worst: displaces only on an exact distance tie
+        // won by a smaller train index.
+        Ordering::Equal => j > wj,
+        Ordering::Less => false,
+    }
+}
+
+/// Abandon threshold for the DP stage: the loosest bound that still
+/// guarantees an abandoned candidate could not have entered the top-k
+/// (ties included).  INFINITY when the top-k is not yet full or early
+/// abandoning is disabled.
+fn abandon_threshold(j: usize, top: &[(f64, usize)], k: usize, enabled: bool) -> f64 {
+    if !enabled || top.len() < k {
+        return f64::INFINITY;
+    }
+    let (wd, wj) = top[k - 1];
+    if j > wj {
+        // a tie at wd loses to wj anyway: abandoning at >= wd is safe
+        wd
+    } else {
+        // j would win a tie at wd, so only abandon strictly above it
+        next_up_f64(wd)
+    }
+}
+
+/// Insert `(d, j)` into the ascending `(dist, idx)` top-k list.
+fn insert_neighbor(top: &mut Vec<(f64, usize)>, k: usize, d: f64, j: usize) {
+    let pos = top.partition_point(|&(bd, bj)| match bd.total_cmp(&d) {
+        Ordering::Less => true,
+        Ordering::Equal => bj < j,
+        Ordering::Greater => false,
+    });
+    if pos >= k {
+        return;
+    }
+    top.insert(pos, (d, j));
+    top.truncate(k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+    use crate::measures::dtw::dtw_banded;
+    use crate::sparse::LocMatrix;
+    use crate::util::rng::Pcg64;
+
+    /// Brute-force top-k under the same (dist, idx) order.
+    fn brute_topk(
+        idx: &Index,
+        query: &[f64],
+        k: usize,
+    ) -> Vec<(f64, usize)> {
+        let mut all: Vec<(f64, usize)> = (0..idx.len())
+            .map(|j| {
+                let d = match &idx.loc {
+                    Some(loc) => crate::measures::spdtw::SpDtw::from_arc(Arc::clone(loc))
+                        .eval(query, &idx.series[j])
+                        .value,
+                    None => dtw_banded(query, &idx.series[j], idx.band).value,
+                };
+                (d, j)
+            })
+            .collect();
+        all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_matches_brute_force_bitwise() {
+        let ds = synthetic::generate_scaled("CBF", 21, 20, 10).unwrap();
+        let band = ds.series_len() / 10;
+        let idx = Arc::new(Index::build(&ds.train, band, 2));
+        for cascade in [Cascade::default(), Cascade::none()] {
+            let eng = SearchEngine::new(Arc::clone(&idx), cascade);
+            for probe in &ds.test.series {
+                for k in [1usize, 3] {
+                    let got = eng.knn(probe, k);
+                    let want = brute_topk(&idx, &probe.values, k);
+                    assert_eq!(got.neighbors.len(), want.len());
+                    for (n, (wd, wj)) in got.neighbors.iter().zip(&want) {
+                        assert_eq!(n.dist.to_bits(), wd.to_bits());
+                        assert_eq!(n.train_idx, *wj);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spdtw_engine_matches_brute_force() {
+        let ds = synthetic::generate_scaled("Gun-Point", 9, 16, 8).unwrap();
+        let loc = Arc::new(LocMatrix::corridor(ds.series_len(), 4));
+        let idx = Arc::new(Index::build_spdtw(&ds.train, loc, 2));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        for probe in &ds.test.series {
+            let got = eng.knn(probe, 1);
+            let want = brute_topk(&idx, &probe.values, 1);
+            assert_eq!(got.neighbors[0].dist.to_bits(), want[0].0.to_bits());
+            assert_eq!(got.neighbors[0].train_idx, want[0].1);
+        }
+    }
+
+    #[test]
+    fn cascade_prunes_and_saves_cells() {
+        let ds = synthetic::generate_scaled("CBF", 4, 30, 20).unwrap();
+        let band = (ds.series_len() as f64 * 0.1) as usize;
+        let idx = Arc::new(Index::build(&ds.train, band, 2));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let (_, stats) = eng.classify(&ds.test, 1, 2);
+        assert!(stats.pruned() > 0, "cascade pruned nothing");
+        let brute_cells = idx.full_eval_cells() * stats.candidates;
+        assert!(
+            stats.dp_cells < brute_cells,
+            "no DP cells saved: {} vs {}",
+            stats.dp_cells,
+            brute_cells
+        );
+        assert_eq!(
+            stats.candidates,
+            (ds.test.len() * ds.train.len()) as u64
+        );
+        assert_eq!(
+            stats.kim_pruned
+                + stats.keogh_pruned
+                + stats.rev_pruned
+                + stats.abandoned
+                + stats.full_evals,
+            stats.candidates
+        );
+    }
+
+    #[test]
+    fn duplicate_train_series_tie_break_matches_brute() {
+        // identical candidates produce exact distance ties: the engine
+        // must keep the smaller train index, like a stable sort.
+        let train = from_pairs(vec![
+            (7, vec![0.0, 1.0, 0.0, -1.0]),
+            (3, vec![0.0, 1.0, 0.0, -1.0]),
+            (1, vec![5.0, 5.0, 5.0, 5.0]),
+        ]);
+        let idx = Arc::new(Index::build(&train, 1, 1));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let r = eng.knn_values(&[0.0, 1.0, 0.0, -1.0], 2);
+        assert_eq!(r.neighbors[0].train_idx, 0);
+        assert_eq!(r.neighbors[0].label, 7);
+        assert_eq!(r.neighbors[1].train_idx, 1);
+        assert_eq!(r.neighbors[1].dist, 0.0);
+    }
+
+    #[test]
+    fn classification_agrees_with_bruteforce_knn() {
+        use crate::classify::nn::classify_knn;
+        use crate::measures::dtw::BandedDtw;
+
+        let ds = synthetic::generate_scaled("SyntheticControl", 5, 24, 18).unwrap();
+        let band = 6;
+        let idx = Arc::new(Index::build(&ds.train, band, 2));
+        for k in [1usize, 3] {
+            let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+            let (eval, stats) = eng.classify(&ds.test, k, 2);
+            let brute = classify_knn(&BandedDtw(band), &ds.train, &ds.test, k, 2);
+            assert_eq!(eval.error_rate, brute.error_rate, "k={k}");
+            assert!(stats.dp_cells < brute.visited_cells);
+        }
+    }
+
+    #[test]
+    fn order_by_lb_only_changes_work_not_results() {
+        let ds = synthetic::generate_scaled("CBF", 31, 18, 12).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 4, 2));
+        let ordered = SearchEngine::new(
+            Arc::clone(&idx),
+            Cascade {
+                order_by_lb: true,
+                ..Cascade::default()
+            },
+        );
+        let scan = SearchEngine::new(
+            Arc::clone(&idx),
+            Cascade {
+                order_by_lb: false,
+                ..Cascade::default()
+            },
+        );
+        for probe in &ds.test.series {
+            let a = ordered.knn(probe, 3);
+            let b = scan.knn(probe, 3);
+            let ka: Vec<(u64, usize)> = a
+                .neighbors
+                .iter()
+                .map(|n| (n.dist.to_bits(), n.train_idx))
+                .collect();
+            let kb: Vec<(u64, usize)> = b
+                .neighbors
+                .iter()
+                .map(|n| (n.dist.to_bits(), n.train_idx))
+                .collect();
+            assert_eq!(ka, kb);
+        }
+    }
+
+    #[test]
+    fn random_small_sets_fuzz_against_brute() {
+        let mut rng = Pcg64::new(77);
+        for case in 0..25 {
+            let t = 4 + rng.below(12);
+            let n = 3 + rng.below(8);
+            let train = from_pairs(
+                (0..n)
+                    .map(|i| (i % 2, (0..t).map(|_| rng.normal()).collect()))
+                    .collect(),
+            );
+            let band = 1 + rng.below(t);
+            let idx = Arc::new(Index::build(&train, band, 1));
+            let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+            let q: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let k = 1 + rng.below(n.min(4));
+            let got = eng.knn_values(&q, k);
+            let want = brute_topk(&idx, &q, k);
+            for (g, (wd, wj)) in got.neighbors.iter().zip(&want) {
+                assert_eq!(g.dist.to_bits(), wd.to_bits(), "case {case}");
+                assert_eq!(g.train_idx, *wj, "case {case}");
+            }
+        }
+    }
+}

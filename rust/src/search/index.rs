@@ -1,0 +1,208 @@
+//! The search [`Index`]: everything the cascade needs about a train
+//! set, built once and shared (cheaply clonable behind `Arc`) across
+//! queries, worker threads and the coordinator registry.
+//!
+//! Cached per train series:
+//! * its values (optionally z-normalized once, so per-query work never
+//!   re-normalizes the train side),
+//! * its warping envelope (Lemire streaming min/max, O(T)) at the
+//!   radius that covers the DP's reachable off-diagonal cells.
+
+use std::sync::Arc;
+
+use crate::data::LabeledSet;
+use crate::measures::lb_keogh::envelope;
+use crate::pool;
+use crate::search::early::{dtw_banded_ea, spdtw_ea, EaResult};
+use crate::sparse::LocMatrix;
+
+/// Prebuilt per-train-set state for cascade k-NN search.
+#[derive(Clone, Debug)]
+pub struct Index {
+    /// Series length (all series and queries must match).
+    pub t: usize,
+    /// Envelope radius: covers every off-diagonal cell the DP may visit.
+    pub radius: usize,
+    /// Band passed to the banded-DTW kernel (`usize::MAX` = unbounded).
+    pub band: usize,
+    /// Train series values (z-normalized iff [`Self::znormalized`]).
+    pub series: Vec<Vec<f64>>,
+    /// Train labels, parallel to `series`.
+    pub labels: Vec<usize>,
+    /// Per-series (upper, lower) envelopes at [`Self::radius`].
+    pub envs: Vec<(Vec<f64>, Vec<f64>)>,
+    /// When set, full evaluations run early-abandoning SP-DTW over this
+    /// grid instead of banded DTW.
+    pub loc: Option<Arc<LocMatrix>>,
+    /// Whether the envelope lower bounds are admissible for the DP in
+    /// use.  Always true for banded DTW; for SP-DTW it requires every
+    /// retained cell weight ≥ 1 (`f(p) = p^-γ` with γ ≥ 0 guarantees
+    /// it).  When false the engine skips the LB stages and relies on
+    /// early abandoning alone.
+    pub lb_valid: bool,
+    /// Stored series were z-normalized at build time; queries get the
+    /// same treatment at query time.
+    pub znormalized: bool,
+}
+
+impl Index {
+    /// Index for banded-DTW search.  `band = usize::MAX` (or ≥ T)
+    /// searches under unconstrained DTW.
+    pub fn build(train: &LabeledSet, band: usize, threads: usize) -> Index {
+        let t = train.series_len();
+        let radius = if band >= t { t.saturating_sub(1) } else { band };
+        Self::build_inner(train, radius, band, None, true, false, threads)
+    }
+
+    /// Like [`Self::build`] but stores z-normalized series and
+    /// z-normalizes queries before searching.
+    pub fn build_znormalized(train: &LabeledSet, band: usize, threads: usize) -> Index {
+        let t = train.series_len();
+        let radius = if band >= t { t.saturating_sub(1) } else { band };
+        Self::build_inner(train, radius, band, None, true, true, threads)
+    }
+
+    /// Index for SP-DTW search over a learned LOC grid: the envelope
+    /// radius shrinks to the grid's widest off-diagonal reach, and the
+    /// LB stages stay enabled only if every cell weight is ≥ 1.
+    pub fn build_spdtw(train: &LabeledSet, loc: Arc<LocMatrix>, threads: usize) -> Index {
+        let t = train.series_len();
+        assert_eq!(loc.t, t, "LOC grid T={} != series length {t}", loc.t);
+        let radius = loc.max_band_offset();
+        let lb_valid = loc.min_weight() >= 1.0 - 1e-12;
+        Self::build_inner(train, radius, usize::MAX, Some(loc), lb_valid, false, threads)
+    }
+
+    fn build_inner(
+        train: &LabeledSet,
+        radius: usize,
+        band: usize,
+        loc: Option<Arc<LocMatrix>>,
+        lb_valid: bool,
+        znormalize: bool,
+        threads: usize,
+    ) -> Index {
+        assert!(!train.is_empty(), "cannot index an empty train set");
+        let t = train.series_len();
+        assert!(t > 0, "cannot index zero-length series");
+        let series: Vec<Vec<f64>> = train
+            .series
+            .iter()
+            .map(|s| {
+                if znormalize {
+                    s.znormalized().values
+                } else {
+                    s.values.clone()
+                }
+            })
+            .collect();
+        let labels: Vec<usize> = train.series.iter().map(|s| s.label).collect();
+        let envs = pool::par_map(series.len(), threads, |i| envelope(&series[i], radius));
+        Index {
+            t,
+            radius,
+            band,
+            series,
+            labels,
+            envs,
+            loc,
+            lb_valid,
+            znormalized: znormalize,
+        }
+    }
+
+    /// Number of indexed train series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Exhaustive DP cells one comparison would cost without any
+    /// pruning — the per-candidate unit of the brute-force baseline.
+    pub fn full_eval_cells(&self) -> u64 {
+        match &self.loc {
+            Some(loc) => loc.nnz() as u64,
+            None => crate::measures::sakoe_chiba::band_cells(self.t, self.band.min(self.t)),
+        }
+    }
+
+    /// Early-abandoning full evaluation of `query` against candidate
+    /// `j` under upper bound `ub` (INFINITY = exhaustive).
+    pub fn full_eval(&self, query: &[f64], j: usize, ub: f64) -> EaResult {
+        match &self.loc {
+            Some(loc) => spdtw_ea(loc, query, &self.series[j], ub),
+            None => dtw_banded_ea(query, &self.series[j], self.band, ub),
+        }
+    }
+
+    /// Approximate resident size (bytes) — reported in the TCP
+    /// `register_index` reply.
+    pub fn memory_bytes(&self) -> usize {
+        let per_series = self.t * std::mem::size_of::<f64>();
+        // values + upper + lower envelopes
+        self.len() * per_series * 3 + self.len() * std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+
+    #[test]
+    fn build_caches_envelopes_for_every_series() {
+        let ds = synthetic::generate_scaled("CBF", 3, 12, 4).unwrap();
+        let idx = Index::build(&ds.train, 5, 2);
+        assert_eq!(idx.len(), ds.train.len());
+        assert_eq!(idx.envs.len(), idx.len());
+        assert_eq!(idx.t, ds.series_len());
+        assert_eq!(idx.radius, 5);
+        assert!(idx.lb_valid);
+        for (i, (u, l)) in idx.envs.iter().enumerate() {
+            for j in 0..idx.t {
+                assert!(l[j] <= idx.series[i][j] && idx.series[i][j] <= u[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn unbounded_band_clamps_radius() {
+        let train = from_pairs(vec![(0, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
+        let idx = Index::build(&train, usize::MAX, 1);
+        assert_eq!(idx.radius, 2);
+        assert_eq!(idx.band, usize::MAX);
+        assert_eq!(idx.full_eval_cells(), 9);
+    }
+
+    #[test]
+    fn spdtw_index_uses_grid_reach_and_weight_guard() {
+        let train = from_pairs(vec![(0, vec![0.0; 6]), (1, vec![1.0; 6])]);
+        let loc = LocMatrix::corridor(6, 2);
+        let idx = Index::build_spdtw(&train, Arc::new(loc.clone()), 1);
+        assert_eq!(idx.radius, 2);
+        assert!(idx.lb_valid);
+        assert_eq!(idx.full_eval_cells(), loc.nnz() as u64);
+
+        // a grid with a sub-unit weight must disable the LB stages
+        let soft = LocMatrix::from_triples(
+            6,
+            (0..6).map(|i| (i, i, if i == 3 { 0.5 } else { 1.0 })).collect(),
+        );
+        let idx2 = Index::build_spdtw(&train, Arc::new(soft), 1);
+        assert!(!idx2.lb_valid);
+    }
+
+    #[test]
+    fn znormalized_index_stores_unit_variance_series() {
+        let train = from_pairs(vec![(0, vec![10.0, 20.0, 30.0, 40.0])]);
+        let idx = Index::build_znormalized(&train, 1, 1);
+        let s = &idx.series[0];
+        let mean: f64 = s.iter().sum::<f64>() / s.len() as f64;
+        assert!(mean.abs() < 1e-12);
+        assert!(idx.znormalized);
+    }
+}

@@ -1,0 +1,89 @@
+//! Cheap lower bounds on the DP distances, evaluated against the
+//! envelopes cached in [`crate::search::Index`].
+//!
+//! Admissibility: every alignment path aligns `(0, 0)` and
+//! `(T-1, T-1)` and visits every row `i`, pairing `x[i]` only with
+//! `y[j]` for `|i - j| ≤ r` (`r` = the index envelope radius, which
+//! covers the DP band or the LOC grid's widest off-diagonal).  The
+//! squared distance from `x[i]` to the envelope `[l_i, u_i]` of those
+//! reachable `y[j]` therefore lower-bounds the cell cost — summing any
+//! subset of rows lower-bounds the full path cost (cell weights are
+//! ≥ 1; see [`crate::search::Index::lb_valid`]).
+
+/// Squared distance from `x` to the interval `[l, u]` (0 inside).
+#[inline(always)]
+pub fn env_dist2(x: f64, u: f64, l: f64) -> f64 {
+    if x > u {
+        (x - u) * (x - u)
+    } else if x < l {
+        (l - x) * (l - x)
+    } else {
+        0.0
+    }
+}
+
+/// O(1) endpoint bound: the first + last terms of LB_Keogh's sum.
+///
+/// Deliberately the *envelope-clamped* endpoints rather than the classic
+/// raw `φ(x_0, y_0) + φ(x_last, y_last)` of Kim et al.: clamping makes
+/// `lb_kim ≤ lb_keogh` hold unconditionally (the cascade-monotonicity
+/// property), while remaining a true lower bound on the DP distance.
+#[inline]
+pub fn lb_kim(query: &[f64], upper: &[f64], lower: &[f64]) -> f64 {
+    let t = query.len();
+    debug_assert!(t > 0 && upper.len() == t && lower.len() == t);
+    let head = env_dist2(query[0], upper[0], lower[0]);
+    if t == 1 {
+        head
+    } else {
+        head + env_dist2(query[t - 1], upper[t - 1], lower[t - 1])
+    }
+}
+
+/// Full O(T) LB_Keogh sum of `query` against an envelope.  Identical to
+/// [`crate::measures::lb_keogh::lb_keogh`]; re-exported here so the
+/// cascade reads as one unit.
+#[inline]
+pub fn lb_keogh_sum(query: &[f64], upper: &[f64], lower: &[f64]) -> f64 {
+    crate::measures::lb_keogh::lb_keogh(query, upper, lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::dtw::dtw_banded;
+    use crate::measures::lb_keogh::envelope;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn env_dist2_cases() {
+        assert_eq!(env_dist2(3.0, 2.0, 1.0), 1.0); // above
+        assert_eq!(env_dist2(0.0, 2.0, 1.0), 1.0); // below
+        assert_eq!(env_dist2(1.5, 2.0, 1.0), 0.0); // inside
+    }
+
+    #[test]
+    fn kim_is_below_keogh_is_below_dtw() {
+        let mut rng = Pcg64::new(5);
+        for _ in 0..40 {
+            let t = 2 + rng.below(30);
+            let x: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            for r in [1usize, 4, 9] {
+                let (u, l) = envelope(&y, r);
+                let kim = lb_kim(&x, &u, &l);
+                let keogh = lb_keogh_sum(&x, &u, &l);
+                let d = dtw_banded(&x, &y, r).value;
+                assert!(kim <= keogh + 1e-12, "kim {kim} > keogh {keogh}");
+                assert!(keogh <= d + 1e-9, "keogh {keogh} > dtw {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_point_series() {
+        let (u, l) = envelope(&[2.0], 3);
+        assert_eq!(lb_kim(&[5.0], &u, &l), 9.0);
+        assert_eq!(lb_keogh_sum(&[5.0], &u, &l), 9.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Similarity-search engine: cascaded lower bounds + early-abandoning
+//! DP over a prebuilt train-set index.
+//!
+//! The paper's LOC sparse grid cuts the DP cells *per comparison*; this
+//! subsystem additionally cuts the *number of full comparisons per
+//! query* — the indexing-family speed-up the paper surveys in §II-B.2 —
+//! and composes with the sparse grid: the early-abandoning SP-DTW
+//! threads the best-so-far upper bound through the LOC rows.
+//!
+//! ## The cascade
+//!
+//! For a k-NN query, every train candidate passes through a cascade of
+//! increasingly expensive filters; the full DP runs only on survivors,
+//! and even then it abandons as soon as a DP row proves the best-so-far
+//! (the current k-th nearest distance) unbeatable:
+//!
+//! | stage | cost | filter |
+//! |-------|------|--------|
+//! | 1. `LB_Kim` | O(1) | envelope-clamped endpoint bound (see below) |
+//! | 2. `LB_Keogh` | O(T) | query vs cached candidate envelope |
+//! | 3. reversed `LB_Keogh` | O(T) | candidate vs query envelope |
+//! | 4. early-abandoning DP | ≤ O(T·band) / O(nnz) | banded DTW or SP-DTW |
+//!
+//! The `LB_Kim` variant used here is the two *endpoint terms of
+//! `LB_Keogh`* (clamped against the cached envelope), not the classic
+//! raw-endpoint bound: that choice makes the chain *monotone* —
+//! `LB_Kim ≤ LB_Keogh ≤ DP distance` always holds (property-tested in
+//! `tests/prop_invariants.rs`), so a candidate pruned by a cheap stage
+//! can never survive a later one.
+//!
+//! ## Exactness
+//!
+//! Pruning and abandoning are *admissible*: results are identical to
+//! brute-force k-NN over the same DP measure.  Candidates are compared
+//! by `(distance, train index)` lexicographically — the same total
+//! order a stable sort over brute-force distances produces — and the
+//! prune test [`engine`] uses is exact under that order.  The
+//! early-abandoning kernels mirror the FP operation order of
+//! [`crate::measures::dtw::dtw_banded`] / `SpDtw::eval`, so
+//! non-abandoned values are bit-identical to the exhaustive ones.
+//!
+//! ## Layout
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`lower_bounds`] | LB_Kim + reversed LB_Keogh over cached envelopes |
+//! | [`early`] | early-abandoning banded DTW and SP-DTW kernels |
+//! | [`index`] | [`Index`]: envelopes + normalized series cached per train set |
+//! | [`engine`] | [`SearchEngine`]: k-NN queries, batch API, classification |
+//!
+//! Per-query [`PruneStats`] counters feed the paper's visited-cells
+//! accounting (Table VI) and the coordinator's metrics export.
+
+pub mod early;
+pub mod engine;
+pub mod index;
+pub mod lower_bounds;
+
+pub use engine::{Neighbor, QueryResult, SearchEngine};
+pub use index::Index;
+
+/// Which cascade stages are enabled.  All stages are admissible, so any
+/// subset yields exact k-NN results — disabling stages only changes how
+/// much work is pruned (the ablation axis of `bench_search`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cascade {
+    /// O(1) envelope-endpoint bound (stage 1).
+    pub kim: bool,
+    /// O(T) query-vs-candidate-envelope bound (stage 2).
+    pub keogh: bool,
+    /// O(T) candidate-vs-query-envelope bound (stage 3).
+    pub keogh_rev: bool,
+    /// Row-wise early abandoning inside the full DP (stage 4).
+    pub early_abandon: bool,
+    /// Visit candidates in ascending LB_Kim order (tightens the
+    /// best-so-far bound early, maximizing downstream pruning).
+    pub order_by_lb: bool,
+}
+
+impl Default for Cascade {
+    fn default() -> Self {
+        Cascade {
+            kim: true,
+            keogh: true,
+            keogh_rev: true,
+            early_abandon: true,
+            order_by_lb: true,
+        }
+    }
+}
+
+impl Cascade {
+    /// Everything off: the engine degenerates to brute-force scanning
+    /// (the bench baseline).
+    pub fn none() -> Self {
+        Cascade {
+            kim: false,
+            keogh: false,
+            keogh_rev: false,
+            early_abandon: false,
+            order_by_lb: false,
+        }
+    }
+
+    /// Cascade actually applied against `index`: lower-bound stages are
+    /// dropped when the index cannot guarantee their admissibility
+    /// (an SP-DTW grid with cell weights < 1 — see [`Index::lb_valid`]).
+    pub fn effective(&self, index: &Index) -> Cascade {
+        if index.lb_valid {
+            *self
+        } else {
+            Cascade {
+                kim: false,
+                keogh: false,
+                keogh_rev: false,
+                order_by_lb: false,
+                ..*self
+            }
+        }
+    }
+}
+
+/// Per-query (mergeable) cascade counters — how each candidate left the
+/// pipeline, plus the cell accounting behind the paper's Table VI.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Queries aggregated into this record.
+    pub queries: u64,
+    /// Candidates entering the cascade (= queries × train size).
+    pub candidates: u64,
+    /// Dropped by the O(1) LB_Kim stage.
+    pub kim_pruned: u64,
+    /// Dropped by LB_Keogh.
+    pub keogh_pruned: u64,
+    /// Dropped by the reversed LB_Keogh.
+    pub rev_pruned: u64,
+    /// Full DPs started but abandoned mid-way.
+    pub abandoned: u64,
+    /// Full DPs evaluated to completion.
+    pub full_evals: u64,
+    /// DP cells actually computed (including partial, abandoned DPs).
+    pub dp_cells: u64,
+    /// Cells scanned by O(T) lower-bound passes.
+    pub lb_cells: u64,
+}
+
+impl PruneStats {
+    pub fn merge(&mut self, o: &PruneStats) {
+        self.queries += o.queries;
+        self.candidates += o.candidates;
+        self.kim_pruned += o.kim_pruned;
+        self.keogh_pruned += o.keogh_pruned;
+        self.rev_pruned += o.rev_pruned;
+        self.abandoned += o.abandoned;
+        self.full_evals += o.full_evals;
+        self.dp_cells += o.dp_cells;
+        self.lb_cells += o.lb_cells;
+    }
+
+    /// Candidates that never reached a completed full DP.
+    pub fn pruned(&self) -> u64 {
+        self.kim_pruned + self.keogh_pruned + self.rev_pruned + self.abandoned
+    }
+
+    /// Fraction of candidates pruned before a completed full DP.
+    pub fn prune_ratio(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.pruned() as f64 / self.candidates as f64
+        }
+    }
+
+    /// Total cells touched (DP + lower-bound scans) — comparable to a
+    /// brute-force scan's `visited_cells`.
+    pub fn total_cells(&self) -> u64 {
+        self.dp_cells + self.lb_cells
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "queries: {}  candidates: {}\n\
+             pruned: {} kim / {} keogh / {} rev-keogh, {} abandoned, {} full DPs ({:.1}% pruned)\n\
+             cells: {} DP + {} LB = {}",
+            self.queries,
+            self.candidates,
+            self.kim_pruned,
+            self.keogh_pruned,
+            self.rev_pruned,
+            self.abandoned,
+            self.full_evals,
+            100.0 * self.prune_ratio(),
+            self.dp_cells,
+            self.lb_cells,
+            self.total_cells(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = PruneStats {
+            queries: 1,
+            candidates: 10,
+            kim_pruned: 2,
+            keogh_pruned: 3,
+            rev_pruned: 1,
+            abandoned: 1,
+            full_evals: 3,
+            dp_cells: 100,
+            lb_cells: 40,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.queries, 2);
+        assert_eq!(a.candidates, 20);
+        assert_eq!(a.pruned(), 14);
+        assert_eq!(a.full_evals, 6);
+        assert_eq!(a.total_cells(), 280);
+        assert!((a.prune_ratio() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_ratio_is_zero() {
+        assert_eq!(PruneStats::default().prune_ratio(), 0.0);
+    }
+
+    #[test]
+    fn report_mentions_all_stages() {
+        let r = PruneStats::default().report();
+        assert!(r.contains("kim") && r.contains("keogh") && r.contains("abandoned"));
+    }
+
+    #[test]
+    fn cascade_default_all_on_none_all_off() {
+        let d = Cascade::default();
+        assert!(d.kim && d.keogh && d.keogh_rev && d.early_abandon && d.order_by_lb);
+        let n = Cascade::none();
+        assert!(!n.kim && !n.keogh && !n.keogh_rev && !n.early_abandon && !n.order_by_lb);
+    }
+}

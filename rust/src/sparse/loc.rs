@@ -200,6 +200,24 @@ impl LocMatrix {
     pub fn to_triples(&self) -> Vec<(usize, usize, f64)> {
         self.iter_cells().map(|(r, c, w, _)| (r, c, w)).collect()
     }
+
+    /// Widest off-diagonal reach `max |r - c|` over the retained cells —
+    /// the tightest envelope radius for which LB_Keogh stays admissible
+    /// for SP-DTW over this grid (`search::Index::build_spdtw`).
+    pub fn max_band_offset(&self) -> usize {
+        self.rows
+            .iter()
+            .zip(&self.cols)
+            .map(|(&r, &c)| (r as i64 - c as i64).unsigned_abs() as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Smallest cell weight (INFINITY for an empty grid).  Lower bounds
+    /// derived from unweighted costs require this to be ≥ 1.
+    pub fn min_weight(&self) -> f64 {
+        self.weights.iter().copied().fold(f64::INFINITY, f64::min)
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +281,16 @@ mod tests {
         let plane = m.pack_mask_plane_f64();
         let ones = plane.iter().filter(|&&v| v == 1.0).count();
         assert_eq!(ones, m.nnz());
+    }
+
+    #[test]
+    fn band_offset_and_min_weight() {
+        assert_eq!(LocMatrix::corridor(8, 0).max_band_offset(), 0);
+        assert_eq!(LocMatrix::corridor(8, 3).max_band_offset(), 3);
+        assert_eq!(LocMatrix::full(5).max_band_offset(), 4);
+        let m = LocMatrix::from_triples(4, vec![(0, 0, 2.0), (3, 0, 0.5), (3, 3, 1.0)]);
+        assert_eq!(m.max_band_offset(), 3);
+        assert_eq!(m.min_weight(), 0.5);
     }
 
     #[test]

@@ -75,6 +75,25 @@ pub fn avg_ranks(xs: &[f64]) -> Vec<f64> {
     ranks
 }
 
+/// Smallest f64 strictly greater than `v` (NaN and +inf map to
+/// themselves).  Used by the search engine's tie-exact abandon
+/// threshold; in-tree because `f64::next_up` is not yet stable on the
+/// pinned toolchain.
+pub fn next_up_f64(v: f64) -> f64 {
+    if v.is_nan() || v == f64::INFINITY {
+        return v;
+    }
+    if v == 0.0 {
+        return f64::from_bits(1); // smallest positive subnormal
+    }
+    let bits = v.to_bits();
+    if v.is_sign_positive() {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
 /// log(sum(exp(xs))) with the usual max-shift; NEG-safe.
 pub fn logsumexp(xs: &[f64]) -> f64 {
     let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
@@ -115,6 +134,19 @@ mod tests {
     fn ranks_with_ties() {
         let r = avg_ranks(&[10.0, 20.0, 20.0, 30.0]);
         assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn next_up_properties() {
+        for v in [-2.5, -0.0, 0.0, 1.0, 1e30] {
+            let up = next_up_f64(v);
+            assert!(up > v, "next_up({v}) = {up} not greater");
+            // nothing strictly between v and next_up(v)
+            let mid = v + 0.5 * (up - v);
+            assert!(mid == v || mid == up);
+        }
+        assert_eq!(next_up_f64(f64::INFINITY), f64::INFINITY);
+        assert!(next_up_f64(f64::NAN).is_nan());
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! End-to-end acceptance tests for the `search` subsystem: exactness
+//! vs brute force on fixed synthetic workloads, cell savings, the
+//! coordinator Search path, and the TCP protocol ops.
+
+use std::sync::Arc;
+
+use spdtw::classify::nn::{classify_knn, classify_knn_indexed};
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::measures::dtw::{dtw_banded, BandedDtw};
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::util::json::Json;
+
+/// THE acceptance invariant: on a fixed synthetic workload the engine
+/// returns bit-identical k-NN results to brute force while computing
+/// strictly fewer full DP cells.
+#[test]
+fn search_is_exact_and_strictly_cheaper_than_brute_force() {
+    let ds = synthetic::generate_scaled("CBF", 42, 30, 25).unwrap();
+    let t = ds.series_len();
+    let band = (t as f64 * 0.1).round() as usize;
+    let index = Arc::new(Index::build(&ds.train, band, 4));
+    let engine = SearchEngine::new(Arc::clone(&index), Cascade::default());
+
+    for k in [1usize, 3] {
+        // per-query neighbor lists, bit for bit
+        let mut total_stats = spdtw::search::PruneStats::default();
+        for probe in &ds.test.series {
+            let got = engine.knn(probe, k);
+            let mut want: Vec<(f64, usize)> = ds
+                .train
+                .series
+                .iter()
+                .enumerate()
+                .map(|(j, tr)| (dtw_banded(&probe.values, &tr.values, band).value, j))
+                .collect();
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            want.truncate(k);
+            assert_eq!(got.neighbors.len(), want.len());
+            for (g, (wd, wj)) in got.neighbors.iter().zip(&want) {
+                assert_eq!(g.dist.to_bits(), wd.to_bits(), "k={k}");
+                assert_eq!(g.train_idx, *wj, "k={k}");
+            }
+            total_stats.merge(&got.stats);
+        }
+        assert_eq!(total_stats.queries, ds.test.len() as u64);
+        // classification decisions identical to brute-force classify_knn
+        let (eval, stats) = classify_knn_indexed(&index, Cascade::default(), &ds.test, k, 4);
+        let brute = classify_knn(&BandedDtw(band), &ds.train, &ds.test, k, 4);
+        assert_eq!(eval.error_rate, brute.error_rate, "k={k}");
+        // strictly fewer full DP cells than the exhaustive scan
+        assert!(
+            stats.dp_cells < brute.visited_cells,
+            "k={k}: {} DP cells vs brute {}",
+            stats.dp_cells,
+            brute.visited_cells
+        );
+        assert!(stats.pruned() > 0, "k={k}: cascade pruned nothing");
+        assert_eq!(stats.candidates, brute.comparisons);
+    }
+}
+
+#[test]
+fn spdtw_search_composes_with_learned_loc_grid() {
+    // The headline composition: cascade pruning over the paper's sparse
+    // grid — fewer comparisons AND fewer cells per comparison.
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 24, 16).unwrap();
+    let grid = learn_occupancy_grid(&ds.train, 4);
+    let loc = Arc::new(grid.threshold(1.0).to_loc(1.0));
+    assert!(loc.min_weight() >= 1.0 - 1e-12, "learned weights must be >= 1");
+    let index = Arc::new(Index::build_spdtw(&ds.train, Arc::clone(&loc), 4));
+    assert!(index.lb_valid);
+
+    let (eval, stats) = classify_knn_indexed(&index, Cascade::default(), &ds.test, 1, 4);
+    let sp = SpDtw::from_arc(Arc::clone(&loc));
+    let brute = classify_knn(&sp, &ds.train, &ds.test, 1, 4);
+    assert_eq!(eval.error_rate, brute.error_rate);
+    assert!(stats.dp_cells < brute.visited_cells);
+    assert!(stats.pruned() > 0);
+}
+
+#[test]
+fn cascade_stage_ablations_stay_exact() {
+    let ds = synthetic::generate_scaled("Gun-Point", 11, 20, 12).unwrap();
+    let band = 5;
+    let index = Arc::new(Index::build(&ds.train, band, 2));
+    let brute = classify_knn(&BandedDtw(band), &ds.train, &ds.test, 1, 2);
+    let variants = [
+        Cascade::default(),
+        Cascade { kim: false, ..Cascade::default() },
+        Cascade { keogh_rev: false, ..Cascade::default() },
+        Cascade { early_abandon: false, ..Cascade::default() },
+        Cascade { order_by_lb: false, ..Cascade::default() },
+        Cascade::none(),
+    ];
+    for cas in variants {
+        let (eval, _) = classify_knn_indexed(&index, cas, &ds.test, 1, 2);
+        assert_eq!(eval.error_rate, brute.error_rate, "{cas:?}");
+    }
+}
+
+#[test]
+fn znormalized_search_matches_bruteforce_on_znormalized_sets() {
+    // the engine z-normalizes queries itself; brute force must see
+    // pre-normalized copies of both splits to agree bit-for-bit.
+    let ds = synthetic::generate_scaled("Gun-Point", 6, 18, 10).unwrap();
+    let band = 7;
+    let index = Arc::new(Index::build_znormalized(&ds.train, band, 2));
+    let (eval, stats) = classify_knn_indexed(&index, Cascade::default(), &ds.test, 1, 2);
+    let mut tr = ds.train.clone();
+    let mut te = ds.test.clone();
+    tr.znormalize();
+    te.znormalize();
+    let brute = classify_knn(&BandedDtw(band), &tr, &te, 1, 2);
+    assert_eq!(eval.error_rate, brute.error_rate);
+    assert!(stats.dp_cells < brute.visited_cells);
+}
+
+#[test]
+fn coordinator_search_request_end_to_end() {
+    let ds = synthetic::generate_scaled("CBF", 8, 16, 6).unwrap();
+    let band = 6;
+    let coord = Coordinator::start(CoordinatorConfig::default(), None).unwrap();
+    let key = coord.register_index(Index::build(&ds.train, band, 2));
+
+    let tickets: Vec<_> = ds
+        .test
+        .series
+        .iter()
+        .map(|probe| coord.submit_search(key, probe, 2, Cascade::default()).unwrap())
+        .collect();
+    for (probe, ticket) in ds.test.series.iter().zip(tickets) {
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.neighbors.len(), 2);
+        // spot-check the nearest against a direct evaluation
+        let direct = dtw_banded(
+            &probe.values,
+            &ds.train.series[out.neighbors[0].train_idx].values,
+            band,
+        )
+        .value;
+        assert_eq!(out.neighbors[0].dist.to_bits(), direct.to_bits());
+    }
+    coord.wait_native_idle();
+    let snap = coord.metrics();
+    assert_eq!(snap.search_queries, ds.test.len() as u64);
+    assert_eq!(
+        snap.search_candidates,
+        (ds.test.len() * ds.train.len()) as u64
+    );
+    assert_eq!(
+        snap.lb_kim_skips
+            + snap.lb_keogh_skips
+            + snap.lb_rev_skips
+            + snap.early_abandons
+            + snap.full_dp_evals,
+        snap.search_candidates
+    );
+    assert!(snap.search_prune_ratio() > 0.0);
+    assert!(snap.report().contains("search:"));
+}
+
+#[test]
+fn tcp_search_protocol_roundtrip() {
+    let ds = synthetic::generate_scaled("CBF", 15, 8, 2).unwrap();
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let mut server = Server::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let series_json: Vec<String> = ds
+        .train
+        .series
+        .iter()
+        .map(|s| {
+            let vals: Vec<String> = s.values.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    let labels: Vec<String> = ds.train.series.iter().map(|s| s.label.to_string()).collect();
+    let reg = client
+        .call(
+            &Json::parse(&format!(
+                r#"{{"op":"register_index","band":6,"series":[{}],"labels":[{}]}}"#,
+                series_json.join(","),
+                labels.join(",")
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(reg.get("ok"), Some(&Json::Bool(true)), "{reg:?}");
+    let idx = reg.req_usize("index").unwrap();
+
+    let qvals: Vec<String> = ds.test.series[0]
+        .values
+        .iter()
+        .map(|v| format!("{v}"))
+        .collect();
+    let r = client
+        .call(
+            &Json::parse(&format!(
+                r#"{{"op":"search","index":{idx},"k":3,"x":[{}]}}"#,
+                qvals.join(",")
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.req_arr("neighbors").unwrap().len(), 3);
+    assert_eq!(
+        r.req_f64("candidates").unwrap(),
+        ds.train.len() as f64
+    );
+    server.stop();
+}

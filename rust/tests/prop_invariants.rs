@@ -5,12 +5,17 @@ use std::sync::Arc;
 
 use spdtw::config::CoordinatorConfig;
 use spdtw::coordinator::Coordinator;
+use spdtw::data::splits::from_pairs;
 use spdtw::data::TimeSeries;
 use spdtw::measures::dtw::{dtw_banded, dtw_with_path, is_valid_path};
 use spdtw::measures::euclidean::Euclidean;
 use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::lb_keogh::envelope;
 use spdtw::measures::spdtw::SpDtw;
 use spdtw::measures::Measure;
+use spdtw::search::early::{dtw_banded_ea, spdtw_ea};
+use spdtw::search::lower_bounds::{lb_keogh_sum, lb_kim};
+use spdtw::search::{Cascade, Index, SearchEngine};
 use spdtw::sparse::{LocMatrix, OccupancyGrid};
 use spdtw::util::prop::{forall_pairs, forall_usizes, forall_vec, PropConfig};
 
@@ -115,6 +120,114 @@ fn prop_threshold_monotone_shrinks_support() {
             last = n;
         }
         true
+    });
+}
+
+#[test]
+fn prop_cascade_lower_bound_chain() {
+    // THE cascade invariant: LB_Kim <= LB_Keogh <= banded DTW for every
+    // radius — a candidate pruned by a cheap stage can never have
+    // survived a more expensive one.
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 36, 4.0, |x, y| {
+        [1usize, 3, 8, x.len().saturating_sub(1).max(1)]
+            .into_iter()
+            .all(|r| {
+                let (u, l) = envelope(y, r);
+                let kim = lb_kim(x, &u, &l);
+                let keogh = lb_keogh_sum(x, &u, &l);
+                let d = dtw_banded(x, y, r).value;
+                kim <= keogh + 1e-12 && keogh <= d + 1e-9
+            })
+    });
+}
+
+#[test]
+fn prop_cascade_lb_bounds_spdtw_on_learned_weights() {
+    // SP-DTW with weights >= 1 restricted to cells within the grid's
+    // off-diagonal reach is also bounded below by the cascade.
+    let cfg = PropConfig { cases: 24, ..Default::default() };
+    forall_pairs(&cfg, 4, 24, 3.0, |x, y| {
+        let t = x.len();
+        let band = (t / 4).max(1);
+        let mut triples = Vec::new();
+        for i in 0..t {
+            for j in i.saturating_sub(band)..=(i + band).min(t - 1) {
+                // deterministic pseudo-learned weights, all >= 1
+                let w = 1.0 + ((i * 7 + j * 13) % 5) as f64 * 0.5;
+                triples.push((i, j, w));
+            }
+        }
+        let loc = LocMatrix::from_triples(t, triples);
+        let r = loc.max_band_offset();
+        let (u, l) = envelope(y, r);
+        let kim = lb_kim(x, &u, &l);
+        let keogh = lb_keogh_sum(x, &u, &l);
+        let d = SpDtw::new(loc).eval(x, y).value;
+        kim <= keogh + 1e-12 && keogh <= d + 1e-9
+    });
+}
+
+#[test]
+fn prop_early_abandon_exact_when_completed() {
+    // EA kernels must return the bit-exact exhaustive value whenever
+    // they complete, and only abandon when the true value >= ub.
+    let cfg = PropConfig::default();
+    forall_pairs(&cfg, 2, 30, 4.0, |x, y| {
+        let t = x.len();
+        let band = (t / 3).max(1);
+        let exact = dtw_banded(x, y, band).value;
+        let loc = LocMatrix::corridor(t, band);
+        let sp_exact = SpDtw::new(loc.clone()).eval(x, y).value;
+        [0.0, 0.3, 0.7, 1.0, 1.5]
+            .into_iter()
+            .all(|frac| {
+                let ub = frac * exact;
+                let ea = dtw_banded_ea(x, y, band, ub);
+                let dtw_ok = match ea.value {
+                    Some(v) => v.to_bits() == exact.to_bits(),
+                    None => exact >= ub,
+                };
+                let ub_sp = frac * sp_exact;
+                let ea_sp = spdtw_ea(&loc, x, y, ub_sp);
+                let sp_ok = match ea_sp.value {
+                    Some(v) => v.to_bits() == sp_exact.to_bits(),
+                    None => sp_exact >= ub_sp,
+                };
+                dtw_ok && sp_ok
+            })
+    });
+}
+
+#[test]
+fn prop_search_engine_matches_bruteforce_knn() {
+    // End-to-end cascade exactness: engine top-k == stable-sorted
+    // brute-force top-k, bit for bit, on random little train sets.
+    let cfg = PropConfig { cases: 24, ..Default::default() };
+    forall_usizes(&cfg, &[(3, 10), (4, 16), (1, 3)], |vals| {
+        let (n, t, k) = (vals[0], vals[1], vals[2].min(vals[0]));
+        let mk = |s: usize| -> Vec<f64> {
+            (0..t)
+                .map(|i| (((s * 31 + i * 17) % 23) as f64 * 0.37).sin() * 2.0)
+                .collect()
+        };
+        let train = from_pairs((0..n).map(|s| (s % 3, mk(s))).collect());
+        let band = (t / 3).max(1);
+        let index = Arc::new(Index::build(&train, band, 1));
+        let engine = SearchEngine::new(Arc::clone(&index), Cascade::default());
+        let q = mk(n + 1);
+        let got = engine.knn_values(&q, k);
+        let mut want: Vec<(f64, usize)> = (0..n)
+            .map(|j| (dtw_banded(&q, &index.series[j], band).value, j))
+            .collect();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        want.truncate(k);
+        got.neighbors.len() == want.len()
+            && got
+                .neighbors
+                .iter()
+                .zip(&want)
+                .all(|(g, (wd, wj))| g.dist.to_bits() == wd.to_bits() && g.train_idx == *wj)
     });
 }
 
