@@ -14,7 +14,7 @@ use spdtw::classify::nn::classify_knn;
 use spdtw::data::synthetic;
 use spdtw::measures::dtw::BandedDtw;
 use spdtw::measures::spdtw::SpDtw;
-use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::search::{persist, Cascade, Index, SearchEngine};
 use spdtw::sparse::learn::learn_occupancy_grid;
 
 fn run_engine(
@@ -126,6 +126,54 @@ fn main() {
             sp_brute.visited_cells,
             sp_secs,
         );
+
+        // ---- persistence: cold build vs warm load -------------------------
+        // The measured claim behind the index store: a serving restart
+        // that reloads the .spix file instead of rebuilding.
+        bench_persistence(name, &ds, band);
         println!();
     }
+}
+
+fn bench_persistence(name: &str, ds: &spdtw::data::Dataset, band: usize) {
+    let path = std::env::temp_dir().join(format!(
+        "spdtw_bench_{}_{name}.spix",
+        std::process::id()
+    ));
+
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(Index::build(&ds.train, band, 8));
+    }
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let index = Arc::new(Index::build(&ds.train, band, 8));
+    persist::save_index(&index, &path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+
+    let t0 = Instant::now();
+    let mut warm = None;
+    for _ in 0..reps {
+        warm = Some(std::hint::black_box(persist::load_index(&path).unwrap()));
+    }
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    // warm-loaded index must answer identically (spot-check the bench
+    // queries so the reported speed-up is for the *same* results)
+    let warm = Arc::new(warm.unwrap());
+    let a = SearchEngine::new(Arc::clone(&index), Cascade::default());
+    let b = SearchEngine::new(warm, Cascade::default());
+    for probe in ds.test.series.iter().take(8) {
+        let (ra, rb) = (a.knn(probe, 1), b.knn(probe, 1));
+        assert_eq!(ra.neighbors[0].dist.to_bits(), rb.neighbors[0].dist.to_bits());
+        assert_eq!(ra.neighbors[0].train_idx, rb.neighbors[0].train_idx);
+    }
+    println!(
+        "  {:<22} cold build {cold_ms:>8.2} ms | warm load {warm_ms:>8.2} ms ({:.1}x, {} KiB file)",
+        "index persistence",
+        cold_ms / warm_ms.max(1e-9),
+        file_bytes / 1024,
+    );
+    std::fs::remove_file(&path).ok();
 }

@@ -161,6 +161,10 @@ pub struct SearchConfig {
     /// z-normalize train series at index build and queries at query
     /// time (banded-DTW indexes only).
     pub znormalize: bool,
+    /// Load the index from this `.spix` file (`search::persist`)
+    /// instead of building one — the warm-start path for `spdtw search`
+    /// and the default destination of `spdtw index save`.
+    pub index_file: Option<PathBuf>,
 }
 
 impl Default for SearchConfig {
@@ -174,6 +178,7 @@ impl Default for SearchConfig {
             early_abandon: true,
             order_by_lb: true,
             znormalize: false,
+            index_file: None,
         }
     }
 }
@@ -216,6 +221,9 @@ impl SearchConfig {
         cfg.early_abandon = flag("early_abandon", cfg.early_abandon);
         cfg.order_by_lb = flag("order_by_lb", cfg.order_by_lb);
         cfg.znormalize = flag("znormalize", cfg.znormalize);
+        if let Some(v) = json.get("index_file").and_then(Json::as_str) {
+            cfg.index_file = Some(PathBuf::from(v));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -232,6 +240,9 @@ impl SearchConfig {
         ];
         if self.band_cells != usize::MAX {
             fields.push(("band_cells", Json::num(self.band_cells as f64)));
+        }
+        if let Some(p) = &self.index_file {
+            fields.push(("index_file", Json::str(p.display().to_string())));
         }
         Json::obj(fields)
     }
@@ -251,6 +262,15 @@ pub struct CoordinatorConfig {
     pub queue_cap: usize,
     /// Prefer the PJRT backend when an artifact bucket matches.
     pub prefer_pjrt: bool,
+    /// Directory of the persistent index store (`.spix` files recorded
+    /// in its `manifest.json`, conventionally the artifacts dir so the
+    /// indexes live next to the PJRT manifest).  `None` disables
+    /// persistence entirely.
+    pub index_store: Option<PathBuf>,
+    /// Reload every store-manifest index at boot (no-op without
+    /// `index_store`).  Corrupt or stale files are rejected and skipped,
+    /// never served.
+    pub warm_start: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -261,6 +281,8 @@ impl Default for CoordinatorConfig {
             flush_us: 2_000,
             queue_cap: 64,
             prefer_pjrt: false,
+            index_store: None,
+            warm_start: true,
         }
     }
 }
@@ -322,6 +344,13 @@ mod tests {
         // omitted band_cells means unconstrained
         let open = SearchConfig::from_json(&Json::parse(r#"{"k":2}"#).unwrap()).unwrap();
         assert_eq!(open.band_cells, usize::MAX);
+        assert_eq!(open.index_file, None);
+
+        // index_file roundtrips
+        let mut with_file = SearchConfig::default();
+        with_file.index_file = Some(PathBuf::from("store/cbf.spix"));
+        let back = SearchConfig::from_json(&with_file.to_json()).unwrap();
+        assert_eq!(back.index_file, Some(PathBuf::from("store/cbf.spix")));
 
         assert!(SearchConfig::from_json(&Json::parse(r#"{"k":0}"#).unwrap()).is_err());
 

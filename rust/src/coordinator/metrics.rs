@@ -31,6 +31,13 @@ pub struct Metrics {
     pub lb_rev_skips: AtomicU64,
     pub early_abandons: AtomicU64,
     pub full_dp_evals: AtomicU64,
+    // ---- index-store counters (persistence / warm start) ----
+    /// Indexes written to the on-disk store this session.
+    pub indexes_saved: AtomicU64,
+    /// Indexes reloaded from the store at boot (warm start).
+    pub indexes_loaded: AtomicU64,
+    /// Store files rejected at boot (corrupt/stale — skipped, not served).
+    pub index_load_failures: AtomicU64,
     lat: [AtomicU64; LAT_BUCKETS],
     lat_sum_us: AtomicU64,
 }
@@ -79,6 +86,9 @@ impl Metrics {
             lb_rev_skips: self.lb_rev_skips.load(Ordering::Relaxed),
             early_abandons: self.early_abandons.load(Ordering::Relaxed),
             full_dp_evals: self.full_dp_evals.load(Ordering::Relaxed),
+            indexes_saved: self.indexes_saved.load(Ordering::Relaxed),
+            indexes_loaded: self.indexes_loaded.load(Ordering::Relaxed),
+            index_load_failures: self.index_load_failures.load(Ordering::Relaxed),
             mean_latency_us: if completed > 0 {
                 self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
             } else {
@@ -108,6 +118,9 @@ pub struct Snapshot {
     pub lb_rev_skips: u64,
     pub early_abandons: u64,
     pub full_dp_evals: u64,
+    pub indexes_saved: u64,
+    pub indexes_loaded: u64,
+    pub index_load_failures: u64,
     pub mean_latency_us: f64,
     pub latency_hist: Vec<u64>,
 }
@@ -152,6 +165,7 @@ impl Snapshot {
              cells: {}\n\
              search: {} queries, {} candidates -> {} kim / {} keogh / {} rev skips, \
              {} abandons, {} full DPs ({:.1}% pruned)\n\
+             index store: {} saved, {} warm-loaded, {} rejected\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
             self.submitted,
             self.completed,
@@ -170,6 +184,9 @@ impl Snapshot {
             self.early_abandons,
             self.full_dp_evals,
             100.0 * self.search_prune_ratio(),
+            self.indexes_saved,
+            self.indexes_loaded,
+            self.index_load_failures,
             self.mean_latency_us,
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
@@ -212,6 +229,7 @@ mod tests {
         let r = s.report();
         assert!(r.contains("jobs:") && r.contains("batches:") && r.contains("latency:"));
         assert!(r.contains("search:"));
+        assert!(r.contains("index store:"));
     }
 
     #[test]

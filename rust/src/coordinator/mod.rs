@@ -41,8 +41,8 @@ use crate::measures::spdtw::SpDtw;
 use crate::measures::spkrdtw::SpKrdtw;
 use crate::measures::{KernelMeasure, Measure};
 use crate::pool::WorkerPool;
-use crate::runtime::{DtwBatch, KernelKind, KrdtwBatch, PjrtHandle};
-use crate::search::{Cascade, Index, SearchEngine};
+use crate::runtime::{record_index_artifact, DtwBatch, KernelKind, KrdtwBatch, Manifest, PjrtHandle};
+use crate::search::{persist, Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
 
 use batcher::{Batcher, ReadyBatch};
@@ -83,6 +83,14 @@ impl Coordinator {
         };
         let router = Router::new(info, cfg.prefer_pjrt);
         let native_pool = WorkerPool::new(cfg.workers, cfg.queue_cap.max(cfg.workers) * 4);
+
+        // ---- warm start: reload persisted indexes from the store -------
+        let mut index_reg = IndexRegistry::new();
+        if cfg.warm_start {
+            if let Some(dir) = &cfg.index_store {
+                warm_start_indexes(dir, &mut index_reg, &metrics);
+            }
+        }
 
         // dispatcher -> runner bounded queue (backpressure on batches)
         let (batch_tx, batch_rx) = mpsc::sync_channel::<ReadyBatch>(cfg.queue_cap);
@@ -191,7 +199,7 @@ impl Coordinator {
             runner,
             router,
             grids: Mutex::new(GridRegistry::new()),
-            indexes: Mutex::new(IndexRegistry::new()),
+            indexes: Mutex::new(index_reg),
             pjrt,
         })
     }
@@ -242,9 +250,49 @@ impl Coordinator {
     }
 
     /// Register a prebuilt similarity-search [`Index`] and get a stable
-    /// key for [`Self::submit_search`].
+    /// key for [`Self::submit_search`].  Anonymous registrations stay
+    /// in-memory; use [`Self::register_index_persistent`] to also write
+    /// the index to the on-disk store.
     pub fn register_index(&self, index: Index) -> IndexKey {
         self.indexes.lock().unwrap().insert(Arc::new(index))
+    }
+
+    /// Register `index` under a stable `name`, saving it into the
+    /// configured index store (a `.spix` file plus a manifest entry) so
+    /// the next warm-started coordinator serves it without rebuilding.
+    /// Without a configured store this degrades to a named in-memory
+    /// registration.  A previous holder of the name is replaced.
+    pub fn register_index_persistent(&self, name: &str, index: Index) -> Result<IndexKey> {
+        validate_index_name(name)?;
+        let t = index.t;
+        let n = index.len();
+        let index = Arc::new(index);
+        // The registry lock also serializes the store writes: without
+        // it, two concurrent registrations would race the manifest's
+        // read-modify-write (one detached TCP thread each) and the
+        // loser's entry would vanish from the next warm start.
+        let mut reg = self.indexes.lock().unwrap();
+        if let Some(dir) = &self.cfg.index_store {
+            let file = format!("{name}.spix");
+            persist::save_index(&index, &dir.join(&file))?;
+            record_index_artifact(dir, name, &file, t, n)?;
+            self.metrics.indexes_saved.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(reg.insert_named(name, index, false))
+    }
+
+    /// Resolve a named index to `(key, loaded_from_disk)` — the cheap
+    /// pre-check that lets `register_index` callers skip a rebuild when
+    /// a warm-started (or earlier in-session) index already holds the
+    /// name.
+    pub fn lookup_index_named(&self, name: &str) -> Option<(IndexKey, bool)> {
+        let reg = self.indexes.lock().unwrap();
+        let key = reg.key_by_name(name)?;
+        let loaded = reg
+            .get_entry(key)
+            .map(|e| e.loaded_from_disk)
+            .unwrap_or(false);
+        Some((key, loaded))
     }
 
     fn index(&self, key: IndexKey) -> Result<Arc<Index>> {
@@ -483,6 +531,64 @@ impl Drop for Coordinator {
     }
 }
 
+/// Store names become file names: keep them to a safe charset so a
+/// wire-supplied name can never escape the store directory.
+fn validate_index_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && name.len() <= 64
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::coordinator(format!(
+            "invalid index name '{name}' (use 1-64 chars of [A-Za-z0-9._-], not starting with '.')"
+        )))
+    }
+}
+
+/// Boot-time warm start: re-register every index the store manifest
+/// lists.  Files that fail validation (truncated, corrupt checksum,
+/// version skew, dimension mismatch vs the manifest) are skipped with a
+/// warning and counted — a bad file must never be served.
+fn warm_start_indexes(dir: &std::path::Path, reg: &mut IndexRegistry, metrics: &Metrics) {
+    if !dir.join("manifest.json").exists() {
+        return; // fresh store: nothing persisted yet
+    }
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("warning: index store manifest unreadable ({e}); cold start");
+            return;
+        }
+    };
+    for entry in &manifest.indexes {
+        match persist::load_index(&entry.path) {
+            Ok(index) if index.t == entry.length && index.len() == entry.count => {
+                reg.insert_named(&entry.name, Arc::new(index), true);
+                metrics.indexes_loaded.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(index) => {
+                eprintln!(
+                    "warning: skipping stale index '{}': file is T={} n={}, manifest says T={} n={}",
+                    entry.name,
+                    index.t,
+                    index.len(),
+                    entry.length,
+                    entry.count
+                );
+                metrics.index_load_failures.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                eprintln!("warning: skipping index '{}' from store: {e}", entry.name);
+                metrics.index_load_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
 /// Execute one ready batch on the PJRT handle and fan results out.
 fn run_batch(handle: &PjrtHandle, batch: ReadyBatch, metrics: &Metrics) {
     let start = Instant::now();
@@ -604,6 +710,74 @@ mod tests {
         let short = TimeSeries::new(0, vec![0.0; 3]);
         assert!(c.submit_search(key, &short, 1, Cascade::default()).is_err());
         assert!(c.submit_search(key, probe, 0, Cascade::default()).is_err());
+    }
+
+    #[test]
+    fn persistent_register_saves_and_warm_starts() {
+        use crate::data::synthetic;
+        let store = std::env::temp_dir().join(format!("spdtw_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let ds = synthetic::generate_scaled("CBF", 5, 8, 4).unwrap();
+
+        let mut cfg = CoordinatorConfig::default();
+        cfg.index_store = Some(store.clone());
+        {
+            let c = Coordinator::start(cfg.clone(), None).unwrap();
+            assert_eq!(c.lookup_index_named("cbf"), None);
+            let key = c
+                .register_index_persistent("cbf", Index::build(&ds.train, 3, 1))
+                .unwrap();
+            assert_eq!(c.lookup_index_named("cbf"), Some((key, false)));
+            assert!(c.register_index_persistent("../evil", Index::build(&ds.train, 3, 1)).is_err());
+            assert!(c.register_index_persistent("", Index::build(&ds.train, 3, 1)).is_err());
+            assert_eq!(c.metrics().indexes_saved, 1);
+            assert!(store.join("cbf.spix").exists());
+        }
+
+        // a fresh coordinator warm-starts from the store
+        let c2 = Coordinator::start(cfg.clone(), None).unwrap();
+        let (key, loaded) = c2.lookup_index_named("cbf").unwrap();
+        assert!(loaded, "expected a warm-started entry");
+        assert_eq!(c2.metrics().indexes_loaded, 1);
+        let out = c2
+            .submit_search(key, &ds.test.series[0], 2, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.neighbors.len(), 2);
+
+        // warm start disabled -> cold registry
+        cfg.warm_start = false;
+        let c3 = Coordinator::start(cfg, None).unwrap();
+        assert_eq!(c3.lookup_index_named("cbf"), None);
+        std::fs::remove_dir_all(&store).ok();
+    }
+
+    #[test]
+    fn corrupt_store_file_is_skipped_not_served() {
+        use crate::data::synthetic;
+        let store = std::env::temp_dir().join(format!("spdtw_store_bad_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let ds = synthetic::generate_scaled("CBF", 6, 6, 2).unwrap();
+        let mut cfg = CoordinatorConfig::default();
+        cfg.index_store = Some(store.clone());
+        {
+            let c = Coordinator::start(cfg.clone(), None).unwrap();
+            c.register_index_persistent("cbf", Index::build(&ds.train, 2, 1))
+                .unwrap();
+        }
+        let path = store.join("cbf.spix");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let c2 = Coordinator::start(cfg, None).unwrap();
+        assert_eq!(c2.lookup_index_named("cbf"), None);
+        let snap = c2.metrics();
+        assert_eq!(snap.indexes_loaded, 0);
+        assert_eq!(snap.index_load_failures, 1);
+        std::fs::remove_dir_all(&store).ok();
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! {"op":"spdtw","grid":0,"x":[...],"y":[...]}
 //! {"op":"spkrdtw","grid":0,"nu":0.5,"x":[...],"y":[...]}
 //! {"op":"register_index","band":5,"series":[[...],...],"labels":[...]}
+//!     // optional "name":"cbf" — resolves against the registry first
+//!     // (warm-started indexes answer without a rebuild; the reply's
+//!     // "loaded_from_disk" says which path served it) and persists
+//!     // the build when the coordinator has an index store.
 //! {"op":"search","index":0,"k":3,"x":[...]}         // optional "cascade":"none"
 //! {"op":"metrics"}
 //! {"op":"shutdown"}
@@ -177,6 +181,22 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
             ]))
         }
         "register_index" => {
+            // A named registration hits the registry first: a
+            // warm-started (or earlier in-session) index under that
+            // name answers without rebuilding.
+            if let Some(name) = req.get("name").and_then(Json::as_str) {
+                // reject bad names before the O(n·T) build, not after
+                super::validate_index_name(name)?;
+                if let Some((key, loaded)) = coord.lookup_index_named(name) {
+                    let bytes = coord.index(key)?.memory_bytes();
+                    return Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("index", Json::num(key.0 as f64)),
+                        ("memory_bytes", Json::num(bytes as f64)),
+                        ("loaded_from_disk", Json::Bool(loaded)),
+                    ]));
+                }
+            }
             let band = req.get("band").and_then(Json::as_usize).unwrap_or(usize::MAX);
             let arr = req.req_arr("series")?;
             if arr.is_empty() {
@@ -218,11 +238,15 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
             let train = LabeledSet::new(series);
             let index = Index::build(&train, band, coord.config().workers);
             let bytes = index.memory_bytes();
-            let key = coord.register_index(index);
+            let key = match req.get("name").and_then(Json::as_str) {
+                Some(name) => coord.register_index_persistent(name, index)?,
+                None => coord.register_index(index),
+            };
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("index", Json::num(key.0 as f64)),
                 ("memory_bytes", Json::num(bytes as f64)),
+                ("loaded_from_disk", Json::Bool(false)),
             ]))
         }
         "search" => {
@@ -389,6 +413,57 @@ mod tests {
             assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{bad}");
         }
         server.stop();
+    }
+
+    #[test]
+    fn named_register_index_reports_loaded_from_disk() {
+        let store =
+            std::env::temp_dir().join(format!("spdtw_srv_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let mut ccfg = CoordinatorConfig::default();
+        ccfg.index_store = Some(store.clone());
+
+        let reg_req = Json::parse(
+            r#"{"op":"register_index","name":"tiny","band":1,"series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#,
+        )
+        .unwrap();
+
+        // session 1: cold build, persisted
+        {
+            let coord =
+                Arc::new(Coordinator::start(ccfg.clone(), None).unwrap());
+            let mut server = Server::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+            let mut client = Client::connect(&server.addr).unwrap();
+            let r = client.call(&reg_req).unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+            assert_eq!(r.get("loaded_from_disk"), Some(&Json::Bool(false)));
+            // same name again: deduped, still not from disk
+            let r2 = client.call(&reg_req).unwrap();
+            assert_eq!(r2.get("loaded_from_disk"), Some(&Json::Bool(false)));
+            assert_eq!(r2.req_usize("index").unwrap(), r.req_usize("index").unwrap());
+            // bad names are rejected, not written
+            let bad = client
+                .call(&Json::parse(r#"{"op":"register_index","name":"../x","series":[[1,2]]}"#).unwrap())
+                .unwrap();
+            assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+            server.stop();
+        }
+
+        // session 2: warm start serves the persisted index from disk
+        let coord = Arc::new(Coordinator::start(ccfg, None).unwrap());
+        let mut server = Server::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let r = client.call(&reg_req).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        assert_eq!(r.get("loaded_from_disk"), Some(&Json::Bool(true)));
+        let idx = r.req_usize("index").unwrap();
+        let s = client
+            .call(&Json::parse(&format!(r#"{{"op":"search","index":{idx},"k":1,"x":[0,0,0]}}"#)).unwrap())
+            .unwrap();
+        assert_eq!(s.get("ok"), Some(&Json::Bool(true)), "{s:?}");
+        assert_eq!(s.req_arr("neighbors").unwrap()[0].req_f64("dist").unwrap(), 0.0);
+        server.stop();
+        std::fs::remove_dir_all(&store).ok();
     }
 
     #[test]

@@ -62,11 +62,25 @@ impl GridRegistry {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct IndexKey(pub u64);
 
+/// A registered [`Index`] plus its provenance.
+pub struct IndexEntry {
+    pub index: Arc<Index>,
+    /// Stable registry name (persisted indexes only; anonymous
+    /// registrations have none and never touch the store).
+    pub name: Option<String>,
+    /// Whether this entry was reloaded from the on-disk store at boot
+    /// rather than built in this process — surfaced in the TCP
+    /// `register_index` reply so clients can tell a warm hit from a
+    /// cold build.
+    pub loaded_from_disk: bool,
+}
+
 /// Registry of prebuilt [`Index`]es served by `submit_search`.
 #[derive(Default)]
 pub struct IndexRegistry {
     next: u64,
-    indexes: HashMap<u64, Arc<Index>>,
+    indexes: HashMap<u64, IndexEntry>,
+    by_name: HashMap<String, u64>,
 }
 
 impl IndexRegistry {
@@ -74,15 +88,51 @@ impl IndexRegistry {
         Self::default()
     }
 
+    /// Register an anonymous (in-memory only) index.
     pub fn insert(&mut self, index: Arc<Index>) -> IndexKey {
+        self.insert_entry(IndexEntry {
+            index,
+            name: None,
+            loaded_from_disk: false,
+        })
+    }
+
+    /// Register under a stable name (replacing any previous holder of
+    /// that name — the newest build wins, mirroring the on-disk store).
+    pub fn insert_named(
+        &mut self,
+        name: &str,
+        index: Arc<Index>,
+        loaded_from_disk: bool,
+    ) -> IndexKey {
+        let key = self.insert_entry(IndexEntry {
+            index,
+            name: Some(name.to_string()),
+            loaded_from_disk,
+        });
+        if let Some(old) = self.by_name.insert(name.to_string(), key.0) {
+            self.indexes.remove(&old);
+        }
+        key
+    }
+
+    fn insert_entry(&mut self, entry: IndexEntry) -> IndexKey {
         let key = self.next;
         self.next += 1;
-        self.indexes.insert(key, index);
+        self.indexes.insert(key, entry);
         IndexKey(key)
     }
 
     pub fn get(&self, key: IndexKey) -> Option<Arc<Index>> {
-        self.indexes.get(&key.0).map(Arc::clone)
+        self.indexes.get(&key.0).map(|e| Arc::clone(&e.index))
+    }
+
+    pub fn get_entry(&self, key: IndexKey) -> Option<&IndexEntry> {
+        self.indexes.get(&key.0)
+    }
+
+    pub fn key_by_name(&self, name: &str) -> Option<IndexKey> {
+        self.by_name.get(name).copied().map(IndexKey)
     }
 
     pub fn len(&self) -> usize {
@@ -109,6 +159,26 @@ mod tests {
         assert_eq!(r.get(a).unwrap().radius, 1);
         assert_eq!(r.len(), 2);
         assert!(r.get(IndexKey(17)).is_none());
+    }
+
+    #[test]
+    fn named_entries_resolve_and_replace() {
+        use crate::data::splits::from_pairs;
+        let train = from_pairs(vec![(0, vec![0.0, 1.0]), (1, vec![1.0, 0.0])]);
+        let mut r = IndexRegistry::new();
+        let a = r.insert_named("cbf", Arc::new(Index::build(&train, 1, 1)), true);
+        assert_eq!(r.key_by_name("cbf"), Some(a));
+        assert!(r.get_entry(a).unwrap().loaded_from_disk);
+        assert_eq!(r.get_entry(a).unwrap().name.as_deref(), Some("cbf"));
+
+        // re-registering the name replaces the old entry
+        let b = r.insert_named("cbf", Arc::new(Index::build(&train, 2, 1)), false);
+        assert_ne!(a, b);
+        assert_eq!(r.key_by_name("cbf"), Some(b));
+        assert!(r.get(a).is_none(), "stale key must not resolve");
+        assert!(!r.get_entry(b).unwrap().loaded_from_disk);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.key_by_name("other"), None);
     }
 
     #[test]

@@ -110,7 +110,7 @@ impl ClassProto {
             Family::Device => {
                 let ne = 2 + r.below(4);
                 let mut edges: Vec<f64> = (0..ne).map(|_| r.range(0.05, 0.95)).collect();
-                edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                edges.sort_by(|a, b| a.total_cmp(b));
                 let levels = (0..=ne).map(|_| if r.f64() < 0.5 { r.range(0.0, 0.4) } else { r.range(1.2, 3.0) }).collect();
                 ClassProto::Device { edges, levels }
             }

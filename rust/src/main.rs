@@ -4,6 +4,9 @@
 //! spdtw experiment <id|all> [opts]   regenerate paper tables/figures
 //! spdtw classify <dataset> [opts]    quick 1-NN run with one measure
 //! spdtw search <dataset> [opts]      cascade k-NN search vs brute force
+//! spdtw index save <dataset> [opts]  build a search index and persist it
+//! spdtw index load <file>            reload + validate a persisted index
+//! spdtw index inspect <file>         header/checksum summary of an index file
 //! spdtw gen-data <dataset> [opts]    write the synthetic dataset as UCR files
 //! spdtw serve [opts]                 start the TCP coordinator service
 //! spdtw info [opts]                  show artifact manifest + platform
@@ -28,7 +31,7 @@ use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
 use spdtw::measures::spdtw::SpDtw;
 use spdtw::measures::Measure;
 use spdtw::runtime::PjrtRuntime;
-use spdtw::search::Index;
+use spdtw::search::{persist, Index};
 use spdtw::sparse::learn::learn_occupancy_grid;
 
 fn opt_spec() -> Vec<OptSpec> {
@@ -58,6 +61,9 @@ fn opt_spec() -> Vec<OptSpec> {
         OptSpec { name: "no-order", takes_value: false, help: "search: scan candidates in train order" },
         OptSpec { name: "znorm", takes_value: false, help: "search: z-normalize index + queries (banded mode)" },
         OptSpec { name: "verify", takes_value: false, help: "search: cross-check against brute-force k-NN" },
+        OptSpec { name: "index-file", takes_value: true, help: "search/index: persisted .spix index file to load (search) or write (index save)" },
+        OptSpec { name: "index-store", takes_value: true, help: "serve: directory for persisted indexes (save-on-register + warm start)" },
+        OptSpec { name: "no-warm-start", takes_value: false, help: "serve: do not reload persisted indexes at boot" },
     ]
 }
 
@@ -110,6 +116,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "classify" => cmd_classify(&args),
         "search" => cmd_search(&args),
+        "index" => cmd_index(&args),
         "gen-data" => cmd_gen_data(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
@@ -118,7 +125,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
             println!(
                 "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
                  commands: experiment <id|all> | classify <dataset> | search <dataset> |\n\
-                 \x20         gen-data <dataset> | serve | info | bench-backend\n\n{}",
+                 \x20         index save|load|inspect | gen-data <dataset> | serve | info |\n\
+                 \x20         bench-backend\n\n{}",
                 usage(&spec)
             );
             println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
@@ -181,20 +189,11 @@ fn cmd_classify(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
-    let name = args
-        .positional
-        .get(1)
-        .ok_or_else(|| Error::config("usage: spdtw search <dataset> [--k N] [--band-cells N]"))?;
-    let cfg = build_cfg(args)?;
-    let (cap_tr, cap_te) = cfg.caps();
-    let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
-    let t = ds.series_len();
-
-    // Settings precedence: defaults < `search` section of --config JSON
-    // < explicit CLI flags.  The 10%-of-T band default applies only
-    // when no config section exists: a config that omits `band_cells`
-    // means unconstrained DTW (SearchConfig::from_json's contract).
+/// Settings precedence: defaults < `search` section of --config JSON
+/// < explicit CLI flags.  The 10%-of-T band default applies only
+/// when no config section exists: a config that omits `band_cells`
+/// means unconstrained DTW (SearchConfig::from_json's contract).
+fn resolve_search_config(args: &Args, t: usize) -> Result<SearchConfig> {
     let cfg_section = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -233,14 +232,26 @@ fn cmd_search(args: &Args) -> Result<()> {
     if args.flag("znorm") {
         scfg.znormalize = true;
     }
+    if let Some(p) = args.get("index-file") {
+        scfg.index_file = Some(PathBuf::from(p));
+    }
     scfg.validate()?;
     if scfg.znormalize && args.flag("spdtw-index") {
         return Err(Error::config(
             "--znorm is only supported for banded-DTW indexes (not --spdtw-index)",
         ));
     }
+    Ok(scfg)
+}
 
-    let index = if args.flag("spdtw-index") {
+/// Build the index a `spdtw search` / `spdtw index save` run asked for.
+fn build_search_index(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    ds: &spdtw::data::Dataset,
+    scfg: &SearchConfig,
+) -> Result<Index> {
+    if args.flag("spdtw-index") {
         let grid = learn_occupancy_grid(&ds.train, cfg.threads);
         let theta = args.get_f64("theta")?.unwrap_or(0.0);
         let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
@@ -251,11 +262,56 @@ fn cmd_search(args: &Args) -> Result<()> {
             100.0 * loc.sparsity(),
             loc.max_band_offset()
         );
-        Index::build_spdtw(&ds.train, loc, cfg.threads)
+        Ok(Index::build_spdtw(&ds.train, loc, cfg.threads))
     } else if scfg.znormalize {
-        Index::build_znormalized(&ds.train, scfg.band_cells, cfg.threads)
+        Ok(Index::build_znormalized(&ds.train, scfg.band_cells, cfg.threads))
     } else {
-        Index::build(&ds.train, scfg.band_cells, cfg.threads)
+        Ok(Index::build(&ds.train, scfg.band_cells, cfg.threads))
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: spdtw search <dataset> [--k N] [--band-cells N]"))?;
+    let cfg = build_cfg(args)?;
+    let (cap_tr, cap_te) = cfg.caps();
+    let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
+    let t = ds.series_len();
+    let scfg = resolve_search_config(args, t)?;
+
+    let index = match &scfg.index_file {
+        Some(path) => {
+            // A prebuilt index fixes the build-time choices; accepting
+            // contradictory build flags and silently ignoring them
+            // would report results for a config the user didn't get.
+            if args.flag("znorm") || args.flag("spdtw-index") || args.get("band-cells").is_some()
+            {
+                return Err(Error::config(
+                    "--index-file loads a prebuilt index; --znorm/--spdtw-index/--band-cells \
+                     are build-time flags and do not apply (rebuild with `spdtw index save`)",
+                ));
+            }
+            let t0 = std::time::Instant::now();
+            let loaded = persist::load_index(path)?;
+            if loaded.t != t {
+                return Err(Error::config(format!(
+                    "index file {} holds T={} series but {name} has T={t}",
+                    path.display(),
+                    loaded.t
+                )));
+            }
+            println!(
+                "warm-loaded index from {} ({} series, znorm {}) in {:.1} ms",
+                path.display(),
+                loaded.len(),
+                loaded.znormalized,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            loaded
+        }
+        None => build_search_index(args, &cfg, &ds, &scfg)?,
     };
     let index = Arc::new(index);
 
@@ -265,7 +321,13 @@ fn cmd_search(args: &Args) -> Result<()> {
     println!(
         "{name} [search k={} band={}] error={:.3} wall={:.2}s",
         scfg.k,
-        if index.loc.is_some() { "sp-dtw".to_string() } else { scfg.band_cells.to_string() },
+        if index.loc.is_some() {
+            "sp-dtw".to_string()
+        } else if index.band == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            index.band.to_string()
+        },
         eval.error_rate,
         wall
     );
@@ -297,7 +359,7 @@ fn cmd_search(args: &Args) -> Result<()> {
                 classify_knn(&sp, &vtrain, &vtest, scfg.k, cfg.threads)
             }
             None => classify_knn(
-                &BandedDtw(scfg.band_cells),
+                &BandedDtw(index.band),
                 &vtrain,
                 &vtest,
                 scfg.k,
@@ -319,6 +381,89 @@ fn cmd_search(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let usage_err =
+        || Error::config("usage: spdtw index save <dataset> [--index-file F] | load <F> | inspect <F>");
+    let action = args.positional.get(1).map(String::as_str).ok_or_else(usage_err)?;
+    match action {
+        "save" => {
+            let name = args.positional.get(2).ok_or_else(usage_err)?;
+            let cfg = build_cfg(args)?;
+            let (cap_tr, cap_te) = cfg.caps();
+            let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
+            let scfg = resolve_search_config(args, ds.series_len())?;
+            let path = scfg
+                .index_file
+                .clone()
+                .unwrap_or_else(|| cfg.out_dir.join(format!("{name}.spix")));
+            let t0 = std::time::Instant::now();
+            let index = build_search_index(args, &cfg, &ds, &scfg)?;
+            let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+            persist::save_index(&index, &path)?;
+            println!(
+                "{name}: built index (T={}, {} series, radius {}) in {:.1} ms",
+                index.t,
+                index.len(),
+                index.radius,
+                build_ms
+            );
+            println!(
+                "saved {} ({} bytes on disk, ~{} bytes resident)",
+                path.display(),
+                std::fs::metadata(&path)?.len(),
+                index.memory_bytes()
+            );
+            Ok(())
+        }
+        "load" => {
+            let path = PathBuf::from(args.positional.get(2).ok_or_else(usage_err)?);
+            let t0 = std::time::Instant::now();
+            let index = persist::load_index(&path)?;
+            println!(
+                "loaded {} in {:.1} ms: T={}, {} series, radius {}, band {}, \
+                 grid nnz {}, znorm {}, lb_valid {}, ~{} bytes resident",
+                path.display(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                index.t,
+                index.len(),
+                index.radius,
+                if index.band == usize::MAX { "unbounded".to_string() } else { index.band.to_string() },
+                index.loc.as_ref().map(|l| l.nnz()).unwrap_or(0),
+                index.znormalized,
+                index.lb_valid,
+                index.memory_bytes()
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let path = PathBuf::from(args.positional.get(2).ok_or_else(usage_err)?);
+            let info = persist::inspect(&path)?;
+            println!(
+                "{}: format v{}, {} bytes, checksum {}",
+                path.display(),
+                info.version,
+                info.file_bytes,
+                if info.checksum_ok { "OK" } else { "MISMATCH (corrupt)" }
+            );
+            println!(
+                "  T={}, {} series, radius {}, band {}, znorm {}, lb_valid {}, grid nnz {}",
+                info.t,
+                info.n,
+                info.radius,
+                if info.band == usize::MAX { "unbounded".to_string() } else { info.band.to_string() },
+                info.znormalized,
+                info.lb_valid,
+                info.grid_nnz.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string())
+            );
+            Ok(())
+        }
+        other => Err(Error::Unknown {
+            kind: "index action",
+            name: other.to_string(),
+        }),
+    }
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -354,6 +499,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut ccfg = CoordinatorConfig::default();
     ccfg.workers = cfg.threads;
     ccfg.prefer_pjrt = args.flag("prefer-pjrt");
+    if let Some(dir) = args.get("index-store") {
+        ccfg.index_store = Some(PathBuf::from(dir));
+    }
+    ccfg.warm_start = !args.flag("no-warm-start");
     let runtime = if ccfg.prefer_pjrt {
         match PjrtRuntime::start(&cfg.artifacts_dir) {
             Ok(rt) => {
@@ -369,6 +518,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
     let coord = Arc::new(Coordinator::start(ccfg, runtime.as_ref().map(|r| r.handle()))?);
+    let boot = coord.metrics();
+    if let Some(dir) = &coord.config().index_store {
+        println!(
+            "index store: {} ({} warm-loaded, {} rejected)",
+            dir.display(),
+            boot.indexes_loaded,
+            boot.index_load_failures
+        );
+    }
     let server = Server::start(Arc::clone(&coord), addr)?;
     println!("spdtw coordinator listening on {}", server.addr);
     println!("protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, spkrdtw, register_index, search, metrics, shutdown");

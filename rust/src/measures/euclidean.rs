@@ -97,7 +97,7 @@ impl GaussianEd {
         if d2s.is_empty() {
             return 1.0;
         }
-        d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d2s.sort_by(|a, b| a.total_cmp(b));
         let med = d2s[d2s.len() / 2].max(1e-12);
         1.0 / med
     }

@@ -2,6 +2,13 @@
 //! the Rust runtime.  `artifacts/manifest.json` lists every AOT-lowered
 //! HLO-text module with its kernel kind, batch size, series length and
 //! dtype; the runtime picks buckets from here and never guesses shapes.
+//!
+//! The manifest also records persisted **search indexes** (an optional
+//! `"indexes"` array): `.spix` files written by `search::persist` that a
+//! warm-starting coordinator reloads at boot instead of rebuilding.
+//! [`record_index_artifact`] rewrites only that array, preserving every
+//! other manifest key byte-for-byte semantically (the Python AOT side
+//! owns `"entries"` and may carry fields Rust does not model).
 
 use std::path::{Path, PathBuf};
 
@@ -45,10 +52,28 @@ pub struct ArtifactEntry {
     pub dtype: String,
 }
 
+/// One persisted search index (`search::persist` file) listed in the
+/// manifest next to the AOT kernel artifacts.
+#[derive(Clone, Debug)]
+pub struct IndexArtifact {
+    /// Registry name the coordinator re-registers it under at boot.
+    pub name: String,
+    /// Absolute path of the `.spix` file.
+    pub path: PathBuf,
+    /// Indexed series length (T).
+    pub length: usize,
+    /// Number of indexed train series.
+    pub count: usize,
+}
+
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
     pub entries: Vec<ArtifactEntry>,
+    /// Persisted search indexes (optional `"indexes"` manifest key).
+    /// Existence on disk is *not* checked here: a stale entry is caught
+    /// by `search::persist::load_index`'s own validation at warm-start.
+    pub indexes: Vec<IndexArtifact>,
 }
 
 impl Manifest {
@@ -81,7 +106,23 @@ impl Manifest {
                 dtype: e.req_str("dtype")?.to_string(),
             });
         }
-        Ok(Manifest { entries })
+        let mut indexes = Vec::new();
+        if let Some(arr) = json.get("indexes").and_then(Json::as_arr) {
+            for e in arr {
+                indexes.push(IndexArtifact {
+                    name: e.req_str("name")?.to_string(),
+                    path: dir.join(e.req_str("file")?),
+                    length: e.req_usize("length")?,
+                    count: e.req_usize("count")?,
+                });
+            }
+        }
+        Ok(Manifest { entries, indexes })
+    }
+
+    /// Look up a persisted index by registry name.
+    pub fn find_index(&self, name: &str) -> Option<&IndexArtifact> {
+        self.indexes.iter().find(|e| e.name == name)
     }
 
     /// Find the bucket for an exact series length (same-length batching
@@ -104,6 +145,52 @@ impl Manifest {
         v.dedup();
         v
     }
+}
+
+/// Record (or replace) a persisted-index entry in `<dir>/manifest.json`,
+/// creating a minimal manifest when none exists.  Only the `"indexes"`
+/// array is touched; every other key — including entry fields Rust does
+/// not model — survives the rewrite.  The write is temp-file + rename so
+/// a crash never leaves a torn manifest.
+pub fn record_index_artifact(
+    dir: &Path,
+    name: &str,
+    file: &str,
+    length: usize,
+    count: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mpath = dir.join("manifest.json");
+    let root = match std::fs::read_to_string(&mpath) {
+        Ok(text) => Json::parse(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entries", Json::Arr(Vec::new())),
+        ]),
+        Err(e) => return Err(e.into()),
+    };
+    let mut obj = root
+        .as_obj()
+        .cloned()
+        .ok_or_else(|| Error::runtime("manifest.json root is not an object"))?;
+    let mut indexes: Vec<Json> = obj
+        .get("indexes")
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
+    indexes.push(Json::obj(vec![
+        ("name", Json::str(name)),
+        ("file", Json::str(file)),
+        ("length", Json::num(length as f64)),
+        ("count", Json::num(count as f64)),
+    ]));
+    obj.insert("indexes".to_string(), Json::Arr(indexes));
+
+    let tmp = dir.join("manifest.json.tmp");
+    std::fs::write(&tmp, Json::Obj(obj).to_pretty())?;
+    std::fs::rename(&tmp, &mpath)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -140,6 +227,41 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("spdtw_man2_{}", std::process::id()));
         write_fake(&dir, false);
         assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_index_creates_and_preserves_manifest() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man4_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        // fresh store: creates a minimal manifest with the index entry
+        record_index_artifact(&dir, "cbf", "cbf.spix", 128, 30).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.is_empty());
+        assert_eq!(m.indexes.len(), 1);
+        assert_eq!(m.find_index("cbf").unwrap().length, 128);
+        assert_eq!(m.find_index("cbf").unwrap().count, 30);
+        assert!(m.find_index("nope").is_none());
+
+        // same name again: replaced, not duplicated
+        record_index_artifact(&dir, "cbf", "cbf.spix", 128, 60).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.indexes.len(), 1);
+        assert_eq!(m.find_index("cbf").unwrap().count, 60);
+
+        // foreign manifest keys (the python AOT side's) survive rewrites
+        write_fake(&dir, true);
+        record_index_artifact(&dir, "gun", "gun.spix", 150, 24).unwrap();
+        let raw = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let json = Json::parse(&raw).unwrap();
+        assert!(json.get("version").is_some());
+        assert_eq!(json.req_arr("entries").unwrap().len(), 1);
+        assert!(json.req_arr("entries").unwrap()[0].get("args").is_some());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.indexes.len(), 1); // write_fake reset the manifest
+        assert!(m.find_index("gun").is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -139,11 +139,24 @@ impl Index {
     }
 
     /// Approximate resident size (bytes) — reported in the TCP
-    /// `register_index` reply.
+    /// `register_index` reply and the `spdtw index` CLI.
+    ///
+    /// Counts everything reachable from this index: the owned series
+    /// values, both envelope halves, per-series `Vec` headers, the label
+    /// vector, and the attached `LocMatrix` (nnz-based).  The grid sits
+    /// behind an `Arc` and may be shared with a `GridRegistry` entry or
+    /// other indexes — its bytes are reported here once per index, so
+    /// summing `memory_bytes` across indexes can double-count shared
+    /// grids (acceptable for a capacity-planning signal; the alternative
+    /// silently under-reported SP-DTW indexes by the whole grid).
     pub fn memory_bytes(&self) -> usize {
-        let per_series = self.t * std::mem::size_of::<f64>();
-        // values + upper + lower envelopes
-        self.len() * per_series * 3 + self.len() * std::mem::size_of::<usize>()
+        let vec_header = std::mem::size_of::<Vec<f64>>();
+        let per_series = self.t * std::mem::size_of::<f64>() + vec_header;
+        // values + upper + lower envelopes, each its own allocation
+        let series_bytes = self.len() * per_series * 3;
+        let label_bytes = self.labels.len() * std::mem::size_of::<usize>();
+        let grid_bytes = self.loc.as_ref().map(|l| l.memory_bytes()).unwrap_or(0);
+        series_bytes + label_bytes + grid_bytes
     }
 }
 
@@ -194,6 +207,19 @@ mod tests {
         );
         let idx2 = Index::build_spdtw(&train, Arc::new(soft), 1);
         assert!(!idx2.lb_valid);
+    }
+
+    #[test]
+    fn memory_bytes_counts_grid_and_labels() {
+        let train = from_pairs(vec![(0, vec![0.0; 16]), (1, vec![1.0; 16]), (2, vec![2.0; 16])]);
+        let banded = Index::build(&train, 2, 1);
+        let loc = Arc::new(LocMatrix::corridor(16, 2));
+        let grid_bytes = loc.memory_bytes();
+        let sp = Index::build_spdtw(&train, loc, 1);
+        // same series payload; the SP index must additionally report the
+        // grid footprint (the pre-fix report ignored it entirely).
+        assert_eq!(sp.memory_bytes(), banded.memory_bytes() + grid_bytes);
+        assert!(banded.memory_bytes() >= 3 * (16 * 8 * 3 + 8));
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! | [`early`] | early-abandoning banded DTW and SP-DTW kernels |
 //! | [`index`] | [`Index`]: envelopes + normalized series cached per train set |
 //! | [`engine`] | [`SearchEngine`]: k-NN queries, batch API, classification |
+//! | [`persist`] | versioned on-disk index store (warm-start serving restarts) |
 //!
 //! Per-query [`PruneStats`] counters feed the paper's visited-cells
 //! accounting (Table VI) and the coordinator's metrics export.
@@ -55,9 +56,11 @@ pub mod early;
 pub mod engine;
 pub mod index;
 pub mod lower_bounds;
+pub mod persist;
 
 pub use engine::{Neighbor, QueryResult, SearchEngine};
 pub use index::Index;
+pub use persist::{load_index, save_index, IndexFileInfo};
 
 /// Which cascade stages are enabled.  All stages are admissible, so any
 /// subset yields exact k-NN results — disabling stages only changes how

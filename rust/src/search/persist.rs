@@ -1,0 +1,595 @@
+//! Versioned on-disk persistence for [`Index`] — the warm-start path
+//! that lets a serving restart skip the envelope/z-normalization build.
+//!
+//! # File format (`.spix`)
+//!
+//! Everything is **little-endian**.  A file is a fixed 24-byte header
+//! followed by a checksummed payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SPIX"
+//! 4       4     format version, u32 (currently 1)
+//! 8       8     payload length in bytes, u64
+//! 16      8     FNV-1a 64 checksum of the payload bytes, u64
+//! 24      ...   payload
+//! ```
+//!
+//! Payload layout (version 1):
+//!
+//! ```text
+//! flags      u32   bit 0 = znormalized, bit 1 = lb_valid, bit 2 = has grid
+//! t          u64   series length
+//! radius     u64   envelope radius
+//! band       u64   DP band (u64::MAX = unbounded)
+//! n          u64   number of train series
+//! nnz        u64   grid entry count (0 when bit 2 is clear)
+//! labels     n × u64
+//! series     n × t × f64 (IEEE-754 bit patterns, exactly as built)
+//! envelopes  n × (t × f64 upper, then t × f64 lower)
+//! grid       nnz × (row u32, col u32, weight f64)   — only when bit 2 set
+//! ```
+//!
+//! # Integrity
+//!
+//! A loader must never turn a bad file into a wrong search answer, so
+//! [`load_index`] rejects, with a clean [`Error::Data`]:
+//!
+//! * wrong magic or unsupported version (stale format),
+//! * a payload length that disagrees with the file size (truncation
+//!   or trailing garbage),
+//! * a checksum mismatch (bit rot, partial writes),
+//! * unknown flag bits (a newer writer's file),
+//! * structurally valid payloads that violate the [`Index`] invariants:
+//!   radius/band inconsistency, grid entries out of range, an `lb_valid`
+//!   flag the grid weights do not support, or stored envelopes that do
+//!   not actually bound their series.
+//!
+//! Saves go through a temp file + atomic rename, so a crashed writer
+//! leaves either the old file or none — never a torn one.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::search::Index;
+use crate::sparse::LocMatrix;
+
+/// File magic: identifies a serialized search index.
+pub const MAGIC: [u8; 4] = *b"SPIX";
+/// Current format version; bump on any layout change.
+pub const VERSION: u32 = 1;
+/// Fixed header size (magic + version + payload length + checksum).
+pub const HEADER_LEN: usize = 24;
+
+const FLAG_ZNORM: u32 = 1 << 0;
+const FLAG_LB_VALID: u32 = 1 << 1;
+const FLAG_HAS_GRID: u32 = 1 << 2;
+const KNOWN_FLAGS: u32 = FLAG_ZNORM | FLAG_LB_VALID | FLAG_HAS_GRID;
+
+/// FNV-1a 64-bit hash — the payload checksum (dependency-free, good
+/// dispersion for the "did this file get corrupted" question).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Header + dimension summary of an index file (the `inspect` view).
+#[derive(Clone, Debug)]
+pub struct IndexFileInfo {
+    pub version: u32,
+    pub file_bytes: usize,
+    pub checksum_ok: bool,
+    pub t: usize,
+    pub n: usize,
+    pub radius: usize,
+    /// DP band (`usize::MAX` = unbounded / grid-driven).
+    pub band: usize,
+    pub znormalized: bool,
+    pub lb_valid: bool,
+    /// Grid entry count, when an SP-DTW grid is attached.
+    pub grid_nnz: Option<usize>,
+}
+
+/// Serialize `index` into the `.spix` byte format.
+pub fn to_bytes(index: &Index) -> Vec<u8> {
+    let n = index.len();
+    let t = index.t;
+    let nnz = index.loc.as_ref().map(|l| l.nnz()).unwrap_or(0);
+    let mut payload = Vec::with_capacity(44 + n * 8 + n * t * 24 + nnz * 16);
+
+    let mut flags = 0u32;
+    if index.znormalized {
+        flags |= FLAG_ZNORM;
+    }
+    if index.lb_valid {
+        flags |= FLAG_LB_VALID;
+    }
+    if index.loc.is_some() {
+        flags |= FLAG_HAS_GRID;
+    }
+    payload.extend_from_slice(&flags.to_le_bytes());
+    for dim in [t as u64, index.radius as u64, index.band as u64, n as u64, nnz as u64] {
+        payload.extend_from_slice(&dim.to_le_bytes());
+    }
+    for &label in &index.labels {
+        payload.extend_from_slice(&(label as u64).to_le_bytes());
+    }
+    for s in &index.series {
+        for &v in s {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    for (u, l) in &index.envs {
+        for &v in u {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        for &v in l {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    if let Some(loc) = &index.loc {
+        for (r, c, w, _) in loc.iter_cells() {
+            payload.extend_from_slice(&(r as u32).to_le_bytes());
+            payload.extend_from_slice(&(c as u32).to_le_bytes());
+            payload.extend_from_slice(&w.to_bits().to_le_bytes());
+        }
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Deserialize an [`Index`] from `.spix` bytes, rejecting anything
+/// corrupt, truncated or inconsistent (see the module docs).
+pub fn from_bytes(bytes: &[u8]) -> Result<Index> {
+    let payload = checked_payload(bytes)?;
+    let mut r = Reader { b: payload, i: 0 };
+
+    let flags = r.u32()?;
+    if flags & !KNOWN_FLAGS != 0 {
+        return Err(Error::data(format!(
+            "index file has unknown flag bits {:#x} (written by a newer version?)",
+            flags & !KNOWN_FLAGS
+        )));
+    }
+    let t = r.dim("t")?;
+    let radius = r.dim("radius")?;
+    let band = r.dim("band")?;
+    let n = r.dim("n")?;
+    let nnz = r.dim("nnz")?;
+    let has_grid = flags & FLAG_HAS_GRID != 0;
+
+    if t == 0 || n == 0 {
+        return Err(Error::data("index file holds an empty index"));
+    }
+    if radius >= t {
+        return Err(Error::data(format!(
+            "index file radius {radius} out of range for T={t}"
+        )));
+    }
+    if !has_grid && nnz > 0 {
+        return Err(Error::data("index file grid flag disagrees with entry count"));
+    }
+
+    // The payload is fixed-size given the dims: anything else is a
+    // truncated or padded file that slipped past the outer length check.
+    let expected = 44usize
+        .checked_add(n.checked_mul(8).ok_or_else(oversize)?)
+        .and_then(|v| v.checked_add(n.checked_mul(t)?.checked_mul(24)?))
+        .and_then(|v| v.checked_add(nnz.checked_mul(16)?))
+        .ok_or_else(oversize)?;
+    if payload.len() != expected {
+        return Err(Error::data(format!(
+            "index file payload is {} bytes but dims require {expected}",
+            payload.len()
+        )));
+    }
+
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        labels.push(r.dim("label")?);
+    }
+    let mut series = Vec::with_capacity(n);
+    for _ in 0..n {
+        series.push(r.f64s(t)?);
+    }
+    let mut envs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = r.f64s(t)?;
+        let l = r.f64s(t)?;
+        envs.push((u, l));
+    }
+    let loc = if has_grid {
+        let mut triples = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let row = r.u32()? as usize;
+            let col = r.u32()? as usize;
+            let w = f64::from_bits(r.u64()?);
+            triples.push((row, col, w));
+        }
+        Some(Arc::new(LocMatrix::try_from_triples(t, triples)?))
+    } else {
+        None
+    };
+    debug_assert_eq!(r.i, payload.len());
+
+    // ---- semantic invariants: a structurally valid file must still
+    // describe an index that searches correctly --------------------------
+    let lb_valid = flags & FLAG_LB_VALID != 0;
+    match &loc {
+        Some(grid) => {
+            if band != usize::MAX {
+                return Err(Error::data("grid index must store an unbounded band"));
+            }
+            if radius < grid.max_band_offset() {
+                return Err(Error::data(format!(
+                    "index file radius {radius} narrower than grid reach {} — \
+                     envelope bounds would be inadmissible",
+                    grid.max_band_offset()
+                )));
+            }
+            if lb_valid && grid.min_weight() < 1.0 - 1e-12 {
+                return Err(Error::data(
+                    "index file claims admissible lower bounds but grid has sub-unit weights",
+                ));
+            }
+        }
+        None => {
+            if band.min(t - 1) != radius {
+                return Err(Error::data(format!(
+                    "index file radius {radius} inconsistent with band {band} (T={t})"
+                )));
+            }
+        }
+    }
+    for (i, ((u, l), s)) in envs.iter().zip(&series).enumerate() {
+        for j in 0..t {
+            if !(l[j] <= s[j] && s[j] <= u[j]) {
+                return Err(Error::data(format!(
+                    "index file envelope of series {i} does not bound it at position {j}"
+                )));
+            }
+        }
+    }
+
+    Ok(Index {
+        t,
+        radius,
+        band,
+        series,
+        labels,
+        envs,
+        loc,
+        lb_valid,
+        znormalized: flags & FLAG_ZNORM != 0,
+    })
+}
+
+/// Save `index` to `path` (atomically: temp file + rename).  The
+/// conventional extension is `.spix`.
+pub fn save_index(index: &Index, path: &Path) -> Result<()> {
+    let bytes = to_bytes(index);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = path.with_extension("spix.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        Error::Io(e)
+    })
+}
+
+/// Load an [`Index`] previously written by [`save_index`].
+pub fn load_index(path: &Path) -> Result<Index> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        Error::data(format!("cannot read index file {}: {e}", path.display()))
+    })?;
+    from_bytes(&bytes)
+        .map_err(|e| Error::data(format!("{}: {e}", path.display())))
+}
+
+/// Header/dimension summary of an index file without materializing the
+/// series (still hashes the payload to report checksum validity).
+pub fn inspect(path: &Path) -> Result<IndexFileInfo> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        Error::data(format!("cannot read index file {}: {e}", path.display()))
+    })?;
+    let payload = checked_payload_relaxed(&bytes)?;
+    let mut r = Reader { b: payload.0, i: 0 };
+    let flags = r.u32()?;
+    let t = r.dim("t")?;
+    let radius = r.dim("radius")?;
+    let band = r.dim("band")?;
+    let n = r.dim("n")?;
+    let nnz = r.dim("nnz")?;
+    Ok(IndexFileInfo {
+        version: VERSION,
+        file_bytes: bytes.len(),
+        checksum_ok: payload.1,
+        t,
+        n,
+        radius,
+        band,
+        znormalized: flags & FLAG_ZNORM != 0,
+        lb_valid: flags & FLAG_LB_VALID != 0,
+        grid_nnz: if flags & FLAG_HAS_GRID != 0 { Some(nnz) } else { None },
+    })
+}
+
+fn oversize() -> Error {
+    Error::data("index file dimensions overflow")
+}
+
+/// Validate header + checksum, returning the payload slice.
+fn checked_payload(bytes: &[u8]) -> Result<&[u8]> {
+    let (payload, checksum_ok) = checked_payload_relaxed(bytes)?;
+    if !checksum_ok {
+        return Err(Error::data("index file checksum mismatch (corrupt file)"));
+    }
+    Ok(payload)
+}
+
+/// Like [`checked_payload`] but reports checksum validity instead of
+/// failing on it (the `inspect` path).
+fn checked_payload_relaxed(bytes: &[u8]) -> Result<(&[u8], bool)> {
+    if bytes.len() < HEADER_LEN {
+        return Err(Error::data(format!(
+            "index file truncated: {} bytes, header needs {HEADER_LEN}",
+            bytes.len()
+        )));
+    }
+    if bytes[0..4] != MAGIC {
+        return Err(Error::data("not a spdtw index file (bad magic)"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::data(format!(
+            "unsupported index file version {version} (this build reads {VERSION})"
+        )));
+    }
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let actual = (bytes.len() - HEADER_LEN) as u64;
+    if payload_len != actual {
+        return Err(Error::data(format!(
+            "index file truncated or padded: header says {payload_len} payload bytes, file has {actual}"
+        )));
+    }
+    let checksum = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    Ok((payload, fnv1a64(payload) == checksum))
+}
+
+/// Bounds-checked little-endian cursor over the payload.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(len)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| Error::data("index file payload ends mid-field"))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 that must fit in usize on this platform.
+    fn dim(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| Error::data(format!("index file {what} {v} exceeds platform usize")))
+    }
+
+    fn f64s(&mut self, count: usize) -> Result<Vec<f64>> {
+        let raw = self.take(count * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+
+    fn sample_index() -> Index {
+        let ds = synthetic::generate_scaled("CBF", 11, 8, 2).unwrap();
+        Index::build(&ds.train, 4, 2)
+    }
+
+    fn assert_same(a: &Index, b: &Index) {
+        assert_eq!(a.t, b.t);
+        assert_eq!(a.radius, b.radius);
+        assert_eq!(a.band, b.band);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.lb_valid, b.lb_valid);
+        assert_eq!(a.znormalized, b.znormalized);
+        for (x, y) in a.series.iter().zip(&b.series) {
+            for (p, q) in x.iter().zip(y) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        for ((ua, la), (ub, lb)) in a.envs.iter().zip(&b.envs) {
+            for (p, q) in ua.iter().zip(ub).chain(la.iter().zip(lb)) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        match (&a.loc, &b.loc) {
+            (None, None) => {}
+            (Some(x), Some(y)) => assert_eq!(x.as_ref(), y.as_ref()),
+            _ => panic!("grid presence differs"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_banded_bitexact() {
+        let idx = sample_index();
+        let back = from_bytes(&to_bytes(&idx)).unwrap();
+        assert_same(&idx, &back);
+    }
+
+    #[test]
+    fn roundtrip_spdtw_and_znorm_variants() {
+        let ds = synthetic::generate_scaled("Gun-Point", 3, 6, 2).unwrap();
+        let loc = std::sync::Arc::new(LocMatrix::corridor(ds.series_len(), 3));
+        let sp = Index::build_spdtw(&ds.train, loc, 1);
+        assert_same(&sp, &from_bytes(&to_bytes(&sp)).unwrap());
+
+        let zn = Index::build_znormalized(&ds.train, 2, 1);
+        let back = from_bytes(&to_bytes(&zn)).unwrap();
+        assert!(back.znormalized);
+        assert_same(&zn, &back);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let idx = sample_index();
+        let good = to_bytes(&idx);
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+
+        let mut bumped = good.clone();
+        bumped[4] = 2;
+        let err = from_bytes(&bumped).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        for cut in [0, 3, HEADER_LEN - 1, HEADER_LEN + 10, good.len() - 1] {
+            assert!(from_bytes(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn rejects_flipped_payload_byte() {
+        let idx = sample_index();
+        let good = to_bytes(&idx);
+        for probe in [HEADER_LEN, HEADER_LEN + 45, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[probe] ^= 0x40;
+            let err = from_bytes(&bad).unwrap_err().to_string();
+            assert!(err.contains("checksum"), "byte {probe}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_empty_index() {
+        let idx = sample_index();
+        let mut payload = to_bytes(&idx)[HEADER_LEN..].to_vec();
+        payload[0] |= 0x80; // unknown flag bit
+        let bad = reseal(&payload);
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("flag"));
+
+        let mut empty = to_bytes(&idx)[HEADER_LEN..].to_vec();
+        empty[4..12].copy_from_slice(&0u64.to_le_bytes()); // t = 0
+        assert!(from_bytes(&reseal(&empty)).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_radius() {
+        // valid checksum, structurally sound, but radius lies about the
+        // band: the loader must refuse rather than mis-search.
+        let idx = sample_index();
+        let mut payload = to_bytes(&idx)[HEADER_LEN..].to_vec();
+        let wrong = (idx.radius as u64 + 1).to_le_bytes();
+        payload[12..20].copy_from_slice(&wrong);
+        let err = from_bytes(&reseal(&payload)).unwrap_err().to_string();
+        assert!(err.contains("radius"), "{err}");
+    }
+
+    #[test]
+    fn save_load_inspect_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("spdtw_persist_{}", std::process::id()));
+        let path = dir.join("a.spix");
+        let idx = sample_index();
+        save_index(&idx, &path).unwrap();
+        let back = load_index(&path).unwrap();
+        assert_same(&idx, &back);
+
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert!(info.checksum_ok);
+        assert_eq!(info.t, idx.t);
+        assert_eq!(info.n, idx.len());
+        assert_eq!(info.grid_nnz, None);
+
+        // corrupt on disk -> load fails cleanly, inspect flags it
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_index(&path).is_err());
+        assert!(!inspect(&path).unwrap().checksum_ok);
+
+        assert!(load_index(&dir.join("missing.spix")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn search_results_identical_after_reload() {
+        use crate::search::{Cascade, SearchEngine};
+        let ds = synthetic::generate_scaled("SyntheticControl", 7, 12, 6).unwrap();
+        let idx = Index::build(&ds.train, 6, 2);
+        let back = from_bytes(&to_bytes(&idx)).unwrap();
+        let a = SearchEngine::new(std::sync::Arc::new(idx), Cascade::default());
+        let b = SearchEngine::new(std::sync::Arc::new(back), Cascade::default());
+        for probe in &ds.test.series {
+            let ra = a.knn(probe, 3);
+            let rb = b.knn(probe, 3);
+            assert_eq!(ra.neighbors.len(), rb.neighbors.len());
+            for (x, y) in ra.neighbors.iter().zip(&rb.neighbors) {
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+                assert_eq!(x.train_idx, y.train_idx);
+            }
+        }
+    }
+
+    #[test]
+    fn single_series_index_roundtrips() {
+        let train = from_pairs(vec![(3, vec![1.0, -2.0, f64::MIN_POSITIVE, 0.0])]);
+        let idx = Index::build(&train, usize::MAX, 1);
+        assert_same(&idx, &from_bytes(&to_bytes(&idx)).unwrap());
+    }
+
+    /// Re-wrap a doctored payload with a fresh (valid) header+checksum.
+    fn reseal(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+}

@@ -4,6 +4,7 @@
 //! Algorithms 1 and 2 require.  Internally CSR for O(log nnz_row)
 //! predecessor lookups in the sparse DP.
 
+use crate::error::{Error, Result};
 use crate::measures::BIG;
 
 /// Sentinel for "no predecessor" in the precomputed DP dependency lists.
@@ -34,22 +35,37 @@ pub struct LocMatrix {
 
 impl LocMatrix {
     /// Build from (row, col, weight) triples (any order; deduplicated by
-    /// keeping the last weight).
-    pub fn from_triples(t: usize, mut triples: Vec<(usize, usize, f64)>) -> Self {
+    /// keeping the last weight).  Panics on out-of-range cells — use
+    /// [`Self::try_from_triples`] for untrusted input.
+    pub fn from_triples(t: usize, triples: Vec<(usize, usize, f64)>) -> Self {
+        Self::try_from_triples(t, triples).expect("invalid LOC triples")
+    }
+
+    /// Fallible [`Self::from_triples`]: rejects out-of-range cells and
+    /// non-finite weights instead of panicking — the entry point for
+    /// grids read back from disk or the wire (`search::persist`, the
+    /// TCP protocol).
+    pub fn try_from_triples(t: usize, mut triples: Vec<(usize, usize, f64)>) -> Result<Self> {
         triples.sort_by_key(|&(r, c, _)| (r, c));
         triples.dedup_by_key(|&mut (r, c, _)| (r, c));
         let mut row_ptr = vec![0usize; t + 1];
-        for &(r, _, _) in &triples {
-            assert!(r < t, "row {r} out of range (t={t})");
+        for &(r, c, w) in &triples {
+            if r >= t || c >= t {
+                return Err(Error::data(format!(
+                    "LOC cell ({r}, {c}) out of range (t={t})"
+                )));
+            }
+            if !w.is_finite() {
+                return Err(Error::data(format!(
+                    "LOC cell ({r}, {c}) has non-finite weight {w}"
+                )));
+            }
             row_ptr[r + 1] += 1;
         }
         for i in 0..t {
             row_ptr[i + 1] += row_ptr[i];
         }
-        let cols: Vec<u32> = triples.iter().map(|&(_, c, _)| {
-            assert!(c < t, "col {c} out of range (t={t})");
-            c as u32
-        }).collect();
+        let cols: Vec<u32> = triples.iter().map(|&(_, c, _)| c as u32).collect();
         let rows: Vec<u32> = triples.iter().map(|&(r, _, _)| r as u32).collect();
         let weights = triples.iter().map(|&(_, _, w)| w).collect();
         let mut m = LocMatrix {
@@ -61,7 +77,7 @@ impl LocMatrix {
             preds: Vec::new(),
         };
         m.preds = m.build_preds();
-        m
+        Ok(m)
     }
 
     /// Predecessor index table (see field docs).  One binary search per
@@ -218,6 +234,17 @@ impl LocMatrix {
     pub fn min_weight(&self) -> f64 {
         self.weights.iter().copied().fold(f64::INFINITY, f64::min)
     }
+
+    /// Resident heap footprint in bytes (CSR pointers + the four
+    /// nnz-parallel arrays) — folded into `Index::memory_bytes` so the
+    /// TCP `register_index` reply accounts for attached grids.
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.cols.len() * std::mem::size_of::<u32>()
+            + self.rows.len() * std::mem::size_of::<u32>()
+            + self.weights.len() * std::mem::size_of::<f64>()
+            + self.preds.len() * std::mem::size_of::<[u32; 3]>()
+    }
 }
 
 #[cfg(test)]
@@ -298,5 +325,27 @@ mod tests {
         let m = LocMatrix::corridor(6, 2);
         let back = LocMatrix::from_triples(6, m.to_triples());
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn try_from_triples_rejects_bad_cells() {
+        assert!(LocMatrix::try_from_triples(3, vec![(3, 0, 1.0)]).is_err());
+        assert!(LocMatrix::try_from_triples(3, vec![(0, 5, 1.0)]).is_err());
+        assert!(LocMatrix::try_from_triples(3, vec![(0, 0, f64::NAN)]).is_err());
+        assert!(LocMatrix::try_from_triples(3, vec![(0, 0, f64::INFINITY)]).is_err());
+        let ok = LocMatrix::try_from_triples(3, vec![(0, 0, 1.0), (2, 2, 2.0)]).unwrap();
+        assert_eq!(ok.nnz(), 2);
+    }
+
+    #[test]
+    fn memory_bytes_scales_with_nnz() {
+        let small = LocMatrix::corridor(8, 0);
+        let big = LocMatrix::corridor(8, 3);
+        assert!(big.memory_bytes() > small.memory_bytes());
+        // 4 (cols) + 4 (rows) + 8 (weights) + 12 (preds) bytes per entry
+        assert_eq!(
+            big.memory_bytes(),
+            9 * std::mem::size_of::<usize>() + big.nnz() * 28
+        );
     }
 }

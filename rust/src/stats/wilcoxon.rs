@@ -59,7 +59,7 @@ pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> WilcoxonResult {
 
     let has_ties = {
         let mut s = abs.clone();
-        s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        s.sort_by(|x, y| x.total_cmp(y));
         s.windows(2).any(|p| (p[0] - p[1]).abs() < 1e-12)
     };
 
@@ -81,7 +81,7 @@ pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> WilcoxonResult {
     // tie correction: subtract sum(t^3 - t)/48 over tie groups
     {
         let mut s = abs.clone();
-        s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        s.sort_by(|x, y| x.total_cmp(y));
         let mut i = 0;
         while i < n {
             let mut j = i;

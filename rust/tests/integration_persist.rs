@@ -1,0 +1,300 @@
+//! End-to-end acceptance tests for the persistent index store: a saved
+//! index reloads to byte-identical k-NN behavior, every corruption mode
+//! is rejected with a clean error (never a wrong answer), and a fresh
+//! coordinator warm-starts from the store — through both the Rust API
+//! and the TCP `register_index` protocol.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::runtime::Manifest;
+use spdtw::search::{persist, Cascade, Index, SearchEngine};
+use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::util::json::Json;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spdtw_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// THE acceptance invariant: save → load → bit-identical k-NN results
+/// to the freshly built index, across banded, z-normalized and SP-DTW
+/// (learned-grid) index flavors.
+#[test]
+fn saved_index_reloads_to_byte_identical_knn() {
+    let dir = temp_dir("roundtrip");
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 24, 16).unwrap();
+    let t = ds.series_len();
+    let band = (t as f64 * 0.1).round() as usize;
+
+    let grid = learn_occupancy_grid(&ds.train, 4);
+    let loc = Arc::new(grid.threshold(1.0).to_loc(1.0));
+    let variants: Vec<(&str, Index)> = vec![
+        ("banded", Index::build(&ds.train, band, 4)),
+        ("znorm", Index::build_znormalized(&ds.train, band, 4)),
+        ("spdtw", Index::build_spdtw(&ds.train, loc, 4)),
+    ];
+
+    for (tag, built) in variants {
+        let path = dir.join(format!("{tag}.spix"));
+        persist::save_index(&built, &path).unwrap();
+        let loaded = persist::load_index(&path).unwrap();
+
+        // stored state is bit-exact
+        assert_eq!(built.t, loaded.t, "{tag}");
+        assert_eq!(built.radius, loaded.radius, "{tag}");
+        assert_eq!(built.band, loaded.band, "{tag}");
+        assert_eq!(built.labels, loaded.labels, "{tag}");
+        assert_eq!(built.znormalized, loaded.znormalized, "{tag}");
+        assert_eq!(built.lb_valid, loaded.lb_valid, "{tag}");
+        for (a, b) in built.series.iter().zip(&loaded.series) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag} series bytes");
+            }
+        }
+        for ((ua, la), (ub, lb)) in built.envs.iter().zip(&loaded.envs) {
+            for (x, y) in ua.iter().zip(ub).chain(la.iter().zip(lb)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag} envelope bytes");
+            }
+        }
+
+        // ...and so are the search results, for every cascade config
+        for cascade in [Cascade::default(), Cascade::none()] {
+            let fresh = SearchEngine::new(Arc::new(built.clone()), cascade);
+            let warm = SearchEngine::new(Arc::new(loaded.clone()), cascade);
+            for probe in &ds.test.series {
+                for k in [1usize, 3] {
+                    let a = fresh.knn(probe, k);
+                    let b = warm.knn(probe, k);
+                    assert_eq!(a.neighbors.len(), b.neighbors.len(), "{tag}");
+                    for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+                        assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{tag}");
+                        assert_eq!(x.train_idx, y.train_idx, "{tag}");
+                        assert_eq!(x.label, y.label, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every way a file can go bad must produce a clean `Err` — truncation
+/// at any point, a flipped byte anywhere, a bumped version, foreign
+/// magic — and never a partially-working index.
+#[test]
+fn corrupted_files_are_rejected_never_misloaded() {
+    let dir = temp_dir("corrupt");
+    let ds = synthetic::generate_scaled("CBF", 7, 10, 2).unwrap();
+    let index = Index::build(&ds.train, 5, 2);
+    let path = dir.join("cbf.spix");
+    persist::save_index(&index, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // truncation sweep (header boundary, payload, last byte)
+    for frac in [0usize, 1, 7, 23, 24, 60, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..frac]).unwrap();
+        assert!(
+            persist::load_index(&path).is_err(),
+            "truncation to {frac} bytes was accepted"
+        );
+    }
+
+    // bit flips across the whole file: header fields, dims, payload
+    for pos in (0..good.len()).step_by((good.len() / 13).max(1)) {
+        let mut bad = good.clone();
+        bad[pos] ^= 0x20;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(
+            persist::load_index(&path).is_err(),
+            "flipped byte at {pos} was accepted"
+        );
+    }
+
+    // version bump
+    let mut bumped = good.clone();
+    bumped[4] = bumped[4].wrapping_add(1);
+    std::fs::write(&path, &bumped).unwrap();
+    let err = persist::load_index(&path).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // trailing garbage
+    let mut padded = good.clone();
+    padded.extend_from_slice(&[0u8; 16]);
+    std::fs::write(&path, &padded).unwrap();
+    assert!(persist::load_index(&path).is_err());
+
+    // the pristine bytes still load (the sweep didn't overfit)
+    std::fs::write(&path, &good).unwrap();
+    assert!(persist::load_index(&path).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Warm start through the coordinator: process A persists on register,
+/// process B (a fresh Coordinator) serves the same neighbors without a
+/// rebuild, reporting `loaded_from_disk` over TCP.
+#[test]
+fn coordinator_warm_start_serves_identical_results() {
+    let store = temp_dir("warm");
+    let ds = synthetic::generate_scaled("Gun-Point", 13, 16, 8).unwrap();
+    let t = ds.series_len();
+    let band = (t as f64 * 0.1).round() as usize;
+    let mut cfg = CoordinatorConfig::default();
+    cfg.workers = 2;
+    cfg.index_store = Some(store.clone());
+
+    // ---- "process A": build, register persistently, record answers ----
+    let baseline: Vec<Vec<(u64, usize)>> = {
+        let c = Coordinator::start(cfg.clone(), None).unwrap();
+        let key = c
+            .register_index_persistent("gun", Index::build(&ds.train, band, 2))
+            .unwrap();
+        assert_eq!(c.metrics().indexes_saved, 1);
+        let answers = ds
+            .test
+            .series
+            .iter()
+            .map(|probe| {
+                c.submit_search(key, probe, 3, Cascade::default())
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+                    .neighbors
+                    .iter()
+                    .map(|n| (n.dist.to_bits(), n.train_idx))
+                    .collect()
+            })
+            .collect();
+        c.wait_native_idle();
+        answers
+    };
+
+    // the store manifest records the index next to the artifact entries
+    let manifest = Manifest::load(&store).unwrap();
+    let entry = manifest.find_index("gun").expect("manifest entry missing");
+    assert_eq!(entry.length, t);
+    assert_eq!(entry.count, ds.train.len());
+    assert!(entry.path.exists());
+
+    // ---- "process B": warm start, same key lookup, same answers --------
+    let c2 = Coordinator::start(cfg.clone(), None).unwrap();
+    let snap = c2.metrics();
+    assert_eq!(snap.indexes_loaded, 1);
+    assert_eq!(snap.index_load_failures, 0);
+    let (key, loaded) = c2.lookup_index_named("gun").expect("warm index missing");
+    assert!(loaded);
+    for (probe, want) in ds.test.series.iter().zip(&baseline) {
+        let got = c2
+            .submit_search(key, probe, 3, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let got: Vec<(u64, usize)> = got
+            .neighbors
+            .iter()
+            .map(|n| (n.dist.to_bits(), n.train_idx))
+            .collect();
+        assert_eq!(&got, want, "warm-started index diverged");
+    }
+    c2.wait_native_idle();
+    drop(c2);
+
+    // ---- TCP surface: named register resolves warm, search works -------
+    let c3 = Arc::new(Coordinator::start(cfg, None).unwrap());
+    let mut server = Server::start(Arc::clone(&c3), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let series_json: Vec<String> = ds
+        .train
+        .series
+        .iter()
+        .map(|s| {
+            let vals: Vec<String> = s.values.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    let req = format!(
+        r#"{{"op":"register_index","name":"gun","band":{band},"series":[{}]}}"#,
+        series_json.join(",")
+    );
+    let reply = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+    assert_eq!(
+        reply.get("loaded_from_disk"),
+        Some(&Json::Bool(true)),
+        "warm-started name should be served from disk: {reply:?}"
+    );
+    // memory report must include the real footprint (labels at least)
+    let mem = reply.req_f64("memory_bytes").unwrap() as usize;
+    assert!(mem >= ds.train.len() * (t * 8 * 3 + 8), "memory under-reported: {mem}");
+    server.stop();
+    std::fs::remove_dir_all(&store).ok();
+}
+
+/// A corrupt store never reaches serving: the warm start skips the bad
+/// file, counts the rejection, and a named re-register rebuilds cleanly.
+#[test]
+fn warm_start_skips_corrupt_store_and_rebuilds() {
+    let store = temp_dir("warmbad");
+    let ds = synthetic::generate_scaled("CBF", 3, 8, 4).unwrap();
+    let mut cfg = CoordinatorConfig::default();
+    cfg.workers = 2;
+    cfg.index_store = Some(store.clone());
+    {
+        let c = Coordinator::start(cfg.clone(), None).unwrap();
+        c.register_index_persistent("cbf", Index::build(&ds.train, 4, 2))
+            .unwrap();
+    }
+    // corrupt the payload on disk
+    let path = store.join("cbf.spix");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x55;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let c2 = Coordinator::start(cfg, None).unwrap();
+    assert_eq!(c2.lookup_index_named("cbf"), None);
+    assert_eq!(c2.metrics().index_load_failures, 1);
+
+    // re-registering the name rebuilds and re-persists a good file
+    let key = c2
+        .register_index_persistent("cbf", Index::build(&ds.train, 4, 2))
+        .unwrap();
+    assert_eq!(c2.lookup_index_named("cbf"), Some((key, false)));
+    assert!(persist::load_index(&path).is_ok());
+    std::fs::remove_dir_all(&store).ok();
+}
+
+/// `inspect` reads dimensions without a full load and flags bad
+/// checksums instead of erroring.
+#[test]
+fn inspect_summarizes_and_flags_corruption() {
+    let dir = temp_dir("inspect");
+    let ds = synthetic::generate_scaled("CBF", 9, 6, 2).unwrap();
+    let grid = learn_occupancy_grid(&ds.train, 2);
+    let loc = Arc::new(grid.threshold(1.0).to_loc(1.0));
+    let nnz = loc.nnz();
+    let index = Index::build_spdtw(&ds.train, loc, 2);
+    let path = dir.join("sp.spix");
+    persist::save_index(&index, &path).unwrap();
+
+    let info = persist::inspect(&path).unwrap();
+    assert!(info.checksum_ok);
+    assert_eq!(info.t, index.t);
+    assert_eq!(info.n, index.len());
+    assert_eq!(info.radius, index.radius);
+    assert_eq!(info.grid_nnz, Some(nnz));
+    assert_eq!(info.znormalized, false);
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 1;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(!persist::inspect(&path).unwrap().checksum_ok);
+    std::fs::remove_dir_all(&dir).ok();
+}
