@@ -123,8 +123,8 @@ fn main() {
     let learn_cells = spdtw::sparse::learn::learning_cost_cells(n, t);
     let per_query_saved = (t * t) as u64 - grid.threshold(2.0).to_loc(1.0).nnz() as u64;
     println!(
-        "\nA5: one-off learning cost = {learn_cells} cells; per-query saving = {per_query_saved} cells \
-         -> break-even after {} queries",
+        "\nA5: one-off learning cost = {learn_cells} cells; \
+         per-query saving = {per_query_saved} cells -> break-even after {} queries",
         learn_cells / per_query_saved.max(1)
     );
     let _ = synthetic::generate_scaled("CBF", 1, 4, 2).unwrap(); // keep linkage honest

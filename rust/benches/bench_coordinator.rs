@@ -96,7 +96,8 @@ fn main() {
         let (rate, _) = throughput(&coord, key, &queries);
         let snap = coord.metrics();
         println!(
-            "pjrt backend, flush={flush_us:>5}µs:   {rate:>10.0} pairs/s  ({} batches, {} padded, p99 ≤ {:.0}µs)",
+            "pjrt backend, flush={flush_us:>5}µs:   {rate:>10.0} pairs/s  \
+             ({} batches, {} padded, p99 ≤ {:.0}µs)",
             snap.batches,
             snap.padded_slots,
             snap.latency_percentile_us(99.0)

@@ -1,28 +1,50 @@
 //! Per-measure microbenchmarks: single-pair evaluation cost as a
 //! function of T, plus cells/second throughput for the DP measures.
 //! (in-tree harness; criterion is unavailable offline — DESIGN.md §2).
+//!
+//! Every DP kernel is measured twice — the allocating legacy path vs
+//! the `DpWorkspace`-threaded `*_into`/`*_with` path — and the run
+//! emits a machine-readable `BENCH_MEASURES.json` (per-kernel ns/call
+//! and calls/sec for both paths) so the repo's perf trajectory is
+//! tracked across PRs (EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
 
 use spdtw::data::TimeSeries;
 use spdtw::measures::corr::CorrDist;
 use spdtw::measures::daco::Daco;
-use spdtw::measures::dtw::Dtw;
+use spdtw::measures::dtw::{dtw_banded_into, Dtw};
 use spdtw::measures::euclidean::Euclidean;
 use spdtw::measures::kga::Kga;
 use spdtw::measures::krdtw::Krdtw;
 use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
 use spdtw::measures::spdtw::SpDtw;
 use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::workspace::DpWorkspace;
 use spdtw::measures::{KernelMeasure, Measure};
 use spdtw::sparse::LocMatrix;
-use spdtw::util::bench::Bench;
+use spdtw::util::bench::{Bench, BenchResult};
+use spdtw::util::json::Json;
 use spdtw::util::rng::Pcg64;
 
 fn series(rng: &mut Pcg64, t: usize) -> TimeSeries {
     TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect())
 }
 
+/// One emitted record: kernel × path at one series length.
+fn record(t: usize, kernel: &str, path: &str, r: &BenchResult) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("t".into(), Json::num(t as f64));
+    obj.insert("kernel".into(), Json::str(kernel));
+    obj.insert("path".into(), Json::str(path));
+    obj.insert("ns_per_call".into(), Json::num(r.mean_s * 1e9));
+    obj.insert("calls_per_sec".into(), Json::num(r.per_sec()));
+    Json::Obj(obj)
+}
+
 fn main() {
     let mut rng = Pcg64::new(42);
+    let mut records: Vec<Json> = Vec::new();
     for t in [64usize, 128, 256, 512] {
         let x = series(&mut rng, t);
         let y = series(&mut rng, t);
@@ -49,33 +71,82 @@ fn main() {
         // cells/second for the DP engines (roofline-style view)
         let full_cells = (t * t) as f64;
         let dtw_rate = full_cells * b.results()[3].per_sec();
-        let sp_cells = SpDtw::new(LocMatrix::corridor(t, band))
-            .dist(&x, &y)
-            .visited_cells as f64;
+        let sp_cells = spdtw.dist(&x, &y).visited_cells as f64;
         let sp_rate = sp_cells * b.results()[5].per_sec();
         println!(
-            "-> DTW {:.1} Mcells/s | SP-DTW {:.1} Mcells/s (sparse iteration overhead visible here)",
+            "-> DTW {:.1} Mcells/s | SP-DTW {:.1} Mcells/s (sparse iteration overhead here)",
             dtw_rate / 1e6,
             sp_rate / 1e6
+        );
+
+        // Allocating path vs workspace path for every DP kernel: the
+        // "alloc" rows construct a fresh DpWorkspace per call (the cost
+        // profile of the pre-workspace per-call Vec allocations); the
+        // "workspace" rows reuse one warm arena — the steady-state
+        // serving profile of gram/1-NN/search (EXPERIMENTS.md §Perf).
+        Bench::header(&format!("alloc vs workspace, T={t}"));
+        let xs = &x.values;
+        let ys = &y.values;
+        let mut ws = DpWorkspace::new();
+        let mut p = Bench::default();
+
+        let r = p.run("dtw_banded [alloc]", || {
+            dtw_banded_into(&mut DpWorkspace::new(), xs, ys, usize::MAX).value
+        });
+        records.push(record(t, "dtw_banded", "alloc", r));
+        let r = p.run("dtw_banded [workspace]", || {
+            dtw_banded_into(&mut ws, xs, ys, usize::MAX).value
+        });
+        records.push(record(t, "dtw_banded", "workspace", r));
+
+        let r = p.run("spdtw eval [alloc]", || {
+            spdtw.eval_with(&mut DpWorkspace::new(), xs, ys).value
+        });
+        records.push(record(t, "spdtw", "alloc", r));
+        let r = p.run("spdtw eval [workspace]", || spdtw.eval_with(&mut ws, xs, ys).value);
+        records.push(record(t, "spdtw", "workspace", r));
+
+        let kr = Krdtw::new(1.0);
+        let r = p.run("krdtw [alloc]", || {
+            kr.log_kernel_with(&mut DpWorkspace::new(), xs, ys).value
+        });
+        records.push(record(t, "krdtw", "alloc", r));
+        let r = p.run("krdtw [workspace]", || kr.log_kernel_with(&mut ws, xs, ys).value);
+        records.push(record(t, "krdtw", "workspace", r));
+
+        let r = p.run("spkrdtw [alloc]", || {
+            spk.log_kernel_with(&mut DpWorkspace::new(), xs, ys).value
+        });
+        records.push(record(t, "spkrdtw", "alloc", r));
+        let r = p.run("spkrdtw [workspace]", || {
+            spk.log_kernel_with(&mut ws, xs, ys).value
+        });
+        records.push(record(t, "spkrdtw", "workspace", r));
+
+        let results = p.results();
+        println!(
+            "-> workspace speedups: dtw {:.2}x | spdtw {:.2}x | krdtw {:.2}x | spkrdtw {:.2}x",
+            results[0].mean_s / results[1].mean_s,
+            results[2].mean_s / results[3].mean_s,
+            results[4].mean_s / results[5].mean_s,
+            results[6].mean_s / results[7].mean_s,
         );
 
         // §Perf before/after: optimized hot loops vs the reference
         // implementations they replaced (EXPERIMENTS.md §Perf log).
         Bench::header(&format!("§Perf before/after, T={t}"));
-        let mut p = Bench::default();
-        let xs = &x.values;
-        let ys = &y.values;
-        p.run("dtw_banded_ref (before)", || {
+        let mut q = Bench::default();
+        q.run("dtw_banded_ref (before)", || {
             spdtw::measures::dtw::dtw_banded_ref(xs, ys, usize::MAX).value
         });
-        p.run("dtw_banded (after)", || {
+        q.run("dtw_banded (after)", || {
             spdtw::measures::dtw::dtw_banded(xs, ys, usize::MAX).value
         });
-        p.run("spdtw eval_scan (before)", || spdtw_scan(&spdtw, xs, ys));
-        p.run("spdtw eval (after)", || spdtw.eval(xs, ys).value);
-        p.run("spkrdtw scan (before)", || spk.log_kernel_scan(xs, ys).value);
-        p.run("spkrdtw (after)", || spk.log_kernel(xs, ys).value);
-        let r = p.results();
+        q.run("spdtw eval_scan (before)", || spdtw.eval_scan(xs, ys).value);
+        q.run("spdtw eval (after)", || spdtw.eval(xs, ys).value);
+        q.run("spkrdtw scan (before)", || spk.log_kernel_scan(xs, ys).value);
+        q.run("spkrdtw (after)", || spk.log_kernel(xs, ys).value);
+        let r = q.results();
         println!(
             "-> speedups: dtw {:.2}x | spdtw {:.2}x | spkrdtw {:.2}x",
             r[0].mean_s / r[1].mean_s,
@@ -83,8 +154,18 @@ fn main() {
             r[4].mean_s / r[5].mean_s
         );
     }
-}
 
-fn spdtw_scan(sp: &SpDtw, x: &[f64], y: &[f64]) -> f64 {
-    sp.eval_scan(x, y).value
+    let mut root = BTreeMap::new();
+    root.insert("generated_by".into(), Json::str("bench_measures"));
+    root.insert(
+        "unit_note".into(),
+        Json::str("ns_per_call mean over samples; alloc = fresh DpWorkspace per call"),
+    );
+    root.insert("records".into(), Json::Arr(records));
+    let out = Json::Obj(root).to_pretty();
+    let path = "BENCH_MEASURES.json";
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

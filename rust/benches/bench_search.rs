@@ -72,7 +72,15 @@ fn main() {
 
         // ---- cascade ablation over the banded-DTW index -------------------
         let index = Arc::new(Index::build(&ds.train, band, 8));
-        run_engine("full cascade", &index, Cascade::default(), &ds, k, brute.visited_cells, brute_secs);
+        run_engine(
+            "full cascade",
+            &index,
+            Cascade::default(),
+            &ds,
+            k,
+            brute.visited_cells,
+            brute_secs,
+        );
         run_engine(
             "no early abandon",
             &index,
@@ -85,7 +93,13 @@ fn main() {
         run_engine(
             "lower bounds only",
             &index,
-            Cascade { kim: true, keogh: true, keogh_rev: false, early_abandon: false, order_by_lb: true },
+            Cascade {
+                kim: true,
+                keogh: true,
+                keogh_rev: false,
+                early_abandon: false,
+                order_by_lb: true,
+            },
             &ds,
             k,
             brute.visited_cells,
@@ -94,7 +108,13 @@ fn main() {
         run_engine(
             "abandon only",
             &index,
-            Cascade { kim: false, keogh: false, keogh_rev: false, early_abandon: true, order_by_lb: false },
+            Cascade {
+                kim: false,
+                keogh: false,
+                keogh_rev: false,
+                early_abandon: true,
+                order_by_lb: false,
+            },
             &ds,
             k,
             brute.visited_cells,

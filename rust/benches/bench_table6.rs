@@ -43,7 +43,8 @@ fn main() {
         let t = ds.series_len();
         let grid = learn_occupancy_grid(&ds.train, cfg.threads);
         let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), cfg.threads);
-        let (theta, _) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
+        let (theta, _) =
+            tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
         let sc = SakoeChibaDtw::new(band_pct);
         let loc_w = grid.threshold(theta).to_loc(1.0);
         let loc_m = grid.threshold(theta).to_loc_mask();

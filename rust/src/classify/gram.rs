@@ -26,18 +26,20 @@ impl Gram {
 }
 
 /// Symmetric train Gram: computes the N(N-1)/2 upper triangle + diagonal
-/// self-kernels, mirrors the rest.
+/// self-kernels, mirrors the rest.  Kernel DPs run through
+/// [`KernelMeasure::log_k_with`] against per-worker workspaces on the
+/// persistent pool — zero allocations per entry once warm.
 pub fn train_gram(kernel: &dyn KernelMeasure, set: &LabeledSet, threads: usize) -> Gram {
     let n = set.len();
-    let selfk = pool::par_map(n, threads, |i| {
-        kernel.log_k(&set.series[i], &set.series[i])
+    let selfk = pool::par_map_ws(n, threads, 1, |i, ws| {
+        kernel.log_k_with(ws, &set.series[i], &set.series[i])
     });
     let pairs: Vec<(usize, usize)> = (0..n)
         .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
         .collect();
-    let vals = pool::par_map(pairs.len(), threads, |k| {
+    let vals = pool::par_map_ws(pairs.len(), threads, 1, |k, ws| {
         let (i, j) = pairs[k];
-        kernel.log_k(&set.series[i], &set.series[j])
+        kernel.log_k_with(ws, &set.series[i], &set.series[j])
     });
     let mut data = vec![0.0; n * n];
     let mut visited: u64 = selfk.iter().map(|d| d.visited_cells).sum();
@@ -68,15 +70,15 @@ pub fn cross_gram(
 ) -> Gram {
     let nr = test.len();
     let nc = train.len();
-    let self_test = pool::par_map(nr, threads, |i| {
-        kernel.log_k(&test.series[i], &test.series[i])
+    let self_test = pool::par_map_ws(nr, threads, 1, |i, ws| {
+        kernel.log_k_with(ws, &test.series[i], &test.series[i])
     });
-    let self_train = pool::par_map(nc, threads, |j| {
-        kernel.log_k(&train.series[j], &train.series[j])
+    let self_train = pool::par_map_ws(nc, threads, 1, |j, ws| {
+        kernel.log_k_with(ws, &train.series[j], &train.series[j])
     });
-    let vals = pool::par_map(nr * nc, threads, |k| {
+    let vals = pool::par_map_ws(nr * nc, threads, 1, |k, ws| {
         let (i, j) = (k / nc, k % nc);
-        kernel.log_k(&test.series[i], &train.series[j])
+        kernel.log_k_with(ws, &test.series[i], &train.series[j])
     });
     let mut data = vec![0.0; nr * nc];
     let mut visited: u64 = self_test.iter().chain(self_train.iter()).map(|d| d.visited_cells).sum();

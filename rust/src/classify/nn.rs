@@ -10,11 +10,22 @@ use crate::pool;
 use crate::search::{Cascade, Index, PruneStats, SearchEngine};
 
 /// 1-NN classification of `test` against `train`.
-pub fn classify_1nn(measure: &dyn Measure, train: &LabeledSet, test: &LabeledSet, threads: usize) -> EvalResult {
+pub fn classify_1nn(
+    measure: &dyn Measure,
+    train: &LabeledSet,
+    test: &LabeledSet,
+    threads: usize,
+) -> EvalResult {
     classify_knn(measure, train, test, 1, threads)
 }
 
 /// k-NN (majority vote, ties broken by the nearer neighbor set).
+///
+/// Runs on the persistent pool with one long-lived workspace per
+/// worker: every distance goes through [`Measure::dist_with`], and the
+/// per-probe `(dist, label)` table plus the rank scratch are workspace
+/// buffers — the steady-state 1-NN path allocates nothing per distance
+/// call.
 pub fn classify_knn(
     measure: &dyn Measure,
     train: &LabeledSet,
@@ -23,20 +34,34 @@ pub fn classify_knn(
     threads: usize,
 ) -> EvalResult {
     assert!(k >= 1 && !train.is_empty() && !test.is_empty());
-    let rows = pool::par_map(test.len(), threads, |i| {
+    let rows = pool::par_map_ws(test.len(), threads, 1, |i, ws| {
         let probe = &test.series[i];
-        let mut dists: Vec<(f64, usize)> = Vec::with_capacity(train.len());
+        let mut dists = std::mem::take(&mut ws.dists);
+        let mut order = std::mem::take(&mut ws.order);
+        let mut top = std::mem::take(&mut ws.top);
+        dists.clear();
+        dists.reserve(train.len());
         let mut visited = 0u64;
         for tr in &train.series {
-            let d = measure.dist(probe, tr);
+            let d = measure.dist_with(ws, probe, tr);
             visited += d.visited_cells;
             dists.push((d.value, tr.label));
         }
-        // total_cmp, not partial_cmp().unwrap(): a NaN distance (e.g. a
-        // degenerate kernel value) must not panic the whole run — it
-        // sorts after every real distance instead.
-        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
-        let label = vote(&dists[..k.min(dists.len())]);
+        // Rank by (distance, train position): identical to the stable
+        // sort over distances the brute-force protocol specifies, but
+        // via a non-allocating unstable index sort — the `(dist, idx)`
+        // key is a duplicate-free total order (total_cmp, not
+        // partial_cmp().unwrap(): a NaN distance must not panic the
+        // whole run — it sorts after every real distance instead).
+        order.clear();
+        order.extend(0..dists.len());
+        order.sort_unstable_by(|&a, &b| dists[a].0.total_cmp(&dists[b].0).then(a.cmp(&b)));
+        top.clear();
+        top.extend(order.iter().take(k.min(dists.len())).map(|&j| dists[j]));
+        let label = vote(&top);
+        ws.dists = dists;
+        ws.order = order;
+        ws.top = top;
         (label, visited, train.len() as u64)
     });
     let pred: Vec<usize> = rows.iter().map(|r| r.0).collect();
@@ -88,14 +113,14 @@ pub fn classify_knn_indexed(
 pub fn loo_error_1nn(measure: &dyn Measure, set: &LabeledSet, threads: usize) -> f64 {
     let n = set.len();
     assert!(n >= 2);
-    let wrong = pool::par_map(n, threads, |i| {
+    let wrong = pool::par_map_ws(n, threads, 1, |i, ws| {
         let probe = &set.series[i];
         let mut best = (f64::INFINITY, usize::MAX);
         for (j, tr) in set.series.iter().enumerate() {
             if j == i {
                 continue;
             }
-            let d = measure.dist(probe, tr).value;
+            let d = measure.dist_with(ws, probe, tr).value;
             if d < best.0 {
                 best = (d, tr.label);
             }

@@ -95,8 +95,10 @@ impl BinarySvm {
                     let ai = ai_old + y[i] * y[j] * (aj_old - aj);
                     alpha[i] = ai;
                     alpha[j] = aj;
-                    let b1 = b - ei - y[i] * (ai - ai_old) * k(i, i) - y[j] * (aj - aj_old) * k(i, j);
-                    let b2 = b - ej - y[i] * (ai - ai_old) * k(i, j) - y[j] * (aj - aj_old) * k(j, j);
+                    let b1 =
+                        b - ei - y[i] * (ai - ai_old) * k(i, i) - y[j] * (aj - aj_old) * k(i, j);
+                    let b2 =
+                        b - ej - y[i] * (ai - ai_old) * k(i, j) - y[j] * (aj - aj_old) * k(j, j);
                     b = if ai > 0.0 && ai < p.c {
                         b1
                     } else if aj > 0.0 && aj < p.c {
@@ -269,7 +271,11 @@ pub fn select_c(
                         v.1 += 1;
                     }
                 }
-                let pred = votes.into_iter().max_by_key(|&(_, v)| v).map(|(l, _)| l).unwrap_or(usize::MAX);
+                let pred = votes
+                    .into_iter()
+                    .max_by_key(|&(_, v)| v)
+                    .map(|(l, _)| l)
+                    .unwrap_or(usize::MAX);
                 if pred != train.series[vi].label {
                     errs += 1;
                 }

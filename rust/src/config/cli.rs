@@ -126,7 +126,8 @@ mod tests {
 
     #[test]
     fn parse_mixed() {
-        let a = Args::parse(&sv(&["run", "--seed", "7", "--full", "--gamma=2.5", "CBF"]), &spec()).unwrap();
+        let argv = sv(&["run", "--seed", "7", "--full", "--gamma=2.5", "CBF"]);
+        let a = Args::parse(&argv, &spec()).unwrap();
         assert_eq!(a.positional, vec!["run", "CBF"]);
         assert_eq!(a.get_usize("seed").unwrap(), Some(7));
         assert!(a.flag("full"));

@@ -119,7 +119,12 @@ impl Batcher {
         self.pending.values().map(|p| p.jobs.len()).sum()
     }
 
-    fn materialize(bucket: BucketKey, jobs: Vec<PjrtJob>, cap: usize, by_timeout: bool) -> ReadyBatch {
+    fn materialize(
+        bucket: BucketKey,
+        jobs: Vec<PjrtJob>,
+        cap: usize,
+        by_timeout: bool,
+    ) -> ReadyBatch {
         let t = bucket.t;
         let n = jobs.len();
         assert!(n >= 1 && n <= cap);

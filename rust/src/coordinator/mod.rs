@@ -5,7 +5,7 @@
 //!
 //! ```text
 //!  submit_*()              dispatcher thread            pjrt runner
-//!  ──────────► dispatch ──► Batcher (per-bucket) ──► bounded queue ──► PjrtHandle
+//!  ────────► dispatch ──► Batcher (per-bucket) ──► queue ──► PjrtHandle
 //!      │                        │ full/stale flush                    (executor thread)
 //!      │                        ▼
 //!      └──────► native WorkerPool (backpressured)  ──► response channels
@@ -155,7 +155,9 @@ impl Coordinator {
                                             .padded_slots
                                             .fetch_add(ready.padded as u64, Ordering::Relaxed);
                                         if ready.by_timeout {
-                                            metrics2.timeout_flushes.fetch_add(1, Ordering::Relaxed);
+                                            metrics2
+                                                .timeout_flushes
+                                                .fetch_add(1, Ordering::Relaxed);
                                         }
                                         if batch_tx.send(ready).is_err() {
                                             break;
@@ -170,7 +172,9 @@ impl Coordinator {
                                             .padded_slots
                                             .fetch_add(ready.padded as u64, Ordering::Relaxed);
                                         if ready.by_timeout {
-                                            metrics2.timeout_flushes.fetch_add(1, Ordering::Relaxed);
+                                            metrics2
+                                                .timeout_flushes
+                                                .fetch_add(1, Ordering::Relaxed);
                                         }
                                         if batch_tx.send(ready).is_err() {
                                             break;
@@ -572,7 +576,8 @@ fn warm_start_indexes(dir: &std::path::Path, reg: &mut IndexRegistry, metrics: &
             }
             Ok(index) => {
                 eprintln!(
-                    "warning: skipping stale index '{}': file is T={} n={}, manifest says T={} n={}",
+                    "warning: skipping stale index '{}': file is T={} n={}, \
+                     manifest says T={} n={}",
                     entry.name,
                     index.t,
                     index.len(),

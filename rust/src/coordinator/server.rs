@@ -107,7 +107,10 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
         }
         let reply = match dispatch(&line, coord, stop) {
             Ok(json) => json,
-            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(e.to_string()))]),
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e.to_string())),
+            ]),
         };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -378,7 +381,10 @@ mod tests {
         let reg = client
             .call(
                 &Json::parse(
-                    r#"{"op":"register_index","band":1,"series":[[0,0,0],[5,5,5],[0.1,0.1,0.1]],"labels":[0,1,0]}"#,
+                    concat!(
+                        r#"{"op":"register_index","band":1,"#,
+                        r#""series":[[0,0,0],[5,5,5],[0.1,0.1,0.1]],"labels":[0,1,0]}"#
+                    ),
                 )
                 .unwrap(),
             )
@@ -424,7 +430,10 @@ mod tests {
         ccfg.index_store = Some(store.clone());
 
         let reg_req = Json::parse(
-            r#"{"op":"register_index","name":"tiny","band":1,"series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#,
+            concat!(
+                r#"{"op":"register_index","name":"tiny","band":1,"#,
+                r#""series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#
+            ),
         )
         .unwrap();
 
@@ -443,7 +452,10 @@ mod tests {
             assert_eq!(r2.req_usize("index").unwrap(), r.req_usize("index").unwrap());
             // bad names are rejected, not written
             let bad = client
-                .call(&Json::parse(r#"{"op":"register_index","name":"../x","series":[[1,2]]}"#).unwrap())
+                .call(
+                    &Json::parse(r#"{"op":"register_index","name":"../x","series":[[1,2]]}"#)
+                        .unwrap(),
+                )
                 .unwrap();
             assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
             server.stop();
@@ -458,7 +470,10 @@ mod tests {
         assert_eq!(r.get("loaded_from_disk"), Some(&Json::Bool(true)));
         let idx = r.req_usize("index").unwrap();
         let s = client
-            .call(&Json::parse(&format!(r#"{{"op":"search","index":{idx},"k":1,"x":[0,0,0]}}"#)).unwrap())
+            .call(
+                &Json::parse(&format!(r#"{{"op":"search","index":{idx},"k":1,"x":[0,0,0]}}"#))
+                    .unwrap(),
+            )
             .unwrap();
         assert_eq!(s.get("ok"), Some(&Json::Bool(true)), "{s:?}");
         assert_eq!(s.req_arr("neighbors").unwrap()[0].req_f64("dist").unwrap(), 0.0);

@@ -29,27 +29,7 @@ impl TimeSeries {
     /// Z-normalize in place (mean 0, std 1).  Constant series are left
     /// centered at 0 (std guard), matching the UCR archive convention.
     pub fn znormalize(&mut self) {
-        let n = self.values.len();
-        if n == 0 {
-            return;
-        }
-        let mean = self.values.iter().sum::<f64>() / n as f64;
-        let var = self
-            .values
-            .iter()
-            .map(|v| (v - mean) * (v - mean))
-            .sum::<f64>()
-            / n as f64;
-        let std = var.sqrt();
-        if std > 1e-12 {
-            for v in &mut self.values {
-                *v = (*v - mean) / std;
-            }
-        } else {
-            for v in &mut self.values {
-                *v -= mean;
-            }
-        }
+        znormalize_in_place(&mut self.values);
     }
 
     /// Z-normalized copy.
@@ -57,6 +37,29 @@ impl TimeSeries {
         let mut c = self.clone();
         c.znormalize();
         c
+    }
+}
+
+/// Z-normalize a raw slice in place (mean 0, std 1; constant slices are
+/// centered at 0) — the allocation-free core of
+/// [`TimeSeries::znormalize`], used by the search engine to normalize
+/// queries into a reused workspace buffer with bit-identical results.
+pub fn znormalize_in_place(values: &mut [f64]) {
+    let n = values.len();
+    if n == 0 {
+        return;
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    if std > 1e-12 {
+        for v in values.iter_mut() {
+            *v = (*v - mean) / std;
+        }
+    } else {
+        for v in values.iter_mut() {
+            *v -= mean;
+        }
     }
 }
 

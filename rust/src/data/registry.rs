@@ -46,36 +46,239 @@ pub struct DatasetSpec {
 
 /// The paper's Table I, verbatim (k, N_train, N_test, T).
 pub const TABLE1: &[DatasetSpec] = &[
-    DatasetSpec { name: "50Words", classes: 50, train: 450, test: 455, length: 270, family: Family::Bumps },
-    DatasetSpec { name: "Adiac", classes: 37, train: 390, test: 391, length: 176, family: Family::Harmonics },
-    DatasetSpec { name: "ArrowHead", classes: 3, train: 36, test: 175, length: 251, family: Family::Bumps },
-    DatasetSpec { name: "Beef", classes: 5, train: 30, test: 30, length: 470, family: Family::Harmonics },
-    DatasetSpec { name: "BeetleFly", classes: 2, train: 20, test: 20, length: 512, family: Family::WarpedWalk },
-    DatasetSpec { name: "BirdChicken", classes: 2, train: 20, test: 20, length: 512, family: Family::WarpedWalk },
-    DatasetSpec { name: "Car", classes: 4, train: 60, test: 60, length: 577, family: Family::Bumps },
+    DatasetSpec {
+        name: "50Words",
+        classes: 50,
+        train: 450,
+        test: 455,
+        length: 270,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "Adiac",
+        classes: 37,
+        train: 390,
+        test: 391,
+        length: 176,
+        family: Family::Harmonics,
+    },
+    DatasetSpec {
+        name: "ArrowHead",
+        classes: 3,
+        train: 36,
+        test: 175,
+        length: 251,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "Beef",
+        classes: 5,
+        train: 30,
+        test: 30,
+        length: 470,
+        family: Family::Harmonics,
+    },
+    DatasetSpec {
+        name: "BeetleFly",
+        classes: 2,
+        train: 20,
+        test: 20,
+        length: 512,
+        family: Family::WarpedWalk,
+    },
+    DatasetSpec {
+        name: "BirdChicken",
+        classes: 2,
+        train: 20,
+        test: 20,
+        length: 512,
+        family: Family::WarpedWalk,
+    },
+    DatasetSpec {
+        name: "Car",
+        classes: 4,
+        train: 60,
+        test: 60,
+        length: 577,
+        family: Family::Bumps,
+    },
     DatasetSpec { name: "CBF", classes: 3, train: 30, test: 900, length: 128, family: Family::Cbf },
-    DatasetSpec { name: "ECGFiveDays", classes: 2, train: 23, test: 861, length: 136, family: Family::Bumps },
-    DatasetSpec { name: "ElectricDevices", classes: 7, train: 8926, test: 7711, length: 96, family: Family::Device },
-    DatasetSpec { name: "FaceFour", classes: 4, train: 24, test: 88, length: 350, family: Family::Bumps },
-    DatasetSpec { name: "FacesUCR", classes: 14, train: 200, test: 2050, length: 131, family: Family::Bumps },
-    DatasetSpec { name: "Fish", classes: 7, train: 175, test: 175, length: 463, family: Family::Bumps },
-    DatasetSpec { name: "FordB", classes: 2, train: 810, test: 3636, length: 500, family: Family::Harmonics },
-    DatasetSpec { name: "Gun-Point", classes: 2, train: 50, test: 150, length: 150, family: Family::Motion },
-    DatasetSpec { name: "Ham", classes: 2, train: 109, test: 105, length: 431, family: Family::Harmonics },
-    DatasetSpec { name: "Haptics", classes: 5, train: 155, test: 308, length: 1092, family: Family::WarpedWalk },
-    DatasetSpec { name: "Herring", classes: 2, train: 64, test: 64, length: 512, family: Family::Bumps },
-    DatasetSpec { name: "InlineSkate", classes: 7, train: 100, test: 550, length: 1882, family: Family::WarpedWalk },
-    DatasetSpec { name: "Lighting-2", classes: 2, train: 60, test: 61, length: 637, family: Family::Spikes },
-    DatasetSpec { name: "Lighting-7", classes: 7, train: 70, test: 73, length: 319, family: Family::Spikes },
-    DatasetSpec { name: "MedicalImages", classes: 10, train: 381, test: 760, length: 99, family: Family::Bumps },
-    DatasetSpec { name: "OliveOil", classes: 4, train: 30, test: 30, length: 570, family: Family::Harmonics },
-    DatasetSpec { name: "OSULeaf", classes: 6, train: 200, test: 242, length: 427, family: Family::Bumps },
-    DatasetSpec { name: "ScreenType", classes: 3, train: 375, test: 375, length: 720, family: Family::Device },
-    DatasetSpec { name: "ShapesAll", classes: 60, train: 600, test: 600, length: 512, family: Family::Bumps },
-    DatasetSpec { name: "SwedishLeaf", classes: 15, train: 500, test: 625, length: 128, family: Family::Bumps },
-    DatasetSpec { name: "SyntheticControl", classes: 6, train: 300, test: 300, length: 60, family: Family::ControlChart },
-    DatasetSpec { name: "Trace", classes: 4, train: 100, test: 100, length: 275, family: Family::Motion },
-    DatasetSpec { name: "Wine", classes: 2, train: 57, test: 54, length: 234, family: Family::Harmonics },
+    DatasetSpec {
+        name: "ECGFiveDays",
+        classes: 2,
+        train: 23,
+        test: 861,
+        length: 136,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "ElectricDevices",
+        classes: 7,
+        train: 8926,
+        test: 7711,
+        length: 96,
+        family: Family::Device,
+    },
+    DatasetSpec {
+        name: "FaceFour",
+        classes: 4,
+        train: 24,
+        test: 88,
+        length: 350,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "FacesUCR",
+        classes: 14,
+        train: 200,
+        test: 2050,
+        length: 131,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "Fish",
+        classes: 7,
+        train: 175,
+        test: 175,
+        length: 463,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "FordB",
+        classes: 2,
+        train: 810,
+        test: 3636,
+        length: 500,
+        family: Family::Harmonics,
+    },
+    DatasetSpec {
+        name: "Gun-Point",
+        classes: 2,
+        train: 50,
+        test: 150,
+        length: 150,
+        family: Family::Motion,
+    },
+    DatasetSpec {
+        name: "Ham",
+        classes: 2,
+        train: 109,
+        test: 105,
+        length: 431,
+        family: Family::Harmonics,
+    },
+    DatasetSpec {
+        name: "Haptics",
+        classes: 5,
+        train: 155,
+        test: 308,
+        length: 1092,
+        family: Family::WarpedWalk,
+    },
+    DatasetSpec {
+        name: "Herring",
+        classes: 2,
+        train: 64,
+        test: 64,
+        length: 512,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "InlineSkate",
+        classes: 7,
+        train: 100,
+        test: 550,
+        length: 1882,
+        family: Family::WarpedWalk,
+    },
+    DatasetSpec {
+        name: "Lighting-2",
+        classes: 2,
+        train: 60,
+        test: 61,
+        length: 637,
+        family: Family::Spikes,
+    },
+    DatasetSpec {
+        name: "Lighting-7",
+        classes: 7,
+        train: 70,
+        test: 73,
+        length: 319,
+        family: Family::Spikes,
+    },
+    DatasetSpec {
+        name: "MedicalImages",
+        classes: 10,
+        train: 381,
+        test: 760,
+        length: 99,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "OliveOil",
+        classes: 4,
+        train: 30,
+        test: 30,
+        length: 570,
+        family: Family::Harmonics,
+    },
+    DatasetSpec {
+        name: "OSULeaf",
+        classes: 6,
+        train: 200,
+        test: 242,
+        length: 427,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "ScreenType",
+        classes: 3,
+        train: 375,
+        test: 375,
+        length: 720,
+        family: Family::Device,
+    },
+    DatasetSpec {
+        name: "ShapesAll",
+        classes: 60,
+        train: 600,
+        test: 600,
+        length: 512,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "SwedishLeaf",
+        classes: 15,
+        train: 500,
+        test: 625,
+        length: 128,
+        family: Family::Bumps,
+    },
+    DatasetSpec {
+        name: "SyntheticControl",
+        classes: 6,
+        train: 300,
+        test: 300,
+        length: 60,
+        family: Family::ControlChart,
+    },
+    DatasetSpec {
+        name: "Trace",
+        classes: 4,
+        train: 100,
+        test: 100,
+        length: 275,
+        family: Family::Motion,
+    },
+    DatasetSpec {
+        name: "Wine",
+        classes: 2,
+        train: 57,
+        test: 54,
+        length: 234,
+        family: Family::Harmonics,
+    },
 ];
 
 /// Look up a Table I spec by (case-insensitive) name.

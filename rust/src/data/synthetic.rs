@@ -33,7 +33,12 @@ pub fn generate(name: &str, seed: u64) -> Result<Dataset> {
 
 /// Generate with capped split sizes (stratified). Used by the scaled
 /// experiment runs; the full run passes the Table-I sizes.
-pub fn generate_scaled(name: &str, seed: u64, max_train: usize, max_test: usize) -> Result<Dataset> {
+pub fn generate_scaled(
+    name: &str,
+    seed: u64,
+    max_train: usize,
+    max_test: usize,
+) -> Result<Dataset> {
     let spec = registry::find(name).ok_or_else(|| Error::Unknown {
         kind: "dataset",
         name: name.to_string(),
@@ -44,7 +49,12 @@ pub fn generate_scaled(name: &str, seed: u64, max_train: usize, max_test: usize)
 }
 
 /// Generate `n_train`/`n_test` series for a spec (stratified labels).
-pub fn generate_with_sizes(spec: &DatasetSpec, seed: u64, n_train: usize, n_test: usize) -> Dataset {
+pub fn generate_with_sizes(
+    spec: &DatasetSpec,
+    seed: u64,
+    n_train: usize,
+    n_test: usize,
+) -> Dataset {
     let base = hash64(spec.name) ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
     let mut proto_rng = Pcg64::new(base);
     // Class prototypes are shared between splits (drawn once).
@@ -97,7 +107,9 @@ impl ClassProto {
                 let nb = 2 + (class % 4) + r.below(2);
                 let centers = (0..nb).map(|_| r.range(0.08, 0.92)).collect();
                 let widths = (0..nb).map(|_| r.range(0.02, 0.10)).collect();
-                let amps = (0..nb).map(|_| r.range(0.5, 2.0) * if r.f64() < 0.25 { -1.0 } else { 1.0 }).collect();
+                let amps = (0..nb)
+                    .map(|_| r.range(0.5, 2.0) * if r.f64() < 0.25 { -1.0 } else { 1.0 })
+                    .collect();
                 ClassProto::Bumps { centers, widths, amps }
             }
             Family::Harmonics => {
@@ -111,7 +123,15 @@ impl ClassProto {
                 let ne = 2 + r.below(4);
                 let mut edges: Vec<f64> = (0..ne).map(|_| r.range(0.05, 0.95)).collect();
                 edges.sort_by(|a, b| a.total_cmp(b));
-                let levels = (0..=ne).map(|_| if r.f64() < 0.5 { r.range(0.0, 0.4) } else { r.range(1.2, 3.0) }).collect();
+                let levels = (0..=ne)
+                    .map(|_| {
+                        if r.f64() < 0.5 {
+                            r.range(0.0, 0.4)
+                        } else {
+                            r.range(1.2, 3.0)
+                        }
+                    })
+                    .collect();
                 ClassProto::Device { edges, levels }
             }
             Family::WarpedWalk => {
@@ -170,14 +190,19 @@ impl ClassProto {
                         let u = i as f64 / (t - 1) as f64;
                         let mut v = 0.0;
                         for ((f, p), a) in freqs.iter().zip(phases).zip(amps) {
-                            v += a * (std::f64::consts::TAU * f * freq_jit * u + p + phase_jit).sin();
+                            v += a
+                                * (std::f64::consts::TAU * f * freq_jit * u + p + phase_jit)
+                                    .sin();
                         }
                         v + noise * 0.5 * rng.normal()
                     })
                     .collect()
             }
             ClassProto::Device { edges, levels } => {
-                let jit: Vec<f64> = edges.iter().map(|e| (e + rng.range(-0.05, 0.05)).clamp(0.0, 1.0)).collect();
+                let jit: Vec<f64> = edges
+                    .iter()
+                    .map(|e| (e + rng.range(-0.05, 0.05)).clamp(0.0, 1.0))
+                    .collect();
                 (0..t)
                     .map(|i| {
                         let u = i as f64 / (t - 1) as f64;
@@ -203,7 +228,10 @@ impl ClassProto {
                     .collect()
             }
             ClassProto::Spikes { positions, signs, decay } => {
-                let jit: Vec<f64> = positions.iter().map(|p| (p + rng.range(-0.03, 0.03)).clamp(0.0, 1.0)).collect();
+                let jit: Vec<f64> = positions
+                    .iter()
+                    .map(|p| (p + rng.range(-0.03, 0.03)).clamp(0.0, 1.0))
+                    .collect();
                 (0..t)
                     .map(|i| {
                         let u = i as f64 / (t - 1) as f64;
@@ -252,7 +280,10 @@ fn control_chart_instance(kind: usize, t: usize, rng: &mut Pcg64) -> Vec<f64> {
             let base = 30.0 + 2.0 * rng.normal();
             match kind {
                 0 => base,                                                   // normal
-                1 => base + 8.0 * (std::f64::consts::TAU * x / rng.range(10.0, 15.0).max(1.0)).sin(), // cyclic
+                // cyclic
+                1 => {
+                    base + 8.0 * (std::f64::consts::TAU * x / rng.range(10.0, 15.0).max(1.0)).sin()
+                }
                 2 => base + 0.4 * x,                                         // increasing trend
                 3 => base - 0.4 * x,                                         // decreasing trend
                 4 => base + if x >= shift_point { 10.0 } else { 0.0 },       // upward shift
@@ -280,7 +311,9 @@ fn smooth(xs: &[f64], w: usize) -> Vec<f64> {
 fn warp_resample(proto: &[f64], t: usize, rng: &mut Pcg64, strength: f64) -> Vec<f64> {
     let knots = 8;
     // Positive increments -> monotone warp; normalized to [0,1].
-    let mut incs: Vec<f64> = (0..knots).map(|_| (1.0 - strength) + strength * rng.range(0.0, 2.0)).collect();
+    let mut incs: Vec<f64> = (0..knots)
+        .map(|_| (1.0 - strength) + strength * rng.range(0.0, 2.0))
+        .collect();
     let total: f64 = incs.iter().sum();
     for v in &mut incs {
         *v /= total;

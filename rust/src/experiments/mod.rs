@@ -248,7 +248,11 @@ fn table4(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
 }
 
 fn table5(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
-    let with_svm: Vec<DatasetEval> = evals.iter().filter(|e| !e.err_svm.is_empty()).cloned().collect();
+    let with_svm: Vec<DatasetEval> = evals
+        .iter()
+        .filter(|e| !e.err_svm.is_empty())
+        .cloned()
+        .collect();
     let t = wilcoxon_table(
         "Table V — Wilcoxon signed-rank p-values (SVM)",
         SVM_METHODS,
@@ -328,7 +332,8 @@ fn fig4(cfg: &ExperimentConfig) -> Result<()> {
         let cfg = &fcfg;
         let ds = runner::load_dataset(cfg, name)?;
         let grid = learn_occupancy_grid(&ds.train, cfg.threads);
-        let (best, curve) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
+        let (best, curve) =
+            tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), cfg.threads);
         for (theta, err) in &curve {
             let marker = if *theta == best { " *" } else { "" };
             t.push_row(vec![

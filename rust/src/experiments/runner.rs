@@ -87,7 +87,8 @@ pub fn tune_on_train(cfg: &ExperimentConfig, ds: &Dataset) -> TunedModels {
     let threads = cfg.threads;
     let grid = learn_occupancy_grid(&ds.train, threads);
     let (band_pct, _) = tuning::tune_band_pct(&ds.train, &tuning::band_pct_grid(), threads);
-    let (theta, theta_curve) = tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), threads);
+    let (theta, theta_curve) =
+        tuning::tune_theta(&grid, &ds.train, 1.0, &tuning::theta_grid(), threads);
     let (gamma, _) = tuning::tune_gamma(&grid, &ds.train, theta, &tuning::gamma_grid(), threads);
     // nu tuned on a corridor for tractability; reused by all kernels
     let t = ds.series_len();
@@ -155,11 +156,13 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
         let ed_nu = GaussianEd::median_heuristic(&ds.train);
         err_svm.insert(
             "Ed".into(),
-            classify_svm(&GaussianEd::new(ed_nu), &ds.train, &ds.test, &params, threads, cfg.seed).error_rate,
+            classify_svm(&GaussianEd::new(ed_nu), &ds.train, &ds.test, &params, threads, cfg.seed)
+                .error_rate,
         );
         err_svm.insert(
             "Krdtw".into(),
-            classify_svm(&Krdtw::new(tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed).error_rate,
+            classify_svm(&Krdtw::new(tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed)
+                .error_rate,
         );
         let sc_band = sc.band_for(t).max(1);
         err_svm.insert(
@@ -177,8 +180,15 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
         let loc_m2 = tuned.grid.threshold(tuned.theta).to_loc_mask();
         err_svm.insert(
             "SP-Krdtw".into(),
-            classify_svm(&SpKrdtw::new(loc_m2, tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed)
-                .error_rate,
+            classify_svm(
+                &SpKrdtw::new(loc_m2, tuned.nu),
+                &ds.train,
+                &ds.test,
+                &params,
+                threads,
+                cfg.seed,
+            )
+            .error_rate,
         );
     }
 

@@ -43,27 +43,83 @@ fn opt_spec() -> Vec<OptSpec> {
         OptSpec { name: "threads", takes_value: true, help: "worker threads" },
         OptSpec { name: "datasets", takes_value: true, help: "comma-separated dataset names" },
         OptSpec { name: "out", takes_value: true, help: "output directory (default out/)" },
-        OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts/)" },
+        OptSpec {
+            name: "artifacts",
+            takes_value: true,
+            help: "artifacts dir (default artifacts/)",
+        },
         OptSpec { name: "measure", takes_value: true, help: "classify: Ed|DTW|DTW_sc|SP-DTW" },
         OptSpec { name: "band", takes_value: true, help: "Sakoe-Chiba band %% for DTW_sc" },
         OptSpec { name: "theta", takes_value: true, help: "SP-DTW threshold override" },
         OptSpec { name: "gamma", takes_value: true, help: "SP-DTW weight exponent (default 1)" },
-        OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7878)" },
+        OptSpec {
+            name: "addr",
+            takes_value: true,
+            help: "serve: bind address (default 127.0.0.1:7878)",
+        },
         OptSpec { name: "prefer-pjrt", takes_value: false, help: "route matching jobs to PJRT" },
         OptSpec { name: "config", takes_value: true, help: "JSON config file" },
         OptSpec { name: "k", takes_value: true, help: "search: neighbors per query (default 1)" },
-        OptSpec { name: "band-cells", takes_value: true, help: "search: DP band in cells (default 10% of T)" },
-        OptSpec { name: "spdtw-index", takes_value: false, help: "search: learn a LOC grid and search under SP-DTW" },
-        OptSpec { name: "no-kim", takes_value: false, help: "search: disable the O(1) LB_Kim stage" },
-        OptSpec { name: "no-keogh", takes_value: false, help: "search: disable the LB_Keogh stage" },
-        OptSpec { name: "no-rev", takes_value: false, help: "search: disable the reversed LB_Keogh stage" },
-        OptSpec { name: "no-abandon", takes_value: false, help: "search: disable DP early abandoning" },
-        OptSpec { name: "no-order", takes_value: false, help: "search: scan candidates in train order" },
-        OptSpec { name: "znorm", takes_value: false, help: "search: z-normalize index + queries (banded mode)" },
-        OptSpec { name: "verify", takes_value: false, help: "search: cross-check against brute-force k-NN" },
-        OptSpec { name: "index-file", takes_value: true, help: "search/index: persisted .spix index file to load (search) or write (index save)" },
-        OptSpec { name: "index-store", takes_value: true, help: "serve: directory for persisted indexes (save-on-register + warm start)" },
-        OptSpec { name: "no-warm-start", takes_value: false, help: "serve: do not reload persisted indexes at boot" },
+        OptSpec {
+            name: "band-cells",
+            takes_value: true,
+            help: "search: DP band in cells (default 10% of T)",
+        },
+        OptSpec {
+            name: "spdtw-index",
+            takes_value: false,
+            help: "search: learn a LOC grid and search under SP-DTW",
+        },
+        OptSpec {
+            name: "no-kim",
+            takes_value: false,
+            help: "search: disable the O(1) LB_Kim stage",
+        },
+        OptSpec {
+            name: "no-keogh",
+            takes_value: false,
+            help: "search: disable the LB_Keogh stage",
+        },
+        OptSpec {
+            name: "no-rev",
+            takes_value: false,
+            help: "search: disable the reversed LB_Keogh stage",
+        },
+        OptSpec {
+            name: "no-abandon",
+            takes_value: false,
+            help: "search: disable DP early abandoning",
+        },
+        OptSpec {
+            name: "no-order",
+            takes_value: false,
+            help: "search: scan candidates in train order",
+        },
+        OptSpec {
+            name: "znorm",
+            takes_value: false,
+            help: "search: z-normalize index + queries (banded mode)",
+        },
+        OptSpec {
+            name: "verify",
+            takes_value: false,
+            help: "search: cross-check against brute-force k-NN",
+        },
+        OptSpec {
+            name: "index-file",
+            takes_value: true,
+            help: "search/index: persisted .spix index file to load (search) or write (index save)",
+        },
+        OptSpec {
+            name: "index-store",
+            takes_value: true,
+            help: "serve: directory for persisted indexes (save-on-register + warm start)",
+        },
+        OptSpec {
+            name: "no-warm-start",
+            takes_value: false,
+            help: "serve: do not reload persisted indexes at boot",
+        },
     ]
 }
 
@@ -385,7 +441,11 @@ fn cmd_search(args: &Args) -> Result<()> {
 
 fn cmd_index(args: &Args) -> Result<()> {
     let usage_err =
-        || Error::config("usage: spdtw index save <dataset> [--index-file F] | load <F> | inspect <F>");
+        || {
+            Error::config(
+                "usage: spdtw index save <dataset> [--index-file F] | load <F> | inspect <F>",
+            )
+        };
     let action = args.positional.get(1).map(String::as_str).ok_or_else(usage_err)?;
     match action {
         "save" => {
@@ -429,7 +489,11 @@ fn cmd_index(args: &Args) -> Result<()> {
                 index.t,
                 index.len(),
                 index.radius,
-                if index.band == usize::MAX { "unbounded".to_string() } else { index.band.to_string() },
+                if index.band == usize::MAX {
+                    "unbounded".to_string()
+                } else {
+                    index.band.to_string()
+                },
                 index.loc.as_ref().map(|l| l.nnz()).unwrap_or(0),
                 index.znormalized,
                 index.lb_valid,
@@ -452,7 +516,11 @@ fn cmd_index(args: &Args) -> Result<()> {
                 info.t,
                 info.n,
                 info.radius,
-                if info.band == usize::MAX { "unbounded".to_string() } else { info.band.to_string() },
+                if info.band == usize::MAX {
+                    "unbounded".to_string()
+                } else {
+                    info.band.to_string()
+                },
                 info.znormalized,
                 info.lb_valid,
                 info.grid_nnz.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string())
@@ -529,7 +597,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let server = Server::start(Arc::clone(&coord), addr)?;
     println!("spdtw coordinator listening on {}", server.addr);
-    println!("protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, spkrdtw, register_index, search, metrics, shutdown");
+    println!(
+        "protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, \
+         spkrdtw, register_index, search, metrics, shutdown"
+    );
     // Serve until the process is killed (the TCP `shutdown` op stops the
     // accept loop; we poll for it).
     loop {

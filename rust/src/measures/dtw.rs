@@ -7,6 +7,7 @@
 //! the occupancy-grid learning phase (Fig. 3-b).
 
 use crate::data::TimeSeries;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, Measure, BIG};
 
 /// Plain DTW over the full T×T grid.
@@ -20,6 +21,10 @@ impl Measure for Dtw {
 
     fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         dtw_banded(&x.values, &y.values, usize::MAX)
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        dtw_banded_into(ws, &x.values, &y.values, usize::MAX)
     }
 }
 
@@ -38,6 +43,10 @@ impl Measure for BandedDtw {
     fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         dtw_banded(&x.values, &y.values, self.0)
     }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        dtw_banded_into(ws, &x.values, &y.values, self.0)
+    }
 }
 
 /// Banded DTW: cells with |i - j| > band are inadmissible.
@@ -48,15 +57,23 @@ impl Measure for BandedDtw {
 /// Hot path (§Perf): two rolling rows with the three DP neighbors
 /// carried in registers — one load of `prev[j]` per cell instead of
 /// three row reads (see `dtw_banded_ref`, the straightforward version
-/// kept for before/after measurement and cross-checking).
+/// kept for before/after measurement and cross-checking).  Routes
+/// through the calling thread's TLS workspace; use
+/// [`dtw_banded_into`] to thread an explicit one.
 pub fn dtw_banded(x: &[f64], y: &[f64], band: usize) -> DistResult {
+    workspace::with_tls(|ws| dtw_banded_into(ws, x, y, band))
+}
+
+/// [`dtw_banded`] against caller-provided scratch: zero allocations
+/// once `ws` has warmed up, bit-identical to the allocating path for
+/// any prior workspace contents.
+pub fn dtw_banded_into(ws: &mut DpWorkspace, x: &[f64], y: &[f64], band: usize) -> DistResult {
     let tx = x.len();
     let ty = y.len();
     assert!(tx > 0 && ty > 0, "empty series");
     let slope = ty as f64 / tx as f64;
     let unbounded = band == usize::MAX || band >= tx.max(ty);
-    let mut prev = vec![BIG; ty];
-    let mut cur = vec![BIG; ty];
+    let (mut prev, mut cur) = ws.rows(ty, BIG);
     let mut visited: u64 = 0;
 
     for (i, &xi) in x.iter().enumerate() {
@@ -165,10 +182,26 @@ pub type Path = Vec<(usize, usize)>;
 
 /// Full DTW with optimal-path backtracking. O(Tx·Ty) memory.
 pub fn dtw_with_path(x: &[f64], y: &[f64]) -> (DistResult, Path) {
+    let mut path = Path::new();
+    let d = workspace::with_tls(|ws| dtw_path_into(ws, x, y, &mut path));
+    (d, path)
+}
+
+/// [`dtw_with_path`] with the DP matrix taken from `ws` and the path
+/// written into `path` — the occupancy-grid learner reuses the O(T²)
+/// matrix across all N(N-1)/2 pairwise DPs this way.
+pub fn dtw_path_into(
+    ws: &mut DpWorkspace,
+    x: &[f64],
+    y: &[f64],
+    path: &mut Path,
+) -> DistResult {
     let tx = x.len();
     let ty = y.len();
     assert!(tx > 0 && ty > 0);
-    let mut d = vec![0.0f64; tx * ty];
+    let d = &mut ws.matrix;
+    d.clear();
+    d.resize(tx * ty, 0.0);
     for i in 0..tx {
         for j in 0..ty {
             let local = phi(x[i], y[j]);
@@ -191,7 +224,8 @@ pub fn dtw_with_path(x: &[f64], y: &[f64]) -> (DistResult, Path) {
         }
     }
     // Backtrack (diagonal preferred on ties — shortest path convention).
-    let mut path = Vec::with_capacity(tx + ty);
+    path.clear();
+    path.reserve(tx + ty);
     let (mut i, mut j) = (tx - 1, ty - 1);
     path.push((i, j));
     while i > 0 || j > 0 {
@@ -215,10 +249,7 @@ pub fn dtw_with_path(x: &[f64], y: &[f64]) -> (DistResult, Path) {
         path.push((i, j));
     }
     path.reverse();
-    (
-        DistResult::new(d[tx * ty - 1], (tx * ty) as u64),
-        path,
-    )
+    DistResult::new(d[tx * ty - 1], (tx * ty) as u64)
 }
 
 /// Validate the alignment-path invariants of §II-B.2 (boundary,

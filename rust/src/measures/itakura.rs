@@ -6,6 +6,7 @@
 //! spaces.
 
 use crate::data::TimeSeries;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, Measure, BIG};
 
 /// Column range [lo, hi] of the Itakura parallelogram on row `i` of a
@@ -37,17 +38,15 @@ pub fn itakura_cells(t: usize) -> u64 {
 #[derive(Clone, Debug, Default)]
 pub struct ItakuraDtw;
 
-impl Measure for ItakuraDtw {
-    fn name(&self) -> String {
-        "DTW_it".into()
-    }
-
-    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+impl ItakuraDtw {
+    /// The DP against caller-provided scratch (the two rolling rows) —
+    /// zero allocations once warm, bit-identical to the TLS-backed
+    /// [`Measure::dist`] path.
+    pub fn eval_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         let t = x.len();
         assert_eq!(t, y.len(), "Itakura DTW requires equal lengths");
         assert!(t > 0);
-        let mut prev = vec![BIG; t];
-        let mut cur = vec![BIG; t];
+        let (mut prev, mut cur) = ws.rows(t, BIG);
         let mut visited = 0u64;
         for i in 0..t {
             let (lo, hi) = itakura_range(i, t);
@@ -77,6 +76,20 @@ impl Measure for ItakuraDtw {
             std::mem::swap(&mut prev, &mut cur);
         }
         DistResult::new(prev[t - 1], visited)
+    }
+}
+
+impl Measure for ItakuraDtw {
+    fn name(&self) -> String {
+        "DTW_it".into()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        workspace::with_tls(|ws| self.eval_with(ws, x, y))
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.eval_with(ws, x, y)
     }
 }
 

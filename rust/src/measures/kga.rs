@@ -7,6 +7,7 @@
 
 use crate::data::TimeSeries;
 use crate::measures::krdtw::lse3;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, KernelMeasure, NEG};
 
 /// K_ga with local kernel `kappa(a,b) = exp(-nu (a-b)^2) / (1 + something)`
@@ -32,13 +33,21 @@ impl Kga {
         }
     }
 
+    /// Routes through the calling thread's TLS workspace; see
+    /// [`Self::log_kernel_with`].
     pub fn log_kernel(&self, x: &[f64], y: &[f64]) -> DistResult {
+        workspace::with_tls(|ws| self.log_kernel_with(ws, x, y))
+    }
+
+    /// [`Self::log_kernel`] against caller-provided scratch (the two
+    /// rolling log-domain rows) — zero allocations once warm,
+    /// bit-identical results.
+    pub fn log_kernel_with(&self, ws: &mut DpWorkspace, x: &[f64], y: &[f64]) -> DistResult {
         let tx = x.len();
         let ty = y.len();
         assert!(tx > 0 && ty > 0);
         let nu = self.nu;
-        let mut prev = vec![NEG; ty];
-        let mut cur = vec![NEG; ty];
+        let (mut prev, mut cur) = ws.rows(ty, NEG);
         let mut visited = 0u64;
         for i in 0..tx {
             let (lo, hi) = match self.band {
@@ -76,6 +85,10 @@ impl KernelMeasure for Kga {
 
     fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         self.log_kernel(&x.values, &y.values)
+    }
+
+    fn log_k_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.log_kernel_with(ws, &x.values, &y.values)
     }
 }
 

@@ -8,6 +8,7 @@
 //! Sakoe-Chiba band; the sparsified variant lives in `spkrdtw.rs`.
 
 use crate::data::TimeSeries;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, KernelMeasure, Measure, NEG, NEG_THRESH};
 
 /// Elementwise logsumexp over three values, NEG-safe.
@@ -54,17 +55,35 @@ impl Krdtw {
 
     /// Core DP: returns log(K1 + K2) at the corner + visited cell count.
     /// Equal lengths are assumed (UCR setting); the K2 term requires it.
+    /// Routes through the calling thread's TLS workspace; see
+    /// [`Self::log_kernel_with`].
     pub fn log_kernel(&self, x: &[f64], y: &[f64]) -> DistResult {
+        workspace::with_tls(|ws| self.log_kernel_with(ws, x, y))
+    }
+
+    /// [`Self::log_kernel`] against caller-provided scratch: the
+    /// `(lK1, lK2)` pair rows and the `ls` local-kernel vector come
+    /// from `ws` — zero allocations once warm, bit-identical results.
+    pub fn log_kernel_with(&self, ws: &mut DpWorkspace, x: &[f64], y: &[f64]) -> DistResult {
         let t = x.len();
         assert_eq!(t, y.len(), "K_rdtw requires equal lengths");
         assert!(t > 0);
         let nu = self.nu;
         let log3 = 3.0f64.ln();
+        let DpWorkspace {
+            local_ls,
+            pair_row_a,
+            pair_row_b,
+            ..
+        } = ws;
         // Same-index local log kernel ls[i] = -nu (x_i - y_i)^2.
-        let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
+        local_ls.clear();
+        local_ls.extend((0..t).map(|i| -nu * phi(x[i], y[i])));
+        let ls: &[f64] = local_ls;
 
-        let mut prev = vec![(NEG, NEG); t]; // (lK1, lK2) row i-1
-        let mut cur = vec![(NEG, NEG); t];
+        crate::measures::workspace::reset(pair_row_a, t, (NEG, NEG));
+        crate::measures::workspace::reset(pair_row_b, t, (NEG, NEG));
+        let (mut prev, mut cur) = (pair_row_a, pair_row_b); // (lK1, lK2) rows
         let mut visited = 0u64;
 
         for i in 0..t {
@@ -114,6 +133,10 @@ impl KernelMeasure for Krdtw {
     fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         self.log_kernel(&x.values, &y.values)
     }
+
+    fn log_k_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.log_kernel_with(ws, &x.values, &y.values)
+    }
 }
 
 /// Distance wrapper for 1-NN: `d(x,y) = -(log K(x,y) - (log K(x,x) +
@@ -142,6 +165,14 @@ impl Measure for KrdtwDist {
         let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
         DistResult::new(-norm, kxy.visited_cells + kxx.visited_cells + kyy.visited_cells)
     }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_kernel_with(ws, &x.values, &y.values);
+        let kxx = self.kernel.log_kernel_with(ws, &x.values, &x.values);
+        let kyy = self.kernel.log_kernel_with(ws, &y.values, &y.values);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(-norm, kxy.visited_cells + kxx.visited_cells + kyy.visited_cells)
+    }
 }
 
 #[cfg(test)]
@@ -150,11 +181,12 @@ mod tests {
     use crate::util::rng::Pcg64;
 
     /// Plain-domain Algorithm 2 (small T only) — the textbook oracle.
+    /// Flat row-major DP buffers (cell (i, j) at `i * t + j`).
     fn krdtw_plain(x: &[f64], y: &[f64], nu: f64, band: Option<usize>) -> f64 {
         let t = x.len();
         let kap = |a: f64, b: f64| (-nu * (a - b) * (a - b)).exp();
-        let mut k1 = vec![vec![0.0f64; t]; t];
-        let mut k2 = vec![vec![0.0f64; t]; t];
+        let mut k1 = vec![0.0f64; t * t];
+        let mut k2 = vec![0.0f64; t * t];
         for i in 0..t {
             for j in 0..t {
                 if let Some(b) = band {
@@ -163,23 +195,23 @@ mod tests {
                     }
                 }
                 if i == 0 && j == 0 {
-                    k1[0][0] = kap(x[0], y[0]);
-                    k2[0][0] = kap(x[0], y[0]);
+                    k1[0] = kap(x[0], y[0]);
+                    k2[0] = kap(x[0], y[0]);
                     continue;
                 }
-                let p11 = if i > 0 && j > 0 { k1[i - 1][j - 1] } else { 0.0 };
-                let p10 = if i > 0 { k1[i - 1][j] } else { 0.0 };
-                let p01 = if j > 0 { k1[i][j - 1] } else { 0.0 };
-                k1[i][j] = kap(x[i], y[j]) / 3.0 * (p11 + p10 + p01);
-                let q11 = if i > 0 && j > 0 { k2[i - 1][j - 1] } else { 0.0 };
-                let q10 = if i > 0 { k2[i - 1][j] } else { 0.0 };
-                let q01 = if j > 0 { k2[i][j - 1] } else { 0.0 };
+                let p11 = if i > 0 && j > 0 { k1[(i - 1) * t + j - 1] } else { 0.0 };
+                let p10 = if i > 0 { k1[(i - 1) * t + j] } else { 0.0 };
+                let p01 = if j > 0 { k1[i * t + j - 1] } else { 0.0 };
+                k1[i * t + j] = kap(x[i], y[j]) / 3.0 * (p11 + p10 + p01);
+                let q11 = if i > 0 && j > 0 { k2[(i - 1) * t + j - 1] } else { 0.0 };
+                let q10 = if i > 0 { k2[(i - 1) * t + j] } else { 0.0 };
+                let q01 = if j > 0 { k2[i * t + j - 1] } else { 0.0 };
                 let kii = kap(x[i], y[i]);
                 let kjj = kap(x[j], y[j]);
-                k2[i][j] = ((kii + kjj) * 0.5 * q11 + q10 * kii + q01 * kjj) / 3.0;
+                k2[i * t + j] = ((kii + kjj) * 0.5 * q11 + q10 * kii + q01 * kjj) / 3.0;
             }
         }
-        k1[t - 1][t - 1] + k2[t - 1][t - 1]
+        k1[t * t - 1] + k2[t * t - 1]
     }
 
     #[test]
@@ -258,40 +290,41 @@ mod tests {
     #[test]
     fn small_gram_is_positive_definite() {
         // Eq. 6's p.d. claim, checked via eigen-free Cholesky attempt.
+        // Flat row-major matrices (cell (i, j) at `i * n + j`).
         let mut rng = Pcg64::new(7);
         let n = 6;
         let series: Vec<Vec<f64>> = (0..n)
             .map(|_| (0..15).map(|_| rng.normal()).collect())
             .collect();
         let k = Krdtw::new(0.8);
-        let mut lk = vec![vec![0.0f64; n]; n];
+        let mut lk = vec![0.0f64; n * n];
         for i in 0..n {
             for j in 0..n {
-                lk[i][j] = k.log_kernel(&series[i], &series[j]).value;
+                lk[i * n + j] = k.log_kernel(&series[i], &series[j]).value;
             }
         }
-        let mut g = vec![vec![0.0f64; n]; n];
+        let mut g = vec![0.0f64; n * n];
         for i in 0..n {
             for j in 0..n {
-                g[i][j] = (lk[i][j] - 0.5 * (lk[i][i] + lk[j][j])).exp();
+                g[i * n + j] = (lk[i * n + j] - 0.5 * (lk[i * n + i] + lk[j * n + j])).exp();
             }
         }
         // Cholesky with small jitter must succeed for a p.s.d. matrix.
         let mut a = g.clone();
         for i in 0..n {
-            a[i][i] += 1e-10;
+            a[i * n + i] += 1e-10;
         }
         for c in 0..n {
             for r in c..n {
-                let mut sum = a[r][c];
+                let mut sum = a[r * n + c];
                 for k2 in 0..c {
-                    sum -= a[r][k2] * a[c][k2];
+                    sum -= a[r * n + k2] * a[c * n + k2];
                 }
                 if r == c {
                     assert!(sum > 0.0, "not p.d. at {c}: {sum}");
-                    a[r][c] = sum.sqrt();
+                    a[r * n + c] = sum.sqrt();
                 } else {
-                    a[r][c] = sum / a[c][c];
+                    a[r * n + c] = sum / a[c * n + c];
                 }
             }
         }

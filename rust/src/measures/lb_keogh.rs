@@ -17,13 +17,40 @@ use crate::measures::dtw::dtw_banded;
 /// builds at realistic radii.  `search::Index` builds all train
 /// envelopes through this path.
 pub fn envelope(y: &[f64], r: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut upper = Vec::new();
+    let mut lower = Vec::new();
+    envelope_into(
+        y,
+        r,
+        &mut upper,
+        &mut lower,
+        &mut VecDeque::new(),
+        &mut VecDeque::new(),
+    );
+    (upper, lower)
+}
+
+/// [`envelope`] into caller-provided buffers — the search engine reuses
+/// the envelope halves and both deques from its
+/// [`crate::measures::workspace::DpWorkspace`] so per-query envelope
+/// construction allocates nothing once warm.
+pub fn envelope_into(
+    y: &[f64],
+    r: usize,
+    upper: &mut Vec<f64>,
+    lower: &mut Vec<f64>,
+    maxq: &mut VecDeque<usize>,
+    minq: &mut VecDeque<usize>,
+) {
     let t = y.len();
-    let mut upper = vec![0.0; t];
-    let mut lower = vec![0.0; t];
+    upper.clear();
+    upper.resize(t, 0.0);
+    lower.clear();
+    lower.resize(t, 0.0);
     // Deque fronts hold the argmax/argmin of the current window
     // [i - r, min(i + r, t-1)]; backs stay monotone.
-    let mut maxq: VecDeque<usize> = VecDeque::new();
-    let mut minq: VecDeque<usize> = VecDeque::new();
+    maxq.clear();
+    minq.clear();
     let mut next = 0usize; // first index not yet pushed
     for i in 0..t {
         let lo = i.saturating_sub(r);
@@ -48,7 +75,6 @@ pub fn envelope(y: &[f64], r: usize) -> (Vec<f64>, Vec<f64>) {
         upper[i] = y[*maxq.front().unwrap()];
         lower[i] = y[*minq.front().unwrap()];
     }
-    (upper, lower)
 }
 
 /// LB_Keogh(x, y): squared-cost lower bound on banded DTW(x, y, r).

@@ -32,8 +32,10 @@ pub mod lb_keogh;
 pub mod sakoe_chiba;
 pub mod spdtw;
 pub mod spkrdtw;
+pub mod workspace;
 
 use crate::data::TimeSeries;
+use crate::measures::workspace::DpWorkspace;
 
 /// Result of one pairwise evaluation.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -62,6 +64,17 @@ pub trait Measure: Send + Sync {
 
     /// Dissimilarity between two series (smaller = closer).
     fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult;
+
+    /// Workspace-threaded variant of [`Self::dist`]: DP-backed measures
+    /// run allocation-free against `ws` and MUST return a bit-identical
+    /// result regardless of the workspace's prior contents (the reuse
+    /// contract of [`workspace::DpWorkspace`]).  The default falls back
+    /// to the allocating path — correct for the linear measures
+    /// (Euclidean, CORR, DACO) that have no DP scratch to reuse.
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let _ = ws;
+        self.dist(x, y)
+    }
 }
 
 /// A kernel (similarity) measure exposing log-kernel values, from which
@@ -71,6 +84,13 @@ pub trait KernelMeasure: Send + Sync {
 
     /// `log K(x, y)` plus visited-cell count.
     fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult;
+
+    /// Workspace-threaded variant of [`Self::log_k`], same bit-exact
+    /// reuse contract as [`Measure::dist_with`].
+    fn log_k_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let _ = ws;
+        self.log_k(x, y)
+    }
 }
 
 /// The "unreachable" sentinel shared with the Pallas kernels

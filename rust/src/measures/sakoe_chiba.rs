@@ -5,7 +5,8 @@
 //! parenthesized values, e.g. `0.242(6)` = 6% band).
 
 use crate::data::TimeSeries;
-use crate::measures::dtw::dtw_banded;
+use crate::measures::dtw::{dtw_banded, dtw_banded_into};
+use crate::measures::workspace::DpWorkspace;
 use crate::measures::{DistResult, Measure};
 
 /// Sakoe-Chiba DTW with band = `pct`% of the series length.
@@ -35,6 +36,11 @@ impl Measure for SakoeChibaDtw {
     fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         let t = x.len().max(y.len());
         dtw_banded(&x.values, &y.values, self.band_for(t))
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let t = x.len().max(y.len());
+        dtw_banded_into(ws, &x.values, &y.values, self.band_for(t))
     }
 }
 

@@ -7,6 +7,7 @@
 //! Algorithm 1's initialization.
 
 use crate::data::TimeSeries;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, Measure, BIG};
 use crate::sparse::LocMatrix;
 use std::sync::Arc;
@@ -28,14 +29,25 @@ impl SpDtw {
 
     /// Algorithm 1 over raw slices — flat loop over LOC entries using the
     /// precomputed predecessor table (§Perf: ~3x over the row-cursor scan
-    /// of [`Self::eval_scan`], which is kept as the reference).
+    /// of [`Self::eval_scan`], which is kept as the reference).  Routes
+    /// through the calling thread's TLS workspace; see
+    /// [`Self::eval_with`].
     pub fn eval(&self, x: &[f64], y: &[f64]) -> DistResult {
+        workspace::with_tls(|ws| self.eval_with(ws, x, y))
+    }
+
+    /// [`Self::eval`] against caller-provided scratch: the
+    /// entry-parallel DP array comes from `ws`, so repeated evaluations
+    /// allocate nothing and stay bit-identical to the allocating path.
+    pub fn eval_with(&self, ws: &mut DpWorkspace, x: &[f64], y: &[f64]) -> DistResult {
         let loc = &*self.loc;
         let t = loc.t;
         assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
         assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
         let n = loc.nnz();
-        let mut d = vec![BIG; n];
+        let d = &mut ws.entries;
+        d.clear();
+        d.resize(n, BIG);
         for k in 0..n {
             let r = loc.rows[k] as usize;
             let c = loc.cols[k] as usize;
@@ -132,6 +144,10 @@ impl Measure for SpDtw {
 
     fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         self.eval(&x.values, &y.values)
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.eval_with(ws, &x.values, &y.values)
     }
 }
 

@@ -9,6 +9,7 @@
 
 use crate::data::TimeSeries;
 use crate::measures::krdtw::{lse2, lse3};
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, DistResult, KernelMeasure, Measure, NEG};
 use crate::sparse::LocMatrix;
 use std::sync::Arc;
@@ -35,17 +36,34 @@ impl SpKrdtw {
 
     /// Algorithm 2 restricted to LOC cells; returns log(K1 + K2).
     /// Flat loop over LOC entries via the precomputed predecessor table
-    /// (§Perf; `log_kernel_scan` is the row-cursor reference).
+    /// (§Perf; `log_kernel_scan` is the row-cursor reference).  Routes
+    /// through the calling thread's TLS workspace; see
+    /// [`Self::log_kernel_with`].
     pub fn log_kernel(&self, x: &[f64], y: &[f64]) -> DistResult {
+        workspace::with_tls(|ws| self.log_kernel_with(ws, x, y))
+    }
+
+    /// [`Self::log_kernel`] against caller-provided scratch: the
+    /// entry-parallel `(lK1, lK2)` array and the `ls` vector come from
+    /// `ws` — zero allocations once warm, bit-identical results.
+    pub fn log_kernel_with(&self, ws: &mut DpWorkspace, x: &[f64], y: &[f64]) -> DistResult {
         let loc = &*self.loc;
         let t = loc.t;
         assert_eq!(x.len(), t);
         assert_eq!(y.len(), t);
         let nu = self.nu;
         let log3 = 3.0f64.ln();
-        let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
+        let DpWorkspace {
+            local_ls,
+            pair_entries,
+            ..
+        } = ws;
+        local_ls.clear();
+        local_ls.extend((0..t).map(|i| -nu * phi(x[i], y[i])));
+        let ls: &[f64] = local_ls;
         let n = loc.nnz();
-        let mut vals = vec![(NEG, NEG); n];
+        let vals = pair_entries;
+        crate::measures::workspace::reset(vals, n, (NEG, NEG));
         for k in 0..n {
             let r = loc.rows[k] as usize;
             let c = loc.cols[k] as usize;
@@ -149,6 +167,10 @@ impl KernelMeasure for SpKrdtw {
     fn log_k(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
         self.log_kernel(&x.values, &y.values)
     }
+
+    fn log_k_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        self.log_kernel_with(ws, &x.values, &y.values)
+    }
 }
 
 /// Distance wrapper for 1-NN (normalized-kernel ranking, cf.
@@ -172,6 +194,17 @@ impl Measure for SpKrdtwDist {
         let kxy = self.kernel.log_kernel(&x.values, &y.values);
         let kxx = self.kernel.log_kernel(&x.values, &x.values);
         let kyy = self.kernel.log_kernel(&y.values, &y.values);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(
+            -norm,
+            kxy.visited_cells + kxx.visited_cells + kyy.visited_cells,
+        )
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_kernel_with(ws, &x.values, &y.values);
+        let kxx = self.kernel.log_kernel_with(ws, &x.values, &x.values);
+        let kyy = self.kernel.log_kernel_with(ws, &y.values, &y.values);
         let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
         DistResult::new(
             -norm,

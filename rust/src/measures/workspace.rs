@@ -1,0 +1,207 @@
+//! Reusable DP scratch arena — the zero-allocation substrate under
+//! every distance kernel's `*_into` / `dist_with` variant.
+//!
+//! ## Contract
+//!
+//! A [`DpWorkspace`] owns every buffer a DP kernel needs (rolling f64
+//! rows, `(lK1, lK2)` pair rows, flat entry-parallel arrays, the full
+//! path-backtracking matrix, the search engine's candidate scratch).
+//! Kernels borrow what they need, reset it to the exact initial state
+//! the allocating path would have produced, and run the *same*
+//! floating-point operation sequence — so a workspace call is
+//! bit-identical (`f64::to_bits`) to its allocating counterpart no
+//! matter what ran in the workspace before.  That invariant is what
+//! makes per-worker workspace reuse in [`crate::pool`] safe: results
+//! cannot depend on which worker (with whatever dirty scratch) picked
+//! up an item.  Enforced by `tests/prop_workspace.rs`, which
+//! deliberately dirties the workspace between interleaved calls of
+//! different lengths, bands and grids.
+//!
+//! ## Steady state
+//!
+//! Buffers only ever grow (`clear` + `resize` keeps capacity), so after
+//! the first call at the largest (T, nnz) in play, a reused workspace
+//! performs **zero heap allocations per distance call** — the property
+//! `bench_measures` reports as the allocating-vs-workspace throughput
+//! split (EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+/// Scratch arena for the DP kernels.  All fields are public scratch:
+/// contents are unspecified between calls; any kernel may clobber any
+/// field.  Never read a field you did not just reset.
+#[derive(Debug, Default)]
+pub struct DpWorkspace {
+    /// Rolling DP row pair (banded DTW, K_ga, Itakura).
+    pub row_a: Vec<f64>,
+    pub row_b: Vec<f64>,
+    /// Rolling `(lK1, lK2)` row pair (K_rdtw).
+    pub pair_row_a: Vec<(f64, f64)>,
+    pub pair_row_b: Vec<(f64, f64)>,
+    /// Same-index local log-kernel values `ls[i]` (K_rdtw, SP-K_rdtw).
+    pub local_ls: Vec<f64>,
+    /// Flat entry-parallel DP values over LOC entries (SP-DTW).
+    pub entries: Vec<f64>,
+    /// Flat entry-parallel `(lK1, lK2)` values (SP-K_rdtw).
+    pub pair_entries: Vec<(f64, f64)>,
+    /// Full row-major DP matrix (path backtracking).
+    pub matrix: Vec<f64>,
+    /// Query copy (the engine's z-normalization buffer).
+    pub query: Vec<f64>,
+    /// Query envelope halves (reversed LB_Keogh).
+    pub env_upper: Vec<f64>,
+    pub env_lower: Vec<f64>,
+    /// Per-candidate lower bounds (LB_Kim stage / visit ordering).
+    pub lbs: Vec<f64>,
+    /// Candidate visit order / sort-by-index scratch.
+    pub order: Vec<usize>,
+    /// The engine's ascending `(dist, idx)` top-k candidate heap.
+    pub top: Vec<(f64, usize)>,
+    /// k-NN per-probe `(dist, label)` scratch.
+    pub dists: Vec<(f64, usize)>,
+    /// Monotonic deques for Lemire envelope construction.
+    pub maxq: VecDeque<usize>,
+    pub minq: VecDeque<usize>,
+}
+
+/// Reset `v` to exactly `n` copies of `fill`, reusing capacity.
+/// Produces the same contents as `vec![fill; n]` without allocating
+/// once capacity has grown to `n`.
+#[inline]
+pub fn reset<T: Copy>(v: &mut Vec<T>, n: usize, fill: T) {
+    v.clear();
+    v.resize(n, fill);
+}
+
+impl DpWorkspace {
+    pub fn new() -> DpWorkspace {
+        DpWorkspace::default()
+    }
+
+    /// The two rolling f64 rows, reset to `fill` at length `t`.
+    #[inline]
+    pub fn rows(&mut self, t: usize, fill: f64) -> (&mut Vec<f64>, &mut Vec<f64>) {
+        reset(&mut self.row_a, t, fill);
+        reset(&mut self.row_b, t, fill);
+        (&mut self.row_a, &mut self.row_b)
+    }
+
+    /// The two rolling pair rows, reset to `fill` at length `t`.
+    #[inline]
+    pub fn pair_rows(
+        &mut self,
+        t: usize,
+        fill: (f64, f64),
+    ) -> (&mut Vec<(f64, f64)>, &mut Vec<(f64, f64)>) {
+        reset(&mut self.pair_row_a, t, fill);
+        reset(&mut self.pair_row_b, t, fill);
+        (&mut self.pair_row_a, &mut self.pair_row_b)
+    }
+
+    /// Drop the O(T²) path-backtracking matrix allocation — the one
+    /// buffer only the occupancy-grid learning pass needs.  Long-lived
+    /// workers call this (via [`crate::pool::trim_workspaces`]) after a
+    /// learn pass so serving processes don't pin T²-sized heap forever;
+    /// every other buffer stays warm.
+    pub fn trim(&mut self) {
+        self.matrix = Vec::new();
+    }
+
+    /// Bytes currently resident across all scratch buffers (capacity,
+    /// not length) — a capacity-planning signal for long-lived workers.
+    pub fn memory_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let p = std::mem::size_of::<(f64, f64)>();
+        let u = std::mem::size_of::<usize>();
+        (self.row_a.capacity() + self.row_b.capacity()) * f
+            + (self.pair_row_a.capacity() + self.pair_row_b.capacity()) * p
+            + self.local_ls.capacity() * f
+            + self.entries.capacity() * f
+            + self.pair_entries.capacity() * p
+            + self.matrix.capacity() * f
+            + self.query.capacity() * f
+            + (self.env_upper.capacity() + self.env_lower.capacity()) * f
+            + self.lbs.capacity() * f
+            + self.order.capacity() * u
+            + (self.top.capacity() + self.dists.capacity()) * std::mem::size_of::<(f64, usize)>()
+            + (self.maxq.capacity() + self.minq.capacity()) * u
+    }
+}
+
+thread_local! {
+    static TLS_WS: RefCell<DpWorkspace> = RefCell::new(DpWorkspace::new());
+}
+
+/// Run `f` with this thread's long-lived workspace.  The allocating
+/// kernel wrappers (`dtw_banded`, `SpDtw::eval`, …) route through this,
+/// so even legacy call sites stop allocating per call after warm-up.
+/// Re-entrant calls (a kernel invoked while the workspace is already
+/// borrowed higher up the stack) fall back to a fresh workspace instead
+/// of panicking.
+pub fn with_tls<R>(f: impl FnOnce(&mut DpWorkspace) -> R) -> R {
+    TLS_WS.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => f(&mut ws),
+        Err(_) => f(&mut DpWorkspace::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_reset_length_and_fill() {
+        let mut ws = DpWorkspace::new();
+        {
+            let (a, b) = ws.rows(4, 7.0);
+            assert_eq!(a.as_slice(), &[7.0; 4]);
+            assert_eq!(b.as_slice(), &[7.0; 4]);
+            a[2] = -1.0;
+        }
+        // shrink after dirtying: old contents must not leak through
+        let (a, _b) = ws.rows(2, 0.0);
+        assert_eq!(a.as_slice(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn reset_matches_fresh_vec() {
+        let mut v = vec![1.0f64, 2.0, 3.0];
+        reset(&mut v, 5, 9.5);
+        assert_eq!(v, vec![9.5; 5]);
+        let cap = v.capacity();
+        reset(&mut v, 5, 0.5);
+        assert_eq!(v.capacity(), cap, "reset must not reallocate");
+    }
+
+    #[test]
+    fn with_tls_is_reentrant() {
+        let outer = with_tls(|ws| {
+            ws.rows(8, 1.0);
+            // nested borrow must not panic — it gets a fresh arena
+            with_tls(|inner| {
+                let (a, _) = inner.rows(3, 2.0);
+                a[0]
+            })
+        });
+        assert_eq!(outer, 2.0);
+    }
+
+    #[test]
+    fn trim_releases_only_the_matrix() {
+        let mut ws = DpWorkspace::new();
+        ws.matrix.resize(4096, 0.0);
+        ws.rows(64, 0.0);
+        ws.trim();
+        assert_eq!(ws.matrix.capacity(), 0);
+        assert!(ws.row_a.capacity() >= 64, "serving buffers must stay warm");
+    }
+
+    #[test]
+    fn memory_bytes_tracks_growth() {
+        let mut ws = DpWorkspace::new();
+        let before = ws.memory_bytes();
+        ws.rows(128, 0.0);
+        assert!(ws.memory_bytes() >= before + 2 * 128 * 8);
+    }
+}

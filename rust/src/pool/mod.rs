@@ -1,15 +1,34 @@
 //! Thread-pool substrate (rayon is not in the vendored crate set).
 //!
 //! Two tools:
-//! - [`par_map`] / [`par_map_chunked`]: scoped data-parallel map over an
-//!   index space with an atomic work counter — used for pairwise distance
-//!   matrices, occupancy-grid learning and 1-NN search.
-//! - [`WorkerPool`]: a persistent pool consuming boxed jobs from a shared
-//!   queue — the execution engine under `coordinator::worker`.
+//! - [`par_map`] / [`par_map_chunked`] / [`par_map_ws`]: data-parallel
+//!   map over an index space, executed on a **persistent** process-wide
+//!   compute pool.  Each pool worker owns a long-lived
+//!   [`DpWorkspace`], so the distance kernels under pairwise-matrix,
+//!   occupancy-grid and k-NN workloads run allocation-free
+//!   (EXPERIMENTS.md §Perf).  Results are written straight into
+//!   pre-sized disjoint output slots — no per-worker `(idx, value)`
+//!   partials, no merge pass, no per-call thread spawn.
+//! - [`WorkerPool`]: a persistent pool consuming boxed jobs from a
+//!   shared queue — the execution engine under `coordinator::worker`.
+//!
+//! ## Scheduling & exactness
+//!
+//! Work is claimed dynamically from an atomic counter (in `chunk`-sized
+//! runs), so the mapping of items to workers is nondeterministic — but
+//! every item is computed by exactly one worker and written to its own
+//! output slot, and the workspace-reuse contract
+//! ([`crate::measures::workspace`]) guarantees results are independent
+//! of which (dirty) workspace computed them.  `par_map(n, t, f)` is
+//! therefore bit-identical to `(0..n).map(f)` for any thread count.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
+
+use crate::measures::workspace::{self, DpWorkspace};
 
 /// Number of worker threads to use by default (min(cores, 16)).
 pub fn default_threads() -> usize {
@@ -19,9 +38,21 @@ pub fn default_threads() -> usize {
         .min(16)
 }
 
-/// Parallel map over `0..n` with dynamic (work-stealing-ish) scheduling:
-/// each worker grabs chunks of indices from a shared atomic counter.
-/// Returns results in index order.
+/// Poison-tolerant lock: pool invariants are maintained by drop guards,
+/// so a poisoned mutex still holds consistent state.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True on compute-pool worker threads: a nested `par_map` issued
+    /// from inside a pool job must not wait on the pool it is running
+    /// on, so it degrades to the serial path.
+    static ON_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Parallel map over `0..n` with dynamic scheduling on the persistent
+/// compute pool.  Returns results in index order.
 pub fn par_map<R: Send, F: Fn(usize) -> R + Sync>(n: usize, threads: usize, f: F) -> Vec<R> {
     par_map_chunked(n, threads, 1, f)
 }
@@ -34,52 +65,231 @@ pub fn par_map_chunked<R: Send, F: Fn(usize) -> R + Sync>(
     chunk: usize,
     f: F,
 ) -> Vec<R> {
+    par_map_ws(n, threads, chunk, move |i, _ws| f(i))
+}
+
+/// Workspace-threaded parallel map: `f` receives the executing worker's
+/// long-lived [`DpWorkspace`] alongside the item index, so DP kernels
+/// inside the body can run their `*_into` / `dist_with` variants with
+/// zero steady-state allocations.  Serial fallbacks (`threads <= 1`,
+/// nested calls from a pool worker) reuse the calling thread's TLS
+/// workspace instead.
+pub fn par_map_ws<R, F>(n: usize, threads: usize, chunk: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut DpWorkspace) -> R + Sync,
+{
     assert!(chunk > 0);
     let threads = threads.max(1).min(n.max(1));
     if n == 0 {
         return Vec::new();
     }
-    if threads == 1 {
-        return (0..n).map(f).collect();
+    if threads == 1 || ON_POOL_WORKER.with(|c| c.get()) {
+        return workspace::with_tls(|ws| (0..n).map(|i| f(i, ws)).collect());
     }
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let next = AtomicUsize::new(0);
-    let f = &f;
-    // SAFETY-free approach: split `out` into per-index cells via raw
-    // pointers is unnecessary — instead collect (idx, value) pairs per
-    // worker and merge. Memory overhead is one Vec per worker.
-    let mut partials: Vec<Vec<(usize, R)>> = Vec::new();
-    thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let next = &next;
-                s.spawn(move || {
-                    let mut local = Vec::new();
-                    loop {
-                        let start = next.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= n {
-                            break;
-                        }
-                        let end = (start + chunk).min(n);
-                        for i in start..end {
-                            local.push((i, f(i)));
-                        }
-                    }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            partials.push(h.join().expect("pool worker panicked"));
-        }
-    });
-    for part in partials {
-        for (i, v) in part {
-            out[i] = Some(v);
-        }
-    }
-    out.into_iter().map(|v| v.expect("index not produced")).collect()
+    compute_pool().run(n, threads, chunk, &f)
 }
+
+// ---------------------------------------------------------------------
+// Persistent compute pool
+// ---------------------------------------------------------------------
+
+/// Type-erased per-epoch job body: claims work until the epoch's index
+/// space is exhausted, using the worker's own workspace.
+type Runner<'a> = dyn Fn(&mut DpWorkspace) + Sync + 'a;
+
+/// Raw pointer to the current epoch's runner.  Sound to send across
+/// threads because [`ComputePool::execute`] keeps the pointee alive (and
+/// the epoch serialized) until every participant has finished with it.
+#[derive(Clone, Copy)]
+struct RunnerPtr(*const Runner<'static>);
+unsafe impl Send for RunnerPtr {}
+
+/// Output slot array for one epoch.  Workers write disjoint indices
+/// claimed from the epoch's atomic counter, so no two threads ever
+/// touch the same slot.
+struct SlotsPtr<R>(*mut Option<R>);
+unsafe impl<R: Send> Sync for SlotsPtr<R> {}
+
+struct PoolState {
+    task: Option<RunnerPtr>,
+    epoch: u64,
+    /// Workers participating in the current epoch (indices `0..participants`).
+    participants: usize,
+    /// Participants that have not yet finished the current epoch.
+    active: usize,
+}
+
+/// The process-wide persistent worker pool behind [`par_map_ws`]:
+/// `default_threads()` threads, each owning one long-lived
+/// [`DpWorkspace`], parked on a condvar between epochs.
+struct ComputePool {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Held for the duration of one epoch — serializes concurrent
+    /// `par_map` callers onto the shared worker set.
+    submit: Mutex<()>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Arc<ComputePool>> = OnceLock::new();
+
+fn compute_pool() -> &'static Arc<ComputePool> {
+    POOL.get_or_init(|| ComputePool::start(default_threads()))
+}
+
+/// Release the large one-off scratch (the O(T²) path-backtracking
+/// matrix) from the calling thread's TLS workspace and from every pool
+/// worker's long-lived workspace.  Call after a bulk learning pass
+/// (`sparse::learn`) so long-lived processes don't pin
+/// workers × T² × 8 bytes of heap they will never touch again; the
+/// steady-state serving buffers (rows, entry arrays, candidate scratch)
+/// are left warm.
+pub fn trim_workspaces() {
+    workspace::with_tls(|ws| ws.trim());
+    // Nested calls run jobs serially on the caller's TLS workspace, so
+    // there is nothing more to trim from inside a pool worker.
+    if ON_POOL_WORKER.with(|c| c.get()) {
+        return;
+    }
+    // Only touch the pool if something already spun it up.
+    if let Some(pool) = POOL.get() {
+        // An epoch's runner executes once on every participant, so this
+        // reaches each worker's workspace exactly once.
+        pool.execute(pool.workers, &|ws: &mut DpWorkspace| ws.trim());
+    }
+}
+
+impl ComputePool {
+    fn start(workers: usize) -> Arc<ComputePool> {
+        let pool = Arc::new(ComputePool {
+            state: Mutex::new(PoolState {
+                task: None,
+                epoch: 0,
+                participants: 0,
+                active: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+            workers: workers.max(1),
+        });
+        for idx in 0..pool.workers {
+            let p = Arc::clone(&pool);
+            thread::Builder::new()
+                .name(format!("spdtw-pool-{idx}"))
+                .spawn(move || p.worker_loop(idx))
+                .expect("spawn compute-pool worker");
+        }
+        pool
+    }
+
+    fn worker_loop(&self, idx: usize) {
+        ON_POOL_WORKER.with(|c| c.set(true));
+        // The long-lived workspace: reused across every epoch this
+        // worker ever runs, for the lifetime of the process.
+        let mut ws = DpWorkspace::new();
+        let mut seen = 0u64;
+        loop {
+            let task = {
+                let mut st = lock(&self.state);
+                loop {
+                    if st.epoch != seen {
+                        seen = st.epoch;
+                        break if idx < st.participants { st.task } else { None };
+                    }
+                    st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            if let Some(RunnerPtr(ptr)) = task {
+                // SAFETY: `execute` keeps the runner borrow alive until
+                // `active` reaches zero, which only happens after this
+                // call returns and we decrement below.
+                let runner = unsafe { &*ptr };
+                let _ = catch_unwind(AssertUnwindSafe(|| runner(&mut ws)));
+                let mut st = lock(&self.state);
+                st.active -= 1;
+                if st.active == 0 {
+                    self.done_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Run one epoch: publish `runner`, wake the first
+    /// `min(threads, workers)` workers, block until all of them finish.
+    fn execute(&self, threads: usize, runner: &Runner<'_>) {
+        let _epoch = lock(&self.submit);
+        let participants = threads.min(self.workers).max(1);
+        // SAFETY: the lifetime is erased only for storage in the shared
+        // slot; this function does not return (and the slot is cleared)
+        // until every participant has finished running the pointee.
+        let ptr: *const Runner<'static> =
+            unsafe { std::mem::transmute::<*const Runner<'_>, *const Runner<'static>>(runner) };
+        {
+            let mut st = lock(&self.state);
+            st.task = Some(RunnerPtr(ptr));
+            st.participants = participants;
+            st.active = participants;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.work_cv.notify_all();
+        }
+        let mut st = lock(&self.state);
+        while st.active > 0 {
+            st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.task = None;
+    }
+
+    fn run<R, F>(&self, n: usize, threads: usize, chunk: usize, f: &F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut DpWorkspace) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let slots = SlotsPtr(out.as_mut_ptr());
+        let runner = |ws: &mut DpWorkspace| loop {
+            // Fail fast: once any item panicked the epoch's result is a
+            // panic regardless, so don't drain the remaining index
+            // space just to throw it away.
+            if panicked.load(Ordering::Relaxed) {
+                return;
+            }
+            let start = next.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                match catch_unwind(AssertUnwindSafe(|| f(i, ws))) {
+                    // SAFETY: index `i` was claimed by exactly this
+                    // worker via `next`, so the write is race-free; the
+                    // caller reads `out` only after the epoch barrier.
+                    Ok(v) => unsafe { slots.0.add(i).write(Some(v)) },
+                    Err(_) => {
+                        panicked.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+            }
+        };
+        self.execute(threads, &runner);
+        if panicked.load(Ordering::SeqCst) {
+            panic!("pool worker panicked");
+        }
+        out.into_iter()
+            .map(|v| v.expect("index not produced"))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job-queue worker pool (coordinator execution engine)
+// ---------------------------------------------------------------------
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -87,12 +297,26 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 ///
 /// Bounded submission gives the coordinator backpressure: `submit` blocks
 /// when `capacity` jobs are in flight.  Dropping the pool joins all
-/// workers after draining the queue.
+/// workers after draining the queue.  Panicking jobs are contained: the
+/// inflight slot is released via a drop guard (so `wait_idle` cannot
+/// hang) and the worker thread survives to take the next job.
 pub struct WorkerPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
     inflight: Arc<(Mutex<usize>, Condvar)>,
     capacity: usize,
+}
+
+/// Releases one inflight slot on drop — even when the job unwinds.
+struct InflightSlot<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for InflightSlot<'_> {
+    fn drop(&mut self) {
+        let (count, cv) = self.0;
+        let mut n = lock(count);
+        *n -= 1;
+        cv.notify_all();
+    }
 }
 
 impl WorkerPool {
@@ -107,16 +331,16 @@ impl WorkerPool {
                 let inflight = Arc::clone(&inflight);
                 thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().expect("pool rx poisoned");
+                        let guard = lock(&rx);
                         guard.recv()
                     };
                     match job {
                         Ok(job) => {
-                            job();
-                            let (lock, cv) = &*inflight;
-                            let mut n = lock.lock().unwrap();
-                            *n -= 1;
-                            cv.notify_all();
+                            let _slot = InflightSlot(&inflight);
+                            // Contain the panic: the worker must stay
+                            // alive for subsequent jobs, and `_slot`
+                            // must still decrement on unwind.
+                            let _ = catch_unwind(AssertUnwindSafe(job));
                         }
                         Err(_) => break, // channel closed: shut down
                     }
@@ -134,11 +358,11 @@ impl WorkerPool {
     /// Submit a job, blocking while the queue is at capacity
     /// (backpressure).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        let (lock, cv) = &*self.inflight;
+        let (count, cv) = &*self.inflight;
         {
-            let mut n = lock.lock().unwrap();
+            let mut n = lock(count);
             while *n >= self.capacity {
-                n = cv.wait(n).unwrap();
+                n = cv.wait(n).unwrap_or_else(|e| e.into_inner());
             }
             *n += 1;
         }
@@ -151,15 +375,15 @@ impl WorkerPool {
 
     /// Number of jobs submitted but not yet finished.
     pub fn inflight(&self) -> usize {
-        *self.inflight.0.lock().unwrap()
+        *lock(&self.inflight.0)
     }
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
-        let (lock, cv) = &*self.inflight;
-        let mut n = lock.lock().unwrap();
+        let (count, cv) = &*self.inflight;
+        let mut n = lock(count);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -198,6 +422,68 @@ mod tests {
     }
 
     #[test]
+    fn par_map_ws_hands_out_reusable_workspaces() {
+        let out = par_map_ws(100, 4, 3, |i, ws| {
+            let (prev, _cur) = ws.rows(8, 0.5);
+            prev[0] + i as f64
+        });
+        let want: Vec<f64> = (0..100).map(|i| 0.5 + i as f64).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn nested_par_map_from_pool_job_does_not_deadlock() {
+        let out = par_map(8, 4, |i| {
+            // nested call runs serially on the worker's TLS workspace
+            par_map_ws(4, 4, 1, |j, ws| {
+                let (row, _) = ws.rows(2, 0.0);
+                row[0] as usize + i * 10 + j
+            })
+            .iter()
+            .sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| 4 * (i * 10) + 6).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn par_map_propagates_job_panics() {
+        par_map(64, 4, |i| {
+            if i == 33 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_epoch() {
+        let poisoned = catch_unwind(AssertUnwindSafe(|| {
+            par_map(16, 4, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(poisoned.is_err());
+        // the persistent pool must still serve subsequent epochs
+        assert_eq!(par_map(16, 4, |i| i * 2), (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trim_workspaces_leaves_pool_functional() {
+        let a = par_map_ws(64, 4, 1, |i, ws| {
+            ws.matrix.resize(1024, 0.0); // simulate a learn pass
+            i + 1
+        });
+        trim_workspaces();
+        let b = par_map(64, 4, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn worker_pool_runs_everything_once() {
         let pool = WorkerPool::new(4, 16);
         let counter = Arc::new(AtomicU64::new(0));
@@ -220,5 +506,32 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_jobs() {
+        // Regression: a panicking job used to unwind past the inflight
+        // decrement, killing the worker and hanging wait_idle forever.
+        let pool = WorkerPool::new(2, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                if i % 5 == 0 {
+                    panic!("job blew up");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // pre-fix: hung
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.inflight(), 0);
+        // workers are still alive and accept new jobs
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
     }
 }

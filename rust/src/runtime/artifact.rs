@@ -204,7 +204,10 @@ mod tests {
         }
         std::fs::write(
             dir.join("manifest.json"),
-            r#"{"version":1,"entries":[{"kernel":"dtw","name":"dtw_T8_B4","file":"dtw_T8_B4.hlo.txt","batch":4,"length":8,"dtype":"f32","args":[]}]}"#,
+            concat!(
+                r#"{"version":1,"entries":[{"kernel":"dtw","name":"dtw_T8_B4","#,
+                r#""file":"dtw_T8_B4.hlo.txt","batch":4,"length":8,"dtype":"f32","args":[]}]}"#
+            ),
         )
         .unwrap();
     }

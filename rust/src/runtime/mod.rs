@@ -279,7 +279,11 @@ impl Engine {
     }
 
     /// Lazily compile the artifact for (kernel, t).
-    fn executable(&mut self, kernel: KernelKind, t: usize) -> Result<(&xla::PjRtLoadedExecutable, usize)> {
+    fn executable(
+        &mut self,
+        kernel: KernelKind,
+        t: usize,
+    ) -> Result<(&xla::PjRtLoadedExecutable, usize)> {
         let entry = self
             .manifest
             .find(kernel, t)

@@ -17,6 +17,7 @@
 //! returns the exact same `f64` the exhaustive kernel would (property:
 //! `prop_early_abandon_exact_when_completed`).
 
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, BIG};
 use crate::sparse::loc::NO_PRED;
 use crate::sparse::LocMatrix;
@@ -33,15 +34,28 @@ pub struct EaResult {
 
 /// Early-abandoning banded DTW.  `ub = f64::INFINITY` disables
 /// abandoning, making this an exact drop-in for
-/// [`crate::measures::dtw::dtw_banded`].
+/// [`crate::measures::dtw::dtw_banded`].  Routes through the calling
+/// thread's TLS workspace; see [`dtw_banded_ea_into`].
 pub fn dtw_banded_ea(x: &[f64], y: &[f64], band: usize, ub: f64) -> EaResult {
+    workspace::with_tls(|ws| dtw_banded_ea_into(ws, x, y, band, ub))
+}
+
+/// [`dtw_banded_ea`] against caller-provided scratch — the engine's
+/// candidate loop reuses one workspace across every DP it runs, so the
+/// steady-state search path performs zero allocations per candidate.
+pub fn dtw_banded_ea_into(
+    ws: &mut DpWorkspace,
+    x: &[f64],
+    y: &[f64],
+    band: usize,
+    ub: f64,
+) -> EaResult {
     let tx = x.len();
     let ty = y.len();
     assert!(tx > 0 && ty > 0, "empty series");
     let slope = ty as f64 / tx as f64;
     let unbounded = band == usize::MAX || band >= tx.max(ty);
-    let mut prev = vec![BIG; ty];
-    let mut cur = vec![BIG; ty];
+    let (mut prev, mut cur) = ws.rows(ty, BIG);
     let mut visited: u64 = 0;
 
     for (i, &xi) in x.iter().enumerate() {
@@ -113,11 +127,25 @@ pub fn dtw_banded_ea(x: &[f64], y: &[f64], band: usize, ub: f64) -> EaResult {
 /// path exists at all; with a finite `ub` the evaluation abandons there
 /// (the true distance is `Max_Float` ≥ any finite bound).
 pub fn spdtw_ea(loc: &LocMatrix, x: &[f64], y: &[f64], ub: f64) -> EaResult {
+    workspace::with_tls(|ws| spdtw_ea_into(ws, loc, x, y, ub))
+}
+
+/// [`spdtw_ea`] against caller-provided scratch (the entry-parallel DP
+/// array) — zero allocations once warm, bit-identical results.
+pub fn spdtw_ea_into(
+    ws: &mut DpWorkspace,
+    loc: &LocMatrix,
+    x: &[f64],
+    y: &[f64],
+    ub: f64,
+) -> EaResult {
     let t = loc.t;
     assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
     assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
     let n = loc.nnz();
-    let mut d = vec![BIG; n];
+    let d = &mut ws.entries;
+    d.clear();
+    d.resize(n, BIG);
     let mut visited: u64 = 0;
     for r in 0..t {
         let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);

@@ -17,8 +17,9 @@ use std::sync::Arc;
 
 use crate::classify::nn::vote;
 use crate::classify::EvalResult;
-use crate::data::{LabeledSet, TimeSeries};
-use crate::measures::lb_keogh::envelope;
+use crate::data::{znormalize_in_place, LabeledSet, TimeSeries};
+use crate::measures::lb_keogh::envelope_into;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::pool;
 use crate::search::lower_bounds::{lb_keogh_sum, lb_kim};
 use crate::search::{Cascade, Index, PruneStats};
@@ -67,8 +68,22 @@ impl SearchEngine {
         self.knn_values(&query.values, k)
     }
 
-    /// k nearest neighbors of a raw value slice.
+    /// [`Self::knn`] against caller-provided scratch.
+    pub fn knn_with(&self, ws: &mut DpWorkspace, query: &TimeSeries, k: usize) -> QueryResult {
+        self.knn_values_with(ws, &query.values, k)
+    }
+
+    /// k nearest neighbors of a raw value slice (TLS workspace).
     pub fn knn_values(&self, query: &[f64], k: usize) -> QueryResult {
+        workspace::with_tls(|ws| self.knn_values_with(ws, query, k))
+    }
+
+    /// k nearest neighbors of a raw value slice, with every per-query
+    /// buffer (normalized query, query envelope, LB values, visit
+    /// order, top-k list, DP rows) drawn from `ws`: the whole candidate
+    /// loop runs with zero steady-state heap allocations, and returns
+    /// results bit-identical to the allocating path.
+    pub fn knn_values_with(&self, ws: &mut DpWorkspace, query: &[f64], k: usize) -> QueryResult {
         let idx = &*self.index;
         assert!(k >= 1, "k must be >= 1");
         assert_eq!(
@@ -78,10 +93,21 @@ impl SearchEngine {
             query.len(),
             idx.t
         );
-        let normalized: Vec<f64>;
+        // Per-query scratch is taken out of the workspace (and restored
+        // before returning) so the DP stages below can still borrow
+        // `ws` for their rolling rows / entry arrays.
+        let mut qbuf = std::mem::take(&mut ws.query);
+        let mut qu = std::mem::take(&mut ws.env_upper);
+        let mut ql = std::mem::take(&mut ws.env_lower);
+        let mut lbs = std::mem::take(&mut ws.lbs);
+        let mut order = std::mem::take(&mut ws.order);
+        let mut top = std::mem::take(&mut ws.top);
+
         let q: &[f64] = if idx.znormalized {
-            normalized = TimeSeries::new(0, query.to_vec()).znormalized().values;
-            &normalized
+            qbuf.clear();
+            qbuf.extend_from_slice(query);
+            znormalize_in_place(&mut qbuf);
+            &qbuf
         } else {
             query
         };
@@ -93,46 +119,40 @@ impl SearchEngine {
         };
 
         // Query-side envelope, built once per query (reversed LB_Keogh).
-        let qenv: Option<(Vec<f64>, Vec<f64>)> = if cas.keogh_rev {
+        let have_qenv = cas.keogh_rev;
+        if have_qenv {
             stats.lb_cells += idx.t as u64;
-            Some(envelope(q, idx.radius))
-        } else {
-            None
-        };
+            envelope_into(q, idx.radius, &mut qu, &mut ql, &mut ws.maxq, &mut ws.minq);
+        }
 
         // O(1)-per-candidate LB_Kim values, also reused as the visit
         // order (ascending bound tightens best-so-far early).
         let n = idx.len();
-        let kim_lbs: Option<Vec<f64>> = if cas.kim || cas.order_by_lb {
-            Some(
-                (0..n)
-                    .map(|j| {
-                        let (u, l) = &idx.envs[j];
-                        lb_kim(q, u, l)
-                    })
-                    .collect(),
-            )
-        } else {
-            None
-        };
-        let mut order: Vec<usize> = (0..n).collect();
+        let have_kim = cas.kim || cas.order_by_lb;
+        if have_kim {
+            lbs.clear();
+            lbs.extend((0..n).map(|j| {
+                let (u, l) = &idx.envs[j];
+                lb_kim(q, u, l)
+            }));
+        }
+        order.clear();
+        order.extend(0..n);
         if cas.order_by_lb {
-            if let Some(lbs) = &kim_lbs {
-                order.sort_by(|&a, &b| lbs[a].total_cmp(&lbs[b]).then(a.cmp(&b)));
-            }
+            // Unstable sort is exact here: `(lb, index)` is a total
+            // order with no duplicate keys, so the permutation is
+            // unique — and it does not allocate a merge buffer.
+            order.sort_unstable_by(|&a, &b| lbs[a].total_cmp(&lbs[b]).then(a.cmp(&b)));
         }
 
         // Current best k as (dist, train_idx), ascending lexicographic.
-        let mut top: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        top.clear();
+        top.reserve(k + 1);
         for &j in &order {
             stats.candidates += 1;
-            if cas.kim {
-                if let Some(lbs) = &kim_lbs {
-                    if cannot_beat(lbs[j], j, &top, k) {
-                        stats.kim_pruned += 1;
-                        continue;
-                    }
-                }
+            if cas.kim && cannot_beat(lbs[j], j, &top, k) {
+                stats.kim_pruned += 1;
+                continue;
             }
             if cas.keogh {
                 let (u, l) = &idx.envs[j];
@@ -143,8 +163,8 @@ impl SearchEngine {
                     continue;
                 }
             }
-            if let Some((qu, ql)) = &qenv {
-                let lb = lb_keogh_sum(&idx.series[j], qu, ql);
+            if have_qenv {
+                let lb = lb_keogh_sum(&idx.series[j], &qu, &ql);
                 stats.lb_cells += idx.t as u64;
                 if cannot_beat(lb, j, &top, k) {
                     stats.rev_pruned += 1;
@@ -152,7 +172,7 @@ impl SearchEngine {
                 }
             }
             let ub = abandon_threshold(j, &top, k, cas.early_abandon);
-            let ea = idx.full_eval(q, j, ub);
+            let ea = idx.full_eval_with(ws, q, j, ub);
             stats.dp_cells += ea.visited;
             match ea.value {
                 None => stats.abandoned += 1,
@@ -162,22 +182,29 @@ impl SearchEngine {
                 }
             }
         }
-        QueryResult {
-            neighbors: top
-                .into_iter()
-                .map(|(dist, j)| Neighbor {
-                    dist,
-                    label: idx.labels[j],
-                    train_idx: j,
-                })
-                .collect(),
-            stats,
-        }
+        let neighbors = top
+            .drain(..)
+            .map(|(dist, j)| Neighbor {
+                dist,
+                label: idx.labels[j],
+                train_idx: j,
+            })
+            .collect();
+        ws.query = qbuf;
+        ws.env_upper = qu;
+        ws.env_lower = ql;
+        ws.lbs = lbs;
+        ws.order = order;
+        ws.top = top;
+        QueryResult { neighbors, stats }
     }
 
-    /// Batch k-NN over a whole query set (parallel across queries).
+    /// Batch k-NN over a whole query set: parallel across queries on
+    /// the persistent pool, one long-lived workspace per worker.
     pub fn batch_knn(&self, queries: &LabeledSet, k: usize, threads: usize) -> Vec<QueryResult> {
-        pool::par_map(queries.len(), threads, |i| self.knn(&queries.series[i], k))
+        pool::par_map_ws(queries.len(), threads, 1, |i, ws| {
+            self.knn_with(ws, &queries.series[i], k)
+        })
     }
 
     /// k-NN classification of `test`, with aggregate prune counters.

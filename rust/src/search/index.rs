@@ -11,9 +11,10 @@
 use std::sync::Arc;
 
 use crate::data::LabeledSet;
-use crate::measures::lb_keogh::envelope;
+use crate::measures::lb_keogh::envelope_into;
+use crate::measures::workspace::{self, DpWorkspace};
 use crate::pool;
-use crate::search::early::{dtw_banded_ea, spdtw_ea, EaResult};
+use crate::search::early::{dtw_banded_ea_into, spdtw_ea_into, EaResult};
 use crate::sparse::LocMatrix;
 
 /// Prebuilt per-train-set state for cascade k-NN search.
@@ -97,7 +98,19 @@ impl Index {
             })
             .collect();
         let labels: Vec<usize> = train.series.iter().map(|s| s.label).collect();
-        let envs = pool::par_map(series.len(), threads, |i| envelope(&series[i], radius));
+        let envs = pool::par_map_ws(series.len(), threads, 1, |i, ws| {
+            let mut upper = Vec::new();
+            let mut lower = Vec::new();
+            envelope_into(
+                &series[i],
+                radius,
+                &mut upper,
+                &mut lower,
+                &mut ws.maxq,
+                &mut ws.minq,
+            );
+            (upper, lower)
+        });
         Index {
             t,
             radius,
@@ -132,9 +145,21 @@ impl Index {
     /// Early-abandoning full evaluation of `query` against candidate
     /// `j` under upper bound `ub` (INFINITY = exhaustive).
     pub fn full_eval(&self, query: &[f64], j: usize, ub: f64) -> EaResult {
+        workspace::with_tls(|ws| self.full_eval_with(ws, query, j, ub))
+    }
+
+    /// [`Self::full_eval`] against caller-provided scratch — the
+    /// engine's candidate loop threads one workspace through every DP.
+    pub fn full_eval_with(
+        &self,
+        ws: &mut DpWorkspace,
+        query: &[f64],
+        j: usize,
+        ub: f64,
+    ) -> EaResult {
         match &self.loc {
-            Some(loc) => spdtw_ea(loc, query, &self.series[j], ub),
-            None => dtw_banded_ea(query, &self.series[j], self.band, ub),
+            Some(loc) => spdtw_ea_into(ws, loc, query, &self.series[j], ub),
+            None => dtw_banded_ea_into(ws, query, &self.series[j], self.band, ub),
         }
     }
 

@@ -364,7 +364,8 @@ fn checked_payload_relaxed(bytes: &[u8]) -> Result<(&[u8], bool)> {
     let actual = (bytes.len() - HEADER_LEN) as u64;
     if payload_len != actual {
         return Err(Error::data(format!(
-            "index file truncated or padded: header says {payload_len} payload bytes, file has {actual}"
+            "index file truncated or padded: \
+             header says {payload_len} payload bytes, file has {actual}"
         )));
     }
     let checksum = u64::from_le_bytes(bytes[16..24].try_into().unwrap());

@@ -4,7 +4,7 @@
 //! embarrassingly parallel (`pool::par_map`).
 
 use crate::data::LabeledSet;
-use crate::measures::dtw::dtw_with_path;
+use crate::measures::dtw::{dtw_path_into, Path};
 use crate::pool;
 use crate::sparse::OccupancyGrid;
 
@@ -21,14 +21,27 @@ pub fn learn_occupancy_grid(train: &LabeledSet, threads: usize) -> OccupancyGrid
     let pairs: Vec<(usize, usize)> = (0..n)
         .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
         .collect();
-    let paths = pool::par_map(pairs.len(), threads, |k| {
+    // The O(T²) backtracking matrix comes from each worker's long-lived
+    // workspace, so the N(N-1)/2 pairwise DPs allocate only their
+    // returned paths.
+    let paths = pool::par_map_ws(pairs.len(), threads, 1, |k, ws| {
         let (i, j) = pairs[k];
-        let (_, path) = dtw_with_path(&train.series[i].values, &train.series[j].values);
+        let mut path = Path::new();
+        dtw_path_into(
+            ws,
+            &train.series[i].values,
+            &train.series[j].values,
+            &mut path,
+        );
         path
     });
     for path in &paths {
         grid.add_path(path);
     }
+    // The learn pass is the only consumer of the O(T²) workspace
+    // matrix; release it so long-lived workers keep only their
+    // steady-state serving buffers warm.
+    pool::trim_workspaces();
     grid
 }
 

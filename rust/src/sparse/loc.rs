@@ -253,7 +253,10 @@ mod tests {
 
     #[test]
     fn from_triples_sorted_csr() {
-        let m = LocMatrix::from_triples(3, vec![(2, 1, 0.5), (0, 0, 1.0), (2, 0, 0.25), (1, 1, 2.0)]);
+        let m = LocMatrix::from_triples(
+            3,
+            vec![(2, 1, 0.5), (0, 0, 1.0), (2, 0, 0.25), (1, 1, 2.0)],
+        );
         assert_eq!(m.nnz(), 4);
         assert_eq!(m.get(0, 0), Some(1.0));
         assert_eq!(m.get(2, 0), Some(0.25));

@@ -118,7 +118,12 @@ pub fn tune_band_pct(train: &LabeledSet, pcts: &[f64], threads: usize) -> (f64, 
 }
 
 /// ν selection for K_rdtw by LOO over the normalized-kernel distance.
-pub fn tune_nu(train: &LabeledSet, nus: &[f64], band: Option<usize>, threads: usize) -> (f64, Curve) {
+pub fn tune_nu(
+    train: &LabeledSet,
+    nus: &[f64],
+    band: Option<usize>,
+    threads: usize,
+) -> (f64, Curve) {
     let curve: Curve = nus
         .iter()
         .map(|&nu| {

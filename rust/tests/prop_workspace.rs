@@ -1,0 +1,313 @@
+//! Dirty-workspace determinism: every `*_into` / `*_with` kernel must
+//! be bit-identical (`f64::to_bits`) to its allocating counterpart no
+//! matter what ran in the workspace before — THE invariant that makes
+//! per-worker workspace reuse in `pool::par_map_ws` sound.
+//!
+//! Every test interleaves calls of different lengths, bands and grids
+//! through one shared workspace, and deliberately dirties it with a
+//! *different* kernel between the call under test and its oracle.
+
+use spdtw::data::splits::from_pairs;
+use spdtw::data::TimeSeries;
+use spdtw::measures::dtw::{
+    dtw_banded, dtw_banded_into, dtw_path_into, dtw_with_path, BandedDtw,
+};
+use spdtw::measures::itakura::ItakuraDtw;
+use spdtw::measures::kga::Kga;
+use spdtw::measures::krdtw::{Krdtw, KrdtwDist};
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::spkrdtw::SpKrdtw;
+use spdtw::measures::workspace::DpWorkspace;
+use spdtw::measures::{KernelMeasure, Measure};
+use spdtw::search::early::{dtw_banded_ea, dtw_banded_ea_into, spdtw_ea, spdtw_ea_into};
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::sparse::LocMatrix;
+use spdtw::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+    (0..t).map(|_| rng.normal()).collect()
+}
+
+/// Clobber every scratch buffer with a size and fill the next kernel
+/// must not be able to observe.
+fn dirty(ws: &mut DpWorkspace, rng: &mut Pcg64) {
+    let t = 1 + rng.below(97);
+    ws.rows(t, -123.456);
+    ws.pair_rows(t, (3.25, -7.5));
+    ws.entries.clear();
+    ws.entries.resize(t * 2, 1e9);
+    ws.pair_entries.clear();
+    ws.pair_entries.resize(t, (2.0, 4.0));
+    ws.local_ls.clear();
+    ws.local_ls.resize(t, 0.125);
+    ws.matrix.clear();
+    ws.matrix.resize(t * 3, -1.0);
+    ws.query.clear();
+    ws.query.resize(t, 42.0);
+    ws.lbs.clear();
+    ws.lbs.resize(t, -1.0);
+    ws.order.clear();
+    ws.order.extend(0..t);
+    ws.top.clear();
+    ws.top.push((-5.0, 9999));
+    ws.dists.clear();
+    ws.dists.push((7.0, 1));
+}
+
+#[test]
+fn dtw_banded_into_bit_identical_under_interleaving() {
+    let mut rng = Pcg64::new(0x5ee1);
+    let mut ws = DpWorkspace::new();
+    for case in 0..40 {
+        let tx = 2 + rng.below(48);
+        let ty = 2 + rng.below(48);
+        let x = rand_vec(&mut rng, tx);
+        let y = rand_vec(&mut rng, ty);
+        for band in [0usize, 1, 5, 17, usize::MAX] {
+            dirty(&mut ws, &mut rng);
+            let a = dtw_banded_into(&mut ws, &x, &y, band);
+            let b = dtw_banded(&x, &y, band);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "case {case} band {band}");
+            assert_eq!(a.visited_cells, b.visited_cells);
+        }
+    }
+}
+
+#[test]
+fn dtw_banded_ea_into_bit_identical_for_all_bounds() {
+    let mut rng = Pcg64::new(0xea7);
+    let mut ws = DpWorkspace::new();
+    for _ in 0..30 {
+        let t = 4 + rng.below(40);
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let exact = dtw_banded(&x, &y, usize::MAX);
+        for frac in [0.0, 0.3, 0.8, 1.5, f64::INFINITY] {
+            let ub = frac * exact.value;
+            dirty(&mut ws, &mut rng);
+            let a = dtw_banded_ea_into(&mut ws, &x, &y, usize::MAX, ub);
+            let b = dtw_banded_ea(&x, &y, usize::MAX, ub);
+            assert_eq!(a.visited, b.visited);
+            assert_eq!(a.value.map(f64::to_bits), b.value.map(f64::to_bits));
+        }
+    }
+}
+
+#[test]
+fn spdtw_eval_with_bit_identical_across_grids() {
+    let mut rng = Pcg64::new(0x5bd);
+    let mut ws = DpWorkspace::new();
+    for t in [3usize, 9, 21, 33] {
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+        let mut triples = vec![(0usize, 0usize, 1.0f64), (t - 1, t - 1, 1.0)];
+        for i in 0..t {
+            for j in 0..t {
+                if rng.f64() < 0.4 {
+                    triples.push((i, j, rng.range(0.5, 3.0)));
+                }
+            }
+        }
+        for loc in [LocMatrix::from_triples(t, triples), LocMatrix::corridor(t, 2)] {
+            let sp = SpDtw::new(loc.clone());
+            dirty(&mut ws, &mut rng);
+            let a = sp.eval_with(&mut ws, &x, &y);
+            let b = sp.eval(&x, &y);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "t={t}");
+            assert_eq!(a.visited_cells, b.visited_cells);
+
+            let ub = 0.7 * b.value;
+            dirty(&mut ws, &mut rng);
+            let ea_ws = spdtw_ea_into(&mut ws, &loc, &x, &y, ub);
+            let ea = spdtw_ea(&loc, &x, &y, ub);
+            assert_eq!(ea_ws.visited, ea.visited);
+            assert_eq!(ea_ws.value.map(f64::to_bits), ea.value.map(f64::to_bits));
+        }
+    }
+}
+
+#[test]
+fn kernel_log_with_bit_identical_under_interleaving() {
+    let mut rng = Pcg64::new(0x10c);
+    let mut ws = DpWorkspace::new();
+    for t in [2usize, 8, 19, 40] {
+        let x = rand_vec(&mut rng, t);
+        let y = rand_vec(&mut rng, t);
+
+        dirty(&mut ws, &mut rng);
+        let kr = Krdtw::new(0.9);
+        assert_eq!(
+            kr.log_kernel_with(&mut ws, &x, &y).value.to_bits(),
+            kr.log_kernel(&x, &y).value.to_bits(),
+            "Krdtw t={t}"
+        );
+
+        dirty(&mut ws, &mut rng);
+        let krb = Krdtw::with_band(1.3, 3);
+        assert_eq!(
+            krb.log_kernel_with(&mut ws, &x, &y).value.to_bits(),
+            krb.log_kernel(&x, &y).value.to_bits(),
+            "Krdtw_sc t={t}"
+        );
+
+        dirty(&mut ws, &mut rng);
+        let spk = SpKrdtw::new(LocMatrix::corridor(t, 2), 0.7);
+        assert_eq!(
+            spk.log_kernel_with(&mut ws, &x, &y).value.to_bits(),
+            spk.log_kernel(&x, &y).value.to_bits(),
+            "SP-Krdtw t={t}"
+        );
+
+        dirty(&mut ws, &mut rng);
+        let kga = Kga::new(1.1);
+        assert_eq!(
+            kga.log_kernel_with(&mut ws, &x, &y).value.to_bits(),
+            kga.log_kernel(&x, &y).value.to_bits(),
+            "Kga t={t}"
+        );
+    }
+}
+
+#[test]
+fn dist_with_matches_dist_for_every_dp_measure() {
+    let mut rng = Pcg64::new(0xd157);
+    let mut ws = DpWorkspace::new();
+    for t in [5usize, 16, 31] {
+        let x = TimeSeries::new(0, rand_vec(&mut rng, t));
+        let y = TimeSeries::new(1, rand_vec(&mut rng, t));
+        let measures: Vec<Box<dyn Measure>> = vec![
+            Box::new(spdtw::measures::dtw::Dtw),
+            Box::new(BandedDtw(3)),
+            Box::new(spdtw::measures::sakoe_chiba::SakoeChibaDtw::new(10.0)),
+            Box::new(ItakuraDtw),
+            Box::new(SpDtw::new(LocMatrix::corridor(t, 2))),
+            Box::new(KrdtwDist::new(Krdtw::new(0.8))),
+            Box::new(spdtw::measures::spkrdtw::SpKrdtwDist::new(SpKrdtw::new(
+                LocMatrix::corridor(t, 2),
+                0.8,
+            ))),
+        ];
+        for m in &measures {
+            dirty(&mut ws, &mut rng);
+            let a = m.dist_with(&mut ws, &x, &y);
+            let b = m.dist(&x, &y);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{} t={t}", m.name());
+            assert_eq!(a.visited_cells, b.visited_cells, "{} t={t}", m.name());
+        }
+    }
+}
+
+#[test]
+fn path_backtracking_into_matches_allocating() {
+    let mut rng = Pcg64::new(0xbac);
+    let mut ws = DpWorkspace::new();
+    for _ in 0..20 {
+        let tx = 2 + rng.below(24);
+        let ty = 2 + rng.below(24);
+        let x = rand_vec(&mut rng, tx);
+        let y = rand_vec(&mut rng, ty);
+        dirty(&mut ws, &mut rng);
+        let mut path = Vec::new();
+        let a = dtw_path_into(&mut ws, &x, &y, &mut path);
+        let (b, want_path) = dtw_with_path(&x, &y);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(path, want_path);
+    }
+}
+
+#[test]
+fn engine_knn_with_matches_fresh_workspace_bitwise() {
+    let mut rng = Pcg64::new(0xe26);
+    let train = from_pairs(
+        (0..12)
+            .map(|i| (i % 3, rand_vec(&mut rng, 20)))
+            .collect(),
+    );
+    let mut shared = DpWorkspace::new();
+    for (idx, cascade) in [
+        (Arc::new(Index::build(&train, 4, 1)), Cascade::default()),
+        (Arc::new(Index::build(&train, 4, 1)), Cascade::none()),
+        (
+            Arc::new(Index::build_spdtw(
+                &train,
+                Arc::new(LocMatrix::corridor(20, 4)),
+                1,
+            )),
+            Cascade::default(),
+        ),
+        (
+            Arc::new(Index::build_znormalized(&train, 4, 1)),
+            Cascade::default(),
+        ),
+    ] {
+        let eng = SearchEngine::new(idx, cascade);
+        for k in [1usize, 3] {
+            for _ in 0..6 {
+                let q = rand_vec(&mut rng, 20);
+                dirty(&mut shared, &mut rng);
+                let a = eng.knn_values_with(&mut shared, &q, k);
+                let b = eng.knn_values(&q, k);
+                assert_eq!(a.neighbors.len(), b.neighbors.len());
+                for (na, nb) in a.neighbors.iter().zip(&b.neighbors) {
+                    assert_eq!(na.dist.to_bits(), nb.dist.to_bits());
+                    assert_eq!(na.train_idx, nb.train_idx);
+                    assert_eq!(na.label, nb.label);
+                }
+                assert_eq!(a.stats.dp_cells, b.stats.dp_cells);
+                assert_eq!(a.stats.lb_cells, b.stats.lb_cells);
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_parallelism_is_bit_invariant_for_knn_and_gram() {
+    use spdtw::classify::gram::train_gram;
+    use spdtw::classify::nn::classify_knn;
+
+    let mut rng = Pcg64::new(0x90a);
+    let train = from_pairs(
+        (0..10)
+            .map(|i| (i % 2, rand_vec(&mut rng, 16)))
+            .collect(),
+    );
+    let test = from_pairs(
+        (0..8)
+            .map(|i| (i % 2, rand_vec(&mut rng, 16)))
+            .collect(),
+    );
+    // serial TLS-workspace path vs persistent-pool per-worker path
+    let a = classify_knn(&BandedDtw(4), &train, &test, 3, 1);
+    let b = classify_knn(&BandedDtw(4), &train, &test, 3, 4);
+    assert_eq!(a.error_rate, b.error_rate);
+    assert_eq!(a.visited_cells, b.visited_cells);
+
+    let g1 = train_gram(&Krdtw::new(1.0), &train, 1);
+    let g4 = train_gram(&Krdtw::new(1.0), &train, 4);
+    assert_eq!(g1.visited_cells, g4.visited_cells);
+    let bits1: Vec<u64> = g1.data.iter().map(|v| v.to_bits()).collect();
+    let bits4: Vec<u64> = g4.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(bits1, bits4);
+}
+
+#[test]
+fn kernel_measure_log_k_with_matches_log_k() {
+    let mut rng = Pcg64::new(0x3a1);
+    let mut ws = DpWorkspace::new();
+    let x = TimeSeries::new(0, rand_vec(&mut rng, 18));
+    let y = TimeSeries::new(1, rand_vec(&mut rng, 18));
+    let kernels: Vec<Box<dyn KernelMeasure>> = vec![
+        Box::new(Krdtw::new(0.6)),
+        Box::new(Krdtw::with_band(0.6, 4)),
+        Box::new(SpKrdtw::new(LocMatrix::corridor(18, 3), 0.6)),
+        Box::new(Kga::new(0.6)),
+    ];
+    for kern in &kernels {
+        dirty(&mut ws, &mut rng);
+        let a = kern.log_k_with(&mut ws, &x, &y);
+        let b = kern.log_k(&x, &y);
+        assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", KernelMeasure::name(&**kern));
+        assert_eq!(a.visited_cells, b.visited_cells);
+    }
+}
