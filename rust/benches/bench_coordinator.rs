@@ -1,7 +1,10 @@
 //! Coordinator throughput/latency benches (§Perf): native vs PJRT
-//! backends, batch-size sensitivity, flush-policy sweep, and the
+//! backends, batch-size sensitivity, flush-policy sweep, the
 //! coordinator-overhead measurement (submit/dispatch/respond cost vs
-//! direct evaluation).
+//! direct evaluation), and the multi-client scenario — aggregate k-NN
+//! QPS at 1/2/4/8 concurrent submitters over the concurrent-epoch
+//! compute pool, written to `BENCH_COORDINATOR.json` (EXPERIMENTS.md
+//! §PR 4).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -71,6 +74,15 @@ fn main() {
         let (rate, _) = throughput(&coord, key, &queries);
         println!("native backend, {workers} workers:     {rate:>10.0} pairs/s");
     }
+
+    // ---- multi-client scenario: aggregate QPS at 1/2/4/8 submitters -------
+    // The measured claim behind the concurrent-epoch scheduler: N
+    // clients issuing batch k-NN requests each run as their own pool
+    // epoch and overlap; under the old global submit lock aggregate QPS
+    // was flat in N.  Total query count is held constant across client
+    // counts so the rows compare directly.  (Runs before the PJRT
+    // section, which bails out of main when no artifacts exist.)
+    bench_multi_client(&ds);
 
     // ---- pjrt backend, flush-policy sweep ----------------------------------
     let artifacts = std::path::PathBuf::from("artifacts");
@@ -160,4 +172,83 @@ fn main() {
         snap.search_candidates
     );
     println!("{}", snap.report());
+}
+
+fn bench_multi_client(ds: &spdtw::data::Dataset) {
+    use spdtw::search::{Cascade, Index};
+    use spdtw::util::json::Json;
+
+    let band = (ds.series_len() as f64 * 0.1).round().max(1.0) as usize;
+    let total_batches = 16usize;
+    println!(
+        "\nmulti-client batch search ({} queries per batch, {} batches total):",
+        ds.test.len(),
+        total_batches
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let key = coord.register_index(Index::build(&ds.train, band, 8));
+        // warmup: grow every pool workspace to steady state
+        coord
+            .submit_batch_search(key, &ds.test.series, 1, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let per_client = total_batches / clients;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let coord = Arc::clone(&coord);
+                let queries = ds.test.series.clone();
+                std::thread::spawn(move || {
+                    let mut served = 0usize;
+                    for _ in 0..per_client {
+                        let outs = coord
+                            .submit_batch_search(key, &queries, 1, Cascade::default())
+                            .unwrap()
+                            .wait()
+                            .unwrap();
+                        served += outs.len();
+                    }
+                    served
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let dt = t0.elapsed().as_secs_f64();
+        let qps = total as f64 / dt;
+        let snap = coord.metrics();
+        println!(
+            "  {clients} client(s): {total:>6} queries in {:>8.1} ms -> {qps:>9.0} q/s  \
+             (peak {} concurrent requests)",
+            dt * 1e3,
+            snap.peak_concurrent_requests,
+        );
+        records.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("queries", Json::num(total as f64)),
+            ("secs", Json::num(dt)),
+            ("qps", Json::num(qps)),
+            (
+                "peak_concurrent_requests",
+                Json::num(snap.peak_concurrent_requests as f64),
+            ),
+            (
+                "pool_peak_epochs",
+                Json::num(snap.pool.peak_concurrent_epochs as f64),
+            ),
+        ]));
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::str("multi_client_batch_search")),
+        ("dataset", Json::str(ds.name.clone())),
+        ("series_len", Json::num(ds.series_len() as f64)),
+        ("train", Json::num(ds.train.len() as f64)),
+        ("queries_per_batch", Json::num(ds.test.len() as f64)),
+        ("records", Json::Arr(records)),
+    ]);
+    if std::fs::write("BENCH_COORDINATOR.json", out.to_pretty()).is_ok() {
+        println!("wrote BENCH_COORDINATOR.json");
+    }
 }

@@ -151,7 +151,41 @@ fn main() {
         // The measured claim behind the index store: a serving restart
         // that reloads the .spix file instead of rebuilding.
         bench_persistence(name, &ds, band);
+
+        // ---- concurrent submitters: aggregate engine QPS ------------------
+        // One shared engine, N threads each running batch_knn: every
+        // call is its own compute-pool epoch, so throughput should grow
+        // with submitters instead of flat-lining behind a submit lock.
+        bench_concurrent_submitters(&index, &ds);
         println!();
+    }
+}
+
+fn bench_concurrent_submitters(index: &Arc<Index>, ds: &spdtw::data::Dataset) {
+    let total_batches = 16usize;
+    for submitters in [1usize, 2, 4, 8] {
+        let per = total_batches / submitters;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..submitters)
+            .map(|_| {
+                let engine = SearchEngine::new(Arc::clone(index), Cascade::default());
+                let queries = ds.test.clone();
+                std::thread::spawn(move || {
+                    let mut served = 0usize;
+                    for _ in 0..per {
+                        served += engine.batch_knn(&queries, 1, 4).len();
+                    }
+                    served
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<22} {submitters} submitter(s): {total:>6} queries  {:>8.0} q/s aggregate",
+            "concurrent epochs",
+            total as f64 / dt.max(1e-9),
+        );
     }
 }
 

@@ -28,7 +28,11 @@ impl Gram {
 /// Symmetric train Gram: computes the N(N-1)/2 upper triangle + diagonal
 /// self-kernels, mirrors the rest.  Kernel DPs run through
 /// [`KernelMeasure::log_k_with`] against per-worker workspaces on the
-/// persistent pool — zero allocations per entry once warm.
+/// persistent pool — zero allocations per entry once warm.  The two
+/// fan-outs are scheduler epochs of the caller's own, so Grams computed
+/// by concurrent threads (`Coordinator::submit_train_gram` requests)
+/// make progress simultaneously instead of queueing behind one global
+/// submit lock.
 pub fn train_gram(kernel: &dyn KernelMeasure, set: &LabeledSet, threads: usize) -> Gram {
     let n = set.len();
     let selfk = pool::par_map_ws(n, threads, 1, |i, ws| {

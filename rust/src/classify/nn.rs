@@ -25,7 +25,9 @@ pub fn classify_1nn(
 /// worker: every distance goes through [`Measure::dist_with`], and the
 /// per-probe `(dist, label)` table plus the rank scratch are workspace
 /// buffers — the steady-state 1-NN path allocates nothing per distance
-/// call.
+/// call.  Each call is one scheduler epoch: classifications issued from
+/// distinct threads (e.g. concurrent coordinator clients) overlap on
+/// the shared worker set, with bit-identical results either way.
 pub fn classify_knn(
     measure: &dyn Measure,
     train: &LabeledSet,

@@ -271,6 +271,17 @@ pub struct CoordinatorConfig {
     /// `index_store`).  Corrupt or stale files are rejected and skipped,
     /// never served.
     pub warm_start: bool,
+    /// Byte budget for the on-disk index store.  When a save pushes the
+    /// store past this, least-recently-used `.spix` files (recency =
+    /// last save or named lookup, oldest first; manifest entries never
+    /// registered this session — e.g. stale files skipped at warm start
+    /// — count as oldest of all) are evicted — file and manifest entry
+    /// removed, counted in `index_evictions` — until the store fits.
+    /// The index just written is never evicted, even if it alone
+    /// exceeds the budget.  Eviction is store-only: an in-memory
+    /// registration keeps serving; the index simply won't warm-start.
+    /// `None` (default) disables the budget.
+    pub index_store_max_bytes: Option<u64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -283,6 +294,7 @@ impl Default for CoordinatorConfig {
             prefer_pjrt: false,
             index_store: None,
             warm_start: true,
+            index_store_max_bytes: None,
         }
     }
 }
@@ -292,6 +304,11 @@ impl CoordinatorConfig {
         if self.workers == 0 || self.batch_size == 0 || self.queue_cap == 0 {
             return Err(Error::config(
                 "workers, batch_size and queue_cap must be >= 1",
+            ));
+        }
+        if self.index_store_max_bytes == Some(0) {
+            return Err(Error::config(
+                "index_store_max_bytes must be >= 1 (use None to disable)",
             ));
         }
         Ok(())

@@ -113,8 +113,10 @@ impl Batcher {
             .min()
     }
 
-    /// Diagnostic/test API.
-    #[allow(dead_code)]
+    /// Jobs accumulated but not yet flushed, across all buckets — the
+    /// dispatcher publishes this as the `batcher_queue_depth` gauge
+    /// after every event, so the metrics snapshot exposes how much
+    /// work sits in partial batches at any instant.
     pub fn pending_jobs(&self) -> usize {
         self.pending.values().map(|p| p.jobs.len()).sum()
     }

@@ -38,6 +38,21 @@ pub struct Metrics {
     pub indexes_loaded: AtomicU64,
     /// Store files rejected at boot (corrupt/stale — skipped, not served).
     pub index_load_failures: AtomicU64,
+    /// Store files LRU-evicted to honor `index_store_max_bytes`.
+    pub index_evictions: AtomicU64,
+    // ---- concurrency (multi-client execution over the compute pool) ----
+    /// Batch search requests (each runs as its own pool epoch).
+    pub search_batches: AtomicU64,
+    /// Gram-matrix requests (each runs as its own set of pool epochs).
+    pub gram_requests: AtomicU64,
+    /// Jobs sitting in partial PJRT batches (gauge, published by the
+    /// dispatcher after every event).
+    pub batcher_queue_depth: AtomicU64,
+    /// Search/gram requests currently executing (gauge).
+    pub requests_inflight: AtomicU64,
+    /// High-water mark of simultaneously executing requests — `>= 2`
+    /// means two clients' requests actually overlapped.
+    pub peak_concurrent_requests: AtomicU64,
     lat: [AtomicU64; LAT_BUCKETS],
     lat_sum_us: AtomicU64,
 }
@@ -52,6 +67,17 @@ impl Metrics {
         let bucket = (64 - us.max(1).leading_zeros() as usize).min(LAT_BUCKETS - 1);
         self.lat[bucket].fetch_add(1, Ordering::Relaxed);
         self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Enter a search/gram request: bump the inflight gauge and the
+    /// concurrency high-water mark, returning a guard that decrements
+    /// on drop.  RAII so a panicking request body (contained by the
+    /// `WorkerPool`) cannot leak the gauge — the same drop-guard lesson
+    /// as `InflightSlot` in `pool`.
+    pub fn request_begin(&self) -> RequestGauge<'_> {
+        let now = self.requests_inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_concurrent_requests.fetch_max(now, Ordering::SeqCst);
+        RequestGauge(self)
     }
 
     /// Fold one query's cascade counters into the service totals.
@@ -89,6 +115,14 @@ impl Metrics {
             indexes_saved: self.indexes_saved.load(Ordering::Relaxed),
             indexes_loaded: self.indexes_loaded.load(Ordering::Relaxed),
             index_load_failures: self.index_load_failures.load(Ordering::Relaxed),
+            index_evictions: self.index_evictions.load(Ordering::Relaxed),
+            search_batches: self.search_batches.load(Ordering::Relaxed),
+            gram_requests: self.gram_requests.load(Ordering::Relaxed),
+            batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
+            requests_inflight: self.requests_inflight.load(Ordering::SeqCst),
+            peak_concurrent_requests: self.peak_concurrent_requests.load(Ordering::SeqCst),
+            pool: crate::pool::pool_stats(),
+            native_queue_depth: 0,
             mean_latency_us: if completed > 0 {
                 self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
             } else {
@@ -96,6 +130,17 @@ impl Metrics {
             },
             latency_hist: lat,
         }
+    }
+}
+
+/// Releases one slot of the request-inflight gauge on drop — even when
+/// the request body unwinds.
+#[must_use = "dropping the guard immediately ends the request's inflight window"]
+pub struct RequestGauge<'a>(&'a Metrics);
+
+impl Drop for RequestGauge<'_> {
+    fn drop(&mut self) {
+        self.0.requests_inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -121,6 +166,22 @@ pub struct Snapshot {
     pub indexes_saved: u64,
     pub indexes_loaded: u64,
     pub index_load_failures: u64,
+    pub index_evictions: u64,
+    pub search_batches: u64,
+    pub gram_requests: u64,
+    /// Jobs in partial PJRT batches at snapshot time (gauge).
+    pub batcher_queue_depth: u64,
+    /// Requests executing at snapshot time (gauge).
+    pub requests_inflight: u64,
+    /// Most requests ever executing simultaneously.
+    pub peak_concurrent_requests: u64,
+    /// Compute-pool scheduler state at snapshot time (live/peak epoch
+    /// counts prove multi-client overlap — see `pool::PoolStats`).
+    pub pool: crate::pool::PoolStats,
+    /// Native `WorkerPool` jobs submitted but unfinished at snapshot
+    /// time (filled by `Coordinator::metrics`; 0 from a bare
+    /// `Metrics::snapshot`).
+    pub native_queue_depth: u64,
     pub mean_latency_us: f64,
     pub latency_hist: Vec<u64>,
 }
@@ -165,7 +226,9 @@ impl Snapshot {
              cells: {}\n\
              search: {} queries, {} candidates -> {} kim / {} keogh / {} rev skips, \
              {} abandons, {} full DPs ({:.1}% pruned)\n\
-             index store: {} saved, {} warm-loaded, {} rejected\n\
+             index store: {} saved, {} warm-loaded, {} rejected, {} evicted\n\
+             concurrency: {} batch / {} gram requests, {} inflight (peak {}), \
+             pool {} epochs live (peak {}), native queue {}\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
             self.submitted,
             self.completed,
@@ -187,6 +250,14 @@ impl Snapshot {
             self.indexes_saved,
             self.indexes_loaded,
             self.index_load_failures,
+            self.index_evictions,
+            self.search_batches,
+            self.gram_requests,
+            self.requests_inflight,
+            self.peak_concurrent_requests,
+            self.pool.active_epochs,
+            self.pool.peak_concurrent_epochs,
+            self.native_queue_depth,
             self.mean_latency_us,
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
@@ -230,6 +301,35 @@ mod tests {
         assert!(r.contains("jobs:") && r.contains("batches:") && r.contains("latency:"));
         assert!(r.contains("search:"));
         assert!(r.contains("index store:"));
+        assert!(r.contains("concurrency:"));
+    }
+
+    #[test]
+    fn request_gauges_track_inflight_and_peak() {
+        let m = Metrics::new();
+        let a = m.request_begin();
+        let b = m.request_begin();
+        let c = m.request_begin();
+        drop(c);
+        let s = m.snapshot();
+        assert_eq!(s.requests_inflight, 2);
+        assert_eq!(s.peak_concurrent_requests, 3);
+        drop(a);
+        drop(b);
+        assert_eq!(m.snapshot().requests_inflight, 0);
+        assert_eq!(m.snapshot().peak_concurrent_requests, 3);
+    }
+
+    #[test]
+    fn request_gauge_released_on_unwind() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let m = Metrics::new();
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.request_begin();
+            panic!("request body blew up");
+        }));
+        assert_eq!(m.snapshot().requests_inflight, 0, "gauge leaked on unwind");
+        assert_eq!(m.snapshot().peak_concurrent_requests, 1);
     }
 
     #[test]

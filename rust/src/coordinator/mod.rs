@@ -16,6 +16,13 @@
 //! * k-NN `Search` requests resolve against a registered
 //!   [`crate::search::Index`] on the native pool, with per-stage prune
 //!   counters exported through [`metrics`].
+//! * Batch requests (`submit_batch_search`, `submit_train_gram`) each
+//!   fan out as their own compute-pool **epoch**: the concurrent-epoch
+//!   scheduler in [`crate::pool`] lets N clients' requests overlap on
+//!   the shared worker set instead of serializing behind a global
+//!   submit lock.  Queue depth and request concurrency are exported in
+//!   the metrics snapshot (`requests_inflight`,
+//!   `peak_concurrent_requests`, `pool`, `native_queue_depth`).
 //! * PJRT jobs accumulate in per-[`BucketKey`] buffers; flushed at the
 //!   artifact batch size or after `flush_us` of inactivity (padded).
 //! * The bounded runner queue (`queue_cap`) provides backpressure.
@@ -34,20 +41,27 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::classify::gram::train_gram;
 use crate::config::CoordinatorConfig;
-use crate::data::TimeSeries;
+use crate::data::{LabeledSet, TimeSeries};
 use crate::error::{Error, Result};
 use crate::measures::spdtw::SpDtw;
 use crate::measures::spkrdtw::SpKrdtw;
 use crate::measures::{KernelMeasure, Measure};
 use crate::pool::WorkerPool;
-use crate::runtime::{record_index_artifact, DtwBatch, KernelKind, KrdtwBatch, Manifest, PjrtHandle};
+use crate::runtime::{
+    record_index_artifact, remove_index_artifact, DtwBatch, KernelKind, KrdtwBatch, Manifest,
+    PjrtHandle,
+};
 use crate::search::{persist, Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
 
 use batcher::{Batcher, ReadyBatch};
 use metrics::{Metrics, Snapshot};
-use request::{Backend, BucketKey, JobTicket, PairResult, PjrtJob, SearchOutcome, SearchTicket};
+use request::{
+    Backend, BatchSearchTicket, BucketKey, GramTicket, JobTicket, PairResult, PjrtJob,
+    SearchOutcome, SearchTicket,
+};
 use router::Router;
 use state::{GridKey, GridRegistry, IndexKey, IndexRegistry};
 
@@ -134,6 +148,11 @@ impl Coordinator {
                             flush,
                         );
                         loop {
+                            // publish the partial-batch queue depth so
+                            // snapshots see dispatcher backlog live
+                            metrics2
+                                .batcher_queue_depth
+                                .store(batcher.pending_jobs() as u64, Ordering::Relaxed);
                             let now = Instant::now();
                             let timeout = batcher.next_deadline(now).unwrap_or(flush);
                             match dispatch_rx.recv_timeout(timeout) {
@@ -265,7 +284,10 @@ impl Coordinator {
     /// configured index store (a `.spix` file plus a manifest entry) so
     /// the next warm-started coordinator serves it without rebuilding.
     /// Without a configured store this degrades to a named in-memory
-    /// registration.  A previous holder of the name is replaced.
+    /// registration.  A previous holder of the name is replaced.  When
+    /// `index_store_max_bytes` is set, least-recently-used store files
+    /// are evicted after the save until the store fits the budget (the
+    /// index just written is never evicted).
     pub fn register_index_persistent(&self, name: &str, index: Index) -> Result<IndexKey> {
         validate_index_name(name)?;
         let t = index.t;
@@ -282,20 +304,27 @@ impl Coordinator {
             record_index_artifact(dir, name, &file, t, n)?;
             self.metrics.indexes_saved.fetch_add(1, Ordering::Relaxed);
         }
-        Ok(reg.insert_named(name, index, false))
+        let key = reg.insert_named(name, index, false);
+        if let (Some(dir), Some(budget)) = (&self.cfg.index_store, self.cfg.index_store_max_bytes)
+        {
+            enforce_store_budget(dir, budget, name, &mut reg, &self.metrics);
+        }
+        Ok(key)
     }
 
     /// Resolve a named index to `(key, loaded_from_disk)` — the cheap
     /// pre-check that lets `register_index` callers skip a rebuild when
     /// a warm-started (or earlier in-session) index already holds the
-    /// name.
+    /// name.  Also refreshes the name's LRU recency, protecting
+    /// actively served indexes from store eviction.
     pub fn lookup_index_named(&self, name: &str) -> Option<(IndexKey, bool)> {
-        let reg = self.indexes.lock().unwrap();
+        let mut reg = self.indexes.lock().unwrap();
         let key = reg.key_by_name(name)?;
         let loaded = reg
             .get_entry(key)
             .map(|e| e.loaded_from_disk)
             .unwrap_or(false);
+        reg.touch(name);
         Some((key, loaded))
     }
 
@@ -334,6 +363,7 @@ impl Coordinator {
         let values = query.values.clone();
         let start = Instant::now();
         self.native_pool.submit(move || {
+            let _req = metrics.request_begin(); // gauge released on drop, even on unwind
             let engine = SearchEngine::new(index, cascade);
             let r = engine.knn_values(&values, k);
             metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
@@ -346,6 +376,100 @@ impl Coordinator {
             }));
         });
         Ok(SearchTicket { rx })
+    }
+
+    /// Submit a whole batch of k-NN queries as ONE request with its own
+    /// completion handle.  The batch fans out as its own compute-pool
+    /// epoch, so N clients' batches overlap on the shared worker set
+    /// instead of serializing — the multi-client throughput path
+    /// (`bench_coordinator` measures aggregate QPS at 1/2/4/8
+    /// submitters).  Queries are answered in submission order.
+    pub fn submit_batch_search(
+        &self,
+        key: IndexKey,
+        queries: &[TimeSeries],
+        k: usize,
+        cascade: Cascade,
+    ) -> Result<BatchSearchTicket> {
+        let index = self.index(key)?;
+        if queries.is_empty() {
+            return Err(Error::coordinator("batch search needs >= 1 query"));
+        }
+        if k == 0 {
+            return Err(Error::coordinator("search k must be >= 1"));
+        }
+        for q in queries {
+            if q.len() != index.t {
+                return Err(Error::coordinator(format!(
+                    "query length {} != indexed length {}",
+                    q.len(),
+                    index.t
+                )));
+            }
+        }
+        self.metrics
+            .submitted
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        self.metrics.search_batches.fetch_add(1, Ordering::Relaxed);
+        let vals: Vec<Vec<f64>> = queries.iter().map(|q| q.values.clone()).collect();
+        let threads = self.cfg.workers;
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::clone(&self.metrics);
+        let start = Instant::now();
+        self.native_pool.submit(move || {
+            let _req = metrics.request_begin(); // gauge released on drop, even on unwind
+            let engine = SearchEngine::new(index, cascade);
+            let results = engine.batch_knn_values(&vals, k, threads);
+            let outcomes: Vec<SearchOutcome> = results
+                .into_iter()
+                .map(|r| {
+                    metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_search(&r.stats);
+                    metrics.record_latency(start.elapsed());
+                    SearchOutcome {
+                        neighbors: r.neighbors,
+                        stats: r.stats,
+                    }
+                })
+                .collect();
+            let _ = tx.send(Ok(outcomes));
+        });
+        Ok(BatchSearchTicket { rx })
+    }
+
+    /// Submit a normalized train-Gram computation (`classify::gram`)
+    /// over a kernel measure.  The N self-kernels and N(N-1)/2 pair
+    /// kernels fan out as this request's own pool epochs, overlapping
+    /// with concurrent search/gram requests — previously every Gram
+    /// would serialize the whole compute pool behind one submit lock.
+    pub fn submit_train_gram(
+        &self,
+        kernel: Arc<dyn KernelMeasure>,
+        set: &LabeledSet,
+    ) -> Result<GramTicket> {
+        if set.is_empty() {
+            return Err(Error::coordinator("gram needs a non-empty train set"));
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.gram_requests.fetch_add(1, Ordering::Relaxed);
+        let set = set.clone();
+        let threads = self.cfg.workers;
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::clone(&self.metrics);
+        let start = Instant::now();
+        self.native_pool.submit(move || {
+            let _req = metrics.request_begin(); // gauge released on drop, even on unwind
+            let g = train_gram(&*kernel, &set, threads);
+            metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .visited_cells
+                .fetch_add(g.visited_cells, Ordering::Relaxed);
+            metrics.record_latency(start.elapsed());
+            let _ = tx.send(Ok(g));
+        });
+        Ok(GramTicket { rx })
     }
 
     /// Submit an SP-DTW pair (routed native or PJRT).
@@ -512,7 +636,9 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> Snapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.native_queue_depth = self.native_pool.inflight() as u64;
+        snap
     }
 
     /// Wait for every native job to finish (tests / clean shutdown).
@@ -550,6 +676,78 @@ fn validate_index_name(name: &str) -> Result<()> {
         Err(Error::coordinator(format!(
             "invalid index name '{name}' (use 1-64 chars of [A-Za-z0-9._-], not starting with '.')"
         )))
+    }
+}
+
+/// Enforce the index-store byte budget: total usage comes from the
+/// manifest's `indexes` entries (the on-disk source of truth — a stale
+/// file skipped at warm start still counts and is still evictable),
+/// swept least-recently-used first.  Entries the in-memory registry has
+/// no recency for (never registered this session) are treated as oldest.
+/// `keep` (the index just written) is never evicted, even when it alone
+/// exceeds the budget.  Evictions touch only the disk store: an
+/// in-memory registration keeps serving, it just won't survive a
+/// restart.  Called with the registry lock held (serializes the
+/// manifest read-modify-write).
+fn enforce_store_budget(
+    dir: &std::path::Path,
+    budget: u64,
+    keep: &str,
+    reg: &mut IndexRegistry,
+    metrics: &Metrics,
+) {
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("warning: store budget not enforced (manifest unreadable: {e})");
+            return;
+        }
+    };
+    let size_of = |path: &std::path::Path| {
+        std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+    };
+    // (name, path, bytes), least-recently-used first; recency-less
+    // entries sort before everything the registry has seen
+    let recency = reg.lru_names().to_vec();
+    let rank = |name: &str| {
+        recency
+            .iter()
+            .position(|n| n == name)
+            .map_or(-1, |i| i as i64)
+    };
+    let mut entries: Vec<(String, std::path::PathBuf, u64)> = manifest
+        .indexes
+        .iter()
+        .map(|e| (e.name.clone(), e.path.clone(), size_of(&e.path)))
+        .collect();
+    entries.sort_by_key(|(name, _, _)| rank(name));
+    let mut total: u64 = entries.iter().map(|(_, _, sz)| sz).sum();
+    for (name, path, sz) in entries {
+        if total <= budget {
+            break;
+        }
+        if name == keep || sz == 0 {
+            continue;
+        }
+        match std::fs::remove_file(&path) {
+            Ok(()) => {
+                if let Err(e) = remove_index_artifact(dir, &name) {
+                    eprintln!("warning: evicted '{name}' but manifest rewrite failed: {e}");
+                }
+                reg.forget_recency(&name);
+                metrics.index_evictions.fetch_add(1, Ordering::Relaxed);
+                total = total.saturating_sub(sz);
+            }
+            Err(e) => {
+                // Surface the stuck state: the budget stays violated
+                // until the operator intervenes, so say so every sweep.
+                eprintln!(
+                    "warning: store budget exceeded but cannot evict '{name}' \
+                     ({}): {e}",
+                    path.display()
+                );
+            }
+        }
     }
 }
 
@@ -755,6 +953,166 @@ mod tests {
         cfg.warm_start = false;
         let c3 = Coordinator::start(cfg, None).unwrap();
         assert_eq!(c3.lookup_index_named("cbf"), None);
+        std::fs::remove_dir_all(&store).ok();
+    }
+
+    #[test]
+    fn batch_search_answers_every_query_like_singles() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 7, 12, 6).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 3, 2));
+        let outs = c
+            .submit_batch_search(key, &ds.test.series, 2, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(outs.len(), ds.test.len());
+        for (probe, out) in ds.test.series.iter().zip(&outs) {
+            let single = c
+                .submit_search(key, probe, 2, Cascade::default())
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(out.neighbors.len(), 2);
+            for (a, b) in out.neighbors.iter().zip(&single.neighbors) {
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits());
+                assert_eq!(a.train_idx, b.train_idx);
+            }
+        }
+        c.wait_native_idle();
+        let snap = c.metrics();
+        assert_eq!(snap.search_batches, 1);
+        // batch queries + the per-query cross-checks above
+        assert_eq!(snap.completed, 2 * ds.test.len() as u64);
+        assert!(snap.peak_concurrent_requests >= 1);
+        // rejects: bad key, empty batch, k=0, ragged length
+        assert!(c
+            .submit_batch_search(IndexKey(99), &ds.test.series, 1, Cascade::default())
+            .is_err());
+        assert!(c.submit_batch_search(key, &[], 1, Cascade::default()).is_err());
+        assert!(c
+            .submit_batch_search(key, &ds.test.series, 0, Cascade::default())
+            .is_err());
+        let short = vec![TimeSeries::new(0, vec![0.0; 3])];
+        assert!(c.submit_batch_search(key, &short, 1, Cascade::default()).is_err());
+    }
+
+    #[test]
+    fn concurrent_batch_searches_from_many_clients() {
+        use crate::data::synthetic;
+        let c = Arc::new(coord());
+        let ds = synthetic::generate_scaled("SyntheticControl", 3, 16, 8).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 4, 2));
+        let expect = c
+            .submit_batch_search(key, &ds.test.series, 1, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let queries = ds.test.series.clone();
+                std::thread::spawn(move || {
+                    c.submit_batch_search(key, &queries, 1, Cascade::default())
+                        .unwrap()
+                        .wait()
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let outs = h.join().unwrap();
+            assert_eq!(outs.len(), expect.len());
+            for (a, b) in outs.iter().zip(&expect) {
+                assert_eq!(
+                    a.neighbors[0].dist.to_bits(),
+                    b.neighbors[0].dist.to_bits(),
+                    "concurrent clients must get bit-identical answers"
+                );
+                assert_eq!(a.neighbors[0].train_idx, b.neighbors[0].train_idx);
+            }
+        }
+        c.wait_native_idle();
+        let snap = c.metrics();
+        assert_eq!(snap.search_batches, 5);
+        assert_eq!(snap.requests_inflight, 0);
+        assert_eq!(snap.completed, 5 * ds.test.len() as u64);
+    }
+
+    #[test]
+    fn gram_request_matches_direct_computation() {
+        use crate::data::synthetic;
+        use crate::measures::krdtw::Krdtw;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 9, 6, 2).unwrap();
+        let g = c
+            .submit_train_gram(Arc::new(Krdtw::new(1.0)), &ds.train)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let direct = train_gram(&Krdtw::new(1.0), &ds.train, 2);
+        assert_eq!(g.rows, direct.rows);
+        assert_eq!(g.visited_cells, direct.visited_cells);
+        let ga: Vec<u64> = g.data.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u64> = direct.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ga, gb);
+        c.wait_native_idle();
+        assert_eq!(c.metrics().gram_requests, 1);
+        assert!(c
+            .submit_train_gram(Arc::new(Krdtw::new(1.0)), &LabeledSet::default())
+            .is_err());
+    }
+
+    #[test]
+    fn store_budget_evicts_lru_never_just_written() {
+        use crate::data::synthetic;
+        let store = std::env::temp_dir().join(format!("spdtw_lru_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let ds = synthetic::generate_scaled("CBF", 5, 6, 2).unwrap();
+        let idx = || Index::build(&ds.train, 2, 1);
+
+        // budget sized for two of the (identically shaped) index files
+        let probe = std::env::temp_dir().join(format!("spdtw_lru_probe_{}.spix", std::process::id()));
+        persist::save_index(&idx(), &probe).unwrap();
+        let one = std::fs::metadata(&probe).unwrap().len();
+        std::fs::remove_file(&probe).ok();
+
+        let mut cfg = CoordinatorConfig::default();
+        cfg.index_store = Some(store.clone());
+        cfg.index_store_max_bytes = Some(2 * one + one / 2);
+        let c = Coordinator::start(cfg.clone(), None).unwrap();
+
+        c.register_index_persistent("a", idx()).unwrap();
+        c.register_index_persistent("b", idx()).unwrap();
+        assert_eq!(c.metrics().index_evictions, 0);
+        assert!(store.join("a.spix").exists() && store.join("b.spix").exists());
+
+        // third index busts the budget: 'a' is the LRU entry
+        c.register_index_persistent("cc", idx()).unwrap();
+        assert_eq!(c.metrics().index_evictions, 1);
+        assert!(!store.join("a.spix").exists(), "LRU file must be evicted");
+        assert!(store.join("b.spix").exists() && store.join("cc.spix").exists());
+        let m = Manifest::load(&store).unwrap();
+        assert!(m.find_index("a").is_none());
+        assert!(m.find_index("b").is_some() && m.find_index("cc").is_some());
+        // eviction is store-only: 'a' still serves from memory
+        assert!(c.lookup_index_named("a").is_some());
+
+        // a named lookup refreshes recency: touching 'b' makes 'cc' the
+        // oldest stored entry, so 'cc' goes next instead of 'b'
+        c.lookup_index_named("b");
+        c.register_index_persistent("d", idx()).unwrap();
+        assert_eq!(c.metrics().index_evictions, 2);
+        assert!(!store.join("cc.spix").exists());
+        assert!(store.join("b.spix").exists() && store.join("d.spix").exists());
+
+        // the index just written survives even a sub-single-file budget
+        let mut tiny = cfg;
+        tiny.index_store_max_bytes = Some(1);
+        let c2 = Coordinator::start(tiny, None).unwrap();
+        c2.register_index_persistent("e", idx()).unwrap();
+        assert!(store.join("e.spix").exists(), "just-written index must never be evicted");
         std::fs::remove_dir_all(&store).ok();
     }
 

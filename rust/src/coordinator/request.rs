@@ -80,6 +80,46 @@ impl SearchTicket {
     }
 }
 
+/// Completion handle for a batch k-NN request — the per-request epoch
+/// handle of the concurrent-epoch execution path: the whole batch runs
+/// as one compute-pool epoch, overlapping with other clients' requests.
+pub struct BatchSearchTicket {
+    pub(crate) rx: mpsc::Receiver<Result<Vec<SearchOutcome>>>,
+}
+
+impl BatchSearchTicket {
+    /// Block until every query in the batch has been answered.
+    pub fn wait(self) -> Result<Vec<SearchOutcome>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::coordinator("batch search dropped before completion"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<Result<Vec<SearchOutcome>>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Completion handle for a Gram-matrix request.
+pub struct GramTicket {
+    pub(crate) rx: mpsc::Receiver<Result<crate::classify::gram::Gram>>,
+}
+
+impl GramTicket {
+    /// Block until the Gram matrix is computed.
+    pub fn wait(self) -> Result<crate::classify::gram::Gram> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::coordinator("gram job dropped before completion"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<Result<crate::classify::gram::Gram>> {
+        self.rx.try_recv().ok()
+    }
+}
+
 /// Batching bucket identity: jobs may share a PJRT batch only if they
 /// agree on everything the executable closes over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -13,8 +13,16 @@
 //!     // optional "name":"cbf" — resolves against the registry first
 //!     // (warm-started indexes answer without a rebuild; the reply's
 //!     // "loaded_from_disk" says which path served it) and persists
-//!     // the build when the coordinator has an index store.
+//!     // the build when the coordinator has an index store.  The reply
+//!     // always carries "content_hash" (FNV-1a-64 of the registered
+//!     // index's payload, hex) and "drift": true when a known name was
+//!     // served from the registry but the submitted series/labels hash
+//!     // differently than the stored index — the client's signal that
+//!     // it would be searching stale data.
 //! {"op":"search","index":0,"k":3,"x":[...]}         // optional "cascade":"none"
+//! {"op":"batch_search","index":0,"k":3,"xs":[[...],...]}
+//!     // one concurrent-epoch request: the whole batch runs as its own
+//!     // pool epoch, overlapping with other clients' requests
 //! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
@@ -29,6 +37,7 @@ use crate::coordinator::state::{GridKey, IndexKey};
 use crate::coordinator::Coordinator;
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::Result;
+use crate::search::index::content_hash_of;
 use crate::search::{Cascade, Index};
 use crate::sparse::LocMatrix;
 use crate::util::json::Json;
@@ -122,6 +131,26 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
     Ok(())
 }
 
+fn parse_cascade(req: &Json) -> Result<Cascade> {
+    match req.get("cascade").and_then(Json::as_str) {
+        Some("none") => Ok(Cascade::none()),
+        Some("full") | None => Ok(Cascade::default()),
+        Some(other) => Err(crate::error::Error::config(format!(
+            "unknown cascade '{other}' (expected 'full' or 'none')"
+        ))),
+    }
+}
+
+fn neighbors_json(out: &crate::coordinator::request::SearchOutcome) -> Json {
+    Json::arr(out.neighbors.iter().map(|n| {
+        Json::obj(vec![
+            ("dist", Json::num(n.dist)),
+            ("label", Json::num(n.label as f64)),
+            ("idx", Json::num(n.train_idx as f64)),
+        ])
+    }))
+}
+
 fn parse_series(json: &Json, field: &str) -> Result<TimeSeries> {
     let arr = json.req_arr(field)?;
     let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
@@ -184,21 +213,10 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
             ]))
         }
         "register_index" => {
-            // A named registration hits the registry first: a
-            // warm-started (or earlier in-session) index under that
-            // name answers without rebuilding.
-            if let Some(name) = req.get("name").and_then(Json::as_str) {
-                // reject bad names before the O(n·T) build, not after
+            let name = req.get("name").and_then(Json::as_str);
+            if let Some(name) = name {
+                // reject bad names before any parsing or O(n·T) build
                 super::validate_index_name(name)?;
-                if let Some((key, loaded)) = coord.lookup_index_named(name) {
-                    let bytes = coord.index(key)?.memory_bytes();
-                    return Ok(Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("index", Json::num(key.0 as f64)),
-                        ("memory_bytes", Json::num(bytes as f64)),
-                        ("loaded_from_disk", Json::Bool(loaded)),
-                    ]));
-                }
             }
             let band = req.get("band").and_then(Json::as_usize).unwrap_or(usize::MAX);
             let arr = req.req_arr("series")?;
@@ -238,10 +256,37 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                     "'series' must be equal-length and non-empty",
                 ));
             }
+            // A named registration hits the registry first: a
+            // warm-started (or earlier in-session) index under the name
+            // answers without rebuilding — but the submitted payload is
+            // still hashed and diffed against the registered index, so
+            // a client whose train set changed sees `drift:true`
+            // instead of silently searching a stale index (the reply's
+            // `content_hash` is always the *registered* index's hash).
+            if let Some(name) = name {
+                if let Some((key, loaded)) = coord.lookup_index_named(name) {
+                    let stored = coord.index(key)?;
+                    let submitted = content_hash_of(
+                        t0,
+                        &labels,
+                        series.iter().map(|s| s.values.as_slice()),
+                    );
+                    let stored_hash = stored.content_hash();
+                    return Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("index", Json::num(key.0 as f64)),
+                        ("memory_bytes", Json::num(stored.memory_bytes() as f64)),
+                        ("loaded_from_disk", Json::Bool(loaded)),
+                        ("content_hash", Json::str(format!("{stored_hash:016x}"))),
+                        ("drift", Json::Bool(stored_hash != submitted)),
+                    ]));
+                }
+            }
             let train = LabeledSet::new(series);
             let index = Index::build(&train, band, coord.config().workers);
             let bytes = index.memory_bytes();
-            let key = match req.get("name").and_then(Json::as_str) {
+            let hash = index.content_hash();
+            let key = match name {
                 Some(name) => coord.register_index_persistent(name, index)?,
                 None => coord.register_index(index),
             };
@@ -250,36 +295,56 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 ("index", Json::num(key.0 as f64)),
                 ("memory_bytes", Json::num(bytes as f64)),
                 ("loaded_from_disk", Json::Bool(false)),
+                ("content_hash", Json::str(format!("{hash:016x}"))),
+                ("drift", Json::Bool(false)),
             ]))
         }
         "search" => {
             let key = IndexKey(req.req_usize("index")? as u64);
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
             let x = parse_series(&req, "x")?;
-            let cascade = match req.get("cascade").and_then(Json::as_str) {
-                Some("none") => Cascade::none(),
-                Some("full") | None => Cascade::default(),
-                Some(other) => {
-                    return Err(crate::error::Error::config(format!(
-                        "unknown cascade '{other}' (expected 'full' or 'none')"
-                    )))
-                }
-            };
+            let cascade = parse_cascade(&req)?;
             let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
-            let neighbors = Json::arr(out.neighbors.iter().map(|n| {
-                Json::obj(vec![
-                    ("dist", Json::num(n.dist)),
-                    ("label", Json::num(n.label as f64)),
-                    ("idx", Json::num(n.train_idx as f64)),
-                ])
-            }));
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("neighbors", neighbors),
+                ("neighbors", neighbors_json(&out)),
                 ("candidates", Json::num(out.stats.candidates as f64)),
                 ("pruned", Json::num(out.stats.pruned() as f64)),
                 ("full_evals", Json::num(out.stats.full_evals as f64)),
                 ("dp_cells", Json::num(out.stats.dp_cells as f64)),
+            ]))
+        }
+        "batch_search" => {
+            // one request = one concurrent-epoch batch: the whole `xs`
+            // array fans out on the compute pool, overlapping with any
+            // other client's in-flight request
+            let key = IndexKey(req.req_usize("index")? as u64);
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let cascade = parse_cascade(&req)?;
+            let arr = req.req_arr("xs")?;
+            let mut queries = Vec::with_capacity(arr.len());
+            for row in arr {
+                let vals: Option<Vec<f64>> = row
+                    .as_arr()
+                    .map(|r| r.iter().map(Json::as_f64).collect())
+                    .unwrap_or(None);
+                let vals = vals.ok_or_else(|| {
+                    crate::error::Error::config("'xs' must be arrays of numbers")
+                })?;
+                queries.push(TimeSeries::new(0, vals));
+            }
+            let outs = coord.submit_batch_search(key, &queries, k, cascade)?.wait()?;
+            let results = Json::arr(outs.iter().map(|out| {
+                Json::obj(vec![
+                    ("neighbors", neighbors_json(out)),
+                    ("pruned", Json::num(out.stats.pruned() as f64)),
+                    ("full_evals", Json::num(out.stats.full_evals as f64)),
+                ])
+            }));
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("queries", Json::num(outs.len() as f64)),
+                ("results", results),
             ]))
         }
         "metrics" => {
@@ -293,6 +358,19 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 ("pjrt", Json::num(s.pjrt_jobs as f64)),
                 ("batches", Json::num(s.batches as f64)),
                 ("padded", Json::num(s.padded_slots as f64)),
+                ("search_batches", Json::num(s.search_batches as f64)),
+                ("requests_inflight", Json::num(s.requests_inflight as f64)),
+                (
+                    "peak_concurrent_requests",
+                    Json::num(s.peak_concurrent_requests as f64),
+                ),
+                ("pool_epochs_live", Json::num(s.pool.active_epochs as f64)),
+                (
+                    "pool_peak_epochs",
+                    Json::num(s.pool.peak_concurrent_epochs as f64),
+                ),
+                ("native_queue_depth", Json::num(s.native_queue_depth as f64)),
+                ("index_evictions", Json::num(s.index_evictions as f64)),
                 ("mean_latency_us", Json::num(s.mean_latency_us)),
             ]))
         }
@@ -479,6 +557,98 @@ mod tests {
         assert_eq!(s.req_arr("neighbors").unwrap()[0].req_f64("dist").unwrap(), 0.0);
         server.stop();
         std::fs::remove_dir_all(&store).ok();
+    }
+
+    #[test]
+    fn batch_search_roundtrip_matches_singles() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let reg = client
+            .call(
+                &Json::parse(
+                    concat!(
+                        r#"{"op":"register_index","band":1,"#,
+                        r#""series":[[0,0,0],[5,5,5],[0.1,0.1,0.1]],"labels":[0,1,0]}"#
+                    ),
+                )
+                .unwrap(),
+            )
+            .unwrap();
+        let idx = reg.req_usize("index").unwrap();
+
+        let b = client
+            .call(
+                &Json::parse(&format!(
+                    r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[[0,0,0],[5,5,4]]}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(b.get("ok"), Some(&Json::Bool(true)), "{b:?}");
+        assert_eq!(b.req_usize("queries").unwrap(), 2);
+        let results = b.req_arr("results").unwrap();
+        assert_eq!(results.len(), 2);
+        for (i, x) in ["[0,0,0]", "[5,5,4]"].iter().enumerate() {
+            let single = client
+                .call(
+                    &Json::parse(&format!(r#"{{"op":"search","index":{idx},"k":1,"x":{x}}}"#))
+                        .unwrap(),
+                )
+                .unwrap();
+            let want = &single.req_arr("neighbors").unwrap()[0];
+            let got = &results[i].req_arr("neighbors").unwrap()[0];
+            assert_eq!(got.req_f64("dist").unwrap(), want.req_f64("dist").unwrap());
+            assert_eq!(got.req_usize("idx").unwrap(), want.req_usize("idx").unwrap());
+        }
+
+        for bad in [
+            format!(r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[]}}"#),
+            format!(r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[[0,0]]}}"#),
+            format!(r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[["a",0,0]]}}"#),
+            r#"{"op":"batch_search","index":77,"k":1,"xs":[[0,0,0]]}"#.to_string(),
+        ] {
+            let rep = client.call(&Json::parse(&bad).unwrap()).unwrap();
+            assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        }
+
+        let m = client.call(&Json::parse(r#"{"op":"metrics"}"#).unwrap()).unwrap();
+        assert_eq!(m.req_f64("search_batches").unwrap(), 1.0);
+        assert!(m.req_f64("peak_concurrent_requests").unwrap() >= 1.0);
+        server.stop();
+    }
+
+    #[test]
+    fn named_register_index_detects_content_drift() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let reg = |series: &str| {
+            format!(
+                r#"{{"op":"register_index","name":"drifty","band":1,"series":{series},"labels":[0,1]}}"#
+            )
+        };
+        let r1 = client.call(&Json::parse(&reg("[[0,0,0],[5,5,5]]")).unwrap()).unwrap();
+        assert_eq!(r1.get("ok"), Some(&Json::Bool(true)), "{r1:?}");
+        assert_eq!(r1.get("drift"), Some(&Json::Bool(false)));
+        let h1 = r1.req_str("content_hash").unwrap().to_string();
+        assert_eq!(h1.len(), 16);
+
+        // identical payload: served from the registry, no drift
+        let r2 = client.call(&Json::parse(&reg("[[0,0,0],[5,5,5]]")).unwrap()).unwrap();
+        assert_eq!(r2.get("drift"), Some(&Json::Bool(false)));
+        assert_eq!(r2.req_str("content_hash").unwrap(), h1);
+        assert_eq!(r2.req_usize("index").unwrap(), r1.req_usize("index").unwrap());
+
+        // changed payload under the same name: still served (the client
+        // decides), but flagged, and the hash is the STORED index's
+        let r3 = client.call(&Json::parse(&reg("[[0,0,0],[9,9,9]]")).unwrap()).unwrap();
+        assert_eq!(r3.get("ok"), Some(&Json::Bool(true)), "{r3:?}");
+        assert_eq!(r3.get("drift"), Some(&Json::Bool(true)));
+        assert_eq!(r3.req_str("content_hash").unwrap(), h1);
+        assert_eq!(r3.req_usize("index").unwrap(), r1.req_usize("index").unwrap());
+        server.stop();
     }
 
     #[test]

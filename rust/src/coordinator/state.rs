@@ -81,6 +81,10 @@ pub struct IndexRegistry {
     next: u64,
     indexes: HashMap<u64, IndexEntry>,
     by_name: HashMap<String, u64>,
+    /// Named-entry recency, least-recently-used first.  Touched on
+    /// registration and named lookup; drives the index-store LRU
+    /// eviction (`CoordinatorConfig::index_store_max_bytes`).
+    recency: Vec<String>,
 }
 
 impl IndexRegistry {
@@ -113,7 +117,27 @@ impl IndexRegistry {
         if let Some(old) = self.by_name.insert(name.to_string(), key.0) {
             self.indexes.remove(&old);
         }
+        self.touch(name);
         key
+    }
+
+    /// Mark `name` most-recently-used (no-op for unknown names).
+    pub fn touch(&mut self, name: &str) {
+        self.recency.retain(|n| n != name);
+        if self.by_name.contains_key(name) {
+            self.recency.push(name.to_string());
+        }
+    }
+
+    /// Named entries, least-recently-used first.
+    pub fn lru_names(&self) -> &[String] {
+        &self.recency
+    }
+
+    /// Forget a name's recency record (store eviction bookkeeping; the
+    /// in-memory entry itself stays registered and servable).
+    pub fn forget_recency(&mut self, name: &str) {
+        self.recency.retain(|n| n != name);
     }
 
     fn insert_entry(&mut self, entry: IndexEntry) -> IndexKey {
@@ -179,6 +203,30 @@ mod tests {
         assert!(!r.get_entry(b).unwrap().loaded_from_disk);
         assert_eq!(r.len(), 1);
         assert_eq!(r.key_by_name("other"), None);
+    }
+
+    #[test]
+    fn recency_tracks_lru_order() {
+        use crate::data::splits::from_pairs;
+        let train = from_pairs(vec![(0, vec![0.0, 1.0]), (1, vec![1.0, 0.0])]);
+        let idx = || Arc::new(Index::build(&train, 1, 1));
+        let lru = |r: &IndexRegistry| -> Vec<String> { r.lru_names().to_vec() };
+        let mut r = IndexRegistry::new();
+        r.insert_named("a", idx(), false);
+        r.insert_named("b", idx(), false);
+        r.insert_named("c", idx(), false);
+        assert_eq!(lru(&r), ["a", "b", "c"]);
+        // touching moves to most-recent; unknown names are ignored
+        r.touch("a");
+        r.touch("ghost");
+        assert_eq!(lru(&r), ["b", "c", "a"]);
+        // re-registration also refreshes recency
+        r.insert_named("b", idx(), false);
+        assert_eq!(lru(&r), ["c", "a", "b"]);
+        r.forget_recency("a");
+        assert_eq!(lru(&r), ["c", "b"]);
+        // forgetting recency does not unregister the entry
+        assert!(r.key_by_name("a").is_some());
     }
 
     #[test]

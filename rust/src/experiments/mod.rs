@@ -269,30 +269,42 @@ fn table5(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn table6(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
+    // Two sparsification axes side by side: cells per comparison (the
+    // paper's S(%) speed-up) and the search cascade's pruning ratio —
+    // the fraction of k-NN candidates resolved without a completed full
+    // DP when the same measure is served through the `search` engine.
     let mut t = Table::new(
-        "Table VI — time speed-up vs standard DTW (visited cells per comparison)",
+        "Table VI — time speed-up vs standard DTW \
+         (visited cells per comparison + cascade pruning ratio)",
         &[
-            "DataSet", "DTW cells", "SC cells", "SC S(%)", "SP-DTW cells", "SP-DTW S(%)",
-            "SP-Krdtw cells", "SP-Krdtw S(%)",
+            "DataSet", "DTW cells", "SC cells", "SC S(%)", "SC pruned(%)", "SP-DTW cells",
+            "SP-DTW S(%)", "SP-DTW pruned(%)", "SP-Krdtw cells", "SP-Krdtw S(%)",
         ],
     );
     let (mut s_sc, mut s_sp, mut s_spk) = (0.0, 0.0, 0.0);
+    let (mut p_sc, mut p_sp) = (0.0, 0.0);
     for ev in evals {
         let full = ev.cells["DTW"] as f64;
         let sc = ev.cells["DTW_sc"] as f64;
         let sp = ev.cells["SP-DTW"] as f64;
         let spk = ev.cells["SP-Krdtw"] as f64;
         let pct = |c: f64| 100.0 * (1.0 - c / full);
+        let prune_sc = 100.0 * ev.prune.get("DTW_sc").copied().unwrap_or(0.0);
+        let prune_sp = 100.0 * ev.prune.get("SP-DTW").copied().unwrap_or(0.0);
         s_sc += pct(sc);
         s_sp += pct(sp);
         s_spk += pct(spk);
+        p_sc += prune_sc;
+        p_sp += prune_sp;
         t.push_row(vec![
             ev.name.clone(),
             format!("{}", full as u64),
             format!("{}", sc as u64),
             format!("{:.1}", pct(sc)),
+            format!("{prune_sc:.1}"),
             format!("{}", sp as u64),
             format!("{:.1}", pct(sp)),
+            format!("{prune_sp:.1}"),
             format!("{}", spk as u64),
             format!("{:.1}", pct(spk)),
         ]);
@@ -303,8 +315,10 @@ fn table6(cfg: &ExperimentConfig, evals: &[DatasetEval]) -> Result<()> {
         "-".into(),
         "-".into(),
         format!("{:.1}", s_sc / n),
+        format!("{:.1}", p_sc / n),
         "-".into(),
         format!("{:.1}", s_sp / n),
+        format!("{:.1}", p_sp / n),
         "-".into(),
         format!("{:.1}", s_spk / n),
     ]);

@@ -3,9 +3,10 @@
 //! evaluate all measures on test → one [`DatasetEval`] row.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::classify::gram::{cross_gram, gram_1nn_error};
-use crate::classify::nn::classify_1nn;
+use crate::classify::nn::{classify_1nn, classify_knn_indexed};
 use crate::classify::svm::{classify_svm, SvmParams};
 use crate::config::ExperimentConfig;
 use crate::data::synthetic;
@@ -17,8 +18,8 @@ use crate::measures::dtw::Dtw;
 use crate::measures::euclidean::{Euclidean, GaussianEd};
 use crate::measures::krdtw::Krdtw;
 use crate::measures::sakoe_chiba::{band_cells, SakoeChibaDtw};
-use crate::measures::spdtw::SpDtw;
 use crate::measures::spkrdtw::SpKrdtw;
+use crate::search::{Cascade, Index};
 use crate::sparse::learn::learn_occupancy_grid;
 use crate::sparse::OccupancyGrid;
 use crate::tuning;
@@ -41,6 +42,11 @@ pub struct DatasetEval {
     pub err_svm: BTreeMap<String, f64>,
     /// Visited cells per single pairwise comparison (Table VI).
     pub cells: BTreeMap<String, u64>,
+    /// Cascade pruning ratio (candidates resolved without a completed
+    /// full DP) for the index-backed search path over the same measure
+    /// — the Table VI column next to the visited-cell counts (ROADMAP
+    /// PR-1 follow-up).  Keys: `DTW_sc`, `SP-DTW`.
+    pub prune: BTreeMap<String, f64>,
     /// θ grid-search curve (Fig. 4).
     pub theta_curve: Vec<(f64, f64)>,
 }
@@ -115,6 +121,7 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
 
     let mut err_1nn = BTreeMap::new();
     let mut cells = BTreeMap::new();
+    let mut prune = BTreeMap::new();
 
     // ---- behavior-based + lock-step baselines -----------------------------
     err_1nn.insert("CORR".into(), classify_1nn(&CorrDist, &ds.train, &ds.test, threads).error_rate);
@@ -128,14 +135,27 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
     err_1nn.insert("DTW".into(), classify_1nn(&Dtw, &ds.train, &ds.test, threads).error_rate);
     cells.insert("DTW".into(), (t * t) as u64);
 
+    // DTW_sc and SP-DTW run through the index-backed search cascade:
+    // results are bit-identical to exhaustive `classify_1nn` over the
+    // same measure (the `search` exactness contract, asserted in
+    // `classification_agrees_with_bruteforce_knn`), so one pass yields
+    // both the Table II error rate and the Table VI pruning ratio —
+    // no duplicate exhaustive evaluation of the test set.
     let sc = SakoeChibaDtw::new(tuned.band_pct);
-    err_1nn.insert("DTW_sc".into(), classify_1nn(&sc, &ds.train, &ds.test, threads).error_rate);
     cells.insert("DTW_sc".into(), band_cells(t, sc.band_for(t)));
+    let sc_index = Arc::new(Index::build(&ds.train, sc.band_for(t), threads));
+    let (sc_eval, sc_stats) =
+        classify_knn_indexed(&sc_index, Cascade::default(), &ds.test, 1, threads);
+    err_1nn.insert("DTW_sc".into(), sc_eval.error_rate);
+    prune.insert("DTW_sc".into(), sc_stats.prune_ratio());
 
     let loc_w = tuned.grid.threshold(tuned.theta).to_loc(tuned.gamma);
     cells.insert("SP-DTW".into(), loc_w.nnz() as u64);
-    let spdtw = SpDtw::new(loc_w);
-    err_1nn.insert("SP-DTW".into(), classify_1nn(&spdtw, &ds.train, &ds.test, threads).error_rate);
+    let sp_index = Arc::new(Index::build_spdtw(&ds.train, Arc::new(loc_w), threads));
+    let (sp_eval, sp_stats) =
+        classify_knn_indexed(&sp_index, Cascade::default(), &ds.test, 1, threads);
+    err_1nn.insert("SP-DTW".into(), sp_eval.error_rate);
+    prune.insert("SP-DTW".into(), sp_stats.prune_ratio());
 
     // ---- kernel family (via normalized Grams) ------------------------------
     let krdtw = Krdtw::new(tuned.nu);
@@ -204,6 +224,7 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
         err_1nn,
         err_svm,
         cells,
+        prune,
         theta_curve: tuned.theta_curve,
     })
 }
@@ -237,6 +258,11 @@ mod tests {
         assert_eq!(ev.cells["DTW"], (ev.t * ev.t) as u64);
         assert!(ev.cells["SP-DTW"] <= ev.cells["DTW"]);
         assert!(ev.cells["DTW_sc"] <= ev.cells["DTW"]);
+        // cascade pruning ratios ride along (ROADMAP PR-1 follow-up)
+        for m in ["DTW_sc", "SP-DTW"] {
+            let p = ev.prune[m];
+            assert!((0.0..=1.0).contains(&p), "{m}: prune ratio {p}");
+        }
         assert!(!ev.theta_curve.is_empty());
     }
 

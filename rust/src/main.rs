@@ -120,6 +120,11 @@ fn opt_spec() -> Vec<OptSpec> {
             takes_value: false,
             help: "serve: do not reload persisted indexes at boot",
         },
+        OptSpec {
+            name: "index-store-max-bytes",
+            takes_value: true,
+            help: "serve: LRU-evict store files past this byte budget",
+        },
     ]
 }
 
@@ -571,6 +576,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ccfg.index_store = Some(PathBuf::from(dir));
     }
     ccfg.warm_start = !args.flag("no-warm-start");
+    if let Some(v) = args.get("index-store-max-bytes") {
+        let bytes: u64 = v
+            .parse()
+            .map_err(|_| Error::config("--index-store-max-bytes must be an integer"))?;
+        ccfg.index_store_max_bytes = Some(bytes);
+    }
     let runtime = if ccfg.prefer_pjrt {
         match PjrtRuntime::start(&cfg.artifacts_dir) {
             Ok(rt) => {
@@ -599,7 +610,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("spdtw coordinator listening on {}", server.addr);
     println!(
         "protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, \
-         spkrdtw, register_index, search, metrics, shutdown"
+         spkrdtw, register_index, search, batch_search, metrics, shutdown"
     );
     // Serve until the process is killed (the TCP `shutdown` op stops the
     // accept loop; we poll for it).

@@ -12,18 +12,38 @@
 //! - [`WorkerPool`]: a persistent pool consuming boxed jobs from a
 //!   shared queue — the execution engine under `coordinator::worker`.
 //!
+//! ## Concurrent epochs
+//!
+//! Each `par_map` call is one **epoch**: a slot holding the epoch's
+//! type-erased runner, a participant count and a per-epoch completion
+//! latch.  Any number of epochs can be live at once — workers claim
+//! whichever live epoch is least served, so N simultaneous `par_map`
+//! callers from distinct threads each make progress instead of queueing
+//! behind a global submit lock (the PR 3 design serialized them; the
+//! throughput collapse under multi-client coordinator load is the bug
+//! this replaces).  The submitting thread participates in its own
+//! epoch, so an epoch advances even when every pool worker is busy
+//! elsewhere — there is no cross-epoch blocking anywhere, hence no
+//! deadlock, and epoch completion waits only on its own participants.
+//!
 //! ## Scheduling & exactness
 //!
-//! Work is claimed dynamically from an atomic counter (in `chunk`-sized
-//! runs), so the mapping of items to workers is nondeterministic — but
-//! every item is computed by exactly one worker and written to its own
-//! output slot, and the workspace-reuse contract
-//! ([`crate::measures::workspace`]) guarantees results are independent
-//! of which (dirty) workspace computed them.  `par_map(n, t, f)` is
-//! therefore bit-identical to `(0..n).map(f)` for any thread count.
+//! Within an epoch, work is claimed dynamically from an atomic counter
+//! (in `chunk`-sized runs), so the mapping of items to workers is
+//! nondeterministic — but every item is computed by exactly one
+//! participant and written to its own output slot, and the
+//! workspace-reuse contract ([`crate::measures::workspace`]) guarantees
+//! results are independent of which (dirty) workspace computed them.
+//! `par_map(n, t, f)` is therefore bit-identical to `(0..n).map(f)` for
+//! any thread count and any set of concurrently running epochs
+//! (stress-tested in `tests/stress_pool.rs`).
+//!
+//! Panics stay contained per epoch: a panicking job aborts only its own
+//! epoch (re-raised to that epoch's submitter as "pool worker
+//! panicked"); concurrently running epochs are unaffected.
 
 use std::cell::Cell;
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
@@ -74,6 +94,10 @@ pub fn par_map_chunked<R: Send, F: Fn(usize) -> R + Sync>(
 /// zero steady-state allocations.  Serial fallbacks (`threads <= 1`,
 /// nested calls from a pool worker) reuse the calling thread's TLS
 /// workspace instead.
+///
+/// Each call is its own concurrent epoch: simultaneous calls from
+/// distinct threads overlap on the shared worker set instead of
+/// serializing (see the module docs).
 pub fn par_map_ws<R, F>(n: usize, threads: usize, chunk: usize, f: F) -> Vec<R>
 where
     R: Send,
@@ -90,46 +114,98 @@ where
     compute_pool().run(n, threads, chunk, &f)
 }
 
+/// Point-in-time view of the compute pool's scheduler state — the
+/// queue-depth / concurrency signal exported by the coordinator metrics
+/// and asserted by the overlap tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Pool worker threads (0 until the first parallel epoch spins the
+    /// pool up).
+    pub workers: usize,
+    /// Epochs currently live (submitted, not yet completed).
+    pub active_epochs: usize,
+    /// Participants (pool workers + submitting threads) currently
+    /// executing some epoch's runner.
+    pub running_participants: usize,
+    /// High-water mark of simultaneously live epochs since process
+    /// start — `>= 2` proves two `par_map` calls actually overlapped.
+    pub peak_concurrent_epochs: usize,
+}
+
+/// Snapshot the scheduler state.  Cheap (one mutex acquisition).
+pub fn pool_stats() -> PoolStats {
+    match POOL.get() {
+        None => PoolStats::default(),
+        Some(pool) => {
+            let st = lock(&pool.state);
+            PoolStats {
+                workers: pool.workers,
+                active_epochs: st.epochs.len(),
+                running_participants: st.epochs.iter().map(|e| e.running).sum(),
+                peak_concurrent_epochs: st.peak_epochs,
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
-// Persistent compute pool
+// Persistent compute pool (concurrent-epoch scheduler)
 // ---------------------------------------------------------------------
 
 /// Type-erased per-epoch job body: claims work until the epoch's index
-/// space is exhausted, using the worker's own workspace.
+/// space is exhausted, using the executing participant's workspace.
 type Runner<'a> = dyn Fn(&mut DpWorkspace) + Sync + 'a;
 
-/// Raw pointer to the current epoch's runner.  Sound to send across
-/// threads because [`ComputePool::execute`] keeps the pointee alive (and
-/// the epoch serialized) until every participant has finished with it.
+/// Raw pointer to one epoch's runner.  Sound to send across threads
+/// because [`ComputePool::execute`] keeps the pointee alive (and the
+/// epoch's slot registered) until every participant has finished with
+/// it.
 #[derive(Clone, Copy)]
 struct RunnerPtr(*const Runner<'static>);
 unsafe impl Send for RunnerPtr {}
 
-/// Output slot array for one epoch.  Workers write disjoint indices
-/// claimed from the epoch's atomic counter, so no two threads ever
-/// touch the same slot.
+/// Output slot array for one epoch.  Participants write disjoint
+/// indices claimed from the epoch's atomic counter, so no two threads
+/// ever touch the same slot.
 struct SlotsPtr<R>(*mut Option<R>);
 unsafe impl<R: Send> Sync for SlotsPtr<R> {}
 
+/// One live epoch in the scheduler.
+struct EpochSlot {
+    id: u64,
+    runner: RunnerPtr,
+    /// Participants (workers + the submitter) currently inside
+    /// `runner`.
+    running: usize,
+    /// Set once any participant's `runner` call returned: the index
+    /// space is drained (or the epoch panicked), so no new participant
+    /// may join.
+    exhausted: bool,
+    /// Max simultaneous participants (the caller's `threads` hint).
+    target: usize,
+}
+
 struct PoolState {
-    task: Option<RunnerPtr>,
-    epoch: u64,
-    /// Workers participating in the current epoch (indices `0..participants`).
-    participants: usize,
-    /// Participants that have not yet finished the current epoch.
-    active: usize,
+    epochs: Vec<EpochSlot>,
+    next_id: u64,
+    peak_epochs: usize,
+    /// Workspace-trim generation (bumped by [`trim_workspaces`]); each
+    /// worker trims once per generation and acks.
+    trim_gen: u64,
+    trim_acks: usize,
 }
 
 /// The process-wide persistent worker pool behind [`par_map_ws`]:
 /// `default_threads()` threads, each owning one long-lived
-/// [`DpWorkspace`], parked on a condvar between epochs.
+/// [`DpWorkspace`], parked on a condvar while no epoch has claimable
+/// work.
 struct ComputePool {
     state: Mutex<PoolState>,
+    /// Signaled when a new epoch arrives or a trim is requested.
     work_cv: Condvar,
+    /// Signaled when an epoch's participant count drops to zero or a
+    /// trim is acked.
     done_cv: Condvar,
-    /// Held for the duration of one epoch — serializes concurrent
-    /// `par_map` callers onto the shared worker set.
-    submit: Mutex<()>,
     workers: usize,
 }
 
@@ -145,7 +221,8 @@ fn compute_pool() -> &'static Arc<ComputePool> {
 /// (`sparse::learn`) so long-lived processes don't pin
 /// workers × T² × 8 bytes of heap they will never touch again; the
 /// steady-state serving buffers (rows, entry arrays, candidate scratch)
-/// are left warm.
+/// are left warm.  Blocks until every worker has trimmed; workers busy
+/// inside an epoch trim right after their current runner call returns.
 pub fn trim_workspaces() {
     workspace::with_tls(|ws| ws.trim());
     // Nested calls run jobs serially on the caller's TLS workspace, so
@@ -155,9 +232,7 @@ pub fn trim_workspaces() {
     }
     // Only touch the pool if something already spun it up.
     if let Some(pool) = POOL.get() {
-        // An epoch's runner executes once on every participant, so this
-        // reaches each worker's workspace exactly once.
-        pool.execute(pool.workers, &|ws: &mut DpWorkspace| ws.trim());
+        pool.trim_all();
     }
 }
 
@@ -165,81 +240,150 @@ impl ComputePool {
     fn start(workers: usize) -> Arc<ComputePool> {
         let pool = Arc::new(ComputePool {
             state: Mutex::new(PoolState {
-                task: None,
-                epoch: 0,
-                participants: 0,
-                active: 0,
+                epochs: Vec::new(),
+                next_id: 0,
+                peak_epochs: 0,
+                trim_gen: 0,
+                trim_acks: 0,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            submit: Mutex::new(()),
             workers: workers.max(1),
         });
         for idx in 0..pool.workers {
             let p = Arc::clone(&pool);
             thread::Builder::new()
                 .name(format!("spdtw-pool-{idx}"))
-                .spawn(move || p.worker_loop(idx))
+                .spawn(move || p.worker_loop())
                 .expect("spawn compute-pool worker");
         }
         pool
     }
 
-    fn worker_loop(&self, idx: usize) {
+    /// Claimable epoch with the fewest running participants (ties to
+    /// the oldest): balances workers across concurrent epochs while
+    /// keeping FIFO-ish fairness.
+    fn pick(epochs: &[EpochSlot]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in epochs.iter().enumerate() {
+            if e.exhausted || e.running >= e.target {
+                continue;
+            }
+            best = match best {
+                Some(b) if (epochs[b].running, epochs[b].id) <= (e.running, e.id) => Some(b),
+                _ => Some(i),
+            };
+        }
+        best
+    }
+
+    fn worker_loop(&self) {
         ON_POOL_WORKER.with(|c| c.set(true));
         // The long-lived workspace: reused across every epoch this
-        // worker ever runs, for the lifetime of the process.
+        // worker ever joins, for the lifetime of the process.
         let mut ws = DpWorkspace::new();
-        let mut seen = 0u64;
+        let mut trim_seen = 0u64;
         loop {
-            let task = {
+            let (id, task) = {
                 let mut st = lock(&self.state);
                 loop {
-                    if st.epoch != seen {
-                        seen = st.epoch;
-                        break if idx < st.participants { st.task } else { None };
+                    if st.trim_gen != trim_seen {
+                        trim_seen = st.trim_gen;
+                        ws.trim();
+                        st.trim_acks += 1;
+                        self.done_cv.notify_all();
+                    }
+                    if let Some(i) = Self::pick(&st.epochs) {
+                        st.epochs[i].running += 1;
+                        break (st.epochs[i].id, st.epochs[i].runner);
                     }
                     st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
                 }
             };
-            if let Some(RunnerPtr(ptr)) = task {
-                // SAFETY: `execute` keeps the runner borrow alive until
-                // `active` reaches zero, which only happens after this
-                // call returns and we decrement below.
-                let runner = unsafe { &*ptr };
-                let _ = catch_unwind(AssertUnwindSafe(|| runner(&mut ws)));
-                let mut st = lock(&self.state);
-                st.active -= 1;
-                if st.active == 0 {
+            // SAFETY: `execute` keeps the runner borrow alive until this
+            // epoch's `running` count returns to zero, which cannot
+            // happen before the decrement below.
+            let runner = unsafe { &*task.0 };
+            let _ = catch_unwind(AssertUnwindSafe(|| runner(&mut ws)));
+            let mut st = lock(&self.state);
+            if let Some(slot) = st.epochs.iter_mut().find(|e| e.id == id) {
+                // The runner returned: the epoch's index space is
+                // drained (or it panicked) — nobody new may join.
+                slot.exhausted = true;
+                slot.running -= 1;
+                if slot.running == 0 {
                     self.done_cv.notify_all();
                 }
             }
         }
     }
 
-    /// Run one epoch: publish `runner`, wake the first
-    /// `min(threads, workers)` workers, block until all of them finish.
+    /// Run one epoch to completion: register its slot, wake workers,
+    /// participate from the calling thread, then wait for the epoch's
+    /// own completion latch.  No cross-epoch lock is held at any point.
     fn execute(&self, threads: usize, runner: &Runner<'_>) {
-        let _epoch = lock(&self.submit);
-        let participants = threads.min(self.workers).max(1);
-        // SAFETY: the lifetime is erased only for storage in the shared
-        // slot; this function does not return (and the slot is cleared)
+        // SAFETY: the lifetime is erased only for storage in the slot;
+        // this function does not return (and the slot is removed)
         // until every participant has finished running the pointee.
         let ptr: *const Runner<'static> =
             unsafe { std::mem::transmute::<*const Runner<'_>, *const Runner<'static>>(runner) };
-        {
+        let id = {
             let mut st = lock(&self.state);
-            st.task = Some(RunnerPtr(ptr));
-            st.participants = participants;
-            st.active = participants;
-            st.epoch = st.epoch.wrapping_add(1);
+            let id = st.next_id;
+            st.next_id = st.next_id.wrapping_add(1);
+            st.epochs.push(EpochSlot {
+                id,
+                runner: RunnerPtr(ptr),
+                // the submitting thread is participant #1
+                running: 1,
+                exhausted: false,
+                target: threads.max(1),
+            });
+            st.peak_epochs = st.peak_epochs.max(st.epochs.len());
             self.work_cv.notify_all();
-        }
+            id
+        };
+        // Participate: the submitter drains its own epoch alongside the
+        // workers, so progress never depends on worker availability.
+        // (`with_tls` is re-entrant, handing nested callers a fresh
+        // arena.)  The unwind guard keeps the slot bookkeeping sound
+        // even if a runner ever leaks a panic.
+        let panicked =
+            catch_unwind(AssertUnwindSafe(|| workspace::with_tls(|ws| runner(ws)))).err();
         let mut st = lock(&self.state);
-        while st.active > 0 {
+        let pos = |st: &PoolState| {
+            st.epochs
+                .iter()
+                .position(|e| e.id == id)
+                .expect("live epoch slot")
+        };
+        {
+            let i = pos(&st);
+            st.epochs[i].exhausted = true;
+            st.epochs[i].running -= 1;
+        }
+        while st.epochs[pos(&st)].running > 0 {
             st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
-        st.task = None;
+        let i = pos(&st);
+        st.epochs.remove(i);
+        drop(st);
+        if let Some(payload) = panicked {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Bump the trim generation and wait until every worker has trimmed
+    /// its workspace (workers mid-epoch trim after their current runner
+    /// call returns).
+    fn trim_all(&self) {
+        let mut st = lock(&self.state);
+        st.trim_gen = st.trim_gen.wrapping_add(1);
+        st.trim_acks = 0;
+        self.work_cv.notify_all();
+        while st.trim_acks < self.workers {
+            st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
     }
 
     fn run<R, F>(&self, n: usize, threads: usize, chunk: usize, f: &F) -> Vec<R>
@@ -267,8 +411,9 @@ impl ComputePool {
             for i in start..end {
                 match catch_unwind(AssertUnwindSafe(|| f(i, ws))) {
                     // SAFETY: index `i` was claimed by exactly this
-                    // worker via `next`, so the write is race-free; the
-                    // caller reads `out` only after the epoch barrier.
+                    // participant via `next`, so the write is race-free;
+                    // the caller reads `out` only after the epoch's
+                    // completion latch.
                     Ok(v) => unsafe { slots.0.add(i).write(Some(v)) },
                     Err(_) => {
                         panicked.store(true, Ordering::SeqCst);
@@ -434,7 +579,9 @@ mod tests {
     #[test]
     fn nested_par_map_from_pool_job_does_not_deadlock() {
         let out = par_map(8, 4, |i| {
-            // nested call runs serially on the worker's TLS workspace
+            // on a pool worker the nested call runs serially on that
+            // worker's TLS workspace; on the participating submitter it
+            // becomes a (completing) sub-epoch — neither may deadlock
             par_map_ws(4, 4, 1, |j, ws| {
                 let (row, _) = ws.rows(2, 0.0);
                 row[0] as usize + i * 10 + j
@@ -444,6 +591,49 @@ mod tests {
         });
         let want: Vec<usize> = (0..8).map(|i| 4 * (i * 10) + 6).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn concurrent_epochs_overlap_without_submit_lock() {
+        // Two epochs submitted from distinct threads rendezvous *inside*
+        // their job bodies: epoch A's items block until epoch B has
+        // started running and vice versa.  Under the old global submit
+        // lock this times out (B cannot start until A finishes); under
+        // the concurrent-epoch scheduler both complete.
+        let flag_a = Arc::new(AtomicBool::new(false));
+        let flag_b = Arc::new(AtomicBool::new(false));
+        let wait_for = |flag: &AtomicBool| {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            while !flag.load(Ordering::SeqCst) {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "epochs did not overlap: global submit serialization is back"
+                );
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        };
+        let (fa, fb) = (Arc::clone(&flag_a), Arc::clone(&flag_b));
+        let ta = thread::spawn(move || {
+            par_map(2, 2, move |i| {
+                fa.store(true, Ordering::SeqCst);
+                wait_for(&fb);
+                i * 2
+            })
+        });
+        let (fa, fb) = (flag_a, flag_b);
+        let tb = thread::spawn(move || {
+            par_map(2, 2, move |i| {
+                fb.store(true, Ordering::SeqCst);
+                wait_for(&fa);
+                i * 3
+            })
+        });
+        assert_eq!(ta.join().unwrap(), vec![0, 2]);
+        assert_eq!(tb.join().unwrap(), vec![0, 3]);
+        assert!(
+            pool_stats().peak_concurrent_epochs >= 2,
+            "scheduler never held two live epochs"
+        );
     }
 
     #[test]
@@ -481,6 +671,17 @@ mod tests {
         trim_workspaces();
         let b = par_map(64, 4, |i| i + 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_stats_observes_started_pool() {
+        // spin the pool up, then snapshot it (other tests may be running
+        // their own epochs concurrently, so only monotone facts are
+        // asserted here)
+        par_map(8, 2, |i| i);
+        let s = pool_stats();
+        assert!(s.workers >= 1);
+        assert!(s.peak_concurrent_epochs >= 1);
     }
 
     #[test]

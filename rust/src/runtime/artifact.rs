@@ -193,6 +193,38 @@ pub fn record_index_artifact(
     Ok(())
 }
 
+/// Remove a persisted-index entry from `<dir>/manifest.json` (LRU
+/// eviction path).  Missing manifest or missing entry is a no-op; every
+/// other manifest key survives, and the write is temp-file + rename
+/// like [`record_index_artifact`].
+pub fn remove_index_artifact(dir: &Path, name: &str) -> Result<()> {
+    let mpath = dir.join("manifest.json");
+    let root = match std::fs::read_to_string(&mpath) {
+        Ok(text) => Json::parse(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e.into()),
+    };
+    let mut obj = root
+        .as_obj()
+        .cloned()
+        .ok_or_else(|| Error::runtime("manifest.json root is not an object"))?;
+    let mut indexes: Vec<Json> = obj
+        .get("indexes")
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    let before = indexes.len();
+    indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
+    if indexes.len() == before {
+        return Ok(());
+    }
+    obj.insert("indexes".to_string(), Json::Arr(indexes));
+    let tmp = dir.join("manifest.json.tmp");
+    std::fs::write(&tmp, Json::Obj(obj).to_pretty())?;
+    std::fs::rename(&tmp, &mpath)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,6 +297,24 @@ mod tests {
         assert_eq!(m.entries.len(), 1);
         assert_eq!(m.indexes.len(), 1); // write_fake reset the manifest
         assert!(m.find_index("gun").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remove_index_entry_preserves_rest() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man5_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // removing from a nonexistent manifest is a clean no-op
+        remove_index_artifact(&dir, "ghost").unwrap();
+        record_index_artifact(&dir, "a", "a.spix", 8, 2).unwrap();
+        record_index_artifact(&dir, "b", "b.spix", 8, 2).unwrap();
+        remove_index_artifact(&dir, "a").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find_index("a").is_none());
+        assert!(m.find_index("b").is_some());
+        // unknown name: no-op, manifest intact
+        remove_index_artifact(&dir, "nope").unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap().indexes.len(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

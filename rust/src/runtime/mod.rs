@@ -22,7 +22,10 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::error::{Error, Result};
-pub use artifact::{record_index_artifact, ArtifactEntry, IndexArtifact, KernelKind, Manifest};
+pub use artifact::{
+    record_index_artifact, remove_index_artifact, ArtifactEntry, IndexArtifact, KernelKind,
+    Manifest,
+};
 
 /// A batched DTW request (f32): `b` pairs of length-`t` series.
 #[derive(Clone, Debug)]

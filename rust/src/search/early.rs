@@ -15,7 +15,12 @@
 //! [`crate::measures::spdtw::SpDtw::eval`]) — tracking the row minimum
 //! adds comparisons, never arithmetic — so a non-abandoned evaluation
 //! returns the exact same `f64` the exhaustive kernel would (property:
-//! `prop_early_abandon_exact_when_completed`).
+//! `prop_early_abandon_exact_when_completed`).  This holds for
+//! *degenerate* grids too: unreachable-corner and empty-row grids
+//! report the same sentinel-level values as the exhaustive kernel, and
+//! abandoning never claims more than it can prove about them — so the
+//! k-NN engine's `(dist, train idx)` tie-break stays exact even when
+//! candidates tie at a sentinel distance (see [`spdtw_ea`]).
 
 use crate::measures::workspace::{self, DpWorkspace};
 use crate::measures::{phi, BIG};
@@ -123,9 +128,15 @@ pub fn dtw_banded_ea_into(
 /// soon as a row's minimum DP value reaches it.  Per-cell arithmetic is
 /// identical to [`crate::measures::spdtw::SpDtw::eval`].
 ///
-/// Note on empty rows: a row with no retained cell means no admissible
-/// path exists at all; with a finite `ub` the evaluation abandons there
-/// (the true distance is `Max_Float` ≥ any finite bound).
+/// Exactness extends to degenerate grids: a grid without the
+/// bottom-right corner cell reports the same `BIG + BIG` sentinel the
+/// exhaustive kernel does (decided up front, no DP needed), and a grid
+/// with an empty row only proves the distance is ≥ `BIG` — the corner
+/// value is still a *specific* finite number that can tie exactly at a
+/// k-NN boundary, so the kernel abandons on an empty row only when
+/// `BIG` itself clears `ub` and otherwise completes the DP.  That keeps
+/// the engine's `(dist, train idx)` tie-break exact for every grid, not
+/// just connected ones.
 pub fn spdtw_ea(loc: &LocMatrix, x: &[f64], y: &[f64], ub: f64) -> EaResult {
     workspace::with_tls(|ws| spdtw_ea_into(ws, loc, x, y, ub))
 }
@@ -142,6 +153,17 @@ pub fn spdtw_ea_into(
     let t = loc.t;
     assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
     assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
+    // A grid without the bottom-right corner cell always reports the
+    // constant sentinel, regardless of anything the DP computes — so the
+    // exact answer (which can tie against other sentinel candidates) is
+    // known up front, and returning it directly is both faster and
+    // tie-break exact.  `visited` is 0: no DP cell was computed.
+    let Some(corner_k) = loc.index_of(t - 1, t - 1) else {
+        return EaResult {
+            value: Some(BIG + BIG),
+            visited: 0,
+        };
+    };
     let n = loc.nnz();
     let d = &mut ws.entries;
     d.clear();
@@ -175,19 +197,23 @@ pub fn spdtw_ea_into(
             }
         }
         visited += (re - rs) as u64;
-        if ub.is_finite() && row_min >= ub {
+        // Every admissible path visits every row, so the final distance
+        // is ≥ this row's minimum.  An empty row proves disconnection —
+        // every later DP value (corner included) is ≥ BIG — but the
+        // corner value is still a specific finite number that can tie
+        // exactly at the k-th boundary, so the *proven* bound there is
+        // BIG, not infinity: abandoning on a looser claim would drop a
+        // tie-winning candidate (`(dist, train idx)` order).
+        let proven = if re == rs { BIG } else { row_min };
+        if ub.is_finite() && proven >= ub {
             return EaResult {
                 value: None,
                 visited,
             };
         }
     }
-    let corner = loc
-        .index_of(t - 1, t - 1)
-        .map(|k| d[k])
-        .unwrap_or(BIG + BIG);
     EaResult {
-        value: Some(corner),
+        value: Some(d[corner_k]),
         visited,
     }
 }
@@ -283,5 +309,52 @@ mod tests {
         let ea = dtw_banded_ea(&x, &y, usize::MAX, 0.0);
         assert_eq!(ea.value, None);
         assert_eq!(ea.visited, 16); // exactly one row
+    }
+
+    #[test]
+    fn cornerless_grid_returns_exact_sentinel_without_dp() {
+        use crate::measures::BIG;
+        use crate::util::mathx::next_up_f64;
+        // no (t-1, t-1) cell: the exhaustive kernel reports BIG + BIG
+        let loc = LocMatrix::from_triples(4, vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]);
+        let x = vec![0.5; 4];
+        let y = vec![-0.5; 4];
+        let exact = SpDtw::new(loc.clone()).eval(&x, &y);
+        assert_eq!(exact.value.to_bits(), (BIG + BIG).to_bits());
+        for ub in [f64::INFINITY, 1.0, BIG, next_up_f64(BIG + BIG)] {
+            let ea = spdtw_ea(&loc, &x, &y, ub);
+            // the sentinel is a *value*, never an abandon: a candidate
+            // tying at BIG + BIG must survive to the tie-break
+            assert_eq!(ea.value.map(f64::to_bits), Some(exact.value.to_bits()), "ub={ub}");
+            assert_eq!(ea.visited, 0);
+        }
+    }
+
+    #[test]
+    fn empty_row_tie_at_kth_boundary_completes_exactly() {
+        use crate::measures::BIG;
+        use crate::util::mathx::next_up_f64;
+        // row 2 empty, corner present: disconnected, but the corner DP
+        // value is a specific finite number (local(3,3) + BIG)
+        let loc = LocMatrix::from_triples(
+            4,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (3, 3, 1.0)],
+        );
+        let x = vec![0.0, 0.0, 0.0, 1.0];
+        let y = vec![0.0, 0.0, 0.0, 3.0];
+        let exact = SpDtw::new(loc.clone()).eval(&x, &y);
+        assert!(exact.value >= BIG, "grid must be disconnected");
+
+        // ub just above the true value (the `(dist, idx)` tie-winner
+        // threshold): the kernel must COMPLETE and return the exact
+        // value — the pre-fix empty-row abandon dropped it here.
+        let tie = spdtw_ea(&loc, &x, &y, next_up_f64(exact.value));
+        assert_eq!(tie.value.map(f64::to_bits), Some(exact.value.to_bits()));
+        assert_eq!(tie.visited, exact.visited_cells);
+
+        // a real (sub-BIG) bound still abandons at the empty row
+        let ea = spdtw_ea(&loc, &x, &y, 10.0);
+        assert_eq!(ea.value, None);
+        assert!(ea.visited < exact.visited_cells);
     }
 }

@@ -200,10 +200,27 @@ impl SearchEngine {
     }
 
     /// Batch k-NN over a whole query set: parallel across queries on
-    /// the persistent pool, one long-lived workspace per worker.
+    /// the persistent pool, one long-lived workspace per worker.  Each
+    /// call is one scheduler epoch, so batches submitted by distinct
+    /// threads (the coordinator's concurrent clients) overlap instead
+    /// of serializing.
     pub fn batch_knn(&self, queries: &LabeledSet, k: usize, threads: usize) -> Vec<QueryResult> {
         pool::par_map_ws(queries.len(), threads, 1, |i, ws| {
             self.knn_with(ws, &queries.series[i], k)
+        })
+    }
+
+    /// [`Self::batch_knn`] over raw value slices — the coordinator's
+    /// `submit_batch_search` path, which carries queries as plain
+    /// vectors off the wire.
+    pub fn batch_knn_values(
+        &self,
+        queries: &[Vec<f64>],
+        k: usize,
+        threads: usize,
+    ) -> Vec<QueryResult> {
+        pool::par_map_ws(queries.len(), threads, 1, |i, ws| {
+            self.knn_values_with(ws, &queries[i], k)
         })
     }
 
@@ -393,6 +410,33 @@ mod tests {
         assert_eq!(r.neighbors[0].label, 7);
         assert_eq!(r.neighbors[1].train_idx, 1);
         assert_eq!(r.neighbors[1].dist, 0.0);
+    }
+
+    #[test]
+    fn sentinel_tie_at_kth_boundary_matches_brute() {
+        // Disconnected grid (row 2 empty, corner present): every
+        // candidate's distance is `local(3,3) + BIG`, which depends only
+        // on the candidate's last value — so train 0 and 1 tie exactly.
+        // The LB visit order puts train 1 first (its envelope hugs the
+        // query), so train 0 meets the boundary as the tie-WINNER
+        // (smaller index): the pre-fix empty-row abandon dropped it.
+        let loc = Arc::new(LocMatrix::from_triples(
+            4,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (3, 3, 1.0)],
+        ));
+        let train = from_pairs(vec![
+            (0, vec![10.0, 10.0, 0.0, 5.0]),
+            (1, vec![-3.0, -3.0, 0.0, 5.0]),
+        ]);
+        let idx = Arc::new(Index::build_spdtw(&train, loc, 1));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let q = [-3.0, 0.0, 0.0, 0.0];
+        let got = eng.knn_values(&q, 1);
+        let want = brute_topk(&idx, &q, 1);
+        assert_eq!(got.neighbors.len(), 1);
+        assert_eq!(got.neighbors[0].dist.to_bits(), want[0].0.to_bits());
+        assert_eq!(got.neighbors[0].train_idx, want[0].1);
+        assert_eq!(got.neighbors[0].train_idx, 0, "tie must go to the smaller index");
     }
 
     #[test]

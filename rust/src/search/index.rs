@@ -163,6 +163,19 @@ impl Index {
         }
     }
 
+    /// FNV-1a-64 content hash of the indexed payload: `t`, the label
+    /// sequence and every stored series' IEEE-754 bit pattern, in
+    /// order.  Envelopes are derived state and excluded.  The TCP
+    /// `register_index` op replies with this so a client re-submitting
+    /// a known name can detect that the registered index was built from
+    /// *different* data (drift) instead of silently searching a stale
+    /// index — compare against [`content_hash_of`] over the submitted
+    /// train set.  Note the hash covers the *stored* representation:
+    /// a z-normalized index hashes its normalized series.
+    pub fn content_hash(&self) -> u64 {
+        content_hash_of(self.t, &self.labels, self.series.iter().map(Vec::as_slice))
+    }
+
     /// Approximate resident size (bytes) — reported in the TCP
     /// `register_index` reply and the `spdtw index` CLI.
     ///
@@ -183,6 +196,30 @@ impl Index {
         let grid_bytes = self.loc.as_ref().map(|l| l.memory_bytes()).unwrap_or(0);
         series_bytes + label_bytes + grid_bytes
     }
+}
+
+/// Content hash of a raw `(t, labels, series)` payload — what
+/// [`Index::content_hash`] would report for an index built (without
+/// z-normalization) from the same train set, computable before paying
+/// for the build.  The wire drift check hashes the submitted series
+/// with this and compares against the registered index.
+pub fn content_hash_of<'a>(
+    t: usize,
+    labels: &[usize],
+    series: impl Iterator<Item = &'a [f64]>,
+) -> u64 {
+    use crate::search::persist::{fnv1a64_extend, FNV1A64_INIT};
+    let mut h = fnv1a64_extend(FNV1A64_INIT, &(t as u64).to_le_bytes());
+    h = fnv1a64_extend(h, &(labels.len() as u64).to_le_bytes());
+    for &label in labels {
+        h = fnv1a64_extend(h, &(label as u64).to_le_bytes());
+    }
+    for s in series {
+        for &v in s {
+            h = fnv1a64_extend(h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
 }
 
 #[cfg(test)]
@@ -245,6 +282,23 @@ mod tests {
         // grid footprint (the pre-fix report ignored it entirely).
         assert_eq!(sp.memory_bytes(), banded.memory_bytes() + grid_bytes);
         assert!(banded.memory_bytes() >= 3 * (16 * 8 * 3 + 8));
+    }
+
+    #[test]
+    fn content_hash_tracks_payload_not_derived_state() {
+        let train = from_pairs(vec![(0, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
+        // different radii (different envelopes), same payload → same hash
+        let a = Index::build(&train, 1, 1);
+        let b = Index::build(&train, 2, 1);
+        assert_eq!(a.content_hash(), b.content_hash());
+        // the standalone hash over the raw payload agrees
+        let h = content_hash_of(3, &a.labels, a.series.iter().map(Vec::as_slice));
+        assert_eq!(h, a.content_hash());
+        // any value or label change moves the hash
+        let tweaked = from_pairs(vec![(0, vec![0.0, 1.0, 2.5]), (1, vec![2.0, 1.0, 0.0])]);
+        assert_ne!(Index::build(&tweaked, 1, 1).content_hash(), a.content_hash());
+        let relabeled = from_pairs(vec![(3, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
+        assert_ne!(Index::build(&relabeled, 1, 1).content_hash(), a.content_hash());
     }
 
     #[test]

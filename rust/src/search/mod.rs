@@ -38,6 +38,10 @@
 //! early-abandoning kernels mirror the FP operation order of
 //! [`crate::measures::dtw::dtw_banded`] / `SpDtw::eval`, so
 //! non-abandoned values are bit-identical to the exhaustive ones.
+//! Exactness covers degenerate grids too: candidates tying at the
+//! unreachable-corner sentinel resolve by the same `(dist, train
+//! index)` rule ([`early`] never abandons on more than it can prove),
+//! so there is no exotic-grid caveat left.
 //!
 //! ## Layout
 //!

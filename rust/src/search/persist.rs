@@ -67,10 +67,19 @@ const FLAG_LB_VALID: u32 = 1 << 1;
 const FLAG_HAS_GRID: u32 = 1 << 2;
 const KNOWN_FLAGS: u32 = FLAG_ZNORM | FLAG_LB_VALID | FLAG_HAS_GRID;
 
+/// FNV-1a-64 offset basis (the hash of the empty input).
+pub const FNV1A64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
 /// FNV-1a 64-bit hash — the payload checksum (dependency-free, good
 /// dispersion for the "did this file get corrupted" question).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a64_extend(FNV1A64_INIT, bytes)
+}
+
+/// Streaming FNV-1a-64: fold `bytes` into a running hash (seed with
+/// [`FNV1A64_INIT`]).  Used by [`crate::search::Index::content_hash`]
+/// to hash multi-buffer payloads without assembling them.
+pub fn fnv1a64_extend(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100_0000_01b3);

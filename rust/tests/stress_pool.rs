@@ -1,0 +1,157 @@
+//! Concurrent-epoch scheduler stress tests: ≥4 submitter threads
+//! driving mixed-size `par_map_ws` epochs simultaneously must produce
+//! bit-exact results (no epoch may ever observe another epoch's output
+//! slots or claim counter), panics must stay contained to their own
+//! epoch, and epochs from distinct threads must provably overlap —
+//! the multi-client throughput contract behind
+//! `Coordinator::submit_batch_search`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use spdtw::measures::dtw::dtw_banded;
+use spdtw::pool::{self, par_map, par_map_ws};
+use spdtw::search::early::dtw_banded_ea_into;
+use spdtw::util::rng::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+    (0..t).map(|_| rng.normal()).collect()
+}
+
+/// 6 threads × 8 rounds of mixed-size epochs, half cheap arithmetic and
+/// half real DP kernels, all racing on the shared worker set.  Every
+/// epoch's output must be bit-identical to its serial oracle: a single
+/// leaked slot write or shared claim counter between epochs would show
+/// up as a wrong length, a `None` slot panic, or a foreign value.
+#[test]
+fn concurrent_mixed_size_epochs_are_bit_exact() {
+    let threads = 6;
+    let rounds = 8;
+    let handles: Vec<_> = (0..threads)
+        .map(|tid| {
+            thread::spawn(move || {
+                let mut rng = Pcg64::new(0xabc0 + tid as u64);
+                for round in 0..rounds {
+                    // mixed sizes: every (thread, round) uses its own n
+                    let n = 17 + 31 * tid + 13 * round;
+                    if tid % 2 == 0 {
+                        // arithmetic epoch: values encode (tid, round, i),
+                        // so a foreign epoch's write is detectable
+                        let want: Vec<f64> = (0..n)
+                            .map(|i| 0.25 + (tid * 1_000_003 + round * 7919 + i) as f64)
+                            .collect();
+                        let got = par_map_ws(n, 4, 3, |i, ws| {
+                            let (row, _) = ws.rows(4 + (i % 5), 0.25);
+                            row[0] + (tid * 1_000_003 + round * 7919 + i) as f64
+                        });
+                        assert_eq!(got, want, "tid={tid} round={round}");
+                    } else {
+                        // DP epoch: banded DTW at per-item bands against
+                        // the exhaustive serial oracle, bit-for-bit
+                        let t = 12 + 2 * (round % 4);
+                        let x = rand_vec(&mut rng, t);
+                        let y = rand_vec(&mut rng, t);
+                        let want: Vec<u64> = (0..n)
+                            .map(|i| dtw_banded(&x, &y, 1 + (i % 7)).value.to_bits())
+                            .collect();
+                        let got = par_map_ws(n, 4, 1, |i, ws| {
+                            dtw_banded_ea_into(ws, &x, &y, 1 + (i % 7), f64::INFINITY)
+                                .value
+                                .unwrap()
+                                .to_bits()
+                        });
+                        assert_eq!(got, want, "tid={tid} round={round}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+}
+
+/// Four submitters rendezvous *inside* their running epochs: each epoch
+/// blocks until it has seen every other epoch start.  Under a global
+/// submit lock only one epoch can run at a time, so this times out;
+/// under the concurrent-epoch scheduler all four complete.
+#[test]
+fn four_submitters_epochs_all_overlap() {
+    let flags: Arc<Vec<AtomicBool>> = Arc::new((0..4).map(|_| AtomicBool::new(false)).collect());
+    let handles: Vec<_> = (0..4)
+        .map(|tid| {
+            let flags = Arc::clone(&flags);
+            thread::spawn(move || {
+                par_map(2, 2, move |i| {
+                    flags[tid].store(true, Ordering::SeqCst);
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    while !flags.iter().all(|f| f.load(Ordering::SeqCst)) {
+                        assert!(
+                            Instant::now() < deadline,
+                            "4-way epoch overlap never happened: submit serialization is back"
+                        );
+                        thread::sleep(Duration::from_millis(1));
+                    }
+                    tid * 10 + i
+                })
+            })
+        })
+        .collect();
+    for (tid, h) in handles.into_iter().enumerate() {
+        assert_eq!(h.join().unwrap(), vec![tid * 10, tid * 10 + 1]);
+    }
+    assert!(
+        pool::pool_stats().peak_concurrent_epochs >= 4,
+        "scheduler never held four live epochs"
+    );
+}
+
+/// A panicking job aborts only its own epoch: concurrent epochs keep
+/// producing exact results, and the pool serves new epochs afterwards.
+#[test]
+fn panicking_epoch_does_not_poison_concurrent_epochs() {
+    let stop = Arc::new(AtomicBool::new(false));
+    // three clean submitters hammer the pool...
+    let clean: Vec<_> = (0..3)
+        .map(|tid| {
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let mut epochs = 0usize;
+                while !stop.load(Ordering::SeqCst) || epochs < 20 {
+                    let n = 64 + 7 * tid;
+                    let got = par_map(n, 4, |i| i as u64 * 3 + tid as u64);
+                    let want: Vec<u64> = (0..n).map(|i| i as u64 * 3 + tid as u64).collect();
+                    assert_eq!(got, want, "clean epoch corrupted by a concurrent panic");
+                    epochs += 1;
+                    if epochs >= 200 {
+                        break;
+                    }
+                }
+                epochs
+            })
+        })
+        .collect();
+    // ...while a fourth submitter fires panicking epochs the whole time
+    for round in 0..50 {
+        let poisoned = catch_unwind(AssertUnwindSafe(|| {
+            par_map(32, 4, move |i| {
+                if i == round % 32 {
+                    panic!("boom {round}");
+                }
+                i
+            })
+        }));
+        let err = poisoned.expect_err("panicking epoch must propagate to its submitter");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "pool worker panicked");
+    }
+    stop.store(true, Ordering::SeqCst);
+    for h in clean {
+        assert!(h.join().expect("clean thread poisoned") >= 20);
+    }
+    // the pool is still fully functional after 50 panicked epochs
+    assert_eq!(par_map(100, 4, |i| i + 1), (0..100).map(|i| i + 1).collect::<Vec<_>>());
+}
