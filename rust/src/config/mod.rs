@@ -1,11 +1,38 @@
 //! Configuration system: experiment + coordinator settings with JSON
 //! file loading, CLI overrides and validation.
+//!
+//! ## Measure specs in config files
+//!
+//! Wherever a config names a measure it uses the serializable
+//! [`MeasureSpec`] JSON shape (one `"kind"` discriminator plus that
+//! kind's parameters) — the same object the TCP protocol v2 `dist` /
+//! `kernel` / `register_measure` ops accept:
+//!
+//! ```json
+//! {"kind":"euclidean"}                       {"kind":"minkowski","p":3}
+//! {"kind":"corr"}                            {"kind":"daco","lags":10}
+//! {"kind":"dtw"}                             {"kind":"banded_dtw","band_cells":12}
+//! {"kind":"sakoe_chiba","band_pct":10}       {"kind":"itakura"}
+//! {"kind":"krdtw","nu":0.5,"band_cells":8}   {"kind":"kga","nu":0.5}
+//! {"kind":"spdtw","grid":{"kind":"corridor","t":60,"band":5}}
+//! {"kind":"spkrdtw","nu":0.5,"grid":{"kind":"learned","theta":0.5,"gamma":0}}
+//! ```
+//!
+//! Grid references inside `spdtw`/`spkrdtw` specs are
+//! `{"kind":"full","t":T}`, `{"kind":"corridor","t":T,"band":B}`,
+//! `{"kind":"learned","theta":θ,"gamma":γ}` (resolved against a train
+//! set) or `{"kind":"registered","key":K}` (a coordinator
+//! `register_grid` key; wire only).  Parameters are validated when the
+//! spec is parsed, and every f64 round-trips JSON ⇄ typed bit-exactly.
+//! [`SearchConfig::measure`] consumes this shape to pick the index
+//! family for `spdtw search`.
 
 pub mod cli;
 
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::measures::spec::MeasureSpec;
 use crate::pool;
 use crate::util::json::Json;
 
@@ -165,6 +192,10 @@ pub struct SearchConfig {
     /// instead of building one — the warm-start path for `spdtw search`
     /// and the default destination of `spdtw index save`.
     pub index_file: Option<PathBuf>,
+    /// Searchable measure the index should evaluate (module docs have
+    /// the JSON shape).  `None` falls back to banded DTW over
+    /// [`Self::band_cells`]; a spec here takes precedence.
+    pub measure: Option<MeasureSpec>,
 }
 
 impl Default for SearchConfig {
@@ -179,6 +210,7 @@ impl Default for SearchConfig {
             order_by_lb: true,
             znormalize: false,
             index_file: None,
+            measure: None,
         }
     }
 }
@@ -188,7 +220,22 @@ impl SearchConfig {
         if self.k == 0 {
             return Err(Error::config("search k must be >= 1"));
         }
+        if let Some(m) = &self.measure {
+            m.validate()?;
+        }
         Ok(())
+    }
+
+    /// The measure spec the search index should be built for:
+    /// [`Self::measure`] verbatim when set, otherwise the banded-DTW
+    /// family [`Self::band_cells`] describes (`usize::MAX` =
+    /// unconstrained DTW).
+    pub fn index_spec(&self) -> MeasureSpec {
+        match &self.measure {
+            Some(m) => m.clone(),
+            None if self.band_cells == usize::MAX => MeasureSpec::Dtw,
+            None => MeasureSpec::BandedDtw { band_cells: self.band_cells },
+        }
     }
 
     /// The stage-toggle view consumed by the engine.
@@ -224,6 +271,9 @@ impl SearchConfig {
         if let Some(v) = json.get("index_file").and_then(Json::as_str) {
             cfg.index_file = Some(PathBuf::from(v));
         }
+        if let Some(m) = json.get("measure") {
+            cfg.measure = Some(MeasureSpec::from_json(m)?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -243,6 +293,9 @@ impl SearchConfig {
         }
         if let Some(p) = &self.index_file {
             fields.push(("index_file", Json::str(p.display().to_string())));
+        }
+        if let Some(m) = &self.measure {
+            fields.push(("measure", m.to_json()));
         }
         Json::obj(fields)
     }
@@ -373,6 +426,27 @@ mod tests {
 
         let cas = cfg.cascade();
         assert!(cas.kim && !cas.keogh_rev && cas.early_abandon);
+    }
+
+    #[test]
+    fn search_config_measure_spec_roundtrip_and_precedence() {
+        // no measure: band_cells drives the spec
+        let mut cfg = SearchConfig::default();
+        assert_eq!(cfg.index_spec(), MeasureSpec::Dtw);
+        cfg.band_cells = 7;
+        assert_eq!(cfg.index_spec(), MeasureSpec::BandedDtw { band_cells: 7 });
+
+        // an explicit spec wins and round-trips through JSON
+        cfg.measure = Some(MeasureSpec::SakoeChiba { band_pct: 12.5 });
+        let back = SearchConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.measure, cfg.measure);
+        assert_eq!(back.index_spec(), MeasureSpec::SakoeChiba { band_pct: 12.5 });
+
+        // invalid specs are rejected at parse time
+        let bad = Json::parse(r#"{"measure":{"kind":"krdtw","nu":-1}}"#).unwrap();
+        assert!(SearchConfig::from_json(&bad).is_err());
+        let unknown = Json::parse(r#"{"measure":{"kind":"zzz"}}"#).unwrap();
+        assert!(SearchConfig::from_json(&unknown).is_err());
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct Metrics {
     pub index_load_failures: AtomicU64,
     /// Store files LRU-evicted to honor `index_store_max_bytes`.
     pub index_evictions: AtomicU64,
+    // ---- measure registry / protocol v2 ----
+    /// Measures bound via `register_measure` (TCP v2 or the API).
+    pub measures_registered: AtomicU64,
+    /// Requests that arrived in a protocol-v2 envelope (`proto: 2`).
+    pub proto_v2_requests: AtomicU64,
     // ---- concurrency (multi-client execution over the compute pool) ----
     /// Batch search requests (each runs as its own pool epoch).
     pub search_batches: AtomicU64,
@@ -116,6 +121,8 @@ impl Metrics {
             indexes_loaded: self.indexes_loaded.load(Ordering::Relaxed),
             index_load_failures: self.index_load_failures.load(Ordering::Relaxed),
             index_evictions: self.index_evictions.load(Ordering::Relaxed),
+            measures_registered: self.measures_registered.load(Ordering::Relaxed),
+            proto_v2_requests: self.proto_v2_requests.load(Ordering::Relaxed),
             search_batches: self.search_batches.load(Ordering::Relaxed),
             gram_requests: self.gram_requests.load(Ordering::Relaxed),
             batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
@@ -167,6 +174,10 @@ pub struct Snapshot {
     pub indexes_loaded: u64,
     pub index_load_failures: u64,
     pub index_evictions: u64,
+    /// Measures bound via `register_measure`.
+    pub measures_registered: u64,
+    /// Requests served from a protocol-v2 envelope.
+    pub proto_v2_requests: u64,
     pub search_batches: u64,
     pub gram_requests: u64,
     /// Jobs in partial PJRT batches at snapshot time (gauge).
@@ -227,6 +238,7 @@ impl Snapshot {
              search: {} queries, {} candidates -> {} kim / {} keogh / {} rev skips, \
              {} abandons, {} full DPs ({:.1}% pruned)\n\
              index store: {} saved, {} warm-loaded, {} rejected, {} evicted\n\
+             protocol: {} measures registered, {} v2 requests\n\
              concurrency: {} batch / {} gram requests, {} inflight (peak {}), \
              pool {} epochs live (peak {}), native queue {}\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
@@ -251,6 +263,8 @@ impl Snapshot {
             self.indexes_loaded,
             self.index_load_failures,
             self.index_evictions,
+            self.measures_registered,
+            self.proto_v2_requests,
             self.search_batches,
             self.gram_requests,
             self.requests_inflight,

@@ -46,12 +46,13 @@ use crate::config::CoordinatorConfig;
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::{Error, Result};
 use crate::measures::spdtw::SpDtw;
+use crate::measures::spec::{self, GridResolver, GridSpec, KernelDist, MeasureSpec};
 use crate::measures::spkrdtw::SpKrdtw;
 use crate::measures::{KernelMeasure, Measure};
 use crate::pool::WorkerPool;
 use crate::runtime::{
-    record_index_artifact, remove_index_artifact, DtwBatch, KernelKind, KrdtwBatch, Manifest,
-    PjrtHandle,
+    record_index_artifact, remove_index_artifact, touch_index_artifact, DtwBatch, KernelKind,
+    KrdtwBatch, Manifest, PjrtHandle,
 };
 use crate::search::{persist, Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
@@ -63,12 +64,23 @@ use request::{
     SearchOutcome, SearchTicket,
 };
 use router::Router;
-use state::{GridKey, GridRegistry, IndexKey, IndexRegistry};
+use state::{
+    BuiltMeasure, GridKey, GridRegistry, IndexKey, IndexRegistry, MeasureEntry, MeasureKey,
+    MeasureRegistry,
+};
 
 enum DispatchMsg {
     Job(Box<PjrtJob>, Instant),
     Drain(mpsc::Sender<()>),
 }
+
+/// Upper bound on `register_measure` entries: registered measures are
+/// never evicted (their keys must stay resolvable), and each may pin a
+/// resolved LOC grid — without a cap, a wire client looping
+/// `register_measure` accumulates unbounded memory.  Far above any
+/// legitimate working set; inline specs in `dist`/`kernel` ops remain
+/// unlimited (they bind per request and are dropped after it).
+pub const MAX_REGISTERED_MEASURES: usize = 1024;
 
 /// The coordinator service.  Create with [`Coordinator::start`]; dropped
 /// coordinators drain and join all threads.
@@ -82,7 +94,30 @@ pub struct Coordinator {
     router: Router,
     grids: Mutex<GridRegistry>,
     indexes: Mutex<IndexRegistry>,
+    measures: Mutex<MeasureRegistry>,
     pjrt: Option<PjrtHandle>,
+}
+
+/// [`GridResolver`] over the coordinator's grid registry: `registered`
+/// references resolve against [`Coordinator::register_grid`] keys,
+/// inline `full`/`corridor` grids materialize directly, and `learned`
+/// grids are rejected (the wire has no train set to learn from).
+struct CoordinatorGrids<'a>(&'a Coordinator);
+
+impl GridResolver for CoordinatorGrids<'_> {
+    fn resolve(&self, grid: &GridSpec) -> Result<Arc<LocMatrix>> {
+        if let Some(loc) = spec::materialize_inline(grid)? {
+            return Ok(loc);
+        }
+        match grid {
+            GridSpec::Registered { key } => self.0.grid(GridKey(*key)),
+            GridSpec::Learned { .. } => Err(Error::config(
+                "learned grids need a train set; learn the LOC grid client-side and \
+                 register it (or send an inline grid)",
+            )),
+            _ => unreachable!("inline kinds handled above"),
+        }
+    }
 }
 
 impl Coordinator {
@@ -223,6 +258,7 @@ impl Coordinator {
             router,
             grids: Mutex::new(GridRegistry::new()),
             indexes: Mutex::new(index_reg),
+            measures: Mutex::new(MeasureRegistry::new()),
             pjrt,
         })
     }
@@ -269,7 +305,250 @@ impl Coordinator {
             .unwrap()
             .get(key)
             .map(|e| Arc::clone(&e.loc))
-            .ok_or_else(|| Error::coordinator(format!("unknown grid key {key:?}")))
+            .ok_or_else(|| Error::not_found("grid key", key.0.to_string()))
+    }
+
+    /// Bind a [`MeasureSpec`] once — parameters validated, grids
+    /// resolved against the registry — and register it under a stable
+    /// key for later [`Self::submit_dist_key`] / [`Self::submit_kernel_key`]
+    /// calls (the TCP `register_measure` op).
+    pub fn register_measure(&self, mspec: &MeasureSpec) -> Result<MeasureKey> {
+        mspec.validate()?;
+        // Resolve the grid (if any) exactly once; its length becomes
+        // the entry's operand requirement and the bound object reuses
+        // it via a fixed resolver.
+        let loc = match mspec.grid() {
+            Some(g) => Some(CoordinatorGrids(self).resolve(g)?),
+            None => None,
+        };
+        let required_len = loc.as_ref().map(|l| l.t);
+        let built = match &loc {
+            Some(l) => {
+                let fixed = spec::FixedGrid(Arc::clone(l));
+                if mspec.is_kernel() {
+                    BuiltMeasure::Kernel(mspec.build_kernel(&fixed)?)
+                } else {
+                    BuiltMeasure::Dist(mspec.build_measure(&fixed)?)
+                }
+            }
+            None if mspec.is_kernel() => {
+                BuiltMeasure::Kernel(mspec.build_kernel(&spec::InlineGrids)?)
+            }
+            None => BuiltMeasure::Dist(mspec.build_measure(&spec::InlineGrids)?),
+        };
+        // cap check and insert under ONE guard (the expensive binding
+        // above stays outside the lock): entries are never evicted, so
+        // without this bound a wire client looping register_measure
+        // over large inline grids accumulates unbounded memory — and a
+        // check-then-insert across two lock acquisitions would let
+        // concurrent registrations overshoot the cap
+        let mut reg = self.measures.lock().unwrap();
+        if reg.len() >= MAX_REGISTERED_MEASURES {
+            return Err(Error::config(format!(
+                "measure registry full ({MAX_REGISTERED_MEASURES} entries); \
+                 reuse registered keys or send inline specs"
+            )));
+        }
+        let key = reg.insert(MeasureEntry {
+            spec: mspec.clone(),
+            built,
+            required_len,
+        });
+        drop(reg);
+        self.metrics
+            .measures_registered
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(key)
+    }
+
+    /// Resolve a registered measure.
+    pub fn measure(&self, key: MeasureKey) -> Result<Arc<MeasureEntry>> {
+        self.measures
+            .lock()
+            .unwrap()
+            .get(key)
+            .ok_or_else(|| Error::not_found("measure key", key.0.to_string()))
+    }
+
+    /// Submit a distance evaluation described by a [`MeasureSpec`]
+    /// (the generic TCP v2 `dist` op).  SP-DTW over a *registered*
+    /// grid keeps the PJRT routing of [`Self::submit_spdtw`]; every
+    /// other spec binds and runs on the native pool.  Operand shapes
+    /// are rejected here, before anything reaches a DP kernel's
+    /// asserts.
+    pub fn submit_dist_spec(
+        &self,
+        mspec: &MeasureSpec,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        mspec.validate()?;
+        mspec.check_operands(x.len(), y.len())?;
+        match mspec {
+            MeasureSpec::SpDtw { grid: GridSpec::Registered { key } } => {
+                self.submit_spdtw(GridKey(*key), x, y)
+            }
+            MeasureSpec::SpDtw { grid } => {
+                let loc = CoordinatorGrids(self).resolve(grid)?;
+                check_grid_len(&loc, x.len())?;
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                let sp = SpDtw::from_arc(loc);
+                let (xs, ys) = (x.values.clone(), y.values.clone());
+                Ok(self.submit_native_closure(move || {
+                    let d = sp.eval(&xs, &ys);
+                    (d.value, d.visited_cells)
+                }))
+            }
+            MeasureSpec::SpKrdtw { nu, grid } => {
+                let loc = CoordinatorGrids(self).resolve(grid)?;
+                check_grid_len(&loc, x.len())?;
+                let kernel: Arc<dyn KernelMeasure> = Arc::new(SpKrdtw::from_arc(loc, *nu));
+                Ok(self.submit_native(Arc::new(KernelDist::new(kernel)), x, y))
+            }
+            _ if mspec.is_kernel() => {
+                let kernel = mspec.build_kernel(&CoordinatorGrids(self))?;
+                Ok(self.submit_native(Arc::new(KernelDist::new(kernel)), x, y))
+            }
+            _ => {
+                let m = mspec.build_measure(&CoordinatorGrids(self))?;
+                Ok(self.submit_native(m, x, y))
+            }
+        }
+    }
+
+    /// Submit a log-kernel evaluation described by a [`MeasureSpec`]
+    /// (the generic TCP v2 `kernel` op).  SP-K_rdtw over a registered
+    /// grid keeps the PJRT routing of [`Self::submit_spkrdtw`];
+    /// distance-only specs are a typed error.
+    pub fn submit_kernel_spec(
+        &self,
+        mspec: &MeasureSpec,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        mspec.validate()?;
+        mspec.check_operands(x.len(), y.len())?;
+        match mspec {
+            MeasureSpec::SpKrdtw { nu, grid: GridSpec::Registered { key } } => {
+                self.submit_spkrdtw(GridKey(*key), *nu, x, y)
+            }
+            MeasureSpec::SpKrdtw { nu, grid } => {
+                let loc = CoordinatorGrids(self).resolve(grid)?;
+                check_grid_len(&loc, x.len())?;
+                self.submit_native_kernel(Arc::new(SpKrdtw::from_arc(loc, *nu)), x, y)
+            }
+            _ if mspec.is_kernel() => {
+                let kernel = mspec.build_kernel(&CoordinatorGrids(self))?;
+                self.submit_native_kernel(kernel, x, y)
+            }
+            other => Err(Error::config(format!(
+                "measure '{}' is a distance, not a kernel (use op \"dist\")",
+                other.name()
+            ))),
+        }
+    }
+
+    /// [`Self::submit_dist_spec`] against a measure registered with
+    /// [`Self::register_measure`]: no re-binding — the stored object
+    /// runs directly (except registered-grid SP-DTW, which keeps its
+    /// PJRT routing via the stored spec).
+    pub fn submit_dist_key(
+        &self,
+        key: MeasureKey,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        let entry = self.measure(key)?;
+        entry.spec.check_operands(x.len(), y.len())?;
+        check_required_len(&entry, x.len())?;
+        if let MeasureSpec::SpDtw { grid: GridSpec::Registered { key } } = &entry.spec {
+            return self.submit_spdtw(GridKey(*key), x, y);
+        }
+        match &entry.built {
+            BuiltMeasure::Dist(m) => Ok(self.submit_native(Arc::clone(m), x, y)),
+            BuiltMeasure::Kernel(k) => {
+                Ok(self.submit_native(Arc::new(KernelDist::new(Arc::clone(k))), x, y))
+            }
+        }
+    }
+
+    /// [`Self::submit_kernel_spec`] against a registered measure.
+    pub fn submit_kernel_key(
+        &self,
+        key: MeasureKey,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        let entry = self.measure(key)?;
+        entry.spec.check_operands(x.len(), y.len())?;
+        check_required_len(&entry, x.len())?;
+        if let MeasureSpec::SpKrdtw { nu, grid: GridSpec::Registered { key } } = &entry.spec {
+            return self.submit_spkrdtw(GridKey(*key), *nu, x, y);
+        }
+        match &entry.built {
+            BuiltMeasure::Kernel(k) => self.submit_native_kernel(Arc::clone(k), x, y),
+            BuiltMeasure::Dist(_) => Err(Error::config(format!(
+                "registered measure '{}' is a distance, not a kernel (use op \"dist\")",
+                entry.spec.name()
+            ))),
+        }
+    }
+
+    /// Submit an arbitrary native kernel evaluation (log K value).
+    fn submit_native_kernel(
+        &self,
+        kernel: Arc<dyn KernelMeasure>,
+        x: &TimeSeries,
+        y: &TimeSeries,
+    ) -> Result<JobTicket> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let xs = x.clone();
+        let ys = y.clone();
+        Ok(self.submit_native_closure(move || {
+            let d = kernel.log_k(&xs, &ys);
+            (d.value, d.visited_cells)
+        }))
+    }
+
+    /// Build a search [`Index`] for a spec, resolving grid references
+    /// against this coordinator's registry (the TCP v2 `register_index`
+    /// op's `"measure"` parameter).
+    pub fn build_index_from_spec(
+        &self,
+        train: &LabeledSet,
+        mspec: &MeasureSpec,
+    ) -> Result<Index> {
+        Index::build_from_spec(train, mspec, false, &CoordinatorGrids(self), self.cfg.workers)
+    }
+
+    /// Whether a registered index evaluates the measure family `mspec`
+    /// describes — the v2 `register_index` named-shortcut check: the
+    /// payload `content_hash` only covers series/labels, so a client
+    /// re-registering a known name under a *different* measure needs
+    /// this signal (`measure_drift` in the reply) to know the served
+    /// index would search the wrong family.
+    pub fn index_matches_spec(&self, index: &Index, mspec: &MeasureSpec) -> Result<bool> {
+        use crate::measures::sakoe_chiba::SakoeChibaDtw;
+        // a z-normalized index (CLI `index save --znorm`, warm-started
+        // here) evaluates normalized series — never what a plain spec
+        // asks for (wire registrations themselves never z-normalize)
+        let plain_banded = index.loc.is_none() && !index.znormalized;
+        Ok(match mspec {
+            MeasureSpec::Dtw => plain_banded && index.band == usize::MAX,
+            MeasureSpec::BandedDtw { band_cells } => plain_banded && index.band == *band_cells,
+            MeasureSpec::SakoeChiba { band_pct } => {
+                plain_banded && index.band == SakoeChibaDtw::new(*band_pct).band_for(index.t)
+            }
+            MeasureSpec::SpDtw { grid } => match &index.loc {
+                Some(stored) => {
+                    let want = CoordinatorGrids(self).resolve(grid)?;
+                    **stored == *want
+                }
+                None => false,
+            },
+            // not a searchable family: can never match an index
+            _ => false,
+        })
     }
 
     /// Register a prebuilt similarity-search [`Index`] and get a stable
@@ -315,8 +594,9 @@ impl Coordinator {
     /// Resolve a named index to `(key, loaded_from_disk)` — the cheap
     /// pre-check that lets `register_index` callers skip a rebuild when
     /// a warm-started (or earlier in-session) index already holds the
-    /// name.  Also refreshes the name's LRU recency, protecting
-    /// actively served indexes from store eviction.
+    /// name.  Also refreshes the name's LRU recency — in memory and,
+    /// when a store is configured, in the store manifest, so the
+    /// eviction order survives a coordinator restart.
     pub fn lookup_index_named(&self, name: &str) -> Option<(IndexKey, bool)> {
         let mut reg = self.indexes.lock().unwrap();
         let key = reg.key_by_name(name)?;
@@ -324,7 +604,24 @@ impl Coordinator {
             .get_entry(key)
             .map(|e| e.loaded_from_disk)
             .unwrap_or(false);
+        // If the name is already most-recently-used the touch changes
+        // nothing, in memory or on disk — skip the manifest rewrite
+        // entirely (the common case of a hot index being looked up
+        // repeatedly; every actual reorder is mirrored to disk, so the
+        // two orders stay in lockstep).
+        let already_mru = reg.lru_names().last().map(String::as_str) == Some(name);
         reg.touch(name);
+        // Persist the recency bump (registry lock serializes the
+        // manifest read-modify-write, like the save path).  A failed
+        // touch only costs restart-recency — warn, don't fail the
+        // lookup.
+        if !already_mru {
+            if let Some(dir) = &self.cfg.index_store {
+                if let Err(e) = touch_index_artifact(dir, name) {
+                    eprintln!("warning: could not persist LRU recency for '{name}': {e}");
+                }
+            }
+        }
         Some((key, loaded))
     }
 
@@ -333,7 +630,7 @@ impl Coordinator {
             .lock()
             .unwrap()
             .get(key)
-            .ok_or_else(|| Error::coordinator(format!("unknown index key {key:?}")))
+            .ok_or_else(|| Error::not_found("index key", key.0.to_string()))
     }
 
     /// Submit a k-NN search against a registered index.  Runs on the
@@ -348,14 +645,14 @@ impl Coordinator {
     ) -> Result<SearchTicket> {
         let index = self.index(key)?;
         if query.len() != index.t {
-            return Err(Error::coordinator(format!(
+            return Err(Error::config(format!(
                 "query length {} != indexed length {}",
                 query.len(),
                 index.t
             )));
         }
         if k == 0 {
-            return Err(Error::coordinator("search k must be >= 1"));
+            return Err(Error::config("search k must be >= 1"));
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -393,14 +690,14 @@ impl Coordinator {
     ) -> Result<BatchSearchTicket> {
         let index = self.index(key)?;
         if queries.is_empty() {
-            return Err(Error::coordinator("batch search needs >= 1 query"));
+            return Err(Error::config("batch search needs >= 1 query"));
         }
         if k == 0 {
-            return Err(Error::coordinator("search k must be >= 1"));
+            return Err(Error::config("search k must be >= 1"));
         }
         for q in queries {
             if q.len() != index.t {
-                return Err(Error::coordinator(format!(
+                return Err(Error::config(format!(
                     "query length {} != indexed length {}",
                     q.len(),
                     index.t
@@ -449,7 +746,7 @@ impl Coordinator {
         set: &LabeledSet,
     ) -> Result<GramTicket> {
         if set.is_empty() {
-            return Err(Error::coordinator("gram needs a non-empty train set"));
+            return Err(Error::config("gram needs a non-empty train set"));
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.gram_requests.fetch_add(1, Ordering::Relaxed);
@@ -477,7 +774,7 @@ impl Coordinator {
         let loc = self.grid(key)?;
         let t = loc.t;
         if x.len() != t || y.len() != t {
-            return Err(Error::coordinator(format!(
+            return Err(Error::config(format!(
                 "series length {}/{} != grid T={t}",
                 x.len(),
                 y.len()
@@ -519,7 +816,7 @@ impl Coordinator {
         let loc = self.grid(key)?;
         let t = loc.t;
         if x.len() != t || y.len() != t {
-            return Err(Error::coordinator("series length != grid T"));
+            return Err(Error::config("series length != grid T"));
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.router.route(KernelKind::Krdtw, t) {
@@ -641,6 +938,11 @@ impl Coordinator {
         snap
     }
 
+    /// Count a protocol-v2 envelope (called by the TCP server).
+    pub(crate) fn note_v2_request(&self) {
+        self.metrics.proto_v2_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Wait for every native job to finish (tests / clean shutdown).
     pub fn wait_native_idle(&self) {
         self.native_pool.wait_idle();
@@ -661,6 +963,30 @@ impl Drop for Coordinator {
     }
 }
 
+/// Operand length vs a resolved grid (SP measures assert on this; the
+/// boundary must reject instead).
+fn check_grid_len(loc: &LocMatrix, len: usize) -> Result<()> {
+    if len != loc.t {
+        Err(Error::config(format!(
+            "series length {len} != grid T={}",
+            loc.t
+        )))
+    } else {
+        Ok(())
+    }
+}
+
+/// Operand length vs a registered measure's requirement.
+fn check_required_len(entry: &MeasureEntry, len: usize) -> Result<()> {
+    match entry.required_len {
+        Some(t) if len != t => Err(Error::config(format!(
+            "series length {len} != measure '{}' grid T={t}",
+            entry.spec.name()
+        ))),
+        _ => Ok(()),
+    }
+}
+
 /// Store names become file names: keep them to a safe charset so a
 /// wire-supplied name can never escape the store directory.
 fn validate_index_name(name: &str) -> Result<()> {
@@ -673,7 +999,9 @@ fn validate_index_name(name: &str) -> Result<()> {
     if ok {
         Ok(())
     } else {
-        Err(Error::coordinator(format!(
+        // a request defect, not a lifecycle failure: the wire must map
+        // this to `bad_request`, not the retryable `unavailable`
+        Err(Error::config(format!(
             "invalid index name '{name}' (use 1-64 chars of [A-Za-z0-9._-], not starting with '.')"
         )))
     }
@@ -755,6 +1083,11 @@ fn enforce_store_budget(
 /// lists.  Files that fail validation (truncated, corrupt checksum,
 /// version skew, dimension mismatch vs the manifest) are skipped with a
 /// warning and counted — a bad file must never be served.
+///
+/// Entries are registered in ascending `last_used` order (the recency
+/// the previous process persisted into the manifest), so the in-memory
+/// LRU order — and therefore the store's eviction order — survives the
+/// restart instead of resetting to manifest file order.
 fn warm_start_indexes(dir: &std::path::Path, reg: &mut IndexRegistry, metrics: &Metrics) {
     if !dir.join("manifest.json").exists() {
         return; // fresh store: nothing persisted yet
@@ -766,7 +1099,10 @@ fn warm_start_indexes(dir: &std::path::Path, reg: &mut IndexRegistry, metrics: &
             return;
         }
     };
-    for entry in &manifest.indexes {
+    let mut ordered: Vec<&crate::runtime::IndexArtifact> = manifest.indexes.iter().collect();
+    // stable: entries without a recency stamp keep manifest order
+    ordered.sort_by_key(|e| e.last_used);
+    for entry in ordered {
         match persist::load_index(&entry.path) {
             Ok(index) if index.t == entry.length && index.len() == entry.count => {
                 reg.insert_named(&entry.name, Arc::new(index), true);
@@ -1156,6 +1492,129 @@ mod tests {
         let key = c.register_grid(LocMatrix::full(4)).unwrap();
         let x = TimeSeries::new(0, vec![0.0; 5]);
         assert!(c.submit_spdtw(key, &x, &x).is_err());
+    }
+
+    #[test]
+    fn register_measure_and_generic_dist_kernel_submit() {
+        use crate::measures::kga::Kga;
+        use crate::measures::krdtw::Krdtw;
+        let c = coord();
+        let x = TimeSeries::new(0, (0..8).map(|i| i as f64).collect());
+        let y = TimeSeries::new(0, (0..8).map(|i| (i as f64) * 0.5).collect());
+
+        // spec-submitted distances match direct evaluation bitwise
+        let spec_dtw = MeasureSpec::Dtw;
+        let got = c.submit_dist_spec(&spec_dtw, &x, &y).unwrap().wait().unwrap();
+        let direct = crate::measures::dtw::Dtw.dist(&x, &y);
+        assert_eq!(got.value.to_bits(), direct.value.to_bits());
+        assert_eq!(got.visited_cells, direct.visited_cells);
+
+        // registered-grid SP-DTW through the generic path equals the
+        // dedicated submit_spdtw path
+        let key = c.register_grid(LocMatrix::corridor(8, 2)).unwrap();
+        let spec_sp = MeasureSpec::SpDtw { grid: GridSpec::Registered { key: key.0 } };
+        let a = c.submit_dist_spec(&spec_sp, &x, &y).unwrap().wait().unwrap();
+        let b = c.submit_spdtw(key, &x, &y).unwrap().wait().unwrap();
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+
+        // inline corridor grid resolves without any registry entry
+        let spec_inline = MeasureSpec::SpDtw { grid: GridSpec::Corridor { t: 8, band: 2 } };
+        let i = c.submit_dist_spec(&spec_inline, &x, &y).unwrap().wait().unwrap();
+        assert_eq!(i.value.to_bits(), a.value.to_bits());
+
+        // kernels: generic kernel op matches direct log_k; dist on a
+        // kernel spec is the normalized distance (0 on self)
+        let spec_k = MeasureSpec::Krdtw { nu: 0.5, band_cells: None };
+        let kk = c.submit_kernel_spec(&spec_k, &x, &y).unwrap().wait().unwrap();
+        let kd = Krdtw::new(0.5).log_kernel(&x.values, &y.values);
+        assert_eq!(kk.value.to_bits(), kd.value.to_bits());
+        let dd = c.submit_dist_spec(&spec_k, &x, &x).unwrap().wait().unwrap();
+        assert!(dd.value.abs() < 1e-9);
+
+        // registered measures answer identically to their specs
+        let mkey = c.register_measure(&spec_k).unwrap();
+        let via_key = c.submit_kernel_key(mkey, &x, &y).unwrap().wait().unwrap();
+        assert_eq!(via_key.value.to_bits(), kk.value.to_bits());
+        let gkey = c
+            .register_measure(&MeasureSpec::Kga { nu: 0.5, band_cells: Some(3) })
+            .unwrap();
+        let kga = c.submit_kernel_key(gkey, &x, &y).unwrap().wait().unwrap();
+        assert_eq!(
+            kga.value.to_bits(),
+            Kga::with_band(0.5, 3).log_kernel(&x.values, &y.values).value.to_bits()
+        );
+        c.wait_native_idle();
+        assert_eq!(c.metrics().measures_registered, 2);
+
+        // typed rejections at the boundary, not asserts in the pool
+        let short = TimeSeries::new(0, vec![1.0; 3]);
+        assert!(c.submit_dist_spec(&spec_sp, &short, &short).is_err()); // grid len
+        assert!(c.submit_dist_spec(&spec_k, &x, &short).is_err()); // unequal
+        assert!(c.submit_kernel_spec(&MeasureSpec::Dtw, &x, &y).is_err()); // not a kernel
+        assert!(c.submit_kernel_key(MeasureKey(99), &x, &y).is_err()); // unknown key
+        assert!(c
+            .register_measure(&MeasureSpec::SpDtw {
+                grid: GridSpec::Registered { key: 404 }
+            })
+            .is_err());
+        assert!(c
+            .register_measure(&MeasureSpec::Krdtw { nu: -1.0, band_cells: None })
+            .is_err());
+        let dkey = c.register_measure(&MeasureSpec::Euclidean).unwrap();
+        assert!(c.submit_kernel_key(dkey, &x, &y).is_err()); // dist-only entry
+    }
+
+    #[test]
+    fn measure_registry_is_bounded() {
+        let c = coord();
+        for _ in 0..MAX_REGISTERED_MEASURES {
+            c.register_measure(&MeasureSpec::Euclidean).unwrap();
+        }
+        let err = c.register_measure(&MeasureSpec::Euclidean).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert!(err.to_string().contains("registry full"));
+    }
+
+    #[test]
+    fn store_lru_recency_survives_restart() {
+        use crate::data::synthetic;
+        let store = std::env::temp_dir().join(format!("spdtw_lru_restart_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let ds = synthetic::generate_scaled("CBF", 5, 6, 2).unwrap();
+        let idx = || Index::build(&ds.train, 2, 1);
+
+        let probe = std::env::temp_dir()
+            .join(format!("spdtw_lru_restart_probe_{}.spix", std::process::id()));
+        persist::save_index(&idx(), &probe).unwrap();
+        let one = std::fs::metadata(&probe).unwrap().len();
+        std::fs::remove_file(&probe).ok();
+
+        let mut cfg = CoordinatorConfig::default();
+        cfg.index_store = Some(store.clone());
+        {
+            // session 1: register a then b, then touch a — making b the
+            // LRU entry, persisted into the manifest
+            let c = Coordinator::start(cfg.clone(), None).unwrap();
+            c.register_index_persistent("a", idx()).unwrap();
+            c.register_index_persistent("b", idx()).unwrap();
+            c.lookup_index_named("a").unwrap();
+        }
+
+        // session 2 (restart): with the pre-fix manifest-order reset,
+        // 'a' would be evicted here; persisted recency must evict 'b'.
+        cfg.index_store_max_bytes = Some(2 * one + one / 2);
+        let c2 = Coordinator::start(cfg, None).unwrap();
+        c2.register_index_persistent("c", idx()).unwrap();
+        assert_eq!(c2.metrics().index_evictions, 1);
+        assert!(
+            store.join("a.spix").exists(),
+            "recently-used index evicted: LRU order did not survive the restart"
+        );
+        assert!(!store.join("b.spix").exists(), "stale index must be the one evicted");
+        assert!(store.join("c.spix").exists());
+        let m = Manifest::load(&store).unwrap();
+        assert!(m.find_index("b").is_none() && m.find_index("a").is_some());
+        std::fs::remove_dir_all(&store).ok();
     }
 
     #[test]

@@ -2,7 +2,61 @@
 //! per line in, one JSON object per line out.  Used by the serving demo
 //! (`examples/serve_pjrt.rs`) and the runtime integration tests.
 //!
-//! Operations:
+//! ## Protocol v2 (envelope)
+//!
+//! A request carrying `"proto": 2` opts into the versioned envelope:
+//!
+//! ```json
+//! {"proto":2, "id":"req-7", "op":"dist",
+//!  "measure":{"kind":"sakoe_chiba","band_pct":10}, "x":[...], "y":[...]}
+//! ```
+//!
+//! * `proto` — protocol version.  Absent or `1` = the legacy bare-op
+//!   protocol below; `2` = this envelope; anything else is rejected
+//!   with code `unsupported_proto`.
+//! * `id` — optional, any JSON value; echoed verbatim in the reply
+//!   (success or error), so pipelined clients can match responses.
+//! * typed error codes — every error reply is
+//!   `{"ok":false,"error":"<human message>","code":"<machine code>"}`.
+//!   The code table lives on [`crate::error::Error::code`] (`bad_json`,
+//!   `bad_request`, `bad_input`, `unknown_op`, `not_found`,
+//!   `unavailable`, `internal`), plus one wire-only code synthesized
+//!   here in dispatch: `unsupported_proto` for a `proto` other than
+//!   1/2.
+//!
+//! The generic v2 ops reach **every measure in the family** through one
+//! serializable `measure` object (see `measures::spec` for the JSON
+//! shape) or a key previously returned by `register_measure`:
+//!
+//! ```json
+//! {"proto":2,"op":"register_measure","measure":{"kind":"krdtw","nu":0.5}}
+//!     // -> {"ok":true,"measure":0,"kernel":true,"name":"Krdtw"}
+//! {"proto":2,"op":"dist","measure":{"kind":"dtw"},"x":[...],"y":[...]}
+//! {"proto":2,"op":"dist","measure":0,"x":[...],"y":[...]}
+//!     // -> {"ok":true,"value":...,"cells":...,"backend":"native"|"pjrt"}
+//! {"proto":2,"op":"kernel","measure":{"kind":"kga","nu":0.5},"x":[...],"y":[...]}
+//!     // -> {"ok":true,"log_k":...,"cells":...,"backend":...}
+//! ```
+//!
+//! `dist` on a kernel measure returns the normalized-kernel distance;
+//! `kernel` on a distance measure is a `bad_request`.  SP measures over
+//! a `{"kind":"registered","key":G}` grid keep the PJRT batch routing
+//! of the dedicated v1 ops.  v2 `register_index` additionally accepts
+//! `"measure"` (a searchable spec: `dtw`, `banded_dtw`, `sakoe_chiba`,
+//! or `spdtw`) in place of the v1 `"band"` parameter; when a *named*
+//! registration is served from the registry without a rebuild, the
+//! reply's `measure_drift` flag says whether the stored index actually
+//! evaluates the requested measure family (the payload `content_hash`
+//! cannot detect that kind of mismatch).
+//!
+//! Series values must be finite: any NaN/±inf in `x`, `y`, `series` or
+//! `xs` is rejected with code `bad_input` before it can reach a DP
+//! kernel (on both protocol versions).
+//!
+//! ## Protocol v1 (bare ops, served verbatim)
+//!
+//! Requests without `proto` keep answering exactly as before:
+//!
 //! ```json
 //! {"op":"ping"}
 //! {"op":"info"}
@@ -26,6 +80,13 @@
 //! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
+//!
+//! Every v1 op is also valid inside a v2 envelope; the per-measure v1
+//! ops (`spdtw`, `spkrdtw`) are kept as thin compatibility wrappers
+//! over the same submit paths the generic `dist`/`kernel` ops use.
+//! The `code` field on error replies and the `id` echo are additive —
+//! v1 clients that ignore unknown fields see identical behavior
+//! (golden-tested in `rust/tests/integration_protocol.rs`).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -33,10 +94,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 
-use crate::coordinator::state::{GridKey, IndexKey};
+use crate::coordinator::state::{GridKey, IndexKey, MeasureKey};
 use crate::coordinator::Coordinator;
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::Result;
+use crate::measures::spec::MeasureSpec;
 use crate::search::index::content_hash_of;
 use crate::search::{Cascade, Index};
 use crate::sparse::LocMatrix;
@@ -114,13 +176,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match dispatch(&line, coord, stop) {
-            Ok(json) => json,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(e.to_string())),
-            ]),
-        };
+        let reply = dispatch(&line, coord, stop);
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -154,13 +210,98 @@ fn neighbors_json(out: &crate::coordinator::request::SearchOutcome) -> Json {
 fn parse_series(json: &Json, field: &str) -> Result<TimeSeries> {
     let arr = json.req_arr(field)?;
     let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
-    values
-        .map(|v| TimeSeries::new(0, v))
-        .ok_or_else(|| crate::error::Error::config(format!("'{field}' must be numbers")))
+    let values = values
+        .ok_or_else(|| crate::error::Error::config(format!("'{field}' must be numbers")))?;
+    check_finite(&values, field)?;
+    Ok(TimeSeries::new(0, values))
 }
 
-fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> {
-    let req = Json::parse(line)?;
+/// NaN/±inf values would flow straight into the DP kernels (and poison
+/// every distance they touch); reject them at the wire with the typed
+/// `bad_input` class instead.
+fn check_finite(values: &[f64], field: &str) -> Result<()> {
+    if values.iter().all(|v| v.is_finite()) {
+        Ok(())
+    } else {
+        Err(crate::error::Error::data(format!(
+            "'{field}' contains non-finite values (NaN/inf are not valid series values)"
+        )))
+    }
+}
+
+/// The v2 `measure` parameter: an inline spec object or a key returned
+/// by `register_measure`.
+enum MeasureSel {
+    Spec(MeasureSpec),
+    Key(MeasureKey),
+}
+
+fn parse_measure_sel(req: &Json) -> Result<MeasureSel> {
+    match req.get("measure") {
+        Some(obj @ Json::Obj(_)) => Ok(MeasureSel::Spec(MeasureSpec::from_json(obj)?)),
+        Some(Json::Num(_)) => Ok(MeasureSel::Key(MeasureKey(req.req_usize("measure")? as u64))),
+        _ => Err(crate::error::Error::config(
+            "missing 'measure' (a spec object or a register_measure key)",
+        )),
+    }
+}
+
+/// Build an error reply: `{"ok":false,"error":...,"code":...}` plus the
+/// echoed `id` when the request carried one.
+fn error_reply(e: &crate::error::Error, id: Option<&Json>) -> Json {
+    let mut reply = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(e.to_string())),
+        ("code", Json::str(e.code())),
+    ]);
+    attach_id(&mut reply, id);
+    reply
+}
+
+fn attach_id(reply: &mut Json, id: Option<&Json>) {
+    if let (Json::Obj(fields), Some(id)) = (reply, id) {
+        fields.insert("id".to_string(), id.clone());
+    }
+}
+
+/// Parse one request line and serve it, on either protocol version.
+/// Always produces a reply object — malformed lines get a typed error
+/// reply, never a disconnect.
+fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => return error_reply(&e, None),
+    };
+    let id = req.get("id").cloned();
+    match req.get("proto").map(|p| (p.as_usize(), p)) {
+        None => {}
+        Some((Some(1), _)) => {}
+        Some((Some(2), _)) => coord.note_v2_request(),
+        Some((_, p)) => {
+            let shown = p.to_string();
+            let mut reply = Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::str(format!(
+                        "unsupported protocol version {shown} (this server speaks 1 and 2)"
+                    )),
+                ),
+                ("code", Json::str("unsupported_proto")),
+            ]);
+            attach_id(&mut reply, id.as_ref());
+            return reply;
+        }
+    }
+    let mut reply = match handle_op(&req, coord, stop) {
+        Ok(json) => json,
+        Err(e) => return error_reply(&e, id.as_ref()),
+    };
+    attach_id(&mut reply, id.as_ref());
+    reply
+}
+
+fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> {
     let op = req.req_str("op")?;
     match op {
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
@@ -185,8 +326,8 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
         }
         "spdtw" => {
             let key = GridKey(req.req_usize("grid")? as u64);
-            let x = parse_series(&req, "x")?;
-            let y = parse_series(&req, "y")?;
+            let x = parse_series(req, "x")?;
+            let y = parse_series(req, "y")?;
             let r = coord.submit_spdtw(key, &x, &y)?;
             coord.flush();
             let out = r.wait()?;
@@ -200,8 +341,8 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
         "spkrdtw" => {
             let key = GridKey(req.req_usize("grid")? as u64);
             let nu = req.req_f64("nu")?;
-            let x = parse_series(&req, "x")?;
-            let y = parse_series(&req, "y")?;
+            let x = parse_series(req, "x")?;
+            let y = parse_series(req, "y")?;
             let r = coord.submit_spkrdtw(key, nu, &x, &y)?;
             coord.flush();
             let out = r.wait()?;
@@ -218,6 +359,12 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 // reject bad names before any parsing or O(n·T) build
                 super::validate_index_name(name)?;
             }
+            // parse + validate the optional v2 measure spec up front so
+            // an invalid spec is rejected even on the named shortcut
+            let mspec = match req.get("measure") {
+                Some(mjson) => Some(MeasureSpec::from_json(mjson)?),
+                None => None,
+            };
             let band = req.get("band").and_then(Json::as_usize).unwrap_or(usize::MAX);
             let arr = req.req_arr("series")?;
             if arr.is_empty() {
@@ -248,6 +395,7 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 let vals = vals.ok_or_else(|| {
                     crate::error::Error::config("'series' must be arrays of numbers")
                 })?;
+                check_finite(&vals, "series")?;
                 series.push(TimeSeries::new(labels[i], vals));
             }
             let t0 = series[0].len();
@@ -272,18 +420,34 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                         series.iter().map(|s| s.values.as_slice()),
                     );
                     let stored_hash = stored.content_hash();
-                    return Ok(Json::obj(vec![
+                    let mut fields = vec![
                         ("ok", Json::Bool(true)),
                         ("index", Json::num(key.0 as f64)),
                         ("memory_bytes", Json::num(stored.memory_bytes() as f64)),
                         ("loaded_from_disk", Json::Bool(loaded)),
                         ("content_hash", Json::str(format!("{stored_hash:016x}"))),
                         ("drift", Json::Bool(stored_hash != submitted)),
-                    ]));
+                    ];
+                    // content_hash only covers the payload — a request
+                    // naming a *different measure family* than the
+                    // stored index needs its own drift signal
+                    if let Some(spec) = &mspec {
+                        fields.push((
+                            "measure_drift",
+                            Json::Bool(!coord.index_matches_spec(&stored, spec)?),
+                        ));
+                    }
+                    return Ok(Json::obj(fields));
                 }
             }
             let train = LabeledSet::new(series);
-            let index = Index::build(&train, band, coord.config().workers);
+            // v2: an optional "measure" spec picks the index family
+            // (dtw / banded_dtw / sakoe_chiba / spdtw over any grid
+            // reference); the v1 "band" parameter stays the default.
+            let index = match &mspec {
+                Some(spec) => coord.build_index_from_spec(&train, spec)?,
+                None => Index::build(&train, band, coord.config().workers),
+            };
             let bytes = index.memory_bytes();
             let hash = index.content_hash();
             let key = match name {
@@ -302,8 +466,8 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
         "search" => {
             let key = IndexKey(req.req_usize("index")? as u64);
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
-            let x = parse_series(&req, "x")?;
-            let cascade = parse_cascade(&req)?;
+            let x = parse_series(req, "x")?;
+            let cascade = parse_cascade(req)?;
             let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -320,7 +484,7 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
             // other client's in-flight request
             let key = IndexKey(req.req_usize("index")? as u64);
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
-            let cascade = parse_cascade(&req)?;
+            let cascade = parse_cascade(req)?;
             let arr = req.req_arr("xs")?;
             let mut queries = Vec::with_capacity(arr.len());
             for row in arr {
@@ -331,6 +495,7 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 let vals = vals.ok_or_else(|| {
                     crate::error::Error::config("'xs' must be arrays of numbers")
                 })?;
+                check_finite(&vals, "xs")?;
                 queries.push(TimeSeries::new(0, vals));
             }
             let outs = coord.submit_batch_search(key, &queries, k, cascade)?.wait()?;
@@ -345,6 +510,62 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 ("ok", Json::Bool(true)),
                 ("queries", Json::num(outs.len() as f64)),
                 ("results", results),
+            ]))
+        }
+        "register_measure" => {
+            // bind once at the boundary: parameters validated, grids
+            // resolved; later dist/kernel ops reference the key
+            let mspec = match parse_measure_sel(req)? {
+                MeasureSel::Spec(spec) => spec,
+                MeasureSel::Key(_) => {
+                    return Err(crate::error::Error::config(
+                        "'measure' must be a spec object here, not a key",
+                    ))
+                }
+            };
+            let key = coord.register_measure(&mspec)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("measure", Json::num(key.0 as f64)),
+                ("kernel", Json::Bool(mspec.is_kernel())),
+                ("name", Json::str(mspec.name())),
+            ]))
+        }
+        "dist" => {
+            // the generic pairwise op: any measure in the family, as an
+            // inline spec or a registered key; kernel measures answer
+            // with the normalized-kernel distance
+            let x = parse_series(req, "x")?;
+            let y = parse_series(req, "y")?;
+            let ticket = match parse_measure_sel(req)? {
+                MeasureSel::Spec(spec) => coord.submit_dist_spec(&spec, &x, &y)?,
+                MeasureSel::Key(key) => coord.submit_dist_key(key, &x, &y)?,
+            };
+            coord.flush(); // PJRT-routed specs sit in a partial batch
+            let out = ticket.wait()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("value", Json::num(out.value)),
+                ("cells", Json::num(out.visited_cells as f64)),
+                ("backend", Json::str(out.backend.as_str())),
+            ]))
+        }
+        "kernel" => {
+            // log K(x, y) under any kernel measure; distance-only
+            // measures are a bad_request
+            let x = parse_series(req, "x")?;
+            let y = parse_series(req, "y")?;
+            let ticket = match parse_measure_sel(req)? {
+                MeasureSel::Spec(spec) => coord.submit_kernel_spec(&spec, &x, &y)?,
+                MeasureSel::Key(key) => coord.submit_kernel_key(key, &x, &y)?,
+            };
+            coord.flush();
+            let out = ticket.wait()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("log_k", Json::num(out.value)),
+                ("cells", Json::num(out.visited_cells as f64)),
+                ("backend", Json::str(out.backend.as_str())),
             ]))
         }
         "metrics" => {
@@ -371,6 +592,11 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> 
                 ),
                 ("native_queue_depth", Json::num(s.native_queue_depth as f64)),
                 ("index_evictions", Json::num(s.index_evictions as f64)),
+                (
+                    "measures_registered",
+                    Json::num(s.measures_registered as f64),
+                ),
+                ("proto_v2_requests", Json::num(s.proto_v2_requests as f64)),
                 ("mean_latency_us", Json::num(s.mean_latency_us)),
             ]))
         }

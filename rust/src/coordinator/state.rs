@@ -1,13 +1,15 @@
-//! Model store: learned LOC grids and search indexes registered with
-//! the coordinator.  Each gets a stable key; when a PJRT engine is
-//! attached, a grid's weight (f32, SP-DTW) and mask (f64, SP-K_rdtw)
-//! planes are uploaded once at registration time and stay
-//! device-resident.  Search indexes are always host-resident (the
-//! cascade is branchy, pointer-light CPU work).
+//! Model store: learned LOC grids, search indexes and bound measures
+//! registered with the coordinator.  Each gets a stable key; when a
+//! PJRT engine is attached, a grid's weight (f32, SP-DTW) and mask
+//! (f64, SP-K_rdtw) planes are uploaded once at registration time and
+//! stay device-resident.  Search indexes and measures are always
+//! host-resident (the cascade is branchy, pointer-light CPU work).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::measures::spec::MeasureSpec;
+use crate::measures::{KernelMeasure, Measure};
 use crate::search::Index;
 use crate::sparse::LocMatrix;
 
@@ -168,9 +170,84 @@ impl IndexRegistry {
     }
 }
 
+/// Opaque registered-measure identifier (the wire's `register_measure`
+/// reply; referenced by number in later `dist`/`kernel` ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MeasureKey(pub u64);
+
+/// What a [`MeasureSpec`] bound to: a distance or a kernel object with
+/// its grids resolved once at registration time.
+pub enum BuiltMeasure {
+    Dist(Arc<dyn Measure>),
+    Kernel(Arc<dyn KernelMeasure>),
+}
+
+/// A registered measure: the originating spec (kept for routing — an
+/// SP-DTW spec over a registered grid still goes through the PJRT
+/// path) plus the pre-bound object and its operand-length requirement.
+pub struct MeasureEntry {
+    pub spec: MeasureSpec,
+    pub built: BuiltMeasure,
+    /// Required operand length (grid-bound measures); `None` = any
+    /// length the measure itself accepts.
+    pub required_len: Option<usize>,
+}
+
+/// Registry of measures bound via `register_measure`.
+#[derive(Default)]
+pub struct MeasureRegistry {
+    next: u64,
+    entries: HashMap<u64, Arc<MeasureEntry>>,
+}
+
+impl MeasureRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, entry: MeasureEntry) -> MeasureKey {
+        let key = self.next;
+        self.next += 1;
+        self.entries.insert(key, Arc::new(entry));
+        MeasureKey(key)
+    }
+
+    pub fn get(&self, key: MeasureKey) -> Option<Arc<MeasureEntry>> {
+        self.entries.get(&key.0).map(Arc::clone)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn measure_keys_are_unique_and_resolvable() {
+        let mut r = MeasureRegistry::new();
+        let a = r.insert(MeasureEntry {
+            spec: MeasureSpec::Dtw,
+            built: BuiltMeasure::Dist(Arc::new(crate::measures::dtw::Dtw)),
+            required_len: None,
+        });
+        let b = r.insert(MeasureEntry {
+            spec: MeasureSpec::Krdtw { nu: 1.0, band_cells: None },
+            built: BuiltMeasure::Kernel(Arc::new(crate::measures::krdtw::Krdtw::new(1.0))),
+            required_len: Some(16),
+        });
+        assert_ne!(a, b);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(a).unwrap().spec, MeasureSpec::Dtw);
+        assert_eq!(r.get(b).unwrap().required_len, Some(16));
+        assert!(r.get(MeasureKey(99)).is_none());
+    }
 
     #[test]
     fn index_keys_are_unique_and_resolvable() {

@@ -20,6 +20,10 @@ pub enum Error {
     Config(String),
     /// Unknown dataset, measure or experiment name.
     Unknown { kind: &'static str, name: String },
+    /// A referenced entity (registered grid / index / measure key or
+    /// name) does not exist — the wire's `not_found` class, distinct
+    /// from malformed requests.
+    NotFound { kind: &'static str, name: String },
     /// Data format violations (UCR parsing, length mismatches...).
     Data(String),
     /// PJRT runtime errors (compile, execute, artifact lookup).
@@ -37,6 +41,7 @@ impl fmt::Display for Error {
             Error::Json { msg, offset } => write!(f, "json error at byte {offset}: {msg}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Unknown { kind, name } => write!(f, "unknown {kind}: '{name}'"),
+            Error::NotFound { kind, name } => write!(f, "unknown {kind}: '{name}'"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
@@ -66,5 +71,42 @@ impl Error {
     }
     pub fn coordinator(msg: impl Into<String>) -> Self {
         Error::Coordinator(msg.into())
+    }
+    pub fn not_found(kind: &'static str, name: impl Into<String>) -> Self {
+        Error::NotFound {
+            kind,
+            name: name.into(),
+        }
+    }
+
+    /// Stable machine-readable error code — the `code` field of every
+    /// TCP error reply (wire protocol v2; also attached to v1 replies,
+    /// additively).  The mapping is part of the protocol contract and
+    /// asserted by `tests/integration_protocol.rs`:
+    ///
+    /// | code | class |
+    /// |------|-------|
+    /// | `bad_json` | the request line was not valid JSON |
+    /// | `bad_request` | missing/mistyped fields, invalid parameters |
+    /// | `bad_input` | data violations (non-finite series values, ragged shapes) |
+    /// | `unknown_op` | unrecognized `op` |
+    /// | `not_found` | referenced grid/index/measure does not exist |
+    /// | `unavailable` | coordinator lifecycle failures (shut down, worker gone) |
+    /// | `internal` | IO / runtime / numeric failures |
+    ///
+    /// One additional code exists only at the wire layer:
+    /// `unsupported_proto` (a `proto` value other than 1/2) is
+    /// synthesized by the server's dispatch before any `Error` is
+    /// constructed, so it never flows through this method.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Json { .. } => "bad_json",
+            Error::Config(_) => "bad_request",
+            Error::Data(_) => "bad_input",
+            Error::Unknown { kind: "op", .. } => "unknown_op",
+            Error::Unknown { .. } | Error::NotFound { .. } => "not_found",
+            Error::Coordinator(_) => "unavailable",
+            Error::Io(_) | Error::Runtime(_) | Error::Numeric(_) => "internal",
+        }
     }
 }

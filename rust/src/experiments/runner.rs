@@ -12,13 +12,9 @@ use crate::config::ExperimentConfig;
 use crate::data::synthetic;
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::measures::corr::CorrDist;
-use crate::measures::daco::Daco;
-use crate::measures::dtw::Dtw;
-use crate::measures::euclidean::{Euclidean, GaussianEd};
-use crate::measures::krdtw::Krdtw;
+use crate::measures::euclidean::GaussianEd;
 use crate::measures::sakoe_chiba::{band_cells, SakoeChibaDtw};
-use crate::measures::spkrdtw::SpKrdtw;
+use crate::measures::spec::{GridResolver, GridSpec, MeasureSpec, TrainGridResolver};
 use crate::search::{Cascade, Index};
 use crate::sparse::learn::learn_occupancy_grid;
 use crate::sparse::OccupancyGrid;
@@ -123,16 +119,32 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
     let mut cells = BTreeMap::new();
     let mut prune = BTreeMap::new();
 
-    // ---- behavior-based + lock-step baselines -----------------------------
-    err_1nn.insert("CORR".into(), classify_1nn(&CorrDist, &ds.train, &ds.test, threads).error_rate);
-    err_1nn.insert(
-        "DACO".into(),
-        classify_1nn(&Daco::new(tuned.daco_lags), &ds.train, &ds.test, threads).error_rate,
-    );
-    err_1nn.insert("Ed".into(), classify_1nn(&Euclidean, &ds.train, &ds.test, threads).error_rate);
+    // Every measure is constructed through the unified MeasureSpec
+    // factory; the resolver reuses the tuned occupancy grid so
+    // `learned` grid references do not re-learn it per spec.
+    let resolver = TrainGridResolver {
+        train: Some(&ds.train),
+        grid: Some(&tuned.grid),
+        threads,
+    };
+    let learned_w = GridSpec::Learned { theta: tuned.theta, gamma: tuned.gamma };
+    // kernel grids drop weights (mask semantics): gamma = 0 emits the
+    // same cell support with unit weights, i.e. exactly to_loc_mask()
+    let learned_m = GridSpec::Learned { theta: tuned.theta, gamma: 0.0 };
 
-    // ---- DTW family --------------------------------------------------------
-    err_1nn.insert("DTW".into(), classify_1nn(&Dtw, &ds.train, &ds.test, threads).error_rate);
+    // ---- behavior-based + lock-step baselines -----------------------------
+    for (label, spec) in [
+        ("CORR", MeasureSpec::Corr),
+        ("DACO", MeasureSpec::Daco { lags: tuned.daco_lags }),
+        ("Ed", MeasureSpec::Euclidean),
+        ("DTW", MeasureSpec::Dtw),
+    ] {
+        let m = spec.build_measure(&resolver)?;
+        err_1nn.insert(
+            label.into(),
+            classify_1nn(&*m, &ds.train, &ds.test, threads).error_rate,
+        );
+    }
     cells.insert("DTW".into(), (t * t) as u64);
 
     // DTW_sc and SP-DTW run through the index-backed search cascade:
@@ -143,73 +155,74 @@ pub fn evaluate_dataset(cfg: &ExperimentConfig, name: &str, with_svm: bool) -> R
     // no duplicate exhaustive evaluation of the test set.
     let sc = SakoeChibaDtw::new(tuned.band_pct);
     cells.insert("DTW_sc".into(), band_cells(t, sc.band_for(t)));
-    let sc_index = Arc::new(Index::build(&ds.train, sc.band_for(t), threads));
+    let sc_index = Arc::new(Index::build_from_spec(
+        &ds.train,
+        &MeasureSpec::SakoeChiba { band_pct: tuned.band_pct },
+        false,
+        &resolver,
+        threads,
+    )?);
     let (sc_eval, sc_stats) =
         classify_knn_indexed(&sc_index, Cascade::default(), &ds.test, 1, threads);
     err_1nn.insert("DTW_sc".into(), sc_eval.error_rate);
     prune.insert("DTW_sc".into(), sc_stats.prune_ratio());
 
-    let loc_w = tuned.grid.threshold(tuned.theta).to_loc(tuned.gamma);
-    cells.insert("SP-DTW".into(), loc_w.nnz() as u64);
-    let sp_index = Arc::new(Index::build_spdtw(&ds.train, Arc::new(loc_w), threads));
+    let sp_index = Arc::new(Index::build_from_spec(
+        &ds.train,
+        &MeasureSpec::SpDtw { grid: learned_w },
+        false,
+        &resolver,
+        threads,
+    )?);
+    cells.insert(
+        "SP-DTW".into(),
+        sp_index.loc.as_ref().map(|l| l.nnz()).unwrap_or(0) as u64,
+    );
     let (sp_eval, sp_stats) =
         classify_knn_indexed(&sp_index, Cascade::default(), &ds.test, 1, threads);
     err_1nn.insert("SP-DTW".into(), sp_eval.error_rate);
     prune.insert("SP-DTW".into(), sp_stats.prune_ratio());
 
     // ---- kernel family (via normalized Grams) ------------------------------
-    let krdtw = Krdtw::new(tuned.nu);
-    let cg = cross_gram(&krdtw, &ds.test, &ds.train, threads);
+    let krdtw = MeasureSpec::Krdtw { nu: tuned.nu, band_cells: None }.build_kernel(&resolver)?;
+    let cg = cross_gram(&*krdtw, &ds.test, &ds.train, threads);
     err_1nn.insert("Krdtw".into(), gram_1nn_error(&cg, &ds.test, &ds.train));
     cells.insert("Krdtw".into(), (t * t) as u64);
 
-    let loc_m = tuned.grid.threshold(tuned.theta).to_loc_mask();
-    cells.insert("SP-Krdtw".into(), loc_m.nnz() as u64);
-    let spk = SpKrdtw::new(loc_m, tuned.nu);
-    let cg = cross_gram(&spk, &ds.test, &ds.train, threads);
+    let spk_spec = MeasureSpec::SpKrdtw { nu: tuned.nu, grid: learned_m.clone() };
+    let spk = spk_spec.build_kernel(&resolver)?;
+    cells.insert(
+        "SP-Krdtw".into(),
+        resolver.resolve(&learned_m)?.nnz() as u64,
+    );
+    let cg = cross_gram(&*spk, &ds.test, &ds.train, threads);
     err_1nn.insert("SP-Krdtw".into(), gram_1nn_error(&cg, &ds.test, &ds.train));
 
     // ---- SVM (Table IV) -----------------------------------------------------
     let mut err_svm = BTreeMap::new();
     if with_svm {
         let params = SvmParams::default();
+        // the Gaussian-Ed kernel's nu comes from a data-dependent
+        // median heuristic, so it stays a direct construction
         let ed_nu = GaussianEd::median_heuristic(&ds.train);
         err_svm.insert(
             "Ed".into(),
             classify_svm(&GaussianEd::new(ed_nu), &ds.train, &ds.test, &params, threads, cfg.seed)
                 .error_rate,
         );
-        err_svm.insert(
-            "Krdtw".into(),
-            classify_svm(&Krdtw::new(tuned.nu), &ds.train, &ds.test, &params, threads, cfg.seed)
-                .error_rate,
-        );
         let sc_band = sc.band_for(t).max(1);
-        err_svm.insert(
-            "Krdtw_sc".into(),
-            classify_svm(
-                &Krdtw::with_band(tuned.nu, sc_band),
-                &ds.train,
-                &ds.test,
-                &params,
-                threads,
-                cfg.seed,
-            )
-            .error_rate,
-        );
-        let loc_m2 = tuned.grid.threshold(tuned.theta).to_loc_mask();
-        err_svm.insert(
-            "SP-Krdtw".into(),
-            classify_svm(
-                &SpKrdtw::new(loc_m2, tuned.nu),
-                &ds.train,
-                &ds.test,
-                &params,
-                threads,
-                cfg.seed,
-            )
-            .error_rate,
-        );
+        for (label, spec) in [
+            ("Krdtw", MeasureSpec::Krdtw { nu: tuned.nu, band_cells: None }),
+            ("Krdtw_sc", MeasureSpec::Krdtw { nu: tuned.nu, band_cells: Some(sc_band) }),
+            ("SP-Krdtw", MeasureSpec::SpKrdtw { nu: tuned.nu, grid: learned_m.clone() }),
+        ] {
+            let kernel = spec.build_kernel(&resolver)?;
+            err_svm.insert(
+                label.into(),
+                classify_svm(&*kernel, &ds.train, &ds.test, &params, threads, cfg.seed)
+                    .error_rate,
+            );
+        }
     }
 
     Ok(DatasetEval {

@@ -3,6 +3,7 @@
 //! ```text
 //! spdtw experiment <id|all> [opts]   regenerate paper tables/figures
 //! spdtw classify <dataset> [opts]    quick 1-NN run with one measure
+//! spdtw dist [opts]                  one pairwise distance/kernel under any measure
 //! spdtw search <dataset> [opts]      cascade k-NN search vs brute force
 //! spdtw index save <dataset> [opts]  build a search index and persist it
 //! spdtw index load <file>            reload + validate a persisted index
@@ -12,10 +13,17 @@
 //! spdtw info [opts]                  show artifact manifest + platform
 //! spdtw bench-backend [opts]         native vs PJRT parity + throughput
 //! ```
+//!
+//! Every command that takes a measure accepts either `--measure <name>`
+//! (the paper's names, parameterized by `--band/--nu/--theta/--gamma/
+//! --lags`) or `--measure-json '<spec>'` — the serializable
+//! `MeasureSpec` object shared with config files and TCP protocol v2
+//! (see `config` module docs for the shape).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use spdtw::classify::gram::{cross_gram, gram_1nn_error};
 use spdtw::classify::nn::{classify_1nn, classify_knn, classify_knn_indexed};
 use spdtw::config::cli::{usage, Args, OptSpec};
 use spdtw::config::{CoordinatorConfig, ExperimentConfig, SearchConfig};
@@ -23,13 +31,15 @@ use spdtw::coordinator::server::Server;
 use spdtw::coordinator::Coordinator;
 use spdtw::data::registry;
 use spdtw::data::synthetic;
+use spdtw::data::TimeSeries;
 use spdtw::error::{Error, Result};
 use spdtw::experiments;
-use spdtw::measures::dtw::{BandedDtw, Dtw};
-use spdtw::measures::euclidean::Euclidean;
-use spdtw::measures::sakoe_chiba::SakoeChibaDtw;
+use spdtw::measures::dtw::BandedDtw;
 use spdtw::measures::spdtw::SpDtw;
-use spdtw::measures::Measure;
+use spdtw::measures::spec::{
+    FixedGrid, GridResolver, GridSpec, InlineGrids, MeasureSpec, TrainGridResolver,
+};
+use spdtw::measures::{KernelMeasure, Measure};
 use spdtw::runtime::PjrtRuntime;
 use spdtw::search::{persist, Index};
 use spdtw::sparse::learn::learn_occupancy_grid;
@@ -48,10 +58,23 @@ fn opt_spec() -> Vec<OptSpec> {
             takes_value: true,
             help: "artifacts dir (default artifacts/)",
         },
-        OptSpec { name: "measure", takes_value: true, help: "classify: Ed|DTW|DTW_sc|SP-DTW" },
+        OptSpec {
+            name: "measure",
+            takes_value: true,
+            help: "measure name: Ed|CORR|DACO|DTW|DTW_sc|DTW_it|SP-DTW|Krdtw|SP-Krdtw|Kga",
+        },
+        OptSpec {
+            name: "measure-json",
+            takes_value: true,
+            help: "measure as a MeasureSpec JSON object (overrides --measure)",
+        },
         OptSpec { name: "band", takes_value: true, help: "Sakoe-Chiba band %% for DTW_sc" },
         OptSpec { name: "theta", takes_value: true, help: "SP-DTW threshold override" },
         OptSpec { name: "gamma", takes_value: true, help: "SP-DTW weight exponent (default 1)" },
+        OptSpec { name: "nu", takes_value: true, help: "kernel bandwidth nu (default 1)" },
+        OptSpec { name: "lags", takes_value: true, help: "DACO auto-correlation lags (default 10)" },
+        OptSpec { name: "x", takes_value: true, help: "dist: first series, comma-separated" },
+        OptSpec { name: "y", takes_value: true, help: "dist: second series, comma-separated" },
         OptSpec {
             name: "addr",
             takes_value: true,
@@ -176,6 +199,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "experiment" => cmd_experiment(&args),
         "classify" => cmd_classify(&args),
+        "dist" => cmd_dist(&args),
         "search" => cmd_search(&args),
         "index" => cmd_index(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -185,9 +209,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "help" | "--help" => {
             println!(
                 "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
-                 commands: experiment <id|all> | classify <dataset> | search <dataset> |\n\
-                 \x20         index save|load|inspect | gen-data <dataset> | serve | info |\n\
-                 \x20         bench-backend\n\n{}",
+                 commands: experiment <id|all> | classify <dataset> | dist |\n\
+                 \x20         search <dataset> | index save|load|inspect |\n\
+                 \x20         gen-data <dataset> | serve | info | bench-backend\n\n{}",
                 usage(&spec)
             );
             println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
@@ -212,6 +236,46 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     experiments::run(id, &cfg)
 }
 
+/// Resolve the measure a command asked for into a [`MeasureSpec`]:
+/// `--measure-json` takes a raw spec object; `--measure <name>` maps
+/// the paper's names plus the per-measure flags (`--band`, `--nu`,
+/// `--theta`, `--gamma`, `--lags`) onto the same typed spec.
+fn measure_spec_from_args(args: &Args, default: &str) -> Result<MeasureSpec> {
+    if let Some(text) = args.get("measure-json") {
+        if args.get("measure").is_some() {
+            return Err(Error::config(
+                "--measure and --measure-json are mutually exclusive",
+            ));
+        }
+        return MeasureSpec::from_json(&spdtw::util::json::Json::parse(text)?);
+    }
+    let name = args.get("measure").unwrap_or(default);
+    let nu = args.get_f64("nu")?.unwrap_or(1.0);
+    let theta = args.get_f64("theta")?.unwrap_or(0.0);
+    let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
+    let spec = match name {
+        "Ed" => MeasureSpec::Euclidean,
+        "CORR" => MeasureSpec::Corr,
+        "DACO" => MeasureSpec::Daco { lags: args.get_usize("lags")?.unwrap_or(10) },
+        "DTW" => MeasureSpec::Dtw,
+        "DTW_sc" => MeasureSpec::SakoeChiba { band_pct: args.get_f64("band")?.unwrap_or(10.0) },
+        "DTW_it" => MeasureSpec::Itakura,
+        "SP-DTW" => MeasureSpec::SpDtw { grid: GridSpec::Learned { theta, gamma } },
+        "Krdtw" => MeasureSpec::Krdtw { nu, band_cells: None },
+        // kernel grids drop weights (mask semantics): gamma = 0
+        "SP-Krdtw" => MeasureSpec::SpKrdtw { nu, grid: GridSpec::Learned { theta, gamma: 0.0 } },
+        "Kga" => MeasureSpec::Kga { nu, band_cells: None },
+        other => {
+            return Err(Error::Unknown {
+                kind: "measure",
+                name: other.to_string(),
+            })
+        }
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
 fn cmd_classify(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -220,33 +284,110 @@ fn cmd_classify(args: &Args) -> Result<()> {
     let cfg = build_cfg(args)?;
     let (cap_tr, cap_te) = cfg.caps();
     let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
-    let measure = args.get("measure").unwrap_or("DTW");
-    let m: Box<dyn Measure> = match measure {
-        "Ed" => Box::new(Euclidean),
-        "DTW" => Box::new(Dtw),
-        "DTW_sc" => Box::new(SakoeChibaDtw::new(args.get_f64("band")?.unwrap_or(10.0))),
-        "SP-DTW" => {
-            let grid = learn_occupancy_grid(&ds.train, cfg.threads);
-            let theta = args.get_f64("theta")?.unwrap_or(0.0);
-            let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
-            Box::new(SpDtw::new(grid.threshold(theta).to_loc(gamma)))
-        }
-        other => {
-            return Err(Error::Unknown {
-                kind: "measure",
-                name: other.to_string(),
-            })
-        }
+    let spec = measure_spec_from_args(args, "DTW")?;
+    let resolver = TrainGridResolver {
+        train: Some(&ds.train),
+        grid: None,
+        threads: cfg.threads,
     };
     let t0 = std::time::Instant::now();
-    let r = classify_1nn(m.as_ref(), &ds.train, &ds.test, cfg.threads);
+    let (error_rate, comparisons, cells) = if spec.is_kernel() {
+        // kernel measures rank by the normalized Gram: self-kernels are
+        // computed once per series (the experiments-runner protocol),
+        // not re-derived inside every pairwise distance
+        let kernel = spec.build_kernel(&resolver)?;
+        let cg = cross_gram(&*kernel, &ds.test, &ds.train, cfg.threads);
+        let err = gram_1nn_error(&cg, &ds.test, &ds.train);
+        (err, (ds.test.len() * ds.train.len()) as u64, cg.visited_cells)
+    } else {
+        let m = spec.build_measure(&resolver)?;
+        let r = classify_1nn(&*m, &ds.train, &ds.test, cfg.threads);
+        (r.error_rate, r.comparisons, r.visited_cells)
+    };
     println!(
-        "{name} [{measure}] error={:.3} comparisons={} cells={} wall={:.2}s",
-        r.error_rate,
-        r.comparisons,
-        r.visited_cells,
+        "{name} [{}] error={:.3} comparisons={} cells={} wall={:.2}s",
+        spec.name(),
+        error_rate,
+        comparisons,
+        cells,
         t0.elapsed().as_secs_f64()
     );
+    Ok(())
+}
+
+/// Comma-separated f64 list from `--x` / `--y`, rejecting NaN/±inf at
+/// the boundary (the CLI counterpart of the wire's `bad_input` class).
+fn parse_value_list(args: &Args, name: &'static str) -> Result<Vec<f64>> {
+    let raw = args.get(name).ok_or_else(|| {
+        Error::config(format!("--{name} is required (comma-separated numbers)"))
+    })?;
+    let mut values = Vec::new();
+    for tok in raw.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let v: f64 = tok
+            .parse()
+            .map_err(|_| Error::config(format!("--{name}: '{tok}' is not a number")))?;
+        if !v.is_finite() {
+            return Err(Error::data(format!(
+                "--{name}: non-finite value '{tok}' (NaN/inf are not valid series values)"
+            )));
+        }
+        values.push(v);
+    }
+    if values.is_empty() {
+        return Err(Error::config(format!("--{name} must contain at least one number")));
+    }
+    Ok(values)
+}
+
+/// One pairwise evaluation under any measure spec — the CLI twin of the
+/// TCP v2 `dist`/`kernel` ops (no dataset context, so `learned` grids
+/// are rejected; use an inline `full`/`corridor` grid for SP measures).
+fn cmd_dist(args: &Args) -> Result<()> {
+    let spec = measure_spec_from_args(args, "DTW")?;
+    let x = TimeSeries::new(0, parse_value_list(args, "x")?);
+    let y = TimeSeries::new(0, parse_value_list(args, "y")?);
+    spec.check_operands(x.len(), y.len())?;
+    // resolve any grid exactly once: length-check it, then hand the
+    // same materialized LOC to the factory via a fixed resolver
+    let resolver: Box<dyn GridResolver> = match spec.grid() {
+        Some(g) => {
+            let loc = InlineGrids.resolve(g)?;
+            if loc.t != x.len() {
+                return Err(Error::config(format!(
+                    "series length {} != grid T={}",
+                    x.len(),
+                    loc.t
+                )));
+            }
+            Box::new(FixedGrid(loc))
+        }
+        None => Box::new(InlineGrids),
+    };
+    if spec.is_kernel() {
+        let kernel = spec.build_kernel(&*resolver)?;
+        // normalized-kernel distance from the three log-kernels — same
+        // formula as spec::KernelDist, without re-evaluating log_k(x,y)
+        let kxy = kernel.log_k(&x, &y);
+        let kxx = kernel.log_k(&x, &x);
+        let kyy = kernel.log_k(&y, &y);
+        let dist = -(kxy.value - 0.5 * (kxx.value + kyy.value));
+        let cells = kxy.visited_cells + kxx.visited_cells + kyy.visited_cells;
+        println!(
+            "{} log_k={} dist={} cells={}",
+            spec.name(),
+            kxy.value,
+            dist,
+            cells
+        );
+    } else {
+        let m = spec.build_measure(&*resolver)?;
+        let d = m.dist(&x, &y);
+        println!("{} dist={} cells={}", spec.name(), d.value, d.visited_cells);
+    }
     Ok(())
 }
 
@@ -296,6 +437,10 @@ fn resolve_search_config(args: &Args, t: usize) -> Result<SearchConfig> {
     if let Some(p) = args.get("index-file") {
         scfg.index_file = Some(PathBuf::from(p));
     }
+    if let Some(text) = args.get("measure-json") {
+        scfg.measure =
+            Some(MeasureSpec::from_json(&spdtw::util::json::Json::parse(text)?)?);
+    }
     scfg.validate()?;
     if scfg.znormalize && args.flag("spdtw-index") {
         return Err(Error::config(
@@ -305,30 +450,46 @@ fn resolve_search_config(args: &Args, t: usize) -> Result<SearchConfig> {
     Ok(scfg)
 }
 
-/// Build the index a `spdtw search` / `spdtw index save` run asked for.
+/// Build the index a `spdtw search` / `spdtw index save` run asked for:
+/// the CLI flags resolve to a [`MeasureSpec`] and the shared
+/// spec-driven builder does the rest (`--spdtw-index` is shorthand for
+/// an spdtw spec over a `learned` grid).
 fn build_search_index(
     args: &Args,
     cfg: &ExperimentConfig,
     ds: &spdtw::data::Dataset,
     scfg: &SearchConfig,
 ) -> Result<Index> {
-    if args.flag("spdtw-index") {
-        let grid = learn_occupancy_grid(&ds.train, cfg.threads);
+    let spec = if args.flag("spdtw-index") {
+        // both name an index measure: silently preferring one would
+        // report results for a config the user didn't get
+        if scfg.measure.is_some() {
+            return Err(Error::config(
+                "--spdtw-index conflicts with an explicit measure \
+                 (--measure-json or the config file's search.measure); pick one",
+            ));
+        }
         let theta = args.get_f64("theta")?.unwrap_or(0.0);
         let gamma = args.get_f64("gamma")?.unwrap_or(1.0);
-        let loc = Arc::new(grid.threshold(theta).to_loc(gamma));
+        MeasureSpec::SpDtw { grid: GridSpec::Learned { theta, gamma } }
+    } else {
+        scfg.index_spec()
+    };
+    let resolver = TrainGridResolver {
+        train: Some(&ds.train),
+        grid: None,
+        threads: cfg.threads,
+    };
+    let index = Index::build_from_spec(&ds.train, &spec, scfg.znormalize, &resolver, cfg.threads)?;
+    if let Some(loc) = &index.loc {
         println!(
             "LOC grid: nnz={} ({:.1}% sparsity), envelope radius {}",
             loc.nnz(),
             100.0 * loc.sparsity(),
             loc.max_band_offset()
         );
-        Ok(Index::build_spdtw(&ds.train, loc, cfg.threads))
-    } else if scfg.znormalize {
-        Ok(Index::build_znormalized(&ds.train, scfg.band_cells, cfg.threads))
-    } else {
-        Ok(Index::build(&ds.train, scfg.band_cells, cfg.threads))
     }
+    Ok(index)
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -347,11 +508,15 @@ fn cmd_search(args: &Args) -> Result<()> {
             // A prebuilt index fixes the build-time choices; accepting
             // contradictory build flags and silently ignoring them
             // would report results for a config the user didn't get.
-            if args.flag("znorm") || args.flag("spdtw-index") || args.get("band-cells").is_some()
+            if args.flag("znorm")
+                || args.flag("spdtw-index")
+                || args.get("band-cells").is_some()
+                || args.get("measure-json").is_some()
             {
                 return Err(Error::config(
-                    "--index-file loads a prebuilt index; --znorm/--spdtw-index/--band-cells \
-                     are build-time flags and do not apply (rebuild with `spdtw index save`)",
+                    "--index-file loads a prebuilt index; --znorm/--spdtw-index/--band-cells/\
+                     --measure-json are build-time flags and do not apply (rebuild with \
+                     `spdtw index save`)",
                 ));
             }
             let t0 = std::time::Instant::now();
@@ -609,8 +774,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::start(Arc::clone(&coord), addr)?;
     println!("spdtw coordinator listening on {}", server.addr);
     println!(
-        "protocol: one JSON object per line; ops: ping, info, register_grid, spdtw, \
+        "protocol: one JSON object per line; v1 ops: ping, info, register_grid, spdtw, \
          spkrdtw, register_index, search, batch_search, metrics, shutdown"
+    );
+    println!(
+        "protocol v2 ({{\"proto\":2, ...}}): generic dist / kernel / register_measure over \
+         any MeasureSpec, id echo, typed error codes"
     );
     // Serve until the process is killed (the TCP `shutdown` op stops the
     // accept loop; we poll for it).

@@ -12,6 +12,7 @@
 //! | [`spdtw`]     | SP-DTW over the LOC sparse grid | Eq. 9, Alg. 1 |
 //! | [`spkrdtw`]   | SP-K_rdtw over the LOC sparse grid | Alg. 2 |
 //! | [`lb_keogh`]  | LB_Keogh envelopes + 1-NN pruning baseline | §II-B.2 [27] |
+//! | [`spec`]      | [`spec::MeasureSpec`]: one typed, serializable entrypoint to the family | — |
 //!
 //! Every DP measure reports the number of **visited cells**, the unit of
 //! the paper's Table VI speed-up comparison.
@@ -31,6 +32,7 @@ pub mod krdtw;
 pub mod lb_keogh;
 pub mod sakoe_chiba;
 pub mod spdtw;
+pub mod spec;
 pub mod spkrdtw;
 pub mod workspace;
 

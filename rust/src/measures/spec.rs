@@ -1,0 +1,900 @@
+//! `MeasureSpec` — the single typed, serializable entrypoint to the
+//! whole measure family.
+//!
+//! The paper defines a *family* of DTW-like measures (DTW, corridor
+//! DTW, Itakura DTW, SP-DTW, K_rdtw, SP-K_rdtw, K_ga, plus the linear
+//! baselines).  Every public surface of this crate — the CLI, the
+//! coordinator's TCP protocol v2 and the `search` engine — describes
+//! the measure it wants with one [`MeasureSpec`] value instead of
+//! ad-hoc strings and per-measure plumbing, and the factory here
+//! validates parameters **once at the boundary** before any DP runs.
+//!
+//! A spec is plain data: it round-trips JSON ⇄ typed bit-exactly
+//! (f64 parameters serialize via Rust's shortest-roundtrip formatting),
+//! so the same value can live in a config file, travel over the wire
+//! and be rebuilt into a boxed [`Measure`] / [`KernelMeasure`] on the
+//! other side.
+//!
+//! ## JSON shape
+//!
+//! ```json
+//! {"kind":"euclidean"}
+//! {"kind":"minkowski","p":3}
+//! {"kind":"corr"}
+//! {"kind":"daco","lags":10}
+//! {"kind":"dtw"}
+//! {"kind":"banded_dtw","band_cells":12}
+//! {"kind":"sakoe_chiba","band_pct":10}
+//! {"kind":"itakura"}
+//! {"kind":"spdtw","grid":{"kind":"corridor","t":60,"band":5}}
+//! {"kind":"krdtw","nu":0.5}
+//! {"kind":"krdtw","nu":0.5,"band_cells":8}
+//! {"kind":"spkrdtw","nu":0.5,"grid":{"kind":"registered","key":0}}
+//! {"kind":"kga","nu":0.5}
+//! ```
+//!
+//! Grid references (`"grid"`) come in four kinds:
+//!
+//! | kind | fields | resolved by |
+//! |------|--------|-------------|
+//! | `full` | `t` | any resolver (materialized inline) |
+//! | `corridor` | `t`, `band` | any resolver (materialized inline) |
+//! | `learned` | `theta`, `gamma` | a resolver holding a train set or occupancy grid |
+//! | `registered` | `key` | the coordinator's grid registry |
+//!
+//! The [`GridResolver`] trait decouples the spec from where grids come
+//! from: the CLI/experiments resolve `learned` against a train set
+//! ([`TrainGridResolver`]), the coordinator resolves `registered`
+//! against its registry, and inline `full`/`corridor` grids work
+//! everywhere (bounded by [`MAX_INLINE_GRID_CELLS`] so a wire request
+//! cannot allocate an arbitrarily large grid).
+
+use std::sync::Arc;
+
+use crate::data::{LabeledSet, TimeSeries};
+use crate::error::{Error, Result};
+use crate::measures::corr::CorrDist;
+use crate::measures::daco::Daco;
+use crate::measures::dtw::{BandedDtw, Dtw};
+use crate::measures::euclidean::{Euclidean, Minkowski};
+use crate::measures::itakura::ItakuraDtw;
+use crate::measures::kga::Kga;
+use crate::measures::krdtw::Krdtw;
+use crate::measures::sakoe_chiba::SakoeChibaDtw;
+use crate::measures::spdtw::SpDtw;
+use crate::measures::spkrdtw::SpKrdtw;
+use crate::measures::workspace::DpWorkspace;
+use crate::measures::{DistResult, KernelMeasure, Measure};
+use crate::sparse::{LocMatrix, OccupancyGrid};
+use crate::util::json::Json;
+
+/// Upper bound on the cell count of an inline (`full` / `corridor`)
+/// grid: a wire-supplied spec must not be able to allocate an
+/// arbitrarily large LOC matrix.  16M cells ≈ a full 4096×4096 grid,
+/// far past every UCR length.
+pub const MAX_INLINE_GRID_CELLS: u64 = 1 << 24;
+
+/// A serializable reference to a LOC sparse grid.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GridSpec {
+    /// Full `t`×`t` grid with unit weights (SP measures degenerate to
+    /// their dense counterparts).
+    Full { t: usize },
+    /// Sakoe-Chiba corridor of half-width `band` cells, unit weights.
+    Corridor { t: usize, band: usize },
+    /// Grid learned from a train set: occupancy grid thresholded at
+    /// `theta` (a percentage of the max cell count, 0–100 — the
+    /// paper's Fig. 4 axis), weights `f(p) = p^-gamma` (§III;
+    /// `gamma = 0` gives the unit-weight mask the kernel variants
+    /// require).
+    Learned { theta: f64, gamma: f64 },
+    /// A grid already registered with the coordinator (its
+    /// `register_grid` key).
+    Registered { key: u64 },
+}
+
+impl GridSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GridSpec::Full { .. } => "full",
+            GridSpec::Corridor { .. } => "corridor",
+            GridSpec::Learned { .. } => "learned",
+            GridSpec::Registered { .. } => "registered",
+        }
+    }
+
+    /// Cell count an inline grid would materialize to (None for
+    /// `learned` / `registered`, whose size the resolver owns).
+    /// Callers must bound `t` first ([`Self::validate`] does): all
+    /// arithmetic here is u128 with `t` already ≤
+    /// [`MAX_INLINE_GRID_CELLS`], so nothing can overflow or loop.
+    fn inline_cells(&self) -> Option<u64> {
+        match self {
+            GridSpec::Full { t } => {
+                let t = *t as u128;
+                Some((t * t).min(u64::MAX as u128) as u64)
+            }
+            GridSpec::Corridor { t, band } => {
+                // closed form of sakoe_chiba::band_cells (no O(t) loop
+                // on untrusted input): t·(2b+1) minus the two corner
+                // truncations of b·(b+1)/2 each, with b clamped to t-1
+                let t = *t as u128;
+                let b = (*band as u128).min(t.saturating_sub(1));
+                Some((t * (2 * b + 1) - b * (b + 1)).min(u64::MAX as u128) as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            GridSpec::Full { t } | GridSpec::Corridor { t, .. } => {
+                if *t == 0 {
+                    return Err(Error::config("grid 't' must be >= 1"));
+                }
+                // bound t itself before any multiplying arithmetic or
+                // O(t) work: even the cheapest grid (the diagonal) has
+                // t cells, so an oversized t can never fit the cap
+                if *t as u64 > MAX_INLINE_GRID_CELLS {
+                    return Err(Error::config(format!(
+                        "inline grid 't' too large: {t} (cell cap {MAX_INLINE_GRID_CELLS}); \
+                         register the grid instead"
+                    )));
+                }
+                let cells = self.inline_cells().unwrap_or(0);
+                if cells > MAX_INLINE_GRID_CELLS {
+                    return Err(Error::config(format!(
+                        "inline grid too large: {cells} cells (max {MAX_INLINE_GRID_CELLS}); \
+                         register the grid instead"
+                    )));
+                }
+                Ok(())
+            }
+            GridSpec::Learned { theta, gamma } => {
+                // theta is a percentage of the occupancy grid's max
+                // count (OccupancyGrid::cutoff), like the paper's
+                // Fig. 4 x-axis
+                if !theta.is_finite() || !(0.0..=100.0).contains(theta) {
+                    return Err(Error::config(format!(
+                        "grid 'theta' must be in [0, 100], got {theta}"
+                    )));
+                }
+                if !gamma.is_finite() || *gamma < 0.0 {
+                    return Err(Error::config(format!(
+                        "grid 'gamma' must be finite and >= 0, got {gamma}"
+                    )));
+                }
+                Ok(())
+            }
+            GridSpec::Registered { .. } => Ok(()),
+        }
+    }
+
+    pub fn from_json(json: &Json) -> Result<GridSpec> {
+        let kind = json.req_str("kind")?;
+        let spec = match kind {
+            "full" => GridSpec::Full { t: json.req_usize("t")? },
+            "corridor" => GridSpec::Corridor {
+                t: json.req_usize("t")?,
+                band: json.req_usize("band")?,
+            },
+            "learned" => GridSpec::Learned {
+                theta: json.req_f64("theta")?,
+                gamma: json.get("gamma").and_then(Json::as_f64).unwrap_or(1.0),
+            },
+            "registered" => GridSpec::Registered { key: json.req_usize("key")? as u64 },
+            other => {
+                return Err(Error::config(format!(
+                    "unknown grid kind '{other}' (expected full|corridor|learned|registered)"
+                )))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            GridSpec::Full { t } => Json::obj(vec![
+                ("kind", Json::str("full")),
+                ("t", Json::num(*t as f64)),
+            ]),
+            GridSpec::Corridor { t, band } => Json::obj(vec![
+                ("kind", Json::str("corridor")),
+                ("t", Json::num(*t as f64)),
+                ("band", Json::num(*band as f64)),
+            ]),
+            GridSpec::Learned { theta, gamma } => Json::obj(vec![
+                ("kind", Json::str("learned")),
+                ("theta", Json::num(*theta)),
+                ("gamma", Json::num(*gamma)),
+            ]),
+            GridSpec::Registered { key } => Json::obj(vec![
+                ("kind", Json::str("registered")),
+                ("key", Json::num(*key as f64)),
+            ]),
+        }
+    }
+}
+
+/// Where LOC grids come from when a spec is turned into a runnable
+/// measure.  Each surface supplies its own resolver; inline
+/// `full`/`corridor` grids are materialized by every implementation.
+pub trait GridResolver {
+    fn resolve(&self, grid: &GridSpec) -> Result<Arc<LocMatrix>>;
+}
+
+/// Materialize an inline (`full` / `corridor`) grid, or `None` when the
+/// reference needs external state.  Shared by every resolver.
+pub fn materialize_inline(grid: &GridSpec) -> Result<Option<Arc<LocMatrix>>> {
+    grid.validate()?;
+    Ok(match grid {
+        GridSpec::Full { t } => Some(Arc::new(LocMatrix::full(*t))),
+        GridSpec::Corridor { t, band } => Some(Arc::new(LocMatrix::corridor(*t, *band))),
+        _ => None,
+    })
+}
+
+/// Resolver for contexts with no train set and no registry: inline
+/// grids only.
+pub struct InlineGrids;
+
+impl GridResolver for InlineGrids {
+    fn resolve(&self, grid: &GridSpec) -> Result<Arc<LocMatrix>> {
+        materialize_inline(grid)?.ok_or_else(|| {
+            Error::config(format!(
+                "grid kind '{}' cannot be resolved here (no train set or grid registry); \
+                 use an inline 'full'/'corridor' grid",
+                grid.kind()
+            ))
+        })
+    }
+}
+
+/// Resolver backed by a train set (and optionally a pre-learned
+/// occupancy grid, so callers that already paid for the learning phase
+/// — the experiments runner — do not relearn it per spec).
+pub struct TrainGridResolver<'a> {
+    pub train: Option<&'a LabeledSet>,
+    /// Reuse this occupancy grid for `learned` references instead of
+    /// learning one from `train`.
+    pub grid: Option<&'a OccupancyGrid>,
+    pub threads: usize,
+}
+
+impl GridResolver for TrainGridResolver<'_> {
+    fn resolve(&self, grid: &GridSpec) -> Result<Arc<LocMatrix>> {
+        if let Some(loc) = materialize_inline(grid)? {
+            return Ok(loc);
+        }
+        match grid {
+            GridSpec::Learned { theta, gamma } => {
+                let loc = match (self.grid, self.train) {
+                    (Some(g), _) => g.threshold(*theta).to_loc(*gamma),
+                    (None, Some(train)) => crate::sparse::learn::learn_occupancy_grid(
+                        train,
+                        self.threads.max(1),
+                    )
+                    .threshold(*theta)
+                    .to_loc(*gamma),
+                    (None, None) => {
+                        return Err(Error::config(
+                            "learned grid needs a train set to learn from",
+                        ))
+                    }
+                };
+                Ok(Arc::new(loc))
+            }
+            GridSpec::Registered { .. } => Err(Error::config(
+                "registered grids only resolve inside the coordinator",
+            )),
+            _ => unreachable!("inline kinds handled above"),
+        }
+    }
+}
+
+/// Resolver that answers every reference with one pre-resolved grid —
+/// used when the grid was already resolved (and length-checked) by the
+/// caller, e.g. the coordinator's `register_measure`.
+pub struct FixedGrid(pub Arc<LocMatrix>);
+
+impl GridResolver for FixedGrid {
+    fn resolve(&self, _grid: &GridSpec) -> Result<Arc<LocMatrix>> {
+        Ok(Arc::clone(&self.0))
+    }
+}
+
+/// Typed description of any measure in the family (kind + parameters).
+/// See the module docs for the JSON shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MeasureSpec {
+    /// Euclidean distance (paper Eq. 3 with p = 2).
+    Euclidean,
+    /// Minkowski L_p distance, `p >= 1`.
+    Minkowski { p: f64 },
+    /// Pearson-correlation distance (paper Eq. 1).
+    Corr,
+    /// Auto-correlation operator distance over `lags` lags (Eq. 2).
+    Daco { lags: usize },
+    /// Unconstrained DTW (Eq. 4).
+    Dtw,
+    /// DTW with a band of `band_cells` cells around the diagonal.
+    BandedDtw { band_cells: usize },
+    /// Sakoe-Chiba DTW with the band as a percentage of T.
+    SakoeChiba { band_pct: f64 },
+    /// DTW constrained to the Itakura parallelogram.
+    Itakura,
+    /// SP-DTW over a LOC sparse grid (Eq. 9, Algorithm 1).
+    SpDtw { grid: GridSpec },
+    /// K_rdtw kernel (Eq. 6-7), optionally corridor-constrained.
+    Krdtw { nu: f64, band_cells: Option<usize> },
+    /// SP-K_rdtw kernel over a LOC grid (mask semantics, Algorithm 2).
+    SpKrdtw { nu: f64, grid: GridSpec },
+    /// Global-alignment kernel K_ga (Eq. 5), optionally banded.
+    Kga { nu: f64, band_cells: Option<usize> },
+}
+
+impl MeasureSpec {
+    /// The JSON `"kind"` discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MeasureSpec::Euclidean => "euclidean",
+            MeasureSpec::Minkowski { .. } => "minkowski",
+            MeasureSpec::Corr => "corr",
+            MeasureSpec::Daco { .. } => "daco",
+            MeasureSpec::Dtw => "dtw",
+            MeasureSpec::BandedDtw { .. } => "banded_dtw",
+            MeasureSpec::SakoeChiba { .. } => "sakoe_chiba",
+            MeasureSpec::Itakura => "itakura",
+            MeasureSpec::SpDtw { .. } => "spdtw",
+            MeasureSpec::Krdtw { .. } => "krdtw",
+            MeasureSpec::SpKrdtw { .. } => "spkrdtw",
+            MeasureSpec::Kga { .. } => "kga",
+        }
+    }
+
+    /// Human-readable label, matching the names the concrete measures
+    /// report (tables, CLI output).
+    pub fn name(&self) -> String {
+        match self {
+            MeasureSpec::Euclidean => "Ed".into(),
+            MeasureSpec::Minkowski { p } => format!("L{p}"),
+            MeasureSpec::Corr => "CORR".into(),
+            MeasureSpec::Daco { .. } => "DACO".into(),
+            MeasureSpec::Dtw => "DTW".into(),
+            MeasureSpec::BandedDtw { band_cells } => format!("DTW_band({band_cells})"),
+            MeasureSpec::SakoeChiba { band_pct } => format!("DTW_sc({band_pct}%)"),
+            MeasureSpec::Itakura => "DTW_it".into(),
+            MeasureSpec::SpDtw { .. } => "SP-DTW".into(),
+            MeasureSpec::Krdtw { band_cells: None, .. } => "Krdtw".into(),
+            MeasureSpec::Krdtw { band_cells: Some(b), .. } => format!("Krdtw_sc({b})"),
+            MeasureSpec::SpKrdtw { .. } => "SP-Krdtw".into(),
+            MeasureSpec::Kga { band_cells: None, .. } => "Kga".into(),
+            MeasureSpec::Kga { band_cells: Some(b), .. } => format!("Kga_sc({b})"),
+        }
+    }
+
+    /// Whether this measure is a kernel (similarity) — buildable via
+    /// [`Self::build_kernel`]; distances come from the normalized
+    /// wrapper [`KernelDist`] instead.
+    pub fn is_kernel(&self) -> bool {
+        matches!(
+            self,
+            MeasureSpec::Krdtw { .. } | MeasureSpec::SpKrdtw { .. } | MeasureSpec::Kga { .. }
+        )
+    }
+
+    /// The grid reference, for the two sparsified measures.
+    pub fn grid(&self) -> Option<&GridSpec> {
+        match self {
+            MeasureSpec::SpDtw { grid } | MeasureSpec::SpKrdtw { grid, .. } => Some(grid),
+            _ => None,
+        }
+    }
+
+    /// Validate every parameter (the boundary check: factories call
+    /// this, so no invalid spec ever reaches a DP kernel's asserts).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            MeasureSpec::Euclidean
+            | MeasureSpec::Corr
+            | MeasureSpec::Dtw
+            | MeasureSpec::BandedDtw { .. }
+            | MeasureSpec::Itakura => Ok(()),
+            MeasureSpec::Minkowski { p } => {
+                if p.is_nan() || *p < 1.0 {
+                    Err(Error::config(format!("minkowski 'p' must be >= 1, got {p}")))
+                } else {
+                    Ok(())
+                }
+            }
+            MeasureSpec::Daco { lags } => {
+                if *lags == 0 {
+                    Err(Error::config("daco 'lags' must be >= 1"))
+                } else {
+                    Ok(())
+                }
+            }
+            MeasureSpec::SakoeChiba { band_pct } => {
+                if !band_pct.is_finite() || !(0.0..=100.0).contains(band_pct) {
+                    Err(Error::config(format!(
+                        "sakoe_chiba 'band_pct' must be in [0, 100], got {band_pct}"
+                    )))
+                } else {
+                    Ok(())
+                }
+            }
+            MeasureSpec::SpDtw { grid } => grid.validate(),
+            MeasureSpec::Krdtw { nu, .. } | MeasureSpec::Kga { nu, .. } => check_nu(*nu),
+            MeasureSpec::SpKrdtw { nu, grid } => {
+                check_nu(*nu)?;
+                grid.validate()
+            }
+        }
+    }
+
+    /// Operand-shape check applied at the wire/CLI boundary: the DP
+    /// kernels `assert!` on shape violations, the boundary must reject
+    /// them as typed errors instead.  Grid-length checks happen where
+    /// the grid is resolved.
+    pub fn check_operands(&self, xlen: usize, ylen: usize) -> Result<()> {
+        if xlen == 0 || ylen == 0 {
+            return Err(Error::data("series must be non-empty"));
+        }
+        match self {
+            // banded/plain DTW support unequal lengths
+            MeasureSpec::Dtw | MeasureSpec::BandedDtw { .. } => Ok(()),
+            _ if xlen != ylen => Err(Error::data(format!(
+                "measure '{}' requires equal lengths, got {xlen} vs {ylen}",
+                self.name()
+            ))),
+            _ => Ok(()),
+        }
+    }
+
+    /// Parse from the JSON shape in the module docs.  Unknown kinds and
+    /// invalid parameters are rejected here — the boundary validation.
+    pub fn from_json(json: &Json) -> Result<MeasureSpec> {
+        let kind = json.req_str("kind")?;
+        let band_opt = |j: &Json| j.get("band_cells").and_then(Json::as_usize);
+        let spec = match kind {
+            "euclidean" => MeasureSpec::Euclidean,
+            "minkowski" => MeasureSpec::Minkowski { p: json.req_f64("p")? },
+            "corr" => MeasureSpec::Corr,
+            "daco" => MeasureSpec::Daco { lags: json.req_usize("lags")? },
+            "dtw" => MeasureSpec::Dtw,
+            "banded_dtw" => MeasureSpec::BandedDtw { band_cells: json.req_usize("band_cells")? },
+            "sakoe_chiba" => MeasureSpec::SakoeChiba { band_pct: json.req_f64("band_pct")? },
+            "itakura" => MeasureSpec::Itakura,
+            "spdtw" => MeasureSpec::SpDtw {
+                grid: GridSpec::from_json(json.get("grid").ok_or_else(|| {
+                    Error::config("spdtw spec needs a 'grid' object")
+                })?)?,
+            },
+            "krdtw" => MeasureSpec::Krdtw {
+                nu: json.req_f64("nu")?,
+                band_cells: band_opt(json),
+            },
+            "spkrdtw" => MeasureSpec::SpKrdtw {
+                nu: json.req_f64("nu")?,
+                grid: GridSpec::from_json(json.get("grid").ok_or_else(|| {
+                    Error::config("spkrdtw spec needs a 'grid' object")
+                })?)?,
+            },
+            "kga" => MeasureSpec::Kga {
+                nu: json.req_f64("nu")?,
+                band_cells: band_opt(json),
+            },
+            other => {
+                return Err(Error::config(format!(
+                    "unknown measure kind '{other}' (expected euclidean|minkowski|corr|daco|\
+                     dtw|banded_dtw|sakoe_chiba|itakura|spdtw|krdtw|spkrdtw|kga)"
+                )))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize to the JSON shape in the module docs.  `from_json ∘
+    /// to_json` is the identity (bit-exact on every f64 parameter —
+    /// numbers print in Rust's shortest-roundtrip form).
+    pub fn to_json(&self) -> Json {
+        match self {
+            MeasureSpec::Euclidean => Json::obj(vec![("kind", Json::str("euclidean"))]),
+            MeasureSpec::Minkowski { p } => Json::obj(vec![
+                ("kind", Json::str("minkowski")),
+                ("p", Json::num(*p)),
+            ]),
+            MeasureSpec::Corr => Json::obj(vec![("kind", Json::str("corr"))]),
+            MeasureSpec::Daco { lags } => Json::obj(vec![
+                ("kind", Json::str("daco")),
+                ("lags", Json::num(*lags as f64)),
+            ]),
+            MeasureSpec::Dtw => Json::obj(vec![("kind", Json::str("dtw"))]),
+            MeasureSpec::BandedDtw { band_cells } => Json::obj(vec![
+                ("kind", Json::str("banded_dtw")),
+                ("band_cells", Json::num(*band_cells as f64)),
+            ]),
+            MeasureSpec::SakoeChiba { band_pct } => Json::obj(vec![
+                ("kind", Json::str("sakoe_chiba")),
+                ("band_pct", Json::num(*band_pct)),
+            ]),
+            MeasureSpec::Itakura => Json::obj(vec![("kind", Json::str("itakura"))]),
+            MeasureSpec::SpDtw { grid } => Json::obj(vec![
+                ("kind", Json::str("spdtw")),
+                ("grid", grid.to_json()),
+            ]),
+            MeasureSpec::Krdtw { nu, band_cells } => {
+                let mut fields = vec![("kind", Json::str("krdtw")), ("nu", Json::num(*nu))];
+                if let Some(b) = band_cells {
+                    fields.push(("band_cells", Json::num(*b as f64)));
+                }
+                Json::obj(fields)
+            }
+            MeasureSpec::SpKrdtw { nu, grid } => Json::obj(vec![
+                ("kind", Json::str("spkrdtw")),
+                ("nu", Json::num(*nu)),
+                ("grid", grid.to_json()),
+            ]),
+            MeasureSpec::Kga { nu, band_cells } => {
+                let mut fields = vec![("kind", Json::str("kga")), ("nu", Json::num(*nu))];
+                if let Some(b) = band_cells {
+                    fields.push(("band_cells", Json::num(*b as f64)));
+                }
+                Json::obj(fields)
+            }
+        }
+    }
+
+    /// Build a runnable distance measure.  Kernel specs come back as
+    /// the normalized-kernel distance ([`KernelDist`], the ranking the
+    /// paper's 1-NN protocol uses); everything else is the concrete
+    /// measure.  Validates first — invalid parameters never reach a
+    /// constructor's `assert!`.
+    pub fn build_measure(&self, grids: &dyn GridResolver) -> Result<Arc<dyn Measure>> {
+        self.validate()?;
+        Ok(match self {
+            MeasureSpec::Euclidean => Arc::new(Euclidean),
+            MeasureSpec::Minkowski { p } => Arc::new(Minkowski::new(*p)),
+            MeasureSpec::Corr => Arc::new(CorrDist),
+            MeasureSpec::Daco { lags } => Arc::new(Daco::new(*lags)),
+            MeasureSpec::Dtw => Arc::new(Dtw),
+            MeasureSpec::BandedDtw { band_cells } => Arc::new(BandedDtw(*band_cells)),
+            MeasureSpec::SakoeChiba { band_pct } => Arc::new(SakoeChibaDtw::new(*band_pct)),
+            MeasureSpec::Itakura => Arc::new(ItakuraDtw),
+            MeasureSpec::SpDtw { grid } => Arc::new(SpDtw::from_arc(grids.resolve(grid)?)),
+            MeasureSpec::Krdtw { .. } | MeasureSpec::SpKrdtw { .. } | MeasureSpec::Kga { .. } => {
+                Arc::new(KernelDist::new(self.build_kernel(grids)?))
+            }
+        })
+    }
+
+    /// Build a runnable kernel measure.  Distance-only specs are a
+    /// typed error (the wire's `kernel` op on a non-kernel measure).
+    pub fn build_kernel(&self, grids: &dyn GridResolver) -> Result<Arc<dyn KernelMeasure>> {
+        self.validate()?;
+        match self {
+            MeasureSpec::Krdtw { nu, band_cells } => Ok(match band_cells {
+                None => Arc::new(Krdtw::new(*nu)),
+                Some(b) => Arc::new(Krdtw::with_band(*nu, *b)),
+            }),
+            MeasureSpec::SpKrdtw { nu, grid } => {
+                Ok(Arc::new(SpKrdtw::from_arc(grids.resolve(grid)?, *nu)))
+            }
+            MeasureSpec::Kga { nu, band_cells } => Ok(match band_cells {
+                None => Arc::new(Kga::new(*nu)),
+                Some(b) => Arc::new(Kga::with_band(*nu, *b)),
+            }),
+            other => Err(Error::config(format!(
+                "measure '{}' is a distance, not a kernel",
+                other.name()
+            ))),
+        }
+    }
+}
+
+fn check_nu(nu: f64) -> Result<()> {
+    if !nu.is_finite() || nu <= 0.0 {
+        Err(Error::config(format!("'nu' must be finite and > 0, got {nu}")))
+    } else {
+        Ok(())
+    }
+}
+
+/// Normalized-kernel distance over any boxed [`KernelMeasure`]:
+/// `d(x,y) = -(log K(x,y) - (log K(x,x) + log K(y,y)) / 2)` — the same
+/// monotone ranking as the kernel-induced distance, and exactly the
+/// formula of the per-kernel wrappers (`krdtw::KrdtwDist`,
+/// `spkrdtw::SpKrdtwDist`); this one works for every kernel the
+/// factory can build.
+pub struct KernelDist {
+    pub kernel: Arc<dyn KernelMeasure>,
+}
+
+impl KernelDist {
+    pub fn new(kernel: Arc<dyn KernelMeasure>) -> Self {
+        KernelDist { kernel }
+    }
+}
+
+impl Measure for KernelDist {
+    fn name(&self) -> String {
+        self.kernel.name()
+    }
+
+    fn dist(&self, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_k(x, y);
+        let kxx = self.kernel.log_k(x, x);
+        let kyy = self.kernel.log_k(y, y);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(-norm, kxy.visited_cells + kxx.visited_cells + kyy.visited_cells)
+    }
+
+    fn dist_with(&self, ws: &mut DpWorkspace, x: &TimeSeries, y: &TimeSeries) -> DistResult {
+        let kxy = self.kernel.log_k_with(ws, x, y);
+        let kxx = self.kernel.log_k_with(ws, x, x);
+        let kyy = self.kernel.log_k_with(ws, y, y);
+        let norm = kxy.value - 0.5 * (kxx.value + kyy.value);
+        DistResult::new(-norm, kxy.visited_cells + kxx.visited_cells + kyy.visited_cells)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::krdtw::KrdtwDist;
+    use crate::util::rng::Pcg64;
+
+    fn every_spec() -> Vec<MeasureSpec> {
+        vec![
+            MeasureSpec::Euclidean,
+            MeasureSpec::Minkowski { p: 3.5 },
+            MeasureSpec::Corr,
+            MeasureSpec::Daco { lags: 7 },
+            MeasureSpec::Dtw,
+            MeasureSpec::BandedDtw { band_cells: 12 },
+            MeasureSpec::SakoeChiba { band_pct: 0.1 + 0.2 }, // non-representable decimal
+            MeasureSpec::Itakura,
+            MeasureSpec::SpDtw { grid: GridSpec::Corridor { t: 16, band: 3 } },
+            MeasureSpec::SpDtw { grid: GridSpec::Full { t: 8 } },
+            MeasureSpec::SpDtw { grid: GridSpec::Registered { key: 5 } },
+            MeasureSpec::Krdtw { nu: 1e-300, band_cells: None },
+            MeasureSpec::Krdtw { nu: 0.5, band_cells: Some(4) },
+            MeasureSpec::SpKrdtw {
+                nu: 2.0 / 3.0,
+                grid: GridSpec::Learned { theta: 0.25, gamma: 0.0 },
+            },
+            MeasureSpec::Kga { nu: 0.7, band_cells: Some(9) },
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact_for_every_kind() {
+        for spec in every_spec() {
+            let text = spec.to_json().to_string();
+            let back = MeasureSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            // PartialEq on f64 fields is bit-exact for these values
+            // (none are NaN/-0.0); double-check the payload bits for
+            // the fractional parameters explicitly.
+            assert_eq!(back, spec, "{text}");
+            if let (MeasureSpec::SakoeChiba { band_pct: a }, MeasureSpec::SakoeChiba { band_pct: b }) =
+                (&spec, &back)
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            if let (MeasureSpec::Krdtw { nu: a, .. }, MeasureSpec::Krdtw { nu: b, .. }) =
+                (&spec, &back)
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_parameters_rejected_at_the_boundary() {
+        let bad = [
+            r#"{"kind":"nope"}"#,
+            r#"{"kind":"minkowski","p":0.5}"#,
+            r#"{"kind":"daco","lags":0}"#,
+            r#"{"kind":"sakoe_chiba","band_pct":150}"#,
+            r#"{"kind":"sakoe_chiba","band_pct":-1}"#,
+            r#"{"kind":"krdtw","nu":0}"#,
+            r#"{"kind":"krdtw","nu":-1}"#,
+            r#"{"kind":"krdtw"}"#,
+            r#"{"kind":"kga","nu":1e999}"#, // parses to +inf
+            r#"{"kind":"spdtw"}"#,
+            r#"{"kind":"spdtw","grid":{"kind":"what"}}"#,
+            r#"{"kind":"spdtw","grid":{"kind":"corridor","t":0,"band":1}}"#,
+            r#"{"kind":"spdtw","grid":{"kind":"full","t":100000}}"#, // cell cap
+            r#"{"kind":"spkrdtw","nu":1,"grid":{"kind":"learned","theta":200,"gamma":1}}"#,
+            r#"{"kind":"spkrdtw","nu":1,"grid":{"kind":"learned","theta":0.5,"gamma":-1}}"#,
+        ];
+        for text in bad {
+            let json = Json::parse(text).unwrap();
+            assert!(MeasureSpec::from_json(&json).is_err(), "{text}");
+        }
+        // and via the factory (typed construction can also be invalid)
+        assert!(MeasureSpec::Minkowski { p: f64::NAN }
+            .build_measure(&InlineGrids)
+            .is_err());
+        assert!(MeasureSpec::Krdtw { nu: -1.0, band_cells: None }
+            .build_kernel(&InlineGrids)
+            .is_err());
+    }
+
+    #[test]
+    fn inline_grid_cap_rejects_huge_t_without_overflow_or_spin() {
+        // t values that would overflow t*t or spin an O(t) loop must be
+        // rejected by the t-bound alone (cheap, before any arithmetic)
+        for t in [
+            MAX_INLINE_GRID_CELLS as usize + 1,
+            u32::MAX as usize,
+            usize::MAX,
+        ] {
+            assert!(GridSpec::Full { t }.validate().is_err(), "t={t}");
+            assert!(GridSpec::Corridor { t, band: 1 }.validate().is_err(), "t={t}");
+            // and through the JSON boundary (as_usize saturates huge nums)
+            let j = Json::parse(&format!(r#"{{"kind":"full","t":{}}}"#, 1e300)).unwrap();
+            assert!(GridSpec::from_json(&j).is_err());
+        }
+        // the closed-form corridor count matches the loop-based oracle
+        for (t, band) in [(1usize, 0usize), (10, 0), (10, 1), (10, 9), (16, 3), (50, 5)] {
+            let spec = GridSpec::Corridor { t, band };
+            assert_eq!(
+                spec.inline_cells().unwrap(),
+                crate::measures::sakoe_chiba::band_cells(t, band.min(t)),
+                "t={t} band={band}"
+            );
+        }
+        // boundary: the largest diagonal-only corridor fits exactly
+        let max_t = MAX_INLINE_GRID_CELLS as usize;
+        assert!(GridSpec::Corridor { t: max_t, band: 0 }.validate().is_ok());
+        assert!(GridSpec::Corridor { t: max_t, band: 1 }.validate().is_err());
+    }
+
+    #[test]
+    fn factory_builds_every_measure_and_matches_direct_constructors() {
+        use crate::data::TimeSeries;
+        let mut rng = Pcg64::new(11);
+        let t = 12;
+        let x = TimeSeries::new(0, (0..t).map(|_| rng.normal()).collect());
+        let y = TimeSeries::new(1, (0..t).map(|_| rng.normal()).collect());
+        let r = InlineGrids;
+
+        let pairs: Vec<(MeasureSpec, Box<dyn Measure>)> = vec![
+            (MeasureSpec::Euclidean, Box::new(Euclidean)),
+            (MeasureSpec::Minkowski { p: 3.0 }, Box::new(Minkowski::new(3.0))),
+            (MeasureSpec::Corr, Box::new(CorrDist)),
+            (MeasureSpec::Daco { lags: 4 }, Box::new(Daco::new(4))),
+            (MeasureSpec::Dtw, Box::new(Dtw)),
+            (MeasureSpec::BandedDtw { band_cells: 3 }, Box::new(BandedDtw(3))),
+            (
+                MeasureSpec::SakoeChiba { band_pct: 20.0 },
+                Box::new(SakoeChibaDtw::new(20.0)),
+            ),
+            (MeasureSpec::Itakura, Box::new(ItakuraDtw)),
+            (
+                MeasureSpec::SpDtw { grid: GridSpec::Corridor { t, band: 2 } },
+                Box::new(SpDtw::from_arc(Arc::new(LocMatrix::corridor(t, 2)))),
+            ),
+        ];
+        for (spec, direct) in pairs {
+            let built = spec.build_measure(&r).unwrap();
+            let a = built.dist(&x, &y);
+            let b = direct.dist(&x, &y);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", spec.name());
+            assert_eq!(a.visited_cells, b.visited_cells, "{}", spec.name());
+        }
+
+        // kernels: build_kernel matches direct log_k; build_measure is
+        // the normalized distance, bit-identical to the KrdtwDist
+        // wrapper for the krdtw kind.
+        let kspec = MeasureSpec::Krdtw { nu: 0.8, band_cells: Some(4) };
+        let k = kspec.build_kernel(&r).unwrap();
+        let direct = Krdtw::with_band(0.8, 4);
+        assert_eq!(
+            k.log_k(&x, &y).value.to_bits(),
+            direct.log_k(&x, &y).value.to_bits()
+        );
+        let dist = kspec.build_measure(&r).unwrap();
+        let wrapper = KrdtwDist::new(Krdtw::with_band(0.8, 4));
+        assert_eq!(
+            dist.dist(&x, &y).value.to_bits(),
+            wrapper.dist(&x, &y).value.to_bits()
+        );
+
+        let sp = MeasureSpec::SpKrdtw {
+            nu: 0.8,
+            grid: GridSpec::Corridor { t, band: 2 },
+        };
+        let spk = sp.build_kernel(&r).unwrap();
+        let direct = SpKrdtw::from_arc(Arc::new(LocMatrix::corridor(t, 2)), 0.8);
+        assert_eq!(
+            spk.log_k(&x, &y).value.to_bits(),
+            direct.log_k(&x, &y).value.to_bits()
+        );
+
+        let kga = MeasureSpec::Kga { nu: 0.5, band_cells: None };
+        assert_eq!(
+            kga.build_kernel(&r).unwrap().log_k(&x, &y).value.to_bits(),
+            Kga::new(0.5).log_k(&x, &y).value.to_bits()
+        );
+    }
+
+    #[test]
+    fn kernel_dist_mismatch_is_typed_error() {
+        assert!(MeasureSpec::Dtw.build_kernel(&InlineGrids).is_err());
+        assert!(MeasureSpec::Euclidean.build_kernel(&InlineGrids).is_err());
+        // kernels DO build as measures (normalized distance)
+        assert!(MeasureSpec::Kga { nu: 1.0, band_cells: None }
+            .build_measure(&InlineGrids)
+            .is_ok());
+    }
+
+    #[test]
+    fn resolvers_gate_grid_kinds() {
+        let learned = GridSpec::Learned { theta: 0.5, gamma: 1.0 };
+        let registered = GridSpec::Registered { key: 0 };
+        assert!(InlineGrids.resolve(&learned).is_err());
+        assert!(InlineGrids.resolve(&registered).is_err());
+        assert_eq!(
+            InlineGrids
+                .resolve(&GridSpec::Corridor { t: 8, band: 1 })
+                .unwrap()
+                .nnz(),
+            LocMatrix::corridor(8, 1).nnz()
+        );
+
+        use crate::data::splits::from_pairs;
+        let train = from_pairs(vec![
+            (0, vec![0.0, 1.0, 2.0, 3.0]),
+            (1, vec![3.0, 2.0, 1.0, 0.0]),
+        ]);
+        let r = TrainGridResolver { train: Some(&train), grid: None, threads: 1 };
+        let loc = r.resolve(&learned).unwrap();
+        assert_eq!(loc.t, 4);
+        assert!(loc.has_diagonal());
+        assert!(r.resolve(&registered).is_err());
+
+        // a prebuilt occupancy grid is reused (and gamma=0 gives the
+        // unit-weight mask — identical support)
+        let grid = crate::sparse::learn::learn_occupancy_grid(&train, 1);
+        let r2 = TrainGridResolver { train: None, grid: Some(&grid), threads: 1 };
+        let mask = r2
+            .resolve(&GridSpec::Learned { theta: 0.5, gamma: 0.0 })
+            .unwrap();
+        assert_eq!(mask.nnz(), grid.threshold(0.5).to_loc_mask().nnz());
+        assert!(mask.min_weight() >= 1.0);
+
+        // no train set and no grid: typed error
+        let r3 = TrainGridResolver { train: None, grid: None, threads: 1 };
+        assert!(r3.resolve(&learned).is_err());
+    }
+
+    #[test]
+    fn operand_checks_reject_shape_violations() {
+        assert!(MeasureSpec::Dtw.check_operands(5, 7).is_ok());
+        assert!(MeasureSpec::BandedDtw { band_cells: 2 }.check_operands(5, 7).is_ok());
+        assert!(MeasureSpec::Euclidean.check_operands(5, 7).is_err());
+        assert!(MeasureSpec::Krdtw { nu: 1.0, band_cells: None }
+            .check_operands(5, 7)
+            .is_err());
+        assert!(MeasureSpec::Dtw.check_operands(0, 3).is_err());
+        assert!(MeasureSpec::Itakura.check_operands(6, 6).is_ok());
+    }
+
+    #[test]
+    fn kernel_dist_matches_per_kernel_wrapper_bitwise() {
+        use crate::data::TimeSeries;
+        let mut rng = Pcg64::new(3);
+        let x = TimeSeries::new(0, (0..20).map(|_| rng.normal()).collect());
+        let y = TimeSeries::new(0, (0..20).map(|_| rng.normal()).collect());
+        let generic = KernelDist::new(Arc::new(Krdtw::new(1.3)));
+        let specific = KrdtwDist::new(Krdtw::new(1.3));
+        let a = generic.dist(&x, &y);
+        let b = specific.dist(&x, &y);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(a.visited_cells, b.visited_cells);
+    }
+}

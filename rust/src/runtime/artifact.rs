@@ -64,6 +64,13 @@ pub struct IndexArtifact {
     pub length: usize,
     /// Number of indexed train series.
     pub count: usize,
+    /// LRU recency stamp: a monotone per-store counter bumped on every
+    /// save ([`record_index_artifact`]) and named lookup
+    /// ([`touch_index_artifact`]) — larger = more recently used.  A
+    /// warm-starting coordinator replays entries in ascending order so
+    /// the store's eviction order survives restarts.  0 for manifests
+    /// written before this field existed.
+    pub last_used: u64,
 }
 
 /// The parsed manifest.
@@ -114,6 +121,7 @@ impl Manifest {
                     path: dir.join(e.req_str("file")?),
                     length: e.req_usize("length")?,
                     count: e.req_usize("count")?,
+                    last_used: e.get("last_used").and_then(Json::as_usize).unwrap_or(0) as u64,
                 });
             }
         }
@@ -150,8 +158,10 @@ impl Manifest {
 /// Record (or replace) a persisted-index entry in `<dir>/manifest.json`,
 /// creating a minimal manifest when none exists.  Only the `"indexes"`
 /// array is touched; every other key — including entry fields Rust does
-/// not model — survives the rewrite.  The write is temp-file + rename so
-/// a crash never leaves a torn manifest.
+/// not model — survives the rewrite.  The entry is stamped with the
+/// next `last_used` recency value (max over existing entries + 1), so
+/// the LRU eviction order survives a restart.  The write is temp-file +
+/// rename so a crash never leaves a torn manifest.
 pub fn record_index_artifact(
     dir: &Path,
     name: &str,
@@ -160,48 +170,84 @@ pub fn record_index_artifact(
     count: usize,
 ) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    let mpath = dir.join("manifest.json");
-    let root = match std::fs::read_to_string(&mpath) {
-        Ok(text) => Json::parse(&text)?,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::obj(vec![
-            ("version", Json::num(1.0)),
-            ("entries", Json::Arr(Vec::new())),
-        ]),
-        Err(e) => return Err(e.into()),
-    };
-    let mut obj = root
-        .as_obj()
-        .cloned()
-        .ok_or_else(|| Error::runtime("manifest.json root is not an object"))?;
-    let mut indexes: Vec<Json> = obj
-        .get("indexes")
-        .and_then(Json::as_arr)
-        .map(|a| a.to_vec())
-        .unwrap_or_default();
-    indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
-    indexes.push(Json::obj(vec![
-        ("name", Json::str(name)),
-        ("file", Json::str(file)),
-        ("length", Json::num(length as f64)),
-        ("count", Json::num(count as f64)),
-    ]));
-    obj.insert("indexes".to_string(), Json::Arr(indexes));
+    rewrite_manifest_indexes(dir, true, |indexes| {
+        indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
+        let stamp = next_recency_stamp(indexes);
+        indexes.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("file", Json::str(file)),
+            ("length", Json::num(length as f64)),
+            ("count", Json::num(count as f64)),
+            ("last_used", Json::num(stamp as f64)),
+        ]));
+        true
+    })
+}
 
-    let tmp = dir.join("manifest.json.tmp");
-    std::fs::write(&tmp, Json::Obj(obj).to_pretty())?;
-    std::fs::rename(&tmp, &mpath)?;
-    Ok(())
+/// Next LRU stamp: one past the largest `last_used` among `indexes`.
+fn next_recency_stamp(indexes: &[Json]) -> u64 {
+    indexes
+        .iter()
+        .filter_map(|e| e.get("last_used").and_then(Json::as_usize))
+        .max()
+        .map(|m| m as u64 + 1)
+        .unwrap_or(1)
+}
+
+/// Bump a persisted index's `last_used` recency stamp to most-recent
+/// (the manifest half of an in-memory LRU touch; called on named
+/// lookups so the eviction order survives a coordinator restart).
+/// Missing manifest or unknown name is a no-op.
+pub fn touch_index_artifact(dir: &Path, name: &str) -> Result<()> {
+    rewrite_manifest_indexes(dir, false, |indexes| {
+        let stamp = next_recency_stamp(indexes);
+        let mut found = false;
+        for e in indexes.iter_mut() {
+            if e.get("name").and_then(Json::as_str) == Some(name) {
+                if let Json::Obj(fields) = e {
+                    fields.insert("last_used".to_string(), Json::num(stamp as f64));
+                    found = true;
+                }
+            }
+        }
+        found
+    })
 }
 
 /// Remove a persisted-index entry from `<dir>/manifest.json` (LRU
-/// eviction path).  Missing manifest or missing entry is a no-op; every
-/// other manifest key survives, and the write is temp-file + rename
-/// like [`record_index_artifact`].
+/// eviction path).  Missing manifest or missing entry is a no-op.
 pub fn remove_index_artifact(dir: &Path, name: &str) -> Result<()> {
+    rewrite_manifest_indexes(dir, false, |indexes| {
+        let before = indexes.len();
+        indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
+        indexes.len() != before
+    })
+}
+
+/// Shared read-modify-write over the manifest's `"indexes"` array: load
+/// `<dir>/manifest.json` (creating a minimal one when `create_if_missing`
+/// — otherwise a missing manifest is a no-op), hand the array to
+/// `mutate`, and atomically rewrite (temp-file + rename, so a crash
+/// never leaves a torn manifest) when it returns true.  Every other
+/// manifest key — including entry fields Rust does not model — survives
+/// the rewrite.
+fn rewrite_manifest_indexes(
+    dir: &Path,
+    create_if_missing: bool,
+    mutate: impl FnOnce(&mut Vec<Json>) -> bool,
+) -> Result<()> {
     let mpath = dir.join("manifest.json");
     let root = match std::fs::read_to_string(&mpath) {
         Ok(text) => Json::parse(&text)?,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            if !create_if_missing {
+                return Ok(());
+            }
+            Json::obj(vec![
+                ("version", Json::num(1.0)),
+                ("entries", Json::Arr(Vec::new())),
+            ])
+        }
         Err(e) => return Err(e.into()),
     };
     let mut obj = root
@@ -213,9 +259,7 @@ pub fn remove_index_artifact(dir: &Path, name: &str) -> Result<()> {
         .and_then(Json::as_arr)
         .map(|a| a.to_vec())
         .unwrap_or_default();
-    let before = indexes.len();
-    indexes.retain(|e| e.get("name").and_then(Json::as_str) != Some(name));
-    if indexes.len() == before {
+    if !mutate(&mut indexes) {
         return Ok(());
     }
     obj.insert("indexes".to_string(), Json::Arr(indexes));
@@ -315,6 +359,42 @@ mod tests {
         // unknown name: no-op, manifest intact
         remove_index_artifact(&dir, "nope").unwrap();
         assert_eq!(Manifest::load(&dir).unwrap().indexes.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recency_stamps_record_and_touch() {
+        let dir = std::env::temp_dir().join(format!("spdtw_man6_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // touching a nonexistent manifest / unknown name is a no-op
+        touch_index_artifact(&dir, "ghost").unwrap();
+        record_index_artifact(&dir, "a", "a.spix", 8, 2).unwrap();
+        record_index_artifact(&dir, "b", "b.spix", 8, 2).unwrap();
+        record_index_artifact(&dir, "c", "c.spix", 8, 2).unwrap();
+        let stamp = |name: &str| {
+            Manifest::load(&dir).unwrap().find_index(name).unwrap().last_used
+        };
+        assert!(stamp("a") < stamp("b") && stamp("b") < stamp("c"));
+
+        // a touch moves the name to most-recent
+        touch_index_artifact(&dir, "a").unwrap();
+        assert!(stamp("a") > stamp("c"));
+        touch_index_artifact(&dir, "nope").unwrap(); // unknown: no-op
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.indexes.len(), 3);
+
+        // re-recording a name replaces the entry with a fresh stamp
+        record_index_artifact(&dir, "b", "b.spix", 8, 4).unwrap();
+        assert!(stamp("b") > stamp("a"));
+        assert_eq!(Manifest::load(&dir).unwrap().find_index("b").unwrap().count, 4);
+
+        // manifests without the field parse as stamp 0 (oldest)
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"entries":[],"indexes":[{"name":"old","file":"old.spix","length":8,"count":1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(stamp("old"), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -63,6 +63,24 @@ impl SearchEngine {
         SearchEngine { index, cascade }
     }
 
+    /// Build an index for any searchable [`MeasureSpec`] over `train`
+    /// and wrap it in an engine — the spec-driven constructor every
+    /// surface shares (see [`Index::build_from_spec`] for which specs
+    /// are searchable and how grids resolve).
+    pub fn from_spec(
+        train: &crate::data::LabeledSet,
+        spec: &crate::measures::spec::MeasureSpec,
+        cascade: Cascade,
+        znormalize: bool,
+        grids: &dyn crate::measures::spec::GridResolver,
+        threads: usize,
+    ) -> crate::error::Result<SearchEngine> {
+        Ok(SearchEngine::new(
+            Arc::new(Index::build_from_spec(train, spec, znormalize, grids, threads)?),
+            cascade,
+        ))
+    }
+
     /// k nearest neighbors of `query`.
     pub fn knn(&self, query: &TimeSeries, k: usize) -> QueryResult {
         self.knn_values(&query.values, k)
@@ -489,6 +507,63 @@ mod tests {
                 .collect();
             assert_eq!(ka, kb);
         }
+    }
+
+    #[test]
+    fn from_spec_engine_matches_directly_built_engine() {
+        use crate::measures::spec::{GridSpec, InlineGrids, MeasureSpec};
+        let ds = synthetic::generate_scaled("CBF", 13, 14, 6).unwrap();
+        let t = ds.series_len();
+        // banded spec == Index::build
+        let eng = SearchEngine::from_spec(
+            &ds.train,
+            &MeasureSpec::BandedDtw { band_cells: 3 },
+            Cascade::default(),
+            false,
+            &InlineGrids,
+            2,
+        )
+        .unwrap();
+        let direct = SearchEngine::new(Arc::new(Index::build(&ds.train, 3, 2)), Cascade::default());
+        for probe in &ds.test.series {
+            let a = eng.knn(probe, 2);
+            let b = direct.knn(probe, 2);
+            for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+                assert_eq!(x.train_idx, y.train_idx);
+            }
+        }
+        // spdtw spec over an inline corridor == Index::build_spdtw
+        let sp = SearchEngine::from_spec(
+            &ds.train,
+            &MeasureSpec::SpDtw { grid: GridSpec::Corridor { t, band: 2 } },
+            Cascade::default(),
+            false,
+            &InlineGrids,
+            2,
+        )
+        .unwrap();
+        let direct = SearchEngine::new(
+            Arc::new(Index::build_spdtw(
+                &ds.train,
+                Arc::new(LocMatrix::corridor(t, 2)),
+                2,
+            )),
+            Cascade::default(),
+        );
+        let a = sp.knn(&ds.test.series[0], 1);
+        let b = direct.knn(&ds.test.series[0], 1);
+        assert_eq!(a.neighbors[0].dist.to_bits(), b.neighbors[0].dist.to_bits());
+        // non-searchable specs are typed errors
+        assert!(SearchEngine::from_spec(
+            &ds.train,
+            &MeasureSpec::Corr,
+            Cascade::default(),
+            false,
+            &InlineGrids,
+            2
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,7 +11,10 @@
 use std::sync::Arc;
 
 use crate::data::LabeledSet;
+use crate::error::{Error, Result};
 use crate::measures::lb_keogh::envelope_into;
+use crate::measures::sakoe_chiba::SakoeChibaDtw;
+use crate::measures::spec::{GridResolver, MeasureSpec};
 use crate::measures::workspace::{self, DpWorkspace};
 use crate::pool;
 use crate::search::early::{dtw_banded_ea_into, spdtw_ea_into, EaResult};
@@ -72,6 +75,60 @@ impl Index {
         let radius = loc.max_band_offset();
         let lb_valid = loc.min_weight() >= 1.0 - 1e-12;
         Self::build_inner(train, radius, usize::MAX, Some(loc), lb_valid, false, threads)
+    }
+
+    /// Build the index a [`MeasureSpec`] asks for — the one spec-driven
+    /// entrypoint the CLI, `SearchConfig` and the TCP v2
+    /// `register_index` op all share.  Searchable specs are the DTW
+    /// family the engine's DP stage can evaluate: `dtw`, `banded_dtw`,
+    /// `sakoe_chiba` (its percentage band resolves against this train
+    /// set's length) and `spdtw` (grid resolved through `grids`).
+    /// Anything else is a typed error, and `znormalize` is banded-DTW
+    /// only — both rejected here, at the boundary.
+    pub fn build_from_spec(
+        train: &LabeledSet,
+        spec: &MeasureSpec,
+        znormalize: bool,
+        grids: &dyn GridResolver,
+        threads: usize,
+    ) -> Result<Index> {
+        spec.validate()?;
+        if train.is_empty() || train.series_len() == 0 {
+            return Err(Error::config("cannot index an empty train set"));
+        }
+        let t = train.series_len();
+        let band = match spec {
+            MeasureSpec::Dtw => usize::MAX,
+            MeasureSpec::BandedDtw { band_cells } => *band_cells,
+            MeasureSpec::SakoeChiba { band_pct } => SakoeChibaDtw::new(*band_pct).band_for(t),
+            MeasureSpec::SpDtw { grid } => {
+                if znormalize {
+                    return Err(Error::config(
+                        "z-normalized indexes are banded-DTW only (not spdtw)",
+                    ));
+                }
+                let loc = grids.resolve(grid)?;
+                if loc.t != t {
+                    return Err(Error::config(format!(
+                        "grid T={} != train series length {t}",
+                        loc.t
+                    )));
+                }
+                return Ok(Self::build_spdtw(train, loc, threads));
+            }
+            other => {
+                return Err(Error::config(format!(
+                    "measure '{}' is not searchable: the k-NN engine evaluates banded DTW \
+                     or SP-DTW",
+                    other.name()
+                )))
+            }
+        };
+        Ok(if znormalize {
+            Self::build_znormalized(train, band, threads)
+        } else {
+            Self::build(train, band, threads)
+        })
     }
 
     fn build_inner(
@@ -299,6 +356,99 @@ mod tests {
         assert_ne!(Index::build(&tweaked, 1, 1).content_hash(), a.content_hash());
         let relabeled = from_pairs(vec![(3, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
         assert_ne!(Index::build(&relabeled, 1, 1).content_hash(), a.content_hash());
+    }
+
+    #[test]
+    fn build_from_spec_covers_the_searchable_family() {
+        use crate::measures::spec::{GridSpec, InlineGrids, TrainGridResolver};
+        let ds = synthetic::generate_scaled("CBF", 3, 10, 4).unwrap();
+        let t = ds.series_len();
+        let r = InlineGrids;
+
+        // banded: identical to the direct builders
+        let a = Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::BandedDtw { band_cells: 4 },
+            false,
+            &r,
+            2,
+        )
+        .unwrap();
+        assert_eq!(a.band, 4);
+        assert_eq!(a.radius, Index::build(&ds.train, 4, 2).radius);
+
+        let unb = Index::build_from_spec(&ds.train, &MeasureSpec::Dtw, false, &r, 2).unwrap();
+        assert_eq!(unb.band, usize::MAX);
+
+        let sc = Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::SakoeChiba { band_pct: 10.0 },
+            false,
+            &r,
+            2,
+        )
+        .unwrap();
+        assert_eq!(sc.band, crate::measures::sakoe_chiba::SakoeChibaDtw::new(10.0).band_for(t));
+
+        let zn = Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::BandedDtw { band_cells: 3 },
+            true,
+            &r,
+            2,
+        )
+        .unwrap();
+        assert!(zn.znormalized);
+
+        // spdtw via an inline corridor and via a learned grid
+        let sp = Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::SpDtw { grid: GridSpec::Corridor { t, band: 2 } },
+            false,
+            &r,
+            2,
+        )
+        .unwrap();
+        assert!(sp.loc.is_some());
+        assert_eq!(sp.radius, 2);
+        let tr = TrainGridResolver { train: Some(&ds.train), grid: None, threads: 2 };
+        let learned = Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::SpDtw { grid: GridSpec::Learned { theta: 0.5, gamma: 1.0 } },
+            false,
+            &tr,
+            2,
+        )
+        .unwrap();
+        assert_eq!(learned.loc.as_ref().unwrap().t, t);
+
+        // typed rejections: non-searchable measure, znorm+spdtw,
+        // grid length mismatch
+        assert!(Index::build_from_spec(&ds.train, &MeasureSpec::Euclidean, false, &r, 2).is_err());
+        assert!(Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::Krdtw { nu: 1.0, band_cells: None },
+            false,
+            &r,
+            2
+        )
+        .is_err());
+        assert!(Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::SpDtw { grid: GridSpec::Corridor { t, band: 2 } },
+            true,
+            &r,
+            2
+        )
+        .is_err());
+        assert!(Index::build_from_spec(
+            &ds.train,
+            &MeasureSpec::SpDtw { grid: GridSpec::Corridor { t: t + 1, band: 2 } },
+            false,
+            &r,
+            2
+        )
+        .is_err());
     }
 
     #[test]

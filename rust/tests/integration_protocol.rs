@@ -1,0 +1,466 @@
+//! Wire-protocol compatibility suite: golden assertions that the v1
+//! bare-op protocol keeps answering exactly as before the v2 redesign,
+//! and that the v2 envelope honors its contract — `id` echo on success
+//! and error, generic `dist`/`kernel`/`register_measure` ops reaching
+//! every measure, and a stable machine-readable `code` on every
+//! malformed-request class.
+
+use std::sync::Arc;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::TimeSeries;
+use spdtw::measures::dtw::dtw_banded;
+use spdtw::measures::krdtw::Krdtw;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::Measure;
+use spdtw::sparse::LocMatrix;
+use spdtw::util::json::Json;
+
+fn start() -> (Server, Client) {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let client = Client::connect(&server.addr).unwrap();
+    (server, client)
+}
+
+fn call(client: &mut Client, req: &str) -> Json {
+    client.call(&Json::parse(req).unwrap()).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// v1 golden suite: bare ops answer with the exact pre-v2 reply fields
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_bare_ops_answer_identically() {
+    let (mut server, mut client) = start();
+
+    // ping
+    let r = call(&mut client, r#"{"op":"ping"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+    assert!(r.get("id").is_none(), "no id sent, none echoed");
+
+    // info
+    let r = call(&mut client, r#"{"op":"info"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    for field in ["workers", "batch_size", "prefer_pjrt", "completed"] {
+        assert!(r.get(field).is_some(), "info field {field}");
+    }
+
+    // register_grid -> spdtw
+    let r = call(&mut client, r#"{"op":"register_grid","t":4,"band":1}"#);
+    let gid = r.req_usize("grid").unwrap();
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"spdtw","grid":{gid},"x":[0,1,2,3],"y":[0,1,2,3]}}"#),
+    );
+    assert_eq!(r.req_f64("value").unwrap(), 0.0);
+    assert_eq!(r.req_str("backend").unwrap(), "native");
+    assert!(r.req_f64("cells").unwrap() > 0.0);
+
+    // spkrdtw
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"spkrdtw","grid":{gid},"nu":0.5,"x":[0,1,2,3],"y":[0,1,2,3]}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert!(r.get("log_k").is_some());
+
+    // register_index reply carries the full PR-2/PR-4 field set
+    let r = call(
+        &mut client,
+        concat!(
+            r#"{"op":"register_index","band":1,"#,
+            r#""series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#
+        ),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let idx = r.req_usize("index").unwrap();
+    assert_eq!(r.get("loaded_from_disk"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("drift"), Some(&Json::Bool(false)));
+    assert_eq!(r.req_str("content_hash").unwrap().len(), 16);
+    assert!(r.req_f64("memory_bytes").unwrap() > 0.0);
+
+    // search
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"search","index":{idx},"k":1,"x":[0,0,0]}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let ns = r.req_arr("neighbors").unwrap();
+    assert_eq!(ns[0].req_f64("dist").unwrap(), 0.0);
+    for field in ["candidates", "pruned", "full_evals", "dp_cells"] {
+        assert!(r.get(field).is_some(), "search field {field}");
+    }
+
+    // batch_search
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[[0,0,0],[5,5,5]]}}"#),
+    );
+    assert_eq!(r.req_usize("queries").unwrap(), 2);
+    assert_eq!(r.req_arr("results").unwrap().len(), 2);
+
+    // metrics keeps every pre-v2 field
+    let r = call(&mut client, r#"{"op":"metrics"}"#);
+    for field in [
+        "submitted",
+        "completed",
+        "failed",
+        "native",
+        "pjrt",
+        "batches",
+        "padded",
+        "search_batches",
+        "requests_inflight",
+        "peak_concurrent_requests",
+        "pool_epochs_live",
+        "pool_peak_epochs",
+        "native_queue_depth",
+        "index_evictions",
+        "mean_latency_us",
+    ] {
+        assert!(r.get(field).is_some(), "metrics field {field}");
+    }
+
+    // v1 error shape: ok:false + error string (code is additive)
+    let r = call(&mut client, r#"{"op":"nosuchop"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get("error").is_some());
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// v2 envelope: id echo + every v1 op still served
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_envelope_echoes_id_on_success_and_error() {
+    let (mut server, mut client) = start();
+
+    // string id on success
+    let r = call(&mut client, r#"{"proto":2,"id":"req-1","op":"ping"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("id"), Some(&Json::Str("req-1".into())));
+
+    // numeric id, v1 op under the envelope
+    let r = call(&mut client, r#"{"proto":2,"id":17,"op":"register_grid","t":4,"band":1}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("id"), Some(&Json::Num(17.0)));
+    let gid = r.req_usize("grid").unwrap();
+    let r = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"id":18,"op":"spdtw","grid":{gid},"x":[0,1,2,3],"y":[0,1,2,3]}}"#),
+    );
+    assert_eq!(r.req_f64("value").unwrap(), 0.0);
+    assert_eq!(r.get("id"), Some(&Json::Num(18.0)));
+
+    // id echoed on errors too
+    let r = call(&mut client, r#"{"proto":2,"id":"oops","op":"nosuchop"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("id"), Some(&Json::Str("oops".into())));
+    assert_eq!(r.req_str("code").unwrap(), "unknown_op");
+
+    // explicit proto:1 is the legacy protocol, still fine
+    let r = call(&mut client, r#"{"proto":1,"op":"ping"}"#);
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+
+    // v2 requests are counted
+    let m = call(&mut client, r#"{"op":"metrics"}"#);
+    assert!(m.req_f64("proto_v2_requests").unwrap() >= 4.0);
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// v2 generic ops: dist / kernel / register_measure reach every measure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_generic_dist_and_kernel_match_direct_evaluation() {
+    let (mut server, mut client) = start();
+    let x = [0.0, 1.0, 2.5, 3.0, 2.0, 1.0];
+    let y = [0.5, 1.5, 2.0, 3.5, 2.5, 0.0];
+    let xj = "[0,1,2.5,3,2,1]";
+    let yj = "[0.5,1.5,2,3.5,2.5,0]";
+
+    // banded DTW through the generic op, bit-compared to the library
+    let r = call(
+        &mut client,
+        &format!(
+            r#"{{"proto":2,"op":"dist","measure":{{"kind":"banded_dtw","band_cells":2}},"x":{xj},"y":{yj}}}"#
+        ),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    let want = dtw_banded(&x, &y, 2);
+    assert_eq!(r.req_f64("value").unwrap().to_bits(), want.value.to_bits());
+    assert_eq!(r.req_f64("cells").unwrap() as u64, want.visited_cells);
+    assert_eq!(r.req_str("backend").unwrap(), "native");
+
+    // sakoe_chiba + euclidean + itakura all answer
+    for kind in [
+        r#"{"kind":"sakoe_chiba","band_pct":20}"#,
+        r#"{"kind":"euclidean"}"#,
+        r#"{"kind":"itakura"}"#,
+        r#"{"kind":"minkowski","p":1}"#,
+    ] {
+        let r = call(
+            &mut client,
+            &format!(r#"{{"proto":2,"op":"dist","measure":{kind},"x":{xj},"y":{yj}}}"#),
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{kind}: {r:?}");
+        assert!(r.req_f64("value").unwrap() >= 0.0);
+    }
+
+    // spdtw over a registered grid == the v1 spdtw op
+    let g = call(&mut client, r#"{"proto":2,"op":"register_grid","t":6,"band":2}"#);
+    let gid = g.req_usize("grid").unwrap();
+    let generic = call(
+        &mut client,
+        &format!(
+            r#"{{"proto":2,"op":"dist","measure":{{"kind":"spdtw","grid":{{"kind":"registered","key":{gid}}}}},"x":{xj},"y":{yj}}}"#
+        ),
+    );
+    let v1 = call(
+        &mut client,
+        &format!(r#"{{"op":"spdtw","grid":{gid},"x":{xj},"y":{yj}}}"#),
+    );
+    assert_eq!(
+        generic.req_f64("value").unwrap().to_bits(),
+        v1.req_f64("value").unwrap().to_bits(),
+        "generic dist and v1 spdtw must agree bitwise"
+    );
+
+    // spdtw over an inline corridor grid == SpDtw on the same corridor
+    let inline = call(
+        &mut client,
+        &format!(
+            r#"{{"proto":2,"op":"dist","measure":{{"kind":"spdtw","grid":{{"kind":"corridor","t":6,"band":2}}}},"x":{xj},"y":{yj}}}"#
+        ),
+    );
+    let direct = SpDtw::new(LocMatrix::corridor(6, 2)).dist(
+        &TimeSeries::new(0, x.to_vec()),
+        &TimeSeries::new(0, y.to_vec()),
+    );
+    assert_eq!(
+        inline.req_f64("value").unwrap().to_bits(),
+        direct.value.to_bits()
+    );
+
+    // kernel op matches the library log-kernel; dist on the same
+    // kernel spec is the normalized distance (0 on self)
+    let r = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"op":"kernel","measure":{{"kind":"krdtw","nu":0.5}},"x":{xj},"y":{yj}}}"#),
+    );
+    let want = Krdtw::new(0.5).log_kernel(&x, &y);
+    assert_eq!(r.req_f64("log_k").unwrap().to_bits(), want.value.to_bits());
+    let r = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"op":"dist","measure":{{"kind":"krdtw","nu":0.5}},"x":{xj},"y":{xj}}}"#),
+    );
+    assert!(r.req_f64("value").unwrap().abs() < 1e-9);
+
+    // register_measure: key-addressed dist answers identically to the
+    // inline spec
+    let reg = call(
+        &mut client,
+        r#"{"proto":2,"op":"register_measure","measure":{"kind":"banded_dtw","band_cells":2}}"#,
+    );
+    assert_eq!(reg.get("ok"), Some(&Json::Bool(true)), "{reg:?}");
+    assert_eq!(reg.get("kernel"), Some(&Json::Bool(false)));
+    assert_eq!(reg.req_str("name").unwrap(), "DTW_band(2)");
+    let mkey = reg.req_usize("measure").unwrap();
+    let r = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"op":"dist","measure":{mkey},"x":{xj},"y":{yj}}}"#),
+    );
+    assert_eq!(r.req_f64("value").unwrap().to_bits(), want_banded(&x, &y));
+
+    // kernel on a distance measure: typed bad_request
+    let r = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"op":"kernel","measure":{mkey},"x":{xj},"y":{yj}}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+
+    // v2 register_index with a measure spec serves searches
+    let reg = call(
+        &mut client,
+        concat!(
+            r#"{"proto":2,"op":"register_index","#,
+            r#""measure":{"kind":"banded_dtw","band_cells":1},"#,
+            r#""series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#
+        ),
+    );
+    assert_eq!(reg.get("ok"), Some(&Json::Bool(true)), "{reg:?}");
+    let idx = reg.req_usize("index").unwrap();
+    let s = call(
+        &mut client,
+        &format!(r#"{{"proto":2,"op":"search","index":{idx},"k":1,"x":[0,0,0]}}"#),
+    );
+    assert_eq!(s.req_arr("neighbors").unwrap()[0].req_f64("dist").unwrap(), 0.0);
+
+    let m = call(&mut client, r#"{"op":"metrics"}"#);
+    assert_eq!(m.req_f64("measures_registered").unwrap(), 1.0);
+
+    server.stop();
+}
+
+#[test]
+fn named_register_index_flags_measure_family_drift() {
+    let (mut server, mut client) = start();
+    let reg = |measure: &str| {
+        format!(
+            r#"{{"proto":2,"op":"register_index","name":"fam","measure":{measure},"series":[[0,0,0],[5,5,5]],"labels":[0,1]}}"#
+        )
+    };
+    // cold build under banded_dtw(1)
+    let r = call(&mut client, &reg(r#"{"kind":"banded_dtw","band_cells":1}"#));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("drift"), Some(&Json::Bool(false)));
+
+    // same name + same family: served from the registry, no drift
+    let r = call(&mut client, &reg(r#"{"kind":"banded_dtw","band_cells":1}"#));
+    assert_eq!(r.get("loaded_from_disk"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("measure_drift"), Some(&Json::Bool(false)), "{r:?}");
+    assert_eq!(r.get("drift"), Some(&Json::Bool(false)));
+
+    // same payload, DIFFERENT measure family: content hash cannot see
+    // it, measure_drift must
+    let r = call(&mut client, &reg(r#"{"kind":"banded_dtw","band_cells":2}"#));
+    assert_eq!(r.get("drift"), Some(&Json::Bool(false)), "payload unchanged");
+    assert_eq!(r.get("measure_drift"), Some(&Json::Bool(true)), "{r:?}");
+    let r = call(
+        &mut client,
+        &reg(r#"{"kind":"spdtw","grid":{"kind":"corridor","t":3,"band":1}}"#),
+    );
+    assert_eq!(r.get("measure_drift"), Some(&Json::Bool(true)), "{r:?}");
+
+    // an invalid measure spec is rejected even on the named shortcut
+    let r = call(&mut client, &reg(r#"{"kind":"krdtw","nu":-1}"#));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+
+    // a v1-style named re-register (no measure field) stays untouched:
+    // no measure_drift key at all
+    let r = call(
+        &mut client,
+        r#"{"op":"register_index","name":"fam","band":1,"series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert!(r.get("measure_drift").is_none());
+    server.stop();
+}
+
+fn want_banded(x: &[f64], y: &[f64]) -> u64 {
+    dtw_banded(x, y, 2).value.to_bits()
+}
+
+// ---------------------------------------------------------------------------
+// stable error codes for every malformed-request class
+// ---------------------------------------------------------------------------
+
+#[test]
+fn error_codes_are_stable_per_malformed_class() {
+    let (mut server, mut client) = start();
+
+    // bad_json cannot go through Client (it serializes valid JSON):
+    // write the raw line ourselves
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let stream = std::net::TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(b"this is not json\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(line.trim()).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.req_str("code").unwrap(), "bad_json");
+    }
+
+    let idx_req = concat!(
+        r#"{"op":"register_index","band":1,"#,
+        r#""series":[[0,0,0],[5,5,5]],"labels":[0,1]}"#
+    );
+    let idx = call(&mut client, idx_req).req_usize("index").unwrap();
+
+    let cases: Vec<(String, &str)> = vec![
+        // unsupported proto
+        (r#"{"proto":3,"op":"ping"}"#.into(), "unsupported_proto"),
+        (r#"{"proto":"two","op":"ping"}"#.into(), "unsupported_proto"),
+        // missing / unknown op
+        (r#"{"proto":2,"no_op":1}"#.into(), "bad_request"),
+        (r#"{"proto":2,"op":"nosuch"}"#.into(), "unknown_op"),
+        (r#"{"op":"nosuch"}"#.into(), "unknown_op"),
+        // malformed fields / parameters
+        (r#"{"proto":2,"op":"dist","x":[1],"y":[1]}"#.into(), "bad_request"),
+        (
+            r#"{"proto":2,"op":"dist","measure":{"kind":"zzz"},"x":[1],"y":[1]}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"proto":2,"op":"dist","measure":{"kind":"krdtw","nu":-1},"x":[1],"y":[1]}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"proto":2,"op":"dist","measure":{"kind":"dtw"},"x":["a"],"y":[1]}"#.into(),
+            "bad_request",
+        ),
+        (r#"{"op":"register_grid"}"#.into(), "bad_request"),
+        (r#"{"op":"spdtw"}"#.into(), "bad_request"),
+        // non-finite series values: bad_input on both protocols
+        (
+            r#"{"proto":2,"op":"dist","measure":{"kind":"dtw"},"x":[1e999],"y":[1]}"#.into(),
+            "bad_input",
+        ),
+        (
+            format!(r#"{{"op":"search","index":{idx},"k":1,"x":[1e999,0,0]}}"#),
+            "bad_input",
+        ),
+        (
+            format!(r#"{{"op":"batch_search","index":{idx},"k":1,"xs":[[-1e999,0,0]]}}"#),
+            "bad_input",
+        ),
+        (
+            r#"{"op":"register_index","series":[[1e999,0],[0,0]]}"#.into(),
+            "bad_input",
+        ),
+        // unequal lengths for an equal-length measure: bad_input
+        (
+            r#"{"proto":2,"op":"kernel","measure":{"kind":"kga","nu":1},"x":[1,2],"y":[1,2,3]}"#
+                .into(),
+            "bad_input",
+        ),
+        // unknown keys: not_found
+        (r#"{"op":"spdtw","grid":99,"x":[1],"y":[1]}"#.into(), "not_found"),
+        (r#"{"op":"search","index":99,"k":1,"x":[0,0,0]}"#.into(), "not_found"),
+        (
+            r#"{"proto":2,"op":"dist","measure":42,"x":[1],"y":[1]}"#.into(),
+            "not_found",
+        ),
+        (
+            r#"{"proto":2,"op":"dist","measure":{"kind":"spdtw","grid":{"kind":"registered","key":9}},"x":[1],"y":[1]}"#
+                .into(),
+            "not_found",
+        ),
+    ];
+    for (req, want_code) in cases {
+        let r = call(&mut client, &req);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{req}");
+        assert_eq!(r.req_str("code").unwrap(), want_code, "{req}");
+        assert!(r.get("error").is_some(), "{req}");
+    }
+
+    // the connection survived every failure
+    let r = call(&mut client, r#"{"op":"ping"}"#);
+    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+    server.stop();
+}
