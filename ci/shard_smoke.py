@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Multi-process shard smoke test (CI).
+
+Expects two `spdtw shard-serve` processes (shards 0 and 1 of 2) and one
+`spdtw serve --shards ...` front already listening on loopback:
+
+    shard 0: 127.0.0.1:7971      shard 1: 127.0.0.1:7972
+    front:   127.0.0.1:7970
+
+Registers a 4-series corpus through the front (round-robin split puts
+globals 0,2 on shard 0 and 1,3 on shard 1), runs one exact k-NN query,
+checks the merged answer, and shuts all three processes down over the
+wire so the CI step can `wait` on them.
+"""
+
+import json
+import socket
+import sys
+import time
+
+FRONT = ("127.0.0.1", 7970)
+SHARDS = [("127.0.0.1", 7971), ("127.0.0.1", 7972)]
+
+
+def call(addr, req, attempts=40):
+    """One request/reply line against a spdtw server, retrying connect
+    while the server is still booting."""
+    last = None
+    for _ in range(attempts):
+        try:
+            with socket.create_connection(addr, timeout=10) as s:
+                f = s.makefile("rw", encoding="utf-8")
+                f.write(json.dumps(req) + "\n")
+                f.flush()
+                return json.loads(f.readline())
+        except OSError as e:
+            last = e
+            time.sleep(0.25)
+    raise SystemExit(f"cannot reach {addr}: {last}")
+
+
+def expect(cond, what, reply):
+    if not cond:
+        raise SystemExit(f"FAIL: {what}: {json.dumps(reply)}")
+
+
+def main():
+    # both shards must identify with their role before the front is used
+    for sid, addr in enumerate(SHARDS):
+        info = call(addr, {"op": "info"})
+        expect(info.get("ok") is True, f"shard {sid} info", info)
+        expect(info.get("shard_id") == sid, f"shard {sid} reports its id", info)
+        expect(info.get("shards_total") == 2, f"shard {sid} fleet size", info)
+
+    info = call(FRONT, {"op": "info"})
+    expect(info.get("ok") is True, "front info", info)
+    expect(info.get("role") == "front", "front role", info)
+    expect(info.get("shards_total") == 2, "front fleet size", info)
+    expect(all(s.get("up") for s in info.get("shards", [])), "links up", info)
+
+    reg = call(
+        FRONT,
+        {
+            "proto": 2,
+            "id": 1,
+            "op": "register_index",
+            "name": "smoke",
+            "band": 1,
+            "series": [[0, 0, 0], [5, 5, 5], [0.1, 0.1, 0.1], [4, 4, 4]],
+            "labels": [0, 1, 0, 1],
+        },
+    )
+    expect(reg.get("ok") is True, "register through front", reg)
+    expect(reg.get("id") == 1, "v2 id echo", reg)
+    expect(reg.get("count") == 4, "total series", reg)
+    expect(reg.get("per_shard") == [2, 2], "round-robin split 0,2 / 1,3", reg)
+
+    r = call(
+        FRONT,
+        {"proto": 2, "id": 2, "op": "search", "index": "smoke", "k": 2, "x": [0, 0, 0]},
+    )
+    expect(r.get("ok") is True, "search through front", r)
+    expect(r.get("shards_ok") == 2 and r.get("shards_total") == 2, "fan-out health", r)
+    ns = r.get("neighbors", [])
+    expect(len(ns) == 2, "k=2 neighbors", r)
+    # exact expected answer: global 0 at distance 0, then global 2 —
+    # both live on shard 0, so a wrong merge (or a silently dropped
+    # shard) would be visible here
+    expect(ns[0].get("dist") == 0 and ns[0].get("idx") == 0, "nearest is global 0", r)
+    expect(ns[0].get("label") == 0, "nearest label", r)
+    expect(ns[1].get("idx") == 2 and ns[1].get("dist") > 0, "runner-up is global 2", r)
+
+    # clean shutdown over the wire: front first, then both shards, so
+    # every `spdtw` serve loop exits and the CI step's `wait` returns
+    for addr in [FRONT] + SHARDS:
+        r = call(addr, {"op": "shutdown"}, attempts=4)
+        expect(r.get("ok") is True, f"shutdown {addr}", r)
+
+    print("shard smoke OK: exact merged answer over 2 shards + front")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

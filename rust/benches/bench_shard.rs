@@ -1,0 +1,131 @@
+//! Shard fan-out bench (EXPERIMENTS.md §Sharding): aggregate k-NN QPS
+//! and per-query latency percentiles through the `ShardCoordinator`
+//! against in-process fleets of 1 / 2 / 4 shard servers on loopback —
+//! one fixed synthetic corpus, so rows compare directly — written to
+//! `BENCH_SHARD.json`.  The merged answers at every shard count are
+//! cross-checked bitwise against the 1-shard fleet before timing, so a
+//! row can never report the throughput of a wrong answer.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spdtw::config::{CoordinatorConfig, ShardRole};
+use spdtw::coordinator::server::Server;
+use spdtw::coordinator::Coordinator;
+use spdtw::data::synthetic;
+use spdtw::shard::{ShardClientConfig, ShardCoordinator, ShardNeighbor, ShardRegistration};
+use spdtw::util::json::Json;
+use spdtw::util::mathx::percentile;
+
+const K: usize = 5;
+const TIMED_QUERIES: usize = 256;
+
+fn start_fleet(shards_total: usize) -> (Vec<Server>, Arc<ShardCoordinator>) {
+    let servers: Vec<Server> = (0..shards_total)
+        .map(|i| {
+            let cfg = CoordinatorConfig {
+                shard: Some(ShardRole {
+                    shard_id: i,
+                    shards_total,
+                }),
+                workers: 2,
+                ..Default::default()
+            };
+            let coord = Arc::new(Coordinator::start(cfg, None).unwrap());
+            Server::start(coord, "127.0.0.1:0").unwrap()
+        })
+        .collect();
+    let sc = ShardCoordinator::connect(ShardClientConfig::for_addrs(
+        servers.iter().map(|s| s.addr.to_string()).collect(),
+    ))
+    .unwrap();
+    (servers, sc)
+}
+
+fn main() {
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 60, 64).unwrap();
+    let band = (ds.series_len() as f64 * 0.1).round().max(1.0) as usize;
+    let series: Vec<Vec<f64>> = ds.train.series.iter().map(|s| s.values.clone()).collect();
+    let labels: Vec<usize> = ds.train.series.iter().map(|s| s.label).collect();
+    let queries: Vec<&Vec<f64>> = (0..TIMED_QUERIES)
+        .map(|i| &ds.test.series[i % ds.test.len()].values)
+        .collect();
+    println!(
+        "shard fan-out bench: {} train series of length {}, k={K}, {} queries per row",
+        series.len(),
+        ds.series_len(),
+        queries.len()
+    );
+
+    let mut reference: Vec<Vec<ShardNeighbor>> = Vec::new();
+    let mut records: Vec<Json> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let (servers, sc) = start_fleet(shards);
+        let si = sc
+            .register(&ShardRegistration {
+                name: Some("bench".to_string()),
+                series: series.clone(),
+                labels: labels.clone(),
+                band: Some(band),
+                measure: None,
+            })
+            .unwrap();
+
+        // exactness cross-check + warmup: every fleet size must answer
+        // bit-identically to the 1-shard fleet
+        for (qi, q) in queries.iter().take(16).enumerate() {
+            let got = sc.search(si.key, q, K, None).unwrap().neighbors;
+            if shards == 1 {
+                reference.push(got);
+            } else {
+                let want = &reference[qi];
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(want) {
+                    assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "shards={shards} q={qi}");
+                    assert_eq!(g.global_idx, w.global_idx, "shards={shards} q={qi}");
+                }
+            }
+        }
+
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(queries.len());
+        let t0 = Instant::now();
+        for q in &queries {
+            let tq = Instant::now();
+            std::hint::black_box(sc.search(si.key, q, K, None).unwrap());
+            lat_ms.push(tq.elapsed().as_secs_f64() * 1e3);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let qps = queries.len() as f64 / secs;
+        let p50 = percentile(&lat_ms, 50.0);
+        let p99 = percentile(&lat_ms, 99.0);
+        let snap = sc.metrics();
+        let candidates_per_query = snap.merge_candidates as f64 / snap.merges as f64;
+        println!(
+            "  {shards} shard(s): {qps:>8.0} q/s  p50 {p50:>7.3} ms  p99 {p99:>7.3} ms  \
+             ({candidates_per_query:.1} merge candidates/query)",
+        );
+        records.push(Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("queries", Json::num(queries.len() as f64)),
+            ("secs", Json::num(secs)),
+            ("qps", Json::num(qps)),
+            ("p50_ms", Json::num(p50)),
+            ("p99_ms", Json::num(p99)),
+            ("merge_candidates_per_query", Json::num(candidates_per_query)),
+        ]));
+        drop(servers);
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("shard_fanout_search")),
+        ("dataset", Json::str(ds.name.clone())),
+        ("train", Json::num(series.len() as f64)),
+        ("series_len", Json::num(ds.series_len() as f64)),
+        ("band", Json::num(band as f64)),
+        ("k", Json::num(K as f64)),
+        ("records", Json::Arr(records)),
+    ]);
+    if std::fs::write("BENCH_SHARD.json", out.to_pretty()).is_ok() {
+        println!("wrote BENCH_SHARD.json");
+    }
+}

@@ -301,6 +301,18 @@ impl SearchConfig {
     }
 }
 
+/// The shard identity of a coordinator participating in a sharded
+/// fleet (`spdtw shard-serve`): this server owns shard `shard_id` of
+/// `shards_total`.  A coordinator with a role serves the `shard_search`
+/// fan-out op and accepts sharded `register_index` requests for its own
+/// shard id only (see `crate::shard` for the topology and exactness
+/// argument).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRole {
+    pub shard_id: usize,
+    pub shards_total: usize,
+}
+
 /// Coordinator service settings.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -335,6 +347,14 @@ pub struct CoordinatorConfig {
     /// registration keeps serving; the index simply won't warm-start.
     /// `None` (default) disables the budget.
     pub index_store_max_bytes: Option<u64>,
+    /// This coordinator's identity in a sharded fleet (`None` = a
+    /// plain single-node server; the fan-out ops are refused).
+    pub shard: Option<ShardRole>,
+    /// Shard server addresses for the *front* role (`spdtw serve
+    /// --shards host:port,...`).  Consumed by the CLI to start a
+    /// `shard::ShardCoordinator` instead of a local serving
+    /// coordinator; mutually exclusive with [`Self::shard`].
+    pub shards: Vec<String>,
 }
 
 impl Default for CoordinatorConfig {
@@ -348,6 +368,8 @@ impl Default for CoordinatorConfig {
             index_store: None,
             warm_start: true,
             index_store_max_bytes: None,
+            shard: None,
+            shards: Vec::new(),
         }
     }
 }
@@ -363,6 +385,23 @@ impl CoordinatorConfig {
             return Err(Error::config(
                 "index_store_max_bytes must be >= 1 (use None to disable)",
             ));
+        }
+        if let Some(role) = &self.shard {
+            if role.shards_total == 0 {
+                return Err(Error::config("shards_total must be >= 1"));
+            }
+            if role.shard_id >= role.shards_total {
+                return Err(Error::config(format!(
+                    "shard_id {} out of range (shards_total {})",
+                    role.shard_id, role.shards_total
+                )));
+            }
+            if !self.shards.is_empty() {
+                return Err(Error::config(
+                    "a process is either a shard server (shard) or a fan-out \
+                     front (shards), not both",
+                ));
+            }
         }
         Ok(())
     }
@@ -447,6 +486,33 @@ mod tests {
         assert!(SearchConfig::from_json(&bad).is_err());
         let unknown = Json::parse(r#"{"measure":{"kind":"zzz"}}"#).unwrap();
         assert!(SearchConfig::from_json(&unknown).is_err());
+    }
+
+    #[test]
+    fn shard_role_validation() {
+        let mut cfg = CoordinatorConfig::default();
+        cfg.shard = Some(ShardRole {
+            shard_id: 0,
+            shards_total: 2,
+        });
+        cfg.validate().unwrap();
+        cfg.shard = Some(ShardRole {
+            shard_id: 2,
+            shards_total: 2,
+        });
+        assert!(cfg.validate().is_err());
+        cfg.shard = Some(ShardRole {
+            shard_id: 0,
+            shards_total: 0,
+        });
+        assert!(cfg.validate().is_err());
+        // shard server and fan-out front are mutually exclusive roles
+        cfg.shard = Some(ShardRole {
+            shard_id: 0,
+            shards_total: 1,
+        });
+        cfg.shards = vec!["127.0.0.1:1".into()];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -43,8 +43,15 @@ pub struct Metrics {
     // ---- measure registry / protocol v2 ----
     /// Measures bound via `register_measure` (TCP v2 or the API).
     pub measures_registered: AtomicU64,
+    /// Measures replayed from the persisted `measures.json` at boot.
+    pub measures_loaded: AtomicU64,
+    /// Persisted measures that failed to re-bind at boot (skipped; their
+    /// keys stay dead rather than resolving to a different measure).
+    pub measure_load_failures: AtomicU64,
     /// Requests that arrived in a protocol-v2 envelope (`proto: 2`).
     pub proto_v2_requests: AtomicU64,
+    /// `shard_search` ops served by this process (shard-server role).
+    pub shard_searches: AtomicU64,
     // ---- concurrency (multi-client execution over the compute pool) ----
     /// Batch search requests (each runs as its own pool epoch).
     pub search_batches: AtomicU64,
@@ -122,7 +129,10 @@ impl Metrics {
             index_load_failures: self.index_load_failures.load(Ordering::Relaxed),
             index_evictions: self.index_evictions.load(Ordering::Relaxed),
             measures_registered: self.measures_registered.load(Ordering::Relaxed),
+            measures_loaded: self.measures_loaded.load(Ordering::Relaxed),
+            measure_load_failures: self.measure_load_failures.load(Ordering::Relaxed),
             proto_v2_requests: self.proto_v2_requests.load(Ordering::Relaxed),
+            shard_searches: self.shard_searches.load(Ordering::Relaxed),
             search_batches: self.search_batches.load(Ordering::Relaxed),
             gram_requests: self.gram_requests.load(Ordering::Relaxed),
             batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
@@ -176,8 +186,14 @@ pub struct Snapshot {
     pub index_evictions: u64,
     /// Measures bound via `register_measure`.
     pub measures_registered: u64,
+    /// Measures replayed from the persisted store at boot.
+    pub measures_loaded: u64,
+    /// Persisted measures skipped at boot (could not re-bind).
+    pub measure_load_failures: u64,
     /// Requests served from a protocol-v2 envelope.
     pub proto_v2_requests: u64,
+    /// `shard_search` ops served (shard-server role).
+    pub shard_searches: u64,
     pub search_batches: u64,
     pub gram_requests: u64,
     /// Jobs in partial PJRT batches at snapshot time (gauge).
@@ -238,7 +254,8 @@ impl Snapshot {
              search: {} queries, {} candidates -> {} kim / {} keogh / {} rev skips, \
              {} abandons, {} full DPs ({:.1}% pruned)\n\
              index store: {} saved, {} warm-loaded, {} rejected, {} evicted\n\
-             protocol: {} measures registered, {} v2 requests\n\
+             protocol: {} measures registered ({} replayed, {} replay failures), \
+             {} v2 requests, {} shard searches\n\
              concurrency: {} batch / {} gram requests, {} inflight (peak {}), \
              pool {} epochs live (peak {}), native queue {}\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
@@ -264,7 +281,10 @@ impl Snapshot {
             self.index_load_failures,
             self.index_evictions,
             self.measures_registered,
+            self.measures_loaded,
+            self.measure_load_failures,
             self.proto_v2_requests,
+            self.shard_searches,
             self.search_batches,
             self.gram_requests,
             self.requests_inflight,

@@ -42,7 +42,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::classify::gram::train_gram;
-use crate::config::CoordinatorConfig;
+use crate::config::{CoordinatorConfig, ShardRole};
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::{Error, Result};
 use crate::measures::spdtw::SpDtw;
@@ -51,8 +51,8 @@ use crate::measures::spkrdtw::SpKrdtw;
 use crate::measures::{KernelMeasure, Measure};
 use crate::pool::WorkerPool;
 use crate::runtime::{
-    record_index_artifact, remove_index_artifact, touch_index_artifact, DtwBatch, KernelKind,
-    KrdtwBatch, Manifest, PjrtHandle,
+    load_measure_specs, record_index_artifact, record_measure_spec, remove_index_artifact,
+    touch_index_artifact, DtwBatch, KernelKind, KrdtwBatch, Manifest, PjrtHandle,
 };
 use crate::search::{persist, Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
@@ -248,7 +248,7 @@ impl Coordinator {
             )
         };
 
-        Ok(Coordinator {
+        let coord = Coordinator {
             cfg,
             metrics,
             native_pool,
@@ -260,7 +260,15 @@ impl Coordinator {
             indexes: Mutex::new(index_reg),
             measures: Mutex::new(MeasureRegistry::new()),
             pjrt,
-        })
+        };
+        // Measures replay after construction (binding needs the grid
+        // resolver, i.e. a &Coordinator), alongside the index warm start.
+        if coord.cfg.warm_start {
+            if let Some(dir) = coord.cfg.index_store.clone() {
+                coord.replay_measures(&dir);
+            }
+        }
+        Ok(coord)
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -313,10 +321,48 @@ impl Coordinator {
     /// key for later [`Self::submit_dist_key`] / [`Self::submit_kernel_key`]
     /// calls (the TCP `register_measure` op).
     pub fn register_measure(&self, mspec: &MeasureSpec) -> Result<MeasureKey> {
+        let (built, required_len) = self.bind_measure(mspec)?;
+        // cap check and insert under ONE guard (the expensive binding
+        // above stays outside the lock): entries are never evicted, so
+        // without this bound a wire client looping register_measure
+        // over large inline grids accumulates unbounded memory — and a
+        // check-then-insert across two lock acquisitions would let
+        // concurrent registrations overshoot the cap
+        let mut reg = self.measures.lock().unwrap();
+        if reg.len() >= MAX_REGISTERED_MEASURES {
+            return Err(Error::config(format!(
+                "measure registry full ({MAX_REGISTERED_MEASURES} entries); \
+                 reuse registered keys or send inline specs"
+            )));
+        }
+        let key = reg.insert(MeasureEntry {
+            spec: mspec.clone(),
+            built,
+            required_len,
+        });
+        // Persist the spec next to the index store (its own
+        // `measures.json` — the index manifest has its own lock
+        // discipline) so a warm-started coordinator replays the entry
+        // at this same key.  Still under the registry guard, which
+        // serializes the file's read-modify-write.  Best-effort: a
+        // failed write only costs restart persistence.
+        if let Some(dir) = &self.cfg.index_store {
+            if let Err(e) = record_measure_spec(dir, key.0, mspec) {
+                eprintln!("warning: could not persist measure {}: {e}", key.0);
+            }
+        }
+        drop(reg);
+        self.metrics
+            .measures_registered
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(key)
+    }
+
+    /// Validate and bind a [`MeasureSpec`] into a runnable entry, with
+    /// any grid reference resolved against the registry exactly once —
+    /// shared by live registration and boot-time replay.
+    fn bind_measure(&self, mspec: &MeasureSpec) -> Result<(BuiltMeasure, Option<usize>)> {
         mspec.validate()?;
-        // Resolve the grid (if any) exactly once; its length becomes
-        // the entry's operand requirement and the bound object reuses
-        // it via a fixed resolver.
         let loc = match mspec.grid() {
             Some(g) => Some(CoordinatorGrids(self).resolve(g)?),
             None => None,
@@ -336,29 +382,48 @@ impl Coordinator {
             }
             None => BuiltMeasure::Dist(mspec.build_measure(&spec::InlineGrids)?),
         };
-        // cap check and insert under ONE guard (the expensive binding
-        // above stays outside the lock): entries are never evicted, so
-        // without this bound a wire client looping register_measure
-        // over large inline grids accumulates unbounded memory — and a
-        // check-then-insert across two lock acquisitions would let
-        // concurrent registrations overshoot the cap
-        let mut reg = self.measures.lock().unwrap();
-        if reg.len() >= MAX_REGISTERED_MEASURES {
-            return Err(Error::config(format!(
-                "measure registry full ({MAX_REGISTERED_MEASURES} entries); \
-                 reuse registered keys or send inline specs"
-            )));
+        Ok((built, required_len))
+    }
+
+    /// Boot-time measure replay: re-bind every persisted
+    /// `register_measure` entry at its original key.  Specs that no
+    /// longer bind — notably grid references (`registered` keys point
+    /// into the previous process's grid registry, which does not
+    /// persist) — are skipped with a warning, and their keys stay dead
+    /// so a stale client never silently resolves a different measure.
+    fn replay_measures(&self, dir: &std::path::Path) {
+        let specs = match load_measure_specs(dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("warning: measure store unreadable ({e}); measures cold start");
+                return;
+            }
+        };
+        for (key, mspec) in specs {
+            match self.bind_measure(&mspec) {
+                Ok((built, required_len)) => {
+                    self.measures.lock().unwrap().insert_at(
+                        MeasureKey(key),
+                        MeasureEntry {
+                            spec: mspec,
+                            built,
+                            required_len,
+                        },
+                    );
+                    self.metrics.measures_loaded.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: skipping persisted measure {key} ('{}'): {e}",
+                        mspec.name()
+                    );
+                    self.measures.lock().unwrap().reserve_past(MeasureKey(key));
+                    self.metrics
+                        .measure_load_failures
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
-        let key = reg.insert(MeasureEntry {
-            spec: mspec.clone(),
-            built,
-            required_len,
-        });
-        drop(reg);
-        self.metrics
-            .measures_registered
-            .fetch_add(1, Ordering::Relaxed);
-        Ok(key)
     }
 
     /// Resolve a registered measure.
@@ -557,6 +622,42 @@ impl Coordinator {
     /// the index to the on-disk store.
     pub fn register_index(&self, index: Index) -> IndexKey {
         self.indexes.lock().unwrap().insert(Arc::new(index))
+    }
+
+    /// This process's shard identity, when configured as a shard server
+    /// (`CoordinatorConfig::shard`); `None` on ordinary single-node
+    /// coordinators.
+    pub fn shard_role(&self) -> Option<ShardRole> {
+        self.cfg.shard
+    }
+
+    /// Count a `shard_search` op (called by the TCP server).
+    pub(crate) fn note_shard_search(&self) {
+        self.metrics.shard_searches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Register a shard slice with its local→global train-index map
+    /// (the TCP `register_index` `global_ids` path; see
+    /// [`crate::shard`]).  Sharded registrations are anonymous and
+    /// in-memory only: the *front* owns naming and topology persistence
+    /// (the shard manifest), and a warm-started named index would come
+    /// back without its global map and silently mis-serve.
+    pub fn register_index_sharded(&self, index: Index, global_ids: Vec<usize>) -> IndexKey {
+        self.indexes
+            .lock()
+            .unwrap()
+            .insert_sharded(Arc::new(index), global_ids)
+    }
+
+    /// The local→global map a sharded registration carried; `Ok(None)`
+    /// for ordinary indexes (`shard_search` refuses those as
+    /// mis-routed) and `Err(not_found)` for unknown keys.
+    pub fn index_global_ids(&self, key: IndexKey) -> Result<Option<Arc<Vec<usize>>>> {
+        let reg = self.indexes.lock().unwrap();
+        let entry = reg
+            .get_entry(key)
+            .ok_or_else(|| Error::not_found("index key", key.0.to_string()))?;
+        Ok(entry.global_ids.as_ref().map(Arc::clone))
     }
 
     /// Register `index` under a stable `name`, saving it into the
@@ -988,8 +1089,10 @@ fn check_required_len(entry: &MeasureEntry, len: usize) -> Result<()> {
 }
 
 /// Store names become file names: keep them to a safe charset so a
-/// wire-supplied name can never escape the store directory.
-fn validate_index_name(name: &str) -> Result<()> {
+/// wire-supplied name can never escape the store directory.  `pub(crate)`
+/// because the shard front applies the same rule before fanning a named
+/// registration out to the fleet.
+pub(crate) fn validate_index_name(name: &str) -> Result<()> {
     let ok = !name.is_empty()
         && name.len() <= 64
         && !name.starts_with('.')
@@ -1573,6 +1676,79 @@ mod tests {
         let err = c.register_measure(&MeasureSpec::Euclidean).unwrap_err();
         assert_eq!(err.code(), "bad_request");
         assert!(err.to_string().contains("registry full"));
+    }
+
+    #[test]
+    fn registered_measures_survive_restart() {
+        let store = std::env::temp_dir().join(format!("spdtw_measures_{}", std::process::id()));
+        std::fs::remove_dir_all(&store).ok();
+        let x = TimeSeries::new(0, (0..8).map(|i| i as f64).collect());
+        let y = TimeSeries::new(0, (0..8).map(|i| (i as f64) * 0.25).collect());
+        let mut cfg = CoordinatorConfig::default();
+        cfg.index_store = Some(store.clone());
+        let spec_k = MeasureSpec::Krdtw { nu: 0.5, band_cells: None };
+        let spec_sp = MeasureSpec::SpDtw { grid: GridSpec::Corridor { t: 8, band: 2 } };
+        let (k1, k2, kreg, expect_kernel, expect_dist);
+        {
+            let c = Coordinator::start(cfg.clone(), None).unwrap();
+            k1 = c.register_measure(&spec_k).unwrap();
+            k2 = c.register_measure(&spec_sp).unwrap();
+            // a registered-grid reference persists but cannot re-bind
+            // (grid registries do not survive a restart)
+            let g = c.register_grid(LocMatrix::corridor(8, 1)).unwrap();
+            kreg = c
+                .register_measure(&MeasureSpec::SpDtw {
+                    grid: GridSpec::Registered { key: g.0 },
+                })
+                .unwrap();
+            expect_kernel = c.submit_kernel_key(k1, &x, &y).unwrap().wait().unwrap().value;
+            expect_dist = c.submit_dist_key(k2, &x, &y).unwrap().wait().unwrap().value;
+        }
+
+        // restart: bindable measures replay at their original keys,
+        // answering bit-identically; the grid reference is skipped
+        let c2 = Coordinator::start(cfg.clone(), None).unwrap();
+        let snap = c2.metrics();
+        assert_eq!(snap.measures_loaded, 2);
+        assert_eq!(snap.measure_load_failures, 1);
+        let got_k = c2.submit_kernel_key(k1, &x, &y).unwrap().wait().unwrap().value;
+        let got_d = c2.submit_dist_key(k2, &x, &y).unwrap().wait().unwrap().value;
+        assert_eq!(got_k.to_bits(), expect_kernel.to_bits());
+        assert_eq!(got_d.to_bits(), expect_dist.to_bits());
+        // the unbindable entry's key is dead, not recycled: a fresh
+        // registration must get a strictly newer key
+        assert!(c2.submit_dist_key(kreg, &x, &y).is_err());
+        let k3 = c2.register_measure(&MeasureSpec::Euclidean).unwrap();
+        assert!(k3.0 > kreg.0);
+
+        // warm start disabled -> no replay
+        cfg.warm_start = false;
+        let c3 = Coordinator::start(cfg, None).unwrap();
+        assert!(c3.submit_kernel_key(k1, &x, &y).is_err());
+        std::fs::remove_dir_all(&store).ok();
+    }
+
+    #[test]
+    fn sharded_registration_keeps_global_ids() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 4, 8, 2).unwrap();
+        let plain = c.register_index(Index::build(&ds.train, 2, 1));
+        let gids = vec![1, 3, 5, 7];
+        let sharded = c.register_index_sharded(Index::build(&ds.train, 2, 1), gids.clone());
+        assert_eq!(c.index_global_ids(plain).unwrap(), None);
+        assert_eq!(
+            c.index_global_ids(sharded).unwrap().as_deref(),
+            Some(&gids)
+        );
+        assert!(c.index_global_ids(IndexKey(99)).is_err());
+        // sharded slices stay searchable like any registered index
+        let out = c
+            .submit_search(sharded, &ds.test.series[0], 2, Cascade::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.neighbors.len(), 2);
     }
 
     #[test]

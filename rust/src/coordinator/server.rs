@@ -87,6 +87,31 @@
 //! The `code` field on error replies and the `id` echo are additive —
 //! v1 clients that ignore unknown fields see identical behavior
 //! (golden-tested in `rust/tests/integration_protocol.rs`).
+//!
+//! ## Sharding
+//!
+//! A server started with a [`ShardRole`](crate::config::ShardRole)
+//! (`spdtw shard-serve --shard-id I --shards-total N`) owns one slice
+//! of a logical index and additionally serves the fan-out ops below;
+//! the topology diagram lives on [`crate::shard`].  The front
+//! (`spdtw serve --shards host:port,...`) is the only intended client
+//! of these ops, multiplexing any number of in-flight v2 `id`s per
+//! connection.
+//!
+//! | op | extra request fields | reply |
+//! |---|---|---|
+//! | `info` | — | gains `shard_id`, `shards_total` on shard servers |
+//! | `register_index` | `shard` (must equal this server's shard id), `global_ids` (strictly increasing, one per series; names rejected) | gains `shard` |
+//! | `shard_search` | `shard`, `index`, `k`, `x` *or* `xs`, optional `cascade` | `neighbors` with `idx` remapped to global index space (`local_idx` keeps the shard-local position) |
+//!
+//! A `shard` id outside the server's layout — wrong id or `>=
+//! shards_total` — is rejected with code `bad_request` before anything
+//! is registered or searched, so a mis-routed fan-out can never be
+//! silently accepted.  Partial-result semantics live on the front: when
+//! a shard stays down after a capped-backoff reconnect, the front's
+//! reply is the typed `unavailable` error carrying
+//! `shards_ok`/`shards_total` — exact merged results or a typed error,
+//! never a silently truncated neighbor list.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -156,6 +181,13 @@ impl Server {
             let _ = t.join();
         }
     }
+
+    /// Whether the stop flag has fired (the TCP `shutdown` op or
+    /// [`Self::stop`]) — lets a CLI serve loop exit cleanly instead of
+    /// sleeping forever.
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for Server {
@@ -187,7 +219,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
     Ok(())
 }
 
-fn parse_cascade(req: &Json) -> Result<Cascade> {
+pub(crate) fn parse_cascade(req: &Json) -> Result<Cascade> {
     match req.get("cascade").and_then(Json::as_str) {
         Some("none") => Ok(Cascade::none()),
         Some("full") | None => Ok(Cascade::default()),
@@ -207,6 +239,23 @@ fn neighbors_json(out: &crate::coordinator::request::SearchOutcome) -> Json {
     }))
 }
 
+/// Like [`neighbors_json`] but with `idx` remapped to the global index
+/// space through the shard's registered `global_ids`; `local_idx`
+/// keeps the shard-local position for debugging.
+fn neighbors_json_global(
+    out: &crate::coordinator::request::SearchOutcome,
+    global_ids: &[usize],
+) -> Json {
+    Json::arr(out.neighbors.iter().map(|n| {
+        Json::obj(vec![
+            ("dist", Json::num(n.dist)),
+            ("label", Json::num(n.label as f64)),
+            ("idx", Json::num(global_ids[n.train_idx] as f64)),
+            ("local_idx", Json::num(n.train_idx as f64)),
+        ])
+    }))
+}
+
 fn parse_series(json: &Json, field: &str) -> Result<TimeSeries> {
     let arr = json.req_arr(field)?;
     let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
@@ -219,7 +268,7 @@ fn parse_series(json: &Json, field: &str) -> Result<TimeSeries> {
 /// NaN/±inf values would flow straight into the DP kernels (and poison
 /// every distance they touch); reject them at the wire with the typed
 /// `bad_input` class instead.
-fn check_finite(values: &[f64], field: &str) -> Result<()> {
+pub(crate) fn check_finite(values: &[f64], field: &str) -> Result<()> {
     if values.iter().all(|v| v.is_finite()) {
         Ok(())
     } else {
@@ -247,18 +296,31 @@ fn parse_measure_sel(req: &Json) -> Result<MeasureSel> {
 }
 
 /// Build an error reply: `{"ok":false,"error":...,"code":...}` plus the
-/// echoed `id` when the request carried one.
-fn error_reply(e: &crate::error::Error, id: Option<&Json>) -> Json {
+/// echoed `id` when the request carried one.  The typed partial-result
+/// error additionally carries `shards_ok`/`shards_total` so a client
+/// can tell a degraded fleet from a plain outage.
+pub(crate) fn error_reply(e: &crate::error::Error, id: Option<&Json>) -> Json {
     let mut reply = Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(e.to_string())),
         ("code", Json::str(e.code())),
     ]);
+    if let crate::error::Error::ShardUnavailable {
+        shards_ok,
+        shards_total,
+        ..
+    } = e
+    {
+        if let Json::Obj(fields) = &mut reply {
+            fields.insert("shards_ok".to_string(), Json::num(*shards_ok as f64));
+            fields.insert("shards_total".to_string(), Json::num(*shards_total as f64));
+        }
+    }
     attach_id(&mut reply, id);
     reply
 }
 
-fn attach_id(reply: &mut Json, id: Option<&Json>) {
+pub(crate) fn attach_id(reply: &mut Json, id: Option<&Json>) {
     if let (Json::Obj(fields), Some(id)) = (reply, id) {
         fields.insert("id".to_string(), id.clone());
     }
@@ -307,13 +369,19 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
         "info" => {
             let snap = coord.metrics();
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("workers", Json::num(coord.config().workers as f64)),
                 ("batch_size", Json::num(coord.config().batch_size as f64)),
                 ("prefer_pjrt", Json::Bool(coord.config().prefer_pjrt)),
                 ("completed", Json::num(snap.completed as f64)),
-            ]))
+            ];
+            // the shard front verifies fleet topology against these
+            if let Some(role) = coord.shard_role() {
+                fields.push(("shard_id", Json::num(role.shard_id as f64)));
+                fields.push(("shards_total", Json::num(role.shards_total as f64)));
+            }
+            Ok(Json::obj(fields))
         }
         "register_grid" => {
             let t = req.req_usize("t")?;
@@ -358,6 +426,53 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
             if let Some(name) = name {
                 // reject bad names before any parsing or O(n·T) build
                 super::validate_index_name(name)?;
+            }
+            // Sharded registrations (issued by a shard front) carry the
+            // target shard id and the global-index map.  A shard id
+            // outside this server's layout — wrong id, or no role at
+            // all — is a typed bad_request *before* anything is parsed
+            // or built: accepting it would mis-route every later
+            // shard_search.
+            let shard = match req.get("shard") {
+                None => None,
+                Some(v) => Some(v.as_usize().ok_or_else(|| {
+                    crate::error::Error::config("'shard' must be a non-negative integer")
+                })?),
+            };
+            if let Some(sid) = shard {
+                let role = coord.shard_role().ok_or_else(|| {
+                    crate::error::Error::config(
+                        "sharded registration on a non-shard server \
+                         (start it with `spdtw shard-serve`)",
+                    )
+                })?;
+                if sid >= role.shards_total {
+                    return Err(crate::error::Error::config(format!(
+                        "shard id {sid} outside the layout (shards_total {})",
+                        role.shards_total
+                    )));
+                }
+                if sid != role.shard_id {
+                    return Err(crate::error::Error::config(format!(
+                        "shard id {sid} mis-routed: this server is shard {} of {}",
+                        role.shard_id, role.shards_total
+                    )));
+                }
+                if name.is_some() {
+                    return Err(crate::error::Error::config(
+                        "sharded registrations are anonymous (the front owns \
+                         naming via the shard manifest)",
+                    ));
+                }
+                if req.get("global_ids").is_none() {
+                    return Err(crate::error::Error::config(
+                        "sharded registration requires 'global_ids'",
+                    ));
+                }
+            } else if req.get("global_ids").is_some() {
+                return Err(crate::error::Error::config(
+                    "'global_ids' requires 'shard'",
+                ));
             }
             // parse + validate the optional v2 measure spec up front so
             // an invalid spec is rejected even on the named shortcut
@@ -404,6 +519,35 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                     "'series' must be equal-length and non-empty",
                 ));
             }
+            // Strictly increasing global ids make the engine's local
+            // tie-break equal the global one — the exactness
+            // precondition for the front's merge (see crate::shard).
+            let global_ids: Option<Vec<usize>> = match req.get("global_ids") {
+                None => None,
+                Some(v) => {
+                    let arr = v.as_arr().ok_or_else(|| {
+                        crate::error::Error::config("'global_ids' must be an array")
+                    })?;
+                    let parsed: Option<Vec<usize>> = arr.iter().map(Json::as_usize).collect();
+                    let ids = parsed.ok_or_else(|| {
+                        crate::error::Error::config(
+                            "'global_ids' must be non-negative integers",
+                        )
+                    })?;
+                    if ids.len() != series.len() {
+                        return Err(crate::error::Error::config(
+                            "'global_ids' length must match 'series'",
+                        ));
+                    }
+                    if ids.windows(2).any(|w| w[0] >= w[1]) {
+                        return Err(crate::error::Error::config(
+                            "'global_ids' must be strictly increasing (per-shard \
+                             tie-breaks must equal global tie-breaks)",
+                        ));
+                    }
+                    Some(ids)
+                }
+            };
             // A named registration hits the registry first: a
             // warm-started (or earlier in-session) index under the name
             // answers without rebuilding — but the submitted payload is
@@ -450,18 +594,26 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
             };
             let bytes = index.memory_bytes();
             let hash = index.content_hash();
-            let key = match name {
-                Some(name) => coord.register_index_persistent(name, index)?,
-                None => coord.register_index(index),
+            let key = if let Some(ids) = global_ids {
+                coord.register_index_sharded(index, ids)
+            } else {
+                match name {
+                    Some(name) => coord.register_index_persistent(name, index)?,
+                    None => coord.register_index(index),
+                }
             };
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("index", Json::num(key.0 as f64)),
                 ("memory_bytes", Json::num(bytes as f64)),
                 ("loaded_from_disk", Json::Bool(false)),
                 ("content_hash", Json::str(format!("{hash:016x}"))),
                 ("drift", Json::Bool(false)),
-            ]))
+            ];
+            if let Some(sid) = shard {
+                fields.push(("shard", Json::num(sid as f64)));
+            }
+            Ok(Json::obj(fields))
         }
         "search" => {
             let key = IndexKey(req.req_usize("index")? as u64);
@@ -511,6 +663,73 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 ("queries", Json::num(outs.len() as f64)),
                 ("results", results),
             ]))
+        }
+        "shard_search" => {
+            // One fan-out leg from the shard front: run the full local
+            // cascade + early-abandon engine and reply in *global*
+            // index space.  Only shard servers answer, and only for
+            // their own shard id — anything else is a bad_request, so a
+            // mis-routed leg can never produce a silently wrong merge.
+            let role = coord.shard_role().ok_or_else(|| {
+                crate::error::Error::config(
+                    "shard_search on a non-shard server (start it with `spdtw shard-serve`)",
+                )
+            })?;
+            let sid = req.req_usize("shard")?;
+            if sid != role.shard_id {
+                return Err(crate::error::Error::config(format!(
+                    "shard_search mis-routed: request targets shard {sid}, this server \
+                     is shard {} of {}",
+                    role.shard_id, role.shards_total
+                )));
+            }
+            coord.note_shard_search();
+            let key = IndexKey(req.req_usize("index")? as u64);
+            let global_ids = coord.index_global_ids(key)?.ok_or_else(|| {
+                crate::error::Error::config(
+                    "index was not registered with 'global_ids' (register it through \
+                     the shard front)",
+                )
+            })?;
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let cascade = parse_cascade(req)?;
+            if req.get("xs").is_some() {
+                // batched leg: the whole query set runs as one
+                // concurrent-epoch batch, like batch_search
+                let arr = req.req_arr("xs")?;
+                let mut queries = Vec::with_capacity(arr.len());
+                for row in arr {
+                    let vals: Option<Vec<f64>> = row
+                        .as_arr()
+                        .map(|r| r.iter().map(Json::as_f64).collect())
+                        .unwrap_or(None);
+                    let vals = vals.ok_or_else(|| {
+                        crate::error::Error::config("'xs' must be arrays of numbers")
+                    })?;
+                    check_finite(&vals, "xs")?;
+                    queries.push(TimeSeries::new(0, vals));
+                }
+                let outs = coord.submit_batch_search(key, &queries, k, cascade)?.wait()?;
+                let results = Json::arr(outs.iter().map(|out| {
+                    Json::obj(vec![("neighbors", neighbors_json_global(out, &global_ids))])
+                }));
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("shard", Json::num(sid as f64)),
+                    ("queries", Json::num(outs.len() as f64)),
+                    ("results", results),
+                ]))
+            } else {
+                let x = parse_series(req, "x")?;
+                let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("shard", Json::num(sid as f64)),
+                    ("neighbors", neighbors_json_global(&out, &global_ids)),
+                    ("pruned", Json::num(out.stats.pruned() as f64)),
+                    ("full_evals", Json::num(out.stats.full_evals as f64)),
+                ]))
+            }
         }
         "register_measure" => {
             // bind once at the boundary: parameters validated, grids
@@ -597,6 +816,12 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                     Json::num(s.measures_registered as f64),
                 ),
                 ("proto_v2_requests", Json::num(s.proto_v2_requests as f64)),
+                ("shard_searches", Json::num(s.shard_searches as f64)),
+                ("measures_loaded", Json::num(s.measures_loaded as f64)),
+                (
+                    "measure_load_failures",
+                    Json::num(s.measure_load_failures as f64),
+                ),
                 ("mean_latency_us", Json::num(s.mean_latency_us)),
             ]))
         }

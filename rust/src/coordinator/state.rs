@@ -75,6 +75,10 @@ pub struct IndexEntry {
     /// `register_index` reply so clients can tell a warm hit from a
     /// cold build.
     pub loaded_from_disk: bool,
+    /// Local→global train-index map for sharded registrations
+    /// (strictly increasing; see `crate::shard` for why).  `None` for
+    /// ordinary single-node indexes — `shard_search` refuses those.
+    pub global_ids: Option<Arc<Vec<usize>>>,
 }
 
 /// Registry of prebuilt [`Index`]es served by `submit_search`.
@@ -100,6 +104,19 @@ impl IndexRegistry {
             index,
             name: None,
             loaded_from_disk: false,
+            global_ids: None,
+        })
+    }
+
+    /// Register an anonymous shard slice with its local→global index
+    /// map (one global id per train series, strictly increasing —
+    /// validated at the wire before this is called).
+    pub fn insert_sharded(&mut self, index: Arc<Index>, global_ids: Vec<usize>) -> IndexKey {
+        self.insert_entry(IndexEntry {
+            index,
+            name: None,
+            loaded_from_disk: false,
+            global_ids: Some(Arc::new(global_ids)),
         })
     }
 
@@ -115,6 +132,7 @@ impl IndexRegistry {
             index,
             name: Some(name.to_string()),
             loaded_from_disk,
+            global_ids: None,
         });
         if let Some(old) = self.by_name.insert(name.to_string(), key.0) {
             self.indexes.remove(&old);
@@ -210,6 +228,23 @@ impl MeasureRegistry {
         self.next += 1;
         self.entries.insert(key, Arc::new(entry));
         MeasureKey(key)
+    }
+
+    /// Insert at a specific key — the warm-start replay path, which
+    /// must keep the keys clients registered before the restart.  The
+    /// next sequential key is bumped past `key` so later live
+    /// registrations never collide with replayed ones.
+    pub fn insert_at(&mut self, key: MeasureKey, entry: MeasureEntry) {
+        self.entries.insert(key.0, Arc::new(entry));
+        self.reserve_past(key);
+    }
+
+    /// Reserve past `key` without inserting — used when a persisted
+    /// measure fails to re-bind at boot: its key must stay dead rather
+    /// than be handed out again to the next live registration (a stale
+    /// client would silently get a different measure).
+    pub fn reserve_past(&mut self, key: MeasureKey) {
+        self.next = self.next.max(key.0 + 1);
     }
 
     pub fn get(&self, key: MeasureKey) -> Option<Arc<MeasureEntry>> {

@@ -30,6 +30,15 @@ pub enum Error {
     Runtime(String),
     /// Coordinator lifecycle errors (queue closed, worker panic...).
     Coordinator(String),
+    /// A shard fan-out could not get exact results from every shard
+    /// (typed partial-result error: the merged answer would be silently
+    /// wrong, so none is returned).  `shards_ok` counts shards that
+    /// answered (or had nothing to do) out of `shards_total`.
+    ShardUnavailable {
+        shards_ok: usize,
+        shards_total: usize,
+        detail: String,
+    },
     /// Numerical failure (SVM non-convergence, NaN propagation...).
     Numeric(String),
 }
@@ -45,6 +54,15 @@ impl fmt::Display for Error {
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::ShardUnavailable {
+                shards_ok,
+                shards_total,
+                detail,
+            } => write!(
+                f,
+                "shard fan-out degraded: {shards_ok}/{shards_total} shards answered \
+                 ({detail}); partial results withheld to preserve exactness"
+            ),
             Error::Numeric(m) => write!(f, "numeric error: {m}"),
         }
     }
@@ -91,7 +109,7 @@ impl Error {
     /// | `bad_input` | data violations (non-finite series values, ragged shapes) |
     /// | `unknown_op` | unrecognized `op` |
     /// | `not_found` | referenced grid/index/measure does not exist |
-    /// | `unavailable` | coordinator lifecycle failures (shut down, worker gone) |
+    /// | `unavailable` | coordinator lifecycle failures (shut down, worker gone) and shard fan-out degradation (`ShardUnavailable`, whose error replies also carry `shards_ok`/`shards_total`) |
     /// | `internal` | IO / runtime / numeric failures |
     ///
     /// One additional code exists only at the wire layer:
@@ -105,7 +123,7 @@ impl Error {
             Error::Data(_) => "bad_input",
             Error::Unknown { kind: "op", .. } => "unknown_op",
             Error::Unknown { .. } | Error::NotFound { .. } => "not_found",
-            Error::Coordinator(_) => "unavailable",
+            Error::Coordinator(_) | Error::ShardUnavailable { .. } => "unavailable",
             Error::Io(_) | Error::Runtime(_) | Error::Numeric(_) => "internal",
         }
     }

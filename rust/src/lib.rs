@@ -24,6 +24,7 @@
 //! | [`pool`]      | thread-pool substrate (no rayon in the vendored set) |
 //! | [`runtime`]   | PJRT client, artifact manifest, executable cache |
 //! | [`coordinator`]| router + length-bucket batcher + workers + metrics + TCP server |
+//! | [`shard`]     | multi-node serving: exact shard fan-out, merge, shard manifest |
 //! | [`experiments`]| regenerates every table and figure of the paper |
 //! | [`util`]      | RNG, JSON, math/stat helpers, bench + property harnesses |
 //! | [`viz`]       | PGM/PPM + ASCII heatmaps (Figs. 5–8) |
@@ -64,6 +65,7 @@ pub mod measures;
 pub mod pool;
 pub mod runtime;
 pub mod search;
+pub mod shard;
 pub mod sparse;
 pub mod stats;
 pub mod tuning;

@@ -10,6 +10,8 @@
 //! spdtw index inspect <file>         header/checksum summary of an index file
 //! spdtw gen-data <dataset> [opts]    write the synthetic dataset as UCR files
 //! spdtw serve [opts]                 start the TCP coordinator service
+//! spdtw serve --shards a:p,b:p       start a fan-out front over shard servers
+//! spdtw shard-serve [opts]           start one shard server of a fleet
 //! spdtw info [opts]                  show artifact manifest + platform
 //! spdtw bench-backend [opts]         native vs PJRT parity + throughput
 //! ```
@@ -26,7 +28,7 @@ use std::sync::Arc;
 use spdtw::classify::gram::{cross_gram, gram_1nn_error};
 use spdtw::classify::nn::{classify_1nn, classify_knn, classify_knn_indexed};
 use spdtw::config::cli::{usage, Args, OptSpec};
-use spdtw::config::{CoordinatorConfig, ExperimentConfig, SearchConfig};
+use spdtw::config::{CoordinatorConfig, ExperimentConfig, SearchConfig, ShardRole};
 use spdtw::coordinator::server::Server;
 use spdtw::coordinator::Coordinator;
 use spdtw::data::registry;
@@ -42,6 +44,7 @@ use spdtw::measures::spec::{
 use spdtw::measures::{KernelMeasure, Measure};
 use spdtw::runtime::PjrtRuntime;
 use spdtw::search::{persist, Index};
+use spdtw::shard::{FrontServer, ShardClientConfig, ShardCoordinator};
 use spdtw::sparse::learn::learn_occupancy_grid;
 
 fn opt_spec() -> Vec<OptSpec> {
@@ -148,6 +151,21 @@ fn opt_spec() -> Vec<OptSpec> {
             takes_value: true,
             help: "serve: LRU-evict store files past this byte budget",
         },
+        OptSpec {
+            name: "shards",
+            takes_value: true,
+            help: "serve: comma-separated shard addresses — run as a fan-out front",
+        },
+        OptSpec {
+            name: "shard-id",
+            takes_value: true,
+            help: "shard-serve: this server's shard id (0-based)",
+        },
+        OptSpec {
+            name: "shards-total",
+            takes_value: true,
+            help: "shard-serve: number of shards in the fleet",
+        },
     ]
 }
 
@@ -204,6 +222,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "index" => cmd_index(&args),
         "gen-data" => cmd_gen_data(&args),
         "serve" => cmd_serve(&args),
+        "shard-serve" => cmd_shard_serve(&args),
         "info" => cmd_info(&args),
         "bench-backend" => cmd_bench_backend(&args),
         "help" | "--help" => {
@@ -211,7 +230,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
                  commands: experiment <id|all> | classify <dataset> | dist |\n\
                  \x20         search <dataset> | index save|load|inspect |\n\
-                 \x20         gen-data <dataset> | serve | info | bench-backend\n\n{}",
+                 \x20         gen-data <dataset> | serve | shard-serve | info | bench-backend\n\n{}",
                 usage(&spec)
             );
             println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
@@ -731,22 +750,34 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = build_cfg(args)?;
-    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
-    let mut ccfg = CoordinatorConfig::default();
-    ccfg.workers = cfg.threads;
-    ccfg.prefer_pjrt = args.flag("prefer-pjrt");
+/// The `serve`/`shard-serve` flags shared by both roles, folded into a
+/// [`CoordinatorConfig`].
+fn coordinator_config_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<CoordinatorConfig> {
+    let mut ccfg = CoordinatorConfig {
+        workers: cfg.threads,
+        prefer_pjrt: args.flag("prefer-pjrt"),
+        warm_start: !args.flag("no-warm-start"),
+        ..CoordinatorConfig::default()
+    };
     if let Some(dir) = args.get("index-store") {
         ccfg.index_store = Some(PathBuf::from(dir));
     }
-    ccfg.warm_start = !args.flag("no-warm-start");
     if let Some(v) = args.get("index-store-max-bytes") {
         let bytes: u64 = v
             .parse()
             .map_err(|_| Error::config("--index-store-max-bytes must be an integer"))?;
         ccfg.index_store_max_bytes = Some(bytes);
     }
+    Ok(ccfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(list) = args.get("shards") {
+        return serve_front(args, list);
+    }
+    let cfg = build_cfg(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let ccfg = coordinator_config_from_args(args, &cfg)?;
     let runtime = if ccfg.prefer_pjrt {
         match PjrtRuntime::start(&cfg.artifacts_dir) {
             Ok(rt) => {
@@ -781,11 +812,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "protocol v2 ({{\"proto\":2, ...}}): generic dist / kernel / register_measure over \
          any MeasureSpec, id echo, typed error codes"
     );
-    // Serve until the process is killed (the TCP `shutdown` op stops the
-    // accept loop; we poll for it).
-    loop {
+    // Serve until the TCP `shutdown` op fires (or the process is killed).
+    while !server.is_stopped() {
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    Ok(())
+}
+
+/// `spdtw serve --shards a:p,b:p,...`: no local engine — a fan-out
+/// front that merges exact per-shard answers (see [`spdtw::shard`]).
+fn serve_front(args: &Args, list: &str) -> Result<()> {
+    if args.get("shard-id").is_some() || args.get("shards-total").is_some() {
+        return Err(Error::config(
+            "--shard-id/--shards-total configure a shard server (spdtw shard-serve), \
+             not a fan-out front",
+        ));
+    }
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let addrs: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut scfg = ShardClientConfig::for_addrs(addrs);
+    if let Some(dir) = args.get("index-store") {
+        scfg.store = Some(PathBuf::from(dir));
+    }
+    let sc = ShardCoordinator::connect(scfg)?;
+    let server = FrontServer::start(Arc::clone(&sc), addr)?;
+    println!(
+        "spdtw shard front listening on {} ({} shards: {})",
+        server.addr,
+        sc.shards_total(),
+        sc.addrs().join(", ")
+    );
+    println!(
+        "protocol: v1/v2 front ops: ping, info, register_index, search, batch_search, \
+         metrics, shutdown — k-NN answers merged exactly across shards"
+    );
+    while !server.is_stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    Ok(())
+}
+
+/// `spdtw shard-serve --shard-id I --shards-total N`: one shard server
+/// of a fleet — the standard coordinator + TCP server with a
+/// [`ShardRole`], accepting sharded registrations and `shard_search`.
+fn cmd_shard_serve(args: &Args) -> Result<()> {
+    let cfg = build_cfg(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7879");
+    let shard_id = args
+        .get_usize("shard-id")?
+        .ok_or_else(|| Error::config("shard-serve needs --shard-id <I>"))?;
+    let shards_total = args
+        .get_usize("shards-total")?
+        .ok_or_else(|| Error::config("shard-serve needs --shards-total <N>"))?;
+    let mut ccfg = coordinator_config_from_args(args, &cfg)?;
+    ccfg.shard = Some(ShardRole {
+        shard_id,
+        shards_total,
+    });
+    let coord = Arc::new(Coordinator::start(ccfg, None)?);
+    let server = Server::start(Arc::clone(&coord), addr)?;
+    println!(
+        "spdtw shard {shard_id}/{shards_total} listening on {}",
+        server.addr
+    );
+    println!(
+        "protocol: v1/v2 plus shard ops — register_index takes shard/global_ids, \
+         shard_search returns exact local top-k in global index space"
+    );
+    while !server.is_stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -9,10 +9,17 @@
 //! [`record_index_artifact`] rewrites only that array, preserving every
 //! other manifest key byte-for-byte semantically (the Python AOT side
 //! owns `"entries"` and may carry fields Rust does not model).
+//!
+//! Registered **measures** persist in a separate `measures.json` next to
+//! the manifest ([`record_measure_spec`] / [`load_measure_specs`]): the
+//! index array and the measure list are written under *different*
+//! coordinator locks, so sharing one file would let their read-modify-
+//! write cycles interleave and lose updates.
 
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::measures::spec::MeasureSpec;
 use crate::util::json::Json;
 
 /// Which DP kernel an artifact implements.
@@ -269,6 +276,63 @@ fn rewrite_manifest_indexes(
     Ok(())
 }
 
+/// Record (or replace) a registered measure in `<dir>/measures.json`
+/// (`{"version":1,"measures":[{"key":K,"spec":{...}}]}`), creating the
+/// file when missing, so a warm-starting coordinator can replay
+/// `register_measure` entries at their original keys.  Temp-file +
+/// rename, like the manifest writes.  The caller's measure-registry
+/// lock serializes the read-modify-write.
+pub fn record_measure_spec(dir: &Path, key: u64, spec: &MeasureSpec) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mpath = dir.join("measures.json");
+    let mut measures: Vec<Json> = match std::fs::read_to_string(&mpath) {
+        Ok(text) => Json::parse(&text)?
+            .get("measures")
+            .and_then(Json::as_arr)
+            .map(|a| a.to_vec())
+            .unwrap_or_default(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e.into()),
+    };
+    measures.retain(|e| e.get("key").and_then(Json::as_usize) != Some(key as usize));
+    measures.push(Json::obj(vec![
+        ("key", Json::num(key as f64)),
+        ("spec", spec.to_json()),
+    ]));
+    let root = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("measures", Json::Arr(measures)),
+    ]);
+    let tmp = dir.join("measures.json.tmp");
+    std::fs::write(&tmp, root.to_pretty())?;
+    std::fs::rename(&tmp, &mpath)?;
+    Ok(())
+}
+
+/// Load every persisted measure from `<dir>/measures.json` as
+/// `(key, spec)` pairs in ascending key order.  A missing file is an
+/// empty store, not an error; a malformed file or entry is (a bad line
+/// must never silently vanish a registered key).
+pub fn load_measure_specs(dir: &Path) -> Result<Vec<(u64, MeasureSpec)>> {
+    let mpath = dir.join("measures.json");
+    let text = match std::fs::read_to_string(&mpath) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    let json = Json::parse(&text)?;
+    let mut out = Vec::new();
+    for e in json.req_arr("measures")? {
+        let key = e.req_usize("key")? as u64;
+        let spec = e
+            .get("spec")
+            .ok_or_else(|| Error::data("measures.json entry missing 'spec'"))?;
+        out.push((key, MeasureSpec::from_json(spec)?));
+    }
+    out.sort_by_key(|(k, _)| *k);
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,6 +459,33 @@ mod tests {
         )
         .unwrap();
         assert_eq!(stamp("old"), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn measure_specs_roundtrip_and_replace() {
+        let dir = std::env::temp_dir().join(format!("spdtw_meas_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // empty store: no file, no entries
+        assert!(load_measure_specs(&dir).unwrap().is_empty());
+
+        record_measure_spec(&dir, 0, &MeasureSpec::Euclidean).unwrap();
+        record_measure_spec(&dir, 1, &MeasureSpec::Krdtw { nu: 0.5, band_cells: Some(3) })
+            .unwrap();
+        let got = load_measure_specs(&dir).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (0, MeasureSpec::Euclidean));
+        assert_eq!(got[1], (1, MeasureSpec::Krdtw { nu: 0.5, band_cells: Some(3) }));
+
+        // re-recording a key replaces, not duplicates
+        record_measure_spec(&dir, 0, &MeasureSpec::Dtw).unwrap();
+        let got = load_measure_specs(&dir).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (0, MeasureSpec::Dtw));
+
+        // a torn/garbage file is an error, not a silent empty store
+        std::fs::write(dir.join("measures.json"), "{not json").unwrap();
+        assert!(load_measure_specs(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -23,8 +23,8 @@ use std::thread;
 
 use crate::error::{Error, Result};
 pub use artifact::{
-    record_index_artifact, remove_index_artifact, touch_index_artifact, ArtifactEntry,
-    IndexArtifact, KernelKind, Manifest,
+    load_measure_specs, record_index_artifact, record_measure_spec, remove_index_artifact,
+    touch_index_artifact, ArtifactEntry, IndexArtifact, KernelKind, Manifest,
 };
 
 /// A batched DTW request (f32): `b` pairs of length-`t` series.

@@ -303,19 +303,14 @@ pub fn save_index(index: &Index, path: &Path) -> Result<()> {
 
 /// Load an [`Index`] previously written by [`save_index`].
 pub fn load_index(path: &Path) -> Result<Index> {
-    let bytes = std::fs::read(path).map_err(|e| {
-        Error::data(format!("cannot read index file {}: {e}", path.display()))
-    })?;
-    from_bytes(&bytes)
-        .map_err(|e| Error::data(format!("{}: {e}", path.display())))
+    let bytes = read_spix_bytes(path).map_err(|e| prefix_path(path, e))?;
+    from_bytes(&bytes).map_err(|e| prefix_path(path, e))
 }
 
 /// Header/dimension summary of an index file without materializing the
 /// series (still hashes the payload to report checksum validity).
 pub fn inspect(path: &Path) -> Result<IndexFileInfo> {
-    let bytes = std::fs::read(path).map_err(|e| {
-        Error::data(format!("cannot read index file {}: {e}", path.display()))
-    })?;
+    let bytes = read_spix_bytes(path).map_err(|e| prefix_path(path, e))?;
     let payload = checked_payload_relaxed(&bytes)?;
     let mut r = Reader { b: payload.0, i: 0 };
     let flags = r.u32()?;
@@ -340,6 +335,54 @@ pub fn inspect(path: &Path) -> Result<IndexFileInfo> {
 
 fn oversize() -> Error {
     Error::data("index file dimensions overflow")
+}
+
+fn prefix_path(path: &Path, e: Error) -> Error {
+    Error::data(format!("{}: {e}", path.display()))
+}
+
+/// Sequential `.spix` read with ONE pre-sized allocation: the fixed
+/// header is read first, validated (magic, version), and its payload
+/// length — cross-checked against the file's metadata size — sizes a
+/// single `Vec` the rest of the file is `read_exact` into.  Unlike a
+/// bare `std::fs::read`, a corrupt length field (or a file that shrank
+/// or grew behind the header) is rejected *before* any payload-sized
+/// allocation, and the one-shot sequential read keeps the page-cache
+/// access pattern mmap-friendly for multi-hundred-MB shard stores.
+fn read_spix_bytes(path: &Path) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::data(format!("cannot read index file: {e}")))?;
+    let mut header = [0u8; HEADER_LEN];
+    f.read_exact(&mut header).map_err(|_| {
+        Error::data(format!(
+            "index file truncated: header needs {HEADER_LEN} bytes"
+        ))
+    })?;
+    if header[0..4] != MAGIC {
+        return Err(Error::data("not a spdtw index file (bad magic)"));
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::data(format!(
+            "unsupported index file version {version} (this build reads {VERSION})"
+        )));
+    }
+    let payload_len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let on_disk = f.metadata()?.len().saturating_sub(HEADER_LEN as u64);
+    if payload_len != on_disk {
+        return Err(Error::data(format!(
+            "index file truncated or padded: \
+             header says {payload_len} payload bytes, file has {on_disk}"
+        )));
+    }
+    let payload_len = usize::try_from(payload_len).map_err(|_| oversize())?;
+    let total = HEADER_LEN.checked_add(payload_len).ok_or_else(oversize)?;
+    let mut bytes = vec![0u8; total];
+    bytes[..HEADER_LEN].copy_from_slice(&header);
+    f.read_exact(&mut bytes[HEADER_LEN..])
+        .map_err(|_| Error::data("index file shrank while reading (concurrent writer?)"))?;
+    Ok(bytes)
 }
 
 /// Validate header + checksum, returning the payload slice.
@@ -563,6 +606,31 @@ mod tests {
         assert!(!inspect(&path).unwrap().checksum_ok);
 
         assert!(load_index(&dir.join("missing.spix")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loader_rejects_lying_length_before_allocating() {
+        // a header whose length field promises petabytes over a tiny
+        // file must fail the metadata cross-check, never allocate
+        let dir = std::env::temp_dir().join(format!("spdtw_persist_liar_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("liar.spix");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated or padded"), "{err}");
+        assert!(inspect(&path).is_err());
+
+        // header-only truncation reads cleanly up to the header, then
+        // fails the same check (0 promised vs whatever is on disk)
+        std::fs::write(&path, &to_bytes(&sample_index())[..HEADER_LEN - 4]).unwrap();
+        assert!(load_index(&path).unwrap_err().to_string().contains("truncated"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,996 @@
+//! The front `ShardCoordinator`: persistent multiplexed TCP links to N
+//! shard servers, exact fan-out/merge, health metrics.
+//!
+//! Each link is one `TcpStream` split into a write half (behind a
+//! mutex, shared by every in-flight request) and a dedicated reader
+//! thread owning the `BufReader` half.  Requests carry monotonically
+//! increasing v2 `id`s; the reader routes each reply line to the
+//! waiting caller's channel by its echoed `id`, so any number of
+//! requests can be in flight per connection (multiplexing — the front's
+//! connection handler threads share the same N links).
+//!
+//! Failure model: a dead link fails all of its in-flight requests
+//! immediately (the reader drops their reply senders on EOF).  The next
+//! fan-out retries the shard once after a capped-backoff reconnect; if
+//! it stays down the query returns
+//! [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable)
+//! with `shards_ok`/`shards_total` — a typed partial-result error,
+//! never a silently truncated neighbor list.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::layout::{ShardEntry, ShardLayout, ShardManifest};
+use super::{merge_topk, ShardNeighbor};
+use crate::coordinator::validate_index_name;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Connection/retry policy for the front's shard links.
+#[derive(Clone, Debug)]
+pub struct ShardClientConfig {
+    /// Shard server addresses, one per shard, in shard-id order.
+    pub addrs: Vec<String>,
+    /// Dial attempts per (re)connect, with doubling backoff.
+    pub connect_attempts: usize,
+    /// First backoff delay.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling (capped exponential).
+    pub backoff_cap_ms: u64,
+    /// Per-request reply timeout.
+    pub call_timeout_ms: u64,
+    /// Directory for the shard manifest (per-shard content hashes);
+    /// `None` disables manifest persistence.
+    pub store: Option<PathBuf>,
+}
+
+impl Default for ShardClientConfig {
+    fn default() -> Self {
+        ShardClientConfig {
+            addrs: Vec::new(),
+            connect_attempts: 4,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 800,
+            call_timeout_ms: 30_000,
+            store: None,
+        }
+    }
+}
+
+impl ShardClientConfig {
+    pub fn for_addrs(addrs: Vec<String>) -> Self {
+        ShardClientConfig {
+            addrs,
+            ..Default::default()
+        }
+    }
+}
+
+/// A request in flight on a link: the reply arrives on `rx` when the
+/// reader thread routes the line with the matching id.
+struct PendingCall {
+    id: u64,
+    rx: mpsc::Receiver<Json>,
+    sent_at: Instant,
+}
+
+/// Mutable half of a link.  `pending` is re-created per connection so a
+/// dying reader only fails its own generation's waiters.
+struct LinkState {
+    writer: Option<BufWriter<TcpStream>>,
+    pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Json>>>>,
+}
+
+/// One persistent, multiplexed connection to a shard server.
+struct ShardLink {
+    shard_id: usize,
+    addr: String,
+    next_id: AtomicU64,
+    state: Mutex<LinkState>,
+    connect_attempts: usize,
+    backoff_base_ms: u64,
+    backoff_cap_ms: u64,
+    call_timeout: Duration,
+}
+
+impl ShardLink {
+    fn new(shard_id: usize, addr: &str, cfg: &ShardClientConfig) -> ShardLink {
+        ShardLink {
+            shard_id,
+            addr: addr.to_string(),
+            next_id: AtomicU64::new(1),
+            state: Mutex::new(LinkState {
+                writer: None,
+                pending: Arc::new(Mutex::new(HashMap::new())),
+            }),
+            connect_attempts: cfg.connect_attempts.max(1),
+            backoff_base_ms: cfg.backoff_base_ms,
+            backoff_cap_ms: cfg.backoff_cap_ms.max(cfg.backoff_base_ms),
+            call_timeout: Duration::from_millis(cfg.call_timeout_ms),
+        }
+    }
+
+    fn down_err(&self) -> Error {
+        Error::coordinator(format!("shard {} ({}): link down", self.shard_id, self.addr))
+    }
+
+    /// Dial with capped exponential backoff, then install the stream
+    /// and spawn a fresh reader thread for it.
+    fn connect(&self) -> Result<()> {
+        let mut delay = Duration::from_millis(self.backoff_base_ms);
+        let cap = Duration::from_millis(self.backoff_cap_ms);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..self.connect_attempts {
+            if attempt > 0 {
+                thread::sleep(delay);
+                delay = (delay * 2).min(cap);
+            }
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => return self.attach(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::coordinator(format!(
+            "shard {} ({}): connect failed after {} attempts: {}",
+            self.shard_id,
+            self.addr,
+            self.connect_attempts,
+            last.map(|e| e.to_string()).unwrap_or_default()
+        )))
+    }
+
+    fn attach(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| Error::coordinator(format!("shard {}: {e}", self.addr)))?;
+        let pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Json>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        {
+            let mut st = self.state.lock().unwrap();
+            st.writer = Some(BufWriter::new(stream));
+            st.pending = Arc::clone(&pending);
+        }
+        let name = format!("spdtw-shard-link-{}", self.shard_id);
+        thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                let mut reader = BufReader::new(read_half);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            let Ok(reply) = Json::parse(line.trim()) else {
+                                continue;
+                            };
+                            let Some(id) = reply.get("id").and_then(Json::as_f64) else {
+                                continue;
+                            };
+                            if let Some(tx) = pending.lock().unwrap().remove(&(id as u64)) {
+                                let _ = tx.send(reply);
+                            }
+                        }
+                    }
+                }
+                // EOF or read error: dropping the senders fails every
+                // waiter of THIS connection generation immediately.
+                pending.lock().unwrap().clear();
+            })
+            .map_err(|e| Error::coordinator(format!("shard link thread: {e}")))?;
+        Ok(())
+    }
+
+    fn is_up(&self) -> bool {
+        self.state.lock().unwrap().writer.is_some()
+    }
+
+    /// Send `req` (id injected) without waiting for the reply.
+    fn begin(&self, req: &Json) -> Result<PendingCall> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = req.clone();
+        if let Json::Obj(m) = &mut req {
+            m.insert("id".to_string(), Json::num(id as f64));
+        }
+        let line = req.to_string();
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.state.lock().unwrap();
+        let Some(writer) = st.writer.as_mut() else {
+            return Err(self.down_err());
+        };
+        st.pending.lock().unwrap().insert(id, tx);
+        let wrote = writer
+            .write_all(line.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if let Err(e) = wrote {
+            st.pending.lock().unwrap().remove(&id);
+            st.writer = None; // mark the link dead for later callers
+            return Err(Error::coordinator(format!(
+                "shard {} ({}): write failed: {e}",
+                self.shard_id, self.addr
+            )));
+        }
+        Ok(PendingCall {
+            id,
+            rx,
+            sent_at: Instant::now(),
+        })
+    }
+
+    /// Wait for the reply to a [`begin`](Self::begin).
+    fn finish(&self, call: PendingCall) -> Result<(Json, Duration)> {
+        match call.rx.recv_timeout(self.call_timeout) {
+            Ok(reply) => Ok((reply, call.sent_at.elapsed())),
+            Err(_) => {
+                // Timeout, or the reader died and dropped our sender.
+                let st = self.state.lock().unwrap();
+                st.pending.lock().unwrap().remove(&call.id);
+                Err(Error::coordinator(format!(
+                    "shard {} ({}): no reply (link lost or timed out)",
+                    self.shard_id, self.addr
+                )))
+            }
+        }
+    }
+
+    fn call(&self, req: &Json) -> Result<(Json, Duration)> {
+        self.finish(self.begin(req)?)
+    }
+}
+
+/// Per-link health counters.
+#[derive(Default)]
+struct PerShardMetrics {
+    calls: AtomicU64,
+    errors: AtomicU64,
+    reconnects: AtomicU64,
+    latency_us_sum: AtomicU64,
+    latency_us_max: AtomicU64,
+}
+
+/// Fan-out/merge health counters for the whole front.
+#[derive(Default)]
+struct ShardMetrics {
+    per_shard: Vec<PerShardMetrics>,
+    fanouts: AtomicU64,
+    fanout_depth_sum: AtomicU64,
+    inflight: AtomicU64,
+    peak_inflight: AtomicU64,
+    merges: AtomicU64,
+    merge_candidates: AtomicU64,
+    partial_failures: AtomicU64,
+}
+
+/// Point-in-time stats for one shard link.
+#[derive(Clone, Debug)]
+pub struct ShardLinkStats {
+    pub addr: String,
+    pub up: bool,
+    pub calls: u64,
+    pub errors: u64,
+    pub reconnects: u64,
+    pub mean_latency_us: f64,
+    pub max_latency_us: u64,
+}
+
+/// Point-in-time view of the front's health metrics.
+#[derive(Clone, Debug)]
+pub struct ShardMetricsSnapshot {
+    pub shards: Vec<ShardLinkStats>,
+    pub fanouts: u64,
+    pub mean_fanout_depth: f64,
+    pub inflight: u64,
+    pub peak_inflight: u64,
+    pub merges: u64,
+    pub merge_candidates: u64,
+    pub partial_failures: u64,
+}
+
+impl ShardMetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let shards = self.shards.iter().map(|s| {
+            Json::obj(vec![
+                ("addr", Json::str(s.addr.clone())),
+                ("up", Json::Bool(s.up)),
+                ("calls", Json::num(s.calls as f64)),
+                ("errors", Json::num(s.errors as f64)),
+                ("reconnects", Json::num(s.reconnects as f64)),
+                ("mean_latency_us", Json::num(s.mean_latency_us)),
+                ("max_latency_us", Json::num(s.max_latency_us as f64)),
+            ])
+        });
+        Json::obj(vec![
+            ("shards", Json::arr(shards)),
+            ("fanouts", Json::num(self.fanouts as f64)),
+            ("mean_fanout_depth", Json::num(self.mean_fanout_depth)),
+            ("inflight", Json::num(self.inflight as f64)),
+            ("peak_inflight", Json::num(self.peak_inflight as f64)),
+            ("merges", Json::num(self.merges as f64)),
+            ("merge_candidates", Json::num(self.merge_candidates as f64)),
+            ("partial_failures", Json::num(self.partial_failures as f64)),
+        ])
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "shard front: fanouts={} mean_depth={:.2} peak_inflight={} merges={} \
+             merge_candidates={} partial_failures={}\n",
+            self.fanouts,
+            self.mean_fanout_depth,
+            self.peak_inflight,
+            self.merges,
+            self.merge_candidates,
+            self.partial_failures
+        );
+        for (i, sh) in self.shards.iter().enumerate() {
+            s.push_str(&format!(
+                "  shard {i} {}: up={} calls={} errors={} reconnects={} \
+                 mean_latency={:.1}us max_latency={}us\n",
+                sh.addr, sh.up, sh.calls, sh.errors, sh.reconnects, sh.mean_latency_us,
+                sh.max_latency_us
+            ));
+        }
+        s
+    }
+}
+
+/// A corpus registered through the front: per-shard index keys (on the
+/// remote shard servers) plus the content hashes used for drift
+/// detection.
+#[derive(Clone, Debug)]
+pub struct ShardedIndex {
+    pub key: u64,
+    pub name: Option<String>,
+    pub t: usize,
+    pub total: usize,
+    /// Remote `register_index` key per shard; `None` for shards the
+    /// layout left empty (corpus smaller than the fleet).
+    pub per_shard_key: Vec<Option<u64>>,
+    pub per_shard_count: Vec<usize>,
+    pub content_hashes: Vec<Option<String>>,
+}
+
+/// A corpus to register through the front.
+#[derive(Clone, Debug, Default)]
+pub struct ShardRegistration {
+    pub name: Option<String>,
+    pub series: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+    /// Sakoe-Chiba band for the default banded-DTW index (server-side
+    /// default: unconstrained).
+    pub band: Option<usize>,
+    /// Measure spec forwarded verbatim to every shard (see
+    /// `MeasureSpec::from_json`).
+    pub measure: Option<Json>,
+}
+
+/// An exactly merged fan-out result.
+#[derive(Clone, Debug)]
+pub struct ShardedSearch {
+    pub neighbors: Vec<ShardNeighbor>,
+    pub shards_ok: usize,
+    pub shards_total: usize,
+    /// Candidates that entered the merge (Σ per-shard top-k sizes).
+    pub merge_candidates: usize,
+}
+
+struct FrontTables {
+    next_key: u64,
+    by_key: HashMap<u64, Arc<ShardedIndex>>,
+    by_name: HashMap<String, u64>,
+}
+
+/// The front coordinator: owns the links, the sharded-index registry,
+/// and the merge.
+pub struct ShardCoordinator {
+    cfg: ShardClientConfig,
+    layout: ShardLayout,
+    links: Vec<ShardLink>,
+    metrics: ShardMetrics,
+    tables: Mutex<FrontTables>,
+}
+
+impl ShardCoordinator {
+    /// Connect to every shard server (capped backoff per link) and
+    /// verify the fleet topology: each server must carry the matching
+    /// [`ShardRole`](crate::config::ShardRole).
+    pub fn connect(cfg: ShardClientConfig) -> Result<Arc<ShardCoordinator>> {
+        let layout = ShardLayout::new(cfg.addrs.len())
+            .map_err(|_| Error::config("shard front needs at least one shard address"))?;
+        let links: Vec<ShardLink> = cfg
+            .addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| ShardLink::new(i, a, &cfg))
+            .collect();
+        let metrics = ShardMetrics {
+            per_shard: links.iter().map(|_| PerShardMetrics::default()).collect(),
+            ..Default::default()
+        };
+        let sc = Arc::new(ShardCoordinator {
+            cfg,
+            layout,
+            links,
+            metrics,
+            tables: Mutex::new(FrontTables {
+                next_key: 0,
+                by_key: HashMap::new(),
+                by_name: HashMap::new(),
+            }),
+        });
+        let total = sc.links.len();
+        for link in &sc.links {
+            link.connect()?;
+            let (info, _) = link.call(&Json::obj(vec![
+                ("proto", Json::num(2.0)),
+                ("op", Json::str("info")),
+            ]))?;
+            let sid = info.get("shard_id").and_then(Json::as_usize);
+            let stot = info.get("shards_total").and_then(Json::as_usize);
+            match (sid, stot) {
+                (Some(s), Some(n)) if s == link.shard_id && n == total => {}
+                (None, _) => {
+                    return Err(Error::config(format!(
+                        "{} is not a shard server (start it with `spdtw shard-serve`)",
+                        link.addr
+                    )))
+                }
+                (s, n) => {
+                    return Err(Error::config(format!(
+                        "shard topology mismatch at {}: server reports shard {:?}/{:?}, \
+                         front expects shard {}/{}",
+                        link.addr, s, n, link.shard_id, total
+                    )))
+                }
+            }
+        }
+        Ok(sc)
+    }
+
+    pub fn shards_total(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn layout(&self) -> ShardLayout {
+        self.layout
+    }
+
+    /// Per-link liveness, in shard order.
+    pub fn links_up(&self) -> Vec<bool> {
+        self.links.iter().map(|l| l.is_up()).collect()
+    }
+
+    pub fn addrs(&self) -> &[String] {
+        &self.cfg.addrs
+    }
+
+    pub fn metrics(&self) -> ShardMetricsSnapshot {
+        let m = &self.metrics;
+        let shards = self
+            .links
+            .iter()
+            .zip(&m.per_shard)
+            .map(|(l, p)| {
+                let calls = p.calls.load(Ordering::Relaxed);
+                let sum = p.latency_us_sum.load(Ordering::Relaxed);
+                ShardLinkStats {
+                    addr: l.addr.clone(),
+                    up: l.is_up(),
+                    calls,
+                    errors: p.errors.load(Ordering::Relaxed),
+                    reconnects: p.reconnects.load(Ordering::Relaxed),
+                    mean_latency_us: if calls > 0 { sum as f64 / calls as f64 } else { 0.0 },
+                    max_latency_us: p.latency_us_max.load(Ordering::Relaxed),
+                }
+            })
+            .collect();
+        let fanouts = m.fanouts.load(Ordering::Relaxed);
+        let depth_sum = m.fanout_depth_sum.load(Ordering::Relaxed);
+        ShardMetricsSnapshot {
+            shards,
+            fanouts,
+            mean_fanout_depth: if fanouts > 0 {
+                depth_sum as f64 / fanouts as f64
+            } else {
+                0.0
+            },
+            inflight: m.inflight.load(Ordering::Relaxed),
+            peak_inflight: m.peak_inflight.load(Ordering::Relaxed),
+            merges: m.merges.load(Ordering::Relaxed),
+            merge_candidates: m.merge_candidates.load(Ordering::Relaxed),
+            partial_failures: m.partial_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Look up a registered sharded index by front key.
+    pub fn index(&self, key: u64) -> Result<Arc<ShardedIndex>> {
+        self.tables
+            .lock()
+            .unwrap()
+            .by_key
+            .get(&key)
+            .cloned()
+            .ok_or(Error::NotFound {
+                kind: "index",
+                name: key.to_string(),
+            })
+    }
+
+    pub fn key_by_name(&self, name: &str) -> Option<u64> {
+        self.tables.lock().unwrap().by_name.get(name).copied()
+    }
+
+    /// Split the corpus across the layout and register each slice on
+    /// its shard (with `global_ids` so shards reply in global index
+    /// space).  All fan-out legs must succeed; per-shard content hashes
+    /// land in the shard manifest when a store directory is configured.
+    pub fn register(&self, reg: &ShardRegistration) -> Result<Arc<ShardedIndex>> {
+        let n = reg.series.len();
+        if n == 0 {
+            return Err(Error::config("register: series must be non-empty"));
+        }
+        let t = reg.series[0].len();
+        if t == 0 {
+            return Err(Error::config("register: series must have length >= 1"));
+        }
+        for (i, s) in reg.series.iter().enumerate() {
+            if s.len() != t {
+                return Err(Error::config(format!(
+                    "register: series {i} has length {} != {t}",
+                    s.len()
+                )));
+            }
+        }
+        if reg.labels.len() != n {
+            return Err(Error::config(format!(
+                "register: {} labels for {n} series",
+                reg.labels.len()
+            )));
+        }
+        if let Some(name) = &reg.name {
+            validate_index_name(name)?;
+        }
+
+        let parts = self.layout.split(n);
+        let mut reqs: Vec<(usize, Json)> = Vec::new();
+        for (shard, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let series = Json::arr(
+                part.iter()
+                    .map(|&g| Json::arr(reg.series[g].iter().copied().map(Json::num))),
+            );
+            let labels = Json::arr(part.iter().map(|&g| Json::num(reg.labels[g] as f64)));
+            let global_ids = Json::arr(part.iter().map(|&g| Json::num(g as f64)));
+            let mut fields = vec![
+                ("proto", Json::num(2.0)),
+                ("op", Json::str("register_index")),
+                ("shard", Json::num(shard as f64)),
+                ("global_ids", global_ids),
+                ("series", series),
+                ("labels", labels),
+            ];
+            if let Some(b) = reg.band {
+                fields.push(("band", Json::num(b as f64)));
+            }
+            if let Some(m) = &reg.measure {
+                fields.push(("measure", m.clone()));
+            }
+            reqs.push((shard, Json::obj(fields)));
+        }
+
+        let replies = self.fan_out(&reqs)?;
+        let total = self.links.len();
+        let mut per_shard_key = vec![None; total];
+        let mut per_shard_count = vec![0usize; total];
+        let mut content_hashes = vec![None; total];
+        for (shard, reply) in &replies {
+            self.check_ok(reply, *shard)?;
+            per_shard_key[*shard] = Some(reply.req_usize("index")? as u64);
+            per_shard_count[*shard] = parts[*shard].len();
+            content_hashes[*shard] = reply
+                .get("content_hash")
+                .and_then(Json::as_str)
+                .map(str::to_string);
+        }
+
+        let si = {
+            let mut tb = self.tables.lock().unwrap();
+            let key = tb.next_key;
+            tb.next_key += 1;
+            let si = Arc::new(ShardedIndex {
+                key,
+                name: reg.name.clone(),
+                t,
+                total: n,
+                per_shard_key,
+                per_shard_count,
+                content_hashes,
+            });
+            tb.by_key.insert(key, Arc::clone(&si));
+            if let Some(name) = &reg.name {
+                tb.by_name.insert(name.clone(), key);
+            }
+            si
+        };
+
+        if let (Some(dir), Some(name)) = (&self.cfg.store, &reg.name) {
+            let manifest = ShardManifest {
+                name: name.clone(),
+                shards_total: total,
+                total: n,
+                t,
+                entries: (0..total)
+                    .map(|s| ShardEntry {
+                        shard_id: s,
+                        count: si.per_shard_count[s],
+                        content_hash: si.content_hashes[s].clone(),
+                    })
+                    .collect(),
+            };
+            if let Err(e) = manifest.save(dir) {
+                eprintln!("spdtw: shard manifest save failed (continuing): {e}");
+            }
+        }
+        Ok(si)
+    }
+
+    /// Exact k-NN over all shards: fan out `shard_search`, merge the
+    /// per-shard exact top-k lists under `(dist, global_idx)`.
+    pub fn search(
+        &self,
+        index: u64,
+        x: &[f64],
+        k: usize,
+        cascade: Option<&str>,
+    ) -> Result<ShardedSearch> {
+        let si = self.index(index)?;
+        self.check_query(&si, x, k)?;
+        let reqs = self.shard_search_reqs(&si, k, cascade, |fields| {
+            fields.push(("x", Json::arr(x.iter().copied().map(Json::num))));
+        });
+        let replies = self.fan_out(&reqs)?;
+        let mut lists = Vec::with_capacity(replies.len());
+        for (shard, reply) in &replies {
+            self.check_ok(reply, *shard)?;
+            lists.push(parse_neighbors(reply.req_arr("neighbors")?)?);
+        }
+        Ok(self.merge(lists, k))
+    }
+
+    /// Batched exact k-NN: one `shard_search` leg per shard carrying
+    /// every query, merged per query.
+    pub fn batch_search(
+        &self,
+        index: u64,
+        xs: &[Vec<f64>],
+        k: usize,
+        cascade: Option<&str>,
+    ) -> Result<Vec<ShardedSearch>> {
+        let si = self.index(index)?;
+        if xs.is_empty() {
+            return Err(Error::config("batch_search: xs must be non-empty"));
+        }
+        for x in xs {
+            self.check_query(&si, x, k)?;
+        }
+        let reqs = self.shard_search_reqs(&si, k, cascade, |fields| {
+            let arr = Json::arr(
+                xs.iter()
+                    .map(|x| Json::arr(x.iter().copied().map(Json::num))),
+            );
+            fields.push(("xs", arr));
+        });
+        let replies = self.fan_out(&reqs)?;
+        // per_query[q][leg] = that shard's exact top-k for query q
+        let mut per_query: Vec<Vec<Vec<ShardNeighbor>>> = vec![Vec::new(); xs.len()];
+        for (shard, reply) in &replies {
+            self.check_ok(reply, *shard)?;
+            let results = reply.req_arr("results")?;
+            if results.len() != xs.len() {
+                return Err(Error::runtime(format!(
+                    "shard {shard}: {} results for {} queries",
+                    results.len(),
+                    xs.len()
+                )));
+            }
+            for (q, r) in results.iter().enumerate() {
+                per_query[q].push(parse_neighbors(r.req_arr("neighbors")?)?);
+            }
+        }
+        Ok(per_query
+            .into_iter()
+            .map(|lists| self.merge(lists, k))
+            .collect())
+    }
+
+    fn check_query(&self, si: &ShardedIndex, x: &[f64], k: usize) -> Result<()> {
+        if k == 0 {
+            return Err(Error::config("k must be >= 1"));
+        }
+        if x.len() != si.t {
+            return Err(Error::config(format!(
+                "query length {} != index length {}",
+                x.len(),
+                si.t
+            )));
+        }
+        for (i, v) in x.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(Error::config(format!("query value [{i}] is not finite")));
+            }
+        }
+        Ok(())
+    }
+
+    fn shard_search_reqs(
+        &self,
+        si: &ShardedIndex,
+        k: usize,
+        cascade: Option<&str>,
+        add_query: impl Fn(&mut Vec<(&'static str, Json)>),
+    ) -> Vec<(usize, Json)> {
+        si.per_shard_key
+            .iter()
+            .enumerate()
+            .filter_map(|(shard, key)| {
+                key.map(|key| {
+                    let mut fields = vec![
+                        ("proto", Json::num(2.0)),
+                        ("op", Json::str("shard_search")),
+                        ("shard", Json::num(shard as f64)),
+                        ("index", Json::num(key as f64)),
+                        ("k", Json::num(k as f64)),
+                    ];
+                    if let Some(c) = cascade {
+                        fields.push(("cascade", Json::str(c)));
+                    }
+                    add_query(&mut fields);
+                    (shard, Json::obj(fields))
+                })
+            })
+            .collect()
+    }
+
+    fn merge(&self, lists: Vec<Vec<ShardNeighbor>>, k: usize) -> ShardedSearch {
+        let merge_candidates: usize = lists.iter().map(Vec::len).sum();
+        let neighbors = merge_topk(lists, k);
+        self.metrics.merges.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .merge_candidates
+            .fetch_add(merge_candidates as u64, Ordering::Relaxed);
+        let total = self.links.len();
+        ShardedSearch {
+            neighbors,
+            shards_ok: total,
+            shards_total: total,
+            merge_candidates,
+        }
+    }
+
+    /// Convert a shard's error *reply* (the shard is alive) into a
+    /// typed error: `bad_request`/`bad_input` propagate as config
+    /// errors, anything else as an internal runtime error.
+    fn check_ok(&self, reply: &Json, shard: usize) -> Result<()> {
+        if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+            return Ok(());
+        }
+        let code = reply.get("code").and_then(Json::as_str).unwrap_or("unknown");
+        let msg = reply
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("error reply");
+        let addr = &self.links[shard].addr;
+        match code {
+            "bad_request" | "bad_input" => {
+                Err(Error::config(format!("shard {shard} ({addr}): {msg}")))
+            }
+            _ => Err(Error::runtime(format!(
+                "shard {shard} ({addr}): {code}: {msg}"
+            ))),
+        }
+    }
+
+    /// Issue every request concurrently over the multiplexed links
+    /// (all writes first, then collect replies), retrying each failed
+    /// leg once after a capped-backoff reconnect.  If any leg still
+    /// fails, the whole fan-out degrades to the typed
+    /// `ShardUnavailable` partial-result error.
+    fn fan_out(&self, reqs: &[(usize, Json)]) -> Result<Vec<(usize, Json)>> {
+        let shards_total = self.links.len();
+        self.metrics.fanouts.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .fanout_depth_sum
+            .fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let inflight = self.metrics.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.metrics
+            .peak_inflight
+            .fetch_max(inflight, Ordering::Relaxed);
+        let result = self.fan_out_inner(reqs, shards_total);
+        self.metrics.inflight.fetch_sub(1, Ordering::Relaxed);
+        result
+    }
+
+    fn fan_out_inner(
+        &self,
+        reqs: &[(usize, Json)],
+        shards_total: usize,
+    ) -> Result<Vec<(usize, Json)>> {
+        let pends: Vec<Result<PendingCall>> = reqs
+            .iter()
+            .map(|(shard, req)| self.links[*shard].begin(req))
+            .collect();
+        let mut replies: Vec<Option<Json>> = (0..reqs.len()).map(|_| None).collect();
+        let mut failures: Vec<(usize, String)> = Vec::new(); // (req position, detail)
+        for (i, pend) in pends.into_iter().enumerate() {
+            let shard = reqs[i].0;
+            match pend.and_then(|p| self.links[shard].finish(p)) {
+                Ok((reply, lat)) => {
+                    self.record_call(shard, lat);
+                    replies[i] = Some(reply);
+                }
+                Err(e) => {
+                    self.metrics.per_shard[shard]
+                        .errors
+                        .fetch_add(1, Ordering::Relaxed);
+                    failures.push((i, e.to_string()));
+                }
+            }
+        }
+        // One retry per failed leg: reconnect (capped backoff), resend.
+        let mut still_down: Vec<(usize, String)> = Vec::new(); // (shard, detail)
+        for (i, first_err) in failures {
+            let (shard, req) = &reqs[i];
+            let retried = self.links[*shard].connect().and_then(|_| {
+                self.metrics.per_shard[*shard]
+                    .reconnects
+                    .fetch_add(1, Ordering::Relaxed);
+                self.links[*shard].call(req)
+            });
+            match retried {
+                Ok((reply, lat)) => {
+                    self.record_call(*shard, lat);
+                    replies[i] = Some(reply);
+                }
+                Err(e) => {
+                    self.metrics.per_shard[*shard]
+                        .errors
+                        .fetch_add(1, Ordering::Relaxed);
+                    still_down.push((*shard, format!("{first_err}; retry: {e}")));
+                }
+            }
+        }
+        if !still_down.is_empty() {
+            self.metrics.partial_failures.fetch_add(1, Ordering::Relaxed);
+            let detail = still_down
+                .iter()
+                .map(|(s, d)| format!("shard {s}: {d}"))
+                .collect::<Vec<_>>()
+                .join("; ");
+            return Err(Error::ShardUnavailable {
+                shards_ok: shards_total - still_down.len(),
+                shards_total,
+                detail,
+            });
+        }
+        Ok(reqs
+            .iter()
+            .zip(replies)
+            .map(|((shard, _), reply)| (*shard, reply.expect("reply present")))
+            .collect())
+    }
+
+    fn record_call(&self, shard: usize, lat: Duration) {
+        let p = &self.metrics.per_shard[shard];
+        p.calls.fetch_add(1, Ordering::Relaxed);
+        let us = lat.as_micros() as u64;
+        p.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+        p.latency_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+}
+
+/// Parse a shard reply's neighbor array (global index space).
+fn parse_neighbors(arr: &[Json]) -> Result<Vec<ShardNeighbor>> {
+    arr.iter()
+        .map(|n| {
+            Ok(ShardNeighbor {
+                dist: n.req_f64("dist")?,
+                label: n.req_usize("label")?,
+                global_idx: n.req_usize("idx")?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    /// Minimal line server: replies to every request with an id-echoing
+    /// canned object; closes the connection after `max_lines` requests.
+    fn canned_server(max_lines: usize) -> (String, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = thread::spawn(move || {
+            for stream in listener.incoming().take(2) {
+                let Ok(stream) = stream else { break };
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut w = stream;
+                let mut line = String::new();
+                for _ in 0..max_lines {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                        break;
+                    }
+                    let req = Json::parse(line.trim()).unwrap();
+                    let id = req.get("id").and_then(Json::as_f64).unwrap();
+                    let reply = Json::obj(vec![
+                        ("id", Json::num(id)),
+                        ("ok", Json::Bool(true)),
+                        ("pong", Json::Bool(true)),
+                    ]);
+                    writeln!(w, "{}", reply.to_string()).unwrap();
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    fn test_cfg(addr: &str) -> ShardClientConfig {
+        ShardClientConfig {
+            addrs: vec![addr.to_string()],
+            connect_attempts: 2,
+            backoff_base_ms: 5,
+            backoff_cap_ms: 10,
+            call_timeout_ms: 2_000,
+            store: None,
+        }
+    }
+
+    #[test]
+    fn link_multiplexes_ids_and_reconnects() {
+        let (addr, h) = canned_server(2);
+        let cfg = test_cfg(&addr);
+        let link = ShardLink::new(0, &addr, &cfg);
+        link.connect().unwrap();
+        let ping = Json::obj(vec![("proto", Json::num(2.0)), ("op", Json::str("ping"))]);
+        // two requests in flight on one connection
+        let a = link.begin(&ping).unwrap();
+        let b = link.begin(&ping).unwrap();
+        assert_ne!(a.id, b.id);
+        let (ra, _) = link.finish(a).unwrap();
+        let (rb, _) = link.finish(b).unwrap();
+        assert_eq!(ra.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(rb.get("ok").and_then(Json::as_bool), Some(true));
+        // server closed the connection after 2 lines: the next call
+        // fails, and an explicit reconnect restores service
+        assert!(link.call(&ping).is_err());
+        link.connect().unwrap();
+        assert!(link.call(&ping).is_ok());
+        drop(link);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_address_fails_with_unavailable_code() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // nothing listens here any more
+        let cfg = test_cfg(&addr);
+        let link = ShardLink::new(0, &addr, &cfg);
+        let err = link.connect().unwrap_err();
+        assert_eq!(err.code(), "unavailable");
+        assert_eq!(link.call(&Json::Null).unwrap_err().code(), "unavailable");
+    }
+}

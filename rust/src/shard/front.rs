@@ -1,0 +1,310 @@
+//! TCP front-end for sharded serving: speaks the same one-JSON-object
+//! per line protocol as [`crate::coordinator::Server`] (v1 bare ops and
+//! the v2 envelope), but serves `register_index` / `search` /
+//! `batch_search` by fanning out to the shard fleet through a
+//! [`ShardCoordinator`] and merging exactly.
+//!
+//! Reply shapes match the single-server protocol where the ops overlap
+//! (`neighbors` entries carry `dist`/`label`/`idx`, with `idx` in
+//! *global* index space), plus fan-out fields:
+//! `shards_ok`/`shards_total` on every search reply, and on the typed
+//! `unavailable` error reply when a shard stays down.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use super::coordinator::{ShardCoordinator, ShardRegistration, ShardedSearch};
+use crate::coordinator::server::{attach_id, check_finite, error_reply, parse_cascade};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A running shard front; dropping stops accepting (existing
+/// connections finish their in-flight line), mirroring
+/// [`crate::coordinator::Server`].
+pub struct FrontServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl FrontServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(shards: Arc<ShardCoordinator>, addr: &str) -> Result<FrontServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = thread::Builder::new()
+            .name("spdtw-front".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let sc = Arc::clone(&shards);
+                            let stop3 = Arc::clone(&stop2);
+                            thread::spawn(move || {
+                                let _ = handle_conn(stream, &sc, &stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(FrontServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Whether the stop flag has fired (the TCP `shutdown` op or
+    /// [`Self::stop`]) — lets a CLI serve loop exit cleanly.
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for FrontServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, sc: &ShardCoordinator, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = dispatch_front(&line, sc, stop);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Parse one request line and serve it — same envelope rules as the
+/// single-server dispatch (`proto` 1/2, `id` echo, typed error codes).
+pub(crate) fn dispatch_front(line: &str, sc: &ShardCoordinator, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => return error_reply(&e, None),
+    };
+    let id = req.get("id").cloned();
+    match req.get("proto").map(|p| (p.as_usize(), p)) {
+        None | Some((Some(1), _)) | Some((Some(2), _)) => {}
+        Some((_, p)) => {
+            let shown = p.to_string();
+            let mut reply = Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::str(format!(
+                        "unsupported protocol version {shown} (this server speaks 1 and 2)"
+                    )),
+                ),
+                ("code", Json::str("unsupported_proto")),
+            ]);
+            attach_id(&mut reply, id.as_ref());
+            return reply;
+        }
+    }
+    let mut reply = match handle_front_op(&req, sc, stop) {
+        Ok(json) => json,
+        Err(e) => return error_reply(&e, id.as_ref()),
+    };
+    attach_id(&mut reply, id.as_ref());
+    reply
+}
+
+/// Parse `field` as an array of equal-typed numeric rows.
+fn parse_rows(req: &Json, field: &str) -> Result<Vec<Vec<f64>>> {
+    let arr = req.req_arr(field)?;
+    let mut rows = Vec::with_capacity(arr.len());
+    for row in arr {
+        let vals: Option<Vec<f64>> = row
+            .as_arr()
+            .map(|r| r.iter().map(Json::as_f64).collect())
+            .unwrap_or(None);
+        let vals = vals
+            .ok_or_else(|| Error::config(format!("'{field}' must be arrays of numbers")))?;
+        check_finite(&vals, field)?;
+        rows.push(vals);
+    }
+    Ok(rows)
+}
+
+fn parse_values(req: &Json, field: &str) -> Result<Vec<f64>> {
+    let arr = req.req_arr(field)?;
+    let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+    let values =
+        values.ok_or_else(|| Error::config(format!("'{field}' must be numbers")))?;
+    check_finite(&values, field)?;
+    Ok(values)
+}
+
+/// The `index` parameter: a front key (number) or a registered name.
+fn front_index_key(sc: &ShardCoordinator, req: &Json) -> Result<u64> {
+    match req.get("index") {
+        Some(Json::Num(_)) => Ok(req.req_usize("index")? as u64),
+        Some(Json::Str(name)) => sc.key_by_name(name).ok_or(Error::NotFound {
+            kind: "index",
+            name: name.clone(),
+        }),
+        _ => Err(Error::config("missing 'index' (a key or a registered name)")),
+    }
+}
+
+/// Validated cascade selector, forwarded verbatim to the shards.
+fn cascade_str(req: &Json) -> Result<Option<&str>> {
+    parse_cascade(req)?; // fail fast on the front, same error as a shard
+    Ok(req.get("cascade").and_then(Json::as_str))
+}
+
+fn search_reply_fields(out: &ShardedSearch) -> Vec<(&'static str, Json)> {
+    let neighbors = Json::arr(out.neighbors.iter().map(|n| {
+        Json::obj(vec![
+            ("dist", Json::num(n.dist)),
+            ("label", Json::num(n.label as f64)),
+            ("idx", Json::num(n.global_idx as f64)),
+        ])
+    }));
+    vec![
+        ("neighbors", neighbors),
+        ("shards_ok", Json::num(out.shards_ok as f64)),
+        ("shards_total", Json::num(out.shards_total as f64)),
+        ("merge_candidates", Json::num(out.merge_candidates as f64)),
+    ]
+}
+
+fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Result<Json> {
+    let op = req.req_str("op")?;
+    match op {
+        "ping" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("pong", Json::Bool(true)),
+            ("role", Json::str("front")),
+        ])),
+        "info" => {
+            let up = sc.links_up();
+            let shards = Json::arr(sc.addrs().iter().zip(&up).map(|(addr, up)| {
+                Json::obj(vec![
+                    ("addr", Json::str(addr.clone())),
+                    ("up", Json::Bool(*up)),
+                ])
+            }));
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("role", Json::str("front")),
+                ("shards_total", Json::num(sc.shards_total() as f64)),
+                ("shards", shards),
+            ]))
+        }
+        "register_index" => {
+            let name = req.get("name").and_then(Json::as_str).map(str::to_string);
+            let series = parse_rows(req, "series")?;
+            let labels: Vec<usize> = match req.get("labels").and_then(Json::as_arr) {
+                Some(ls) => {
+                    let parsed: Option<Vec<usize>> = ls.iter().map(Json::as_usize).collect();
+                    parsed.ok_or_else(|| {
+                        Error::config("'labels' must be non-negative integers")
+                    })?
+                }
+                None => vec![0; series.len()],
+            };
+            let band = req.get("band").and_then(Json::as_usize);
+            let measure = req.get("measure").cloned();
+            let si = sc.register(&ShardRegistration {
+                name,
+                series,
+                labels,
+                band,
+                measure,
+            })?;
+            let hashes = Json::arr(si.content_hashes.iter().map(|h| match h {
+                Some(h) => Json::str(h.clone()),
+                None => Json::Null,
+            }));
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("index", Json::num(si.key as f64)),
+                ("t", Json::num(si.t as f64)),
+                ("count", Json::num(si.total as f64)),
+                ("shards_total", Json::num(sc.shards_total() as f64)),
+                (
+                    "per_shard",
+                    Json::arr(si.per_shard_count.iter().map(|&c| Json::num(c as f64))),
+                ),
+                ("content_hashes", hashes),
+            ]))
+        }
+        "search" => {
+            let key = front_index_key(sc, req)?;
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let x = parse_values(req, "x")?;
+            let cascade = cascade_str(req)?;
+            let out = sc.search(key, &x, k, cascade)?;
+            let mut fields = vec![("ok", Json::Bool(true))];
+            fields.extend(search_reply_fields(&out));
+            Ok(Json::obj(fields))
+        }
+        "batch_search" => {
+            let key = front_index_key(sc, req)?;
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let xs = parse_rows(req, "xs")?;
+            let cascade = cascade_str(req)?;
+            let outs = sc.batch_search(key, &xs, k, cascade)?;
+            let shards_ok = outs.iter().map(|o| o.shards_ok).min().unwrap_or(0);
+            let results = Json::arr(
+                outs.iter()
+                    .map(|out| Json::obj(search_reply_fields(out))),
+            );
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("queries", Json::num(outs.len() as f64)),
+                ("results", results),
+                ("shards_ok", Json::num(shards_ok as f64)),
+                ("shards_total", Json::num(sc.shards_total() as f64)),
+            ]))
+        }
+        "metrics" => {
+            let mut reply = sc.metrics().to_json();
+            if let Json::Obj(m) = &mut reply {
+                m.insert("ok".to_string(), Json::Bool(true));
+            }
+            Ok(reply)
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(Error::Unknown {
+            kind: "op",
+            name: other.to_string(),
+        }),
+    }
+}

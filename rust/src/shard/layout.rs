@@ -1,0 +1,238 @@
+//! Shard layout (global-index → shard assignment) and the on-disk
+//! shard manifest that records per-shard content hashes.
+//!
+//! The layout is deterministic round-robin: global index `g` lives on
+//! shard `g % N`, and shard `s` holds globals `s, s+N, s+2N, …` — which
+//! are strictly increasing in local index, the property the exactness
+//! proof in [`crate::shard`] relies on.  [`ShardLayout::moved_on_resize`]
+//! reports exactly which globals change shard when servers are added or
+//! removed, so a re-balance only re-registers what moved.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// File name of the shard manifest, written next to the front's index
+/// store.
+pub const SHARD_MANIFEST_FILE: &str = "shard_manifest.json";
+
+/// Deterministic round-robin assignment of global train indices to
+/// shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    shards_total: usize,
+}
+
+impl ShardLayout {
+    pub fn new(shards_total: usize) -> Result<ShardLayout> {
+        if shards_total == 0 {
+            return Err(Error::config("shard layout needs at least 1 shard"));
+        }
+        Ok(ShardLayout { shards_total })
+    }
+
+    pub fn shards_total(&self) -> usize {
+        self.shards_total
+    }
+
+    /// Shard owning global index `g`.
+    pub fn assign(&self, global_idx: usize) -> usize {
+        global_idx % self.shards_total
+    }
+
+    /// Split a corpus of `n` series into per-shard global-id lists.
+    /// Each inner list is strictly increasing (the exactness
+    /// precondition for per-shard tie-breaks).
+    pub fn split(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::with_capacity(n.div_ceil(self.shards_total)); self.shards_total];
+        for g in 0..n {
+            out[self.assign(g)].push(g);
+        }
+        out
+    }
+
+    /// Global indices whose shard changes when the fleet resizes from
+    /// `self.shards_total` to `new_total` (shard add/remove).  These are
+    /// the only series a re-balance has to move.
+    pub fn moved_on_resize(&self, n: usize, new_total: usize) -> Result<Vec<usize>> {
+        let new = ShardLayout::new(new_total)?;
+        Ok((0..n).filter(|&g| self.assign(g) != new.assign(g)).collect())
+    }
+}
+
+/// One shard's slice of a sharded index, as recorded in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub shard_id: usize,
+    /// Series count on this shard (0 for shards left empty by a small
+    /// corpus).
+    pub count: usize,
+    /// Content hash reported by the shard's `register_index` reply
+    /// (format `{:016x}`), `None` for empty shards.
+    pub content_hash: Option<String>,
+}
+
+/// On-disk record of one sharded index registration: which layout split
+/// it, and the per-shard content hashes to detect drift when shards
+/// restart or re-register.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub name: String,
+    pub shards_total: usize,
+    /// Total series across all shards.
+    pub total: usize,
+    /// Series length.
+    pub t: usize,
+    pub entries: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    pub fn to_json(&self) -> Json {
+        let entries = self.entries.iter().map(|e| {
+            Json::obj(vec![
+                ("shard_id", Json::num(e.shard_id as f64)),
+                ("count", Json::num(e.count as f64)),
+                (
+                    "content_hash",
+                    match &e.content_hash {
+                        Some(h) => Json::str(h.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        });
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("name", Json::str(self.name.clone())),
+            ("shards_total", Json::num(self.shards_total as f64)),
+            ("total", Json::num(self.total as f64)),
+            ("t", Json::num(self.t as f64)),
+            ("entries", Json::arr(entries)),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<ShardManifest> {
+        let name = json.req_str("name")?.to_string();
+        let shards_total = json.req_usize("shards_total")?;
+        let total = json.req_usize("total")?;
+        let t = json.req_usize("t")?;
+        let mut entries = Vec::new();
+        for e in json.req_arr("entries")? {
+            entries.push(ShardEntry {
+                shard_id: e.req_usize("shard_id")?,
+                count: e.req_usize("count")?,
+                content_hash: e
+                    .get("content_hash")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            });
+        }
+        if entries.len() != shards_total {
+            return Err(Error::data(format!(
+                "shard manifest '{name}': {} entries for {shards_total} shards",
+                entries.len()
+            )));
+        }
+        Ok(ShardManifest {
+            name,
+            shards_total,
+            total,
+            t,
+            entries,
+        })
+    }
+
+    /// Atomically write the manifest to `<dir>/shard_manifest.json`
+    /// (temp file + rename, same discipline as the index store).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::data(format!("{}: {e}", dir.display())))?;
+        let path = dir.join(SHARD_MANIFEST_FILE);
+        let tmp = dir.join(format!("{SHARD_MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_pretty())
+            .map_err(|e| Error::data(format!("{}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::data(format!("{}: {e}", path.display()))
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(SHARD_MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::data(format!("{}: {e}", path.display())))?;
+        ShardManifest::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_round_robin_and_increasing() {
+        let l = ShardLayout::new(3).unwrap();
+        let parts = l.split(8);
+        assert_eq!(parts, vec![vec![0, 3, 6], vec![1, 4, 7], vec![2, 5]]);
+        for (s, part) in parts.iter().enumerate() {
+            for (i, &g) in part.iter().enumerate() {
+                assert_eq!(l.assign(g), s);
+                assert_eq!(g, s + i * 3); // strictly increasing by construction
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        assert!(ShardLayout::new(0).is_err());
+    }
+
+    #[test]
+    fn small_corpus_leaves_trailing_shards_empty() {
+        let parts = ShardLayout::new(4).unwrap().split(2);
+        assert_eq!(parts[2], Vec::<usize>::new());
+        assert_eq!(parts[3], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn moved_on_resize_names_exactly_the_movers() {
+        let l = ShardLayout::new(2).unwrap();
+        let moved = l.moved_on_resize(6, 3).unwrap();
+        // g%2 vs g%3: g=1 (1→1 stays), check each explicitly
+        let want: Vec<usize> = (0..6).filter(|g| g % 2 != g % 3).collect();
+        assert_eq!(moved, want);
+        assert!(l.moved_on_resize(6, 2).unwrap().is_empty());
+        assert!(l.moved_on_resize(6, 0).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = ShardManifest {
+            name: "corpus".into(),
+            shards_total: 2,
+            total: 3,
+            t: 16,
+            entries: vec![
+                ShardEntry {
+                    shard_id: 0,
+                    count: 2,
+                    content_hash: Some("00deadbeef00cafe".into()),
+                },
+                ShardEntry {
+                    shard_id: 1,
+                    count: 1,
+                    content_hash: None,
+                },
+            ],
+        };
+        let back = ShardManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+
+        let dir = std::env::temp_dir().join(format!("spdtw_shard_manifest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        m.save(&dir).unwrap();
+        assert_eq!(ShardManifest::load(&dir).unwrap(), m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,193 @@
+//! Sharded multi-node serving: exact k-NN fan-out over index shards.
+//!
+//! One process cannot hold an arbitrarily large corpus, and
+//! approximation is the wrong lever for scaling DTW-family search (the
+//! paper's measures are only worth serving exactly).  This module
+//! splits the logical index across N *shard servers* — each an
+//! ordinary [`crate::coordinator::Coordinator`] +
+//! [`crate::coordinator::Server`] started with a
+//! [`crate::config::ShardRole`] — and puts a thin *front* in charge of
+//! fan-out and merge:
+//!
+//! ```text
+//!                       ┌──────────────────────────┐
+//!   client ── TCP ────▶ │ FrontServer              │
+//!                       │  └ ShardCoordinator      │
+//!                       │     ├ link 0 ──────────┐ │
+//!                       │     ├ link 1 ────────┐ │ │
+//!                       │     └ merge (heap)   │ │ │
+//!                       └──────────────────────┼─┼─┘
+//!                              persistent TCP  │ │
+//!                       ┌──────────────────────┘ │
+//!                       ▼                        ▼
+//!                ┌─────────────┐          ┌─────────────┐
+//!                │ shard 1     │          │ shard 0     │
+//!                │ Coordinator │          │ Coordinator │
+//!                │ + cascade   │          │ + cascade   │
+//!                └─────────────┘          └─────────────┘
+//! ```
+//!
+//! ## Exactness
+//!
+//! Each shard runs today's full cascade + early-abandon engine locally
+//! and returns its *exact* top-k as `(dist, global_idx)` pairs.  Two
+//! facts make the merged answer bit-identical to a single-index engine
+//! over the union corpus:
+//!
+//! 1. **Per-shard order equals global order.**  The engine tie-breaks
+//!    equal distances on the *local* train index; registration requires
+//!    the per-shard `global_ids` to be strictly increasing in local
+//!    index, so `(dist, local_idx)` and `(dist, global_idx)` induce the
+//!    same order within a shard.  Round-robin assignment
+//!    (`g = shard + i·N`, see [`ShardLayout`]) satisfies this, as does
+//!    any contiguous split.
+//! 2. **The union of per-shard top-k contains the global top-k.**  Any
+//!    neighbor in the global top-k is in the top-k of its own shard, so
+//!    merging the per-shard lists under the same total order —
+//!    `(f64::total_cmp` on dist`, global_idx)` — with a bounded
+//!    [`std::collections::BinaryHeap`] ([`merge_topk`]) reproduces the
+//!    single-engine list exactly, including sentinel
+//!    (`BIG + BIG`) ties from unreachable SP-DTW corners.
+//!
+//! Distances survive the wire bit-exactly: the JSON writer emits the
+//! shortest round-trip form of every non-integral `f64` and the parser
+//! rounds correctly, so `to_bits` equality holds end to end (asserted
+//! by `tests/integration_shard.rs`).
+//!
+//! ## Degradation
+//!
+//! A dead shard never yields a silently truncated answer.  The fan-out
+//! retries the link once with capped-backoff reconnection; if the shard
+//! stays down, the query fails with the typed
+//! [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable)
+//! partial-result error (wire code `unavailable`, carrying
+//! `shards_ok`/`shards_total`).
+//!
+//! Submodules: [`layout`] (split/assign + on-disk shard manifest),
+//! [`coordinator`] (persistent multiplexed links, fan-out, merge,
+//! metrics), [`front`] (TCP front-end speaking the v1/v2 line
+//! protocol).
+
+pub mod coordinator;
+pub mod front;
+pub mod layout;
+
+pub use coordinator::{
+    ShardClientConfig, ShardCoordinator, ShardMetricsSnapshot, ShardRegistration, ShardedIndex,
+    ShardedSearch,
+};
+pub use front::FrontServer;
+pub use layout::{ShardEntry, ShardLayout, ShardManifest};
+
+/// One exact candidate streamed back from a shard: distance, class
+/// label, and the *global* train index (already remapped by the shard
+/// via its registered `global_ids`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardNeighbor {
+    pub dist: f64,
+    pub label: usize,
+    pub global_idx: usize,
+}
+
+/// Total order over candidates: `(dist, global_idx)` lexicographic,
+/// distances via `f64::total_cmp`.  This is the same order the
+/// single-index engine uses (with local == global index), which is what
+/// makes the merge exact.
+fn cmp_neighbor(a: &ShardNeighbor, b: &ShardNeighbor) -> std::cmp::Ordering {
+    a.dist
+        .total_cmp(&b.dist)
+        .then(a.global_idx.cmp(&b.global_idx))
+}
+
+/// Max-heap wrapper: the *worst* candidate under [`cmp_neighbor`] sits
+/// on top, so a bounded heap of size k keeps the k best seen so far.
+struct HeapItem(ShardNeighbor);
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        cmp_neighbor(&self.0, &other.0) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        cmp_neighbor(&self.0, &other.0)
+    }
+}
+
+/// Merge per-shard exact top-k candidate lists into the global exact
+/// top-k with a bounded binary heap (never holds more than k+1 items).
+///
+/// Returns the candidates sorted ascending by `(dist, global_idx)` —
+/// bit-identical to what a single-index engine over the union corpus
+/// would return, provided each input list is that shard's exact top-k
+/// under the same order (see the module docs for the argument).
+pub fn merge_topk<I>(per_shard: I, k: usize) -> Vec<ShardNeighbor>
+where
+    I: IntoIterator<Item = Vec<ShardNeighbor>>,
+{
+    let mut heap = std::collections::BinaryHeap::with_capacity(k + 1);
+    for list in per_shard {
+        for n in list {
+            heap.push(HeapItem(n));
+            if heap.len() > k {
+                heap.pop(); // drop the current worst
+            }
+        }
+    }
+    let mut out: Vec<ShardNeighbor> = heap.into_iter().map(|h| h.0).collect();
+    out.sort_by(cmp_neighbor);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(dist: f64, global_idx: usize) -> ShardNeighbor {
+        ShardNeighbor {
+            dist,
+            label: 0,
+            global_idx,
+        }
+    }
+
+    #[test]
+    fn merge_orders_by_dist_then_global_idx() {
+        let a = vec![n(1.0, 4), n(2.0, 0)];
+        let b = vec![n(1.0, 1), n(3.0, 3)];
+        let got = merge_topk(vec![a, b], 3);
+        let idx: Vec<usize> = got.iter().map(|x| x.global_idx).collect();
+        assert_eq!(idx, vec![1, 4, 0]); // ties on dist=1.0 break by global idx
+    }
+
+    #[test]
+    fn merge_bounds_at_k_and_handles_short_lists() {
+        let lists = vec![vec![n(5.0, 0)], vec![], vec![n(1.0, 2), n(2.0, 1)]];
+        let got = merge_topk(lists, 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].global_idx, 2);
+        assert_eq!(got[1].global_idx, 1);
+    }
+
+    #[test]
+    fn merge_is_bit_exact_on_sentinel_ties() {
+        use crate::measures::BIG;
+        let s = BIG + BIG; // unreachable-corner sentinel, finite
+        let got = merge_topk(vec![vec![n(s, 3)], vec![n(s, 1)], vec![n(s, 2)]], 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].global_idx, 1);
+        assert_eq!(got[1].global_idx, 2);
+        assert_eq!(got[0].dist.to_bits(), s.to_bits());
+    }
+
+    #[test]
+    fn merge_k_zero_is_empty() {
+        assert!(merge_topk(vec![vec![n(1.0, 0)]], 0).is_empty());
+    }
+}

@@ -1,0 +1,529 @@
+//! Sharded-serving exactness suite: the front's fan-out/merge must be
+//! *bit-identical* to a single-index engine over the union corpus — over
+//! any random partition, any k (including k larger than every per-shard
+//! count and the whole corpus), and under sentinel (`BIG + BIG`)
+//! distance ties — and a dead shard must surface as the typed
+//! `unavailable` partial-result error, never as a silently truncated
+//! neighbor list.
+
+use std::sync::Arc;
+
+use spdtw::config::{CoordinatorConfig, ShardRole};
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::{LabeledSet, TimeSeries};
+use spdtw::measures::BIG;
+use spdtw::search::{Cascade, Index, Neighbor, SearchEngine};
+use spdtw::shard::{
+    merge_topk, FrontServer, ShardClientConfig, ShardCoordinator, ShardManifest, ShardNeighbor,
+    ShardRegistration,
+};
+use spdtw::sparse::LocMatrix;
+use spdtw::util::json::Json;
+use spdtw::util::rng::Pcg64;
+
+fn shard_cfg(shard_id: usize, shards_total: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shard: Some(ShardRole {
+            shard_id,
+            shards_total,
+        }),
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Start `n` shard servers (each a full Coordinator + Server with a
+/// `ShardRole`) on loopback ephemeral ports.
+fn start_shards(n: usize) -> Vec<Server> {
+    (0..n)
+        .map(|i| {
+            let coord = Arc::new(Coordinator::start(shard_cfg(i, n), None).unwrap());
+            Server::start(coord, "127.0.0.1:0").unwrap()
+        })
+        .collect()
+}
+
+fn fleet_client_cfg(servers: &[Server], call_timeout_ms: u64) -> ShardClientConfig {
+    ShardClientConfig {
+        addrs: servers.iter().map(|s| s.addr.to_string()).collect(),
+        connect_attempts: 2,
+        backoff_base_ms: 5,
+        backoff_cap_ms: 20,
+        call_timeout_ms,
+        store: None,
+    }
+}
+
+fn call(client: &mut Client, req: &str) -> Json {
+    client.call(&Json::parse(req).unwrap()).unwrap()
+}
+
+fn random_series(rng: &mut Pcg64, n: usize, t: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..t).map(|_| rng.range(-2.0, 2.0)).collect())
+        .collect()
+}
+
+fn labeled(series: &[Vec<f64>], labels: &[usize]) -> LabeledSet {
+    LabeledSet::new(
+        series
+            .iter()
+            .zip(labels)
+            .map(|(v, &l)| TimeSeries::new(l, v.clone()))
+            .collect(),
+    )
+}
+
+/// Per-shard exact top-k from a local engine, remapped to global index
+/// space through the partition — the in-process model of one fan-out
+/// leg.
+fn shard_list(
+    engine: &SearchEngine,
+    part: &[usize],
+    query: &[f64],
+    k: usize,
+) -> Vec<ShardNeighbor> {
+    engine
+        .knn_values(query, k)
+        .neighbors
+        .iter()
+        .map(|nb| ShardNeighbor {
+            dist: nb.dist,
+            label: nb.label,
+            global_idx: part[nb.train_idx],
+        })
+        .collect()
+}
+
+fn assert_bit_identical(got: &[ShardNeighbor], want: &[Neighbor], ctx: &dyn std::fmt::Display) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "{ctx}");
+        assert_eq!(g.global_idx, w.train_idx, "{ctx}");
+        assert_eq!(g.label, w.label, "{ctx}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-process exactness properties (no TCP): merge == single engine
+// ---------------------------------------------------------------------------
+
+/// Property: for random corpora, random *arbitrary* partitions (uniform
+/// shard choice per series, not just round-robin), random band widths
+/// and random k — including k greater than every per-shard count and
+/// greater than the whole corpus — merging per-shard exact top-k lists
+/// reproduces the single-index engine's answer bit for bit.
+#[test]
+fn merged_topk_matches_single_engine_over_random_partitions() {
+    let mut rng = Pcg64::new(0x5eed_0001);
+    for case in 0..32 {
+        let n = 3 + rng.below(28);
+        let t = 4 + rng.below(12);
+        let shards = 1 + rng.below(5);
+        let band = 1 + rng.below(t);
+        let k = 1 + rng.below(n + 2); // reaches k > n/shards and k > n
+        let series = random_series(&mut rng, n, t);
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+
+        let single = SearchEngine::new(
+            Arc::new(Index::build(&labeled(&series, &labels), band, 2)),
+            Cascade::default(),
+        );
+
+        // any partition works as long as each part keeps its global ids
+        // ascending (parts are filled in increasing g, so they do)
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for g in 0..n {
+            parts[rng.below(shards)].push(g);
+        }
+        let engines: Vec<(&Vec<usize>, SearchEngine)> = parts
+            .iter()
+            .filter(|p| !p.is_empty())
+            .map(|part| {
+                let sub_series: Vec<Vec<f64>> = part.iter().map(|&g| series[g].clone()).collect();
+                let sub_labels: Vec<usize> = part.iter().map(|&g| labels[g]).collect();
+                let idx = Index::build(&labeled(&sub_series, &sub_labels), band, 1);
+                (part, SearchEngine::new(Arc::new(idx), Cascade::default()))
+            })
+            .collect();
+
+        let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+        let lists: Vec<Vec<ShardNeighbor>> = engines
+            .iter()
+            .map(|(part, eng)| shard_list(eng, part, &query, k))
+            .collect();
+        let merged = merge_topk(lists, k);
+        let want = single.knn_values(&query, k).neighbors;
+        let ctx = format!("case {case}: n={n} t={t} shards={shards} band={band} k={k}");
+        assert_bit_identical(&merged, &want, &ctx);
+    }
+}
+
+/// Sentinel ties: a cornerless sparsity pattern makes *every* SP-DTW
+/// distance the same finite sentinel (`BIG + BIG`), so the entire
+/// ranking is decided by the index tie-break — the sharpest test of the
+/// "per-shard order equals global order" precondition.
+#[test]
+fn sentinel_ties_merge_exactly() {
+    let t = 4;
+    let triples = vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)];
+    let loc = Arc::new(LocMatrix::from_triples(t, triples));
+    let mut rng = Pcg64::new(0x5eed_0002);
+    let n = 9;
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|i| i % 2).collect();
+    let single = SearchEngine::new(
+        Arc::new(Index::build_spdtw(&labeled(&series, &labels), Arc::clone(&loc), 1)),
+        Cascade::default(),
+    );
+
+    for shards in [2usize, 3] {
+        let mut parts: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for g in 0..n {
+            parts[g % shards].push(g);
+        }
+        for k in [1usize, 4, n, n + 2] {
+            let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+            let lists: Vec<Vec<ShardNeighbor>> = parts
+                .iter()
+                .map(|part| {
+                    let sub_series: Vec<Vec<f64>> =
+                        part.iter().map(|&g| series[g].clone()).collect();
+                    let sub_labels: Vec<usize> = part.iter().map(|&g| labels[g]).collect();
+                    let sub = labeled(&sub_series, &sub_labels);
+                    let idx = Index::build_spdtw(&sub, Arc::clone(&loc), 1);
+                    let eng = SearchEngine::new(Arc::new(idx), Cascade::default());
+                    shard_list(&eng, part, &query, k)
+                })
+                .collect();
+            let merged = merge_topk(lists, k);
+            let want = single.knn_values(&query, k).neighbors;
+            let ctx = format!("shards={shards} k={k}");
+            assert_bit_identical(&merged, &want, &ctx);
+            // every distance really is the unreachable-corner sentinel
+            for m in &merged {
+                assert_eq!(m.dist.to_bits(), (BIG + BIG).to_bits(), "{ctx}");
+            }
+            // ... so the ranking is exactly 0, 1, 2, … by global index
+            let ids: Vec<usize> = merged.iter().map(|m| m.global_idx).collect();
+            let expect: Vec<usize> = (0..k.min(n)).collect();
+            assert_eq!(ids, expect, "{ctx}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP end-to-end: real shard servers + front over the wire
+// ---------------------------------------------------------------------------
+
+/// Two real shard servers, a connected front, a named registration: the
+/// merged answers (library API *and* wire replies through a
+/// `FrontServer`) are bit-identical to a single-index engine, the
+/// partition is recorded in the shard manifest, and batch answers match
+/// single answers query by query.
+#[test]
+fn tcp_fleet_matches_single_index_bit_for_bit() {
+    let servers = start_shards(2);
+    let store = std::env::temp_dir().join(format!("spdtw_shard_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let mut cfg = fleet_client_cfg(&servers, 10_000);
+    cfg.store = Some(store.clone());
+    let sc = ShardCoordinator::connect(cfg).unwrap();
+    assert_eq!(sc.shards_total(), 2);
+    assert_eq!(sc.links_up(), vec![true, true]);
+
+    let mut rng = Pcg64::new(0xfee1_d00d);
+    let n = 11;
+    let t = 8;
+    let band = 2;
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+    let si = sc
+        .register(&ShardRegistration {
+            name: Some("fleet".to_string()),
+            series: series.clone(),
+            labels: labels.clone(),
+            band: Some(band),
+            measure: None,
+        })
+        .unwrap();
+    assert_eq!(si.total, n);
+    assert_eq!(si.per_shard_count.iter().sum::<usize>(), n);
+    assert_eq!(sc.key_by_name("fleet"), Some(si.key));
+
+    // the manifest recorded the split and both shards' content hashes
+    let manifest = ShardManifest::load(&store).unwrap();
+    assert_eq!(manifest.name, "fleet");
+    assert_eq!(manifest.shards_total, 2);
+    assert_eq!(manifest.total, n);
+    assert_eq!(manifest.t, t);
+    for (entry, count) in manifest.entries.iter().zip(&si.per_shard_count) {
+        assert_eq!(entry.count, *count);
+        assert!(entry.content_hash.is_some());
+    }
+
+    let single = SearchEngine::new(
+        Arc::new(Index::build(&labeled(&series, &labels), band, 2)),
+        Cascade::default(),
+    );
+
+    // single searches across the k regimes (k=7 > per-shard counts of
+    // 6/5; k=n+3 > the whole corpus)
+    let mut last_query = Vec::new();
+    for k in [1usize, 3, 7, n + 3] {
+        let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+        let got = sc.search(si.key, &query, k, None).unwrap();
+        assert_eq!(got.shards_ok, 2);
+        assert_eq!(got.shards_total, 2);
+        let want = single.knn_values(&query, k).neighbors;
+        let ctx = format!("tcp search k={k}");
+        assert_bit_identical(&got.neighbors, &want, &ctx);
+        last_query = query;
+    }
+
+    // batch: every query merged independently, all exact
+    let queries: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..t).map(|_| rng.range(-2.0, 2.0)).collect())
+        .collect();
+    let outs = sc.batch_search(si.key, &queries, 4, None).unwrap();
+    assert_eq!(outs.len(), queries.len());
+    for (q, out) in queries.iter().zip(&outs) {
+        let want = single.knn_values(q, 4).neighbors;
+        assert_bit_identical(&out.neighbors, &want, &"tcp batch_search k=4");
+    }
+
+    // the same answer through the FrontServer wire protocol, with the
+    // v2 id echo and the fan-out health fields on the reply
+    let front = FrontServer::start(Arc::clone(&sc), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+    let req = Json::obj(vec![
+        ("proto", Json::num(2.0)),
+        ("id", Json::num(7.0)),
+        ("op", Json::str("search")),
+        ("index", Json::str("fleet")),
+        ("k", Json::num(3.0)),
+        ("x", Json::arr(last_query.iter().copied().map(Json::num))),
+    ]);
+    let reply = client.call(&req).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+    assert_eq!(reply.req_usize("id").unwrap(), 7);
+    assert_eq!(reply.req_usize("shards_ok").unwrap(), 2);
+    assert_eq!(reply.req_usize("shards_total").unwrap(), 2);
+    let want = single.knn_values(&last_query, 3).neighbors;
+    let ns = reply.req_arr("neighbors").unwrap();
+    assert_eq!(ns.len(), want.len());
+    for (j, w) in ns.iter().zip(&want) {
+        // JSON emits the shortest round-trip form of every f64, so
+        // bit-equality survives the wire
+        assert_eq!(j.req_f64("dist").unwrap().to_bits(), w.dist.to_bits());
+        assert_eq!(j.req_usize("idx").unwrap(), w.train_idx);
+        assert_eq!(j.req_usize("label").unwrap(), w.label);
+    }
+
+    let snap = sc.metrics();
+    assert!(snap.fanouts >= 6);
+    assert_eq!(snap.partial_failures, 0);
+    assert!(snap.merges >= 6);
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+/// Killing one shard mid-session degrades every fan-out to the typed
+/// `ShardUnavailable` partial-result error — on the library API and as
+/// a wire reply with `code: "unavailable"` plus `shards_ok` /
+/// `shards_total` — instead of returning a truncated merge.
+#[test]
+fn killed_shard_yields_typed_partial_result_error() {
+    let mut servers = start_shards(2);
+    let sc = ShardCoordinator::connect(fleet_client_cfg(&servers, 2_000)).unwrap();
+
+    let mut rng = Pcg64::new(0xdead_5eed);
+    let t = 6;
+    let series = random_series(&mut rng, 8, t);
+    let labels = vec![0usize; 8];
+    let si = sc
+        .register(&ShardRegistration {
+            name: None,
+            series,
+            labels,
+            band: Some(1),
+            measure: None,
+        })
+        .unwrap();
+    let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+    assert_eq!(sc.search(si.key, &query, 2, None).unwrap().shards_ok, 2);
+
+    // kill shard 1 the way an operator would: the TCP shutdown op, then
+    // the process (here: the Server) goes away and the port closes
+    let s1 = servers.pop().unwrap();
+    let mut killer = Client::connect(&s1.addr).unwrap();
+    let r = call(&mut killer, r#"{"op":"shutdown"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    drop(s1);
+
+    let err = sc.search(si.key, &query, 2, None).unwrap_err();
+    assert_eq!(err.code(), "unavailable");
+    let shown = err.to_string();
+    assert!(shown.contains("1/2 shards answered"), "{shown}");
+    match &err {
+        spdtw::Error::ShardUnavailable {
+            shards_ok,
+            shards_total,
+            ..
+        } => {
+            assert_eq!(*shards_ok, 1);
+            assert_eq!(*shards_total, 2);
+        }
+        other => panic!("expected ShardUnavailable, got {other:?}"),
+    }
+
+    // same degradation over the wire through the front
+    let front = FrontServer::start(Arc::clone(&sc), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+    let req = Json::obj(vec![
+        ("proto", Json::num(2.0)),
+        ("id", Json::num(9.0)),
+        ("op", Json::str("search")),
+        ("index", Json::num(si.key as f64)),
+        ("k", Json::num(2.0)),
+        ("x", Json::arr(query.iter().copied().map(Json::num))),
+    ]);
+    let reply = client.call(&req).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+    assert_eq!(reply.req_usize("id").unwrap(), 9);
+    assert_eq!(reply.req_str("code").unwrap(), "unavailable");
+    assert_eq!(reply.req_usize("shards_ok").unwrap(), 1);
+    assert_eq!(reply.req_usize("shards_total").unwrap(), 2);
+
+    let snap = sc.metrics();
+    assert!(snap.partial_failures >= 2, "{}", snap.report());
+    assert!(snap.shards[1].errors >= 1);
+    assert!(snap.shards[0].calls >= 2);
+}
+
+// ---------------------------------------------------------------------------
+// registration guards: a shard can never silently hold the wrong slice
+// ---------------------------------------------------------------------------
+
+/// Satellite fix: `register_index` on a shard server rejects shard ids
+/// outside the layout (plus mis-routes, named sharded registrations,
+/// and non-increasing `global_ids`) with typed `bad_request` replies,
+/// and `shard_search` guards its own shard id and the `global_ids`
+/// requirement.
+#[test]
+fn shard_server_rejects_bad_sharded_registrations() {
+    let coord = Arc::new(Coordinator::start(shard_cfg(0, 2), None).unwrap());
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let series = r#""series":[[0,0],[1,1]],"labels":[0,1]"#;
+
+    for (req, needle) in [
+        (
+            format!(r#"{{"op":"register_index","shard":5,"global_ids":[0,2],{series}}}"#),
+            "outside the layout",
+        ),
+        (
+            format!(r#"{{"op":"register_index","shard":1,"global_ids":[0,2],{series}}}"#),
+            "mis-routed",
+        ),
+        (
+            format!(
+                r#"{{"op":"register_index","shard":0,"name":"corpus","global_ids":[0,2],{series}}}"#
+            ),
+            "anonymous",
+        ),
+        (
+            format!(r#"{{"op":"register_index","shard":0,"global_ids":[3,1],{series}}}"#),
+            "strictly increasing",
+        ),
+        (
+            format!(r#"{{"op":"register_index","shard":0,{series}}}"#),
+            "requires 'global_ids'",
+        ),
+        (
+            format!(r#"{{"op":"register_index","global_ids":[0,2],{series}}}"#),
+            "requires 'shard'",
+        ),
+    ] {
+        let r = call(&mut client, &req);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{req}");
+        assert_eq!(r.req_str("code").unwrap(), "bad_request", "{req}");
+        assert!(r.req_str("error").unwrap().contains(needle), "{req} -> {r:?}");
+    }
+
+    // a correct sharded registration succeeds and answers shard_search
+    // in global index space (idx from global_ids, local_idx preserved)
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"register_index","shard":0,"global_ids":[0,2],{series}}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.req_usize("shard").unwrap(), 0);
+    let key = r.req_usize("index").unwrap();
+
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"shard_search","shard":0,"index":{key},"k":1,"x":[1,1]}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    let ns = r.req_arr("neighbors").unwrap();
+    assert_eq!(ns[0].req_usize("idx").unwrap(), 2); // global, not local 1
+    assert_eq!(ns[0].req_usize("local_idx").unwrap(), 1);
+    assert_eq!(ns[0].req_f64("dist").unwrap(), 0.0);
+
+    // shard_search guards: a mis-routed leg and a plain (unsharded)
+    // index are both bad_request, never a wrong merge input
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"shard_search","shard":1,"index":{key},"k":1,"x":[1,1]}}"#),
+    );
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+    assert!(r.req_str("error").unwrap().contains("mis-routed"));
+
+    let r = call(&mut client, &format!(r#"{{"op":"register_index",{series}}}"#));
+    let plain = r.req_usize("index").unwrap();
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"shard_search","shard":0,"index":{plain},"k":1,"x":[1,1]}}"#),
+    );
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+    assert!(r.req_str("error").unwrap().contains("global_ids"));
+    server.stop();
+}
+
+/// A plain (role-less) server refuses shard ops, and the front refuses
+/// to adopt it — topology mistakes fail loudly at the boundary.
+#[test]
+fn plain_server_rejects_shard_ops_and_front_verifies_topology() {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let mut server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let r = call(
+        &mut client,
+        r#"{"op":"register_index","shard":0,"global_ids":[0],"series":[[0,0]]}"#,
+    );
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+    assert!(r.req_str("error").unwrap().contains("non-shard server"));
+
+    let r = call(
+        &mut client,
+        r#"{"op":"shard_search","shard":0,"index":0,"k":1,"x":[0]}"#,
+    );
+    assert_eq!(r.req_str("code").unwrap(), "bad_request");
+    assert!(r.req_str("error").unwrap().contains("non-shard server"));
+
+    let addrs = vec![server.addr.to_string()];
+    let err = ShardCoordinator::connect(ShardClientConfig::for_addrs(addrs)).unwrap_err();
+    assert_eq!(err.code(), "bad_request");
+    assert!(err.to_string().contains("not a shard server"), "{err}");
+    server.stop();
+
+    // a shard server whose role disagrees with the front's fleet size
+    // is a topology mismatch, refused at connect time
+    let shards = start_shards(2); // roles are "shard i of 2"
+    let addrs = vec![shards[0].addr.to_string()];
+    let err = ShardCoordinator::connect(ShardClientConfig::for_addrs(addrs)).unwrap_err();
+    assert_eq!(err.code(), "bad_request");
+    assert!(err.to_string().contains("topology mismatch"), "{err}");
+}
