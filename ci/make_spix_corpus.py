@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Generate the seed corpus for the `fuzz_spix` fuzz target.
+
+Mirrors the `.spix` v1 writer in `rust/src/search/persist.rs`
+byte-for-byte (24-byte header: magic "SPIX", version u32, payload-len
+u64, FNV-1a-64 checksum u64; little-endian payload: flags u32, then
+t/radius/band/n/nnz u64s, labels, series f64 bits, envelopes, optional
+grid triples) so the fuzzer starts from inputs that pass the magic /
+version / checksum / dimension gates and mutates its way into the
+semantic validators instead of spending its budget rediscovering the
+header format.
+
+Checked-in outputs live in `rust/fuzz/corpus/fuzz_spix/`; re-run this
+script only when the format version bumps.  Deterministic: no RNG, no
+timestamps.
+"""
+
+import struct
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "fuzz" / "corpus" / "fuzz_spix"
+
+MAGIC = b"SPIX"
+VERSION = 1
+FLAG_ZNORM = 1 << 0
+FLAG_LB_VALID = 1 << 1
+FLAG_HAS_GRID = 1 << 2
+U64_MAX = (1 << 64) - 1
+
+FNV_INIT = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(data: bytes) -> int:
+    h = FNV_INIT
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & U64_MAX
+    return h
+
+
+def envelopes(series, radius):
+    """Sliding min/max envelope over +-radius, exactly bounding the series."""
+    t = len(series)
+    upper = [max(series[max(0, j - radius) : min(t, j + radius + 1)]) for j in range(t)]
+    lower = [min(series[max(0, j - radius) : min(t, j + radius + 1)]) for j in range(t)]
+    return upper, lower
+
+
+def build(flags, t, radius, band, series_list, labels, grid=None):
+    payload = bytearray()
+    nnz = len(grid) if grid is not None else 0
+    payload += struct.pack("<I", flags)
+    for dim in (t, radius, band, len(series_list), nnz):
+        payload += struct.pack("<Q", dim)
+    for label in labels:
+        payload += struct.pack("<Q", label)
+    for s in series_list:
+        assert len(s) == t
+        payload += struct.pack(f"<{t}d", *s)
+    for s in series_list:
+        upper, lower = envelopes(s, radius)
+        payload += struct.pack(f"<{t}d", *upper)
+        payload += struct.pack(f"<{t}d", *lower)
+    if grid is not None:
+        for row, col, weight in grid:
+            payload += struct.pack("<IId", row, col, weight)
+    header = MAGIC + struct.pack("<IQQ", VERSION, len(payload), fnv1a64(bytes(payload)))
+    return header + bytes(payload)
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    seeds = {}
+
+    # banded index: band 3 on T=8 (loader invariant: radius == min(band, t-1))
+    series = [
+        [0.0, 1.0, 4.0, 2.0, -1.0, 3.0, 5.0, 2.0],
+        [2.0, 2.0, 0.0, -3.0, 1.0, 1.0, 4.0, 6.0],
+    ]
+    seeds["banded.spix"] = build(FLAG_LB_VALID, 8, 3, 3, series, [0, 1])
+
+    # z-normalized, unbounded band: radius must equal t-1
+    seeds["znorm.spix"] = build(
+        FLAG_ZNORM | FLAG_LB_VALID, 4, 3, U64_MAX, [[-1.0, 0.5, 1.5, -1.0]], [2]
+    )
+
+    # SP-DTW grid index: unbounded band, unit weights (so lb_valid is
+    # admissible), radius >= the grid's max |row-col| offset of 1
+    grid = [(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0), (2, 2, 1.0), (3, 3, 1.0)]
+    seeds["grid.spix"] = build(
+        FLAG_HAS_GRID | FLAG_LB_VALID, 4, 2, U64_MAX, [[1.0, -2.0, 0.0, 3.0]], [7], grid
+    )
+
+    # valid header over an empty payload: exercises the first Reader
+    # bounds check ("payload ends mid-field") rather than the header gates
+    seeds["header_only.spix"] = MAGIC + struct.pack("<IQQ", VERSION, 0, FNV_INIT)
+
+    for name, data in sorted(seeds.items()):
+        (OUT / name).write_bytes(data)
+        print(f"{name}: {len(data)} bytes")
+
+
+if __name__ == "__main__":
+    main()

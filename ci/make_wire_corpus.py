@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Generate the seed corpus for the `fuzz_wire` fuzz target.
+
+One valid protocol line per file, covering every op family on both
+protocol versions (see the protocol tables at the top of
+`rust/src/coordinator/server.rs`), so libfuzzer's dictionary-less
+mutations start from requests that reach deep into dispatch — key
+lookups, spec parsing, series validation — instead of dying at the JSON
+parser.  Key-addressed seeds (grid/index/measure `0`) pair with the
+register seeds because the fuzz target reuses one coordinator across
+inputs.
+
+Checked-in outputs live in `rust/fuzz/corpus/fuzz_wire/`.
+Deterministic: no RNG, no timestamps.
+"""
+
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "fuzz" / "corpus" / "fuzz_wire"
+
+X = "[0.0,1.0,2.5,1.5,0.5,-0.5,1.0,2.0]"
+Y = "[1.0,1.5,2.0,0.5,0.0,1.0,3.0,2.5]"
+
+SEEDS = {
+    "ping": '{"op":"ping"}',
+    "info": '{"op":"info"}',
+    "metrics": '{"op":"metrics"}',
+    "register_grid": '{"op":"register_grid","t":8,"band":2}',
+    "register_grid_full": '{"op":"register_grid","t":8}',
+    "spdtw": f'{{"op":"spdtw","grid":0,"x":{X},"y":{Y}}}',
+    "spkrdtw": f'{{"op":"spkrdtw","grid":0,"nu":0.5,"x":{X},"y":{Y}}}',
+    "register_index": (
+        f'{{"op":"register_index","band":2,"series":[{X},{Y}],"labels":[0,1]}}'
+    ),
+    "search": f'{{"op":"search","index":0,"k":1,"x":{X}}}',
+    "batch_search": f'{{"op":"batch_search","index":0,"k":2,"xs":[{X},{Y}]}}',
+    "v2_dist": f'{{"proto":2,"id":"d1","op":"dist","measure":{{"kind":"dtw"}},"x":{X},"y":{Y}}}',
+    "v2_dist_key": f'{{"proto":2,"op":"dist","measure":0,"x":{X},"y":{Y}}}',
+    "v2_kernel": (
+        f'{{"proto":2,"op":"kernel","measure":{{"kind":"krdtw","nu":0.5}},"x":{X},"y":{Y}}}'
+    ),
+    "v2_register_measure": (
+        '{"proto":2,"op":"register_measure",'
+        '"measure":{"kind":"sakoe_chiba","band_pct":10}}'
+    ),
+    "v2_register_index_spec": (
+        f'{{"proto":2,"op":"register_index","measure":{{"kind":"banded_dtw","band":2}},'
+        f'"series":[{X},{Y}],"labels":[0,1]}}'
+    ),
+    "v2_search": f'{{"proto":2,"id":7,"op":"search","index":0,"k":1,"x":{X}}}',
+    "shard_search": f'{{"proto":2,"op":"shard_search","shard":0,"index":0,"k":1,"x":{X}}}',
+    "shard_register": (
+        f'{{"proto":2,"op":"register_index","shard":0,"global_ids":[0,2],'
+        f'"band":2,"series":[{X},{Y}],"labels":[0,1]}}'
+    ),
+    "unsupported_proto": '{"proto":3,"op":"ping"}',
+    "unknown_op": '{"op":"warp_speed"}',
+    "shutdown": '{"op":"shutdown"}',
+}
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    for name, line in sorted(SEEDS.items()):
+        (OUT / f"{name}.txt").write_text(line + "\n")
+        print(f"{name}.txt: {len(line)} bytes")
+
+
+if __name__ == "__main__":
+    main()

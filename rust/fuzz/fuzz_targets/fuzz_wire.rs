@@ -1,0 +1,51 @@
+//! Fuzz the TCP line protocol (v1 bare ops + v2 envelope) through the
+//! transport-free `server::dispatch_line` entry — the exact dispatch a
+//! socket connection performs, minus the socket.
+//!
+//! Contract under test: ANY input line produces a JSON reply (typed
+//! error replies for malformed input — `bad_json` / `bad_request` /
+//! `bad_input` / `unknown_op` / `unsupported_proto`), never a panic,
+//! stack overflow, or unbounded allocation.  Findings this target
+//! already produced, landed as fixes + regressions:
+//!
+//! - unbounded parser recursion: `[[[[`…×100k overflowed the stack —
+//!   fixed with `util::json::MAX_PARSE_DEPTH`, regression
+//!   `parse_depth_is_bounded` + the protocol malformed-envelope matrix;
+//! - unbounded `register_grid` materialization: a huge `t` allocated
+//!   O(t²) cells before any cap — v1 now routes through the same
+//!   `MAX_INLINE_GRID_CELLS` validation as the v2 spec path.
+//!
+//! One long-lived coordinator (no PJRT, no store) serves every input:
+//! state accumulated across inputs (registered grids/measures/indexes)
+//! only widens coverage into the key-addressed ops.  Inputs are capped
+//! by libfuzzer's default `-max_len`, so `register_index` payloads stay
+//! small.
+//!
+//! Seed corpus: `corpus/fuzz_wire/` holds one valid line per op family
+//! on both protocol versions (see `ci/make_wire_corpus.py`).
+//!
+//! Run: `cd rust && cargo +nightly fuzz run fuzz_wire`.  CI runs a
+//! bounded `-runs` smoke on every push (`fuzz-smoke` job); findings are
+//! promoted to `tests/integration_protocol.rs`.
+
+#![no_main]
+
+use std::sync::OnceLock;
+
+use libfuzzer_sys::fuzz_target;
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::{server, Coordinator};
+
+static COORD: OnceLock<Coordinator> = OnceLock::new();
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(line) = std::str::from_utf8(data) {
+        let coord = COORD.get_or_init(|| {
+            let mut cfg = CoordinatorConfig::default();
+            // keep the shared dispatcher lean: no disk store, tiny pool
+            cfg.warm_start = false;
+            Coordinator::start(cfg, None).expect("start fuzz coordinator")
+        });
+        let _ = server::dispatch_line(line, coord);
+    }
+});

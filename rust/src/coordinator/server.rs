@@ -123,7 +123,7 @@ use crate::coordinator::state::{GridKey, IndexKey, MeasureKey};
 use crate::coordinator::Coordinator;
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::Result;
-use crate::measures::spec::MeasureSpec;
+use crate::measures::spec::{GridSpec, MeasureSpec};
 use crate::search::index::content_hash_of;
 use crate::search::{Cascade, Index};
 use crate::sparse::LocMatrix;
@@ -363,6 +363,21 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     reply
 }
 
+/// Serve one protocol line against a coordinator with no socket in the
+/// way — byte-identical dispatch to what a TCP connection performs
+/// (same parser, same envelope handling, same typed error replies).
+///
+/// This is the transport-free entry the correctness tooling drives:
+/// the `fuzz_wire` fuzz target feeds it arbitrary lines, and the
+/// malformed-envelope matrix in `tests/integration_protocol.rs` (which
+/// also runs under Miri, where TCP is unavailable) asserts stable v2
+/// error codes through it.  A `shutdown` op is answered `ok` but only
+/// sets a throwaway flag — there is no serve loop to stop.
+pub fn dispatch_line(line: &str, coord: &Coordinator) -> Json {
+    let stop = AtomicBool::new(false);
+    dispatch(line, coord, &stop)
+}
+
 fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> {
     let op = req.req_str("op")?;
     match op {
@@ -385,9 +400,18 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
         }
         "register_grid" => {
             let t = req.req_usize("t")?;
-            let loc = match req.get("band").and_then(Json::as_usize) {
-                Some(band) => LocMatrix::corridor(t, band),
-                None => LocMatrix::full(t),
+            // Route the size check through the same inline-grid cap as
+            // the v2 spec path: a wire-supplied `t` must not materialize
+            // an arbitrarily large LOC matrix (`full(t)` is O(t²) cells
+            // — a fuzz_wire-shaped allocation DoS before this check).
+            let spec = match req.get("band").and_then(Json::as_usize) {
+                Some(band) => GridSpec::Corridor { t, band },
+                None => GridSpec::Full { t },
+            };
+            spec.validate()?;
+            let loc = match spec {
+                GridSpec::Corridor { t, band } => LocMatrix::corridor(t, band),
+                _ => LocMatrix::full(t),
             };
             let key = coord.register_grid(loc)?;
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("grid", Json::num(key.0 as f64))]))

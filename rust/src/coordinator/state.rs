@@ -112,6 +112,13 @@ impl IndexRegistry {
     /// map (one global id per train series, strictly increasing —
     /// validated at the wire before this is called).
     pub fn insert_sharded(&mut self, index: Arc<Index>, global_ids: Vec<usize>) -> IndexKey {
+        // The exact-merge argument in `crate::shard` needs local order
+        // to agree with global order; the wire validator enforces it,
+        // this re-checks any future non-wire caller.
+        debug_assert!(
+            global_ids.windows(2).all(|w| w[0] < w[1]),
+            "sharded global_ids must be strictly increasing"
+        );
         self.insert_entry(IndexEntry {
             index,
             name: None,

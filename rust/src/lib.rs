@@ -54,6 +54,10 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
 #![allow(clippy::inherent_to_string)]
+// Every `unsafe` operation must sit in its own `unsafe` block with a
+// `// SAFETY:` comment (the latter enforced by `cargo xtask lint`), even
+// inside `unsafe fn` — so each block's proof obligation stays local.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod classify;
 pub mod config;

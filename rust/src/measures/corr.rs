@@ -96,8 +96,7 @@ mod tests {
                 CorrDist
                     .dist(&probe, &cands[a])
                     .value
-                    .partial_cmp(&CorrDist.dist(&probe, &cands[b]).value)
-                    .unwrap()
+                    .total_cmp(&CorrDist.dist(&probe, &cands[b]).value)
             });
             idx
         };
@@ -107,8 +106,7 @@ mod tests {
                 Euclidean
                     .dist(&probe, &cands[a])
                     .value
-                    .partial_cmp(&Euclidean.dist(&probe, &cands[b]).value)
-                    .unwrap()
+                    .total_cmp(&Euclidean.dist(&probe, &cands[b]).value)
             });
             idx
         };

@@ -130,6 +130,7 @@ pub fn dtw_banded_ref(x: &[f64], y: &[f64], band: usize) -> DistResult {
     let ty = y.len();
     assert!(tx > 0 && ty > 0, "empty series");
     let slope = ty as f64 / tx as f64;
+    // lint:allow(hot-alloc): reference implementation, not a serving path.
     let mut prev = vec![BIG; ty];
     let mut cur = vec![BIG; ty];
     let mut visited: u64 = 0;

@@ -82,6 +82,7 @@ impl GaussianEd {
     /// Median heuristic: `nu = 1 / median(d_E^2)` over a sample of pairs.
     pub fn median_heuristic(set: &crate::data::LabeledSet) -> f64 {
         let n = set.len().min(40);
+        // lint:allow(hot-alloc): one-shot training heuristic, not a DP kernel.
         let mut d2s = Vec::new();
         for i in 0..n {
             for j in (i + 1)..n {

@@ -17,6 +17,7 @@ use crate::measures::dtw::dtw_banded;
 /// builds at realistic radii.  `search::Index` builds all train
 /// envelopes through this path.
 pub fn envelope(y: &[f64], r: usize) -> (Vec<f64>, Vec<f64>) {
+    // lint:allow(hot-alloc): owning wrapper; hot paths use `envelope_into`.
     let mut upper = Vec::new();
     let mut lower = Vec::new();
     envelope_into(

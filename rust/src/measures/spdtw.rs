@@ -85,6 +85,7 @@ impl SpDtw {
         assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
         assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
         // DP values parallel to the LOC entry array.
+        // lint:allow(hot-alloc): reference scan kept as a cross-check oracle.
         let mut d = vec![BIG; loc.nnz()];
         // Fast predecessor lookup inside the current and previous rows:
         // rows are contiguous CSR ranges, so we walk them with cursors.

@@ -103,6 +103,7 @@ impl SpKrdtw {
         let ls: Vec<f64> = (0..t).map(|i| -nu * phi(x[i], y[i])).collect();
 
         // (lK1, lK2) per LOC entry.
+        // lint:allow(hot-alloc): reference scan kept as a cross-check oracle.
         let mut vals = vec![(NEG, NEG); loc.nnz()];
         for r in 0..t {
             let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);

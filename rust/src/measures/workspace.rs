@@ -84,6 +84,9 @@ impl DpWorkspace {
     pub fn rows(&mut self, t: usize, fill: f64) -> (&mut Vec<f64>, &mut Vec<f64>) {
         reset(&mut self.row_a, t, fill);
         reset(&mut self.row_b, t, fill);
+        // Kernels index these rows unchecked-by-reasoning up to `t`;
+        // the postcondition keeps `reset` honest under refactoring.
+        debug_assert!(self.row_a.len() == t && self.row_b.len() == t);
         (&mut self.row_a, &mut self.row_b)
     }
 
@@ -96,6 +99,7 @@ impl DpWorkspace {
     ) -> (&mut Vec<(f64, f64)>, &mut Vec<(f64, f64)>) {
         reset(&mut self.pair_row_a, t, fill);
         reset(&mut self.pair_row_b, t, fill);
+        debug_assert!(self.pair_row_a.len() == t && self.pair_row_b.len() == t);
         (&mut self.pair_row_a, &mut self.pair_row_b)
     }
 

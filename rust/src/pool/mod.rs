@@ -41,18 +41,37 @@
 //! Panics stay contained per epoch: a panicking job aborts only its own
 //! epoch (re-raised to that epoch's submitter as "pool worker
 //! panicked"); concurrently running epochs are unaffected.
+//!
+//! ## Machine-checked correctness
+//!
+//! Everything this scheduler synchronizes through comes from the
+//! [`sync`] facade, which compiles to `std::sync` normally and to
+//! `loom`'s model-checked primitives under `--cfg loom` — so
+//! `tests/loom_pool.rs` exhaustively enumerates the interleavings of
+//! the *shipped* claim/latch/slot-write protocol (2-epoch overlap,
+//! least-served claiming, submitter self-participation, panic
+//! isolation, disjoint slot writes) rather than sampling them the way
+//! `tests/stress_pool.rs` does.  The same code also runs under Miri and
+//! ThreadSanitizer in CI.  EXPERIMENTS.md §Correctness toolchain
+//! documents how to run each analysis locally and what each one
+//! guarantees.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
-use std::thread;
+use std::sync::{mpsc, OnceLock};
 
 use crate::measures::workspace::{self, DpWorkspace};
 
+pub(crate) mod sync;
+
+use self::sync::{
+    spawn_named, thread, Arc, AtomicBool, AtomicUsize, Condvar, Mutex, MutexGuard, Ordering,
+    UnsafeCell,
+};
+
 /// Number of worker threads to use by default (min(cores, 16)).
 pub fn default_threads() -> usize {
-    thread::available_parallelism()
+    std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
@@ -156,19 +175,42 @@ pub fn pool_stats() -> PoolStats {
 /// space is exhausted, using the executing participant's workspace.
 type Runner<'a> = dyn Fn(&mut DpWorkspace) + Sync + 'a;
 
-/// Raw pointer to one epoch's runner.  Sound to send across threads
-/// because [`ComputePool::execute`] keeps the pointee alive (and the
-/// epoch's slot registered) until every participant has finished with
-/// it.
+/// Raw pointer to one epoch's runner.
 #[derive(Clone, Copy)]
 struct RunnerPtr(*const Runner<'static>);
+
+// SAFETY: the pointee is `Sync` (so `&Runner` may be shared across
+// threads) and `ComputePool::execute` keeps it alive — and its epoch
+// slot registered — until every participant has finished running it, so
+// a `RunnerPtr` handed to a worker never dangles while dereferenceable.
 unsafe impl Send for RunnerPtr {}
 
-/// Output slot array for one epoch.  Participants write disjoint
-/// indices claimed from the epoch's atomic counter, so no two threads
-/// ever touch the same slot.
-struct SlotsPtr<R>(*mut Option<R>);
-unsafe impl<R: Send> Sync for SlotsPtr<R> {}
+/// Borrow of one epoch's output-slot array, shared by every
+/// participant.  Slot `i` is written only by the participant that
+/// claimed index `i` from the epoch's atomic counter, so all writes are
+/// disjoint; the submitter reads the slots only after the epoch's
+/// completion latch.  Under `--cfg loom` each slot is an instrumented
+/// `loom::cell::UnsafeCell`, so the model checker verifies that
+/// disjointness claim on every explored interleaving.
+struct EpochSlots<'a, R>(&'a [UnsafeCell<Option<R>>]);
+
+// SAFETY: participants only touch disjoint slots (each index is claimed
+// exactly once from the epoch's `AtomicUsize`), and results (`R`) move
+// to the submitting thread when it drains the slots after the
+// completion latch — hence `R: Send` is required and sufficient.
+unsafe impl<R: Send> Sync for EpochSlots<'_, R> {}
+
+impl<R> EpochSlots<'_, R> {
+    /// Store the result for claimed index `i`.
+    fn write(&self, i: usize, v: R) {
+        // SAFETY: `i` was claimed by exactly this participant via the
+        // epoch counter, so no other thread accesses slot `i` until the
+        // submitter reads it back after the completion latch
+        // (happens-after every participant's decrement under the state
+        // mutex).
+        self.0[i].with_mut(|p| unsafe { *p = Some(v) });
+    }
+}
 
 /// One live epoch in the scheduler.
 struct EpochSlot {
@@ -193,20 +235,36 @@ struct PoolState {
     /// worker trims once per generation and acks.
     trim_gen: u64,
     trim_acks: usize,
+    /// Terminal: set by [`ComputePool::shutdown`]; workers exit instead
+    /// of parking.  Never set on the process-wide pool — it exists so
+    /// bounded-lifetime pools (loom models, tests) leave no threads
+    /// behind.
+    shutdown: bool,
 }
 
-/// The process-wide persistent worker pool behind [`par_map_ws`]:
-/// `default_threads()` threads, each owning one long-lived
-/// [`DpWorkspace`], parked on a condvar while no epoch has claimable
-/// work.
-struct ComputePool {
+/// The persistent worker pool behind [`par_map_ws`]: `workers` threads,
+/// each owning one long-lived [`DpWorkspace`], parked on a condvar
+/// while no epoch has claimable work.
+///
+/// Normal code never constructs one — [`par_map_ws`] lazily starts the
+/// process-wide instance with [`default_threads`] workers.  The type
+/// and its [`start`](ComputePool::start) / [`run`](ComputePool::run) /
+/// [`shutdown`](ComputePool::shutdown) methods are public so
+/// bounded-lifetime harnesses (the loom models in
+/// `tests/loom_pool.rs`, sanitizer runs) can model-check the exact
+/// shipped scheduler with small worker counts and then join every
+/// thread.
+pub struct ComputePool {
     state: Mutex<PoolState>,
-    /// Signaled when a new epoch arrives or a trim is requested.
+    /// Signaled when a new epoch arrives, a trim is requested, or the
+    /// pool shuts down.
     work_cv: Condvar,
     /// Signaled when an epoch's participant count drops to zero or a
     /// trim is acked.
     done_cv: Condvar,
     workers: usize,
+    /// Worker join handles, taken by [`shutdown`](ComputePool::shutdown).
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 static POOL: OnceLock<Arc<ComputePool>> = OnceLock::new();
@@ -237,7 +295,13 @@ pub fn trim_workspaces() {
 }
 
 impl ComputePool {
-    fn start(workers: usize) -> Arc<ComputePool> {
+    /// Start a pool with `workers` worker threads (min 1).
+    ///
+    /// The process-wide instance is started lazily by [`par_map_ws`];
+    /// direct use is for bounded-lifetime harnesses (loom models,
+    /// sanitizer tests), which must pair it with
+    /// [`shutdown`](ComputePool::shutdown).
+    pub fn start(workers: usize) -> Arc<ComputePool> {
         let pool = Arc::new(ComputePool {
             state: Mutex::new(PoolState {
                 epochs: Vec::new(),
@@ -245,18 +309,21 @@ impl ComputePool {
                 peak_epochs: 0,
                 trim_gen: 0,
                 trim_acks: 0,
+                shutdown: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             workers: workers.max(1),
+            handles: Mutex::new(Vec::new()),
         });
+        let mut handles = Vec::with_capacity(pool.workers);
         for idx in 0..pool.workers {
             let p = Arc::clone(&pool);
-            thread::Builder::new()
-                .name(format!("spdtw-pool-{idx}"))
-                .spawn(move || p.worker_loop())
-                .expect("spawn compute-pool worker");
+            handles.push(spawn_named(format!("spdtw-pool-{idx}"), move || {
+                p.worker_loop()
+            }));
         }
+        *lock(&pool.handles) = handles;
         pool
     }
 
@@ -280,13 +347,16 @@ impl ComputePool {
     fn worker_loop(&self) {
         ON_POOL_WORKER.with(|c| c.set(true));
         // The long-lived workspace: reused across every epoch this
-        // worker ever joins, for the lifetime of the process.
+        // worker ever joins, for the lifetime of the pool.
         let mut ws = DpWorkspace::new();
         let mut trim_seen = 0u64;
         loop {
             let (id, task) = {
                 let mut st = lock(&self.state);
                 loop {
+                    if st.shutdown {
+                        return;
+                    }
                     if st.trim_gen != trim_seen {
                         trim_seen = st.trim_gen;
                         ws.trim();
@@ -386,16 +456,50 @@ impl ComputePool {
         }
     }
 
-    fn run<R, F>(&self, n: usize, threads: usize, chunk: usize, f: &F) -> Vec<R>
+    /// Terminally stop the pool: workers exit instead of parking, and
+    /// every worker thread is joined before this returns.
+    ///
+    /// Epochs still live when this is called complete normally (their
+    /// participants — including the submitter — drain the index space
+    /// before observing the flag).  The process-wide pool never shuts
+    /// down; this exists so bounded-lifetime harnesses (loom models,
+    /// sanitizer runs, tests) terminate every thread they spawned —
+    /// loom in particular requires all model threads to finish.
+    pub fn shutdown(&self) {
+        {
+            let mut st = lock(&self.state);
+            st.shutdown = true;
+            self.work_cv.notify_all();
+        }
+        let mut handles = lock(&self.handles);
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Run one `par_map_ws`-shaped epoch on this pool: dynamic
+    /// chunk-claiming over `0..n` with at most `threads` simultaneous
+    /// participants (the calling thread included), results in index
+    /// order.  Bit-identical to `(0..n).map(|i| f(i, ws)).collect()`.
+    ///
+    /// Public for the same reason as [`start`](ComputePool::start);
+    /// normal code calls [`par_map_ws`], which adds the serial
+    /// fallbacks and TLS-workspace reuse on top.
+    ///
+    /// # Panics
+    ///
+    /// Panics with "pool worker panicked" if any item's `f` panicked
+    /// (the epoch aborts early; concurrent epochs are unaffected).
+    pub fn run<R, F>(&self, n: usize, threads: usize, chunk: usize, f: &F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize, &mut DpWorkspace) -> R + Sync,
     {
-        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
-        out.resize_with(n, || None);
+        assert!(chunk > 0, "chunk must be positive");
+        let slots: Vec<UnsafeCell<Option<R>>> = (0..n).map(|_| UnsafeCell::new(None)).collect();
+        let out = EpochSlots(&slots);
         let next = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
-        let slots = SlotsPtr(out.as_mut_ptr());
         let runner = |ws: &mut DpWorkspace| loop {
             // Fail fast: once any item panicked the epoch's result is a
             // panic regardless, so don't drain the remaining index
@@ -410,11 +514,7 @@ impl ComputePool {
             let end = (start + chunk).min(n);
             for i in start..end {
                 match catch_unwind(AssertUnwindSafe(|| f(i, ws))) {
-                    // SAFETY: index `i` was claimed by exactly this
-                    // participant via `next`, so the write is race-free;
-                    // the caller reads `out` only after the epoch's
-                    // completion latch.
-                    Ok(v) => unsafe { slots.0.add(i).write(Some(v)) },
+                    Ok(v) => out.write(i, v),
                     Err(_) => {
                         panicked.store(true, Ordering::SeqCst);
                         return;
@@ -426,8 +526,15 @@ impl ComputePool {
         if panicked.load(Ordering::SeqCst) {
             panic!("pool worker panicked");
         }
-        out.into_iter()
-            .map(|v| v.expect("index not produced"))
+        slots
+            .iter()
+            .map(|slot| {
+                // SAFETY: the epoch's completion latch has passed (every
+                // participant decremented under the state mutex), so no
+                // other thread holds a reference into the slots.
+                slot.with_mut(|p| unsafe { (*p).take() })
+                    .expect("index not produced")
+            })
             .collect()
     }
 }
@@ -594,6 +701,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock rendezvous loops are too slow under Miri
     fn concurrent_epochs_overlap_without_submit_lock() {
         // Two epochs submitted from distinct threads rendezvous *inside*
         // their job bodies: epoch A's items block until epoch B has
@@ -660,6 +768,20 @@ mod tests {
         assert!(poisoned.is_err());
         // the persistent pool must still serve subsequent epochs
         assert_eq!(par_map(16, 4, |i| i * 2), (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dedicated_pool_runs_epochs_and_shuts_down() {
+        // The bounded-lifetime path the loom models use: a private pool,
+        // a few epochs, then shutdown joins every worker.
+        let pool = ComputePool::start(2);
+        let out = pool.run(9, 3, 2, &|i, _ws: &mut DpWorkspace| i * 7);
+        assert_eq!(out, (0..9).map(|i| i * 7).collect::<Vec<_>>());
+        let again = pool.run(3, 2, 1, &|i, _ws: &mut DpWorkspace| i + 1);
+        assert_eq!(again, vec![1, 2, 3]);
+        pool.shutdown();
+        // shutdown is idempotent (handles already drained)
+        pool.shutdown();
     }
 
     #[test]

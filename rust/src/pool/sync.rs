@@ -1,0 +1,104 @@
+//! Synchronization facade: `std::sync` in normal builds, `loom` under
+//! `--cfg loom`.
+//!
+//! The concurrent-epoch scheduler in [`super`] is the riskiest code in
+//! the crate — raw-pointer result slots, a `Runner<'_> → Runner<'static>`
+//! transmute, hand-written `Send`/`Sync` impls — and its correctness
+//! argument is a happens-before chain through a mutex, two condvars and
+//! two atomics.  `tests/stress_pool.rs` *samples* schedules of that
+//! chain; `tests/loom_pool.rs` *enumerates* them by compiling this exact
+//! scheduler against [loom](https://docs.rs/loom)'s model-checked
+//! primitives instead of `std`'s (see EXPERIMENTS.md §Correctness
+//! toolchain).
+//!
+//! Everything the scheduler synchronizes through is imported from here
+//! and nowhere else, so the model checks the shipped code path, not a
+//! parallel reimplementation.  The facade is intentionally minimal:
+//!
+//! - [`Mutex`] / [`MutexGuard`] / [`Condvar`] / [`Arc`] — re-exported
+//!   verbatim from `std::sync` or `loom::sync` (identical APIs,
+//!   including `LockResult` poisoning signatures).
+//! - [`AtomicBool`] / [`AtomicUsize`] / [`Ordering`] — ditto, from the
+//!   respective `atomic` modules.
+//! - [`thread`] — `loom::thread` models `spawn`/`JoinHandle`; the
+//!   [`spawn_named`] helper papers over loom's missing
+//!   `thread::Builder`.
+//! - [`UnsafeCell`] — loom's instrumented cell (every access is
+//!   causality-checked against every other access) with a thin std
+//!   wrapper exposing the same `with_mut` API, so epoch output slots go
+//!   through an access-tracked window in the model build and compile to
+//!   a zero-cost `std::cell::UnsafeCell` otherwise.
+//!
+//! `loom` is **not** a dependency of this crate: the `--cfg loom` build
+//! only compiles on CI (or locally) after a `cargo add --dev loom`
+//! (see `.github/workflows/ci.yml` `loom-model` job), keeping the
+//! shipped manifest dependency-free.
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub(crate) use std::thread;
+
+#[cfg(loom)]
+pub(crate) use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub(crate) use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+
+/// Spawn a worker thread.  `std` builds get a named thread (visible in
+/// debuggers and panic messages); loom's `thread` has no `Builder`, so
+/// the model build drops the name.
+#[cfg(not(loom))]
+pub(crate) fn spawn_named(
+    name: String,
+    f: impl FnOnce() + Send + 'static,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(name)
+        .spawn(f)
+        .expect("spawn compute-pool worker")
+}
+
+/// Spawn a worker thread (loom model build: unnamed `loom::thread`).
+#[cfg(loom)]
+pub(crate) fn spawn_named(
+    _name: String,
+    f: impl FnOnce() + Send + 'static,
+) -> thread::JoinHandle<()> {
+    thread::spawn(f)
+}
+
+/// Interior-mutability cell for epoch output slots.
+///
+/// `std` build: a transparent wrapper over [`std::cell::UnsafeCell`]
+/// mirroring loom's `with_mut(*mut T)` access style.  Loom build: the
+/// real `loom::cell::UnsafeCell`, which records every access and fails
+/// the model if two threads ever touch a cell without a happens-before
+/// edge between them — exactly the "disjoint slot writes are race-free"
+/// claim the scheduler's `// SAFETY:` comments make in prose.
+#[cfg(loom)]
+pub(crate) use loom::cell::UnsafeCell;
+
+/// Interior-mutability cell for epoch output slots (`std` flavor; see
+/// the loom-side docs above).
+#[cfg(not(loom))]
+#[derive(Debug)]
+pub(crate) struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    /// Wrap a value.
+    pub(crate) fn new(data: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(data))
+    }
+
+    /// Hand `f` a raw mutable pointer to the contents.  The caller's
+    /// `unsafe` block around the dereference carries the aliasing
+    /// argument (see the slot-write SAFETY comments in `pool/mod.rs`).
+    pub(crate) fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}

@@ -49,6 +49,15 @@ impl ShardLayout {
         for g in 0..n {
             out[self.assign(g)].push(g);
         }
+        // Postcondition backing the exact-merge argument (and the wire
+        // validator's strictly-increasing `global_ids` requirement):
+        // ascending `g` insertion keeps every per-shard list strictly
+        // increasing.
+        debug_assert!(
+            out.iter()
+                .all(|part| part.windows(2).all(|w| w[0] < w[1])),
+            "split produced a non-increasing shard slice"
+        );
         out
     }
 

@@ -138,6 +138,10 @@ where
             if heap.len() > k {
                 heap.pop(); // drop the current worst
             }
+            // Boundedness invariant: the heap never outgrows its
+            // `with_capacity(k + 1)` reservation, so merging huge
+            // fleets stays O(k) memory.
+            debug_assert!(heap.len() <= k + 1, "merge heap exceeded k+1 items");
         }
     }
     let mut out: Vec<ShardNeighbor> = heap.into_iter().map(|h| h.0).collect();

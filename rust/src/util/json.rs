@@ -22,11 +22,23 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting depth accepted by [`Json::parse`].
+///
+/// The parser descends recursively per `[`/`{`, so an unbounded input
+/// like `"[[[["…` ×100k would otherwise overflow the thread stack — a
+/// remote crash for anything feeding untrusted bytes to the wire
+/// protocol (found by the `fuzz_wire` fuzz target; regression-tested in
+/// `parse_depth_is_bounded` below and the protocol malformed-envelope
+/// matrix).  128 is far beyond any legitimate request: v2 envelopes
+/// nest at most ~6 levels (`params.grid.entries[...]`).
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -212,6 +224,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting depth (bounded by [`MAX_PARSE_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -243,8 +257,18 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            c @ (b'{' | b'[') => {
+                // Each container level is one stack frame of recursion;
+                // cap it so adversarial inputs ("[[[["… to the wire
+                // protocol) error out instead of overflowing the stack.
+                if self.depth >= MAX_PARSE_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -433,5 +457,36 @@ mod tests {
         let v = Json::parse(r#"{"n": 1.5}"#).unwrap();
         assert!(v.req_usize("n").is_err()); // fractional
         assert!(v.req_str("missing").is_err());
+    }
+
+    /// Regression (fuzz_wire finding): parsing recursed once per `[`/`{`
+    /// with no bound, so a ~100k-deep input overflowed the thread stack —
+    /// a remote crash through the TCP protocol.  Deep nesting must now be
+    /// a typed `Error::Json` ("nesting too deep"), never an abort.
+    #[test]
+    fn parse_depth_is_bounded() {
+        for (open, close) in [("[", "]"), (r#"{"k":"#, "}")] {
+            // one past the cap: typed error
+            let deep = format!(
+                "{}1{}",
+                open.repeat(MAX_PARSE_DEPTH + 1),
+                close.repeat(MAX_PARSE_DEPTH + 1)
+            );
+            match Json::parse(&deep) {
+                Err(Error::Json { msg, .. }) => assert!(msg.contains("nesting too deep")),
+                other => panic!("expected depth error, got {other:?}"),
+            }
+            // grossly past the cap (the fuzz shape): still a typed error,
+            // and crucially no stack overflow
+            let hostile = open.repeat(100_000);
+            assert!(Json::parse(&hostile).is_err());
+        }
+        // at the cap: still parses
+        let ok = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH),
+            "]".repeat(MAX_PARSE_DEPTH)
+        );
+        assert!(Json::parse(&ok).is_ok());
     }
 }

@@ -14,6 +14,7 @@ use spdtw::data::synthetic;
 use spdtw::runtime::Manifest;
 use spdtw::search::{persist, Cascade, Index, SearchEngine};
 use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::sparse::LocMatrix;
 use spdtw::util::json::Json;
 
 fn temp_dir(tag: &str) -> PathBuf {
@@ -27,6 +28,7 @@ fn temp_dir(tag: &str) -> PathBuf {
 /// to the freshly built index, across banded, z-normalized and SP-DTW
 /// (learned-grid) index flavors.
 #[test]
+#[cfg_attr(miri, ignore = "file IO; the resealed matrices cover the loader under Miri")]
 fn saved_index_reloads_to_byte_identical_knn() {
     let dir = temp_dir("roundtrip");
     let ds = synthetic::generate_scaled("SyntheticControl", 42, 24, 16).unwrap();
@@ -89,6 +91,7 @@ fn saved_index_reloads_to_byte_identical_knn() {
 /// at any point, a flipped byte anywhere, a bumped version, foreign
 /// magic — and never a partially-working index.
 #[test]
+#[cfg_attr(miri, ignore = "file IO; the resealed matrices cover the loader under Miri")]
 fn corrupted_files_are_rejected_never_misloaded() {
     let dir = temp_dir("corrupt");
     let ds = synthetic::generate_scaled("CBF", 7, 10, 2).unwrap();
@@ -140,6 +143,7 @@ fn corrupted_files_are_rejected_never_misloaded() {
 /// process B (a fresh Coordinator) serves the same neighbors without a
 /// rebuild, reporting `loaded_from_disk` over TCP.
 #[test]
+#[cfg_attr(miri, ignore = "file IO; the resealed matrices cover the loader under Miri")]
 fn coordinator_warm_start_serves_identical_results() {
     let store = temp_dir("warm");
     let ds = synthetic::generate_scaled("Gun-Point", 13, 16, 8).unwrap();
@@ -239,6 +243,7 @@ fn coordinator_warm_start_serves_identical_results() {
 /// A corrupt store never reaches serving: the warm start skips the bad
 /// file, counts the rejection, and a named re-register rebuilds cleanly.
 #[test]
+#[cfg_attr(miri, ignore = "file IO; the resealed matrices cover the loader under Miri")]
 fn warm_start_skips_corrupt_store_and_rebuilds() {
     let store = temp_dir("warmbad");
     let ds = synthetic::generate_scaled("CBF", 3, 8, 4).unwrap();
@@ -270,9 +275,165 @@ fn warm_start_skips_corrupt_store_and_rebuilds() {
     std::fs::remove_dir_all(&store).ok();
 }
 
+/// Rebuild a valid header (magic, version, length, checksum) around a
+/// doctored payload, so the corruption reaches the semantic validators
+/// in `from_bytes` instead of dying at the checksum gate.  This is the
+/// deterministic promotion of the `fuzz_spix` corpus shapes: the fuzzer
+/// explores this space randomly in CI, these cases pin the invariants
+/// forever.
+fn reseal(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + payload.len());
+    out.extend_from_slice(b"SPIX");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&persist::fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn put_u64(payload: &mut [u8], off: usize, v: u64) {
+    payload[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Payload field offsets (see the format doc in `search::persist`):
+/// flags u32 @0, then u64 dims t@4, radius@12, band@20, n@28, nnz@36,
+/// labels from 44, series rows after the labels.
+const OFF_T: usize = 4;
+const OFF_RADIUS: usize = 12;
+const OFF_BAND: usize = 20;
+const OFF_N: usize = 28;
+const OFF_NNZ: usize = 36;
+
+/// Every semantic invariant the loader enforces *behind* the checksum:
+/// a well-sealed file with inconsistent contents must still be a clean
+/// `Err`, never a mis-built index.  Pure in-memory (`to_bytes` /
+/// `from_bytes`), so it also runs under Miri.
+#[test]
+fn resealed_semantic_corruption_is_rejected() {
+    let ds = synthetic::generate_scaled("CBF", 11, 10, 2).unwrap();
+    let t = ds.series_len();
+    let n = ds.train.len();
+    let band = 3usize;
+    assert!(band + 1 < t, "base index needs band headroom");
+    let payload = persist::to_bytes(&Index::build(&ds.train, band, 2))[24..].to_vec();
+
+    // Control first: resealing the untouched payload must load, or the
+    // matrix below would pass vacuously.
+    persist::from_bytes(&reseal(&payload)).expect("reseal control failed");
+
+    type Mutation = Box<dyn Fn(&mut Vec<u8>)>;
+    let series_start = 44 + n * 8;
+    let cases: Vec<(&str, Mutation, &str)> = vec![
+        (
+            "unknown flag bit",
+            Box::new(|p: &mut Vec<u8>| p[0] |= 1 << 3),
+            "unknown flag bits",
+        ),
+        (
+            "zero series length",
+            Box::new(|p: &mut Vec<u8>| put_u64(p, OFF_T, 0)),
+            "empty index",
+        ),
+        (
+            "zero series count",
+            Box::new(|p: &mut Vec<u8>| put_u64(p, OFF_N, 0)),
+            "empty index",
+        ),
+        (
+            "radius >= t",
+            Box::new(move |p: &mut Vec<u8>| put_u64(p, OFF_RADIUS, t as u64)),
+            "out of range",
+        ),
+        (
+            "grid entries without grid flag",
+            Box::new(|p: &mut Vec<u8>| put_u64(p, OFF_NNZ, 1)),
+            "disagrees with entry count",
+        ),
+        (
+            "dims disagree with payload size",
+            Box::new(move |p: &mut Vec<u8>| put_u64(p, OFF_N, (n + 1) as u64)),
+            "dims require",
+        ),
+        (
+            "radius inconsistent with band",
+            Box::new(move |p: &mut Vec<u8>| put_u64(p, OFF_RADIUS, (band - 1) as u64)),
+            "inconsistent with band",
+        ),
+        (
+            "envelope no longer bounds its series",
+            Box::new(move |p: &mut Vec<u8>| {
+                p[series_start..series_start + 8].copy_from_slice(&1e300f64.to_le_bytes());
+            }),
+            "does not bound",
+        ),
+        (
+            "payload truncated behind a fixed-up header",
+            Box::new(|p: &mut Vec<u8>| {
+                let cut = p.len() - 8;
+                p.truncate(cut);
+            }),
+            "dims require",
+        ),
+    ];
+    for (what, mutate, want) in cases {
+        let mut bad = payload.clone();
+        mutate(&mut bad);
+        let err = persist::from_bytes(&reseal(&bad))
+            .map(|_| ())
+            .expect_err(&format!("{what}: loader accepted the file"));
+        let msg = err.to_string();
+        assert!(msg.contains(want), "{what}: got {msg:?}, wanted {want:?}");
+    }
+}
+
+/// Same matrix for the grid-index flavor: the band sentinel, the
+/// radius/grid-reach admissibility link, and the grid triples
+/// themselves (out-of-range coordinates, non-finite weights).
+#[test]
+fn resealed_grid_corruption_is_rejected() {
+    let ds = synthetic::generate_scaled("CBF", 5, 8, 2).unwrap();
+    let t = ds.series_len();
+    let n = ds.train.len();
+    // Diagonal plus one off-diagonal cell: max band offset is exactly 1,
+    // so shrinking the stored radius to 0 must trip the reach check.
+    let mut triples: Vec<(usize, usize, f64)> = (0..t).map(|i| (i, i, 1.0)).collect();
+    triples.push((0, 1, 1.0));
+    let loc = Arc::new(LocMatrix::from_triples(t, triples));
+    let payload = persist::to_bytes(&Index::build_spdtw(&ds.train, loc, 2))[24..].to_vec();
+    persist::from_bytes(&reseal(&payload)).expect("grid reseal control failed");
+
+    let grid_start = 44 + n * 8 + n * t * 24;
+
+    let mut banded = payload.clone();
+    put_u64(&mut banded, OFF_BAND, (t - 1) as u64);
+    let msg = persist::from_bytes(&reseal(&banded))
+        .map(|_| ())
+        .expect_err("bounded band accepted on grid index")
+        .to_string();
+    assert!(msg.contains("unbounded band"), "{msg}");
+
+    let mut narrow = payload.clone();
+    put_u64(&mut narrow, OFF_RADIUS, 0);
+    let msg = persist::from_bytes(&reseal(&narrow))
+        .map(|_| ())
+        .expect_err("radius below grid reach accepted")
+        .to_string();
+    assert!(msg.contains("narrower than grid reach"), "{msg}");
+
+    // Grid triples: row index pushed out of [0, t), then a NaN weight.
+    let mut out_of_range = payload.clone();
+    out_of_range[grid_start..grid_start + 4].copy_from_slice(&(t as u32).to_le_bytes());
+    assert!(persist::from_bytes(&reseal(&out_of_range)).is_err());
+
+    let mut nan_weight = payload.clone();
+    nan_weight[grid_start + 8..grid_start + 16].copy_from_slice(&f64::NAN.to_le_bytes());
+    assert!(persist::from_bytes(&reseal(&nan_weight)).is_err());
+}
+
 /// `inspect` reads dimensions without a full load and flags bad
 /// checksums instead of erroring.
 #[test]
+#[cfg_attr(miri, ignore = "file IO; the resealed matrices cover the loader under Miri")]
 fn inspect_summarizes_and_flags_corruption() {
     let dir = temp_dir("inspect");
     let ds = synthetic::generate_scaled("CBF", 9, 6, 2).unwrap();

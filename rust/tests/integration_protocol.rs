@@ -34,6 +34,7 @@ fn call(client: &mut Client, req: &str) -> Json {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
 fn v1_bare_ops_answer_identically() {
     let (mut server, mut client) = start();
 
@@ -139,6 +140,7 @@ fn v1_bare_ops_answer_identically() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
 fn v2_envelope_echoes_id_on_success_and_error() {
     let (mut server, mut client) = start();
 
@@ -181,6 +183,7 @@ fn v2_envelope_echoes_id_on_success_and_error() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
 fn v2_generic_dist_and_kernel_match_direct_evaluation() {
     let (mut server, mut client) = start();
     let x = [0.0, 1.0, 2.5, 3.0, 2.0, 1.0];
@@ -313,6 +316,7 @@ fn v2_generic_dist_and_kernel_match_direct_evaluation() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
 fn named_register_index_flags_measure_family_drift() {
     let (mut server, mut client) = start();
     let reg = |measure: &str| {
@@ -367,6 +371,7 @@ fn want_banded(x: &[f64], y: &[f64]) -> u64 {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
 fn error_codes_are_stable_per_malformed_class() {
     let (mut server, mut client) = start();
 
@@ -463,4 +468,64 @@ fn error_codes_are_stable_per_malformed_class() {
     let r = call(&mut client, r#"{"op":"ping"}"#);
     assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
     server.stop();
+}
+
+/// Transport-free malformed-envelope matrix through
+/// `server::dispatch_line` — the exact entry the `fuzz_wire` target
+/// drives.  No sockets, so this is part of the Miri CI subset, and the
+/// last rows pin the two fuzz findings as deterministic regressions:
+/// unbounded JSON parse recursion (now capped at
+/// `MAX_PARSE_DEPTH`) and unbounded v1 `register_grid`
+/// materialization (now routed through `GridSpec::validate`).
+#[test]
+fn dispatch_line_matrix_returns_stable_codes_without_sockets() {
+    use spdtw::coordinator::server::dispatch_line;
+    let coord = Coordinator::start(CoordinatorConfig::default(), None).unwrap();
+
+    let deep_array = format!("{}1{}", "[".repeat(4096), "]".repeat(4096));
+    let deep_request = format!(r#"{{"op":"ping","junk":{deep_array}}}"#);
+    let huge_grid = r#"{"op":"register_grid","t":1000000000}"#.to_string();
+
+    let cases: Vec<(String, &str)> = vec![
+        // truncated / not-JSON envelopes
+        ("".into(), "bad_json"),
+        ("{".into(), "bad_json"),
+        (r#"{"op":"ping"#.into(), "bad_json"),
+        (r#"{"op":"ping",}"#.into(), "bad_json"),
+        ("not json at all".into(), "bad_json"),
+        // wrong-type fields
+        (r#"{"op":42}"#.into(), "bad_request"),
+        (r#"{"op":"register_grid","t":"wide"}"#.into(), "bad_request"),
+        (r#"{"op":"register_grid","t":-4}"#.into(), "bad_request"),
+        (
+            r#"{"op":"register_index","band":1,"series":"rows"}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"proto":2,"op":"search","index":0,"k":"one","x":[0]}"#.into(),
+            "bad_request",
+        ),
+        (r#"{"proto":[2],"op":"ping"}"#.into(), "unsupported_proto"),
+        // fuzz finding #1: hostile nesting must be a clean bad_json,
+        // not a parser stack overflow
+        (deep_request, "bad_json"),
+        // fuzz finding #2: an oversized grid request must be refused by
+        // `GridSpec::validate`, not materialize O(t²) cells
+        (huge_grid, "bad_request"),
+    ];
+    for (line, want_code) in cases {
+        let r = dispatch_line(&line, &coord);
+        assert_eq!(
+            r.get("ok"),
+            Some(&Json::Bool(false)),
+            "{:.60}",
+            line.as_str()
+        );
+        assert_eq!(r.req_str("code").unwrap(), want_code, "{:.60}", line.as_str());
+        assert!(r.get("error").is_some());
+    }
+
+    // sanity: the same entry point still serves a healthy request
+    let ok = dispatch_line(r#"{"op":"ping"}"#, &coord);
+    assert_eq!(ok.get("pong"), Some(&Json::Bool(true)));
 }

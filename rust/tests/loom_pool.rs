@@ -1,0 +1,155 @@
+//! Loom model-checking of the concurrent-epoch compute pool.
+//!
+//! This suite compiles to **nothing** in normal builds: it requires
+//! `RUSTFLAGS="--cfg loom"` plus a dev-dependency on `loom` (added
+//! ephemerally by the CI `loom-model` job — see
+//! `.github/workflows/ci.yml` — so the shipped manifest stays
+//! dependency-free; locally: `cargo add --dev loom && RUSTFLAGS="--cfg
+//! loom" cargo test --release --test loom_pool`).
+//!
+//! Under `--cfg loom`, `pool::sync` swaps every primitive the scheduler
+//! synchronizes through (mutex, both condvars, the claim counter and
+//! panic flag atomics, the output-slot cells) for loom's model-checked
+//! versions, and each `loom::model` block below *enumerates* the
+//! thread interleavings of one scheduler scenario instead of sampling
+//! them like `tests/stress_pool.rs`.  Loom fails a model if any
+//! explored schedule deadlocks, leaks a thread, violates an assertion,
+//! or touches an `UnsafeCell` from two threads without a
+//! happens-before edge — the last being precisely the "disjoint slot
+//! writes are race-free" claim the `// SAFETY:` comments in
+//! `pool/mod.rs` make in prose.
+//!
+//! Scenarios (mirroring the ISSUE-7 checklist):
+//! 1. epoch claim + latch completion (worker joins, submitter waits)
+//! 2. two-epoch overlap from distinct submitters with least-served
+//!    claiming by a shared worker
+//! 3. submitter self-participation completing an epoch with no worker
+//! 4. panic isolation: a panicked epoch aborts alone, pool survives
+//! 5. disjoint-slot write safety under racing chunk claims
+//! 6. shutdown wakes parked workers and joins every thread
+//!
+//! Every model ends in `ComputePool::shutdown()` — loom requires all
+//! model threads to terminate, so thread-leak freedom is itself part of
+//! each check.  `preemption_bound` caps exploration (sound for all bugs
+//! requiring ≤ N preemptions; exhaustive small-scope checking in the
+//! sense loom's docs describe).
+
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use loom::sync::Arc;
+use spdtw::measures::workspace::DpWorkspace;
+use spdtw::pool::ComputePool;
+
+/// Bounded exploration: every schedule reachable with at most this many
+/// forced preemptions is checked.  2–3 is the loom-recommended range;
+/// raising it explodes state for the 3-thread models below.
+const PREEMPTION_BOUND: usize = 3;
+
+fn model(f: impl Fn() + Send + Sync + 'static) {
+    let mut builder = loom::model::Builder::new();
+    builder.preemption_bound = Some(PREEMPTION_BOUND);
+    builder.check(f);
+}
+
+/// 1. The basic claim/latch protocol: one worker, one epoch with room
+/// for two participants.  Every interleaving of (worker claims item |
+/// submitter claims item | worker still parked) must produce the exact
+/// in-order results and complete the latch.
+#[test]
+fn epoch_claim_and_latch_completion() {
+    model(|| {
+        let pool = ComputePool::start(1);
+        let out = pool.run(2, 2, 1, &|i, _ws: &mut DpWorkspace| i * 10 + 1);
+        assert_eq!(out, vec![1, 11]);
+        pool.shutdown();
+    });
+}
+
+/// 2. Two epochs live at once from distinct submitter threads, one
+/// shared worker: exercises `pick`'s least-served selection (the worker
+/// chooses between two claimable epochs, ties broken to the older id)
+/// and proves the per-epoch latches never cross — each submitter gets
+/// exactly its own epoch's results, under every schedule.
+#[test]
+fn two_epoch_overlap_least_served_claiming() {
+    model(|| {
+        let pool = ComputePool::start(1);
+        let p2 = Arc::clone(&pool);
+        let other = loom::thread::spawn(move || {
+            p2.run(1, 2, 1, &|i, _ws: &mut DpWorkspace| i + 100)
+        });
+        let mine = pool.run(1, 2, 1, &|i, _ws: &mut DpWorkspace| i + 200);
+        assert_eq!(mine, vec![200]);
+        assert_eq!(other.join().unwrap(), vec![100]);
+        pool.shutdown();
+    });
+}
+
+/// 3. Submitter self-participation: with `threads = 1` the submitter is
+/// the epoch's only permitted participant (`running == target` from
+/// registration), so the epoch must complete even if the pool worker
+/// never claims it — progress may not depend on worker availability.
+#[test]
+fn submitter_completes_epoch_without_workers() {
+    model(|| {
+        let pool = ComputePool::start(1);
+        let out = pool.run(2, 1, 2, &|i, _ws: &mut DpWorkspace| i + 7);
+        assert_eq!(out, vec![7, 8]);
+        pool.shutdown();
+    });
+}
+
+/// 4. Panic isolation: an epoch whose item panics aborts (submitter
+/// sees "pool worker panicked" whether the worker or the submitter ran
+/// the poisoned item — loom explores both), and the *same* pool then
+/// serves a healthy epoch — no schedule may leave the scheduler wedged
+/// or a latch incomplete.
+#[test]
+fn panic_isolation_pool_survives() {
+    model(|| {
+        let pool = ComputePool::start(1);
+        let poisoned = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, 2, 1, &|i, _ws: &mut DpWorkspace| {
+                if i == 0 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(poisoned.is_err());
+        let ok = pool.run(1, 2, 1, &|i, _ws: &mut DpWorkspace| i + 5);
+        assert_eq!(ok, vec![5]);
+        pool.shutdown();
+    });
+}
+
+/// 5. Disjoint-slot write safety: worker and submitter race the atomic
+/// chunk counter over three items (chunk = 2, so one participant takes
+/// a two-item run).  Loom's instrumented `UnsafeCell` slots fail the
+/// model if any schedule lets two threads touch one slot without a
+/// happens-before edge, or lets the submitter read a slot that wasn't
+/// published by the completion latch — the machine-checked version of
+/// the `EpochSlots` SAFETY argument.
+#[test]
+fn disjoint_slot_writes_are_race_free() {
+    model(|| {
+        let pool = ComputePool::start(1);
+        let out = pool.run(3, 2, 2, &|i, _ws: &mut DpWorkspace| i * 3);
+        assert_eq!(out, vec![0, 3, 6]);
+        pool.shutdown();
+    });
+}
+
+/// 6. Shutdown on an idle pool: both workers are parked on `work_cv`
+/// (or still starting up — loom explores both); `shutdown` must wake
+/// every schedule's workers exactly once and join them — a lost wakeup
+/// here is a hung process in the `std` build.
+#[test]
+fn shutdown_wakes_parked_workers() {
+    model(|| {
+        let pool = ComputePool::start(2);
+        pool.shutdown();
+    });
+}

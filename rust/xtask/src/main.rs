@@ -1,0 +1,995 @@
+//! Repo-invariant lints: `cargo xtask lint`.
+//!
+//! Four rules, documented in `EXPERIMENTS.md` §Correctness toolchain and
+//! run as a blocking CI job:
+//!
+//! 1. **partial-cmp-unwrap** — no `.partial_cmp(..)` followed by
+//!    `.unwrap()` anywhere (including across line breaks): a NaN turns
+//!    the ordering into a panic at the call site.  Use `f64::total_cmp`
+//!    or an explicit NaN policy (`unwrap_or(..)` is fine).
+//! 2. **hot-alloc** — no allocating `Vec::new()` / `vec![..]` /
+//!    `.to_vec()` inside the DP kernel hot paths: `rust/src/measures/`
+//!    (minus `workspace.rs`, which *is* the scratch allocator, and
+//!    `spec.rs`, which is config/serialization) plus
+//!    `rust/src/search/early.rs`.  Kernels must draw scratch from
+//!    `DpWorkspace`.  Documented reference implementations opt out with
+//!    `// lint:allow(hot-alloc): <why>` on the same line or up to two
+//!    lines above (one marker line covers a two-line allocation pair).
+//!    `#[cfg(test)]` mod regions are exempt.
+//! 3. **safety-comment** — every `unsafe` token (block or impl) must
+//!    have a `// SAFETY:` comment on the same line or within the six
+//!    raw lines above it.  Pairs with `#![deny(unsafe_op_in_unsafe_fn)]`
+//!    in `lib.rs`: each unsafe block carries a local proof obligation.
+//! 4. **error-coverage** — every `Error` variant must be matched as
+//!    `Error::<Variant>` inside `Error::code()`, and every wire-code
+//!    string emitted there (plus the wire-only `unsupported_proto`)
+//!    must appear in `rust/src/coordinator/server.rs` — i.e. in its
+//!    protocol error table.
+//!
+//! The scanner is plain offset/line analysis over comment- and
+//! string-sanitized source — no rustc plumbing, no external crates —
+//! which is exactly enough for these shapes and keeps the lint runnable
+//! offline.  The sanitizer blanks comments, string/char literals, and
+//! raw strings with spaces (byte offsets and newlines preserved), so
+//! commented-out or quoted code can never trip a rule, and brace/paren
+//! counting can't be skewed by literals.
+//!
+//! `cargo xtask lint --self-test` (and `cargo test -p xtask`) runs the
+//! rules against embedded fixtures with seeded violations, so a
+//! regressed rule fails loudly instead of silently passing the tree.
+//!
+//! Known limits, accepted for a line-level lint: the SAFETY window can
+//! be satisfied by a nearby unrelated comment, and `#[cfg(test)]`
+//! detection expects the attribute on its own line (the repo style).
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    let refs: Vec<&str> = args.iter().map(String::as_str).collect();
+    match refs.as_slice() {
+        ["lint"] => run_lint(),
+        ["lint", "--self-test"] => run_self_test(),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--self-test]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn violation(file: &str, line: usize, rule: &'static str, msg: String) -> Violation {
+    Violation {
+        file: file.to_string(),
+        line,
+        rule,
+        msg,
+    }
+}
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <repo>/rust/xtask.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask manifest has no grandparent")
+        .to_path_buf()
+}
+
+/// Every `.rs` file under `rust/src` and `rust/tests`, sorted for
+/// deterministic reports.  `rust/xtask` (fixture strings) and
+/// `rust/fuzz` (its own workspace) are deliberately out of scope.
+fn rust_sources(root: &Path) -> Vec<PathBuf> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.join("rust/src"), root.join("rust/tests")];
+    while let Some(dir) = stack.pop() {
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(err) => panic!("read_dir {}: {err}", dir.display()),
+        };
+        for entry in entries {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    files
+}
+
+fn rel_of(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn hot_alloc_applies(rel: &str) -> bool {
+    if rel == "rust/src/search/early.rs" {
+        return true;
+    }
+    match rel.strip_prefix("rust/src/measures/") {
+        Some(name) => name != "workspace.rs" && name != "spec.rs",
+        None => false,
+    }
+}
+
+fn run_lint() -> ExitCode {
+    let root = repo_root();
+    let files = rust_sources(&root);
+    let mut violations = Vec::new();
+    for path in &files {
+        let raw = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(err) => panic!("read {}: {err}", path.display()),
+        };
+        let san = sanitize(&raw);
+        let rel = rel_of(&root, path);
+        violations.extend(check_partial_cmp(&rel, &san));
+        violations.extend(check_safety(&rel, &raw, &san));
+        if hot_alloc_applies(&rel) {
+            violations.extend(check_hot_alloc(&rel, &raw, &san));
+        }
+    }
+    violations.extend(check_error_coverage(&root));
+
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    if violations.is_empty() {
+        eprintln!("xtask lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sanitizer
+// ---------------------------------------------------------------------------
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Blank comments, string/char literals (delimiters included), and raw
+/// strings with spaces.  Newlines and byte offsets are preserved, so
+/// line numbers computed on the sanitized text match the source.
+fn sanitize(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                while i < n && b[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let mut depth = 1usize;
+                out[i] = b' ';
+                out[i + 1] = b' ';
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else {
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'r' | b'b' if is_raw_string_start(b, i) => i = blank_raw_string(b, &mut out, i),
+            b'"' => i = blank_string(b, &mut out, i),
+            b'\'' => i = blank_char_or_lifetime(b, &mut out, i),
+            _ => i += 1,
+        }
+    }
+    String::from_utf8(out).expect("sanitizer blanked through a multi-byte char")
+}
+
+/// `r"`, `r#"`, `br"`, ... with a non-identifier byte before (so plain
+/// identifiers ending or starting in `r`/`b` don't trigger).
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    if i > 0 && is_ident(b[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn blank_raw_string(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let n = b.len();
+    let mut i = start;
+    if b[i] == b'b' {
+        out[i] = b' ';
+        i += 1;
+    }
+    out[i] = b' '; // the `r`
+    i += 1;
+    let mut hashes = 0;
+    while b[i] == b'#' {
+        out[i] = b' ';
+        i += 1;
+        hashes += 1;
+    }
+    out[i] = b' '; // opening quote
+    i += 1;
+    while i < n {
+        if b[i] == b'"' && b[i + 1..].iter().take(hashes).all(|&c| c == b'#') && i + hashes < n {
+            out[i..i + 1 + hashes].fill(b' ');
+            return i + 1 + hashes;
+        }
+        if b[i] != b'\n' {
+            out[i] = b' ';
+        }
+        i += 1;
+    }
+    i
+}
+
+fn blank_string(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let n = b.len();
+    out[start] = b' ';
+    let mut i = start + 1;
+    while i < n {
+        match b[i] {
+            b'\\' if i + 1 < n => {
+                out[i] = b' ';
+                if b[i + 1] != b'\n' {
+                    out[i + 1] = b' ';
+                }
+                i += 2;
+            }
+            b'"' => {
+                out[i] = b' ';
+                return i + 1;
+            }
+            b'\n' => i += 1,
+            _ => {
+                out[i] = b' ';
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Distinguish `'x'` / `'\n'` char literals (blanked) from `'a`
+/// lifetimes (kept).
+fn blank_char_or_lifetime(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let n = b.len();
+    if start + 2 < n && b[start + 1] == b'\\' {
+        // `'\X'` (incl. `'\\'`, `'\''`, `'\u{..}'`): the byte after the
+        // backslash is always part of the escape, then scan for the
+        // closing quote.
+        out[start] = b' ';
+        out[start + 1] = b' ';
+        out[start + 2] = b' ';
+        let mut i = start + 3;
+        while i < n {
+            if b[i] == b'\'' {
+                out[i] = b' ';
+                return i + 1;
+            }
+            if b[i] != b'\n' {
+                out[i] = b' ';
+            }
+            i += 1;
+        }
+        return i;
+    }
+    if start + 2 < n && b[start + 2] == b'\'' {
+        out[start] = b' ';
+        out[start + 1] = b' ';
+        out[start + 2] = b' ';
+        return start + 3;
+    }
+    start + 1 // lifetime: leave as-is
+}
+
+// ---------------------------------------------------------------------------
+// Offset helpers
+// ---------------------------------------------------------------------------
+
+fn line_starts(src: &str) -> Vec<usize> {
+    let mut starts = vec![0];
+    for (i, c) in src.bytes().enumerate() {
+        if c == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn line_of(starts: &[usize], offset: usize) -> usize {
+    match starts.binary_search(&offset) {
+        Ok(k) => k + 1,
+        Err(k) => k,
+    }
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Substring match where the byte before the match is not an
+/// identifier byte (`LocVec::new` must not match `Vec::new`).
+fn contains_bounded(line: &str, pat: &str) -> bool {
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(pat).map(|p| p + from) {
+        if p == 0 || !is_ident(b[p - 1]) {
+            return true;
+        }
+        from = p + 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: partial-cmp-unwrap
+// ---------------------------------------------------------------------------
+
+fn check_partial_cmp(rel: &str, san: &str) -> Vec<Violation> {
+    let b = san.as_bytes();
+    let starts = line_starts(san);
+    let needle = b".partial_cmp(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_from(b, needle, from) {
+        from = p + needle.len();
+        // Balance parens from the opening `(` (strings are blanked, so
+        // only code parens count), then look across any whitespace for
+        // a `.unwrap(` continuation.
+        let mut i = p + needle.len() - 1;
+        let mut depth = 0i64;
+        while i < b.len() {
+            match b[i] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b'.' {
+            i += 1;
+            while i < b.len() && b[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            if b[i..].starts_with(b"unwrap") {
+                let mut j = i + "unwrap".len();
+                while j < b.len() && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'(' {
+                    out.push(violation(
+                        rel,
+                        line_of(&starts, p),
+                        "partial-cmp-unwrap",
+                        "`.partial_cmp(..).unwrap()` panics on NaN; \
+                         use `total_cmp` or an explicit NaN policy"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: hot-alloc
+// ---------------------------------------------------------------------------
+
+const HOT_ALLOC_MARKER: &str = "lint:allow(hot-alloc)";
+
+fn alloc_hit(san_line: &str) -> Option<&'static str> {
+    if contains_bounded(san_line, "Vec::new(") {
+        return Some("Vec::new()");
+    }
+    if contains_bounded(san_line, "vec!") {
+        return Some("vec![..]");
+    }
+    if san_line.contains(".to_vec(") {
+        return Some(".to_vec()");
+    }
+    None
+}
+
+/// Mark the lines belonging to `#[cfg(test)]` mod regions, by brace
+/// balance over the sanitized lines (string/comment braces are gone).
+fn test_line_mask(raw_lines: &[&str], san_lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; san_lines.len()];
+    let mut i = 0;
+    while i < raw_lines.len() {
+        if raw_lines[i].trim() != "#[cfg(test)]" {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < san_lines.len() {
+            mask[j] = true;
+            for c in san_lines[j].bytes() {
+                match c {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+fn check_hot_alloc(rel: &str, raw: &str, san: &str) -> Vec<Violation> {
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let san_lines: Vec<&str> = san.lines().collect();
+    let in_test = test_line_mask(&raw_lines, &san_lines);
+    let mut out = Vec::new();
+    for (idx, san_line) in san_lines.iter().enumerate() {
+        if in_test[idx] {
+            continue;
+        }
+        let Some(what) = alloc_hit(san_line) else {
+            continue;
+        };
+        let lo = idx.saturating_sub(2);
+        if raw_lines[lo..=idx]
+            .iter()
+            .any(|l| l.contains(HOT_ALLOC_MARKER))
+        {
+            continue;
+        }
+        out.push(violation(
+            rel,
+            idx + 1,
+            "hot-alloc",
+            format!(
+                "{what} allocates in a DP hot path; draw scratch from \
+                 `DpWorkspace` or annotate `// lint:allow(hot-alloc): <why>`"
+            ),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: safety-comment
+// ---------------------------------------------------------------------------
+
+/// `unsafe` as a whole word on a sanitized line (so `unsafe_op_in_unsafe_fn`
+/// and comment/string mentions don't count).
+fn has_unsafe_token(san_line: &str) -> bool {
+    let b = san_line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = san_line[from..].find("unsafe").map(|p| p + from) {
+        let pre = p == 0 || !is_ident(b[p - 1]);
+        let post = p + 6 >= b.len() || !is_ident(b[p + 6]);
+        if pre && post {
+            return true;
+        }
+        from = p + 6;
+    }
+    false
+}
+
+fn check_safety(rel: &str, raw: &str, san: &str) -> Vec<Violation> {
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let san_lines: Vec<&str> = san.lines().collect();
+    let mut out = Vec::new();
+    for (idx, san_line) in san_lines.iter().enumerate() {
+        if !has_unsafe_token(san_line) {
+            continue;
+        }
+        let lo = idx.saturating_sub(6);
+        if raw_lines[lo..=idx].iter().any(|l| l.contains("SAFETY:")) {
+            continue;
+        }
+        out.push(violation(
+            rel,
+            idx + 1,
+            "safety-comment",
+            "`unsafe` without a `// SAFETY:` comment on the same line \
+             or within the six lines above"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: error-coverage
+// ---------------------------------------------------------------------------
+
+fn check_error_coverage(root: &Path) -> Vec<Violation> {
+    let err_path = root.join("rust/src/error.rs");
+    let srv_path = root.join("rust/src/coordinator/server.rs");
+    let err_raw = fs::read_to_string(&err_path).expect("read error.rs");
+    let srv_raw = fs::read_to_string(&srv_path).expect("read server.rs");
+    error_coverage_core(&err_raw, &srv_raw)
+}
+
+fn error_coverage_core(err_raw: &str, srv_raw: &str) -> Vec<Violation> {
+    const ERR_FILE: &str = "rust/src/error.rs";
+    const SRV_FILE: &str = "rust/src/coordinator/server.rs";
+    let err_san = sanitize(err_raw);
+    let mut out = Vec::new();
+
+    let variants = enum_variants(&err_san, "Error");
+    if variants.is_empty() {
+        out.push(violation(
+            ERR_FILE,
+            1,
+            "error-coverage",
+            "could not locate `enum Error` variants".to_string(),
+        ));
+        return out;
+    }
+    let Some((body_start, body_end)) = fn_body_span(&err_san, "fn code(") else {
+        out.push(violation(
+            ERR_FILE,
+            1,
+            "error-coverage",
+            "could not locate `fn code(` body".to_string(),
+        ));
+        return out;
+    };
+    let code_san = &err_san[body_start..body_end];
+    let code_raw = &err_raw[body_start..body_end];
+    let code_line = line_of(&line_starts(&err_san), body_start);
+
+    for (name, line) in &variants {
+        if !code_san.contains(&format!("Error::{name}")) {
+            out.push(violation(
+                ERR_FILE,
+                *line,
+                "error-coverage",
+                format!("variant `{name}` is not mapped in `Error::code()`"),
+            ));
+        }
+    }
+
+    // Every string returned by code() — the wire codes, plus the
+    // incidental `"op"` guard literal, which matches trivially — and the
+    // wire-only `unsupported_proto` must appear in server.rs (its
+    // protocol error table documents each).
+    let mut codes = string_literals(code_raw);
+    codes.push("unsupported_proto".to_string());
+    codes.sort();
+    codes.dedup();
+    for code in &codes {
+        if !srv_raw.contains(code.as_str()) {
+            out.push(violation(
+                SRV_FILE,
+                code_line,
+                "error-coverage",
+                format!("wire code `{code}` is not documented in server.rs"),
+            ));
+        }
+    }
+    out
+}
+
+/// Variant names (with line numbers) of `enum <name>`: lines at brace
+/// depth 1 inside the enum body whose first character is uppercase.
+fn enum_variants(san: &str, name: &str) -> Vec<(String, usize)> {
+    let Some(decl) = san.find(&format!("enum {name}")) else {
+        return Vec::new();
+    };
+    let Some(open) = san[decl..].find('{').map(|p| p + decl) else {
+        return Vec::new();
+    };
+    let starts = line_starts(san);
+    let mut variants = Vec::new();
+    let mut depth = 1i64;
+    let b = san.as_bytes();
+    let mut i = open + 1;
+    let mut at_line_head = false;
+    while i < b.len() && depth > 0 {
+        match b[i] {
+            b'{' | b'(' | b'[' => depth += 1,
+            b'}' | b')' | b']' => depth -= 1,
+            b'\n' => at_line_head = true,
+            c if c.is_ascii_whitespace() => {}
+            c => {
+                if at_line_head && depth == 1 && c.is_ascii_uppercase() {
+                    let mut j = i;
+                    while j < b.len() && is_ident(b[j]) {
+                        j += 1;
+                    }
+                    variants.push((san[i..j].to_string(), line_of(&starts, i)));
+                }
+                at_line_head = false;
+            }
+        }
+        i += 1;
+    }
+    variants
+}
+
+/// Byte span of the body of the first function whose header matches
+/// `header` (e.g. `"fn code("`), exclusive of the outer braces.
+fn fn_body_span(san: &str, header: &str) -> Option<(usize, usize)> {
+    let decl = san.find(header)?;
+    let open = san[decl..].find('{').map(|p| p + decl)?;
+    let b = san.as_bytes();
+    let mut depth = 0i64;
+    for (off, &c) in b[open..].iter().enumerate() {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open + 1, open + off));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// String literals in `src`, skipping `//` comments.  (Used on raw
+/// text, where quotes still exist.)
+fn string_literals(src: &str) -> Vec<String> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'"' => {
+                let start = i + 1;
+                i += 1;
+                while i < n && b[i] != b'"' {
+                    if b[i] == b'\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                out.push(src[start..i.min(n)].to_string());
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Self-test fixtures: seeded violations that must keep firing.
+// ---------------------------------------------------------------------------
+
+const FIX_PARTIAL_CMP: &str = r#"
+fn bad_single(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap()
+}
+fn bad_multiline(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b)
+        .unwrap()
+}
+fn ok_total(a: f64, b: f64) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}
+fn ok_policy(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)
+}
+impl PartialOrd for Wrapper {
+    fn partial_cmp(&self, other: &Wrapper) -> Option<std::cmp::Ordering> {
+        None
+    }
+}
+// commented out, must not fire: a.partial_cmp(&b).unwrap()
+const S: &str = "a.partial_cmp(&b).unwrap()";
+"#;
+
+const FIX_HOT_ALLOC: &str = r#"
+fn kernel(n: usize) -> Vec<f64> {
+    let mut buf = Vec::new();
+    let tmp = vec![0.0; n];
+    let copy = tmp.to_vec();
+    // lint:allow(hot-alloc): seeded fixture escape hatch.
+    let first = vec![0.0; n];
+    let second = Vec::new();
+    let quoted = "vec![in a string]";
+    let custom = LocVec::new();
+    buf
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_test_region_is_exempt() {
+        let v = vec![1.0, 2.0];
+    }
+}
+"#;
+
+const FIX_SAFETY: &str = r#"
+struct P(*const u8);
+unsafe impl Send for P {}
+// SAFETY: the pointer is never dereferenced on other threads.
+unsafe impl Sync for P {}
+fn covered(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+
+fn spacer_one() {}
+fn spacer_two() {}
+fn spacer_three() {}
+fn spacer_four() {}
+
+fn uncovered(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+fn not_the_keyword() {
+    let unsafe_adjacent = 1;
+    let _ = unsafe_adjacent;
+}
+"#;
+
+const FIX_ERROR_OK: &str = r#"
+pub enum Error {
+    Io(std::io::Error),
+    Parse { msg: String },
+}
+impl Error {
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "internal",
+            Error::Parse { .. } => "bad_json",
+        }
+    }
+}
+"#;
+
+const FIX_ERROR_BAD: &str = r#"
+pub enum Error {
+    Io(std::io::Error),
+    Parse { msg: String },
+    Orphan,
+}
+impl Error {
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "internal",
+            Error::Parse { .. } => "undocumented_code",
+            _ => "internal",
+        }
+    }
+}
+"#;
+
+const FIX_SERVER: &str = r#"
+//! | code | meaning |
+//! | `internal` | internal failure |
+//! | `bad_json` | malformed envelope |
+//! | `unsupported_proto` | unknown proto version |
+"#;
+
+struct SelfTestCase {
+    name: &'static str,
+    expect: usize,
+    found: usize,
+}
+
+fn self_test_cases() -> Vec<SelfTestCase> {
+    let partial = check_partial_cmp("fixture.rs", &sanitize(FIX_PARTIAL_CMP));
+    let hot = check_hot_alloc("fixture.rs", FIX_HOT_ALLOC, &sanitize(FIX_HOT_ALLOC));
+    let safety = check_safety("fixture.rs", FIX_SAFETY, &sanitize(FIX_SAFETY));
+    let err_ok = error_coverage_core(FIX_ERROR_OK, FIX_SERVER);
+    let err_bad = error_coverage_core(FIX_ERROR_BAD, FIX_SERVER);
+    vec![
+        SelfTestCase {
+            name: "partial-cmp-unwrap fires on single- and multi-line",
+            expect: 2,
+            found: partial.len(),
+        },
+        SelfTestCase {
+            name: "hot-alloc fires on Vec::new/vec!/.to_vec, honors allow",
+            expect: 3,
+            found: hot.len(),
+        },
+        SelfTestCase {
+            name: "safety-comment fires on uncovered unsafe only",
+            expect: 2,
+            found: safety.len(),
+        },
+        SelfTestCase {
+            name: "error-coverage passes a fully mapped enum",
+            expect: 0,
+            found: err_ok.len(),
+        },
+        SelfTestCase {
+            name: "error-coverage fires on orphan variant + undocumented code",
+            expect: 2,
+            found: err_bad.len(),
+        },
+    ]
+}
+
+fn run_self_test() -> ExitCode {
+    let mut failed = 0;
+    for case in self_test_cases() {
+        let ok = case.expect == case.found;
+        println!(
+            "{} {} (expected {}, found {})",
+            if ok { "PASS" } else { "FAIL" },
+            case.name,
+            case.expect,
+            case.found
+        );
+        if !ok {
+            failed += 1;
+        }
+    }
+    if failed == 0 {
+        eprintln!("xtask lint --self-test: all rules fire");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint --self-test: {failed} rule(s) regressed");
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_fire_expected_counts() {
+        for case in self_test_cases() {
+            assert_eq!(case.expect, case.found, "{}", case.name);
+        }
+    }
+
+    #[test]
+    fn partial_cmp_violations_carry_line_numbers() {
+        let v = check_partial_cmp("f.rs", &sanitize(FIX_PARTIAL_CMP));
+        let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![3, 6]);
+    }
+
+    #[test]
+    fn hot_alloc_skips_strings_and_bounded_idents() {
+        let v = check_hot_alloc("f.rs", FIX_HOT_ALLOC, &sanitize(FIX_HOT_ALLOC));
+        let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+        // Vec::new, vec!, .to_vec — not the allowed pair, the quoted
+        // string, or `LocVec::new`.
+        assert_eq!(lines, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn safety_window_is_same_line_or_six_above() {
+        let v = check_safety("f.rs", FIX_SAFETY, &sanitize(FIX_SAFETY));
+        let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![3, 17]);
+    }
+
+    #[test]
+    fn sanitizer_preserves_offsets() {
+        let src = "let a = \"x\"; // trailing\nlet b = 'y';\n";
+        let san = sanitize(src);
+        assert_eq!(src.len(), san.len());
+        assert_eq!(
+            src.bytes().filter(|&c| c == b'\n').count(),
+            san.bytes().filter(|&c| c == b'\n').count()
+        );
+        assert!(!san.contains("trailing"));
+        assert!(!san.contains('\''));
+    }
+
+    #[test]
+    fn sanitizer_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"vec![1]\"#; }";
+        let san = sanitize(src);
+        assert!(san.contains("<'a>"), "lifetimes survive: {san}");
+        assert!(!san.contains("vec!"), "raw string blanked: {san}");
+    }
+
+    #[test]
+    fn enum_variant_extraction_sees_all_shapes() {
+        let san = sanitize(FIX_ERROR_BAD);
+        let names: Vec<String> = enum_variants(&san, "Error")
+            .into_iter()
+            .map(|(n, _)| n)
+            .collect();
+        assert_eq!(names, vec!["Io", "Parse", "Orphan"]);
+    }
+
+    #[test]
+    fn lint_is_clean_on_the_repo_tree() {
+        // The blocking CI invariant, runnable locally too: the checked-in
+        // tree has zero violations.
+        let root = repo_root();
+        let mut violations = Vec::new();
+        for path in rust_sources(&root) {
+            let raw = fs::read_to_string(&path).expect("read source");
+            let san = sanitize(&raw);
+            let rel = rel_of(&root, &path);
+            violations.extend(check_partial_cmp(&rel, &san));
+            violations.extend(check_safety(&rel, &raw, &san));
+            if hot_alloc_applies(&rel) {
+                violations.extend(check_hot_alloc(&rel, &raw, &san));
+            }
+        }
+        violations.extend(check_error_coverage(&root));
+        assert!(
+            violations.is_empty(),
+            "tree has lint violations: {violations:#?}"
+        );
+    }
+}
