@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Multi-process chaos smoke test (CI).
+
+Expects a 2-shard fleet where shard 1 acts out ci/chaos_plan.json via
+`spdtw shard-serve --fault-plan`, plus a front started with
+`--breaker-threshold 2 --probe-interval-ms 200`:
+
+    shard 0: 127.0.0.1:7981      shard 1 (faulted): 127.0.0.1:7982
+    front:   127.0.0.1:7980
+
+The plan is a deterministic per-event schedule on shard 1:
+
+    reply  2        delayed 3 s    -> a 500 ms deadline_ms loses, typed
+    reply  3        torn mid-line  -> first link failure
+    connects 1..12  refused        -> retry fails, breaker opens; the
+                                      200 ms probe thread burns the rest
+                                      of the window, then recovers
+
+which the script walks through over the wire, asserting all three typed
+degradation codes (`deadline_exceeded`, `unavailable`, flagged
+`partial`), that no failed reply ever smuggles a neighbor list, and that
+the breaker closes again on its own once the shard behaves.
+"""
+
+import json
+import socket
+import sys
+import time
+
+FRONT = ("127.0.0.1", 7980)
+SHARD0 = ("127.0.0.1", 7981)
+SHARD1 = ("127.0.0.1", 7982)
+
+
+def call(addr, req, attempts=40):
+    """One request/reply line against a spdtw server, retrying connect
+    while the server is still booting."""
+    last = None
+    for _ in range(attempts):
+        try:
+            with socket.create_connection(addr, timeout=20) as s:
+                f = s.makefile("rw", encoding="utf-8")
+                f.write(json.dumps(req) + "\n")
+                f.flush()
+                return json.loads(f.readline())
+        except OSError as e:
+            last = e
+            time.sleep(0.25)
+    raise SystemExit(f"cannot reach {addr}: {last}")
+
+
+def expect(cond, what, reply):
+    if not cond:
+        raise SystemExit(f"FAIL: {what}: {json.dumps(reply)}")
+
+
+def search(k=2, x=(0, 0, 0), **extra):
+    req = {"proto": 2, "op": "search", "index": "chaos", "k": k, "x": list(x)}
+    req.update(extra)
+    return call(FRONT, req)
+
+
+def main():
+    # 1. topology up, every breaker closed
+    info = call(FRONT, {"op": "info"})
+    expect(info.get("ok") is True, "front info", info)
+    expect(info.get("role") == "front", "front role", info)
+    expect(info.get("shards_total") == 2, "front fleet size", info)
+    shards = info.get("shards", [])
+    expect(all(s.get("up") for s in shards), "links up", info)
+    expect(
+        [s.get("breaker") for s in shards] == ["closed", "closed"],
+        "breakers start closed",
+        info,
+    )
+
+    # 2. register: round-robin puts globals 0,2 on shard 0 and 1,3 on
+    # shard 1 (setup replies 0/1 on shard 1 are before every fault
+    # window, so registration is clean)
+    reg = call(
+        FRONT,
+        {
+            "proto": 2,
+            "id": 1,
+            "op": "register_index",
+            "name": "chaos",
+            "band": 1,
+            "series": [[0, 0, 0], [5, 5, 5], [0.1, 0.1, 0.1], [4, 4, 4]],
+            "labels": [0, 1, 0, 1],
+        },
+    )
+    expect(reg.get("ok") is True, "register through front", reg)
+    expect(reg.get("per_shard") == [2, 2], "round-robin split", reg)
+
+    # 3. deadline propagation: shard 1's next reply sleeps 3 s, the
+    # 500 ms budget must lose with the typed code and the budget echoed
+    r = search(deadline_ms=500)
+    expect(r.get("ok") is False, "deadline search fails", r)
+    expect(r.get("code") == "deadline_exceeded", "typed deadline code", r)
+    expect(r.get("budget_ms") == 500, "budget echoed", r)
+    expect("neighbors" not in r, "no neighbor list on a failed reply", r)
+
+    # 4. typed unavailable: the next reply is torn mid-line, the
+    # reconnect retry is refused, and the second consecutive failure
+    # opens the breaker (threshold 2)
+    r = search()
+    expect(r.get("ok") is False, "post-tear search fails", r)
+    expect(r.get("code") == "unavailable", "typed unavailable code", r)
+    expect(r.get("shards_ok") == 1, "1/2 shards answered", r)
+    expect(r.get("shards_total") == 2, "fleet size on error", r)
+    expect("neighbors" not in r, "never an unflagged subset", r)
+
+    # 5. opt-in partial through the open breaker: exact over shard 0,
+    # explicitly flagged (globals 0 and 2 both live on shard 0, so the
+    # expected answer is checkable bit for bit)
+    r = search(allow_partial=True)
+    expect(r.get("ok") is True, "partial search succeeds", r)
+    p = r.get("partial")
+    expect(p is not None, "partial block present", r)
+    expect(p.get("shards_ok") == 1 and p.get("shards_total") == 2, "partial health", r)
+    expect(p.get("missing") == [1], "missing shard named", r)
+    ns = r.get("neighbors", [])
+    expect(len(ns) == 2, "k=2 neighbors over the survivor", r)
+    expect(ns[0].get("dist") == 0 and ns[0].get("idx") == 0, "nearest is global 0", r)
+    expect(ns[1].get("idx") == 2 and ns[1].get("dist") > 0, "runner-up is global 2", r)
+
+    info = call(FRONT, {"op": "info"})
+    expect(
+        info["shards"][1].get("breaker") in ("open", "half_open"),
+        "breaker tripped on shard 1",
+        info,
+    )
+
+    # 6. self-healing: the probe thread burns through the refuse window
+    # (12 events at 200 ms cadence) and closes the breaker on a verified
+    # reconnect — no operator action, no restart
+    recovered = False
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        info = call(FRONT, {"op": "info"})
+        if info["shards"][1].get("breaker") == "closed":
+            recovered = True
+            break
+        time.sleep(0.2)
+    expect(recovered, "probe closes the breaker", info)
+
+    r = search()
+    expect(r.get("ok") is True, "full search after recovery", r)
+    expect(r.get("shards_ok") == 2, "both shards answering", r)
+    expect("partial" not in r, "no partial flag on a full merge", r)
+    ns = r.get("neighbors", [])
+    expect(len(ns) == 2 and ns[0].get("idx") == 0 and ns[1].get("idx") == 2,
+           "exact merged answer after recovery", r)
+
+    # 7. deadline_ms is validated, not clamped
+    r = search(deadline_ms=0)
+    expect(r.get("ok") is False and r.get("code") == "bad_request",
+           "deadline_ms=0 rejected", r)
+
+    # clean shutdown over the wire: front first, then both shards (the
+    # refuse window is exhausted, so shard 1 accepts the connection)
+    for addr in [FRONT, SHARD0, SHARD1]:
+        r = call(addr, {"op": "shutdown"}, attempts=4)
+        expect(r.get("ok") is True, f"shutdown {addr}", r)
+
+    print(
+        "chaos smoke OK: typed deadline_exceeded + unavailable + flagged "
+        "partial, breaker opened and probe-recovered"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -84,6 +84,9 @@ fn main() {
     // section, which bails out of main when no artifacts exist.)
     bench_multi_client(&ds);
 
+    // ---- wire throughput: v2 dist ops over real TCP ------------------------
+    bench_wire_dist(&ds);
+
     // ---- pjrt backend, flush-policy sweep ----------------------------------
     let artifacts = std::path::PathBuf::from("artifacts");
     let Ok(rt) = PjrtRuntime::start(&artifacts) else {
@@ -172,6 +175,68 @@ fn main() {
         snap.search_candidates
     );
     println!("{}", snap.report());
+}
+
+/// Wire-protocol cost of the generic pairwise op: N TCP clients each
+/// drive sequential v2 `dist` envelopes (one JSON line per op, id echo
+/// checked) against one server.  Run twice per client count — bare and
+/// with a generous `deadline_ms` on every request — so the line also
+/// measures what the three deadline checkpoints cost on the happy path
+/// (they should be in the noise).
+fn bench_wire_dist(ds: &spdtw::data::Dataset) {
+    use spdtw::coordinator::server::{Client, Server};
+    use spdtw::util::json::Json;
+
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let server = Server::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let total_ops = 2_048usize;
+    println!("\nwire v2 dist ops ({total_ops} ops total, per-op round trip over TCP):");
+    for deadline_ms in [None, Some(60_000u64)] {
+        for clients in [1usize, 2, 4] {
+            let per_client = total_ops / clients;
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let addr = server.addr.to_string();
+                    let x = ds.test.series[c % ds.test.len()].values.clone();
+                    let y = ds.train.series[(c * 3) % ds.train.len()].values.clone();
+                    std::thread::spawn(move || {
+                        let mut client = Client::connect(&addr).unwrap();
+                        for i in 0..per_client {
+                            let mut fields = vec![
+                                ("proto", Json::num(2.0)),
+                                ("id", Json::num(i as f64)),
+                                ("op", Json::str("dist")),
+                                ("measure", Json::obj(vec![("kind", Json::str("dtw"))])),
+                                ("x", Json::arr(x.iter().copied().map(Json::num))),
+                                ("y", Json::arr(y.iter().copied().map(Json::num))),
+                            ];
+                            if let Some(ms) = deadline_ms {
+                                fields.push(("deadline_ms", Json::num(ms as f64)));
+                            }
+                            let reply = client.call(&Json::obj(fields)).unwrap();
+                            assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+                            assert_eq!(reply.req_usize("id").unwrap(), i);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let tag = if deadline_ms.is_some() {
+                "deadline_ms=60000"
+            } else {
+                "no deadline     "
+            };
+            println!(
+                "  {clients} client(s), {tag}: {:>7.0} ops/s ({:>6.1} µs/op)",
+                (clients * per_client) as f64 / dt,
+                dt * 1e6 / (clients * per_client) as f64
+            );
+        }
+    }
 }
 
 fn bench_multi_client(ds: &spdtw::data::Dataset) {

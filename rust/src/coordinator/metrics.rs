@@ -65,6 +65,10 @@ pub struct Metrics {
     /// High-water mark of simultaneously executing requests — `>= 2`
     /// means two clients' requests actually overlapped.
     pub peak_concurrent_requests: AtomicU64,
+    /// Wire requests answered with the typed `deadline_exceeded` code
+    /// (budget exhausted pre-dispatch, at epoch claim, or mid-wait) —
+    /// counted once per request at the server's dispatch choke point.
+    pub deadlines_exceeded: AtomicU64,
     lat: [AtomicU64; LAT_BUCKETS],
     lat_sum_us: AtomicU64,
 }
@@ -138,6 +142,7 @@ impl Metrics {
             batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
             requests_inflight: self.requests_inflight.load(Ordering::SeqCst),
             peak_concurrent_requests: self.peak_concurrent_requests.load(Ordering::SeqCst),
+            deadlines_exceeded: self.deadlines_exceeded.load(Ordering::Relaxed),
             pool: crate::pool::pool_stats(),
             native_queue_depth: 0,
             mean_latency_us: if completed > 0 {
@@ -202,6 +207,8 @@ pub struct Snapshot {
     pub requests_inflight: u64,
     /// Most requests ever executing simultaneously.
     pub peak_concurrent_requests: u64,
+    /// Requests whose `deadline_ms` budget drained before completion.
+    pub deadlines_exceeded: u64,
     /// Compute-pool scheduler state at snapshot time (live/peak epoch
     /// counts prove multi-client overlap — see `pool::PoolStats`).
     pub pool: crate::pool::PoolStats,
@@ -258,6 +265,7 @@ impl Snapshot {
              {} v2 requests, {} shard searches\n\
              concurrency: {} batch / {} gram requests, {} inflight (peak {}), \
              pool {} epochs live (peak {}), native queue {}\n\
+             deadlines: {} exceeded\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
             self.submitted,
             self.completed,
@@ -292,6 +300,7 @@ impl Snapshot {
             self.pool.active_epochs,
             self.pool.peak_concurrent_epochs,
             self.native_queue_depth,
+            self.deadlines_exceeded,
             self.mean_latency_us,
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),

@@ -60,7 +60,7 @@ use crate::sparse::LocMatrix;
 use batcher::{Batcher, ReadyBatch};
 use metrics::{Metrics, Snapshot};
 use request::{
-    Backend, BatchSearchTicket, BucketKey, GramTicket, JobTicket, PairResult, PjrtJob,
+    Backend, BatchSearchTicket, BucketKey, Deadline, GramTicket, JobTicket, PairResult, PjrtJob,
     SearchOutcome, SearchTicket,
 };
 use router::Router;
@@ -744,6 +744,21 @@ impl Coordinator {
         k: usize,
         cascade: Cascade,
     ) -> Result<SearchTicket> {
+        self.submit_search_deadline(key, query, k, cascade, None)
+    }
+
+    /// [`Self::submit_search`] with an optional deadline, checked again
+    /// at epoch claim time: a request whose budget drained while queued
+    /// behind other epochs resolves to the typed `deadline_exceeded`
+    /// error without ever running the cascade.
+    pub fn submit_search_deadline(
+        &self,
+        key: IndexKey,
+        query: &TimeSeries,
+        k: usize,
+        cascade: Cascade,
+        deadline: Option<Deadline>,
+    ) -> Result<SearchTicket> {
         let index = self.index(key)?;
         if query.len() != index.t {
             return Err(Error::config(format!(
@@ -762,6 +777,16 @@ impl Coordinator {
         let start = Instant::now();
         self.native_pool.submit(move || {
             let _req = metrics.request_begin(); // gauge released on drop, even on unwind
+            // epoch-claim deadline check: queued past the budget means
+            // the cascade never runs (deadlines_exceeded is counted
+            // once per request at the server's dispatch choke point)
+            if let Some(d) = deadline {
+                if d.expired() {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Err(d.error()));
+                    return;
+                }
+            }
             let engine = SearchEngine::new(index, cascade);
             let r = engine.knn_values(&values, k);
             metrics.native_jobs.fetch_add(1, Ordering::Relaxed);
@@ -788,6 +813,22 @@ impl Coordinator {
         queries: &[TimeSeries],
         k: usize,
         cascade: Cascade,
+    ) -> Result<BatchSearchTicket> {
+        self.submit_batch_search_deadline(key, queries, k, cascade, None)
+    }
+
+    /// [`Self::submit_batch_search`] with an optional deadline, checked
+    /// again at epoch claim time (see
+    /// [`Self::submit_search_deadline`]).  The whole batch is one
+    /// request: an expired budget fails it whole, never a silent prefix
+    /// of answered queries.
+    pub fn submit_batch_search_deadline(
+        &self,
+        key: IndexKey,
+        queries: &[TimeSeries],
+        k: usize,
+        cascade: Cascade,
+        deadline: Option<Deadline>,
     ) -> Result<BatchSearchTicket> {
         let index = self.index(key)?;
         if queries.is_empty() {
@@ -816,6 +857,16 @@ impl Coordinator {
         let start = Instant::now();
         self.native_pool.submit(move || {
             let _req = metrics.request_begin(); // gauge released on drop, even on unwind
+            // epoch-claim deadline check: queued past the budget means
+            // the cascade never runs (deadlines_exceeded is counted
+            // once per request at the server's dispatch choke point)
+            if let Some(d) = deadline {
+                if d.expired() {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Err(d.error()));
+                    return;
+                }
+            }
             let engine = SearchEngine::new(index, cascade);
             let results = engine.batch_knn_values(&vals, k, threads);
             let outcomes: Vec<SearchOutcome> = results
@@ -1042,6 +1093,15 @@ impl Coordinator {
     /// Count a protocol-v2 envelope (called by the TCP server).
     pub(crate) fn note_v2_request(&self) {
         self.metrics.proto_v2_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one wire request answered with the typed
+    /// `deadline_exceeded` code (called once per error reply by the TCP
+    /// server's dispatch — the single choke point, so a budget that
+    /// expires both at epoch claim and at the wait is still one
+    /// request, one count).
+    pub(crate) fn note_deadline_exceeded(&self) {
+        self.metrics.deadlines_exceeded.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Wait for every native job to finish (tests / clean shutdown).

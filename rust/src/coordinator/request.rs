@@ -1,10 +1,54 @@
 //! Job and result types flowing through the coordinator.
 
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::runtime::KernelKind;
 use crate::search::{Neighbor, PruneStats};
+
+/// A request deadline: an absolute expiry instant plus the original
+/// millisecond budget (kept for the typed `deadline_exceeded` error and
+/// for recomputing the *remaining* budget when the front forwards the
+/// deadline to shard legs).
+///
+/// Checked at three points along a request's life: before dispatch (the
+/// cheap reject), at epoch claim time inside the compute pool (a queued
+/// request whose budget drained while waiting never runs), and as the
+/// bound on every blocking ticket / shard-link wait.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    /// Absolute expiry.
+    pub at: Instant,
+    /// The budget the client originally asked for, in milliseconds.
+    pub budget_ms: u64,
+}
+
+impl Deadline {
+    /// A deadline `budget_ms` from now.
+    pub fn in_ms(budget_ms: u64) -> Self {
+        Deadline {
+            at: Instant::now() + Duration::from_millis(budget_ms),
+            budget_ms,
+        }
+    }
+
+    /// Has the budget drained?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Remaining budget (zero once expired — callers can pass this
+    /// straight to `recv_timeout` for an immediate poll-style check).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+
+    /// The typed error for this deadline.
+    pub fn error(&self) -> Error {
+        Error::deadline_exceeded(self.budget_ms)
+    }
+}
 
 /// Which execution backend produced a result.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,6 +89,22 @@ impl JobTicket {
             .map_err(|_| Error::coordinator("job dropped before completion"))?
     }
 
+    /// Like [`JobTicket::wait`], but bounded by an optional deadline:
+    /// once the budget drains the wait resolves to the typed
+    /// `deadline_exceeded` error instead of blocking on.
+    pub fn wait_deadline(self, deadline: Option<Deadline>) -> Result<PairResult> {
+        match deadline {
+            None => self.wait(),
+            Some(d) => match self.rx.recv_timeout(d.remaining()) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(d.error()),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(Error::coordinator("job dropped before completion"))
+                }
+            },
+        }
+    }
+
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<Result<PairResult>> {
         self.rx.try_recv().ok()
@@ -74,6 +134,20 @@ impl SearchTicket {
             .map_err(|_| Error::coordinator("search job dropped before completion"))?
     }
 
+    /// Deadline-bounded wait — see [`JobTicket::wait_deadline`].
+    pub fn wait_deadline(self, deadline: Option<Deadline>) -> Result<SearchOutcome> {
+        match deadline {
+            None => self.wait(),
+            Some(d) => match self.rx.recv_timeout(d.remaining()) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(d.error()),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(Error::coordinator("search job dropped before completion"))
+                }
+            },
+        }
+    }
+
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<Result<SearchOutcome>> {
         self.rx.try_recv().ok()
@@ -93,6 +167,20 @@ impl BatchSearchTicket {
         self.rx
             .recv()
             .map_err(|_| Error::coordinator("batch search dropped before completion"))?
+    }
+
+    /// Deadline-bounded wait — see [`JobTicket::wait_deadline`].
+    pub fn wait_deadline(self, deadline: Option<Deadline>) -> Result<Vec<SearchOutcome>> {
+        match deadline {
+            None => self.wait(),
+            Some(d) => match self.rx.recv_timeout(d.remaining()) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(d.error()),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(Error::coordinator("batch search dropped before completion"))
+                }
+            },
+        }
     }
 
     /// Non-blocking poll.
@@ -158,6 +246,19 @@ mod tests {
         let r = t.wait().unwrap();
         assert_eq!(r.value, 1.5);
         assert_eq!(r.backend.as_str(), "native");
+    }
+
+    #[test]
+    fn deadline_bounds_ticket_wait() {
+        let (tx, rx) = mpsc::channel::<Result<PairResult>>();
+        let err = JobTicket { rx }
+            .wait_deadline(Some(Deadline::in_ms(5)))
+            .unwrap_err();
+        assert_eq!(err.code(), "deadline_exceeded");
+        assert!(err.to_string().contains("5 ms"));
+        drop(tx);
+        assert!(Deadline::in_ms(0).expired());
+        assert!(!Deadline::in_ms(60_000).expired());
     }
 
     #[test]

@@ -20,9 +20,16 @@
 //!   `{"ok":false,"error":"<human message>","code":"<machine code>"}`.
 //!   The code table lives on [`crate::error::Error::code`] (`bad_json`,
 //!   `bad_request`, `bad_input`, `unknown_op`, `not_found`,
-//!   `unavailable`, `internal`), plus one wire-only code synthesized
-//!   here in dispatch: `unsupported_proto` for a `proto` other than
-//!   1/2.
+//!   `unavailable`, `deadline_exceeded`, `internal`), plus one
+//!   wire-only code synthesized here in dispatch: `unsupported_proto`
+//!   for a `proto` other than 1/2.
+//! * `deadline_ms` — optional on any op (both protocol versions): an
+//!   integer millisecond budget, 1 ..= 86_400_000.  The request is
+//!   bounded end to end — checked before dispatch, again when the
+//!   compute pool claims the epoch, and as the bound on the blocking
+//!   wait — and exhaustion answers with the typed `deadline_exceeded`
+//!   code instead of blocking on.  A front forwards the *remaining*
+//!   budget to every shard leg it fans out.
 //!
 //! The generic v2 ops reach **every measure in the family** through one
 //! serializable `measure` object (see `measures::spec` for the JSON
@@ -111,7 +118,23 @@
 //! a shard stays down after a capped-backoff reconnect, the front's
 //! reply is the typed `unavailable` error carrying
 //! `shards_ok`/`shards_total` — exact merged results or a typed error,
-//! never a silently truncated neighbor list.
+//! never a silently truncated neighbor list.  The front's `search` /
+//! `batch_search` additionally accept `allow_partial: true` to opt into
+//! the exact merge over responsive shards; such replies carry a typed
+//! `partial: {shards_ok, shards_total, missing}` block (see
+//! [`crate::shard::front`]).
+//!
+//! ## Fault injection (chaos testing)
+//!
+//! [`Server::start_with_faults`] serves the identical protocol through
+//! a deterministic [`FaultHook`](crate::shard::fault::FaultHook)
+//! consulted at the I/O boundary: accepted connections can be refused
+//! or capped to N replies, and individual replies delayed, garbled or
+//! cut mid-line — the failure modes the front's breaker/partial
+//! machinery must absorb.  `spdtw shard-serve --fault-plan plan.json`
+//! wires it up; production servers use [`Server::start`], which
+//! monomorphizes the hook to the no-op [`NoFaults`] (zero dispatch
+//! cost).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -119,6 +142,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 
+use crate::coordinator::request::Deadline;
 use crate::coordinator::state::{GridKey, IndexKey, MeasureKey};
 use crate::coordinator::Coordinator;
 use crate::data::{LabeledSet, TimeSeries};
@@ -126,6 +150,7 @@ use crate::error::Result;
 use crate::measures::spec::{GridSpec, MeasureSpec};
 use crate::search::index::content_hash_of;
 use crate::search::{Cascade, Index};
+use crate::shard::fault::{ConnectFault, FaultHook, NoFaults, ReplyFault};
 use crate::sparse::LocMatrix;
 use crate::util::json::Json;
 
@@ -140,6 +165,23 @@ pub struct Server {
 impl Server {
     /// Bind and serve on `addr` (use port 0 for an ephemeral port).
     pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        Server::start_with_faults(coordinator, addr, Arc::new(NoFaults))
+    }
+
+    /// [`Server::start`] with a deterministic fault hook at the I/O
+    /// boundary — the chaos-testing entry behind `spdtw shard-serve
+    /// --fault-plan`.  Connect-class faults act on accepted
+    /// connections (refuse = drop the socket before any reply; close
+    /// -after = serve N replies then sever); reply-class faults act per
+    /// reply (delay / garble / drop mid-line).  The hook's shard id is
+    /// this server's [`ShardRole`](crate::config::ShardRole) id (0 on a
+    /// non-shard server).
+    pub fn start_with_faults<F: FaultHook>(
+        coordinator: Arc<Coordinator>,
+        addr: &str,
+        faults: Arc<F>,
+    ) -> Result<Server> {
+        let shard = coordinator.shard_role().map(|r| r.shard_id).unwrap_or(0);
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -155,10 +197,30 @@ impl Server {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // connect-class fault window: refusing here
+                            // (after accept) is how a userspace server
+                            // can model connection-refused determinis-
+                            // tically — the peer sees an immediate EOF
+                            let max_replies = match faults.connect_fault(shard) {
+                                ConnectFault::Refuse => {
+                                    drop(stream);
+                                    continue;
+                                }
+                                ConnectFault::CloseAfterReplies(n) => n,
+                                ConnectFault::None => u64::MAX,
+                            };
                             let coord = Arc::clone(&coordinator);
                             let stop3 = Arc::clone(&stop2);
+                            let hook = Arc::clone(&faults);
                             thread::spawn(move || {
-                                let _ = handle_conn(stream, &coord, &stop3);
+                                let _ = handle_conn(
+                                    stream,
+                                    &coord,
+                                    &stop3,
+                                    hook.as_ref(),
+                                    shard,
+                                    max_replies,
+                                );
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -196,10 +258,18 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+fn handle_conn<F: FaultHook>(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+    faults: &F,
+    shard: usize,
+    max_replies: u64,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    let mut replies = 0u64;
     for line in reader.lines() {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -209,9 +279,37 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
             continue;
         }
         let reply = dispatch(&line, coord, stop);
-        writer.write_all(reply.to_string().as_bytes())?;
+        let text = reply.to_string();
+        match faults.reply_fault(shard) {
+            ReplyFault::None => {}
+            ReplyFault::Delay(d) => thread::sleep(d),
+            ReplyFault::Garble => {
+                // a syntactically invalid line: the peer must treat the
+                // connection as poisoned, never skip-and-resync
+                writer.write_all(b"{\"garbled\" <<injected fault>>\n")?;
+                writer.flush()?;
+                replies += 1;
+                if replies >= max_replies {
+                    break;
+                }
+                continue;
+            }
+            ReplyFault::DropConnection => {
+                // sever mid-reply: flush a prefix of the real bytes so
+                // the peer observes a torn line, then hang up
+                let half = text.len() / 2;
+                writer.write_all(&text.as_bytes()[..half])?;
+                writer.flush()?;
+                return Ok(());
+            }
+        }
+        writer.write_all(text.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+        replies += 1;
+        if replies >= max_replies {
+            break;
+        }
         if stop.load(Ordering::Relaxed) {
             break;
         }
@@ -278,6 +376,31 @@ pub(crate) fn check_finite(values: &[f64], field: &str) -> Result<()> {
     }
 }
 
+/// The optional `deadline_ms` request field: an integer millisecond
+/// budget, 1 ..= 86_400_000 (24 h).  Anything else — non-numeric,
+/// fractional, zero, negative, non-finite or absurdly large — is a
+/// typed `bad_request`, never silently clamped: a client that mistyped
+/// its budget must not get an effectively unbounded (or instantly
+/// expiring) request.  Shared by the single-server dispatch and the
+/// shard front.
+pub(crate) fn parse_deadline(req: &Json) -> Result<Option<Deadline>> {
+    const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+    match req.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .filter(|m| m.is_finite() && m.fract() == 0.0 && *m >= 1.0 && *m <= MAX_DEADLINE_MS)
+                .ok_or_else(|| {
+                    crate::error::Error::config(
+                        "'deadline_ms' must be an integer between 1 and 86400000",
+                    )
+                })?;
+            Ok(Some(Deadline::in_ms(ms as u64)))
+        }
+    }
+}
+
 /// The v2 `measure` parameter: an inline spec object or a key returned
 /// by `register_measure`.
 enum MeasureSel {
@@ -314,6 +437,13 @@ pub(crate) fn error_reply(e: &crate::error::Error, id: Option<&Json>) -> Json {
         if let Json::Obj(fields) = &mut reply {
             fields.insert("shards_ok".to_string(), Json::num(*shards_ok as f64));
             fields.insert("shards_total".to_string(), Json::num(*shards_total as f64));
+        }
+    }
+    // deadline_exceeded replies carry the original budget so a front
+    // relaying a shard's expiry can surface the same typed error
+    if let crate::error::Error::DeadlineExceeded { budget_ms } = e {
+        if let Json::Obj(fields) = &mut reply {
+            fields.insert("budget_ms".to_string(), Json::num(*budget_ms as f64));
         }
     }
     attach_id(&mut reply, id);
@@ -357,7 +487,12 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     }
     let mut reply = match handle_op(&req, coord, stop) {
         Ok(json) => json,
-        Err(e) => return error_reply(&e, id.as_ref()),
+        Err(e) => {
+            if matches!(e, crate::error::Error::DeadlineExceeded { .. }) {
+                coord.note_deadline_exceeded();
+            }
+            return error_reply(&e, id.as_ref());
+        }
     };
     attach_id(&mut reply, id.as_ref());
     reply
@@ -380,6 +515,14 @@ pub fn dispatch_line(line: &str, coord: &Coordinator) -> Json {
 
 fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json> {
     let op = req.req_str("op")?;
+    // Pre-dispatch deadline check: a request that arrives already past
+    // its budget is rejected before any parsing or compute.
+    let deadline = parse_deadline(req)?;
+    if let Some(d) = deadline {
+        if d.expired() {
+            return Err(d.error());
+        }
+    }
     match op {
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
         "info" => {
@@ -422,7 +565,7 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
             let y = parse_series(req, "y")?;
             let r = coord.submit_spdtw(key, &x, &y)?;
             coord.flush();
-            let out = r.wait()?;
+            let out = r.wait_deadline(deadline)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("value", Json::num(out.value)),
@@ -437,7 +580,7 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
             let y = parse_series(req, "y")?;
             let r = coord.submit_spkrdtw(key, nu, &x, &y)?;
             coord.flush();
-            let out = r.wait()?;
+            let out = r.wait_deadline(deadline)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("log_k", Json::num(out.value)),
@@ -644,7 +787,9 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
             let x = parse_series(req, "x")?;
             let cascade = parse_cascade(req)?;
-            let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
+            let out = coord
+                .submit_search_deadline(key, &x, k, cascade, deadline)?
+                .wait_deadline(deadline)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("neighbors", neighbors_json(&out)),
@@ -674,7 +819,9 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 check_finite(&vals, "xs")?;
                 queries.push(TimeSeries::new(0, vals));
             }
-            let outs = coord.submit_batch_search(key, &queries, k, cascade)?.wait()?;
+            let outs = coord
+                .submit_batch_search_deadline(key, &queries, k, cascade, deadline)?
+                .wait_deadline(deadline)?;
             let results = Json::arr(outs.iter().map(|out| {
                 Json::obj(vec![
                     ("neighbors", neighbors_json(out)),
@@ -733,7 +880,9 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                     check_finite(&vals, "xs")?;
                     queries.push(TimeSeries::new(0, vals));
                 }
-                let outs = coord.submit_batch_search(key, &queries, k, cascade)?.wait()?;
+                let outs = coord
+                    .submit_batch_search_deadline(key, &queries, k, cascade, deadline)?
+                    .wait_deadline(deadline)?;
                 let results = Json::arr(outs.iter().map(|out| {
                     Json::obj(vec![("neighbors", neighbors_json_global(out, &global_ids))])
                 }));
@@ -745,7 +894,9 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 ]))
             } else {
                 let x = parse_series(req, "x")?;
-                let out = coord.submit_search(key, &x, k, cascade)?.wait()?;
+                let out = coord
+                    .submit_search_deadline(key, &x, k, cascade, deadline)?
+                    .wait_deadline(deadline)?;
                 Ok(Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("shard", Json::num(sid as f64)),
@@ -785,7 +936,7 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 MeasureSel::Key(key) => coord.submit_dist_key(key, &x, &y)?,
             };
             coord.flush(); // PJRT-routed specs sit in a partial batch
-            let out = ticket.wait()?;
+            let out = ticket.wait_deadline(deadline)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("value", Json::num(out.value)),
@@ -803,7 +954,7 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 MeasureSel::Key(key) => coord.submit_kernel_key(key, &x, &y)?,
             };
             coord.flush();
-            let out = ticket.wait()?;
+            let out = ticket.wait_deadline(deadline)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("log_k", Json::num(out.value)),
@@ -841,6 +992,7 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 ),
                 ("proto_v2_requests", Json::num(s.proto_v2_requests as f64)),
                 ("shard_searches", Json::num(s.shard_searches as f64)),
+                ("deadlines_exceeded", Json::num(s.deadlines_exceeded as f64)),
                 ("measures_loaded", Json::num(s.measures_loaded as f64)),
                 (
                     "measure_load_failures",
@@ -923,6 +1075,31 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("pong"));
         server.stop();
+    }
+
+    #[test]
+    fn deadline_ms_is_validated_not_clamped() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        for bad in [
+            r#"{"op":"ping","deadline_ms":0}"#,
+            r#"{"op":"ping","deadline_ms":-5}"#,
+            r#"{"op":"ping","deadline_ms":1.5}"#,
+            r#"{"op":"ping","deadline_ms":"fast"}"#,
+            r#"{"op":"ping","deadline_ms":86400001}"#,
+        ] {
+            let rep = dispatch_line(bad, &coord);
+            assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert_eq!(
+                rep.get("code"),
+                Some(&Json::str("bad_request")),
+                "{bad} -> {rep:?}"
+            );
+        }
+        // a generous budget passes straight through to the op
+        let ok = dispatch_line(r#"{"op":"ping","deadline_ms":60000}"#, &coord);
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
+        let m = dispatch_line(r#"{"op":"metrics"}"#, &coord);
+        assert_eq!(m.req_f64("deadlines_exceeded").unwrap(), 0.0);
     }
 
     #[test]

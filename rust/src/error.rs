@@ -39,6 +39,10 @@ pub enum Error {
         shards_total: usize,
         detail: String,
     },
+    /// A request deadline expired before the work completed (typed
+    /// `deadline_exceeded` on the wire).  Carries the original budget so
+    /// the client sees what it asked for, not a server-side remainder.
+    DeadlineExceeded { budget_ms: u64 },
     /// Numerical failure (SVM non-convergence, NaN propagation...).
     Numeric(String),
 }
@@ -62,6 +66,10 @@ impl fmt::Display for Error {
                 f,
                 "shard fan-out degraded: {shards_ok}/{shards_total} shards answered \
                  ({detail}); partial results withheld to preserve exactness"
+            ),
+            Error::DeadlineExceeded { budget_ms } => write!(
+                f,
+                "deadline exceeded: {budget_ms} ms budget exhausted before completion"
             ),
             Error::Numeric(m) => write!(f, "numeric error: {m}"),
         }
@@ -96,6 +104,9 @@ impl Error {
             name: name.into(),
         }
     }
+    pub fn deadline_exceeded(budget_ms: u64) -> Self {
+        Error::DeadlineExceeded { budget_ms }
+    }
 
     /// Stable machine-readable error code — the `code` field of every
     /// TCP error reply (wire protocol v2; also attached to v1 replies,
@@ -110,6 +121,7 @@ impl Error {
     /// | `unknown_op` | unrecognized `op` |
     /// | `not_found` | referenced grid/index/measure does not exist |
     /// | `unavailable` | coordinator lifecycle failures (shut down, worker gone) and shard fan-out degradation (`ShardUnavailable`, whose error replies also carry `shards_ok`/`shards_total`) |
+    /// | `deadline_exceeded` | the request's `deadline_ms` budget expired before completion |
     /// | `internal` | IO / runtime / numeric failures |
     ///
     /// One additional code exists only at the wire layer:
@@ -124,6 +136,7 @@ impl Error {
             Error::Unknown { kind: "op", .. } => "unknown_op",
             Error::Unknown { .. } | Error::NotFound { .. } => "not_found",
             Error::Coordinator(_) | Error::ShardUnavailable { .. } => "unavailable",
+            Error::DeadlineExceeded { .. } => "deadline_exceeded",
             Error::Io(_) | Error::Runtime(_) | Error::Numeric(_) => "internal",
         }
     }

@@ -44,7 +44,7 @@ use spdtw::measures::spec::{
 use spdtw::measures::{KernelMeasure, Measure};
 use spdtw::runtime::PjrtRuntime;
 use spdtw::search::{persist, Index};
-use spdtw::shard::{FrontServer, ShardClientConfig, ShardCoordinator};
+use spdtw::shard::{ActiveFaults, FaultPlan, FrontServer, ShardClientConfig, ShardCoordinator};
 use spdtw::sparse::learn::learn_occupancy_grid;
 
 fn opt_spec() -> Vec<OptSpec> {
@@ -165,6 +165,21 @@ fn opt_spec() -> Vec<OptSpec> {
             name: "shards-total",
             takes_value: true,
             help: "shard-serve: number of shards in the fleet",
+        },
+        OptSpec {
+            name: "fault-plan",
+            takes_value: true,
+            help: "shard-serve: JSON fault plan for deterministic chaos testing",
+        },
+        OptSpec {
+            name: "breaker-threshold",
+            takes_value: true,
+            help: "serve --shards: consecutive failures before a link's breaker opens (default 3)",
+        },
+        OptSpec {
+            name: "probe-interval-ms",
+            takes_value: true,
+            help: "serve --shards: health-probe cadence for open breakers (default 500, 0 = off)",
         },
     ]
 }
@@ -838,6 +853,15 @@ fn serve_front(args: &Args, list: &str) -> Result<()> {
     if let Some(dir) = args.get("index-store") {
         scfg.store = Some(PathBuf::from(dir));
     }
+    if let Some(v) = args.get_usize("breaker-threshold")? {
+        if v == 0 {
+            return Err(Error::config("--breaker-threshold must be >= 1"));
+        }
+        scfg.breaker_threshold = v as u32;
+    }
+    if let Some(v) = args.get_usize("probe-interval-ms")? {
+        scfg.probe_interval_ms = v as u64;
+    }
     let sc = ShardCoordinator::connect(scfg)?;
     let server = FrontServer::start(Arc::clone(&sc), addr)?;
     println!(
@@ -848,7 +872,8 @@ fn serve_front(args: &Args, list: &str) -> Result<()> {
     );
     println!(
         "protocol: v1/v2 front ops: ping, info, register_index, search, batch_search, \
-         metrics, shutdown — k-NN answers merged exactly across shards"
+         metrics, shutdown — k-NN answers merged exactly across shards \
+         (opt-in: allow_partial, deadline_ms)"
     );
     while !server.is_stopped() {
         std::thread::sleep(std::time::Duration::from_millis(200));
@@ -874,7 +899,20 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
         shards_total,
     });
     let coord = Arc::new(Coordinator::start(ccfg, None)?);
-    let server = Server::start(Arc::clone(&coord), addr)?;
+    let server = match args.get("fault-plan") {
+        Some(path) => {
+            let plan = FaultPlan::load(std::path::Path::new(path))?;
+            eprintln!(
+                "WARNING: FAULT INJECTION ACTIVE — serving through fault plan {path} \
+                 ({} rules, seed {}); this server WILL misbehave by design",
+                plan.rules.len(),
+                plan.seed
+            );
+            let faults = Arc::new(ActiveFaults::new(plan));
+            Server::start_with_faults(Arc::clone(&coord), addr, faults)?
+        }
+        None => Server::start(Arc::clone(&coord), addr)?,
+    };
     println!(
         "spdtw shard {shard_id}/{shards_total} listening on {}",
         server.addr

@@ -1,5 +1,7 @@
 //! The front `ShardCoordinator`: persistent multiplexed TCP links to N
-//! shard servers, exact fan-out/merge, health metrics.
+//! shard servers, exact fan-out/merge, health metrics, and the
+//! fault-tolerance layer (circuit breakers, health probes, deadline
+//! propagation, opt-in partial results).
 //!
 //! Each link is one `TcpStream` split into a write half (behind a
 //! mutex, shared by every in-flight request) and a dedicated reader
@@ -11,23 +13,41 @@
 //!
 //! Failure model: a dead link fails all of its in-flight requests
 //! immediately (the reader drops their reply senders on EOF).  The next
-//! fan-out retries the shard once after a capped-backoff reconnect; if
-//! it stays down the query returns
-//! [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable)
-//! with `shards_ok`/`shards_total` — a typed partial-result error,
-//! never a silently truncated neighbor list.
+//! fan-out retries the shard once after a capped-backoff reconnect;
+//! after `breaker_threshold` consecutive failures the link's circuit
+//! breaker **opens** and requests fail fast (typed `unavailable`)
+//! without paying inline connect backoff — a background probe thread
+//! redials open links (half-open state) and closes the breaker once the
+//! shard answers `info` with the right topology again.  If a query
+//! cannot get exact results from every shard it returns
+//! [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable) —
+//! unless the caller opted in with [`QueryOpts::allow_partial`], in
+//! which case the exact bounded-heap merge over the *responsive* shards
+//! is returned with the missing shards named
+//! ([`ShardedSearch::missing`]), never a silently truncated neighbor
+//! list.  Requests carrying a [`Deadline`] get remaining-budget-aware
+//! per-leg timeouts and the typed `deadline_exceeded` error once the
+//! budget drains.
+//!
+//! Everything here is generic over [`FaultHook`] so the deterministic
+//! chaos harness ([`ActiveFaults`](super::fault::ActiveFaults)) can
+//! inject connect-class faults at the dial boundary; production code is
+//! monomorphized with [`NoFaults`], whose inlined no-op hooks erase the
+//! seam entirely.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::fault::{ConnectFault, FaultHook, NoFaults};
 use super::layout::{ShardEntry, ShardLayout, ShardManifest};
 use super::{merge_topk, ShardNeighbor};
+use crate::coordinator::request::Deadline;
 use crate::coordinator::validate_index_name;
 use crate::error::{Error, Result};
 use crate::util::json::Json;
@@ -43,8 +63,16 @@ pub struct ShardClientConfig {
     pub backoff_base_ms: u64,
     /// Backoff ceiling (capped exponential).
     pub backoff_cap_ms: u64,
-    /// Per-request reply timeout.
+    /// Per-request reply timeout ceiling; a request [`Deadline`] lowers
+    /// the effective per-leg timeout to its remaining budget.
     pub call_timeout_ms: u64,
+    /// Consecutive per-link failures before the circuit breaker opens
+    /// and requests fail fast instead of paying inline reconnects.
+    pub breaker_threshold: u32,
+    /// Background health-probe cadence for open breakers (0 disables
+    /// the probe thread; then only an explicit reconnect, or a request
+    /// arriving while the breaker is half-open, can close a breaker).
+    pub probe_interval_ms: u64,
     /// Directory for the shard manifest (per-shard content hashes);
     /// `None` disables manifest persistence.
     pub store: Option<PathBuf>,
@@ -58,6 +86,8 @@ impl Default for ShardClientConfig {
             backoff_base_ms: 50,
             backoff_cap_ms: 800,
             call_timeout_ms: 30_000,
+            breaker_threshold: 3,
+            probe_interval_ms: 500,
             store: None,
         }
     }
@@ -72,6 +102,27 @@ impl ShardClientConfig {
     }
 }
 
+/// Per-query options for the sharded search paths.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryOpts {
+    /// Accept the exact merge over *responsive* shards when some shards
+    /// are down, instead of the all-or-typed-error default.  The reply
+    /// names the missing shards; it is never a silent subset.
+    pub allow_partial: bool,
+    /// End-to-end budget; forwarded to every shard leg as the remaining
+    /// budget at send time.
+    pub deadline: Option<Deadline>,
+}
+
+impl QueryOpts {
+    pub fn with_deadline(deadline: Option<Deadline>) -> Self {
+        QueryOpts {
+            allow_partial: false,
+            deadline,
+        }
+    }
+}
+
 /// A request in flight on a link: the reply arrives on `rx` when the
 /// reader thread routes the line with the matching id.
 struct PendingCall {
@@ -80,15 +131,23 @@ struct PendingCall {
     sent_at: Instant,
 }
 
-/// Mutable half of a link.  `pending` is re-created per connection so a
-/// dying reader only fails its own generation's waiters.
+/// Mutable half of a link.  `pending` and `alive` are re-created per
+/// connection so a dying reader only fails its own generation's
+/// waiters, and `begin` can detect a dead reader before writing into
+/// the socket.
 struct LinkState {
     writer: Option<BufWriter<TcpStream>>,
     pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Json>>>>,
+    alive: Arc<AtomicBool>,
 }
 
+// Circuit-breaker states (per link).
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
 /// One persistent, multiplexed connection to a shard server.
-struct ShardLink {
+struct ShardLink<F: FaultHook> {
     shard_id: usize,
     addr: String,
     next_id: AtomicU64,
@@ -97,10 +156,27 @@ struct ShardLink {
     backoff_base_ms: u64,
     backoff_cap_ms: u64,
     call_timeout: Duration,
+    /// Circuit breaker: consecutive failures, state, and open count.
+    consecutive_failures: AtomicU64,
+    breaker: AtomicU8,
+    breaker_opens: AtomicU64,
+    breaker_threshold: u64,
+    probes: AtomicU64,
+    /// Shared shutdown flag: interrupts connect backoff sleeps so a
+    /// front `shutdown` (or process stop) is never delayed by reconnect
+    /// backoff against a dead shard.
+    stop: Arc<AtomicBool>,
+    faults: Arc<F>,
 }
 
-impl ShardLink {
-    fn new(shard_id: usize, addr: &str, cfg: &ShardClientConfig) -> ShardLink {
+impl<F: FaultHook> ShardLink<F> {
+    fn new(
+        shard_id: usize,
+        addr: &str,
+        cfg: &ShardClientConfig,
+        faults: Arc<F>,
+        stop: Arc<AtomicBool>,
+    ) -> ShardLink<F> {
         ShardLink {
             shard_id,
             addr: addr.to_string(),
@@ -108,11 +184,19 @@ impl ShardLink {
             state: Mutex::new(LinkState {
                 writer: None,
                 pending: Arc::new(Mutex::new(HashMap::new())),
+                alive: Arc::new(AtomicBool::new(false)),
             }),
             connect_attempts: cfg.connect_attempts.max(1),
             backoff_base_ms: cfg.backoff_base_ms,
             backoff_cap_ms: cfg.backoff_cap_ms.max(cfg.backoff_base_ms),
             call_timeout: Duration::from_millis(cfg.call_timeout_ms),
+            consecutive_failures: AtomicU64::new(0),
+            breaker: AtomicU8::new(BREAKER_CLOSED),
+            breaker_opens: AtomicU64::new(0),
+            breaker_threshold: cfg.breaker_threshold.max(1) as u64,
+            probes: AtomicU64::new(0),
+            stop,
+            faults,
         }
     }
 
@@ -120,18 +204,108 @@ impl ShardLink {
         Error::coordinator(format!("shard {} ({}): link down", self.shard_id, self.addr))
     }
 
-    /// Dial with capped exponential backoff, then install the stream
-    /// and spawn a fresh reader thread for it.
+    fn fast_fail_err(&self) -> Error {
+        Error::coordinator(format!(
+            "shard {} ({}): breaker open (failing fast)",
+            self.shard_id, self.addr
+        ))
+    }
+
+    // --- circuit breaker ------------------------------------------------
+
+    fn breaker_is_open(&self) -> bool {
+        self.breaker.load(Ordering::Relaxed) == BREAKER_OPEN
+    }
+
+    fn breaker_state(&self) -> &'static str {
+        match self.breaker.load(Ordering::Relaxed) {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half_open",
+            _ => "closed",
+        }
+    }
+
+    /// A completed call: reset the failure streak, close the breaker.
+    fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.breaker.store(BREAKER_CLOSED, Ordering::Relaxed);
+    }
+
+    /// A failed call (deadline-bounded timeouts are NOT failures — a
+    /// tight budget says nothing about shard health).
+    fn record_failure(&self) {
+        let streak = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= self.breaker_threshold
+            && self.breaker.swap(BREAKER_OPEN, Ordering::Relaxed) != BREAKER_OPEN
+        {
+            self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Probe entry: an open breaker moves to half-open for one trial.
+    fn set_half_open(&self) {
+        let _ = self.breaker.compare_exchange(
+            BREAKER_OPEN,
+            BREAKER_HALF_OPEN,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Failed probe: half-open falls back to open.
+    fn reopen(&self) {
+        let _ = self.breaker.compare_exchange(
+            BREAKER_HALF_OPEN,
+            BREAKER_OPEN,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    // --- connection lifecycle -------------------------------------------
+
+    /// Sleep in ≤20 ms slices, bailing out the moment the shared stop
+    /// flag is set (the satellite fix: backoff never delays shutdown).
+    fn sleep_interruptible(&self, total: Duration) -> Result<()> {
+        let mut slept = Duration::ZERO;
+        while slept < total {
+            if self.stop.load(Ordering::Relaxed) {
+                return Err(Error::coordinator(format!(
+                    "shard {} ({}): shutting down",
+                    self.shard_id, self.addr
+                )));
+            }
+            let step = (total - slept).min(Duration::from_millis(20));
+            thread::sleep(step);
+            slept += step;
+        }
+        Ok(())
+    }
+
+    /// One dial, through the fault hook: an injected `Refuse` fails the
+    /// attempt exactly as a closed port would.
+    fn dial(&self) -> std::io::Result<TcpStream> {
+        if self.faults.connect_fault(self.shard_id) == ConnectFault::Refuse {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                "injected refuse_connect",
+            ));
+        }
+        TcpStream::connect(&self.addr)
+    }
+
+    /// Dial with capped exponential backoff (stop-interruptible), then
+    /// install the stream and spawn a fresh reader thread for it.
     fn connect(&self) -> Result<()> {
         let mut delay = Duration::from_millis(self.backoff_base_ms);
         let cap = Duration::from_millis(self.backoff_cap_ms);
         let mut last: Option<std::io::Error> = None;
         for attempt in 0..self.connect_attempts {
             if attempt > 0 {
-                thread::sleep(delay);
+                self.sleep_interruptible(delay)?;
                 delay = (delay * 2).min(cap);
             }
-            match TcpStream::connect(&self.addr) {
+            match self.dial() {
                 Ok(stream) => return self.attach(stream),
                 Err(e) => last = Some(e),
             }
@@ -145,6 +319,18 @@ impl ShardLink {
         )))
     }
 
+    /// Single dial with no backoff — the probe path (a probe must never
+    /// block the probe thread for a full backoff ladder).
+    fn connect_once(&self) -> Result<()> {
+        match self.dial() {
+            Ok(stream) => self.attach(stream),
+            Err(e) => Err(Error::coordinator(format!(
+                "shard {} ({}): probe dial failed: {e}",
+                self.shard_id, self.addr
+            ))),
+        }
+    }
+
     fn attach(&self, stream: TcpStream) -> Result<()> {
         stream.set_nodelay(true).ok();
         let read_half = stream
@@ -152,10 +338,12 @@ impl ShardLink {
             .map_err(|e| Error::coordinator(format!("shard {}: {e}", self.addr)))?;
         let pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Json>>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        let alive = Arc::new(AtomicBool::new(true));
         {
             let mut st = self.state.lock().unwrap();
             st.writer = Some(BufWriter::new(stream));
             st.pending = Arc::clone(&pending);
+            st.alive = Arc::clone(&alive);
         }
         let name = format!("spdtw-shard-link-{}", self.shard_id);
         thread::Builder::new()
@@ -168,20 +356,30 @@ impl ShardLink {
                     match reader.read_line(&mut line) {
                         Ok(0) | Err(_) => break,
                         Ok(_) => {
+                            // A line that isn't JSON, or a parseable one
+                            // with no id, means the stream is corrupt
+                            // (garbled): kill the connection rather than
+                            // leave its waiters hanging to their full
+                            // timeouts on a broken framing.
                             let Ok(reply) = Json::parse(line.trim()) else {
-                                continue;
+                                break;
                             };
                             let Some(id) = reply.get("id").and_then(Json::as_f64) else {
-                                continue;
+                                break;
                             };
+                            // An UNKNOWN id is normal: a deadline-bounded
+                            // waiter that gave up already removed its
+                            // sender, and the late reply just drains.
                             if let Some(tx) = pending.lock().unwrap().remove(&(id as u64)) {
                                 let _ = tx.send(reply);
                             }
                         }
                     }
                 }
-                // EOF or read error: dropping the senders fails every
-                // waiter of THIS connection generation immediately.
+                // EOF, read error or garble: mark the connection dead so
+                // `begin` stops writing into it, then drop the senders to
+                // fail every waiter of THIS generation immediately.
+                alive.store(false, Ordering::Release);
                 pending.lock().unwrap().clear();
             })
             .map_err(|e| Error::coordinator(format!("shard link thread: {e}")))?;
@@ -189,7 +387,8 @@ impl ShardLink {
     }
 
     fn is_up(&self) -> bool {
-        self.state.lock().unwrap().writer.is_some()
+        let st = self.state.lock().unwrap();
+        st.writer.is_some() && st.alive.load(Ordering::Acquire)
     }
 
     /// Send `req` (id injected) without waiting for the reply.
@@ -202,14 +401,23 @@ impl ShardLink {
         let line = req.to_string();
         let (tx, rx) = mpsc::channel();
         let mut st = self.state.lock().unwrap();
-        let Some(writer) = st.writer.as_mut() else {
+        if !st.alive.load(Ordering::Acquire) {
+            // The reader died (EOF/garble) but nobody reconnected yet:
+            // fail fast instead of writing into a dead socket and
+            // waiting out the full reply timeout.
+            st.writer = None;
+        }
+        if st.writer.is_none() {
             return Err(self.down_err());
-        };
+        }
         st.pending.lock().unwrap().insert(id, tx);
-        let wrote = writer
-            .write_all(line.as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .and_then(|_| writer.flush());
+        let wrote = {
+            let writer = st.writer.as_mut().expect("writer checked above");
+            writer
+                .write_all(line.as_bytes())
+                .and_then(|_| writer.write_all(b"\n"))
+                .and_then(|_| writer.flush())
+        };
         if let Err(e) = wrote {
             st.pending.lock().unwrap().remove(&id);
             st.writer = None; // mark the link dead for later callers
@@ -225,14 +433,32 @@ impl ShardLink {
         })
     }
 
-    /// Wait for the reply to a [`begin`](Self::begin).
-    fn finish(&self, call: PendingCall) -> Result<(Json, Duration)> {
-        match call.rx.recv_timeout(self.call_timeout) {
+    /// Wait for the reply to a [`begin`](Self::begin), bounded by the
+    /// flat call timeout or the request deadline's remaining budget,
+    /// whichever is smaller.
+    fn finish(&self, call: PendingCall, deadline: Option<Deadline>) -> Result<(Json, Duration)> {
+        let mut wait = self.call_timeout;
+        let mut deadline_bound = false;
+        if let Some(d) = deadline {
+            let remaining = d.remaining();
+            if remaining < wait {
+                wait = remaining;
+                deadline_bound = true;
+            }
+        }
+        match call.rx.recv_timeout(wait) {
             Ok(reply) => Ok((reply, call.sent_at.elapsed())),
             Err(_) => {
                 // Timeout, or the reader died and dropped our sender.
                 let st = self.state.lock().unwrap();
                 st.pending.lock().unwrap().remove(&call.id);
+                if deadline_bound {
+                    if let Some(d) = deadline {
+                        if d.expired() {
+                            return Err(d.error());
+                        }
+                    }
+                }
                 Err(Error::coordinator(format!(
                     "shard {} ({}): no reply (link lost or timed out)",
                     self.shard_id, self.addr
@@ -241,8 +467,8 @@ impl ShardLink {
         }
     }
 
-    fn call(&self, req: &Json) -> Result<(Json, Duration)> {
-        self.finish(self.begin(req)?)
+    fn call(&self, req: &Json, deadline: Option<Deadline>) -> Result<(Json, Duration)> {
+        self.finish(self.begin(req)?, deadline)
     }
 }
 
@@ -267,6 +493,8 @@ struct ShardMetrics {
     merges: AtomicU64,
     merge_candidates: AtomicU64,
     partial_failures: AtomicU64,
+    partial_replies: AtomicU64,
+    deadlines_exceeded: AtomicU64,
 }
 
 /// Point-in-time stats for one shard link.
@@ -274,6 +502,10 @@ struct ShardMetrics {
 pub struct ShardLinkStats {
     pub addr: String,
     pub up: bool,
+    /// Circuit-breaker state: `"closed"`, `"open"` or `"half_open"`.
+    pub breaker: &'static str,
+    pub breaker_opens: u64,
+    pub probes: u64,
     pub calls: u64,
     pub errors: u64,
     pub reconnects: u64,
@@ -291,7 +523,14 @@ pub struct ShardMetricsSnapshot {
     pub peak_inflight: u64,
     pub merges: u64,
     pub merge_candidates: u64,
+    /// Fan-outs that could not get every shard's answer (whether they
+    /// then errored or degraded to a flagged partial reply).
     pub partial_failures: u64,
+    /// Opt-in partial replies actually returned (`allow_partial` set
+    /// and at least one shard missing).
+    pub partial_replies: u64,
+    /// Requests that died on the typed `deadline_exceeded` path.
+    pub deadlines_exceeded: u64,
 }
 
 impl ShardMetricsSnapshot {
@@ -300,6 +539,9 @@ impl ShardMetricsSnapshot {
             Json::obj(vec![
                 ("addr", Json::str(s.addr.clone())),
                 ("up", Json::Bool(s.up)),
+                ("breaker", Json::str(s.breaker)),
+                ("breaker_opens", Json::num(s.breaker_opens as f64)),
+                ("probes", Json::num(s.probes as f64)),
                 ("calls", Json::num(s.calls as f64)),
                 ("errors", Json::num(s.errors as f64)),
                 ("reconnects", Json::num(s.reconnects as f64)),
@@ -316,25 +558,40 @@ impl ShardMetricsSnapshot {
             ("merges", Json::num(self.merges as f64)),
             ("merge_candidates", Json::num(self.merge_candidates as f64)),
             ("partial_failures", Json::num(self.partial_failures as f64)),
+            ("partial_replies", Json::num(self.partial_replies as f64)),
+            (
+                "deadlines_exceeded",
+                Json::num(self.deadlines_exceeded as f64),
+            ),
         ])
     }
 
     pub fn report(&self) -> String {
         let mut s = format!(
             "shard front: fanouts={} mean_depth={:.2} peak_inflight={} merges={} \
-             merge_candidates={} partial_failures={}\n",
+             merge_candidates={} partial_failures={} partial_replies={} deadlines_exceeded={}\n",
             self.fanouts,
             self.mean_fanout_depth,
             self.peak_inflight,
             self.merges,
             self.merge_candidates,
-            self.partial_failures
+            self.partial_failures,
+            self.partial_replies,
+            self.deadlines_exceeded
         );
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
-                "  shard {i} {}: up={} calls={} errors={} reconnects={} \
-                 mean_latency={:.1}us max_latency={}us\n",
-                sh.addr, sh.up, sh.calls, sh.errors, sh.reconnects, sh.mean_latency_us,
+                "  shard {i} {}: up={} breaker={} (opens={} probes={}) calls={} errors={} \
+                 reconnects={} mean_latency={:.1}us max_latency={}us\n",
+                sh.addr,
+                sh.up,
+                sh.breaker,
+                sh.breaker_opens,
+                sh.probes,
+                sh.calls,
+                sh.errors,
+                sh.reconnects,
+                sh.mean_latency_us,
                 sh.max_latency_us
             ));
         }
@@ -372,7 +629,10 @@ pub struct ShardRegistration {
     pub measure: Option<Json>,
 }
 
-/// An exactly merged fan-out result.
+/// An exactly merged fan-out result.  `missing` is empty for a full
+/// answer; non-empty only on the opt-in `allow_partial` path, where it
+/// names the shards whose exact lists could not enter the merge (the
+/// typed flag that keeps a degraded reply from ever looking complete).
 #[derive(Clone, Debug)]
 pub struct ShardedSearch {
     pub neighbors: Vec<ShardNeighbor>,
@@ -380,6 +640,14 @@ pub struct ShardedSearch {
     pub shards_total: usize,
     /// Candidates that entered the merge (Σ per-shard top-k sizes).
     pub merge_candidates: usize,
+    /// Shard ids absent from the merge (ascending; empty = exact full).
+    pub missing: Vec<usize>,
+}
+
+/// Replies plus the shards that never produced one (transport level).
+struct FanOut {
+    replies: Vec<(usize, Json)>,
+    missing: Vec<usize>,
 }
 
 struct FrontTables {
@@ -389,27 +657,41 @@ struct FrontTables {
 }
 
 /// The front coordinator: owns the links, the sharded-index registry,
-/// and the merge.
-pub struct ShardCoordinator {
+/// the breaker probe thread, and the merge.
+pub struct ShardCoordinator<F: FaultHook = NoFaults> {
     cfg: ShardClientConfig,
     layout: ShardLayout,
-    links: Vec<ShardLink>,
+    links: Vec<ShardLink<F>>,
     metrics: ShardMetrics,
     tables: Mutex<FrontTables>,
+    stop: Arc<AtomicBool>,
+    probe: Mutex<Option<thread::JoinHandle<()>>>,
 }
 
-impl ShardCoordinator {
+impl ShardCoordinator<NoFaults> {
     /// Connect to every shard server (capped backoff per link) and
     /// verify the fleet topology: each server must carry the matching
     /// [`ShardRole`](crate::config::ShardRole).
     pub fn connect(cfg: ShardClientConfig) -> Result<Arc<ShardCoordinator>> {
+        Self::connect_with_faults(cfg, Arc::new(NoFaults))
+    }
+}
+
+impl<F: FaultHook> ShardCoordinator<F> {
+    /// [`connect`](ShardCoordinator::connect) with a fault hook wired
+    /// into every link's dial path — the chaos-harness entry point.
+    pub fn connect_with_faults(
+        cfg: ShardClientConfig,
+        faults: Arc<F>,
+    ) -> Result<Arc<ShardCoordinator<F>>> {
         let layout = ShardLayout::new(cfg.addrs.len())
             .map_err(|_| Error::config("shard front needs at least one shard address"))?;
-        let links: Vec<ShardLink> = cfg
+        let stop = Arc::new(AtomicBool::new(false));
+        let links: Vec<ShardLink<F>> = cfg
             .addrs
             .iter()
             .enumerate()
-            .map(|(i, a)| ShardLink::new(i, a, &cfg))
+            .map(|(i, a)| ShardLink::new(i, a, &cfg, Arc::clone(&faults), Arc::clone(&stop)))
             .collect();
         let metrics = ShardMetrics {
             per_shard: links.iter().map(|_| PerShardMetrics::default()).collect(),
@@ -425,34 +707,106 @@ impl ShardCoordinator {
                 by_key: HashMap::new(),
                 by_name: HashMap::new(),
             }),
+            stop,
+            probe: Mutex::new(None),
         });
-        let total = sc.links.len();
-        for link in &sc.links {
-            link.connect()?;
-            let (info, _) = link.call(&Json::obj(vec![
-                ("proto", Json::num(2.0)),
-                ("op", Json::str("info")),
-            ]))?;
-            let sid = info.get("shard_id").and_then(Json::as_usize);
-            let stot = info.get("shards_total").and_then(Json::as_usize);
-            match (sid, stot) {
-                (Some(s), Some(n)) if s == link.shard_id && n == total => {}
-                (None, _) => {
-                    return Err(Error::config(format!(
-                        "{} is not a shard server (start it with `spdtw shard-serve`)",
-                        link.addr
-                    )))
-                }
-                (s, n) => {
-                    return Err(Error::config(format!(
-                        "shard topology mismatch at {}: server reports shard {:?}/{:?}, \
-                         front expects shard {}/{}",
-                        link.addr, s, n, link.shard_id, total
-                    )))
-                }
-            }
+        for shard in 0..sc.links.len() {
+            sc.links[shard].connect()?;
+            sc.verify_link(shard)?;
+        }
+        if sc.cfg.probe_interval_ms > 0 {
+            Self::spawn_probe(&sc);
         }
         Ok(sc)
+    }
+
+    /// `info` round trip asserting the server at the other end really
+    /// is shard `shard` of this fleet — run at first connect AND on
+    /// every reconnect/probe, so a *different* server reappearing on
+    /// the same port (the mixed-generation hazard) is rejected before
+    /// any of its answers can enter a merge.
+    fn verify_link(&self, shard: usize) -> Result<()> {
+        let link = &self.links[shard];
+        let verify_ms = (link.call_timeout.as_millis() as u64).clamp(1, 2_000);
+        let (info, _) = link.call(
+            &Json::obj(vec![("proto", Json::num(2.0)), ("op", Json::str("info"))]),
+            Some(Deadline::in_ms(verify_ms)),
+        )?;
+        let total = self.links.len();
+        let sid = info.get("shard_id").and_then(Json::as_usize);
+        let stot = info.get("shards_total").and_then(Json::as_usize);
+        match (sid, stot) {
+            (Some(s), Some(n)) if s == link.shard_id && n == total => Ok(()),
+            (None, _) => Err(Error::config(format!(
+                "{} is not a shard server (start it with `spdtw shard-serve`)",
+                link.addr
+            ))),
+            (s, n) => Err(Error::config(format!(
+                "shard topology mismatch at {}: server reports shard {:?}/{:?}, \
+                 front expects shard {}/{}",
+                link.addr, s, n, link.shard_id, total
+            ))),
+        }
+    }
+
+    /// Background breaker probe: every `probe_interval_ms`, each OPEN
+    /// link moves to half-open and gets one no-backoff dial plus a
+    /// topology `info` check; success closes the breaker, failure
+    /// reopens it.  The thread holds only a `Weak` so it can never keep
+    /// a dropped front alive, and exits on the shared stop flag.
+    fn spawn_probe(sc: &Arc<ShardCoordinator<F>>) {
+        let interval = Duration::from_millis(sc.cfg.probe_interval_ms.max(1));
+        let weak: Weak<ShardCoordinator<F>> = Arc::downgrade(sc);
+        let stop = Arc::clone(&sc.stop);
+        let handle = thread::Builder::new()
+            .name("spdtw-shard-probe".to_string())
+            .spawn(move || loop {
+                let mut slept = Duration::ZERO;
+                while slept < interval {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let step = (interval - slept).min(Duration::from_millis(20));
+                    thread::sleep(step);
+                    slept += step;
+                }
+                let Some(sc) = weak.upgrade() else { return };
+                sc.probe_once();
+                // drop the Arc before sleeping again: the probe must
+                // never be what keeps the coordinator alive
+                drop(sc);
+            })
+            .ok();
+        *sc.probe.lock().unwrap() = handle;
+    }
+
+    /// One probe sweep over all open breakers (also directly callable
+    /// from tests for a deterministic, clock-free probe).
+    pub fn probe_once(&self) {
+        for shard in 0..self.links.len() {
+            let link = &self.links[shard];
+            if !link.breaker_is_open() {
+                continue;
+            }
+            link.set_half_open();
+            link.probes.fetch_add(1, Ordering::Relaxed);
+            match link.connect_once().and_then(|_| self.verify_link(shard)) {
+                Ok(()) => {
+                    self.metrics.per_shard[shard]
+                        .reconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                    link.record_success();
+                }
+                Err(_) => link.reopen(),
+            }
+        }
+    }
+
+    /// Raise the shared stop flag: interrupts connect-backoff sleeps on
+    /// every link and stops the probe thread at its next slice.  Called
+    /// by the front's `shutdown` op and on drop.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
     }
 
     pub fn shards_total(&self) -> usize {
@@ -466,6 +820,12 @@ impl ShardCoordinator {
     /// Per-link liveness, in shard order.
     pub fn links_up(&self) -> Vec<bool> {
         self.links.iter().map(|l| l.is_up()).collect()
+    }
+
+    /// Per-link breaker state (`"closed"` / `"open"` / `"half_open"`),
+    /// in shard order.
+    pub fn breaker_states(&self) -> Vec<&'static str> {
+        self.links.iter().map(|l| l.breaker_state()).collect()
     }
 
     pub fn addrs(&self) -> &[String] {
@@ -484,6 +844,9 @@ impl ShardCoordinator {
                 ShardLinkStats {
                     addr: l.addr.clone(),
                     up: l.is_up(),
+                    breaker: l.breaker_state(),
+                    breaker_opens: l.breaker_opens.load(Ordering::Relaxed),
+                    probes: l.probes.load(Ordering::Relaxed),
                     calls,
                     errors: p.errors.load(Ordering::Relaxed),
                     reconnects: p.reconnects.load(Ordering::Relaxed),
@@ -507,6 +870,8 @@ impl ShardCoordinator {
             merges: m.merges.load(Ordering::Relaxed),
             merge_candidates: m.merge_candidates.load(Ordering::Relaxed),
             partial_failures: m.partial_failures.load(Ordering::Relaxed),
+            partial_replies: m.partial_replies.load(Ordering::Relaxed),
+            deadlines_exceeded: m.deadlines_exceeded.load(Ordering::Relaxed),
         }
     }
 
@@ -530,8 +895,9 @@ impl ShardCoordinator {
 
     /// Split the corpus across the layout and register each slice on
     /// its shard (with `global_ids` so shards reply in global index
-    /// space).  All fan-out legs must succeed; per-shard content hashes
-    /// land in the shard manifest when a store directory is configured.
+    /// space).  All fan-out legs must succeed — registration is never
+    /// partial; per-shard content hashes land in the shard manifest
+    /// when a store directory is configured.
     pub fn register(&self, reg: &ShardRegistration) -> Result<Arc<ShardedIndex>> {
         let n = reg.series.len();
         if n == 0 {
@@ -588,7 +954,7 @@ impl ShardCoordinator {
             reqs.push((shard, Json::obj(fields)));
         }
 
-        let replies = self.fan_out(&reqs)?;
+        let replies = self.fan_out(&reqs, QueryOpts::default())?.replies;
         let total = self.links.len();
         let mut per_shard_key = vec![None; total];
         let mut per_shard_count = vec![0usize; total];
@@ -653,18 +1019,40 @@ impl ShardCoordinator {
         k: usize,
         cascade: Option<&str>,
     ) -> Result<ShardedSearch> {
+        self.search_opts(index, x, k, cascade, QueryOpts::default())
+    }
+
+    /// [`search`](Self::search) with per-query options (deadline,
+    /// opt-in partial results).
+    pub fn search_opts(
+        &self,
+        index: u64,
+        x: &[f64],
+        k: usize,
+        cascade: Option<&str>,
+        opts: QueryOpts,
+    ) -> Result<ShardedSearch> {
+        self.check_deadline(opts.deadline)?;
         let si = self.index(index)?;
         self.check_query(&si, x, k)?;
-        let reqs = self.shard_search_reqs(&si, k, cascade, |fields| {
+        let reqs = self.shard_search_reqs(&si, k, cascade, opts.deadline, |fields| {
             fields.push(("x", Json::arr(x.iter().copied().map(Json::num))));
         });
-        let replies = self.fan_out(&reqs)?;
-        let mut lists = Vec::with_capacity(replies.len());
-        for (shard, reply) in &replies {
-            self.check_ok(reply, *shard)?;
-            lists.push(parse_neighbors(reply.req_arr("neighbors")?)?);
+        let fan = self.fan_out(&reqs, opts)?;
+        let n_legs = reqs.len();
+        let mut missing = fan.missing;
+        let mut lists = Vec::with_capacity(fan.replies.len());
+        for (shard, reply) in &fan.replies {
+            match self.check_ok(reply, *shard) {
+                Ok(()) => lists.push(parse_neighbors(reply.req_arr("neighbors")?)?),
+                Err(e) => self.degrade_or_fail(e, *shard, &mut missing, opts, n_legs)?,
+            }
         }
-        Ok(self.merge(lists, k))
+        missing.sort_unstable();
+        if !missing.is_empty() {
+            self.metrics.partial_replies.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(self.merge(lists, k, missing))
     }
 
     /// Batched exact k-NN: one `shard_search` leg per shard carrying
@@ -676,6 +1064,22 @@ impl ShardCoordinator {
         k: usize,
         cascade: Option<&str>,
     ) -> Result<Vec<ShardedSearch>> {
+        self.batch_search_opts(index, xs, k, cascade, QueryOpts::default())
+    }
+
+    /// [`batch_search`](Self::batch_search) with per-query options.  On
+    /// the partial path the whole batch shares one missing set (a leg
+    /// carries every query, so a dead shard is missing from all of
+    /// them).
+    pub fn batch_search_opts(
+        &self,
+        index: u64,
+        xs: &[Vec<f64>],
+        k: usize,
+        cascade: Option<&str>,
+        opts: QueryOpts,
+    ) -> Result<Vec<ShardedSearch>> {
+        self.check_deadline(opts.deadline)?;
         let si = self.index(index)?;
         if xs.is_empty() {
             return Err(Error::config("batch_search: xs must be non-empty"));
@@ -683,18 +1087,23 @@ impl ShardCoordinator {
         for x in xs {
             self.check_query(&si, x, k)?;
         }
-        let reqs = self.shard_search_reqs(&si, k, cascade, |fields| {
+        let reqs = self.shard_search_reqs(&si, k, cascade, opts.deadline, |fields| {
             let arr = Json::arr(
                 xs.iter()
                     .map(|x| Json::arr(x.iter().copied().map(Json::num))),
             );
             fields.push(("xs", arr));
         });
-        let replies = self.fan_out(&reqs)?;
+        let fan = self.fan_out(&reqs, opts)?;
+        let n_legs = reqs.len();
+        let mut missing = fan.missing;
         // per_query[q][leg] = that shard's exact top-k for query q
         let mut per_query: Vec<Vec<Vec<ShardNeighbor>>> = vec![Vec::new(); xs.len()];
-        for (shard, reply) in &replies {
-            self.check_ok(reply, *shard)?;
+        for (shard, reply) in &fan.replies {
+            if let Err(e) = self.check_ok(reply, *shard) {
+                self.degrade_or_fail(e, *shard, &mut missing, opts, n_legs)?;
+                continue;
+            }
             let results = reply.req_arr("results")?;
             if results.len() != xs.len() {
                 return Err(Error::runtime(format!(
@@ -707,10 +1116,56 @@ impl ShardCoordinator {
                 per_query[q].push(parse_neighbors(r.req_arr("neighbors")?)?);
             }
         }
+        missing.sort_unstable();
+        if !missing.is_empty() {
+            self.metrics.partial_replies.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(per_query
             .into_iter()
-            .map(|lists| self.merge(lists, k))
+            .map(|lists| self.merge(lists, k, missing.clone()))
             .collect())
+    }
+
+    fn check_deadline(&self, deadline: Option<Deadline>) -> Result<()> {
+        if let Some(d) = deadline {
+            if d.expired() {
+                self.metrics
+                    .deadlines_exceeded
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(d.error());
+            }
+        }
+        Ok(())
+    }
+
+    /// An alive shard sent an error *reply* for its leg.  Bad requests
+    /// always propagate (the query itself is wrong).  Anything else —
+    /// e.g. `not_found` from a shard that restarted empty — counts the
+    /// shard as missing when partials are allowed (its answer must
+    /// never be faked), and fails the query otherwise.  If every leg is
+    /// missing there is nothing exact to return, so even the partial
+    /// path degrades to the typed `unavailable` error.
+    fn degrade_or_fail(
+        &self,
+        e: Error,
+        shard: usize,
+        missing: &mut Vec<usize>,
+        opts: QueryOpts,
+        n_legs: usize,
+    ) -> Result<()> {
+        if !opts.allow_partial || matches!(e, Error::Config(_)) {
+            return Err(e);
+        }
+        missing.push(shard);
+        self.metrics.partial_failures.fetch_add(1, Ordering::Relaxed);
+        if missing.len() >= n_legs {
+            return Err(Error::ShardUnavailable {
+                shards_ok: self.links.len() - missing.len(),
+                shards_total: self.links.len(),
+                detail: format!("all {n_legs} shard legs failed; last: {e}"),
+            });
+        }
+        Ok(())
     }
 
     fn check_query(&self, si: &ShardedIndex, x: &[f64], k: usize) -> Result<()> {
@@ -737,6 +1192,7 @@ impl ShardCoordinator {
         si: &ShardedIndex,
         k: usize,
         cascade: Option<&str>,
+        deadline: Option<Deadline>,
         add_query: impl Fn(&mut Vec<(&'static str, Json)>),
     ) -> Vec<(usize, Json)> {
         si.per_shard_key
@@ -754,6 +1210,12 @@ impl ShardCoordinator {
                     if let Some(c) = cascade {
                         fields.push(("cascade", Json::str(c)));
                     }
+                    if let Some(d) = deadline {
+                        // forward the REMAINING budget, so every hop's
+                        // clock measures only its own leg
+                        let rem_ms = (d.remaining().as_millis() as u64).max(1);
+                        fields.push(("deadline_ms", Json::num(rem_ms as f64)));
+                    }
                     add_query(&mut fields);
                     (shard, Json::obj(fields))
                 })
@@ -761,7 +1223,7 @@ impl ShardCoordinator {
             .collect()
     }
 
-    fn merge(&self, lists: Vec<Vec<ShardNeighbor>>, k: usize) -> ShardedSearch {
+    fn merge(&self, lists: Vec<Vec<ShardNeighbor>>, k: usize, missing: Vec<usize>) -> ShardedSearch {
         let merge_candidates: usize = lists.iter().map(Vec::len).sum();
         let neighbors = merge_topk(lists, k);
         self.metrics.merges.fetch_add(1, Ordering::Relaxed);
@@ -771,15 +1233,17 @@ impl ShardCoordinator {
         let total = self.links.len();
         ShardedSearch {
             neighbors,
-            shards_ok: total,
+            shards_ok: total - missing.len(),
             shards_total: total,
             merge_candidates,
+            missing,
         }
     }
 
     /// Convert a shard's error *reply* (the shard is alive) into a
     /// typed error: `bad_request`/`bad_input` propagate as config
-    /// errors, anything else as an internal runtime error.
+    /// errors, `deadline_exceeded` as the typed deadline error,
+    /// anything else as an internal runtime error.
     fn check_ok(&self, reply: &Json, shard: usize) -> Result<()> {
         if reply.get("ok").and_then(Json::as_bool) == Some(true) {
             return Ok(());
@@ -794,6 +1258,16 @@ impl ShardCoordinator {
             "bad_request" | "bad_input" => {
                 Err(Error::config(format!("shard {shard} ({addr}): {msg}")))
             }
+            "deadline_exceeded" => {
+                self.metrics
+                    .deadlines_exceeded
+                    .fetch_add(1, Ordering::Relaxed);
+                let budget = reply
+                    .get("budget_ms")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                Err(Error::deadline_exceeded(budget as u64))
+            }
             _ => Err(Error::runtime(format!(
                 "shard {shard} ({addr}): {code}: {msg}"
             ))),
@@ -801,11 +1275,16 @@ impl ShardCoordinator {
     }
 
     /// Issue every request concurrently over the multiplexed links
-    /// (all writes first, then collect replies), retrying each failed
-    /// leg once after a capped-backoff reconnect.  If any leg still
-    /// fails, the whole fan-out degrades to the typed
-    /// `ShardUnavailable` partial-result error.
-    fn fan_out(&self, reqs: &[(usize, Json)]) -> Result<Vec<(usize, Json)>> {
+    /// (all writes first, then collect replies).  A leg whose breaker
+    /// is OPEN fails fast without touching the network; other failed
+    /// legs are retried once after a capped-backoff reconnect (plus a
+    /// topology re-verification, so a different server on the same
+    /// port is never adopted).  A drained deadline anywhere turns the
+    /// whole fan-out into the typed `deadline_exceeded` error.  Legs
+    /// that still fail either degrade the fan-out to the typed
+    /// `ShardUnavailable` error (default) or, with `allow_partial`,
+    /// come back named in [`FanOut::missing`].
+    fn fan_out(&self, reqs: &[(usize, Json)], opts: QueryOpts) -> Result<FanOut> {
         let shards_total = self.links.len();
         self.metrics.fanouts.fetch_add(1, Ordering::Relaxed);
         self.metrics
@@ -815,7 +1294,7 @@ impl ShardCoordinator {
         self.metrics
             .peak_inflight
             .fetch_max(inflight, Ordering::Relaxed);
-        let result = self.fan_out_inner(reqs, shards_total);
+        let result = self.fan_out_inner(reqs, shards_total, opts);
         self.metrics.inflight.fetch_sub(1, Ordering::Relaxed);
         result
     }
@@ -824,69 +1303,121 @@ impl ShardCoordinator {
         &self,
         reqs: &[(usize, Json)],
         shards_total: usize,
-    ) -> Result<Vec<(usize, Json)>> {
+        opts: QueryOpts,
+    ) -> Result<FanOut> {
         let pends: Vec<Result<PendingCall>> = reqs
             .iter()
-            .map(|(shard, req)| self.links[*shard].begin(req))
+            .map(|(shard, req)| {
+                let link = &self.links[*shard];
+                if link.breaker_is_open() {
+                    Err(link.fast_fail_err())
+                } else {
+                    link.begin(req)
+                }
+            })
             .collect();
         let mut replies: Vec<Option<Json>> = (0..reqs.len()).map(|_| None).collect();
-        let mut failures: Vec<(usize, String)> = Vec::new(); // (req position, detail)
+        let mut failures: Vec<(usize, Error)> = Vec::new(); // (req position, error)
         for (i, pend) in pends.into_iter().enumerate() {
             let shard = reqs[i].0;
-            match pend.and_then(|p| self.links[shard].finish(p)) {
+            let link = &self.links[shard];
+            match pend.and_then(|p| link.finish(p, opts.deadline)) {
                 Ok((reply, lat)) => {
                     self.record_call(shard, lat);
+                    link.record_success();
                     replies[i] = Some(reply);
                 }
                 Err(e) => {
                     self.metrics.per_shard[shard]
                         .errors
                         .fetch_add(1, Ordering::Relaxed);
-                    failures.push((i, e.to_string()));
+                    // A deadline-bounded miss says nothing about shard
+                    // health; everything else feeds the breaker.
+                    if !matches!(e, Error::DeadlineExceeded { .. }) {
+                        link.record_failure();
+                    }
+                    failures.push((i, e));
                 }
             }
         }
-        // One retry per failed leg: reconnect (capped backoff), resend.
+        // A drained budget dominates everything (including partials):
+        // there is no time left to retry or even to merge usefully.
+        if let Some(d) = opts.deadline {
+            if failures
+                .iter()
+                .any(|(_, e)| matches!(e, Error::DeadlineExceeded { .. }))
+                || (!failures.is_empty() && d.expired())
+            {
+                self.metrics
+                    .deadlines_exceeded
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(d.error());
+            }
+        }
+        // One retry per failed leg — unless the breaker is open, in
+        // which case the leg fails fast with no inline backoff.
         let mut still_down: Vec<(usize, String)> = Vec::new(); // (shard, detail)
         for (i, first_err) in failures {
             let (shard, req) = &reqs[i];
-            let retried = self.links[*shard].connect().and_then(|_| {
-                self.metrics.per_shard[*shard]
-                    .reconnects
-                    .fetch_add(1, Ordering::Relaxed);
-                self.links[*shard].call(req)
-            });
+            let link = &self.links[*shard];
+            let retried = if link.breaker_is_open() {
+                Err(link.fast_fail_err())
+            } else {
+                link.connect()
+                    .and_then(|_| self.verify_link(*shard))
+                    .and_then(|_| {
+                        self.metrics.per_shard[*shard]
+                            .reconnects
+                            .fetch_add(1, Ordering::Relaxed);
+                        link.call(req, opts.deadline)
+                    })
+            };
             match retried {
                 Ok((reply, lat)) => {
                     self.record_call(*shard, lat);
+                    link.record_success();
                     replies[i] = Some(reply);
                 }
                 Err(e) => {
                     self.metrics.per_shard[*shard]
                         .errors
                         .fetch_add(1, Ordering::Relaxed);
+                    if matches!(e, Error::DeadlineExceeded { .. }) {
+                        self.metrics
+                            .deadlines_exceeded
+                            .fetch_add(1, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                    link.record_failure();
                     still_down.push((*shard, format!("{first_err}; retry: {e}")));
                 }
             }
         }
         if !still_down.is_empty() {
             self.metrics.partial_failures.fetch_add(1, Ordering::Relaxed);
-            let detail = still_down
-                .iter()
-                .map(|(s, d)| format!("shard {s}: {d}"))
-                .collect::<Vec<_>>()
-                .join("; ");
-            return Err(Error::ShardUnavailable {
-                shards_ok: shards_total - still_down.len(),
-                shards_total,
-                detail,
-            });
+            let all_legs_down = still_down.len() >= reqs.len();
+            if !opts.allow_partial || all_legs_down {
+                let detail = still_down
+                    .iter()
+                    .map(|(s, d)| format!("shard {s}: {d}"))
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                return Err(Error::ShardUnavailable {
+                    shards_ok: shards_total - still_down.len(),
+                    shards_total,
+                    detail,
+                });
+            }
         }
-        Ok(reqs
-            .iter()
-            .zip(replies)
-            .map(|((shard, _), reply)| (*shard, reply.expect("reply present")))
-            .collect())
+        let missing: Vec<usize> = still_down.iter().map(|(s, _)| *s).collect();
+        Ok(FanOut {
+            replies: reqs
+                .iter()
+                .zip(replies)
+                .filter_map(|((shard, _), reply)| reply.map(|r| (*shard, r)))
+                .collect(),
+            missing,
+        })
     }
 
     fn record_call(&self, shard: usize, lat: Duration) {
@@ -895,6 +1426,20 @@ impl ShardCoordinator {
         let us = lat.as_micros() as u64;
         p.latency_us_sum.fetch_add(us, Ordering::Relaxed);
         p.latency_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+}
+
+impl<F: FaultHook> Drop for ShardCoordinator<F> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.probe.lock().unwrap().take() {
+            // If the probe thread itself holds the last Arc, this drop
+            // runs ON the probe thread — joining ourselves would
+            // deadlock, and the thread exits on the stop flag anyway.
+            if h.thread().id() != thread::current().id() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -914,6 +1459,7 @@ fn parse_neighbors(arr: &[Json]) -> Result<Vec<ShardNeighbor>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::shard::fault::{ActiveFaults, FaultPlan};
     use std::io::Write as _;
     use std::net::TcpListener;
 
@@ -954,30 +1500,42 @@ mod tests {
             backoff_base_ms: 5,
             backoff_cap_ms: 10,
             call_timeout_ms: 2_000,
+            breaker_threshold: 3,
+            probe_interval_ms: 0,
             store: None,
         }
+    }
+
+    fn test_link(addr: &str, cfg: &ShardClientConfig) -> ShardLink<NoFaults> {
+        ShardLink::new(
+            0,
+            addr,
+            cfg,
+            Arc::new(NoFaults),
+            Arc::new(AtomicBool::new(false)),
+        )
     }
 
     #[test]
     fn link_multiplexes_ids_and_reconnects() {
         let (addr, h) = canned_server(2);
         let cfg = test_cfg(&addr);
-        let link = ShardLink::new(0, &addr, &cfg);
+        let link = test_link(&addr, &cfg);
         link.connect().unwrap();
         let ping = Json::obj(vec![("proto", Json::num(2.0)), ("op", Json::str("ping"))]);
         // two requests in flight on one connection
         let a = link.begin(&ping).unwrap();
         let b = link.begin(&ping).unwrap();
         assert_ne!(a.id, b.id);
-        let (ra, _) = link.finish(a).unwrap();
-        let (rb, _) = link.finish(b).unwrap();
+        let (ra, _) = link.finish(a, None).unwrap();
+        let (rb, _) = link.finish(b, None).unwrap();
         assert_eq!(ra.get("ok").and_then(Json::as_bool), Some(true));
         assert_eq!(rb.get("ok").and_then(Json::as_bool), Some(true));
         // server closed the connection after 2 lines: the next call
         // fails, and an explicit reconnect restores service
-        assert!(link.call(&ping).is_err());
+        assert!(link.call(&ping, None).is_err());
         link.connect().unwrap();
-        assert!(link.call(&ping).is_ok());
+        assert!(link.call(&ping, None).is_ok());
         drop(link);
         h.join().unwrap();
     }
@@ -988,9 +1546,110 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         drop(listener); // nothing listens here any more
         let cfg = test_cfg(&addr);
-        let link = ShardLink::new(0, &addr, &cfg);
+        let link = test_link(&addr, &cfg);
         let err = link.connect().unwrap_err();
         assert_eq!(err.code(), "unavailable");
-        assert_eq!(link.call(&Json::Null).unwrap_err().code(), "unavailable");
+        assert_eq!(link.call(&Json::Null, None).unwrap_err().code(), "unavailable");
+    }
+
+    #[test]
+    fn stop_flag_interrupts_connect_backoff() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let mut cfg = test_cfg(&addr);
+        cfg.connect_attempts = 4;
+        cfg.backoff_base_ms = 5_000; // would sleep ~15 s without the fix
+        cfg.backoff_cap_ms = 5_000;
+        let stop = Arc::new(AtomicBool::new(true)); // already shutting down
+        let link = ShardLink::new(0, &addr, &cfg, Arc::new(NoFaults), stop);
+        let t0 = Instant::now();
+        let err = link.connect().unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(1_000),
+            "backoff was not interrupted: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn breaker_opens_at_threshold_and_closes_on_success() {
+        let cfg = test_cfg("127.0.0.1:1");
+        let link = test_link("127.0.0.1:1", &cfg);
+        assert_eq!(link.breaker_state(), "closed");
+        link.record_failure();
+        link.record_failure();
+        assert_eq!(link.breaker_state(), "closed");
+        link.record_failure(); // threshold 3
+        assert!(link.breaker_is_open());
+        assert_eq!(link.breaker_opens.load(Ordering::Relaxed), 1);
+        // probe trial: half-open lets a request through, reopen on fail
+        link.set_half_open();
+        assert_eq!(link.breaker_state(), "half_open");
+        assert!(!link.breaker_is_open());
+        link.reopen();
+        assert!(link.breaker_is_open());
+        // success closes and resets the streak (no double-count of opens)
+        link.record_success();
+        assert_eq!(link.breaker_state(), "closed");
+        link.record_failure();
+        assert_eq!(link.breaker_state(), "closed");
+        assert_eq!(link.breaker_opens.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn injected_refuse_connect_fails_dial_even_with_live_server() {
+        let (addr, h) = canned_server(8);
+        let plan = FaultPlan::from_json(
+            &Json::parse(r#"{"rules":[{"shard":0,"kind":"refuse_connect","from":0,"count":2}]}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let mut cfg = test_cfg(&addr);
+        cfg.connect_attempts = 1; // one dial per connect() call
+        let link = ShardLink::new(
+            0,
+            &addr,
+            &cfg,
+            Arc::new(ActiveFaults::new(plan)),
+            Arc::new(AtomicBool::new(false)),
+        );
+        // attempts 0 and 1 are refused by the plan, attempt 2 connects
+        assert!(link.connect().is_err());
+        assert!(link.connect().is_err());
+        link.connect().unwrap();
+        let ping = Json::obj(vec![("proto", Json::num(2.0)), ("op", Json::str("ping"))]);
+        assert!(link.call(&ping, None).is_ok());
+        drop(link);
+        // the canned server loops twice over incoming(); unblock it
+        let _ = TcpStream::connect(&addr);
+        let _ = h.join();
+    }
+
+    #[test]
+    fn deadline_bounds_link_wait_and_maps_to_typed_error() {
+        // a server that accepts but never replies
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            thread::sleep(Duration::from_millis(400));
+            drop(stream);
+        });
+        let cfg = test_cfg(&addr); // call_timeout 2 s
+        let link = test_link(&addr, &cfg);
+        link.connect().unwrap();
+        let ping = Json::obj(vec![("proto", Json::num(2.0)), ("op", Json::str("ping"))]);
+        let t0 = Instant::now();
+        let err = link
+            .call(&ping, Some(Deadline::in_ms(50)))
+            .unwrap_err();
+        assert_eq!(err.code(), "deadline_exceeded", "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(1_500),
+            "deadline did not shorten the flat call timeout"
+        );
+        h.join().unwrap();
     }
 }

@@ -1,0 +1,464 @@
+//! Deterministic fault injection for the sharded serving path.
+//!
+//! A [`FaultPlan`] is a seeded, serializable schedule of per-shard
+//! faults — refuse-connect, drop-mid-reply, delay-reply, garble-line,
+//! close-after-N — that both ends of a shard link can act out:
+//!
+//! - the front's `ShardLink` consults the hook before dialing a shard
+//!   (connect-class faults), and
+//! - a shard server started with `spdtw shard-serve --fault-plan`
+//!   consults it before writing each reply (reply-class faults), so
+//!   chaos runs exercise real sockets, real reader threads, and the
+//!   real breaker/deadline machinery.
+//!
+//! Injection happens behind the [`FaultHook`] trait.  Production code
+//! is generic over the hook and instantiated with the [`NoFaults`] ZST,
+//! whose methods are trivial `#[inline]` constants — monomorphization
+//! erases the harness entirely from non-chaos builds (the zero-cost
+//! requirement of the fault-tolerance tentpole).
+//!
+//! **Determinism contract:** [`ActiveFaults`] decides every fault from
+//! per-shard *event counters* alone (nth connection attempt, nth reply
+//! written).  No wall clock, no runtime randomness — the seed only
+//! parameterizes [`FaultPlan::generate`].  The same plan against the
+//! same request script therefore reproduces the same fault sequence,
+//! which is what makes the chaos suite's replies assertable.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// One kind of injectable fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Connect-class: the nth connection attempt to the shard is
+    /// refused (the dial fails as if the port were closed).
+    RefuseConnect,
+    /// Connect-class: the nth accepted connection is torn down by the
+    /// server after `replies` replies have been written.
+    CloseAfter { replies: u64 },
+    /// Reply-class: the nth reply is delayed by `ms` milliseconds
+    /// before being written (exercises deadlines and slow-shard legs).
+    DelayReply { ms: u64 },
+    /// Reply-class: the nth reply is replaced by a non-JSON line
+    /// (exercises the reader's corrupt-stream handling).
+    GarbleLine,
+    /// Reply-class: the connection is dropped mid-reply — a partial
+    /// line is written, then the socket closes.
+    DropMidReply,
+}
+
+impl FaultKind {
+    fn name(&self) -> &'static str {
+        match self {
+            FaultKind::RefuseConnect => "refuse_connect",
+            FaultKind::CloseAfter { .. } => "close_after",
+            FaultKind::DelayReply { .. } => "delay_reply",
+            FaultKind::GarbleLine => "garble_line",
+            FaultKind::DropMidReply => "drop_mid_reply",
+        }
+    }
+
+    fn is_connect_class(&self) -> bool {
+        matches!(self, FaultKind::RefuseConnect | FaultKind::CloseAfter { .. })
+    }
+}
+
+/// One scheduled fault: `kind` fires on shard `shard` for the event
+/// counter window `[from, from + count)` (connect attempts for
+/// connect-class kinds, written replies for reply-class kinds).
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub shard: usize,
+    pub kind: FaultKind,
+    /// First event index (0-based) the rule applies to.
+    pub from: u64,
+    /// How many consecutive events it applies to (`u64::MAX` = forever).
+    pub count: u64,
+}
+
+impl FaultRule {
+    fn matches(&self, shard: usize, event: u64) -> bool {
+        self.shard == shard && event >= self.from && event - self.from < self.count
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("shard", Json::num(self.shard as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("from", Json::num(self.from as f64)),
+        ];
+        if self.count != u64::MAX {
+            fields.push(("count", Json::num(self.count as f64)));
+        }
+        match self.kind {
+            FaultKind::CloseAfter { replies } => {
+                fields.push(("replies", Json::num(replies as f64)));
+            }
+            FaultKind::DelayReply { ms } => fields.push(("ms", Json::num(ms as f64))),
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(rule: &Json) -> Result<FaultRule> {
+        let shard = rule.req_usize("shard")?;
+        let from = opt_u64(rule, "from")?.unwrap_or(0);
+        let count = opt_u64(rule, "count")?.unwrap_or(u64::MAX);
+        let kind = match rule.req_str("kind")? {
+            "refuse_connect" => FaultKind::RefuseConnect,
+            "close_after" => FaultKind::CloseAfter {
+                replies: opt_u64(rule, "replies")?.ok_or_else(|| {
+                    Error::config("fault plan: 'close_after' requires 'replies'")
+                })?,
+            },
+            "delay_reply" => FaultKind::DelayReply {
+                ms: opt_u64(rule, "ms")?
+                    .ok_or_else(|| Error::config("fault plan: 'delay_reply' requires 'ms'"))?,
+            },
+            "garble_line" => FaultKind::GarbleLine,
+            "drop_mid_reply" => FaultKind::DropMidReply,
+            other => {
+                return Err(Error::config(format!(
+                    "fault plan: unknown fault kind '{other}' (expected refuse_connect, \
+                     close_after, delay_reply, garble_line or drop_mid_reply)"
+                )))
+            }
+        };
+        Ok(FaultRule {
+            shard,
+            kind,
+            from,
+            count,
+        })
+    }
+}
+
+fn opt_u64(obj: &Json, key: &str) -> Result<Option<u64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let f = v.as_f64().ok_or_else(|| {
+                Error::config(format!("fault plan: '{key}' must be a non-negative integer"))
+            })?;
+            if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > u64::MAX as f64 {
+                return Err(Error::config(format!(
+                    "fault plan: '{key}' must be a non-negative integer"
+                )));
+            }
+            Ok(Some(f as u64))
+        }
+    }
+}
+
+/// A serializable schedule of per-shard faults.
+///
+/// Wire format (one JSON object, `spdtw shard-serve --fault-plan FILE`):
+///
+/// ```json
+/// {"version": 1, "seed": 42, "rules": [
+///   {"shard": 0, "kind": "refuse_connect", "from": 0, "count": 2},
+///   {"shard": 1, "kind": "delay_reply", "ms": 150},
+///   {"shard": 0, "kind": "garble_line", "from": 3, "count": 1},
+///   {"shard": 0, "kind": "close_after", "replies": 5}
+/// ]}
+/// ```
+///
+/// `from` defaults to 0 and `count` to "forever"; the first matching
+/// rule in plan order wins when several cover the same event.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// The seed the plan was generated from (0 for hand-written plans);
+    /// recorded so a chaos log names its plan reproducibly.
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Generate a pseudo-random plan: `n_rules` rules over `shards`
+    /// shards, fully determined by `seed`.
+    pub fn generate(seed: u64, shards: usize, n_rules: usize) -> FaultPlan {
+        let mut rng = Pcg64::new(seed);
+        let shards = shards.max(1);
+        let rules = (0..n_rules)
+            .map(|_| {
+                let shard = rng.below(shards);
+                let from = rng.below(4) as u64;
+                let count = 1 + rng.below(3) as u64;
+                let kind = match rng.below(5) {
+                    0 => FaultKind::RefuseConnect,
+                    1 => FaultKind::CloseAfter {
+                        replies: 1 + rng.below(5) as u64,
+                    },
+                    2 => FaultKind::DelayReply {
+                        ms: 50 + rng.below(150) as u64,
+                    },
+                    3 => FaultKind::GarbleLine,
+                    _ => FaultKind::DropMidReply,
+                };
+                FaultRule {
+                    shard,
+                    kind,
+                    from,
+                    count,
+                }
+            })
+            .collect();
+        FaultPlan { seed, rules }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("seed", Json::num(self.seed as f64)),
+            ("rules", Json::arr(self.rules.iter().map(|r| r.to_json()))),
+        ])
+    }
+
+    pub fn from_json(plan: &Json) -> Result<FaultPlan> {
+        if let Some(v) = plan.get("version") {
+            if v.as_usize() != Some(1) {
+                return Err(Error::config("fault plan: unsupported version (expected 1)"));
+            }
+        }
+        let seed = opt_u64(plan, "seed")?.unwrap_or(0);
+        let rules = plan
+            .req_arr("rules")?
+            .iter()
+            .map(FaultRule::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Parse a plan from a JSON file on disk.
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::config(format!("fault plan {}: {e}", path.display()))
+        })?;
+        FaultPlan::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize to the wire format (deterministic field order).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")?;
+        Ok(())
+    }
+
+    /// Highest shard id any rule names (counter-array sizing).
+    fn max_shard(&self) -> usize {
+        self.rules.iter().map(|r| r.shard).max().unwrap_or(0)
+    }
+}
+
+/// Fault decision for one connection attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnectFault {
+    None,
+    /// Fail the dial as if the shard refused the connection.
+    Refuse,
+    /// Accept, but tear the connection down after N replies.
+    CloseAfterReplies(u64),
+}
+
+/// Fault decision for one reply about to be written.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplyFault {
+    None,
+    /// Sleep this long before writing the reply.
+    Delay(Duration),
+    /// Write a non-JSON line instead of the reply.
+    Garble,
+    /// Write a partial reply line, then drop the connection.
+    DropConnection,
+}
+
+/// The injection seam.  Production code is generic over this trait and
+/// monomorphized with [`NoFaults`], so the default bodies below compile
+/// to nothing on the non-chaos path.
+pub trait FaultHook: Send + Sync + 'static {
+    /// Called once per connection attempt to `shard`.
+    #[inline]
+    fn connect_fault(&self, _shard: usize) -> ConnectFault {
+        ConnectFault::None
+    }
+
+    /// Called once per reply about to be written for `shard`.
+    #[inline]
+    fn reply_fault(&self, _shard: usize) -> ReplyFault {
+        ReplyFault::None
+    }
+}
+
+/// The production hook: no faults, ever.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoFaults;
+
+impl FaultHook for NoFaults {}
+
+/// A [`FaultPlan`] armed with per-shard event counters — the live,
+/// thread-safe [`FaultHook`] a chaos run injects.
+pub struct ActiveFaults {
+    plan: FaultPlan,
+    connects: Vec<AtomicU64>,
+    replies: Vec<AtomicU64>,
+}
+
+impl ActiveFaults {
+    pub fn new(plan: FaultPlan) -> ActiveFaults {
+        let n = plan.max_shard() + 1;
+        ActiveFaults {
+            plan,
+            connects: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            replies: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn first_match(&self, shard: usize, event: u64, connect_class: bool) -> Option<FaultKind> {
+        self.plan
+            .rules
+            .iter()
+            .find(|r| r.kind.is_connect_class() == connect_class && r.matches(shard, event))
+            .map(|r| r.kind)
+    }
+}
+
+impl FaultHook for ActiveFaults {
+    fn connect_fault(&self, shard: usize) -> ConnectFault {
+        let Some(counter) = self.connects.get(shard) else {
+            return ConnectFault::None;
+        };
+        let event = counter.fetch_add(1, Ordering::Relaxed);
+        match self.first_match(shard, event, true) {
+            Some(FaultKind::RefuseConnect) => ConnectFault::Refuse,
+            Some(FaultKind::CloseAfter { replies }) => ConnectFault::CloseAfterReplies(replies),
+            _ => ConnectFault::None,
+        }
+    }
+
+    fn reply_fault(&self, shard: usize) -> ReplyFault {
+        let Some(counter) = self.replies.get(shard) else {
+            return ReplyFault::None;
+        };
+        let event = counter.fetch_add(1, Ordering::Relaxed);
+        match self.first_match(shard, event, false) {
+            Some(FaultKind::DelayReply { ms }) => ReplyFault::Delay(Duration::from_millis(ms)),
+            Some(FaultKind::GarbleLine) => ReplyFault::Garble,
+            Some(FaultKind::DropMidReply) => ReplyFault::DropConnection,
+            _ => ReplyFault::None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_json_roundtrip_is_exact() {
+        let plan = FaultPlan {
+            seed: 42,
+            rules: vec![
+                FaultRule {
+                    shard: 0,
+                    kind: FaultKind::RefuseConnect,
+                    from: 0,
+                    count: 2,
+                },
+                FaultRule {
+                    shard: 1,
+                    kind: FaultKind::DelayReply { ms: 150 },
+                    from: 0,
+                    count: u64::MAX,
+                },
+                FaultRule {
+                    shard: 0,
+                    kind: FaultKind::CloseAfter { replies: 5 },
+                    from: 3,
+                    count: 1,
+                },
+            ],
+        };
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.rules.len(), 3);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn malformed_plans_are_config_errors() {
+        for bad in [
+            r#"{"rules":[{"shard":0,"kind":"mystery"}]}"#,
+            r#"{"rules":[{"shard":0,"kind":"delay_reply"}]}"#,
+            r#"{"rules":[{"shard":0,"kind":"close_after"}]}"#,
+            r#"{"version":9,"rules":[]}"#,
+            r#"{"rules":[{"shard":0,"kind":"refuse_connect","from":-1}]}"#,
+        ] {
+            let err = FaultPlan::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code(), "bad_request", "{bad}");
+        }
+    }
+
+    #[test]
+    fn counters_drive_fault_windows_deterministically() {
+        let plan = FaultPlan::from_json(
+            &Json::parse(
+                r#"{"rules":[
+                    {"shard":0,"kind":"refuse_connect","from":0,"count":2},
+                    {"shard":0,"kind":"garble_line","from":1,"count":1},
+                    {"shard":1,"kind":"delay_reply","ms":30}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let hook = ActiveFaults::new(plan);
+
+        // connect attempts 0 and 1 refused, 2+ clean
+        assert_eq!(hook.connect_fault(0), ConnectFault::Refuse);
+        assert_eq!(hook.connect_fault(0), ConnectFault::Refuse);
+        assert_eq!(hook.connect_fault(0), ConnectFault::None);
+
+        // shard 0 replies: only event 1 garbled
+        assert_eq!(hook.reply_fault(0), ReplyFault::None);
+        assert_eq!(hook.reply_fault(0), ReplyFault::Garble);
+        assert_eq!(hook.reply_fault(0), ReplyFault::None);
+
+        // shard 1: every reply delayed (count defaults to forever)
+        for _ in 0..4 {
+            assert_eq!(
+                hook.reply_fault(1),
+                ReplyFault::Delay(Duration::from_millis(30))
+            );
+        }
+
+        // shards beyond the plan never fault
+        assert_eq!(hook.connect_fault(7), ConnectFault::None);
+        assert_eq!(hook.reply_fault(7), ReplyFault::None);
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic() {
+        let a = FaultPlan::generate(0xc4a0_5001, 3, 8);
+        let b = FaultPlan::generate(0xc4a0_5001, 3, 8);
+        let c = FaultPlan::generate(0xc4a0_5002, 3, 8);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+        assert_eq!(a.rules.len(), 8);
+        assert!(a.rules.iter().all(|r| r.shard < 3));
+    }
+
+    #[test]
+    fn no_faults_hook_is_inert() {
+        assert_eq!(NoFaults.connect_fault(0), ConnectFault::None);
+        assert_eq!(NoFaults.reply_fault(0), ReplyFault::None);
+    }
+}

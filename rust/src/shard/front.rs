@@ -9,6 +9,20 @@
 //! *global* index space), plus fan-out fields:
 //! `shards_ok`/`shards_total` on every search reply, and on the typed
 //! `unavailable` error reply when a shard stays down.
+//!
+//! Fault-tolerance surface (all typed, never silent):
+//!
+//! - `deadline_ms` on any request bounds it end to end; the remaining
+//!   budget is forwarded to every shard leg and exhaustion returns the
+//!   typed `deadline_exceeded` error code.
+//! - `allow_partial: true` on `search`/`batch_search` opts in to the
+//!   exact merge over responsive shards when some are down; such
+//!   replies carry a `partial: {shards_ok, shards_total, missing}`
+//!   block naming the absent shards.  The default stays
+//!   all-or-typed-error.
+//! - `info` reports each link's circuit-breaker state alongside
+//!   liveness; `metrics` carries the full breaker/probe/partial
+//!   counters.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,8 +30,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 
-use super::coordinator::{ShardCoordinator, ShardRegistration, ShardedSearch};
-use crate::coordinator::server::{attach_id, check_finite, error_reply, parse_cascade};
+use super::coordinator::{QueryOpts, ShardCoordinator, ShardRegistration, ShardedSearch};
+use super::fault::FaultHook;
+use crate::coordinator::server::{
+    attach_id, check_finite, error_reply, parse_cascade, parse_deadline,
+};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -32,7 +49,12 @@ pub struct FrontServer {
 
 impl FrontServer {
     /// Bind and serve on `addr` (use port 0 for an ephemeral port).
-    pub fn start(shards: Arc<ShardCoordinator>, addr: &str) -> Result<FrontServer> {
+    /// Generic over the coordinator's fault hook so chaos fronts serve
+    /// through the exact same code path as production ones.
+    pub fn start<F: FaultHook>(
+        shards: Arc<ShardCoordinator<F>>,
+        addr: &str,
+    ) -> Result<FrontServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -84,7 +106,11 @@ impl Drop for FrontServer {
     }
 }
 
-fn handle_conn(stream: TcpStream, sc: &ShardCoordinator, stop: &AtomicBool) -> Result<()> {
+fn handle_conn<F: FaultHook>(
+    stream: TcpStream,
+    sc: &ShardCoordinator<F>,
+    stop: &AtomicBool,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -109,7 +135,11 @@ fn handle_conn(stream: TcpStream, sc: &ShardCoordinator, stop: &AtomicBool) -> R
 
 /// Parse one request line and serve it — same envelope rules as the
 /// single-server dispatch (`proto` 1/2, `id` echo, typed error codes).
-pub(crate) fn dispatch_front(line: &str, sc: &ShardCoordinator, stop: &AtomicBool) -> Json {
+pub(crate) fn dispatch_front<F: FaultHook>(
+    line: &str,
+    sc: &ShardCoordinator<F>,
+    stop: &AtomicBool,
+) -> Json {
     let req = match Json::parse(line) {
         Ok(r) => r,
         Err(e) => return error_reply(&e, None),
@@ -168,7 +198,7 @@ fn parse_values(req: &Json, field: &str) -> Result<Vec<f64>> {
 }
 
 /// The `index` parameter: a front key (number) or a registered name.
-fn front_index_key(sc: &ShardCoordinator, req: &Json) -> Result<u64> {
+fn front_index_key<F: FaultHook>(sc: &ShardCoordinator<F>, req: &Json) -> Result<u64> {
     match req.get("index") {
         Some(Json::Num(_)) => Ok(req.req_usize("index")? as u64),
         Some(Json::Str(name)) => sc.key_by_name(name).ok_or(Error::NotFound {
@@ -183,6 +213,28 @@ fn front_index_key(sc: &ShardCoordinator, req: &Json) -> Result<u64> {
 fn cascade_str(req: &Json) -> Result<Option<&str>> {
     parse_cascade(req)?; // fail fast on the front, same error as a shard
     Ok(req.get("cascade").and_then(Json::as_str))
+}
+
+/// Strict opt-in flag: anything but a boolean is a `bad_request` (a
+/// truthy-string accident must never silently enable degradation).
+fn parse_allow_partial(req: &Json) -> Result<bool> {
+    match req.get("allow_partial") {
+        None => Ok(false),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(Error::config("'allow_partial' must be a boolean")),
+    }
+}
+
+/// The typed degradation flag on an opt-in partial reply.
+fn partial_block(out: &ShardedSearch) -> Json {
+    Json::obj(vec![
+        ("shards_ok", Json::num(out.shards_ok as f64)),
+        ("shards_total", Json::num(out.shards_total as f64)),
+        (
+            "missing",
+            Json::arr(out.missing.iter().map(|&s| Json::num(s as f64))),
+        ),
+    ])
 }
 
 fn search_reply_fields(out: &ShardedSearch) -> Vec<(&'static str, Json)> {
@@ -201,8 +253,20 @@ fn search_reply_fields(out: &ShardedSearch) -> Vec<(&'static str, Json)> {
     ]
 }
 
-fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Result<Json> {
+fn handle_front_op<F: FaultHook>(
+    req: &Json,
+    sc: &ShardCoordinator<F>,
+    stop: &AtomicBool,
+) -> Result<Json> {
     let op = req.req_str("op")?;
+    // Pre-dispatch deadline check: a request that arrives with its
+    // budget already drained is rejected before any fan-out work.
+    let deadline = parse_deadline(req)?;
+    if let Some(d) = deadline {
+        if d.expired() {
+            return Err(d.error());
+        }
+    }
     match op {
         "ping" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -211,12 +275,16 @@ fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Resu
         ])),
         "info" => {
             let up = sc.links_up();
-            let shards = Json::arr(sc.addrs().iter().zip(&up).map(|(addr, up)| {
-                Json::obj(vec![
-                    ("addr", Json::str(addr.clone())),
-                    ("up", Json::Bool(*up)),
-                ])
-            }));
+            let breakers = sc.breaker_states();
+            let shards = Json::arr(sc.addrs().iter().zip(up.iter().zip(&breakers)).map(
+                |(addr, (up, breaker))| {
+                    Json::obj(vec![
+                        ("addr", Json::str(addr.clone())),
+                        ("up", Json::Bool(*up)),
+                        ("breaker", Json::str(*breaker)),
+                    ])
+                },
+            ));
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("role", Json::str("front")),
@@ -267,9 +335,16 @@ fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Resu
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
             let x = parse_values(req, "x")?;
             let cascade = cascade_str(req)?;
-            let out = sc.search(key, &x, k, cascade)?;
+            let opts = QueryOpts {
+                allow_partial: parse_allow_partial(req)?,
+                deadline,
+            };
+            let out = sc.search_opts(key, &x, k, cascade, opts)?;
             let mut fields = vec![("ok", Json::Bool(true))];
             fields.extend(search_reply_fields(&out));
+            if !out.missing.is_empty() {
+                fields.push(("partial", partial_block(&out)));
+            }
             Ok(Json::obj(fields))
         }
         "batch_search" => {
@@ -277,19 +352,29 @@ fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Resu
             let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
             let xs = parse_rows(req, "xs")?;
             let cascade = cascade_str(req)?;
-            let outs = sc.batch_search(key, &xs, k, cascade)?;
+            let opts = QueryOpts {
+                allow_partial: parse_allow_partial(req)?,
+                deadline,
+            };
+            let outs = sc.batch_search_opts(key, &xs, k, cascade, opts)?;
             let shards_ok = outs.iter().map(|o| o.shards_ok).min().unwrap_or(0);
             let results = Json::arr(
                 outs.iter()
                     .map(|out| Json::obj(search_reply_fields(out))),
             );
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("queries", Json::num(outs.len() as f64)),
                 ("results", results),
                 ("shards_ok", Json::num(shards_ok as f64)),
                 ("shards_total", Json::num(sc.shards_total() as f64)),
-            ]))
+            ];
+            // the whole batch shares one leg per shard, so one missing
+            // set flags every query's degradation at the top level too
+            if let Some(out) = outs.iter().find(|o| !o.missing.is_empty()) {
+                fields.push(("partial", partial_block(out)));
+            }
+            Ok(Json::obj(fields))
         }
         "metrics" => {
             let mut reply = sc.metrics().to_json();
@@ -299,6 +384,9 @@ fn handle_front_op(req: &Json, sc: &ShardCoordinator, stop: &AtomicBool) -> Resu
             Ok(reply)
         }
         "shutdown" => {
+            // raise the coordinator's stop flag FIRST so in-flight
+            // reconnect backoffs unblock before the accept loop stops
+            sc.begin_shutdown();
             stop.store(true, Ordering::Relaxed);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }

@@ -56,26 +56,49 @@
 //!
 //! ## Degradation
 //!
-//! A dead shard never yields a silently truncated answer.  The fan-out
-//! retries the link once with capped-backoff reconnection; if the shard
-//! stays down, the query fails with the typed
-//! [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable)
-//! partial-result error (wire code `unavailable`, carrying
-//! `shards_ok`/`shards_total`).
+//! A dead shard never yields a silently truncated answer — degraded
+//! service is always *typed* and *opt-in*:
+//!
+//! * **Default**: the fan-out retries the link once with
+//!   capped-backoff reconnection; if the shard stays down, the query
+//!   fails with the typed
+//!   [`Error::ShardUnavailable`](crate::error::Error::ShardUnavailable)
+//!   partial-result error (wire code `unavailable`, carrying
+//!   `shards_ok`/`shards_total`).
+//! * **Opt-in partial results**: `allow_partial: true` on
+//!   `search`/`batch_search` instead merges the *exact* top-k over the
+//!   responsive shards and flags the reply with a
+//!   `partial: {shards_ok, shards_total, missing}` block naming the
+//!   absent shards — an exact answer over a declared subset, never an
+//!   undeclared one.
+//! * **Circuit breakers**: after `breaker_threshold` consecutive
+//!   failures a link opens and requests fail fast (no inline connect
+//!   backoff); a background probe thread re-checks open links every
+//!   `probe_interval_ms` and closes them on a verified reconnect.
+//! * **Deadlines**: a client `deadline_ms` budget propagates
+//!   front → shard with the *remaining* budget per leg; exhaustion
+//!   anywhere returns the typed `deadline_exceeded` code.
+//! * **Fault injection**: the [`fault`] module injects deterministic,
+//!   seed-reproducible faults (refused connects, delayed / garbled /
+//!   torn replies, capped connections) at both ends of the shard link
+//!   so every one of these paths is exercised by tests and the chaos
+//!   CI job rather than waited for in production.
 //!
 //! Submodules: [`layout`] (split/assign + on-disk shard manifest),
 //! [`coordinator`] (persistent multiplexed links, fan-out, merge,
-//! metrics), [`front`] (TCP front-end speaking the v1/v2 line
-//! protocol).
+//! breakers, metrics), [`front`] (TCP front-end speaking the v1/v2 line
+//! protocol), [`fault`] (deterministic fault plans + injection hooks).
 
 pub mod coordinator;
+pub mod fault;
 pub mod front;
 pub mod layout;
 
 pub use coordinator::{
-    ShardClientConfig, ShardCoordinator, ShardMetricsSnapshot, ShardRegistration, ShardedIndex,
-    ShardedSearch,
+    QueryOpts, ShardClientConfig, ShardCoordinator, ShardMetricsSnapshot, ShardRegistration,
+    ShardedIndex, ShardedSearch,
 };
+pub use fault::{ActiveFaults, FaultHook, FaultKind, FaultPlan, FaultRule, NoFaults};
 pub use front::FrontServer;
 pub use layout::{ShardEntry, ShardLayout, ShardManifest};
 

@@ -1,0 +1,606 @@
+//! Deterministic chaos suite for the fault-tolerant sharded serving
+//! path, driven by seeded [`FaultPlan`]s instead of wall-clock luck:
+//!
+//! 1. degraded answers are *typed and opt-in* — a dead shard yields the
+//!    `unavailable` error by default and an exact, explicitly-flagged
+//!    `partial` merge only under `allow_partial: true`, never an
+//!    unflagged subset;
+//! 2. a link that fails `breaker_threshold` consecutive times opens its
+//!    circuit breaker and fails fast (provably without dialing), and a
+//!    health probe closes it again once the shard recovers;
+//! 3. a client `deadline_ms` budget beats a slow shard leg with the
+//!    typed `deadline_exceeded` code, end to end over the wire;
+//! 4. the same plan + seed against the same request script reproduces
+//!    the same reply sequence;
+//! 5. single transient faults (garbled line, torn reply) self-heal
+//!    through the inline reconnect-retry with no degradation at all.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spdtw::config::{CoordinatorConfig, ShardRole};
+use spdtw::coordinator::request::Deadline;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::data::{LabeledSet, TimeSeries};
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::shard::{
+    ActiveFaults, FaultPlan, FrontServer, QueryOpts, ShardClientConfig, ShardCoordinator,
+    ShardNeighbor, ShardRegistration,
+};
+use spdtw::util::json::Json;
+use spdtw::util::rng::Pcg64;
+
+fn shard_cfg(shard_id: usize, shards_total: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shard: Some(ShardRole {
+            shard_id,
+            shards_total,
+        }),
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+fn start_plain_shard(shard_id: usize, shards_total: usize) -> Server {
+    let coord = Arc::new(Coordinator::start(shard_cfg(shard_id, shards_total), None).unwrap());
+    Server::start(coord, "127.0.0.1:0").unwrap()
+}
+
+/// A shard server acting out a fault plan — the same wiring as
+/// `spdtw shard-serve --fault-plan FILE`.
+fn start_faulted_shard(shard_id: usize, shards_total: usize, plan_json: &str) -> Server {
+    let plan = FaultPlan::from_json(&Json::parse(plan_json).unwrap()).unwrap();
+    let coord = Arc::new(Coordinator::start(shard_cfg(shard_id, shards_total), None).unwrap());
+    Server::start_with_faults(coord, "127.0.0.1:0", Arc::new(ActiveFaults::new(plan))).unwrap()
+}
+
+/// `connect_attempts: 1` keeps the per-shard connect-event accounting
+/// exact (one dial per reconnect), which is what lets these tests prove
+/// breaker/probe behavior from fault-window arithmetic alone.
+fn fleet_cfg(servers: &[Server], breaker_threshold: u32) -> ShardClientConfig {
+    ShardClientConfig {
+        addrs: servers.iter().map(|s| s.addr.to_string()).collect(),
+        connect_attempts: 1,
+        backoff_base_ms: 5,
+        backoff_cap_ms: 20,
+        call_timeout_ms: 2_000,
+        breaker_threshold,
+        probe_interval_ms: 0, // probes driven manually via probe_once()
+        store: None,
+    }
+}
+
+fn random_series(rng: &mut Pcg64, n: usize, t: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..t).map(|_| rng.range(-2.0, 2.0)).collect())
+        .collect()
+}
+
+fn labeled(series: &[Vec<f64>], labels: &[usize]) -> LabeledSet {
+    LabeledSet::new(
+        series
+            .iter()
+            .zip(labels)
+            .map(|(v, &l)| TimeSeries::new(l, v.clone()))
+            .collect(),
+    )
+}
+
+/// Reference engine over one shard's slice of the corpus (round-robin:
+/// global id `g` lives on shard `g % shards_total`).
+fn sub_engine(series: &[Vec<f64>], labels: &[usize], part: &[usize], band: usize) -> SearchEngine {
+    let s: Vec<Vec<f64>> = part.iter().map(|&g| series[g].clone()).collect();
+    let l: Vec<usize> = part.iter().map(|&g| labels[g]).collect();
+    SearchEngine::new(
+        Arc::new(Index::build(&labeled(&s, &l), band, 1)),
+        Cascade::default(),
+    )
+}
+
+/// The engine's exact top-k remapped to global index space — what a
+/// partial merge over exactly this shard must return, bit for bit.
+fn expect_list(engine: &SearchEngine, part: &[usize], query: &[f64], k: usize) -> Vec<ShardNeighbor> {
+    engine
+        .knn_values(query, k)
+        .neighbors
+        .iter()
+        .map(|nb| ShardNeighbor {
+            dist: nb.dist,
+            label: nb.label,
+            global_idx: part[nb.train_idx],
+        })
+        .collect()
+}
+
+fn assert_neighbors_eq(got: &[ShardNeighbor], want: &[ShardNeighbor], ctx: &dyn std::fmt::Display) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "{ctx}");
+        assert_eq!(g.global_idx, w.global_idx, "{ctx}");
+        assert_eq!(g.label, w.label, "{ctx}");
+    }
+}
+
+fn register_corpus(
+    sc: &ShardCoordinator,
+    series: &[Vec<f64>],
+    labels: &[usize],
+    band: usize,
+) -> u64 {
+    sc.register(&ShardRegistration {
+        name: None,
+        series: series.to_vec(),
+        labels: labels.to_vec(),
+        band: Some(band),
+        measure: None,
+    })
+    .unwrap()
+    .key
+}
+
+fn partial_opts() -> QueryOpts {
+    QueryOpts {
+        allow_partial: true,
+        deadline: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. opt-in partial results: exact over survivors, always flagged
+// ---------------------------------------------------------------------------
+
+/// With one shard dead, the default contract stays the typed
+/// `unavailable` error; `allow_partial: true` instead returns the exact
+/// merge over the surviving shard — bit-identical to an engine built on
+/// that shard's slice alone — flagged with `missing`/`shards_ok` on the
+/// library API and a `partial` block on the wire.  Hammering the front
+/// never produces an unflagged subset.
+#[test]
+fn partial_results_are_exact_flagged_and_opt_in() {
+    let mut servers: Vec<Server> = (0..2).map(|i| start_plain_shard(i, 2)).collect();
+    let sc = ShardCoordinator::connect(fleet_cfg(&servers, 100)).unwrap();
+
+    let mut rng = Pcg64::new(0xfa17_0001);
+    let (n, t, band, k) = (10usize, 6usize, 1usize, 3usize);
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+    let key = register_corpus(&sc, &series, &labels, band);
+
+    // round-robin layout: shard 0 survives with global ids 0, 2, 4, …
+    let part0: Vec<usize> = (0..n).filter(|g| g % 2 == 0).collect();
+    let survivor = sub_engine(&series, &labels, &part0, band);
+
+    // kill shard 1: wire shutdown, then the server (and its port) go away
+    let s1 = servers.pop().unwrap();
+    let mut killer = Client::connect(&s1.addr).unwrap();
+    let r = killer.call(&Json::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    drop(s1);
+
+    let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+
+    // default: typed unavailable, no neighbor list at all
+    let err = sc.search(key, &query, k, None).unwrap_err();
+    assert_eq!(err.code(), "unavailable");
+
+    // opt-in: exact over the survivor, flagged with the missing shard
+    let out = sc.search_opts(key, &query, k, None, partial_opts()).unwrap();
+    assert_eq!(out.missing, vec![1]);
+    assert_eq!(out.shards_ok, 1);
+    assert_eq!(out.shards_total, 2);
+    let want = expect_list(&survivor, &part0, &query, k);
+    assert_neighbors_eq(&out.neighbors, &want, &"library partial search");
+
+    // batch: one dead leg is missing from every query, each still exact
+    let queries: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..t).map(|_| rng.range(-2.0, 2.0)).collect())
+        .collect();
+    let outs = sc
+        .batch_search_opts(key, &queries, k, None, partial_opts())
+        .unwrap();
+    assert_eq!(outs.len(), queries.len());
+    for (q, out) in queries.iter().zip(&outs) {
+        assert_eq!(out.missing, vec![1]);
+        assert_eq!(out.shards_ok, 1);
+        let want = expect_list(&survivor, &part0, q, k);
+        assert_neighbors_eq(&out.neighbors, &want, &"library partial batch");
+    }
+
+    // the same contract over the wire through the front
+    let front = FrontServer::start(Arc::clone(&sc), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+    let search_req = |allow: Option<Json>| {
+        let mut fields = vec![
+            ("op", Json::str("search")),
+            ("index", Json::num(key as f64)),
+            ("k", Json::num(k as f64)),
+            ("x", Json::arr(query.iter().copied().map(Json::num))),
+        ];
+        if let Some(a) = allow {
+            fields.push(("allow_partial", a));
+        }
+        Json::obj(fields)
+    };
+
+    // allow_partial is strictly boolean: anything else is bad_request
+    let reply = client.call(&search_req(Some(Json::str("yes")))).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+    assert_eq!(reply.req_str("code").unwrap(), "bad_request");
+
+    // hammer the front: every reply is either a typed error or an exact,
+    // explicitly-flagged partial — never an unflagged subset
+    let want = expect_list(&survivor, &part0, &query, k);
+    for round in 0..6 {
+        let allow = round % 2 == 0;
+        let reply = client
+            .call(&search_req(allow.then_some(Json::Bool(true))))
+            .unwrap();
+        if allow {
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+            let partial = reply.get("partial").expect("partial block must be present");
+            assert_eq!(partial.req_usize("shards_ok").unwrap(), 1);
+            assert_eq!(partial.req_usize("shards_total").unwrap(), 2);
+            let missing: Vec<usize> = partial
+                .req_arr("missing")
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            assert_eq!(missing, vec![1]);
+            let ns = reply.req_arr("neighbors").unwrap();
+            assert_eq!(ns.len(), want.len(), "round {round}");
+            for (j, w) in ns.iter().zip(&want) {
+                assert_eq!(j.req_f64("dist").unwrap().to_bits(), w.dist.to_bits());
+                assert_eq!(j.req_usize("idx").unwrap(), w.global_idx);
+            }
+        } else {
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+            assert_eq!(reply.req_str("code").unwrap(), "unavailable");
+            assert!(reply.get("neighbors").is_none(), "{reply:?}");
+        }
+    }
+
+    // wire batch: per-query results plus one top-level partial block
+    let breq = Json::obj(vec![
+        ("op", Json::str("batch_search")),
+        ("index", Json::num(key as f64)),
+        ("k", Json::num(k as f64)),
+        (
+            "xs",
+            Json::arr(
+                queries
+                    .iter()
+                    .map(|q| Json::arr(q.iter().copied().map(Json::num))),
+            ),
+        ),
+        ("allow_partial", Json::Bool(true)),
+    ]);
+    let reply = client.call(&breq).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+    assert_eq!(reply.req_arr("results").unwrap().len(), queries.len());
+    assert_eq!(reply.req_usize("shards_ok").unwrap(), 1);
+    let partial = reply.get("partial").expect("batch partial block");
+    assert_eq!(partial.req_usize("shards_ok").unwrap(), 1);
+
+    let snap = sc.metrics();
+    assert!(snap.partial_replies >= 2, "{}", snap.report());
+    assert!(snap.partial_failures >= 1, "{}", snap.report());
+}
+
+// ---------------------------------------------------------------------------
+// 2. circuit breaker: open after K failures, fail fast, probe recovery
+// ---------------------------------------------------------------------------
+
+/// Shard 1 acts a plan that (a) closes the initial connection after the
+/// two setup replies, then (b) refuses exactly the next two dials.  With
+/// `breaker_threshold: 2` the first search burns both failures and opens
+/// the breaker.  The refuse window is sized so that the post-open
+/// searches *provably* never dial: if they did, they would consume the
+/// window and the FIRST probe would already recover the link — instead
+/// probe #1 must fail (refused) and probe #2 must succeed, which the
+/// test asserts.  After recovery the merge is full and exact again.
+#[test]
+fn breaker_opens_fails_fast_and_probe_recovers() {
+    let plan = r#"{"seed": 11, "rules": [
+        {"shard": 1, "kind": "close_after", "replies": 2, "from": 0, "count": 1},
+        {"shard": 1, "kind": "refuse_connect", "from": 1, "count": 2}
+    ]}"#;
+    let servers = vec![start_plain_shard(0, 2), start_faulted_shard(1, 2, plan)];
+    let sc = ShardCoordinator::connect(fleet_cfg(&servers, 2)).unwrap();
+
+    let mut rng = Pcg64::new(0xfa17_0002);
+    let (n, t, band, k) = (8usize, 6usize, 1usize, 2usize);
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+    // connect event 0 (close_after 2): verify = reply 1, register = reply
+    // 2, then the server tears the connection down
+    let key = register_corpus(&sc, &series, &labels, band);
+    // let the link's reader thread observe the close before searching
+    std::thread::sleep(Duration::from_millis(50));
+
+    let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+
+    // search 1: dead link (failure 1), retry dial hits the refuse window
+    // (connect event 1, failure 2) -> breaker opens
+    let err = sc.search(key, &query, k, None).unwrap_err();
+    assert_eq!(err.code(), "unavailable");
+    assert_eq!(sc.breaker_states(), vec!["closed", "open"]);
+    let snap = sc.metrics();
+    assert_eq!(snap.shards[1].breaker, "open", "{}", snap.report());
+    assert_eq!(snap.shards[1].breaker_opens, 1);
+
+    // search 2: fails fast through the open breaker (no dial — proven
+    // below by the probe sequence), still the typed error
+    let err = sc.search(key, &query, k, None).unwrap_err();
+    assert_eq!(err.code(), "unavailable");
+    assert!(err.to_string().contains("failing fast"), "{err}");
+
+    // partial results compose with the open breaker: exact over shard 0
+    let part0: Vec<usize> = (0..n).filter(|g| g % 2 == 0).collect();
+    let survivor = sub_engine(&series, &labels, &part0, band);
+    let out = sc.search_opts(key, &query, k, None, partial_opts()).unwrap();
+    assert_eq!(out.missing, vec![1]);
+    let want = expect_list(&survivor, &part0, &query, k);
+    assert_neighbors_eq(&out.neighbors, &want, &"partial through open breaker");
+
+    // probe #1 consumes the last refused dial (connect event 2): the
+    // breaker must stay open.  Had any fast-failed search dialed, the
+    // window would already be spent and this probe would close it.
+    sc.probe_once();
+    assert_eq!(sc.breaker_states(), vec!["closed", "open"]);
+    let snap = sc.metrics();
+    assert_eq!(snap.shards[1].probes, 1);
+    assert_eq!(snap.shards[1].breaker_opens, 1); // reopen is not a new open
+
+    // probe #2 (connect event 3, outside every window) verifies the
+    // shard and closes the breaker
+    sc.probe_once();
+    assert_eq!(sc.breaker_states(), vec!["closed", "closed"]);
+    let snap = sc.metrics();
+    assert_eq!(snap.shards[1].probes, 2);
+    assert!(snap.shards[1].reconnects >= 1);
+
+    // recovered: full fan-out, exact against the union corpus
+    let single = SearchEngine::new(
+        Arc::new(Index::build(&labeled(&series, &labels), band, 2)),
+        Cascade::default(),
+    );
+    let out = sc.search(key, &query, k, None).unwrap();
+    assert_eq!(out.shards_ok, 2);
+    assert!(out.missing.is_empty());
+    let want = single.knn_values(&query, k).neighbors;
+    assert_eq!(out.neighbors.len(), want.len());
+    for (g, w) in out.neighbors.iter().zip(&want) {
+        assert_eq!(g.dist.to_bits(), w.dist.to_bits());
+        assert_eq!(g.global_idx, w.train_idx);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. deadline propagation: slow shard vs client budget
+// ---------------------------------------------------------------------------
+
+/// Shard 1 delays every post-setup reply by 400 ms.  A 100 ms client
+/// budget must surface as the typed `deadline_exceeded` code — on the
+/// library API, under `allow_partial` (the deadline dominates), for an
+/// already-expired budget, and over the wire with the budget echoed in
+/// `budget_ms`.  Deadline misses say nothing about shard health, so the
+/// breaker stays closed throughout.
+#[test]
+fn deadline_beats_slow_shard_with_typed_code() {
+    let plan = r#"{"seed": 13, "rules": [
+        {"shard": 1, "kind": "delay_reply", "ms": 400, "from": 2}
+    ]}"#;
+    let servers = vec![start_plain_shard(0, 2), start_faulted_shard(1, 2, plan)];
+    let sc = ShardCoordinator::connect(fleet_cfg(&servers, 2)).unwrap();
+
+    let mut rng = Pcg64::new(0xfa17_0003);
+    let (n, t, band, k) = (8usize, 5usize, 1usize, 2usize);
+    let series = random_series(&mut rng, n, t);
+    let labels = vec![0usize; n];
+    // replies 0 (verify) and 1 (register) are before the delay window
+    let key = register_corpus(&sc, &series, &labels, band);
+    let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+
+    // the slow leg exhausts the budget mid-wait
+    let opts = QueryOpts::with_deadline(Some(Deadline::in_ms(100)));
+    let err = sc.search_opts(key, &query, k, None, opts).unwrap_err();
+    assert_eq!(err.code(), "deadline_exceeded");
+
+    // allow_partial does not soften a deadline miss: the budget is the
+    // client's contract, not a shard-health statement
+    let opts = QueryOpts {
+        allow_partial: true,
+        deadline: Some(Deadline::in_ms(100)),
+    };
+    let err = sc.search_opts(key, &query, k, None, opts).unwrap_err();
+    assert_eq!(err.code(), "deadline_exceeded");
+
+    // an already-expired budget fails pre-dispatch (no leg is sent)
+    let d = Deadline::in_ms(1);
+    std::thread::sleep(Duration::from_millis(5));
+    let opts = QueryOpts::with_deadline(Some(d));
+    let err = sc.search_opts(key, &query, k, None, opts).unwrap_err();
+    assert_eq!(err.code(), "deadline_exceeded");
+
+    let snap = sc.metrics();
+    assert!(snap.deadlines_exceeded >= 3, "{}", snap.report());
+    // deadline misses never feed the breaker
+    assert_eq!(sc.breaker_states(), vec!["closed", "closed"]);
+
+    // end to end over the wire: typed code + the budget echoed back
+    let front = FrontServer::start(Arc::clone(&sc), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+    let req = Json::obj(vec![
+        ("proto", Json::num(2.0)),
+        ("id", Json::num(3.0)),
+        ("op", Json::str("search")),
+        ("index", Json::num(key as f64)),
+        ("k", Json::num(k as f64)),
+        ("x", Json::arr(query.iter().copied().map(Json::num))),
+        ("deadline_ms", Json::num(100.0)),
+    ]);
+    let reply = client.call(&req).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+    assert_eq!(reply.req_usize("id").unwrap(), 3);
+    assert_eq!(reply.req_str("code").unwrap(), "deadline_exceeded");
+    assert_eq!(reply.req_usize("budget_ms").unwrap(), 100);
+
+    // deadline_ms is validated, not clamped
+    let bad = Json::obj(vec![
+        ("op", Json::str("search")),
+        ("index", Json::num(key as f64)),
+        ("k", Json::num(k as f64)),
+        ("x", Json::arr(query.iter().copied().map(Json::num))),
+        ("deadline_ms", Json::num(0.0)),
+    ]);
+    let reply = client.call(&bad).unwrap();
+    assert_eq!(reply.req_str("code").unwrap(), "bad_request");
+}
+
+// ---------------------------------------------------------------------------
+// 4. reproducibility: same plan + seed -> same reply sequence
+// ---------------------------------------------------------------------------
+
+/// Stable projection of a wire reply: everything except the
+/// free-text `error` message, which embeds the shard's ephemeral port.
+fn project(reply: &Json) -> String {
+    match reply {
+        Json::Obj(map) => {
+            let mut m = map.clone();
+            m.remove("error");
+            Json::Obj(m).to_string()
+        }
+        other => other.to_string(),
+    }
+}
+
+/// One fleet + front acting out the fixed plan, one scripted request
+/// sequence, projected replies out.
+fn chaos_script_run() -> Vec<String> {
+    // after the two setup replies the initial connection is capped and
+    // every later dial is refused: shard 1 is deterministically gone
+    let plan = r#"{"seed": 7, "rules": [
+        {"shard": 1, "kind": "close_after", "replies": 2, "from": 0, "count": 1},
+        {"shard": 1, "kind": "refuse_connect", "from": 1}
+    ]}"#;
+    let servers = vec![start_plain_shard(0, 2), start_faulted_shard(1, 2, plan)];
+    let sc = ShardCoordinator::connect(fleet_cfg(&servers, 100)).unwrap();
+
+    let mut rng = Pcg64::new(0x0bad_cafe);
+    let (n, t, band) = (9usize, 5usize, 1usize);
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+    let key = register_corpus(&sc, &series, &labels, band);
+    std::thread::sleep(Duration::from_millis(50));
+
+    let front = FrontServer::start(Arc::clone(&sc), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&front.addr).unwrap();
+    let q1: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+    let q2: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+    let x = |q: &[f64]| Json::arr(q.iter().copied().map(Json::num));
+
+    let script = vec![
+        Json::obj(vec![
+            ("op", Json::str("search")),
+            ("index", Json::num(key as f64)),
+            ("k", Json::num(3.0)),
+            ("x", x(&q1)),
+        ]),
+        Json::obj(vec![
+            ("op", Json::str("search")),
+            ("index", Json::num(key as f64)),
+            ("k", Json::num(3.0)),
+            ("x", x(&q1)),
+            ("allow_partial", Json::Bool(true)),
+        ]),
+        Json::obj(vec![
+            ("op", Json::str("batch_search")),
+            ("index", Json::num(key as f64)),
+            ("k", Json::num(2.0)),
+            ("xs", Json::arr(vec![x(&q1), x(&q2)])),
+            ("allow_partial", Json::Bool(true)),
+        ]),
+        Json::obj(vec![
+            ("op", Json::str("search")),
+            ("index", Json::num(key as f64)),
+            ("k", Json::num(5.0)),
+            ("x", x(&q2)),
+            ("allow_partial", Json::Bool(true)),
+        ]),
+    ];
+    script
+        .iter()
+        .map(|req| project(&client.call(req).unwrap()))
+        .collect()
+}
+
+/// Acceptance criterion (c): the same fault plan and seed against the
+/// same request script reproduce the same reply sequence, byte for byte
+/// (modulo the free-text error message carrying an ephemeral port).
+#[test]
+fn same_plan_and_seed_reproduce_the_reply_sequence() {
+    let run1 = chaos_script_run();
+    let run2 = chaos_script_run();
+    assert_eq!(run1.len(), 4);
+    // sanity on shape before equality: typed failure, then flagged partials
+    assert!(run1[0].contains(r#""code":"unavailable""#), "{}", run1[0]);
+    for r in &run1[1..] {
+        assert!(r.contains(r#""ok":true"#), "{r}");
+        assert!(r.contains(r#""partial""#), "{r}");
+        assert!(r.contains(r#""missing":[1]"#), "{r}");
+    }
+    assert_eq!(run1, run2);
+}
+
+// ---------------------------------------------------------------------------
+// 5. transient faults self-heal through the inline retry
+// ---------------------------------------------------------------------------
+
+/// A single garbled line and a single torn (mid-line) reply each kill
+/// one connection generation; the fan-out's inline reconnect-retry heals
+/// both within the same request — full exact answers, zero partial or
+/// failed replies, and a closed breaker throughout.
+#[test]
+fn garbled_and_torn_replies_self_heal_via_retry() {
+    // shard 1 reply timeline: 0 verify, 1 register, 2 search A
+    // (garbled), 3 verify (retry), 4 search A again, 5 search B (torn),
+    // 6 verify (retry), 7 search B again
+    let plan = r#"{"seed": 17, "rules": [
+        {"shard": 1, "kind": "garble_line", "from": 2, "count": 1},
+        {"shard": 1, "kind": "drop_mid_reply", "from": 5, "count": 1}
+    ]}"#;
+    let servers = vec![start_plain_shard(0, 2), start_faulted_shard(1, 2, plan)];
+    let sc = ShardCoordinator::connect(fleet_cfg(&servers, 100)).unwrap();
+
+    let mut rng = Pcg64::new(0xfa17_0005);
+    let (n, t, band, k) = (8usize, 6usize, 1usize, 3usize);
+    let series = random_series(&mut rng, n, t);
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+    let key = register_corpus(&sc, &series, &labels, band);
+    let single = SearchEngine::new(
+        Arc::new(Index::build(&labeled(&series, &labels), band, 2)),
+        Cascade::default(),
+    );
+
+    for round in 0..2 {
+        let query: Vec<f64> = (0..t).map(|_| rng.range(-2.0, 2.0)).collect();
+        let out = sc.search(key, &query, k, None).unwrap();
+        assert_eq!(out.shards_ok, 2, "round {round}");
+        assert!(out.missing.is_empty(), "round {round}");
+        let want = single.knn_values(&query, k).neighbors;
+        assert_eq!(out.neighbors.len(), want.len(), "round {round}");
+        for (g, w) in out.neighbors.iter().zip(&want) {
+            assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "round {round}");
+            assert_eq!(g.global_idx, w.train_idx, "round {round}");
+        }
+    }
+
+    let snap = sc.metrics();
+    assert_eq!(snap.partial_failures, 0, "{}", snap.report());
+    assert_eq!(snap.partial_replies, 0, "{}", snap.report());
+    assert!(snap.shards[1].errors >= 2, "{}", snap.report());
+    assert!(snap.shards[1].reconnects >= 2, "{}", snap.report());
+    assert_eq!(sc.breaker_states(), vec!["closed", "closed"]);
+}

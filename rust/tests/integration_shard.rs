@@ -51,6 +51,10 @@ fn fleet_client_cfg(servers: &[Server], call_timeout_ms: u64) -> ShardClientConf
         backoff_base_ms: 5,
         backoff_cap_ms: 20,
         call_timeout_ms,
+        // high threshold + no probe thread: these suites assert the
+        // pre-breaker degradation contract deterministically
+        breaker_threshold: 100,
+        probe_interval_ms: 0,
         store: None,
     }
 }
