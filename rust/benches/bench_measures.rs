@@ -22,6 +22,8 @@ use spdtw::measures::spdtw::SpDtw;
 use spdtw::measures::spkrdtw::SpKrdtw;
 use spdtw::measures::workspace::DpWorkspace;
 use spdtw::measures::{KernelMeasure, Measure};
+use spdtw::search::early::{dtw_banded_ea_into, spdtw_ea_into, EaResult};
+use spdtw::search::lanes::{dtw_banded_ea_lanes_into, spdtw_ea_lanes_into};
 use spdtw::sparse::LocMatrix;
 use spdtw::util::bench::{Bench, BenchResult};
 use spdtw::util::json::Json;
@@ -152,6 +154,85 @@ fn main() {
             r[0].mean_s / r[1].mean_s,
             r[2].mean_s / r[3].mean_s,
             r[4].mean_s / r[5].mean_s
+        );
+
+        // Lane-batched EA kernels (`search::lanes`): the same 8
+        // survivors per timed call — scalar = the early.rs loop, laneN =
+        // candidate-major groups of N.  ub = +inf so no lane abandons
+        // (pure DP throughput; L=1 isolates the lane path's dispatch
+        // overhead).  The sweep lands in BENCH_MEASURES.json as kernel
+        // "dtw_ea"/"spdtw_ea" with path "scalar"/"lane1|lane4|lane8".
+        Bench::header(&format!("lane-batched EA kernels, T={t}"));
+        let cands: Vec<Vec<f64>> = (0..8).map(|_| series(&mut rng, t).values).collect();
+        let lane_ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+        let inf = [f64::INFINITY; 8];
+        let mut out = [EaResult {
+            value: None,
+            visited: 0,
+        }; 8];
+        let mut l = Bench::default();
+        let r = l.run("dtw_ea [scalar x8]", || {
+            let mut acc = 0.0;
+            for c in &lane_ys {
+                acc += dtw_banded_ea_into(&mut ws, xs, c, usize::MAX, f64::INFINITY)
+                    .value
+                    .unwrap();
+            }
+            acc
+        });
+        records.push(record(t, "dtw_ea", "scalar", r));
+        for lanes in [1usize, 4, 8] {
+            let r = l.run(&format!("dtw_ea [lane{lanes} x8]"), || {
+                let mut acc = 0.0;
+                for g in lane_ys.chunks(lanes) {
+                    let gl = g.len();
+                    dtw_banded_ea_lanes_into(
+                        &mut ws,
+                        xs,
+                        g,
+                        usize::MAX,
+                        &inf[..gl],
+                        &mut out[..gl],
+                    );
+                    for e in &out[..gl] {
+                        acc += e.value.unwrap();
+                    }
+                }
+                acc
+            });
+            records.push(record(t, "dtw_ea", &format!("lane{lanes}"), r));
+        }
+        let r = l.run("spdtw_ea [scalar x8]", || {
+            let mut acc = 0.0;
+            for c in &lane_ys {
+                acc += spdtw_ea_into(&mut ws, &spdtw.loc, xs, c, f64::INFINITY)
+                    .value
+                    .unwrap();
+            }
+            acc
+        });
+        records.push(record(t, "spdtw_ea", "scalar", r));
+        for lanes in [1usize, 4, 8] {
+            let r = l.run(&format!("spdtw_ea [lane{lanes} x8]"), || {
+                let mut acc = 0.0;
+                for g in lane_ys.chunks(lanes) {
+                    let gl = g.len();
+                    spdtw_ea_lanes_into(&mut ws, &spdtw.loc, xs, g, &inf[..gl], &mut out[..gl]);
+                    for e in &out[..gl] {
+                        acc += e.value.unwrap();
+                    }
+                }
+                acc
+            });
+            records.push(record(t, "spdtw_ea", &format!("lane{lanes}"), r));
+        }
+        let lr = l.results();
+        println!(
+            "-> lane speedups vs scalar: dtw_ea L4 {:.2}x L8 {:.2}x | spdtw_ea L4 {:.2}x L8 {:.2}x",
+            lr[0].mean_s / lr[2].mean_s,
+            lr[0].mean_s / lr[3].mean_s,
+            lr[4].mean_s / lr[6].mean_s,
+            lr[4].mean_s / lr[7].mean_s,
         );
     }
 

@@ -121,6 +121,9 @@ fn main() {
             brute_secs,
         );
 
+        // ---- lane sweep: scalar vs lane-batched survivor loop -------------
+        bench_lane_sweep("lane sweep (dtw)", &index, &ds);
+
         // ---- SP-DTW composition: sparse grid × cascade --------------------
         let grid = learn_occupancy_grid(&ds.train, 8);
         let loc = Arc::new(grid.threshold(1.0).to_loc(1.0));
@@ -146,6 +149,7 @@ fn main() {
             sp_brute.visited_cells,
             sp_secs,
         );
+        bench_lane_sweep("lane sweep (sp-dtw)", &sp_index, &ds);
 
         // ---- persistence: cold build vs warm load -------------------------
         // The measured claim behind the index store: a serving restart
@@ -158,6 +162,44 @@ fn main() {
         // with submitters instead of flat-lining behind a submit lock.
         bench_concurrent_submitters(&index, &ds);
         println!();
+    }
+}
+
+/// Scalar-vs-lane sweep (L ∈ {1, 4, 8}) over the EA survivor loop,
+/// single-threaded so the ratio is pure kernel throughput rather than
+/// pool scheduling.  Results are asserted bit-identical at every width
+/// (the lane contract), so every row reports the *same* neighbors.
+fn bench_lane_sweep(label: &str, index: &Arc<Index>, ds: &spdtw::data::Dataset) {
+    let base = SearchEngine::with_lanes(Arc::clone(index), Cascade::default(), 1);
+    let t0 = Instant::now();
+    let (eval1, stats1) = base.classify(&ds.test, 1, 1);
+    let base_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  {label:<22} L=1  error={:.3}  DP cells {:>10}  {:>7.0} q/s",
+        eval1.error_rate,
+        stats1.dp_cells,
+        ds.test.len() as f64 / base_secs.max(1e-9),
+    );
+    for lanes in [4usize, 8] {
+        let eng = SearchEngine::with_lanes(Arc::clone(index), Cascade::default(), lanes);
+        for probe in ds.test.series.iter().take(8) {
+            let (ra, rb) = (base.knn(probe, 3), eng.knn(probe, 3));
+            for (na, nb) in ra.neighbors.iter().zip(&rb.neighbors) {
+                assert_eq!(na.dist.to_bits(), nb.dist.to_bits());
+                assert_eq!(na.train_idx, nb.train_idx);
+            }
+        }
+        let t0 = Instant::now();
+        let (eval, stats) = eng.classify(&ds.test, 1, 1);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(eval.error_rate, eval1.error_rate);
+        println!(
+            "  {label:<22} L={lanes}  error={:.3}  DP cells {:>10}  {:>7.0} q/s ({:.2}x vs L=1)",
+            eval.error_rate,
+            stats.dp_cells,
+            ds.test.len() as f64 / dt.max(1e-9),
+            base_secs / dt.max(1e-9),
+        );
     }
 }
 

@@ -1316,6 +1316,14 @@ fn run_batch(handle: &PjrtHandle, batch: ReadyBatch, metrics: &Metrics) {
             plane_key: batch.bucket.plane_key,
             nu: f64::from_bits(batch.bucket.nu_bits),
         }),
+        // Lane-batched kernels carry one query plus a candidate-major
+        // (T, L) block, not the pairwise x/y streams this batcher
+        // accumulates — they are driven directly through
+        // `PjrtHandle::run_lb_keogh`/`run_spdtw` by the search engine's
+        // lane groups, never enqueued here.
+        KernelKind::LbKeogh | KernelKind::Spdtw => Err(Error::runtime(
+            "lane-batched kernels are not pair-batched; use run_lb_keogh/run_spdtw",
+        )),
     };
     match outcome {
         Ok(values) => {

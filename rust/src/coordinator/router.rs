@@ -21,23 +21,16 @@ impl Router {
         Router { info, prefer_pjrt }
     }
 
-    /// Does an artifact bucket exist for (kernel, T)?
+    /// Does an artifact bucket exist for (kernel, T)?  Every manifest
+    /// entry appears in `EngineInfo::batch_of`, so one lookup covers all
+    /// kernel kinds — the lane-batched LB_Keogh/SP-DTW buckets included.
     pub fn has_bucket(&self, kind: KernelKind, t: usize) -> bool {
-        match &self.info {
-            None => false,
-            Some(i) => match kind {
-                KernelKind::Dtw => i.dtw_lengths.contains(&t),
-                KernelKind::Krdtw => i.krdtw_lengths.contains(&t),
-            },
-        }
+        self.batch_size(kind, t).is_some()
     }
 
     /// Batch size of the bucket, if it exists.
     pub fn batch_size(&self, kind: KernelKind, t: usize) -> Option<usize> {
-        self.info.as_ref().and_then(|i| match kind {
-            KernelKind::Dtw => i.dtw_batch(t),
-            KernelKind::Krdtw => i.krdtw_batch(t),
-        })
+        self.info.as_ref().and_then(|i| i.kernel_batch(kind, t))
     }
 
     /// Routing decision for a job.
@@ -94,5 +87,17 @@ mod tests {
         let r = Router::new(Some(info()), true);
         assert_eq!(r.batch_size(KernelKind::Dtw, 60), Some(32));
         assert_eq!(r.batch_size(KernelKind::Dtw, 61), None);
+    }
+
+    #[test]
+    fn lane_kernels_route_via_batch_of() {
+        let mut i = info();
+        i.batch_of.push(("lb_keogh".into(), 60, 8));
+        i.batch_of.push(("spdtw".into(), 60, 8));
+        let r = Router::new(Some(i), true);
+        assert_eq!(r.route(KernelKind::LbKeogh, 60), Backend::Pjrt);
+        assert_eq!(r.route(KernelKind::Spdtw, 60), Backend::Pjrt);
+        assert_eq!(r.route(KernelKind::Spdtw, 61), Backend::Native);
+        assert_eq!(r.batch_size(KernelKind::LbKeogh, 60), Some(8));
     }
 }

@@ -63,6 +63,18 @@ pub struct DpWorkspace {
     /// Monotonic deques for Lemire envelope construction.
     pub maxq: VecDeque<usize>,
     pub minq: VecDeque<usize>,
+    /// Lane-major rolling DP row blocks (`ty * L`, lane-contiguous per
+    /// column) for the lane-batched banded-DTW kernel
+    /// ([`crate::search::lanes`]).
+    pub lane_row_a: Vec<f64>,
+    pub lane_row_b: Vec<f64>,
+    /// Candidate-major transposed candidate values (`t * L`): column j
+    /// of every lane packed contiguously so a vertical lane update is
+    /// one cache line.
+    pub lane_vals: Vec<f64>,
+    /// Lane-major entry-parallel SP-DTW DP values over LOC entries
+    /// (`nnz * L`).
+    pub lane_entries: Vec<f64>,
 }
 
 /// Reset `v` to exactly `n` copies of `fill`, reusing capacity.
@@ -130,6 +142,11 @@ impl DpWorkspace {
             + self.order.capacity() * u
             + (self.top.capacity() + self.dists.capacity()) * std::mem::size_of::<(f64, usize)>()
             + (self.maxq.capacity() + self.minq.capacity()) * u
+            + (self.lane_row_a.capacity()
+                + self.lane_row_b.capacity()
+                + self.lane_vals.capacity()
+                + self.lane_entries.capacity())
+                * f
     }
 }
 
@@ -207,5 +224,16 @@ mod tests {
         let before = ws.memory_bytes();
         ws.rows(128, 0.0);
         assert!(ws.memory_bytes() >= before + 2 * 128 * 8);
+    }
+
+    #[test]
+    fn memory_bytes_counts_lane_scratch() {
+        let mut ws = DpWorkspace::new();
+        let before = ws.memory_bytes();
+        reset(&mut ws.lane_row_a, 64 * 8, 0.0);
+        reset(&mut ws.lane_row_b, 64 * 8, 0.0);
+        reset(&mut ws.lane_vals, 64 * 8, 0.0);
+        reset(&mut ws.lane_entries, 256 * 8, 0.0);
+        assert!(ws.memory_bytes() >= before + (3 * 64 * 8 + 256 * 8) * 8);
     }
 }

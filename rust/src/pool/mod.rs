@@ -133,6 +133,60 @@ where
     compute_pool().run(n, threads, chunk, &f)
 }
 
+/// Size-aware variant of [`par_map_ws`]: instead of fixed-size chunks,
+/// workers claim contiguous *spans* of roughly equal total `weight`
+/// (e.g. candidate length, DP cell count).  With mixed per-item costs a
+/// fixed chunk makes the unlucky worker the critical path; weighting
+/// bounds each claim's cost at ~1/(4·threads) of the total.  Results
+/// are in index order and bit-identical to the serial map — scheduling
+/// never affects values, only which participant computes them.
+pub fn par_map_ws_weighted<R, F>(n: usize, threads: usize, weights: &[usize], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut DpWorkspace) -> R + Sync,
+{
+    assert_eq!(weights.len(), n, "one weight per item");
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 || ON_POOL_WORKER.with(|c| c.get()) {
+        return workspace::with_tls(|ws| (0..n).map(|i| f(i, ws)).collect());
+    }
+    let spans = weighted_spans(weights, threads);
+    compute_pool().run_spans(n, threads, &spans, &f)
+}
+
+/// Partition `0..weights.len()` into contiguous spans whose total
+/// weights are roughly equal, targeting ~4 spans per thread (enough
+/// slack for dynamic claiming to absorb stragglers without per-item
+/// claim overhead).  Zero weights count as 1 so empty items still make
+/// progress; spans always cover the index space exactly, in order.
+pub fn weighted_spans(weights: &[usize], threads: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    let mut spans = Vec::new();
+    if n == 0 {
+        return spans;
+    }
+    let total: u128 = weights.iter().map(|&w| w.max(1) as u128).sum();
+    let parts = (threads.max(1) as u128) * 4;
+    let target = (total / parts).max(1);
+    let mut start = 0usize;
+    let mut acc: u128 = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w.max(1) as u128;
+        if acc >= target {
+            spans.push((start, i + 1));
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    if start < n {
+        spans.push((start, n));
+    }
+    spans
+}
+
 /// Point-in-time view of the compute pool's scheduler state — the
 /// queue-depth / concurrency signal exported by the coordinator metrics
 /// and asserted by the overlap tests.
@@ -537,6 +591,74 @@ impl ComputePool {
             })
             .collect()
     }
+
+    /// [`run`](ComputePool::run) over precomputed contiguous spans
+    /// (see [`weighted_spans`]): participants claim whole spans from one
+    /// atomic counter instead of fixed-size chunks.  `spans` must cover
+    /// `0..n` exactly, in order, without overlap — every index is
+    /// produced exactly once, results in index order.
+    ///
+    /// # Panics
+    ///
+    /// Panics with "pool worker panicked" if any item's `f` panicked
+    /// (the epoch aborts early; concurrent epochs are unaffected).
+    pub fn run_spans<R, F>(
+        &self,
+        n: usize,
+        threads: usize,
+        spans: &[(usize, usize)],
+        f: &F,
+    ) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut DpWorkspace) -> R + Sync,
+    {
+        debug_assert_eq!(
+            spans.iter().map(|&(s, e)| e - s).sum::<usize>(),
+            n,
+            "spans must cover the index space exactly"
+        );
+        let slots: Vec<UnsafeCell<Option<R>>> = (0..n).map(|_| UnsafeCell::new(None)).collect();
+        let out = EpochSlots(&slots);
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let runner = |ws: &mut DpWorkspace| loop {
+            // Fail fast: once any item panicked the epoch's result is a
+            // panic regardless, so don't drain the remaining spans just
+            // to throw them away.
+            if panicked.load(Ordering::Relaxed) {
+                return;
+            }
+            let si = next.fetch_add(1, Ordering::Relaxed);
+            if si >= spans.len() {
+                break;
+            }
+            let (start, end) = spans[si];
+            for i in start..end {
+                match catch_unwind(AssertUnwindSafe(|| f(i, ws))) {
+                    Ok(v) => out.write(i, v),
+                    Err(_) => {
+                        panicked.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+            }
+        };
+        self.execute(threads, &runner);
+        if panicked.load(Ordering::SeqCst) {
+            panic!("pool worker panicked");
+        }
+        slots
+            .iter()
+            .map(|slot| {
+                // SAFETY: the epoch's completion latch has passed (every
+                // participant decremented under the state mutex), so no
+                // other thread holds a reference into the slots.
+                slot.with_mut(|p| unsafe { (*p).take() })
+                    .expect("index not produced")
+            })
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -804,6 +926,76 @@ mod tests {
         let s = pool_stats();
         assert!(s.workers >= 1);
         assert!(s.peak_concurrent_epochs >= 1);
+    }
+
+    #[test]
+    fn weighted_spans_cover_exactly_and_balance() {
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        let mut next = || {
+            rng_state = rng_state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (rng_state >> 33) as usize
+        };
+        for n in [1usize, 2, 7, 100, 1000] {
+            for threads in [1usize, 2, 8] {
+                let weights: Vec<usize> = (0..n).map(|_| next() % 500).collect();
+                let spans = weighted_spans(&weights, threads);
+                // exact, ordered, gapless coverage of 0..n
+                let mut at = 0usize;
+                for &(s, e) in &spans {
+                    assert_eq!(s, at, "gap or overlap at {s}");
+                    assert!(e > s, "empty span");
+                    at = e;
+                }
+                assert_eq!(at, n);
+                // each span's weight stays near the target (one item of
+                // overshoot allowed — spans close on the crossing item)
+                let total: usize = weights.iter().map(|&w| w.max(1)).sum();
+                let target = (total / (threads * 4)).max(1);
+                let wmax = weights.iter().map(|&w| w.max(1)).max().unwrap();
+                for &(s, e) in &spans {
+                    let w: usize = weights[s..e].iter().map(|&w| w.max(1)).sum();
+                    assert!(w <= target + wmax, "span weight {w} way past target {target}");
+                }
+            }
+        }
+        assert!(weighted_spans(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn par_map_ws_weighted_matches_serial_under_skew() {
+        // heavily skewed weights: the schedule changes, the values must not
+        let n = 300;
+        let weights: Vec<usize> = (0..n).map(|i| if i % 17 == 0 { 10_000 } else { 1 }).collect();
+        let out = par_map_ws_weighted(n, 4, &weights, |i, ws| {
+            let (row, _) = ws.rows(4, i as f64);
+            row[0] * 2.0
+        });
+        let want: Vec<f64> = (0..n).map(|i| i as f64 * 2.0).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn par_map_ws_weighted_empty_single_and_zero_weights() {
+        assert!(par_map_ws_weighted(0, 4, &[], |i, _ws| i).is_empty());
+        assert_eq!(par_map_ws_weighted(1, 4, &[0], |i, _ws| i + 9), vec![9]);
+        // all-zero weights still cover every index
+        let zeros = vec![0usize; 50];
+        let out = par_map_ws_weighted(50, 3, &zeros, |i, _ws| i);
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn par_map_ws_weighted_propagates_job_panics() {
+        let weights = vec![1usize; 64];
+        par_map_ws_weighted(64, 4, &weights, |i, _ws| {
+            if i == 21 {
+                panic!("boom");
+            }
+            i
+        });
     }
 
     #[test]

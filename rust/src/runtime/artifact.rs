@@ -29,6 +29,15 @@ pub enum KernelKind {
     Dtw,
     /// Log-domain K_rdtw, f64: args (x, y, mdiag[2T-1,T], nu[1]).
     Krdtw,
+    /// LB_Keogh lane batch, f64: args (q[T], upper[T,L], lower[T,L]) —
+    /// the envelope operands are candidate-major ((T, L): column j of
+    /// every lane contiguous), the exact layout
+    /// `search::lanes::pack_candidate_major` produces on the host.
+    LbKeogh,
+    /// SP-DTW lane batch, f64: args (q[T], y[T,L], plane[nnz-packed
+    /// LOC]) — y is candidate-major like `LbKeogh`; the LOC plane is
+    /// resolved by `plane_key` on the serving side.
+    Spdtw,
 }
 
 impl KernelKind {
@@ -36,6 +45,8 @@ impl KernelKind {
         match s {
             "dtw" => Ok(KernelKind::Dtw),
             "krdtw" => Ok(KernelKind::Krdtw),
+            "lb_keogh" => Ok(KernelKind::LbKeogh),
+            "spdtw" => Ok(KernelKind::Spdtw),
             other => Err(Error::runtime(format!("unknown kernel kind '{other}'"))),
         }
     }
@@ -44,6 +55,8 @@ impl KernelKind {
         match self {
             KernelKind::Dtw => "dtw",
             KernelKind::Krdtw => "krdtw",
+            KernelKind::LbKeogh => "lb_keogh",
+            KernelKind::Spdtw => "spdtw",
         }
     }
 }
@@ -487,6 +500,19 @@ mod tests {
         std::fs::write(dir.join("measures.json"), "{not json").unwrap();
         assert!(load_measure_specs(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kernel_kind_lane_batches_roundtrip() {
+        for kind in [
+            KernelKind::Dtw,
+            KernelKind::Krdtw,
+            KernelKind::LbKeogh,
+            KernelKind::Spdtw,
+        ] {
+            assert_eq!(KernelKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        assert!(KernelKind::parse("lb-keogh").is_err());
     }
 
     #[test]

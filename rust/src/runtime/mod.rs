@@ -12,6 +12,11 @@
 //! shared by every pair of a (dataset, measure-variant), so the engine
 //! caches it as a `PjRtBuffer` keyed by a caller-provided u64 and runs
 //! `execute_b` with only x/y re-uploaded per batch.
+//!
+//! Lane-batched entry points ([`LbKeoghBatch`], [`SpdtwBatch`]) take one
+//! query against a **candidate-major** (T, L) operand block — the exact
+//! buffer `search::lanes::pack_candidate_major` produces — so the host
+//! lane kernels and the PJRT batch API share one marshalling layout.
 
 pub mod artifact;
 pub mod xla;
@@ -49,6 +54,36 @@ pub struct KrdtwBatch {
     pub nu: f64,
 }
 
+/// A lane-batched LB_Keogh request (f64): one query against L candidate
+/// envelopes.  The envelope operands are **candidate-major** (T, L) —
+/// column j of every lane contiguous — exactly the buffer
+/// `search::lanes::pack_candidate_major` produces from the per-lane
+/// envelope slices, so the host marshals once and uploads verbatim.
+#[derive(Clone, Debug)]
+pub struct LbKeoghBatch {
+    pub t: usize,
+    /// Query values (T).
+    pub q: Vec<f64>,
+    /// Candidate-major upper envelopes (T, L).
+    pub upper: Vec<f64>,
+    /// Candidate-major lower envelopes (T, L).
+    pub lower: Vec<f64>,
+}
+
+/// A lane-batched SP-DTW request (f64): one query against L candidates
+/// in candidate-major (T, L) layout (see [`LbKeoghBatch`]).  The packed
+/// LOC plane was registered once via
+/// [`PjrtHandle::register_plane_f64`] under `plane_key`.
+#[derive(Clone, Debug)]
+pub struct SpdtwBatch {
+    pub t: usize,
+    /// Query values (T).
+    pub q: Vec<f64>,
+    /// Candidate-major candidate values (T, L).
+    pub y: Vec<f64>,
+    pub plane_key: u64,
+}
+
 enum Request {
     RegisterPlaneF32 {
         key: u64,
@@ -70,6 +105,14 @@ enum Request {
         batch: KrdtwBatch,
         resp: mpsc::Sender<Result<Vec<f64>>>,
     },
+    LbKeogh {
+        batch: LbKeoghBatch,
+        resp: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Spdtw {
+        batch: SpdtwBatch,
+        resp: mpsc::Sender<Result<Vec<f64>>>,
+    },
     Info {
         resp: mpsc::Sender<EngineInfo>,
     },
@@ -86,17 +129,21 @@ pub struct EngineInfo {
 }
 
 impl EngineInfo {
-    pub fn dtw_batch(&self, t: usize) -> Option<usize> {
+    /// Batch size of the (kernel, T) bucket, for any kernel kind —
+    /// `batch_of` lists every manifest entry, so this is the single
+    /// lookup the router needs (lane kernels included); presence of a
+    /// bucket is `kernel_batch(..).is_some()`.
+    pub fn kernel_batch(&self, kind: KernelKind, t: usize) -> Option<usize> {
         self.batch_of
             .iter()
-            .find(|(k, tt, _)| k == "dtw" && *tt == t)
+            .find(|(k, tt, _)| k == kind.as_str() && *tt == t)
             .map(|&(_, _, b)| b)
     }
+    pub fn dtw_batch(&self, t: usize) -> Option<usize> {
+        self.kernel_batch(KernelKind::Dtw, t)
+    }
     pub fn krdtw_batch(&self, t: usize) -> Option<usize> {
-        self.batch_of
-            .iter()
-            .find(|(k, tt, _)| k == "krdtw" && *tt == t)
-            .map(|&(_, _, b)| b)
+        self.kernel_batch(KernelKind::Krdtw, t)
     }
 }
 
@@ -188,6 +235,16 @@ impl PjrtHandle {
         self.call(|resp| Request::Krdtw { batch, resp })?
     }
 
+    /// Execute one lane-batched LB_Keogh; returns L lower bounds.
+    pub fn run_lb_keogh(&self, batch: LbKeoghBatch) -> Result<Vec<f64>> {
+        self.call(|resp| Request::LbKeogh { batch, resp })?
+    }
+
+    /// Execute one lane-batched SP-DTW; returns L distances.
+    pub fn run_spdtw(&self, batch: SpdtwBatch) -> Result<Vec<f64>> {
+        self.call(|resp| Request::Spdtw { batch, resp })?
+    }
+
     pub fn info(&self) -> Result<EngineInfo> {
         self.call(|resp| Request::Info { resp })
     }
@@ -245,6 +302,12 @@ impl Engine {
                 }
                 Request::Krdtw { batch, resp } => {
                     let _ = resp.send(self.run_krdtw(&batch));
+                }
+                Request::LbKeogh { batch, resp } => {
+                    let _ = resp.send(self.run_lb_keogh(&batch));
+                }
+                Request::Spdtw { batch, resp } => {
+                    let _ = resp.send(self.run_spdtw(&batch));
                 }
                 Request::Info { resp } => {
                     let _ = resp.send(self.info());
@@ -398,6 +461,97 @@ impl Engine {
         let out = exe
             .execute_b(&[&xb, &yb, &plane.1, &nub])
             .map_err(|e| Error::runtime(format!("krdtw execute: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch: {e}")))?;
+        let tup = lit
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        tup.to_vec::<f64>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+    }
+
+    fn run_lb_keogh(&mut self, batch: &LbKeoghBatch) -> Result<Vec<f64>> {
+        let t = batch.t;
+        if t == 0 || batch.q.len() != t {
+            return Err(Error::runtime("malformed lb_keogh batch shapes"));
+        }
+        let l_have = batch.upper.len() / t;
+        if batch.upper.len() != l_have * t || batch.lower.len() != batch.upper.len() {
+            return Err(Error::runtime("malformed lb_keogh batch shapes"));
+        }
+        let (_, l_need) = self.executable(KernelKind::LbKeogh, t)?;
+        if l_have != l_need {
+            return Err(Error::runtime(format!(
+                "lb_keogh lane count {l_have} != artifact batch {l_need} (lane group must pad)"
+            )));
+        }
+        let qb = self
+            .client
+            .buffer_from_host_buffer(&batch.q, &[t], None)
+            .map_err(|e| Error::runtime(format!("q upload: {e}")))?;
+        let ub = self
+            .client
+            .buffer_from_host_buffer(&batch.upper, &[t, l_have], None)
+            .map_err(|e| Error::runtime(format!("upper upload: {e}")))?;
+        let lb = self
+            .client
+            .buffer_from_host_buffer(&batch.lower, &[t, l_have], None)
+            .map_err(|e| Error::runtime(format!("lower upload: {e}")))?;
+        let exe = {
+            let entry = self.manifest.find(KernelKind::LbKeogh, t).unwrap();
+            self.executables.get(&entry.name).unwrap()
+        };
+        let out = exe
+            .execute_b(&[&qb, &ub, &lb])
+            .map_err(|e| Error::runtime(format!("lb_keogh execute: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch: {e}")))?;
+        let tup = lit
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        tup.to_vec::<f64>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+    }
+
+    fn run_spdtw(&mut self, batch: &SpdtwBatch) -> Result<Vec<f64>> {
+        let t = batch.t;
+        if t == 0 || batch.q.len() != t {
+            return Err(Error::runtime("malformed spdtw batch shapes"));
+        }
+        let l_have = batch.y.len() / t;
+        if batch.y.len() != l_have * t {
+            return Err(Error::runtime("malformed spdtw batch shapes"));
+        }
+        let (_, l_need) = self.executable(KernelKind::Spdtw, t)?;
+        if l_have != l_need {
+            return Err(Error::runtime(format!(
+                "spdtw lane count {l_have} != artifact batch {l_need} (lane group must pad)"
+            )));
+        }
+        if self.planes_f64.get(&batch.plane_key).map(|p| p.0) != Some(t) {
+            return Err(Error::runtime(format!(
+                "unregistered f64 plane {} for T={t}",
+                batch.plane_key
+            )));
+        }
+        let qb = self
+            .client
+            .buffer_from_host_buffer(&batch.q, &[t], None)
+            .map_err(|e| Error::runtime(format!("q upload: {e}")))?;
+        let yb = self
+            .client
+            .buffer_from_host_buffer(&batch.y, &[t, l_have], None)
+            .map_err(|e| Error::runtime(format!("y upload: {e}")))?;
+        let exe = {
+            let entry = self.manifest.find(KernelKind::Spdtw, t).unwrap();
+            self.executables.get(&entry.name).unwrap()
+        };
+        let plane = self.planes_f64.get(&batch.plane_key).unwrap();
+        let out = exe
+            .execute_b(&[&qb, &yb, &plane.1])
+            .map_err(|e| Error::runtime(format!("spdtw execute: {e}")))?;
         let lit = out[0][0]
             .to_literal_sync()
             .map_err(|e| Error::runtime(format!("fetch: {e}")))?;

@@ -21,6 +21,8 @@ use crate::data::{znormalize_in_place, LabeledSet, TimeSeries};
 use crate::measures::lb_keogh::envelope_into;
 use crate::measures::workspace::{self, DpWorkspace};
 use crate::pool;
+use crate::search::early::EaResult;
+use crate::search::lanes::{DEFAULT_LANES, MAX_LANES};
 use crate::search::lower_bounds::{lb_keogh_sum, lb_kim};
 use crate::search::{Cascade, Index, PruneStats};
 use crate::util::mathx::next_up_f64;
@@ -56,11 +58,33 @@ impl QueryResult {
 pub struct SearchEngine {
     pub index: Arc<Index>,
     pub cascade: Cascade,
+    /// DP lane width: cascade survivors are evaluated in lockstep
+    /// groups of up to this many candidates per kernel call (1 =
+    /// scalar per-candidate path).  Every width returns bit-identical
+    /// neighbors — see [`crate::search::lanes`] and `flush_lane_group`.
+    pub lanes: usize,
 }
 
 impl SearchEngine {
     pub fn new(index: Arc<Index>, cascade: Cascade) -> SearchEngine {
-        SearchEngine { index, cascade }
+        SearchEngine {
+            index,
+            cascade,
+            lanes: DEFAULT_LANES,
+        }
+    }
+
+    /// [`Self::new`] with an explicit DP lane width, clamped to
+    /// `1..=`[`MAX_LANES`].  The knob trades instruction-level
+    /// parallelism against threshold tightness *within* one lane group;
+    /// the returned neighbor lists are bit-identical for every width
+    /// (property: `prop_lanes.rs` lane-count invariance).
+    pub fn with_lanes(index: Arc<Index>, cascade: Cascade, lanes: usize) -> SearchEngine {
+        SearchEngine {
+            index,
+            cascade,
+            lanes: lanes.clamp(1, MAX_LANES),
+        }
     }
 
     /// Build an index for any searchable [`MeasureSpec`] over `train`
@@ -166,6 +190,15 @@ impl SearchEngine {
         // Current best k as (dist, train_idx), ascending lexicographic.
         top.clear();
         top.reserve(k + 1);
+        // Cascade survivors are evaluated in lane groups of up to
+        // `lanes` candidates flushed as one lockstep DP; `lanes == 1`
+        // is the scalar per-candidate path.  Both paths return
+        // bit-identical neighbors (see `flush_lane_group`); only the
+        // work accounting (which candidates abandon vs complete) may
+        // differ between widths.
+        let lanes = self.lanes.clamp(1, MAX_LANES);
+        let mut group = [0usize; MAX_LANES];
+        let mut glen = 0usize;
         for &j in &order {
             stats.candidates += 1;
             if cas.kim && cannot_beat(lbs[j], j, &top, k) {
@@ -189,16 +222,48 @@ impl SearchEngine {
                     continue;
                 }
             }
-            let ub = abandon_threshold(j, &top, k, cas.early_abandon);
-            let ea = idx.full_eval_with(ws, q, j, ub);
-            stats.dp_cells += ea.visited;
-            match ea.value {
-                None => stats.abandoned += 1,
-                Some(v) => {
-                    stats.full_evals += 1;
-                    insert_neighbor(&mut top, k, v, j);
+            if lanes == 1 {
+                let ub = abandon_threshold(j, &top, k, cas.early_abandon);
+                let ea = idx.full_eval_with(ws, q, j, ub);
+                stats.dp_cells += ea.visited;
+                match ea.value {
+                    None => stats.abandoned += 1,
+                    Some(v) => {
+                        stats.full_evals += 1;
+                        insert_neighbor(&mut top, k, v, j);
+                    }
+                }
+            } else {
+                group[glen] = j;
+                glen += 1;
+                if glen == lanes {
+                    flush_lane_group(
+                        idx,
+                        ws,
+                        q,
+                        &group[..glen],
+                        k,
+                        cas.early_abandon,
+                        &mut top,
+                        &mut stats,
+                    );
+                    glen = 0;
                 }
             }
+        }
+        // Ragged tail (survivors % lanes != 0): the partial group
+        // flushes through the matching narrower monomorphization.
+        if glen > 0 {
+            flush_lane_group(
+                idx,
+                ws,
+                q,
+                &group[..glen],
+                k,
+                cas.early_abandon,
+                &mut top,
+                &mut stats,
+            );
         }
         let neighbors = top
             .drain(..)
@@ -221,9 +286,12 @@ impl SearchEngine {
     /// the persistent pool, one long-lived workspace per worker.  Each
     /// call is one scheduler epoch, so batches submitted by distinct
     /// threads (the coordinator's concurrent clients) overlap instead
-    /// of serializing.
+    /// of serializing.  Work is distributed size-aware — spans weighted
+    /// by query length, so mixed-cost items cannot make one worker the
+    /// critical path (uniform-length sets degrade to plain chunking).
     pub fn batch_knn(&self, queries: &LabeledSet, k: usize, threads: usize) -> Vec<QueryResult> {
-        pool::par_map_ws(queries.len(), threads, 1, |i, ws| {
+        let weights: Vec<usize> = queries.series.iter().map(|s| s.values.len()).collect();
+        pool::par_map_ws_weighted(queries.len(), threads, &weights, |i, ws| {
             self.knn_with(ws, &queries.series[i], k)
         })
     }
@@ -237,7 +305,8 @@ impl SearchEngine {
         k: usize,
         threads: usize,
     ) -> Vec<QueryResult> {
-        pool::par_map_ws(queries.len(), threads, 1, |i, ws| {
+        let weights: Vec<usize> = queries.iter().map(Vec::len).collect();
+        pool::par_map_ws_weighted(queries.len(), threads, &weights, |i, ws| {
             self.knn_values_with(ws, &queries[i], k)
         })
     }
@@ -264,6 +333,53 @@ impl SearchEngine {
         let eval =
             EvalResult::from_predictions(test, &pred, stats.total_cells(), stats.candidates);
         (eval, stats)
+    }
+}
+
+/// Flush one lane group: evaluate `group` (1..=[`MAX_LANES`] cascade
+/// survivors) against `q` in lockstep, then fold the per-lane results
+/// into the top-k in group order.
+///
+/// Exactness: each lane's abandon threshold is frozen when the group
+/// flushes, *before* any group member inserts — never tighter than the
+/// sequential path's threshold for the same candidate, because the
+/// k-th best only tightens as inserts happen.  So the lane engine
+/// completes a superset of the candidates the scalar schedule
+/// completes; completed values are bit-exact scalar DP values; and an
+/// abandoned candidate provably cannot enter the final top-k under the
+/// `(dist, idx)` order (the threshold came from k already-better
+/// entries).  The final top-k is therefore bit-identical for every
+/// lane width — only `PruneStats`' abandoned/full_evals split and
+/// `dp_cells` may differ between widths.
+fn flush_lane_group(
+    idx: &Index,
+    ws: &mut DpWorkspace,
+    q: &[f64],
+    group: &[usize],
+    k: usize,
+    early_abandon: bool,
+    top: &mut Vec<(f64, usize)>,
+    stats: &mut PruneStats,
+) {
+    let g = group.len();
+    let mut ubs = [f64::INFINITY; MAX_LANES];
+    for (u, &j) in ubs.iter_mut().zip(group) {
+        *u = abandon_threshold(j, top, k, early_abandon);
+    }
+    let mut res = [EaResult {
+        value: None,
+        visited: 0,
+    }; MAX_LANES];
+    idx.full_eval_lanes_with(ws, q, group, &ubs[..g], &mut res[..g]);
+    for (&j, r) in group.iter().zip(res.iter()) {
+        stats.dp_cells += r.visited;
+        match r.value {
+            None => stats.abandoned += 1,
+            Some(v) => {
+                stats.full_evals += 1;
+                insert_neighbor(top, k, v, j);
+            }
+        }
     }
 }
 
@@ -564,6 +680,53 @@ mod tests {
             2
         )
         .is_err());
+    }
+
+    #[test]
+    fn lane_width_is_invisible_in_results() {
+        let ds = synthetic::generate_scaled("CBF", 27, 22, 12).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 5, 2));
+        let scalar = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), 1);
+        for lanes in [2usize, 4, 8, 99] {
+            let eng = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), lanes);
+            assert!((1..=MAX_LANES).contains(&eng.lanes), "width must clamp");
+            for probe in &ds.test.series {
+                for k in [1usize, 3] {
+                    let a = scalar.knn(probe, k);
+                    let b = eng.knn(probe, k);
+                    let ka: Vec<(u64, usize)> = a
+                        .neighbors
+                        .iter()
+                        .map(|n| (n.dist.to_bits(), n.train_idx))
+                        .collect();
+                    let kb: Vec<(u64, usize)> = b
+                        .neighbors
+                        .iter()
+                        .map(|n| (n.dist.to_bits(), n.train_idx))
+                        .collect();
+                    assert_eq!(ka, kb, "lanes={lanes} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_groups_preserve_candidate_accounting() {
+        let ds = synthetic::generate_scaled("SyntheticControl", 19, 21, 9).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 4, 2));
+        for lanes in [1usize, 3, 8] {
+            let eng = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), lanes);
+            let (_, stats) = eng.classify(&ds.test, 2, 2);
+            assert_eq!(
+                stats.kim_pruned
+                    + stats.keogh_pruned
+                    + stats.rev_pruned
+                    + stats.abandoned
+                    + stats.full_evals,
+                stats.candidates,
+                "lanes={lanes}"
+            );
+        }
     }
 
     #[test]

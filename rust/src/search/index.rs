@@ -18,6 +18,7 @@ use crate::measures::spec::{GridResolver, MeasureSpec};
 use crate::measures::workspace::{self, DpWorkspace};
 use crate::pool;
 use crate::search::early::{dtw_banded_ea_into, spdtw_ea_into, EaResult};
+use crate::search::lanes::{dtw_banded_ea_lanes_into, spdtw_ea_lanes_into, MAX_LANES};
 use crate::sparse::LocMatrix;
 
 /// Prebuilt per-train-set state for cascade k-NN search.
@@ -217,6 +218,31 @@ impl Index {
         match &self.loc {
             Some(loc) => spdtw_ea_into(ws, loc, query, &self.series[j], ub),
             None => dtw_banded_ea_into(ws, query, &self.series[j], self.band, ub),
+        }
+    }
+
+    /// Lane-batched [`Self::full_eval_with`]: evaluate candidates `js`
+    /// (1..=[`MAX_LANES`] of them) against `query` in lockstep, each
+    /// under its own upper bound.  `out[l]` is bit-identical to
+    /// `full_eval_with(ws, query, js[l], ubs[l])` — the lane kernels
+    /// replicate the scalar per-lane FP op order exactly
+    /// ([`crate::search::lanes`]).
+    pub fn full_eval_lanes_with(
+        &self,
+        ws: &mut DpWorkspace,
+        query: &[f64],
+        js: &[usize],
+        ubs: &[f64],
+        out: &mut [EaResult],
+    ) {
+        let mut ys: [&[f64]; MAX_LANES] = [&[]; MAX_LANES];
+        for (y, &j) in ys.iter_mut().zip(js) {
+            *y = &self.series[j];
+        }
+        let ys = &ys[..js.len()];
+        match &self.loc {
+            Some(loc) => spdtw_ea_lanes_into(ws, loc, query, ys, ubs, out),
+            None => dtw_banded_ea_lanes_into(ws, query, ys, self.band, ubs, out),
         }
     }
 

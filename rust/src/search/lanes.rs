@@ -1,0 +1,472 @@
+//! Lane-batched early-abandoning DP kernels: evaluate up to
+//! [`MAX_LANES`] candidates in lockstep against one query.
+//!
+//! ## Layout
+//!
+//! Candidate series are transposed into a **candidate-major**
+//! (entry-parallel) layout before the DP runs: column `j` of every lane
+//! is packed contiguously (`lane_vals[j * L + l]` = candidate `l`'s
+//! value at index `j`), and the rolling DP rows use the same lane-major
+//! blocks (`row[j * L + l]`).  Each DP cell update then touches one
+//! contiguous chunk of `L` f64s — a vertical operation the
+//! autovectorizer lowers to `f64x4`/`f64x8` instructions because the
+//! inner lane loop has a *const-generic* trip count (the public entry
+//! points monomorphize over `L ∈ 1..=8` via a `match`).
+//!
+//! ## Bit-exactness contract
+//!
+//! The per-lane floating-point operation sequence is **identical** to
+//! the scalar kernels in [`crate::search::early`]: lanes never mix
+//! arithmetically, only spatially.  For every lane `l`,
+//! `dtw_banded_ea_lanes_into(..)[l]` equals
+//! `dtw_banded_ea_into(ws, x, ys[l], band, ubs[l])` bit-for-bit —
+//! value via `f64::to_bits` *and* `visited` — and likewise for the
+//! SP-DTW pair.  There is no `fast` reordering path; vectorization
+//! comes purely from evaluating independent candidates side by side.
+//! Enforced by `tests/prop_lanes.rs` across interleaved lengths, bands,
+//! grids (incl. cornerless and empty-row degenerates) and lane counts.
+//!
+//! ## Abandon masks and refill
+//!
+//! Each lane carries its own upper bound; a lane retires (`value:
+//! None`) at the first row whose per-lane row minimum proves its bound,
+//! exactly where the scalar kernel would return.  Retired lanes keep
+//! computing cells (harmless: `phi ≥ 0`, no subtraction, `BIG` fills —
+//! values stay finite) but stop accruing `visited`; once every lane has
+//! retired the whole group stops.  Refill is **group-granular**: the
+//! engine accumulates the next `L` cascade survivors and flushes them
+//! as one lockstep DP (see `search::engine`) — mid-DP refill would
+//! break row lockstep for no measurable gain.
+//!
+//! The same candidate-major layout is what a PJRT/XLA or GPU backend
+//! wants for batched kernels; [`pack_candidate_major`] is the
+//! documented host-side marshaller for the `runtime` batch entry points
+//! (`LbKeoghBatch` / `SpdtwBatch`).
+
+use crate::measures::workspace::{self, DpWorkspace};
+use crate::measures::{phi, BIG};
+use crate::search::early::EaResult;
+use crate::sparse::loc::NO_PRED;
+use crate::sparse::LocMatrix;
+
+/// Widest lane group the kernels monomorphize: one AVX-512 register of
+/// f64s, two AVX2 registers.
+pub const MAX_LANES: usize = 8;
+
+/// Lane width the engine uses unless configured otherwise
+/// ([`crate::search::SearchEngine::with_lanes`]).
+pub const DEFAULT_LANES: usize = 8;
+
+/// Transpose `ys` (lane-major slices) into the candidate-major layout:
+/// `out[j * L + l] = ys[l][j]`.  All lanes must share one length; the
+/// buffer is reset via [`workspace::reset`] so reuse never allocates
+/// once warm.  This is also the host-side marshaller for the
+/// `runtime` batch API's `(T, L)` row-major operands.
+pub fn pack_candidate_major(ys: &[&[f64]], out: &mut Vec<f64>) {
+    let lanes = ys.len();
+    let t = if lanes == 0 { 0 } else { ys[0].len() };
+    workspace::reset(out, t * lanes, 0.0);
+    for (l, y) in ys.iter().enumerate() {
+        assert_eq!(y.len(), t, "lane length mismatch: {} != {t}", y.len());
+        for (j, &v) in y.iter().enumerate() {
+            out[j * lanes + l] = v;
+        }
+    }
+}
+
+/// Lane-batched [`crate::search::early::dtw_banded_ea_into`]: evaluate
+/// `ys.len()` candidates (1..=[`MAX_LANES`]) against `x` in lockstep,
+/// each under its own upper bound.  `out[l]` is bit-identical — value
+/// and `visited` — to the scalar kernel run on lane `l` alone.
+pub fn dtw_banded_ea_lanes_into(
+    ws: &mut DpWorkspace,
+    x: &[f64],
+    ys: &[&[f64]],
+    band: usize,
+    ubs: &[f64],
+    out: &mut [EaResult],
+) {
+    let lanes = ys.len();
+    assert!(
+        (1..=MAX_LANES).contains(&lanes),
+        "lane count {lanes} not in 1..={MAX_LANES}"
+    );
+    assert_eq!(ubs.len(), lanes, "ubs length mismatch");
+    assert_eq!(out.len(), lanes, "out length mismatch");
+    match lanes {
+        1 => dtw_lanes_fixed::<1>(ws, x, ys, band, ubs, out),
+        2 => dtw_lanes_fixed::<2>(ws, x, ys, band, ubs, out),
+        3 => dtw_lanes_fixed::<3>(ws, x, ys, band, ubs, out),
+        4 => dtw_lanes_fixed::<4>(ws, x, ys, band, ubs, out),
+        5 => dtw_lanes_fixed::<5>(ws, x, ys, band, ubs, out),
+        6 => dtw_lanes_fixed::<6>(ws, x, ys, band, ubs, out),
+        7 => dtw_lanes_fixed::<7>(ws, x, ys, band, ubs, out),
+        8 => dtw_lanes_fixed::<8>(ws, x, ys, band, ubs, out),
+        _ => unreachable!(),
+    }
+}
+
+fn dtw_lanes_fixed<const L: usize>(
+    ws: &mut DpWorkspace,
+    x: &[f64],
+    ys: &[&[f64]],
+    band: usize,
+    ubs: &[f64],
+    out: &mut [EaResult],
+) {
+    let tx = x.len();
+    let ty = ys[0].len();
+    assert!(tx > 0 && ty > 0, "empty series");
+    let slope = ty as f64 / tx as f64;
+    let unbounded = band == usize::MAX || band >= tx.max(ty);
+    let DpWorkspace {
+        lane_row_a,
+        lane_row_b,
+        lane_vals,
+        ..
+    } = ws;
+    pack_candidate_major(ys, lane_vals);
+    workspace::reset(lane_row_a, ty * L, BIG);
+    workspace::reset(lane_row_b, ty * L, BIG);
+    let (mut prev, mut cur) = (lane_row_a, lane_row_b);
+    let mut live = [true; L];
+    let mut n_live = L;
+    let mut visited = [0u64; L];
+
+    for (i, &xi) in x.iter().enumerate() {
+        let center = (i as f64 * slope) as usize;
+        let (lo, hi) = if unbounded {
+            (0, ty - 1)
+        } else {
+            (center.saturating_sub(band), (center + band).min(ty - 1))
+        };
+        let row_cells = (hi - lo + 1) as u64;
+        let mut row_min = [f64::INFINITY; L];
+        if i == 0 {
+            let mut acc = [0.0f64; L];
+            for j in lo..=hi {
+                let base = j * L;
+                let yrow = &lane_vals[base..base + L];
+                let crow = &mut cur[base..base + L];
+                for l in 0..L {
+                    let a = acc[l] + phi(xi, yrow[l]);
+                    acc[l] = a;
+                    crow[l] = a;
+                    if a < row_min[l] {
+                        row_min[l] = a;
+                    }
+                }
+            }
+        } else {
+            let mut prev_jm1 = [BIG; L];
+            if lo > 0 {
+                prev_jm1.copy_from_slice(&prev[(lo - 1) * L..lo * L]);
+            }
+            let mut cur_jm1 = [BIG; L];
+            for j in lo..=hi {
+                let base = j * L;
+                let yrow = &lane_vals[base..base + L];
+                let prow = &prev[base..base + L];
+                let crow = &mut cur[base..base + L];
+                for l in 0..L {
+                    let pj = prow[l];
+                    let mut b = pj;
+                    if prev_jm1[l] < b {
+                        b = prev_jm1[l];
+                    }
+                    if cur_jm1[l] < b {
+                        b = cur_jm1[l];
+                    }
+                    let v = phi(xi, yrow[l]) + b;
+                    crow[l] = v;
+                    cur_jm1[l] = v;
+                    prev_jm1[l] = pj;
+                    if v < row_min[l] {
+                        row_min[l] = v;
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        if !unbounded {
+            for c in cur.iter_mut() {
+                *c = BIG;
+            }
+        }
+        for l in 0..L {
+            if live[l] {
+                visited[l] += row_cells;
+                if ubs[l].is_finite() && row_min[l] >= ubs[l] {
+                    live[l] = false;
+                    n_live -= 1;
+                }
+            }
+        }
+        if n_live == 0 {
+            break;
+        }
+    }
+    let corner = (ty - 1) * L;
+    for l in 0..L {
+        out[l] = EaResult {
+            value: if live[l] { Some(prev[corner + l]) } else { None },
+            visited: visited[l],
+        };
+    }
+}
+
+/// Lane-batched [`crate::search::early::spdtw_ea_into`]: the
+/// entry-parallel LOC DP with a lane-major value array
+/// (`lane_entries[k * L + l]`).  Per-lane op order, degenerate-grid
+/// sentinels and empty-row proofs are all identical to the scalar
+/// kernel, so each lane's result is bit-exact.
+pub fn spdtw_ea_lanes_into(
+    ws: &mut DpWorkspace,
+    loc: &LocMatrix,
+    x: &[f64],
+    ys: &[&[f64]],
+    ubs: &[f64],
+    out: &mut [EaResult],
+) {
+    let lanes = ys.len();
+    assert!(
+        (1..=MAX_LANES).contains(&lanes),
+        "lane count {lanes} not in 1..={MAX_LANES}"
+    );
+    assert_eq!(ubs.len(), lanes, "ubs length mismatch");
+    assert_eq!(out.len(), lanes, "out length mismatch");
+    let t = loc.t;
+    assert_eq!(x.len(), t, "series length {} != grid size {t}", x.len());
+    for y in ys {
+        assert_eq!(y.len(), t, "series length {} != grid size {t}", y.len());
+    }
+    match lanes {
+        1 => spdtw_lanes_fixed::<1>(ws, loc, x, ys, ubs, out),
+        2 => spdtw_lanes_fixed::<2>(ws, loc, x, ys, ubs, out),
+        3 => spdtw_lanes_fixed::<3>(ws, loc, x, ys, ubs, out),
+        4 => spdtw_lanes_fixed::<4>(ws, loc, x, ys, ubs, out),
+        5 => spdtw_lanes_fixed::<5>(ws, loc, x, ys, ubs, out),
+        6 => spdtw_lanes_fixed::<6>(ws, loc, x, ys, ubs, out),
+        7 => spdtw_lanes_fixed::<7>(ws, loc, x, ys, ubs, out),
+        8 => spdtw_lanes_fixed::<8>(ws, loc, x, ys, ubs, out),
+        _ => unreachable!(),
+    }
+}
+
+fn spdtw_lanes_fixed<const L: usize>(
+    ws: &mut DpWorkspace,
+    loc: &LocMatrix,
+    x: &[f64],
+    ys: &[&[f64]],
+    ubs: &[f64],
+    out: &mut [EaResult],
+) {
+    let t = loc.t;
+    // Cornerless grid: the exact answer is the constant sentinel for
+    // every lane, no DP needed — same up-front decision as the scalar
+    // kernel, `visited` stays 0.
+    let Some(corner_k) = loc.index_of(t - 1, t - 1) else {
+        for r in out.iter_mut() {
+            *r = EaResult {
+                value: Some(BIG + BIG),
+                visited: 0,
+            };
+        }
+        return;
+    };
+    let n = loc.nnz();
+    let DpWorkspace {
+        lane_entries,
+        lane_vals,
+        ..
+    } = ws;
+    pack_candidate_major(ys, lane_vals);
+    workspace::reset(lane_entries, n * L, BIG);
+    let mut live = [true; L];
+    let mut n_live = L;
+    let mut visited = [0u64; L];
+
+    for r in 0..t {
+        let (rs, re) = (loc.row_ptr[r], loc.row_ptr[r + 1]);
+        let mut row_min = [f64::INFINITY; L];
+        let xr = x[r];
+        for k in rs..re {
+            let c = loc.cols[k] as usize;
+            let w = loc.weights[k];
+            let p = loc.preds[k];
+            let origin = r == 0 && c == 0;
+            let ybase = c * L;
+            let dbase = k * L;
+            for l in 0..L {
+                let local = w * phi(xr, lane_vals[ybase + l]);
+                let best = if origin {
+                    0.0
+                } else {
+                    let mut b = BIG;
+                    for &pi in &p {
+                        if pi != NO_PRED {
+                            let v = lane_entries[pi as usize * L + l];
+                            if v < b {
+                                b = v;
+                            }
+                        }
+                    }
+                    b
+                };
+                let v = local + best;
+                lane_entries[dbase + l] = v;
+                if v < row_min[l] {
+                    row_min[l] = v;
+                }
+            }
+        }
+        let row_cells = (re - rs) as u64;
+        for l in 0..L {
+            if live[l] {
+                visited[l] += row_cells;
+                // Same proven-bound rule as the scalar kernel: an empty
+                // row only proves ≥ BIG (see `early::spdtw_ea_into`).
+                let proven = if re == rs { BIG } else { row_min[l] };
+                if ubs[l].is_finite() && proven >= ubs[l] {
+                    live[l] = false;
+                    n_live -= 1;
+                }
+            }
+        }
+        if n_live == 0 {
+            break;
+        }
+    }
+    let corner = corner_k * L;
+    for l in 0..L {
+        out[l] = EaResult {
+            value: if live[l] {
+                Some(lane_entries[corner + l])
+            } else {
+                None
+            },
+            visited: visited[l],
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::early::{dtw_banded_ea_into, spdtw_ea_into};
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+        (0..t).map(|_| rng.normal()).collect()
+    }
+
+    fn blank() -> EaResult {
+        EaResult {
+            value: None,
+            visited: 0,
+        }
+    }
+
+    #[test]
+    fn pack_transposes_candidate_major() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let ys: Vec<&[f64]> = vec![&a, &b];
+        let mut out = Vec::new();
+        pack_candidate_major(&ys, &mut out);
+        assert_eq!(out, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // reuse resets, never appends
+        pack_candidate_major(&ys[..1], &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dtw_lanes_match_scalar_bitwise_per_lane() {
+        let mut rng = Pcg64::new(41);
+        let mut ws = DpWorkspace::new();
+        let mut sws = DpWorkspace::new();
+        for lanes in [1usize, 3, 4, 8] {
+            let tx = 5 + rng.below(20);
+            let ty = 5 + rng.below(20);
+            let x = rand_vec(&mut rng, tx);
+            let cands: Vec<Vec<f64>> = (0..lanes).map(|_| rand_vec(&mut rng, ty)).collect();
+            let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+            for band in [2usize, usize::MAX] {
+                let ubs: Vec<f64> = (0..lanes)
+                    .map(|l| if l % 2 == 0 { f64::INFINITY } else { 0.5 + rng.normal().abs() })
+                    .collect();
+                let mut out = vec![blank(); lanes];
+                dtw_banded_ea_lanes_into(&mut ws, &x, &ys, band, &ubs, &mut out);
+                for l in 0..lanes {
+                    let scalar = dtw_banded_ea_into(&mut sws, &x, ys[l], band, ubs[l]);
+                    assert_eq!(out[l].visited, scalar.visited, "lanes={lanes} l={l} band={band}");
+                    assert_eq!(
+                        out[l].value.map(f64::to_bits),
+                        scalar.value.map(f64::to_bits),
+                        "lanes={lanes} l={l} band={band}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spdtw_lanes_match_scalar_bitwise_per_lane() {
+        let mut rng = Pcg64::new(43);
+        let mut ws = DpWorkspace::new();
+        let mut sws = DpWorkspace::new();
+        let t = 14;
+        let loc = LocMatrix::corridor(t, 3);
+        for lanes in [1usize, 4, 7, 8] {
+            let x = rand_vec(&mut rng, t);
+            let cands: Vec<Vec<f64>> = (0..lanes).map(|_| rand_vec(&mut rng, t)).collect();
+            let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+            let ubs: Vec<f64> = (0..lanes)
+                .map(|l| if l % 3 == 0 { f64::INFINITY } else { rng.normal().abs() })
+                .collect();
+            let mut out = vec![blank(); lanes];
+            spdtw_ea_lanes_into(&mut ws, &loc, &x, &ys, &ubs, &mut out);
+            for l in 0..lanes {
+                let scalar = spdtw_ea_into(&mut sws, &loc, &x, ys[l], ubs[l]);
+                assert_eq!(out[l].visited, scalar.visited, "lanes={lanes} l={l}");
+                assert_eq!(
+                    out[l].value.map(f64::to_bits),
+                    scalar.value.map(f64::to_bits),
+                    "lanes={lanes} l={l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_lanes_abandoning_stops_the_group() {
+        // every lane gets ub=0 → retire on row 0, visited = first row only
+        let mut ws = DpWorkspace::new();
+        let x = vec![1.0; 12];
+        let y = vec![2.0; 12];
+        let ys: Vec<&[f64]> = vec![&y, &y, &y, &y];
+        let ubs = [0.0; 4];
+        let mut out = [blank(); 4];
+        dtw_banded_ea_lanes_into(&mut ws, &x, &ys, usize::MAX, &ubs, &mut out);
+        for r in &out {
+            assert_eq!(r.value, None);
+            assert_eq!(r.visited, 12);
+        }
+    }
+
+    #[test]
+    fn cornerless_grid_fills_sentinel_for_every_lane() {
+        let loc = LocMatrix::from_triples(4, vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]);
+        let mut ws = DpWorkspace::new();
+        let x = vec![0.5; 4];
+        let y = vec![-0.5; 4];
+        let ys: Vec<&[f64]> = vec![&y, &y, &y];
+        let ubs = [1.0; 3];
+        let mut out = [blank(); 3];
+        spdtw_ea_lanes_into(&mut ws, &loc, &x, &ys, &ubs, &mut out);
+        for r in &out {
+            assert_eq!(r.value.map(f64::to_bits), Some((BIG + BIG).to_bits()));
+            assert_eq!(r.visited, 0);
+        }
+    }
+}

@@ -48,7 +48,8 @@
 //! | module | role |
 //! |--------|------|
 //! | [`lower_bounds`] | LB_Kim + reversed LB_Keogh over cached envelopes |
-//! | [`early`] | early-abandoning banded DTW and SP-DTW kernels |
+//! | [`early`] | early-abandoning banded DTW and SP-DTW kernels (scalar) |
+//! | [`lanes`] | lane-batched EA kernels: 4–8 candidates per DP row in lockstep |
 //! | [`index`] | [`Index`]: envelopes + normalized series cached per train set |
 //! | [`engine`] | [`SearchEngine`]: k-NN queries, batch API, classification |
 //! | [`persist`] | versioned on-disk index store (warm-start serving restarts) |
@@ -59,6 +60,7 @@
 pub mod early;
 pub mod engine;
 pub mod index;
+pub mod lanes;
 pub mod lower_bounds;
 pub mod persist;
 

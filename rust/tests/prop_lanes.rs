@@ -1,0 +1,345 @@
+//! Lane-kernel exactness properties: the lane-batched DP kernels and
+//! the lane-group engine schedule must be bit-identical (`f64::to_bits`)
+//! to their scalar counterparts — per lane at the kernel level, and on
+//! the final `(dist, train idx)` top-k at the engine level — across
+//! interleaved lengths, bands, grids (degenerates included), lane
+//! counts, ragged tails, and deliberately dirtied workspaces.
+
+use spdtw::data::splits::from_pairs;
+use spdtw::measures::dtw::dtw_banded;
+use spdtw::measures::spdtw::SpDtw;
+use spdtw::measures::workspace::DpWorkspace;
+use spdtw::search::early::{dtw_banded_ea_into, spdtw_ea_into, EaResult};
+use spdtw::search::lanes::{
+    dtw_banded_ea_lanes_into, pack_candidate_major, spdtw_ea_lanes_into, MAX_LANES,
+};
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::sparse::LocMatrix;
+use spdtw::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn rand_vec(rng: &mut Pcg64, t: usize) -> Vec<f64> {
+    (0..t).map(|_| rng.normal()).collect()
+}
+
+fn blank() -> EaResult {
+    EaResult {
+        value: None,
+        visited: 0,
+    }
+}
+
+/// Clobber every scratch buffer — the lane fields included — with sizes
+/// and fills the next kernel must not be able to observe.
+fn dirty(ws: &mut DpWorkspace, rng: &mut Pcg64) {
+    let t = 1 + rng.below(97);
+    ws.rows(t, -123.456);
+    ws.entries.clear();
+    ws.entries.resize(t * 2, 1e9);
+    ws.query.clear();
+    ws.query.resize(t, 42.0);
+    ws.lane_row_a.clear();
+    ws.lane_row_a.resize(t * 4, -9.0);
+    ws.lane_row_b.clear();
+    ws.lane_row_b.resize(t * 4, 9.0);
+    ws.lane_vals.clear();
+    ws.lane_vals.resize(t * 8, 0.5);
+    ws.lane_entries.clear();
+    ws.lane_entries.resize(t * 5, -2.5);
+}
+
+fn assert_lanes_match_scalar(out: &[EaResult], scalar: &[EaResult], tag: &str) {
+    assert_eq!(out.len(), scalar.len(), "{tag}");
+    for (l, (a, b)) in out.iter().zip(scalar).enumerate() {
+        assert_eq!(a.visited, b.visited, "{tag} lane {l} visited");
+        assert_eq!(
+            a.value.map(f64::to_bits),
+            b.value.map(f64::to_bits),
+            "{tag} lane {l} value"
+        );
+    }
+}
+
+#[test]
+fn dtw_lane_kernel_bit_identical_across_matrix() {
+    let mut rng = Pcg64::new(0x1a9e);
+    let mut ws = DpWorkspace::new();
+    let mut sws = DpWorkspace::new();
+    for case in 0..60 {
+        let tx = 2 + rng.below(40);
+        let ty = 2 + rng.below(40);
+        let lanes = 1 + rng.below(MAX_LANES);
+        let x = rand_vec(&mut rng, tx);
+        let cands: Vec<Vec<f64>> = (0..lanes).map(|_| rand_vec(&mut rng, ty)).collect();
+        let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+        let band = match case % 4 {
+            0 => usize::MAX,
+            1 => 1,
+            2 => 1 + rng.below(ty),
+            _ => ty + tx, // wider than both: also unbounded
+        };
+        // mixed abandon pressure: disabled, loose, tight, absurd
+        let ubs: Vec<f64> = (0..lanes)
+            .map(|l| match l % 4 {
+                0 => f64::INFINITY,
+                1 => 50.0 + rng.normal().abs(),
+                2 => 0.5 * rng.normal().abs(),
+                _ => 0.0,
+            })
+            .collect();
+        // dirty between the lane call and its scalar oracle
+        dirty(&mut ws, &mut rng);
+        let mut out = vec![blank(); lanes];
+        dtw_banded_ea_lanes_into(&mut ws, &x, &ys, band, &ubs, &mut out);
+        let scalar: Vec<EaResult> = (0..lanes)
+            .map(|l| {
+                dirty(&mut sws, &mut rng);
+                dtw_banded_ea_into(&mut sws, &x, ys[l], band, ubs[l])
+            })
+            .collect();
+        assert_lanes_match_scalar(&out, &scalar, &format!("case {case} band {band}"));
+    }
+}
+
+#[test]
+fn spdtw_lane_kernel_bit_identical_incl_degenerate_grids() {
+    let mut rng = Pcg64::new(0x2b7d);
+    let mut ws = DpWorkspace::new();
+    let mut sws = DpWorkspace::new();
+    let t = 12;
+    let grids = [
+        LocMatrix::corridor(t, 2),
+        LocMatrix::corridor(t, 5),
+        // cornerless: sentinel for every lane, zero DP
+        LocMatrix::from_triples(t, (0..t - 1).map(|i| (i, i, 1.0)).collect()),
+        // empty middle row, corner present: disconnected but finite
+        LocMatrix::from_triples(
+            t,
+            (0..t)
+                .filter(|&i| i != t / 2)
+                .flat_map(|i| {
+                    let lo = i.saturating_sub(1);
+                    let hi = (i + 1).min(t - 1);
+                    (lo..=hi).map(move |j| (i, j, 1.0))
+                })
+                .collect(),
+        ),
+    ];
+    for (gi, loc) in grids.iter().enumerate() {
+        for lanes in [1usize, 2, 4, 5, 8] {
+            let x = rand_vec(&mut rng, t);
+            let cands: Vec<Vec<f64>> = (0..lanes).map(|_| rand_vec(&mut rng, t)).collect();
+            let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+            let ubs: Vec<f64> = (0..lanes)
+                .map(|l| match l % 3 {
+                    0 => f64::INFINITY,
+                    1 => 1e25,
+                    _ => rng.normal().abs(),
+                })
+                .collect();
+            dirty(&mut ws, &mut rng);
+            let mut out = vec![blank(); lanes];
+            spdtw_ea_lanes_into(&mut ws, loc, &x, &ys, &ubs, &mut out);
+            let scalar: Vec<EaResult> = (0..lanes)
+                .map(|l| {
+                    dirty(&mut sws, &mut rng);
+                    spdtw_ea_into(&mut sws, loc, &x, ys[l], ubs[l])
+                })
+                .collect();
+            assert_lanes_match_scalar(&out, &scalar, &format!("grid {gi} lanes {lanes}"));
+        }
+    }
+}
+
+#[test]
+fn lane_kernels_are_deterministic_under_workspace_reuse() {
+    // same inputs through one workspace, interleaved with other lane
+    // widths and dirt: every repetition must reproduce the first run
+    let mut rng = Pcg64::new(0x3c5f);
+    let mut ws = DpWorkspace::new();
+    let x = rand_vec(&mut rng, 24);
+    let cands: Vec<Vec<f64>> = (0..4).map(|_| rand_vec(&mut rng, 24)).collect();
+    let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+    let ubs = [f64::INFINITY, 3.0, 0.1, f64::INFINITY];
+    let mut first = vec![blank(); 4];
+    dtw_banded_ea_lanes_into(&mut ws, &x, &ys, 4, &ubs, &mut first);
+    for rep in 0..10 {
+        // interleave a different-width call on the same buffers
+        let w = 1 + rng.below(MAX_LANES);
+        let other: Vec<&[f64]> = (0..w).map(|i| ys[i % ys.len()]).collect();
+        let oubs = vec![0.25; w];
+        let mut scratch = vec![blank(); w];
+        dtw_banded_ea_lanes_into(&mut ws, &x, &other, 7, &oubs, &mut scratch);
+        dirty(&mut ws, &mut rng);
+        let mut again = vec![blank(); 4];
+        dtw_banded_ea_lanes_into(&mut ws, &x, &ys, 4, &ubs, &mut again);
+        assert_lanes_match_scalar(&again, &first, &format!("rep {rep}"));
+    }
+}
+
+#[test]
+fn pack_candidate_major_roundtrips() {
+    let mut rng = Pcg64::new(0x4d11);
+    let mut buf = Vec::new();
+    for _ in 0..20 {
+        let t = 1 + rng.below(50);
+        let lanes = 1 + rng.below(MAX_LANES);
+        let cands: Vec<Vec<f64>> = (0..lanes).map(|_| rand_vec(&mut rng, t)).collect();
+        let ys: Vec<&[f64]> = cands.iter().map(|c| c.as_slice()).collect();
+        pack_candidate_major(&ys, &mut buf);
+        assert_eq!(buf.len(), t * lanes);
+        for (l, c) in cands.iter().enumerate() {
+            for (j, &v) in c.iter().enumerate() {
+                assert_eq!(buf[j * lanes + l].to_bits(), v.to_bits());
+            }
+        }
+    }
+}
+
+/// Brute-force top-k under the engine's (dist, idx) order.
+fn brute_topk(idx: &Index, query: &[f64], k: usize) -> Vec<(f64, usize)> {
+    let mut all: Vec<(f64, usize)> = (0..idx.len())
+        .map(|j| {
+            let d = match &idx.loc {
+                Some(loc) => SpDtw::from_arc(Arc::clone(loc))
+                    .eval(query, &idx.series[j])
+                    .value,
+                None => dtw_banded(query, &idx.series[j], idx.band).value,
+            };
+            (d, j)
+        })
+        .collect();
+    all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    all.truncate(k);
+    all
+}
+
+fn keys(r: &spdtw::search::engine::QueryResult) -> Vec<(u64, usize)> {
+    r.neighbors
+        .iter()
+        .map(|n| (n.dist.to_bits(), n.train_idx))
+        .collect()
+}
+
+#[test]
+fn engine_lane_count_invariance_and_ragged_tails() {
+    // train sizes chosen so survivors % lanes != 0 in many configs,
+    // including n < lanes (the whole query is one ragged group)
+    let mut rng = Pcg64::new(0x5e23);
+    for n in [2usize, 5, 7, 11, 26] {
+        let t = 4 + rng.below(16);
+        let train = from_pairs((0..n).map(|i| (i % 3, rand_vec(&mut rng, t))).collect());
+        let band = 1 + rng.below(t);
+        let idx = Arc::new(Index::build(&train, band, 1));
+        let scalar = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), 1);
+        for k in [1usize, 2, n.min(5)] {
+            let q = rand_vec(&mut rng, t);
+            let want = brute_topk(&idx, &q, k);
+            let base = scalar.knn_values(&q, k);
+            assert_eq!(
+                keys(&base),
+                want.iter().map(|&(d, j)| (d.to_bits(), j)).collect::<Vec<_>>(),
+                "scalar engine vs brute, n={n} k={k}"
+            );
+            for lanes in [2usize, 3, 4, 8] {
+                let eng = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), lanes);
+                let got = eng.knn_values(&q, k);
+                assert_eq!(keys(&got), keys(&base), "n={n} k={k} lanes={lanes}");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_lane_invariance_holds_for_spdtw_and_ablations() {
+    let mut rng = Pcg64::new(0x6f37);
+    let t = 10;
+    let loc = Arc::new(LocMatrix::corridor(t, 3));
+    let train = from_pairs((0..13).map(|i| (i % 2, rand_vec(&mut rng, t))).collect());
+    let idx = Arc::new(Index::build_spdtw(&train, loc, 1));
+    let cascades = [
+        Cascade::default(),
+        Cascade {
+            early_abandon: false,
+            ..Cascade::default()
+        },
+        Cascade {
+            order_by_lb: false,
+            ..Cascade::default()
+        },
+        Cascade::none(),
+    ];
+    for cas in cascades {
+        let scalar = SearchEngine::with_lanes(Arc::clone(&idx), cas, 1);
+        for _ in 0..4 {
+            let q = rand_vec(&mut rng, t);
+            let base = scalar.knn_values(&q, 3);
+            let want = brute_topk(&idx, &q, 3);
+            assert_eq!(
+                keys(&base),
+                want.iter().map(|&(d, j)| (d.to_bits(), j)).collect::<Vec<_>>(),
+                "{cas:?}"
+            );
+            for lanes in [4usize, 8] {
+                let eng = SearchEngine::with_lanes(Arc::clone(&idx), cas, lanes);
+                assert_eq!(keys(&eng.knn_values(&q, 3)), keys(&base), "{cas:?} lanes={lanes}");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_tie_breaks_stay_exact_under_lanes() {
+    // duplicate candidates force exact distance ties inside one lane
+    // group AND across groups: the smaller train index must win at
+    // every width
+    let base = vec![0.0, 1.0, 0.0, -1.0, 0.5];
+    let far = vec![9.0, 9.0, 9.0, 9.0, 9.0];
+    let mut pairs = Vec::new();
+    for i in 0..10 {
+        pairs.push((i, if i % 2 == 0 { base.clone() } else { far.clone() }));
+    }
+    let train = from_pairs(pairs);
+    let idx = Arc::new(Index::build(&train, 2, 1));
+    let scalar = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), 1);
+    for k in [1usize, 3, 5] {
+        let want = brute_topk(&idx, &base, k);
+        let a = scalar.knn_values(&base, k);
+        for (n, (wd, wj)) in a.neighbors.iter().zip(&want) {
+            assert_eq!(n.dist.to_bits(), wd.to_bits());
+            assert_eq!(n.train_idx, *wj);
+        }
+        for lanes in [4usize, 8] {
+            let eng = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), lanes);
+            let b = eng.knn_values(&base, k);
+            assert_eq!(keys(&b), keys(&a), "k={k} lanes={lanes}");
+        }
+    }
+}
+
+#[test]
+fn engine_sentinel_ties_stay_exact_under_lanes() {
+    // disconnected SP grid: distances tie at sentinel level; the lane
+    // schedule must preserve the (dist, idx) winner bit-for-bit
+    let loc = Arc::new(LocMatrix::from_triples(
+        4,
+        vec![(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (3, 3, 1.0)],
+    ));
+    let train = from_pairs(vec![
+        (0, vec![10.0, 10.0, 0.0, 5.0]),
+        (1, vec![-3.0, -3.0, 0.0, 5.0]),
+        (0, vec![4.0, 4.0, 4.0, 5.0]),
+    ]);
+    let idx = Arc::new(Index::build_spdtw(&train, loc, 1));
+    let q = [-3.0, 0.0, 0.0, 0.0];
+    let want = brute_topk(&idx, &q, 2);
+    for lanes in [1usize, 2, 4, 8] {
+        let eng = SearchEngine::with_lanes(Arc::clone(&idx), Cascade::default(), lanes);
+        let got = eng.knn_values(&q, 2);
+        assert_eq!(got.neighbors.len(), want.len());
+        for (n, (wd, wj)) in got.neighbors.iter().zip(&want) {
+            assert_eq!(n.dist.to_bits(), wd.to_bits(), "lanes={lanes}");
+            assert_eq!(n.train_idx, *wj, "lanes={lanes}");
+        }
+    }
+}

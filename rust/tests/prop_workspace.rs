@@ -53,6 +53,14 @@ fn dirty(ws: &mut DpWorkspace, rng: &mut Pcg64) {
     ws.top.push((-5.0, 9999));
     ws.dists.clear();
     ws.dists.push((7.0, 1));
+    ws.lane_row_a.clear();
+    ws.lane_row_a.resize(t * 4, -9.0);
+    ws.lane_row_b.clear();
+    ws.lane_row_b.resize(t * 4, 9.0);
+    ws.lane_vals.clear();
+    ws.lane_vals.resize(t * 8, 0.5);
+    ws.lane_entries.clear();
+    ws.lane_entries.resize(t * 5, -2.5);
 }
 
 #[test]

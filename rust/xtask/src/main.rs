@@ -122,7 +122,7 @@ fn rel_of(root: &Path, path: &Path) -> String {
 }
 
 fn hot_alloc_applies(rel: &str) -> bool {
-    if rel == "rust/src/search/early.rs" {
+    if rel == "rust/src/search/early.rs" || rel == "rust/src/search/lanes.rs" {
         return true;
     }
     match rel.strip_prefix("rust/src/measures/") {
@@ -777,6 +777,21 @@ mod tests {
 }
 "#;
 
+const FIX_HOT_ALLOC_LANE: &str = r#"
+fn lane_kernel(t: usize, lanes: usize) -> f64 {
+    let mut lane_vals = vec![0.0; t * lanes];
+    let mut ubs = Vec::new();
+    // lint:allow(hot-alloc): fixture escape hatch for lane scratch.
+    let allowed = vec![0.0; lanes];
+    let mut acc = 0.0;
+    for &u in &allowed {
+        acc += u;
+    }
+    let tails = allowed.to_vec();
+    lane_vals[0] + ubs.drain(..).sum::<f64>() + tails[0] + acc
+}
+"#;
+
 const FIX_SAFETY: &str = r#"
 struct P(*const u8);
 unsafe impl Send for P {}
@@ -849,6 +864,11 @@ struct SelfTestCase {
 fn self_test_cases() -> Vec<SelfTestCase> {
     let partial = check_partial_cmp("fixture.rs", &sanitize(FIX_PARTIAL_CMP));
     let hot = check_hot_alloc("fixture.rs", FIX_HOT_ALLOC, &sanitize(FIX_HOT_ALLOC));
+    let lane = check_hot_alloc(
+        "fixture_lane.rs",
+        FIX_HOT_ALLOC_LANE,
+        &sanitize(FIX_HOT_ALLOC_LANE),
+    );
     let safety = check_safety("fixture.rs", FIX_SAFETY, &sanitize(FIX_SAFETY));
     let err_ok = error_coverage_core(FIX_ERROR_OK, FIX_SERVER);
     let err_bad = error_coverage_core(FIX_ERROR_BAD, FIX_SERVER);
@@ -862,6 +882,11 @@ fn self_test_cases() -> Vec<SelfTestCase> {
             name: "hot-alloc fires on Vec::new/vec!/.to_vec, honors allow",
             expect: 3,
             found: hot.len(),
+        },
+        SelfTestCase {
+            name: "hot-alloc fires on lane-kernel scratch, honors allow",
+            expect: 3,
+            found: lane.len(),
         },
         SelfTestCase {
             name: "safety-comment fires on uncovered unsafe only",
@@ -930,6 +955,31 @@ mod tests {
         // Vec::new, vec!, .to_vec — not the allowed pair, the quoted
         // string, or `LocVec::new`.
         assert_eq!(lines, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn hot_alloc_lane_fixture_fires_outside_marker_window() {
+        let v = check_hot_alloc(
+            "f.rs",
+            FIX_HOT_ALLOC_LANE,
+            &sanitize(FIX_HOT_ALLOC_LANE),
+        );
+        let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+        // vec! scratch, Vec::new ubs, and the .to_vec past the marker's
+        // two-line window — not the allowed vec! right under the marker.
+        assert_eq!(lines, vec![3, 4, 11]);
+    }
+
+    #[test]
+    fn hot_alloc_scope_covers_lane_kernels() {
+        assert!(hot_alloc_applies("rust/src/search/lanes.rs"));
+        assert!(hot_alloc_applies("rust/src/search/early.rs"));
+        assert!(hot_alloc_applies("rust/src/measures/dtw.rs"));
+        // the engine assembles groups (cold per query), workspace/spec
+        // are the arena and config layers — all out of scope
+        assert!(!hot_alloc_applies("rust/src/search/engine.rs"));
+        assert!(!hot_alloc_applies("rust/src/measures/workspace.rs"));
+        assert!(!hot_alloc_applies("rust/src/measures/spec.rs"));
     }
 
     #[test]
