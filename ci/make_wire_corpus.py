@@ -53,6 +53,17 @@ SEEDS = {
         f'{{"proto":2,"op":"register_index","shard":0,"global_ids":[0,2],'
         f'"band":2,"series":[{X},{Y}],"labels":[0,1]}}'
     ),
+    "stream_open": '{"op":"stream_open","index":0,"k":2}',
+    "stream_open_rws": (
+        '{"proto":2,"op":"stream_open","index":0,"k":2,'
+        '"rws":{"d":4,"candidates":8,"audit_every":4},"idle_timeout_ms":60000}'
+    ),
+    "stream_push": f'{{"op":"stream_push","stream":0,"values":{X}}}',
+    "stream_push_deadline": (
+        f'{{"proto":2,"op":"stream_push","stream":0,"values":{Y},"deadline_ms":1000}}'
+    ),
+    "stream_matches": '{"op":"stream_matches","stream":0}',
+    "stream_close": '{"op":"stream_close","stream":0}',
     "unsupported_proto": '{"proto":3,"op":"ping"}',
     "unknown_op": '{"op":"warp_speed"}',
     "shutdown": '{"op":"shutdown"}',

@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Streaming smoke test (CI).
+
+Drives both streaming surfaces end to end with the release binary:
+
+1. `spdtw monitor` over a synthetic drifting stream from `--input`,
+   once on the exact path (report lines must say `path=exact`, the
+   summary must show no recall because nothing was audited) and once
+   with `--rws` at a candidate budget covering the whole corpus with
+   every window audited (lines must say `path=approx`, carry
+   `recall=1.000`, and the summary must measure recall@k = 1.0000).
+
+2. The `stream_*` wire ops against a live `spdtw serve`: an exact
+   session whose `stream_matches` neighbors equal the batch `search`
+   op over the same window, and an `rws` session that is flagged
+   `approx` and reports its measured recall — then clean shutdown over
+   the wire.
+
+Usage: python3 ci/stream_smoke.py [path/to/spdtw]
+"""
+
+import json
+import math
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/spdtw"
+ADDR = ("127.0.0.1", 7990)
+
+
+def expect(cond, what, detail=""):
+    if not cond:
+        raise SystemExit(f"FAIL: {what}: {detail}")
+
+
+def call(req, attempts=40):
+    """One request/reply line against the serve process, retrying
+    connect while it is still booting."""
+    last = None
+    for _ in range(attempts):
+        try:
+            with socket.create_connection(ADDR, timeout=10) as s:
+                f = s.makefile("rw", encoding="utf-8")
+                f.write(json.dumps(req) + "\n")
+                f.flush()
+                return json.loads(f.readline())
+        except OSError as e:
+            last = e
+            time.sleep(0.25)
+    raise SystemExit(f"cannot reach {ADDR}: {last}")
+
+
+def drifting_stream(n):
+    """A slow ramp with a wobble: every window differs from the last,
+    so the monitor keeps re-ranking neighbors as the source drifts."""
+    return [0.1 * i + math.sin(0.7 * i) for i in range(n)]
+
+
+def run_monitor(extra, inp):
+    cmd = [
+        BIN, "monitor", "SyntheticControl",
+        "--max-train", "8", "--max-test", "2", "--k", "2",
+        "--input", str(inp), "--report-every", "1", "--max-windows", "5",
+    ] + extra
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=300)
+    expect(r.returncode == 0, f"monitor exited {r.returncode}", r.stderr or r.stdout)
+    return r.stdout
+
+
+def check_monitor_cli(inp):
+    # exact path: the default, and the report must say so on every line
+    out = run_monitor([], inp)
+    headers = [l for l in out.splitlines() if l.startswith("monitor ")]
+    expect(headers and "path=exact" in headers[0], "exact header", out)
+    match_lines = [l for l in out.splitlines() if l.startswith("window ")]
+    expect(len(match_lines) == 5, "5 reported windows", out)
+    for l in match_lines:
+        expect("path=exact" in l and "idx=" in l and "dist=" in l, "exact match line", l)
+        expect("recall=" not in l, "exact path never reports recall", l)
+    expect("recall@k (audited): n/a" in out, "no audits on the exact path", out)
+
+    # approximate path: candidate budget == corpus (8), every window
+    # audited, so the measured recall must be exactly 1.0
+    out = run_monitor(
+        ["--rws", "--rws-candidates", "8", "--audit-every", "1"], inp
+    )
+    expect("path=approx(rws)" in out, "approx header", out)
+    match_lines = [l for l in out.splitlines() if l.startswith("window ")]
+    expect(len(match_lines) == 5, "5 reported windows", out)
+    for l in match_lines:
+        expect("path=approx" in l, "approx flagged on every line", l)
+        expect("recall=1.000" in l, "audited window recall", l)
+    expect("recall@k (audited): 1.0000" in out, "measured recall@k", out)
+
+    # tuning flags without --rws must refuse, not silently run approx
+    r = subprocess.run(
+        [BIN, "monitor", "SyntheticControl", "--rws-candidates", "4",
+         "--input", str(inp)],
+        capture_output=True, text=True, timeout=300,
+    )
+    expect(r.returncode != 0, "rws tuning without --rws is an error", r.stdout)
+    print("monitor CLI OK: exact + approx(rws, recall=1.0) + flag guard")
+
+
+def check_wire():
+    reg = call({
+        "op": "register_index", "band": 1,
+        "series": [[0, 0, 0, 0], [5, 5, 5, 5], [1, 2, 3, 4], [4, 3, 2, 1]],
+        "labels": [0, 1, 0, 1],
+    })
+    expect(reg.get("ok") is True, "register_index", reg)
+    idx = reg["index"]
+
+    # exact session over a drifting ramp; the last full window is the
+    # final 4 samples, and stream_matches must equal batch search on it
+    r = call({"op": "stream_open", "index": idx, "k": 2})
+    expect(r.get("ok") is True and r.get("approx") is False, "exact open", r)
+    expect(r.get("t") == 4, "window length from the index", r)
+    s = r["stream"]
+    ramp = [round(v, 3) for v in drifting_stream(9)]
+    r = call({"op": "stream_push", "stream": s, "values": ramp})
+    expect(r.get("ok") is True and r.get("windows") == 6, "push ramp", r)
+    m = call({"op": "stream_matches", "stream": s})
+    expect(m.get("approx") is False and m.get("window_start") == 5, "exact matches", m)
+    want = call({"op": "search", "index": idx, "k": 2, "x": ramp[-4:]})
+    expect(
+        [(n["dist"], n["idx"]) for n in m["neighbors"]]
+        == [(n["dist"], n["idx"]) for n in want["neighbors"]],
+        "stream_matches == batch search on the same window",
+        (m, want),
+    )
+    r = call({"op": "stream_close", "stream": s})
+    expect(r.get("ok") is True and r.get("windows") == 6, "close exact", r)
+
+    # approximate session: flagged, and recall measured at full budget
+    r = call({
+        "op": "stream_open", "index": idx, "k": 2,
+        "rws": {"d": 2, "candidates": 4, "audit_every": 1},
+    })
+    expect(r.get("approx") is True, "rws open is flagged", r)
+    s = r["stream"]
+    r = call({"op": "stream_push", "stream": s, "values": ramp})
+    expect(r.get("ok") is True, "push ramp (rws)", r)
+    m = call({"op": "stream_matches", "stream": s})
+    expect(m.get("approx") is True, "rws matches flagged", m)
+    expect(m.get("recall_at_k") == 1.0, "full budget measures recall 1.0", m)
+    r = call({"op": "stream_close", "stream": s})
+    expect(r.get("recall_at_k") == 1.0, "close reports session recall", r)
+
+    met = call({"op": "metrics"})
+    expect(met.get("streams_opened") == 2 and met.get("streams_closed") == 2,
+           "stream metrics", met)
+    print("wire OK: exact session == batch search, rws flagged with recall=1.0")
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        inp = Path(tmp) / "stream.txt"
+        vals = drifting_stream(80)
+        # comments and comma/whitespace mixing are part of the accepted
+        # input grammar — exercise them, not just bare numbers
+        lines = ["# synthetic drifting stream"]
+        for i in range(0, len(vals), 4):
+            lines.append(", ".join(f"{v:.4f}" for v in vals[i:i + 4]) + "  # chunk")
+        inp.write_text("\n".join(lines) + "\n")
+        check_monitor_cli(inp)
+
+    serve = subprocess.Popen([BIN, "serve", "--addr", f"{ADDR[0]}:{ADDR[1]}"])
+    try:
+        check_wire()
+        r = call({"op": "shutdown"}, attempts=4)
+        expect(r.get("ok") is True, "shutdown", r)
+        expect(serve.wait(timeout=30) is not None, "serve exited", "")
+    finally:
+        if serve.poll() is None:
+            serve.kill()
+    print("stream smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,172 @@
+//! Streaming monitor bench (EXPERIMENTS.md §Streaming): per-window
+//! latency and windows/s for (a) the exact sliding-cascade path, (b) a
+//! from-scratch batch search per window — the work streaming replaces —
+//! and (c) the approximate RWS pre-filter across candidate budgets with
+//! measured recall@k, written to `BENCH_STREAM.json`.  Every exact-path
+//! window is cross-checked bitwise against the batch engine before any
+//! timing, so a row can never report the speed of a wrong answer; RWS
+//! rows time an unaudited pass and measure recall on a separate
+//! audit-every-window pass, so the dial's speed and its accuracy come
+//! from runs that each do only their own work.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spdtw::data::synthetic;
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::stream::{RwsConfig, StreamMonitor};
+use spdtw::util::json::Json;
+use spdtw::util::mathx::percentile;
+
+const K: usize = 5;
+
+fn engine(index: &Arc<Index>) -> SearchEngine {
+    SearchEngine::new(Arc::clone(index), Cascade::default())
+}
+
+/// Drive one monitor over the whole stream, timing each sample that
+/// completes a window; returns (windows, total secs, per-window µs).
+fn run_stream(mut monitor: StreamMonitor, stream: &[f64]) -> (u64, f64, Vec<f64>) {
+    let mut lat_us = Vec::new();
+    let mut windows = 0u64;
+    let t0 = Instant::now();
+    for &v in stream {
+        let tq = Instant::now();
+        if std::hint::black_box(monitor.push(v).unwrap()).is_some() {
+            lat_us.push(tq.elapsed().as_secs_f64() * 1e6);
+            windows += 1;
+        }
+    }
+    (windows, t0.elapsed().as_secs_f64(), lat_us)
+}
+
+fn main() {
+    let ds = synthetic::generate_scaled("SyntheticControl", 42, 64, 16).unwrap();
+    let t = ds.series_len();
+    let band = (t as f64 * 0.1).round().max(1.0) as usize;
+    let index = Arc::new(Index::build(&ds.train, band, 2));
+    // the concatenated test split is the drifting stream: every T
+    // samples the source series (and its class) changes under the
+    // monitor's feet
+    let stream: Vec<f64> = ds
+        .test
+        .series
+        .iter()
+        .flat_map(|s| s.values.iter().copied())
+        .collect();
+    let total_windows = stream.len() + 1 - t;
+    println!(
+        "stream bench: {} train series of length {t}, k={K}, {} samples -> {total_windows} windows",
+        ds.train.len(),
+        stream.len()
+    );
+
+    // exactness gate: every streamed window must answer bit-identically
+    // to a from-scratch batch search over the same window
+    let eng = engine(&index);
+    let mut monitor = StreamMonitor::new(engine(&index), K, None).unwrap();
+    let mut checked = 0usize;
+    for (i, &v) in stream.iter().enumerate() {
+        if let Some(rep) = monitor.push(v).unwrap() {
+            let start = i + 1 - t;
+            let want = eng.knn_values(&stream[start..=i], K);
+            assert_eq!(rep.neighbors.len(), want.neighbors.len());
+            for (g, w) in rep.neighbors.iter().zip(&want.neighbors) {
+                assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "window {start}");
+                assert_eq!(g.train_idx, w.train_idx, "window {start}");
+            }
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, total_windows);
+    println!("  exactness: {checked}/{total_windows} windows bit-identical to batch");
+
+    let mut records: Vec<Json> = Vec::new();
+    let mut row = |label: &str, windows: u64, secs: f64, lat_us: &[f64], extra: Vec<(&str, Json)>| {
+        let wps = windows as f64 / secs;
+        let p50 = percentile(lat_us, 50.0);
+        let p99 = percentile(lat_us, 99.0);
+        println!("  {label:<24} {wps:>8.0} windows/s  p50 {p50:>7.1} us  p99 {p99:>7.1} us");
+        let mut fields = vec![
+            ("path", Json::str(label)),
+            ("windows", Json::num(windows as f64)),
+            ("secs", Json::num(secs)),
+            ("windows_per_s", Json::num(wps)),
+            ("p50_us", Json::num(p50)),
+            ("p99_us", Json::num(p99)),
+        ];
+        fields.extend(extra);
+        records.push(Json::obj(fields));
+    };
+
+    // row: exact streaming (sliding envelopes, incremental window)
+    let (w, secs, lat) = run_stream(StreamMonitor::new(engine(&index), K, None).unwrap(), &stream);
+    row("stream_exact", w, secs, &lat, vec![("recall_at_k", Json::num(1.0))]);
+
+    // row: batch per window — rebuild the query envelope from scratch
+    // every step, the cost the sliding monitor amortizes away
+    {
+        let mut lat_us = Vec::with_capacity(total_windows);
+        let t0 = Instant::now();
+        for s in 0..total_windows {
+            let tq = Instant::now();
+            std::hint::black_box(eng.knn_values(&stream[s..s + t], K));
+            lat_us.push(tq.elapsed().as_secs_f64() * 1e6);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        row(
+            "batch_per_window",
+            total_windows as u64,
+            secs,
+            &lat_us,
+            vec![("recall_at_k", Json::num(1.0))],
+        );
+    }
+
+    // rows: the RWS recall-vs-speed dial.  The timed pass never audits;
+    // recall@k is measured on a second pass auditing every window.
+    for candidates in [4usize, 8, 16, 32] {
+        let timed_cfg = RwsConfig {
+            candidates,
+            audit_every: 0,
+            ..RwsConfig::default()
+        };
+        let (w, secs, lat) =
+            run_stream(StreamMonitor::new(engine(&index), K, Some(timed_cfg)).unwrap(), &stream);
+        let audit_cfg = RwsConfig {
+            candidates,
+            audit_every: 1,
+            ..RwsConfig::default()
+        };
+        let mut audited = StreamMonitor::new(engine(&index), K, Some(audit_cfg)).unwrap();
+        for &v in &stream {
+            audited.push(v).unwrap();
+        }
+        let recall = audited.stats().recall().expect("every window audited");
+        println!("    rws candidates={candidates}: measured recall@{K} = {recall:.3}");
+        row(
+            &format!("stream_rws_c{candidates}"),
+            w,
+            secs,
+            &lat,
+            vec![
+                ("candidates", Json::num(candidates as f64)),
+                ("recall_at_k", Json::num(recall)),
+            ],
+        );
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("stream_monitor")),
+        ("dataset", Json::str(ds.name.clone())),
+        ("train", Json::num(ds.train.len() as f64)),
+        ("series_len", Json::num(t as f64)),
+        ("band", Json::num(band as f64)),
+        ("k", Json::num(K as f64)),
+        ("samples", Json::num(stream.len() as f64)),
+        ("records", Json::Arr(records)),
+    ]);
+    if std::fs::write("BENCH_STREAM.json", out.to_pretty()).is_ok() {
+        println!("wrote BENCH_STREAM.json");
+    }
+}

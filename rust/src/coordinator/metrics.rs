@@ -69,6 +69,18 @@ pub struct Metrics {
     /// (budget exhausted pre-dispatch, at epoch claim, or mid-wait) —
     /// counted once per request at the server's dispatch choke point.
     pub deadlines_exceeded: AtomicU64,
+    // ---- streaming sessions (`stream_*` op family) ----
+    /// Stream sessions opened via `stream_open`.
+    pub streams_opened: AtomicU64,
+    /// Stream sessions closed by the client (`stream_close`).
+    pub streams_closed: AtomicU64,
+    /// Stream sessions reclaimed by the idle-timeout sweep.
+    pub streams_evicted: AtomicU64,
+    /// Samples ingested across all stream sessions.
+    pub stream_samples: AtomicU64,
+    /// Windows evaluated across all stream sessions (each also folds
+    /// its cascade counters into the search totals above).
+    pub stream_windows: AtomicU64,
     lat: [AtomicU64; LAT_BUCKETS],
     lat_sum_us: AtomicU64,
 }
@@ -143,6 +155,11 @@ impl Metrics {
             requests_inflight: self.requests_inflight.load(Ordering::SeqCst),
             peak_concurrent_requests: self.peak_concurrent_requests.load(Ordering::SeqCst),
             deadlines_exceeded: self.deadlines_exceeded.load(Ordering::Relaxed),
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            streams_closed: self.streams_closed.load(Ordering::Relaxed),
+            streams_evicted: self.streams_evicted.load(Ordering::Relaxed),
+            stream_samples: self.stream_samples.load(Ordering::Relaxed),
+            stream_windows: self.stream_windows.load(Ordering::Relaxed),
             pool: crate::pool::pool_stats(),
             native_queue_depth: 0,
             mean_latency_us: if completed > 0 {
@@ -209,6 +226,13 @@ pub struct Snapshot {
     pub peak_concurrent_requests: u64,
     /// Requests whose `deadline_ms` budget drained before completion.
     pub deadlines_exceeded: u64,
+    /// Stream sessions opened / client-closed / idle-evicted.
+    pub streams_opened: u64,
+    pub streams_closed: u64,
+    pub streams_evicted: u64,
+    /// Samples ingested and windows evaluated across stream sessions.
+    pub stream_samples: u64,
+    pub stream_windows: u64,
     /// Compute-pool scheduler state at snapshot time (live/peak epoch
     /// counts prove multi-client overlap — see `pool::PoolStats`).
     pub pool: crate::pool::PoolStats,
@@ -266,6 +290,8 @@ impl Snapshot {
              concurrency: {} batch / {} gram requests, {} inflight (peak {}), \
              pool {} epochs live (peak {}), native queue {}\n\
              deadlines: {} exceeded\n\
+             streams: {} opened ({} closed, {} idle-evicted), \
+             {} samples, {} windows\n\
              latency: mean {:.1} µs, p50 ≤ {:.0} µs, p99 ≤ {:.0} µs",
             self.submitted,
             self.completed,
@@ -301,6 +327,11 @@ impl Snapshot {
             self.pool.peak_concurrent_epochs,
             self.native_queue_depth,
             self.deadlines_exceeded,
+            self.streams_opened,
+            self.streams_closed,
+            self.streams_evicted,
+            self.stream_samples,
+            self.stream_windows,
             self.mean_latency_us,
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
@@ -345,6 +376,7 @@ mod tests {
         assert!(r.contains("search:"));
         assert!(r.contains("index store:"));
         assert!(r.contains("concurrency:"));
+        assert!(r.contains("streams:"));
     }
 
     #[test]

@@ -56,6 +56,7 @@ use crate::runtime::{
 };
 use crate::search::{persist, Cascade, Index, SearchEngine};
 use crate::sparse::LocMatrix;
+use crate::stream::{MatchReport, RwsConfig, StreamMonitor, StreamStats};
 
 use batcher::{Batcher, ReadyBatch};
 use metrics::{Metrics, Snapshot};
@@ -66,7 +67,7 @@ use request::{
 use router::Router;
 use state::{
     BuiltMeasure, GridKey, GridRegistry, IndexKey, IndexRegistry, MeasureEntry, MeasureKey,
-    MeasureRegistry,
+    MeasureRegistry, StreamKey, StreamRegistry, StreamSession,
 };
 
 enum DispatchMsg {
@@ -82,6 +83,45 @@ enum DispatchMsg {
 /// unlimited (they bind per request and are dropped after it).
 pub const MAX_REGISTERED_MEASURES: usize = 1024;
 
+/// Upper bound on simultaneously open streaming sessions: each pins a
+/// [`StreamMonitor`] (DP workspace + optional RWS embedding of the
+/// whole corpus), so an unbounded registry would let a looping
+/// `stream_open` client accumulate unbounded memory.  Idle sessions are
+/// reclaimed by the sweep; well below the measure cap because sessions
+/// are per-client state, not shared models.
+pub const MAX_STREAM_SESSIONS: usize = 64;
+
+/// Idle budget applied to streaming sessions whose `stream_open` did
+/// not set one: five minutes without any `stream_*` op reclaims the
+/// session.
+pub const DEFAULT_STREAM_IDLE_MS: u64 = 300_000;
+
+/// What one [`Coordinator::stream_push`] ingested.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamPushOutcome {
+    /// Samples accepted.  On a deadline or bad-sample error the prefix
+    /// before the failure stays ingested (the session is consistent up
+    /// to it) but the call reports the error instead of this outcome.
+    pub pushed: u64,
+    /// Windows that completed — and were searched — during this push.
+    pub windows: u64,
+    /// Whether the session has seen at least one full window.
+    pub ready: bool,
+}
+
+/// Snapshot returned by [`Coordinator::stream_matches`].
+#[derive(Clone, Debug)]
+pub struct StreamMatchesOutcome {
+    /// Latest per-window report (`None` until the first full window).
+    pub report: Option<MatchReport>,
+    /// Whether the session routes through the RWS approximate
+    /// pre-filter (the flag is session-level: an approximate session
+    /// can never be mistaken for the exact default).
+    pub approx: bool,
+    /// Cumulative session statistics.
+    pub stats: StreamStats,
+}
+
 /// The coordinator service.  Create with [`Coordinator::start`]; dropped
 /// coordinators drain and join all threads.
 pub struct Coordinator {
@@ -95,6 +135,7 @@ pub struct Coordinator {
     grids: Mutex<GridRegistry>,
     indexes: Mutex<IndexRegistry>,
     measures: Mutex<MeasureRegistry>,
+    streams: Mutex<StreamRegistry>,
     pjrt: Option<PjrtHandle>,
 }
 
@@ -259,6 +300,7 @@ impl Coordinator {
             grids: Mutex::new(GridRegistry::new()),
             indexes: Mutex::new(index_reg),
             measures: Mutex::new(MeasureRegistry::new()),
+            streams: Mutex::new(StreamRegistry::new()),
             pjrt,
         };
         // Measures replay after construction (binding needs the grid
@@ -1104,6 +1146,160 @@ impl Coordinator {
         self.metrics.deadlines_exceeded.fetch_add(1, Ordering::Relaxed);
     }
 
+    // ---- streaming sessions (`stream_*` op family) -------------------
+
+    /// Open a streaming session: pins a [`StreamMonitor`] over the
+    /// resolved index.  `idle_timeout_ms: None` applies
+    /// [`DEFAULT_STREAM_IDLE_MS`]; sessions idle past their budget are
+    /// reclaimed lazily by the next `stream_*` call (any session).
+    pub fn stream_open(
+        &self,
+        key: IndexKey,
+        k: usize,
+        cascade: Cascade,
+        rws: Option<RwsConfig>,
+        idle_timeout_ms: Option<u64>,
+    ) -> Result<StreamKey> {
+        let index = self.index(key)?;
+        let engine = SearchEngine::new(index, cascade);
+        let monitor = StreamMonitor::new(engine, k, rws)?;
+        let idle = Duration::from_millis(idle_timeout_ms.unwrap_or(DEFAULT_STREAM_IDLE_MS));
+        let mut reg = self.streams.lock().unwrap();
+        // Lazy reclamation under the same guard as the cap check: a
+        // registry full of abandoned sessions must not lock out a live
+        // client.
+        let evicted = reg.sweep_idle(Instant::now());
+        if evicted > 0 {
+            self.metrics
+                .streams_evicted
+                .fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+        if reg.len() >= MAX_STREAM_SESSIONS {
+            return Err(Error::config(format!(
+                "stream session limit reached ({MAX_STREAM_SESSIONS}); \
+                 close sessions or let idle ones expire"
+            )));
+        }
+        let skey = reg.insert(StreamSession::new(monitor, idle));
+        drop(reg);
+        self.metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
+        Ok(skey)
+    }
+
+    /// Resolve a live session, sweeping idle ones first so an expired
+    /// key answers with the typed `not_found` — never a stale session.
+    fn stream_session(&self, key: StreamKey) -> Result<Arc<Mutex<StreamSession>>> {
+        let mut reg = self.streams.lock().unwrap();
+        let evicted = reg.sweep_idle(Instant::now());
+        if evicted > 0 {
+            self.metrics
+                .streams_evicted
+                .fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+        reg.get(key)
+            .ok_or_else(|| Error::not_found("stream", key.0.to_string()))
+    }
+
+    /// Ingest samples into a session.  Each completed window runs the
+    /// exact cascade (or the flagged approximate pre-filter) inline on
+    /// the calling thread — streaming latency is per-sample, so windows
+    /// never queue behind batch epochs.  The deadline is re-checked
+    /// between samples: expiry keeps the already-ingested prefix (the
+    /// session stays consistent) and returns the typed error.
+    pub fn stream_push(
+        &self,
+        key: StreamKey,
+        values: &[f64],
+        deadline: Option<Deadline>,
+    ) -> Result<StreamPushOutcome> {
+        let session = self.stream_session(key)?;
+        let mut s = session.lock().unwrap();
+        s.touch();
+        let mut pushed = 0u64;
+        let mut windows = 0u64;
+        let mut failure = None;
+        for &v in values {
+            if let Some(d) = &deadline {
+                if d.expired() {
+                    failure = Some(d.error());
+                    break;
+                }
+            }
+            match s.monitor.push(v) {
+                Ok(report) => {
+                    pushed += 1;
+                    if let Some(report) = report {
+                        windows += 1;
+                        // each window's prune counters fold into the
+                        // service metrics as one search
+                        let stats = report.stats;
+                        self.metrics.record_search(&stats);
+                    }
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        let ready = s.monitor.ready();
+        s.touch();
+        drop(s);
+        self.metrics
+            .stream_samples
+            .fetch_add(pushed, Ordering::Relaxed);
+        self.metrics
+            .stream_windows
+            .fetch_add(windows, Ordering::Relaxed);
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(StreamPushOutcome {
+                pushed,
+                windows,
+                ready,
+            }),
+        }
+    }
+
+    /// The registered window length (= indexed `T`) of a live session.
+    pub fn stream_window_len(&self, key: StreamKey) -> Result<usize> {
+        let session = self.stream_session(key)?;
+        let s = session.lock().unwrap();
+        Ok(s.monitor.window_len())
+    }
+
+    /// Snapshot the latest per-window match report plus cumulative
+    /// session statistics.
+    pub fn stream_matches(&self, key: StreamKey) -> Result<StreamMatchesOutcome> {
+        let session = self.stream_session(key)?;
+        let mut s = session.lock().unwrap();
+        s.touch();
+        Ok(StreamMatchesOutcome {
+            report: s.monitor.last().cloned(),
+            approx: s.monitor.is_approx(),
+            stats: *s.monitor.stats(),
+        })
+    }
+
+    /// Close a session, returning its final cumulative statistics.
+    pub fn stream_close(&self, key: StreamKey) -> Result<StreamStats> {
+        let session = self
+            .streams
+            .lock()
+            .unwrap()
+            .remove(key)
+            .ok_or_else(|| Error::not_found("stream", key.0.to_string()))?;
+        self.metrics.streams_closed.fetch_add(1, Ordering::Relaxed);
+        let s = session.lock().unwrap();
+        Ok(*s.monitor.stats())
+    }
+
+    /// Open streaming sessions right now (idle ones not yet swept
+    /// count until any `stream_*` call reclaims them).
+    pub fn stream_count(&self) -> usize {
+        self.streams.lock().unwrap().len()
+    }
+
     /// Wait for every native job to finish (tests / clean shutdown).
     pub fn wait_native_idle(&self) {
         self.native_pool.wait_idle();
@@ -1405,6 +1601,112 @@ mod tests {
         assert_eq!(snap.search_queries, 1);
         assert_eq!(snap.search_candidates, ds.train.len() as u64);
         assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn stream_session_lifecycle_updates_metrics() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 3, 10, 4).unwrap();
+        let t = ds.train.series_len();
+        let key = c.register_index(Index::build(&ds.train, 4, 2));
+        let skey = c.stream_open(key, 3, Cascade::default(), None, None).unwrap();
+        assert_eq!(c.stream_count(), 1);
+
+        // first window completes exactly at t samples
+        let first = c
+            .stream_push(skey, &ds.test.series[0].values, None)
+            .unwrap();
+        assert_eq!(first.pushed, t as u64);
+        assert_eq!(first.windows, 1);
+        assert!(first.ready);
+        // ten more samples slide ten more windows
+        let second = c
+            .stream_push(skey, &ds.test.series[1].values[..10], None)
+            .unwrap();
+        assert_eq!(second.windows, 10);
+
+        // the served report is the exact cascade over the latest window
+        let m = c.stream_matches(skey).unwrap();
+        assert!(!m.approx);
+        let rep = m.report.expect("ready session has a report");
+        assert_eq!(rep.neighbors.len(), 3);
+        assert!(rep.recall.is_none());
+        let mut window = ds.test.series[0].values.clone();
+        window.extend_from_slice(&ds.test.series[1].values[..10]);
+        let window = &window[window.len() - t..];
+        let engine = SearchEngine::new(Arc::new(Index::build(&ds.train, 4, 2)), Cascade::default());
+        let want = engine.knn_values(window, 3);
+        for (got, exp) in rep.neighbors.iter().zip(&want.neighbors) {
+            assert_eq!(got.train_idx, exp.train_idx);
+            assert_eq!(got.dist.to_bits(), exp.dist.to_bits());
+        }
+        assert_eq!(rep.stats, want.stats);
+
+        let stats = c.stream_close(skey).unwrap();
+        assert_eq!(stats.samples, (t + 10) as u64);
+        assert_eq!(stats.windows, 11);
+        assert_eq!(c.stream_count(), 0);
+        assert!(c.stream_push(skey, &[0.0], None).is_err());
+
+        let snap = c.metrics();
+        assert_eq!(snap.streams_opened, 1);
+        assert_eq!(snap.streams_closed, 1);
+        assert_eq!(snap.stream_samples, (t + 10) as u64);
+        assert_eq!(snap.stream_windows, 11);
+        // every window folded into the service-wide search counters
+        assert_eq!(snap.search_queries, 11);
+    }
+
+    #[test]
+    fn stream_push_deadline_keeps_prefix_consistent() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 5, 8, 2).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 4, 2));
+        let skey = c.stream_open(key, 1, Cascade::default(), None, None).unwrap();
+        // an already-expired budget rejects before ingesting anything
+        let err = c
+            .stream_push(skey, &ds.test.series[0].values, Some(Deadline::in_ms(0)))
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "got: {err}");
+        // the session survives and stays consistent
+        let m = c.stream_matches(skey).unwrap();
+        assert_eq!(m.stats.samples, 0);
+        assert!(m.report.is_none());
+        // a bad sample errors but keeps the valid prefix
+        let err = c
+            .stream_push(skey, &[1.0, 2.0, f64::NAN], None)
+            .unwrap_err();
+        assert!(err.to_string().contains("finite"), "got: {err}");
+        assert_eq!(c.stream_matches(skey).unwrap().stats.samples, 2);
+    }
+
+    #[test]
+    fn stream_open_sweeps_idle_and_enforces_cap() {
+        use crate::data::synthetic;
+        let c = coord();
+        let ds = synthetic::generate_scaled("CBF", 7, 6, 2).unwrap();
+        let key = c.register_index(Index::build(&ds.train, 4, 2));
+        // a zero idle budget expires immediately: the next stream op
+        // (here, another open) reclaims it and its key stops resolving
+        let dead = c
+            .stream_open(key, 1, Cascade::default(), None, Some(0))
+            .unwrap();
+        assert_eq!(c.stream_count(), 1);
+        let live = c.stream_open(key, 1, Cascade::default(), None, None).unwrap();
+        assert_eq!(c.stream_count(), 1);
+        assert!(c.stream_matches(dead).is_err());
+        assert!(c.stream_matches(live).is_ok());
+        assert!(c.metrics().streams_evicted >= 1);
+        // the cap rejects the 65th live session with a typed config error
+        for _ in c.stream_count()..MAX_STREAM_SESSIONS {
+            c.stream_open(key, 1, Cascade::default(), None, None).unwrap();
+        }
+        let err = c
+            .stream_open(key, 1, Cascade::default(), None, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("limit"), "got: {err}");
     }
 
     #[test]

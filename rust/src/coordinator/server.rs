@@ -124,6 +124,33 @@
 //! `partial: {shards_ok, shards_total, missing}` block (see
 //! [`crate::shard::front`]).
 //!
+//! ## Streaming
+//!
+//! The `stream_*` op family serves online subsequence k-NN (see
+//! [`crate::stream`]): a session pins a [`crate::stream::StreamMonitor`]
+//! over a registered index, samples are pushed incrementally, and every
+//! completed sliding window is searched with the full exact cascade —
+//! per-window results are bit-identical to a batch `search` over the
+//! same window.  Passing an `rws` object on open switches the session
+//! to the flagged approximate pre-filter (Random Warping Series); the
+//! reply's `approx` flag and the audited `recall_at_k` keep the
+//! approximation observable, never silent.
+//!
+//! | op | extra request fields | reply |
+//! |---|---|---|
+//! | `stream_open` | `index`, optional `k` (default 1), `cascade`, `rws` `{d, len, candidates, seed, audit_every}`, `idle_timeout_ms` | `stream` (session id), `t` (window length), `approx` |
+//! | `stream_push` | `stream`, `values` (all-finite, rejected whole otherwise), optional `deadline_ms` | `pushed`, `windows` (completed this push), `ready` |
+//! | `stream_matches` | `stream` | `ready`, `approx`, `samples`, `windows`; once ready: `window_start`, `neighbors`, `pruned`, `full_evals`, `dp_cells`, per-window `recall` on audited windows; session-mean `recall_at_k` when audits ran |
+//! | `stream_close` | `stream` | `closed`, final `samples`/`windows`, `recall_at_k` when audits ran |
+//!
+//! Sessions are capped ([`MAX_STREAM_SESSIONS`](super::MAX_STREAM_SESSIONS))
+//! and carry an idle budget (default
+//! [`DEFAULT_STREAM_IDLE_MS`](super::DEFAULT_STREAM_IDLE_MS)): any
+//! `stream_*` call lazily sweeps expired sessions, whose keys then
+//! answer with the typed `not_found` code.  A `deadline_ms` on
+//! `stream_push` is re-checked between samples; expiry keeps the
+//! already-ingested prefix and answers `deadline_exceeded`.
+//!
 //! ## Fault injection (chaos testing)
 //!
 //! [`Server::start_with_faults`] serves the identical protocol through
@@ -143,15 +170,16 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::coordinator::request::Deadline;
-use crate::coordinator::state::{GridKey, IndexKey, MeasureKey};
+use crate::coordinator::state::{GridKey, IndexKey, MeasureKey, StreamKey};
 use crate::coordinator::Coordinator;
 use crate::data::{LabeledSet, TimeSeries};
 use crate::error::Result;
 use crate::measures::spec::{GridSpec, MeasureSpec};
 use crate::search::index::content_hash_of;
-use crate::search::{Cascade, Index};
+use crate::search::{Cascade, Index, Neighbor};
 use crate::shard::fault::{ConnectFault, FaultHook, NoFaults, ReplyFault};
 use crate::sparse::LocMatrix;
+use crate::stream::RwsConfig;
 use crate::util::json::Json;
 
 /// A running server; dropping stops accepting (existing connections
@@ -328,7 +356,14 @@ pub(crate) fn parse_cascade(req: &Json) -> Result<Cascade> {
 }
 
 fn neighbors_json(out: &crate::coordinator::request::SearchOutcome) -> Json {
-    Json::arr(out.neighbors.iter().map(|n| {
+    neighbors_json_slice(&out.neighbors)
+}
+
+/// The shared neighbor-list shape; streaming window reports carry raw
+/// neighbors rather than a ticket outcome, so the slice form is the
+/// common denominator.
+fn neighbors_json_slice(neighbors: &[Neighbor]) -> Json {
+    Json::arr(neighbors.iter().map(|n| {
         Json::obj(vec![
             ("dist", Json::num(n.dist)),
             ("label", Json::num(n.label as f64)),
@@ -399,6 +434,51 @@ pub(crate) fn parse_deadline(req: &Json) -> Result<Option<Deadline>> {
             Ok(Some(Deadline::in_ms(ms as u64)))
         }
     }
+}
+
+/// The optional `rws` parameter on `stream_open`: absent = the exact
+/// streaming default; an object opts the session into the approximate
+/// RWS pre-filter, with any omitted knob taking its
+/// [`RwsConfig::default`] value.  Validation of the resulting config
+/// (non-zero `d`/`candidates`) happens in the monitor constructor, so
+/// the wire and the library agree on what is rejected.
+fn parse_rws(req: &Json) -> Result<Option<RwsConfig>> {
+    let obj = match req.get("rws") {
+        None => return Ok(None),
+        Some(o @ Json::Obj(_)) => o,
+        Some(_) => {
+            return Err(crate::error::Error::config(
+                "'rws' must be an object ({d, len, candidates, seed, audit_every})",
+            ))
+        }
+    };
+    let get_usize = |name: &'static str| -> Result<Option<usize>> {
+        match obj.get(name) {
+            None => Ok(None),
+            Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                crate::error::Error::config(format!(
+                    "'rws.{name}' must be a non-negative integer"
+                ))
+            }),
+        }
+    };
+    let mut cfg = RwsConfig::default();
+    if let Some(d) = get_usize("d")? {
+        cfg.d = d;
+    }
+    if let Some(len) = get_usize("len")? {
+        cfg.len = len;
+    }
+    if let Some(c) = get_usize("candidates")? {
+        cfg.candidates = c;
+    }
+    if let Some(s) = get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    if let Some(a) = get_usize("audit_every")? {
+        cfg.audit_every = a as u64;
+    }
+    Ok(Some(cfg))
 }
 
 /// The v2 `measure` parameter: an inline spec object or a key returned
@@ -906,6 +986,94 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                 ]))
             }
         }
+        "stream_open" => {
+            // open an online-monitor session over a registered index;
+            // the session id in the reply addresses every later
+            // stream_* op.  Absent `rws` = the exact path (the
+            // default); an `rws` object opts into the flagged
+            // approximate pre-filter.
+            let key = IndexKey(req.req_usize("index")? as u64);
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let cascade = parse_cascade(req)?;
+            let rws = parse_rws(req)?;
+            let idle = match req.get("idle_timeout_ms") {
+                None => None,
+                Some(v) => Some(v.as_usize().ok_or_else(|| {
+                    crate::error::Error::config(
+                        "'idle_timeout_ms' must be a non-negative integer",
+                    )
+                })? as u64),
+            };
+            let approx = rws.is_some();
+            let skey = coord.stream_open(key, k, cascade, rws, idle)?;
+            let t = coord.stream_window_len(skey)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("stream", Json::num(skey.0 as f64)),
+                ("t", Json::num(t as f64)),
+                ("approx", Json::Bool(approx)),
+            ]))
+        }
+        "stream_push" => {
+            // ingest samples; completed windows run the cascade inline.
+            // The whole array is finite-checked before any sample is
+            // ingested, so a wire push is all-or-nothing.
+            let skey = StreamKey(req.req_usize("stream")? as u64);
+            let arr = req.req_arr("values")?;
+            let values: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+            let values = values.ok_or_else(|| {
+                crate::error::Error::config("'values' must be numbers")
+            })?;
+            check_finite(&values, "values")?;
+            let out = coord.stream_push(skey, &values, deadline)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pushed", Json::num(out.pushed as f64)),
+                ("windows", Json::num(out.windows as f64)),
+                ("ready", Json::Bool(out.ready)),
+            ]))
+        }
+        "stream_matches" => {
+            let skey = StreamKey(req.req_usize("stream")? as u64);
+            let m = coord.stream_matches(skey)?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("ready", Json::Bool(m.report.is_some())),
+                ("approx", Json::Bool(m.approx)),
+                ("samples", Json::num(m.stats.samples as f64)),
+                ("windows", Json::num(m.stats.windows as f64)),
+            ];
+            if let Some(rep) = &m.report {
+                fields.push(("window_start", Json::num(rep.window_start as f64)));
+                fields.push(("neighbors", neighbors_json_slice(&rep.neighbors)));
+                fields.push(("pruned", Json::num(rep.stats.pruned() as f64)));
+                fields.push(("full_evals", Json::num(rep.stats.full_evals as f64)));
+                fields.push(("dp_cells", Json::num(rep.stats.dp_cells as f64)));
+                // per-window recall is only present on audited windows
+                if let Some(r) = rep.recall {
+                    fields.push(("recall", Json::num(r)));
+                }
+            }
+            // session-level measured recall: mean over audited windows
+            if let Some(r) = m.stats.recall() {
+                fields.push(("recall_at_k", Json::num(r)));
+            }
+            Ok(Json::obj(fields))
+        }
+        "stream_close" => {
+            let skey = StreamKey(req.req_usize("stream")? as u64);
+            let stats = coord.stream_close(skey)?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("closed", Json::Bool(true)),
+                ("samples", Json::num(stats.samples as f64)),
+                ("windows", Json::num(stats.windows as f64)),
+            ];
+            if let Some(r) = stats.recall() {
+                fields.push(("recall_at_k", Json::num(r)));
+            }
+            Ok(Json::obj(fields))
+        }
         "register_measure" => {
             // bind once at the boundary: parameters validated, grids
             // resolved; later dist/kernel ops reference the key
@@ -999,6 +1167,11 @@ fn handle_op(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Result<Json>
                     Json::num(s.measure_load_failures as f64),
                 ),
                 ("mean_latency_us", Json::num(s.mean_latency_us)),
+                ("streams_opened", Json::num(s.streams_opened as f64)),
+                ("streams_closed", Json::num(s.streams_closed as f64)),
+                ("streams_evicted", Json::num(s.streams_evicted as f64)),
+                ("stream_samples", Json::num(s.stream_samples as f64)),
+                ("stream_windows", Json::num(s.stream_windows as f64)),
             ]))
         }
         "shutdown" => {
@@ -1268,6 +1441,122 @@ mod tests {
         assert_eq!(m.req_f64("search_batches").unwrap(), 1.0);
         assert!(m.req_f64("peak_concurrent_requests").unwrap() >= 1.0);
         server.stop();
+    }
+
+    #[test]
+    fn stream_ops_roundtrip_and_match_batch_search() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let reg = dispatch_line(
+            concat!(
+                r#"{"op":"register_index","band":1,"#,
+                r#""series":[[0,0,0],[5,5,5],[0.1,0.1,0.1]],"labels":[0,1,0]}"#
+            ),
+            &coord,
+        );
+        assert_eq!(reg.get("ok"), Some(&Json::Bool(true)), "{reg:?}");
+        let idx = reg.req_usize("index").unwrap();
+
+        let open = dispatch_line(
+            &format!(r#"{{"op":"stream_open","index":{idx},"k":2}}"#),
+            &coord,
+        );
+        assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
+        assert_eq!(open.req_usize("t").unwrap(), 3);
+        assert_eq!(open.get("approx"), Some(&Json::Bool(false)));
+        let sid = open.req_usize("stream").unwrap();
+
+        let push = dispatch_line(
+            &format!(r#"{{"op":"stream_push","stream":{sid},"values":[0,0,0]}}"#),
+            &coord,
+        );
+        assert_eq!(push.get("ok"), Some(&Json::Bool(true)), "{push:?}");
+        assert_eq!(push.req_usize("windows").unwrap(), 1);
+        assert_eq!(push.get("ready"), Some(&Json::Bool(true)));
+
+        // the served window must answer exactly like the batch search op
+        let m = dispatch_line(&format!(r#"{{"op":"stream_matches","stream":{sid}}}"#), &coord);
+        assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m:?}");
+        assert_eq!(m.get("approx"), Some(&Json::Bool(false)));
+        assert_eq!(m.req_usize("window_start").unwrap(), 0);
+        let want = dispatch_line(
+            &format!(r#"{{"op":"search","index":{idx},"k":2,"x":[0,0,0]}}"#),
+            &coord,
+        );
+        let got = m.req_arr("neighbors").unwrap();
+        let exp = want.req_arr("neighbors").unwrap();
+        assert_eq!(got.len(), exp.len());
+        for (g, e) in got.iter().zip(exp) {
+            assert_eq!(g.req_f64("dist").unwrap().to_bits(), e.req_f64("dist").unwrap().to_bits());
+            assert_eq!(g.req_usize("idx").unwrap(), e.req_usize("idx").unwrap());
+        }
+
+        // sliding one sample forward evaluates exactly one more window
+        let push2 = dispatch_line(
+            &format!(r#"{{"op":"stream_push","stream":{sid},"values":[5]}}"#),
+            &coord,
+        );
+        assert_eq!(push2.req_usize("windows").unwrap(), 1);
+
+        let close = dispatch_line(&format!(r#"{{"op":"stream_close","stream":{sid}}}"#), &coord);
+        assert_eq!(close.get("ok"), Some(&Json::Bool(true)), "{close:?}");
+        assert_eq!(close.req_usize("samples").unwrap(), 4);
+        assert_eq!(close.req_usize("windows").unwrap(), 2);
+
+        // error matrix: typed codes, session gone after close
+        for (bad, code) in [
+            (format!(r#"{{"op":"stream_push","stream":{sid},"values":[1]}}"#), "not_found"),
+            (r#"{"op":"stream_open","index":99,"k":1}"#.to_string(), "not_found"),
+            (
+                format!(r#"{{"op":"stream_open","index":{idx},"k":0}}"#),
+                "bad_request",
+            ),
+            (
+                format!(r#"{{"op":"stream_open","index":{idx},"rws":7}}"#),
+                "bad_request",
+            ),
+            (
+                format!(r#"{{"op":"stream_open","index":{idx},"rws":{{"d":0}}}}"#),
+                "bad_request",
+            ),
+        ] {
+            let rep = dispatch_line(&bad, &coord);
+            assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert_eq!(rep.get("code"), Some(&Json::str(code)), "{bad} -> {rep:?}");
+        }
+
+        let metrics = dispatch_line(r#"{"op":"metrics"}"#, &coord);
+        assert_eq!(metrics.req_f64("streams_opened").unwrap(), 1.0);
+        assert_eq!(metrics.req_f64("streams_closed").unwrap(), 1.0);
+        assert_eq!(metrics.req_f64("stream_samples").unwrap(), 4.0);
+        assert_eq!(metrics.req_f64("stream_windows").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn stream_push_rejects_non_finite_whole_array() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+        let reg = dispatch_line(
+            r#"{"op":"register_index","band":1,"series":[[0,0,0],[5,5,5]]}"#,
+            &coord,
+        );
+        let idx = reg.req_usize("index").unwrap();
+        let open = dispatch_line(&format!(r#"{{"op":"stream_open","index":{idx}}}"#), &coord);
+        let sid = open.req_usize("stream").unwrap();
+        // wire pushes are all-or-nothing: one bad value rejects the
+        // array before any sample reaches the monitor
+        let rep = dispatch_line(
+            &format!(r#"{{"op":"stream_push","stream":{sid},"values":[1,2,1e999]}}"#),
+            &coord,
+        );
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{rep:?}");
+        assert_eq!(rep.get("code"), Some(&Json::str("bad_input")), "{rep:?}");
+        let rep = dispatch_line(
+            &format!(r#"{{"op":"stream_push","stream":{sid},"values":[1,2,"x"]}}"#),
+            &coord,
+        );
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(false)), "{rep:?}");
+        assert_eq!(rep.get("code"), Some(&Json::str("bad_request")), "{rep:?}");
+        let m = dispatch_line(&format!(r#"{{"op":"stream_matches","stream":{sid}}}"#), &coord);
+        assert_eq!(m.req_usize("samples").unwrap(), 0);
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! host-resident (the cascade is branchy, pointer-light CPU work).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::measures::spec::MeasureSpec;
 use crate::measures::{KernelMeasure, Measure};
 use crate::search::Index;
 use crate::sparse::LocMatrix;
+use crate::stream::StreamMonitor;
 
 /// Opaque registered-grid identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -267,6 +269,91 @@ impl MeasureRegistry {
     }
 }
 
+/// Opaque stream-session identifier (the wire's `stream_open` reply;
+/// referenced by number in later `stream_push`/`stream_matches`/
+/// `stream_close` ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamKey(pub u64);
+
+/// One open streaming session: the monitor plus its idle-eviction
+/// bookkeeping.  Lives behind `Arc<Mutex<..>>` so the registry lock is
+/// held only for lookup, never across a window evaluation.
+pub struct StreamSession {
+    pub monitor: StreamMonitor,
+    /// Last wire activity — refreshed by every `stream_*` op that
+    /// resolves the session.
+    pub last_active: Instant,
+    /// Idle budget before the sweep reclaims the session.
+    pub idle_timeout: Duration,
+}
+
+impl StreamSession {
+    pub fn new(monitor: StreamMonitor, idle_timeout: Duration) -> StreamSession {
+        StreamSession {
+            monitor,
+            last_active: Instant::now(),
+            idle_timeout,
+        }
+    }
+
+    pub fn touch(&mut self) {
+        self.last_active = Instant::now();
+    }
+
+    pub fn idle_expired(&self, now: Instant) -> bool {
+        now.saturating_duration_since(self.last_active) >= self.idle_timeout
+    }
+}
+
+/// Registry of open streaming sessions.
+#[derive(Default)]
+pub struct StreamRegistry {
+    next: u64,
+    entries: HashMap<u64, Arc<Mutex<StreamSession>>>,
+}
+
+impl StreamRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, session: StreamSession) -> StreamKey {
+        let key = self.next;
+        self.next += 1;
+        self.entries.insert(key, Arc::new(Mutex::new(session)));
+        StreamKey(key)
+    }
+
+    pub fn get(&self, key: StreamKey) -> Option<Arc<Mutex<StreamSession>>> {
+        self.entries.get(&key.0).map(Arc::clone)
+    }
+
+    pub fn remove(&mut self, key: StreamKey) -> Option<Arc<Mutex<StreamSession>>> {
+        self.entries.remove(&key.0)
+    }
+
+    /// Reclaim sessions idle past their budget; returns how many were
+    /// evicted.  A session whose mutex is currently held is mid-request
+    /// — by definition not idle — and is skipped rather than awaited,
+    /// so the sweep never blocks behind a long window evaluation.
+    pub fn sweep_idle(&mut self, now: Instant) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|_, s| match s.try_lock() {
+            Ok(sess) => !sess.idle_expired(now),
+            Err(_) => true,
+        });
+        before - self.entries.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +433,46 @@ mod tests {
         assert_eq!(lru(&r), ["c", "b"]);
         // forgetting recency does not unregister the entry
         assert!(r.key_by_name("a").is_some());
+    }
+
+    #[test]
+    fn stream_sessions_register_resolve_and_sweep() {
+        use crate::data::splits::from_pairs;
+        use crate::search::{Cascade, SearchEngine};
+        let train = from_pairs(vec![(0, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
+        let engine = SearchEngine::new(Arc::new(Index::build(&train, 1, 1)), Cascade::default());
+        let mk = |timeout: Duration| {
+            StreamSession::new(
+                StreamMonitor::new(engine.clone(), 1, None).unwrap(),
+                timeout,
+            )
+        };
+        let mut r = StreamRegistry::new();
+        let a = r.insert(mk(Duration::from_secs(3600)));
+        let b = r.insert(mk(Duration::ZERO));
+        assert_ne!(a, b);
+        assert_eq!(r.len(), 2);
+        assert!(r.get(a).is_some());
+        assert!(r.get(StreamKey(99)).is_none());
+
+        // only the zero-budget session is idle-expired
+        assert_eq!(r.sweep_idle(Instant::now()), 1);
+        assert!(r.get(b).is_none(), "expired session must be reclaimed");
+        assert!(r.get(a).is_some());
+
+        // a locked (mid-request) session is never swept
+        let held = r.get(a).unwrap();
+        let guard = held.lock().unwrap();
+        assert_eq!(r.sweep_idle(Instant::now() + Duration::from_secs(7200)), 0);
+        drop(guard);
+        assert_eq!(r.sweep_idle(Instant::now() + Duration::from_secs(7200)), 1);
+        assert!(r.is_empty());
+
+        // removal resolves to the session and frees the key
+        let mut r2 = StreamRegistry::new();
+        let k = r2.insert(mk(Duration::from_secs(1)));
+        assert!(r2.remove(k).is_some());
+        assert!(r2.remove(k).is_none());
     }
 
     #[test]

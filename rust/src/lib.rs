@@ -21,6 +21,7 @@
 //! | [`stats`]     | Wilcoxon signed-rank test, rank aggregation |
 //! | [`tuning`]    | LOO / k-fold grid search for θ, ν, γ, band width |
 //! | [`search`]    | cascaded lower-bound + early-abandoning k-NN engine |
+//! | [`stream`]    | online subsequence k-NN: sliding envelopes, RWS pre-filter, stream monitor |
 //! | [`pool`]      | thread-pool substrate (no rayon in the vendored set) |
 //! | [`runtime`]   | PJRT client, artifact manifest, executable cache |
 //! | [`coordinator`]| router + length-bucket batcher + workers + metrics + TCP server |
@@ -72,6 +73,7 @@ pub mod search;
 pub mod shard;
 pub mod sparse;
 pub mod stats;
+pub mod stream;
 pub mod tuning;
 pub mod util;
 pub mod viz;

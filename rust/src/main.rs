@@ -9,6 +9,7 @@
 //! spdtw index load <file>            reload + validate a persisted index
 //! spdtw index inspect <file>         header/checksum summary of an index file
 //! spdtw gen-data <dataset> [opts]    write the synthetic dataset as UCR files
+//! spdtw monitor <dataset> [opts]     online subsequence k-NN over stdin or a file
 //! spdtw serve [opts]                 start the TCP coordinator service
 //! spdtw serve --shards a:p,b:p       start a fan-out front over shard servers
 //! spdtw shard-serve [opts]           start one shard server of a fleet
@@ -43,9 +44,10 @@ use spdtw::measures::spec::{
 };
 use spdtw::measures::{KernelMeasure, Measure};
 use spdtw::runtime::PjrtRuntime;
-use spdtw::search::{persist, Index};
+use spdtw::search::{persist, Index, SearchEngine};
 use spdtw::shard::{ActiveFaults, FaultPlan, FrontServer, ShardClientConfig, ShardCoordinator};
 use spdtw::sparse::learn::learn_occupancy_grid;
+use spdtw::stream::{MatchReport, RwsConfig, StreamMonitor};
 
 fn opt_spec() -> Vec<OptSpec> {
     vec![
@@ -172,6 +174,51 @@ fn opt_spec() -> Vec<OptSpec> {
             help: "shard-serve: JSON fault plan for deterministic chaos testing",
         },
         OptSpec {
+            name: "input",
+            takes_value: true,
+            help: "monitor: file of samples to tail (default: stdin)",
+        },
+        OptSpec {
+            name: "rws",
+            takes_value: false,
+            help: "monitor: opt into the approximate RWS pre-filter (exact is the default)",
+        },
+        OptSpec {
+            name: "rws-d",
+            takes_value: true,
+            help: "monitor: RWS embedding dimension (default 8)",
+        },
+        OptSpec {
+            name: "rws-len",
+            takes_value: true,
+            help: "monitor: RWS warp series length (default T/4)",
+        },
+        OptSpec {
+            name: "rws-candidates",
+            takes_value: true,
+            help: "monitor: RWS candidate budget per window (default 16)",
+        },
+        OptSpec {
+            name: "rws-seed",
+            takes_value: true,
+            help: "monitor: RWS series seed (default 7)",
+        },
+        OptSpec {
+            name: "audit-every",
+            takes_value: true,
+            help: "monitor: exact-audit every Nth window for recall@k (0 = off)",
+        },
+        OptSpec {
+            name: "report-every",
+            takes_value: true,
+            help: "monitor: print a match line every Nth window (0 = summary only)",
+        },
+        OptSpec {
+            name: "max-windows",
+            takes_value: true,
+            help: "monitor: stop after N evaluated windows",
+        },
+        OptSpec {
             name: "breaker-threshold",
             takes_value: true,
             help: "serve --shards: consecutive failures before a link's breaker opens (default 3)",
@@ -236,6 +283,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "search" => cmd_search(&args),
         "index" => cmd_index(&args),
         "gen-data" => cmd_gen_data(&args),
+        "monitor" => cmd_monitor(&args),
         "serve" => cmd_serve(&args),
         "shard-serve" => cmd_shard_serve(&args),
         "info" => cmd_info(&args),
@@ -245,7 +293,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
                 "spdtw — Sparsified-Paths search space DTW (paper reproduction)\n\n\
                  commands: experiment <id|all> | classify <dataset> | dist |\n\
                  \x20         search <dataset> | index save|load|inspect |\n\
-                 \x20         gen-data <dataset> | serve | shard-serve | info | bench-backend\n\n{}",
+                 \x20         gen-data <dataset> | monitor <dataset> | serve | shard-serve |\n\
+                 \x20         info | bench-backend\n\n{}",
                 usage(&spec)
             );
             println!("experiments: {}", experiments::EXPERIMENTS.join(", "));
@@ -762,6 +811,117 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
             dir.display()
         );
     }
+    Ok(())
+}
+
+/// One printed match line per reported window — the parseable shape
+/// `ci/stream_smoke.py` asserts on (`path=exact` vs `path=approx`,
+/// `recall=` only on audited windows).
+fn format_match_line(windows: usize, rep: &MatchReport) -> String {
+    let mut s = format!(
+        "window {windows} start={} path={}",
+        rep.window_start,
+        if rep.approx { "approx" } else { "exact" }
+    );
+    for n in &rep.neighbors {
+        s.push_str(&format!(
+            " idx={} label={} dist={:.6}",
+            n.train_idx, n.label, n.dist
+        ));
+    }
+    if let Some(r) = rep.recall {
+        s.push_str(&format!(" recall={r:.3}"));
+    }
+    s
+}
+
+/// `spdtw monitor <dataset>`: online subsequence k-NN.  The dataset's
+/// train split becomes the registered index (same flags as `spdtw
+/// search`); samples are then tailed from `--input FILE` or stdin (any
+/// mix of comma/whitespace separation, `#` comments) and every
+/// completed sliding window is searched — exactly by default,
+/// approximately (and flagged) under `--rws`.
+fn cmd_monitor(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let name = args.positional.get(1).ok_or_else(|| {
+        Error::config("usage: spdtw monitor <dataset> [--input FILE] [--k N] [--rws]")
+    })?;
+    let cfg = build_cfg(args)?;
+    let (cap_tr, cap_te) = cfg.caps();
+    let ds = synthetic::generate_scaled(name, cfg.seed, cap_tr, cap_te)?;
+    let scfg = resolve_search_config(args, ds.series_len())?;
+    let index = build_search_index(args, &cfg, &ds, &scfg)?;
+    let engine = SearchEngine::new(Arc::new(index), scfg.cascade());
+
+    let rws_flags_given = ["rws-d", "rws-len", "rws-candidates", "rws-seed", "audit-every"]
+        .iter()
+        .any(|&f| args.get(f).is_some());
+    let rws = if args.flag("rws") {
+        let mut rc = RwsConfig::default();
+        if let Some(v) = args.get_usize("rws-d")? {
+            rc.d = v;
+        }
+        if let Some(v) = args.get_usize("rws-len")? {
+            rc.len = v;
+        }
+        if let Some(v) = args.get_usize("rws-candidates")? {
+            rc.candidates = v;
+        }
+        if let Some(v) = args.get_usize("rws-seed")? {
+            rc.seed = v as u64;
+        }
+        if let Some(v) = args.get_usize("audit-every")? {
+            rc.audit_every = v as u64;
+        }
+        Some(rc)
+    } else if rws_flags_given {
+        // silently ignoring tuning flags would run a different path
+        // than the one the user configured
+        return Err(Error::config(
+            "--rws-*/--audit-every tune the approximate pre-filter; add --rws to enable it",
+        ));
+    } else {
+        None
+    };
+    let mut monitor = StreamMonitor::new(engine, scfg.k, rws)?;
+    println!(
+        "monitor {name}: T={} k={} path={}",
+        monitor.window_len(),
+        monitor.k(),
+        if monitor.is_approx() { "approx(rws)" } else { "exact" }
+    );
+
+    let report_every = args.get_usize("report-every")?.unwrap_or(0);
+    let max_windows = args.get_usize("max-windows")?.unwrap_or(usize::MAX);
+    let reader: Box<dyn BufRead> = match args.get("input") {
+        Some(path) => Box::new(std::io::BufReader::new(std::fs::File::open(path)?)),
+        None => Box::new(std::io::BufReader::new(std::io::stdin())),
+    };
+
+    let mut windows = 0usize;
+    'tail: for line in reader.lines() {
+        let line = line?;
+        let text = line.split('#').next().unwrap_or("");
+        for tok in text.split(|c: char| c == ',' || c.is_whitespace()) {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let v: f64 = tok
+                .parse()
+                .map_err(|_| Error::config(format!("monitor: '{tok}' is not a number")))?;
+            if let Some(rep) = monitor.push(v)? {
+                windows += 1;
+                if report_every > 0 && windows % report_every == 0 {
+                    println!("{}", format_match_line(windows, rep));
+                }
+                if windows >= max_windows {
+                    break 'tail;
+                }
+            }
+        }
+    }
+    println!("{}", monitor.stats().report());
     Ok(())
 }
 

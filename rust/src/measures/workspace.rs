@@ -75,6 +75,9 @@ pub struct DpWorkspace {
     /// Lane-major entry-parallel SP-DTW DP values over LOC entries
     /// (`nnz * L`).
     pub lane_entries: Vec<f64>,
+    /// Contiguously staged sliding window (the streaming monitor's
+    /// per-step query copy, [`crate::stream`]).
+    pub window: Vec<f64>,
 }
 
 /// Reset `v` to exactly `n` copies of `fill`, reusing capacity.
@@ -147,6 +150,7 @@ impl DpWorkspace {
                 + self.lane_vals.capacity()
                 + self.lane_entries.capacity())
                 * f
+            + self.window.capacity() * f
     }
 }
 
@@ -224,6 +228,14 @@ mod tests {
         let before = ws.memory_bytes();
         ws.rows(128, 0.0);
         assert!(ws.memory_bytes() >= before + 2 * 128 * 8);
+    }
+
+    #[test]
+    fn memory_bytes_counts_stream_window_scratch() {
+        let mut ws = DpWorkspace::new();
+        let before = ws.memory_bytes();
+        reset(&mut ws.window, 128, 0.0);
+        assert!(ws.memory_bytes() >= before + 128 * 8);
     }
 
     #[test]

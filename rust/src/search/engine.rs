@@ -126,6 +126,41 @@ impl SearchEngine {
     /// loop runs with zero steady-state heap allocations, and returns
     /// results bit-identical to the allocating path.
     pub fn knn_values_with(&self, ws: &mut DpWorkspace, query: &[f64], k: usize) -> QueryResult {
+        self.knn_values_env_opt(ws, query, k, None)
+    }
+
+    /// [`Self::knn_values_with`] with a caller-supplied query envelope:
+    /// `(q_upper, q_lower)` must be the Lemire envelope, at the index
+    /// radius, of the *prepared* query (the raw slice for a raw index —
+    /// z-normalized indexes re-normalize per call, so their envelope
+    /// cannot be precomputed and this entry point rejects them).  The
+    /// streaming monitor maintains that envelope incrementally; results
+    /// — neighbors *and* stats — are bit-identical to
+    /// [`Self::knn_values_with`], which rebuilds it from scratch.
+    pub fn knn_values_with_query_env(
+        &self,
+        ws: &mut DpWorkspace,
+        query: &[f64],
+        k: usize,
+        q_upper: &[f64],
+        q_lower: &[f64],
+    ) -> QueryResult {
+        assert!(
+            !self.index.znormalized,
+            "precomputed query envelopes require a non-z-normalized index"
+        );
+        assert_eq!(q_upper.len(), self.index.t, "upper envelope length");
+        assert_eq!(q_lower.len(), self.index.t, "lower envelope length");
+        self.knn_values_env_opt(ws, query, k, Some((q_upper, q_lower)))
+    }
+
+    fn knn_values_env_opt(
+        &self,
+        ws: &mut DpWorkspace,
+        query: &[f64],
+        k: usize,
+        qenv: Option<(&[f64], &[f64])>,
+    ) -> QueryResult {
         let idx = &*self.index;
         assert!(k >= 1, "k must be >= 1");
         assert_eq!(
@@ -160,11 +195,24 @@ impl SearchEngine {
             ..Default::default()
         };
 
-        // Query-side envelope, built once per query (reversed LB_Keogh).
+        // Query-side envelope (reversed LB_Keogh): built once per query,
+        // or copied from a caller who maintained it incrementally.  The
+        // accounting is identical either way, so streaming and batch
+        // queries report bit-identical stats.
         let have_qenv = cas.keogh_rev;
         if have_qenv {
             stats.lb_cells += idx.t as u64;
-            envelope_into(q, idx.radius, &mut qu, &mut ql, &mut ws.maxq, &mut ws.minq);
+            match qenv {
+                Some((u, l)) => {
+                    qu.clear();
+                    qu.extend_from_slice(u);
+                    ql.clear();
+                    ql.extend_from_slice(l);
+                }
+                None => {
+                    envelope_into(q, idx.radius, &mut qu, &mut ql, &mut ws.maxq, &mut ws.minq)
+                }
+            }
         }
 
         // O(1)-per-candidate LB_Kim values, also reused as the visit
@@ -278,6 +326,116 @@ impl SearchEngine {
         ws.env_lower = ql;
         ws.lbs = lbs;
         ws.order = order;
+        ws.top = top;
+        QueryResult { neighbors, stats }
+    }
+
+    /// Exact k-NN over a candidate *subset*: the same cascade (LB
+    /// prunes, early-abandoning DP, `(dist, train_idx)` order) scanned
+    /// over `candidates` only, in the given order.  Callers pass
+    /// distinct indices (debug-asserted), typically ascending by an
+    /// approximate ranking so thresholds tighten early — correctness is
+    /// scan-order-independent, only the work accounting shifts.  This
+    /// is the RWS pre-filter's refine stage; over the full candidate
+    /// set `0..n` in order it is bit-identical (neighbors and stats) to
+    /// [`Self::knn_values_with`] with `order_by_lb` off and `lanes ==
+    /// 1` (this path evaluates survivors scalar, one DP per candidate).
+    pub fn knn_among_with(
+        &self,
+        ws: &mut DpWorkspace,
+        query: &[f64],
+        k: usize,
+        candidates: &[usize],
+    ) -> QueryResult {
+        let idx = &*self.index;
+        assert!(k >= 1, "k must be >= 1");
+        assert_eq!(
+            query.len(),
+            idx.t,
+            "query length {} != indexed length {}",
+            query.len(),
+            idx.t
+        );
+        let mut qbuf = std::mem::take(&mut ws.query);
+        let mut qu = std::mem::take(&mut ws.env_upper);
+        let mut ql = std::mem::take(&mut ws.env_lower);
+        let mut top = std::mem::take(&mut ws.top);
+
+        let q: &[f64] = if idx.znormalized {
+            qbuf.clear();
+            qbuf.extend_from_slice(query);
+            znormalize_in_place(&mut qbuf);
+            &qbuf
+        } else {
+            query
+        };
+
+        let cas = self.cascade.effective(idx);
+        let mut stats = PruneStats {
+            queries: 1,
+            ..Default::default()
+        };
+        let have_qenv = cas.keogh_rev;
+        if have_qenv {
+            stats.lb_cells += idx.t as u64;
+            envelope_into(q, idx.radius, &mut qu, &mut ql, &mut ws.maxq, &mut ws.minq);
+        }
+        top.clear();
+        top.reserve(k + 1);
+        for (ci, &j) in candidates.iter().enumerate() {
+            debug_assert!(j < idx.len(), "candidate {j} out of range");
+            debug_assert!(
+                !candidates[..ci].contains(&j),
+                "candidates must be distinct"
+            );
+            stats.candidates += 1;
+            if cas.kim {
+                let (u, l) = &idx.envs[j];
+                let lb = lb_kim(q, u, l);
+                if cannot_beat(lb, j, &top, k) {
+                    stats.kim_pruned += 1;
+                    continue;
+                }
+            }
+            if cas.keogh {
+                let (u, l) = &idx.envs[j];
+                let lb = lb_keogh_sum(q, u, l);
+                stats.lb_cells += idx.t as u64;
+                if cannot_beat(lb, j, &top, k) {
+                    stats.keogh_pruned += 1;
+                    continue;
+                }
+            }
+            if have_qenv {
+                let lb = lb_keogh_sum(&idx.series[j], &qu, &ql);
+                stats.lb_cells += idx.t as u64;
+                if cannot_beat(lb, j, &top, k) {
+                    stats.rev_pruned += 1;
+                    continue;
+                }
+            }
+            let ub = abandon_threshold(j, &top, k, cas.early_abandon);
+            let ea = idx.full_eval_with(ws, q, j, ub);
+            stats.dp_cells += ea.visited;
+            match ea.value {
+                None => stats.abandoned += 1,
+                Some(v) => {
+                    stats.full_evals += 1;
+                    insert_neighbor(&mut top, k, v, j);
+                }
+            }
+        }
+        let neighbors = top
+            .drain(..)
+            .map(|(dist, j)| Neighbor {
+                dist,
+                label: idx.labels[j],
+                train_idx: j,
+            })
+            .collect();
+        ws.query = qbuf;
+        ws.env_upper = qu;
+        ws.env_lower = ql;
         ws.top = top;
         QueryResult { neighbors, stats }
     }
@@ -750,6 +908,73 @@ mod tests {
             for (g, (wd, wj)) in got.neighbors.iter().zip(&want) {
                 assert_eq!(g.dist.to_bits(), wd.to_bits(), "case {case}");
                 assert_eq!(g.train_idx, *wj, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_query_env_is_bit_identical_incl_stats() {
+        use crate::measures::lb_keogh::envelope_into;
+        use std::collections::VecDeque;
+        let ds = synthetic::generate_scaled("CBF", 33, 16, 6).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 5, 2));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let (mut u, mut l) = (Vec::new(), Vec::new());
+        let (mut maxq, mut minq) = (VecDeque::new(), VecDeque::new());
+        let mut ws = crate::measures::workspace::DpWorkspace::new();
+        for probe in &ds.test.series {
+            envelope_into(&probe.values, idx.radius, &mut u, &mut l, &mut maxq, &mut minq);
+            let a = eng.knn_values_with(&mut ws, &probe.values, 3);
+            let b = eng.knn_values_with_query_env(&mut ws, &probe.values, 3, &u, &l);
+            assert_eq!(a.stats, b.stats, "stats must match bitwise");
+            assert_eq!(a.neighbors.len(), b.neighbors.len());
+            for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+                assert_eq!(x.train_idx, y.train_idx);
+            }
+        }
+    }
+
+    #[test]
+    fn knn_among_full_candidate_set_matches_full_search() {
+        let ds = synthetic::generate_scaled("CBF", 35, 15, 5).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 4, 2));
+        // the among-path is scalar and scans in the given order: compare
+        // against the full path with ordering off and lanes == 1
+        let cascade = Cascade {
+            order_by_lb: false,
+            ..Cascade::default()
+        };
+        let eng = SearchEngine::with_lanes(Arc::clone(&idx), cascade, 1);
+        let all: Vec<usize> = (0..idx.len()).collect();
+        let mut ws = crate::measures::workspace::DpWorkspace::new();
+        for probe in &ds.test.series {
+            let a = eng.knn_values_with(&mut ws, &probe.values, 2);
+            let b = eng.knn_among_with(&mut ws, &probe.values, 2, &all);
+            assert_eq!(a.stats, b.stats, "full candidate set must cost the same");
+            for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+                assert_eq!(x.train_idx, y.train_idx);
+            }
+        }
+    }
+
+    #[test]
+    fn knn_among_subset_is_exact_over_that_subset() {
+        let ds = synthetic::generate_scaled("Gun-Point", 37, 14, 4).unwrap();
+        let idx = Arc::new(Index::build(&ds.train, 6, 2));
+        let eng = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let subset = [3usize, 0, 7, 5];
+        let mut ws = crate::measures::workspace::DpWorkspace::new();
+        for probe in &ds.test.series {
+            let got = eng.knn_among_with(&mut ws, &probe.values, 2, &subset);
+            let mut want = brute_topk(&idx, &probe.values, idx.len());
+            want.retain(|&(_, j)| subset.contains(&j));
+            want.truncate(2);
+            assert_eq!(got.neighbors.len(), want.len());
+            for (g, (wd, wj)) in got.neighbors.iter().zip(&want) {
+                assert_eq!(g.dist.to_bits(), wd.to_bits());
+                assert_eq!(g.train_idx, *wj);
             }
         }
     }

@@ -1,0 +1,836 @@
+//! Online subsequence k-NN over unbounded streams (ROADMAP item 4).
+//!
+//! A [`StreamMonitor`] ingests one sample at a time into a ring buffer
+//! and, once the window is full, answers "which indexed series does the
+//! last `T` samples most resemble" at every step, UCR-suite style:
+//! the exact LB_Kim → LB_Keogh → reversed LB_Keogh → early-abandoning
+//! DP cascade of [`crate::search::SearchEngine`] runs per window, with
+//! the *query-side* Lemire envelope maintained incrementally by a
+//! [`SlidingEnvelope`] — monotonic deques updated per sample, never
+//! rebuilt — instead of the batch path's per-query `envelope_into`.
+//!
+//! ## Exactness contract
+//!
+//! The streaming match at every step is **bit-identical**
+//! (`f64::to_bits`, neighbors *and* `PruneStats`) to a batch
+//! `SearchEngine::knn_values_with` call over the same window:
+//!
+//! * the staged window is a plain copy of the ring contents, so the DP
+//!   stages see exactly the bytes a batch query would;
+//! * the sliding envelope selects exactly the sample `envelope_into`'s
+//!   deque front would select at every position (the same keep-latest
+//!   tie rule everywhere — see [`SlidingEnvelope`]), so the staged
+//!   `(upper, lower)` halves are bit-identical to a from-scratch
+//!   rebuild (property: `tests/prop_stream.rs`);
+//! * for a z-normalized index the window statistics change at *every*
+//!   step, so no envelope can be maintained incrementally in the
+//!   normalized domain — the monitor routes those windows through the
+//!   engine's own normalize-then-envelope path (`knn_values_with`),
+//!   which is the batch code itself.
+//!
+//! ## Approximate pre-filter
+//!
+//! With an [`RwsConfig`], windows first pass through a Random Warping
+//! Series embedding ([`rws`], arXiv 1809.05259): a linear scan in R^d
+//! selects a candidate subset, and the exact cascade refines only that
+//! subset (`SearchEngine::knn_among_with`).  Approximate reports are
+//! always flagged (`MatchReport::approx`) and periodically audited
+//! against the exact path (`recall@k`); the exact path is the default.
+//! When the candidate budget covers the corpus the refine step scans
+//! every series and the result is bit-identical to the exact path.
+
+pub mod rws;
+
+use std::collections::VecDeque;
+
+use crate::data::znormalize_in_place;
+use crate::error::{Error, Result};
+use crate::measures::workspace::DpWorkspace;
+use crate::search::engine::Neighbor;
+use crate::search::{PruneStats, SearchEngine};
+
+pub use rws::{RwsConfig, RwsFilter};
+
+/// Sliding-window Lemire envelope: for a stream whose last `t` samples
+/// form the current window, maintains per-position `(upper, lower)`
+/// envelope values under warping radius `r`, updated per sample.
+///
+/// Window position `i`'s envelope range is `[max(i-r, 0), min(i+r,
+/// t-1)]` — exactly `envelope_into`'s.  Interior positions (`r <= i <=
+/// t-1-r`) have ranges that are fixed absolute sample spans, so their
+/// extrema are computed once, when the last sample of the span arrives,
+/// from a pair of *global* monotonic deques over the most recent `2r+1`
+/// samples and cached in a ring.  Edge positions clamp against the
+/// moving window boundary and are rebuilt per step by O(r) running
+/// scans.  Everywhere the tie rule is keep-latest — the sample
+/// `envelope_into`'s deque front holds — so staged values are
+/// bit-identical to a from-scratch rebuild even when equal values have
+/// distinct bit patterns (±0.0).
+#[derive(Debug)]
+pub struct SlidingEnvelope {
+    t: usize,
+    r: usize,
+    /// Absolute sample indices, values descending (max) / ascending
+    /// (min) from front to back; fronts hold the latest extremum of the
+    /// trailing `2r+1` samples.
+    maxq: VecDeque<usize>,
+    minq: VecDeque<usize>,
+    /// Interior extrema, keyed by absolute center index mod `t`.
+    umax: Vec<f64>,
+    umin: Vec<f64>,
+}
+
+impl SlidingEnvelope {
+    /// Envelope for window length `t` (>= 1) at radius `r` (clamped to
+    /// `t - 1`, the widest reach any position can use).
+    pub fn new(t: usize, r: usize) -> SlidingEnvelope {
+        assert!(t > 0, "window length must be >= 1");
+        // lint:allow(hot-alloc): constructor-time ring buffers, reused
+        // on every per-sample update afterwards.
+        let umax = vec![0.0; t];
+        // lint:allow(hot-alloc): constructor-time ring buffer (see above).
+        let umin = vec![0.0; t];
+        SlidingEnvelope {
+            t,
+            r: r.min(t - 1),
+            maxq: VecDeque::new(),
+            minq: VecDeque::new(),
+            umax,
+            umin,
+        }
+    }
+
+    /// Whether the incremental (deque + interior ring) machinery is in
+    /// play.  A degenerate radius (`2r >= t`) leaves no interior
+    /// positions and would need more than `t` samples of history, so
+    /// [`Self::stage_into`] recomputes those windows with two O(t)
+    /// running passes instead.
+    #[inline]
+    pub fn sliding(&self) -> bool {
+        2 * self.r < self.t
+    }
+
+    /// Ingest sample `p` (0-based absolute stream index); `ring` is the
+    /// stream's value ring (`ring[p % t]` already holds the sample).
+    /// O(1) amortized: each index enters and leaves each deque once.
+    pub fn push(&mut self, p: usize, ring: &[f64]) {
+        debug_assert_eq!(ring.len(), self.t);
+        if !self.sliding() {
+            return;
+        }
+        let t = self.t;
+        let r = self.r;
+        let v = ring[p % t];
+        // Keep-latest: an equal earlier sample is popped, so the front
+        // always names the latest occurrence of the extremum.
+        while self.maxq.back().map_or(false, |&b| ring[b % t] <= v) {
+            self.maxq.pop_back();
+        }
+        self.maxq.push_back(p);
+        while self.minq.back().map_or(false, |&b| ring[b % t] >= v) {
+            self.minq.pop_back();
+        }
+        self.minq.push_back(p);
+        let lo = p.saturating_sub(2 * r);
+        while self.maxq.front().map_or(false, |&f| f < lo) {
+            self.maxq.pop_front();
+        }
+        while self.minq.front().map_or(false, |&f| f < lo) {
+            self.minq.pop_front();
+        }
+        if p >= 2 * r {
+            // Sample p completes the absolute span [p-2r, p]: the
+            // envelope range of interior center c = p - r, final from
+            // here on.  2r < t keeps every deque index inside the ring.
+            let c = p - r;
+            self.umax[c % t] = ring[*self.maxq.front().expect("deque never empty") % t];
+            self.umin[c % t] = ring[*self.minq.front().expect("deque never empty") % t];
+        }
+    }
+
+    /// Write the envelope of the current window into `upper`/`lower`.
+    /// `p` is the latest absolute sample index (window = samples
+    /// `p+1-t ..= p`); `window` is the contiguously staged window.
+    /// Output is bit-identical to `envelope_into(window, r, ..)`.
+    pub fn stage_into(
+        &self,
+        p: usize,
+        window: &[f64],
+        upper: &mut Vec<f64>,
+        lower: &mut Vec<f64>,
+    ) {
+        let t = self.t;
+        let r = self.r;
+        debug_assert_eq!(window.len(), t);
+        debug_assert!(p + 1 >= t, "window not full");
+        upper.clear();
+        upper.resize(t, 0.0);
+        lower.clear();
+        lower.resize(t, 0.0);
+        if !self.sliding() {
+            // Degenerate radius: every position's range touches a
+            // window edge, so a prefix pass (i <= r) plus a suffix pass
+            // (i > r, where i >= t-1-r holds because 2r >= t) covers
+            // every position.
+            fill_prefix(window, r, upper, lower, r.min(t - 1) + 1);
+            if r + 1 < t {
+                fill_suffix(window, r, upper, lower, r + 1);
+            }
+            return;
+        }
+        fill_prefix(window, r, upper, lower, r);
+        let start = p + 1 - t;
+        for i in r..=(t - 1 - r) {
+            let c = start + i;
+            upper[i] = self.umax[c % t];
+            lower[i] = self.umin[c % t];
+        }
+        fill_suffix(window, r, upper, lower, t - r);
+    }
+}
+
+/// Envelope positions `0..i_end`: ranges `[0, min(i+r, t-1)]`, filled
+/// by one forward running-extremum scan.  `>=`/`<=` updates keep the
+/// latest occurrence of a tied extremum — the same sample
+/// `envelope_into`'s deque front holds for these prefix ranges.
+fn fill_prefix(window: &[f64], r: usize, upper: &mut [f64], lower: &mut [f64], i_end: usize) {
+    if i_end == 0 {
+        return;
+    }
+    let t = window.len();
+    let mut mx = window[0];
+    let mut mn = window[0];
+    let mut j = 0usize; // running extrema cover window[0..=j]
+    for i in 0..i_end {
+        let hi = (i + r).min(t - 1);
+        while j < hi {
+            j += 1;
+            if window[j] >= mx {
+                mx = window[j];
+            }
+            if window[j] <= mn {
+                mn = window[j];
+            }
+        }
+        upper[i] = mx;
+        lower[i] = mn;
+    }
+}
+
+/// Envelope positions `i_start..t`: ranges `[i-r, t-1]`, filled by one
+/// backward running-extremum scan.  Strict `>`/`<` updates keep the
+/// rightmost (= latest) occurrence of a tied extremum, matching
+/// `envelope_into`'s deque tie-break for these suffix ranges.
+fn fill_suffix(window: &[f64], r: usize, upper: &mut [f64], lower: &mut [f64], i_start: usize) {
+    let t = window.len();
+    if i_start >= t {
+        return;
+    }
+    let mut mx = window[t - 1];
+    let mut mn = window[t - 1];
+    let mut j = t - 1; // running extrema cover window[j..]
+    for i in (i_start..t).rev() {
+        let lo = i - r;
+        while j > lo {
+            j -= 1;
+            if window[j] > mx {
+                mx = window[j];
+            }
+            if window[j] < mn {
+                mn = window[j];
+            }
+        }
+        upper[i] = mx;
+        lower[i] = mn;
+    }
+}
+
+/// Rolling mean/std over the last `window` samples (sum/sum-of-squares
+/// form) — the monitor's O(1) drift proxy.  *Not* bit-identical to the
+/// batch two-pass [`crate::data::znormalize_in_place`] (different FP
+/// operation order); agrees to ~1e-9 on sane data (property-tested),
+/// which is why the exact match path re-normalizes the staged window
+/// through the batch code instead of using these statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct IncZnorm {
+    window: usize,
+    filled: usize,
+    sum: f64,
+    sumsq: f64,
+}
+
+impl IncZnorm {
+    pub fn new(window: usize) -> IncZnorm {
+        IncZnorm {
+            window,
+            filled: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+        }
+    }
+
+    /// Ingest `v`; `evicted` is the sample leaving the window (None
+    /// while the window is still filling).
+    pub fn push(&mut self, v: f64, evicted: Option<f64>) {
+        self.sum += v;
+        self.sumsq += v * v;
+        match evicted {
+            Some(o) => {
+                self.sum -= o;
+                self.sumsq -= o * o;
+            }
+            None => {
+                debug_assert!(self.filled < self.window);
+                self.filled += 1;
+            }
+        }
+    }
+
+    /// Samples currently covered (saturates at the window length).
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            self.sum / self.filled as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.filled == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        // E[x^2] - m^2 can dip below zero by rounding; clamp.
+        let var = (self.sumsq / self.filled as f64 - m * m).max(0.0);
+        var.sqrt()
+    }
+}
+
+/// Aggregate counters over a monitor's lifetime — the streaming
+/// counterpart of [`PruneStats`] (which it embeds, merged per window).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Samples ingested.
+    pub samples: u64,
+    /// Windows evaluated (= samples once the window is full).
+    pub windows: u64,
+    /// Windows answered by the exact cascade over the whole corpus.
+    pub exact_windows: u64,
+    /// Windows answered through the RWS candidate pre-filter.
+    pub approx_windows: u64,
+    /// Cascade counters merged across every served window (the serving
+    /// path only — audit re-queries are excluded so prune rates reflect
+    /// what the stream actually paid).
+    pub prune: PruneStats,
+    /// RWS recall audits run (approx path, every `audit_every` windows).
+    pub rws_audits: u64,
+    /// Sum of audited recall@k values (mean = the recall proxy).
+    pub rws_recall_sum: f64,
+    /// Rolling window mean/std at the last evaluated window
+    /// ([`IncZnorm`]) — a drift signal for operators.
+    pub last_mean: f64,
+    pub last_std: f64,
+}
+
+impl StreamStats {
+    /// Mean audited recall@k, if any audits ran.
+    pub fn recall(&self) -> Option<f64> {
+        if self.rws_audits == 0 {
+            None
+        } else {
+            Some(self.rws_recall_sum / self.rws_audits as f64)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let recall = match self.recall() {
+            Some(r) => format!("{r:.4} over {} audits", self.rws_audits),
+            None => "n/a".to_string(),
+        };
+        format!(
+            "samples: {}  windows: {} ({} exact, {} approx)\n\
+             recall@k (audited): {recall}\n\
+             window mean {:.4} std {:.4}\n\
+             {}",
+            self.samples,
+            self.windows,
+            self.exact_windows,
+            self.approx_windows,
+            self.last_mean,
+            self.last_std,
+            self.prune.report(),
+        )
+    }
+}
+
+/// One per-window match report.  `approx` is true iff the neighbor list
+/// came through the RWS candidate pre-filter (never silently — exact is
+/// the default and the audit reference).
+#[derive(Clone, Debug, Default)]
+pub struct MatchReport {
+    /// Absolute stream index of the window's first sample.
+    pub window_start: u64,
+    /// Whether the RWS pre-filter restricted the candidate set.
+    pub approx: bool,
+    /// The k nearest indexed series, ascending `(dist, train_idx)`.
+    pub neighbors: Vec<Neighbor>,
+    /// This window's cascade counters.
+    pub stats: PruneStats,
+    /// recall@k against the exact path (audit windows on the approx
+    /// path only).
+    pub recall: Option<f64>,
+}
+
+/// Online subsequence k-NN monitor: ring-buffer ingestion, per-sample
+/// envelope maintenance, per-window cascade search.  See the module
+/// docs for the exactness contract.
+pub struct StreamMonitor {
+    engine: SearchEngine,
+    k: usize,
+    t: usize,
+    /// Raw sample ring, absolute index mod `t`.
+    ring: Vec<f64>,
+    /// Total samples ingested (= next absolute index).
+    pushed: usize,
+    env: SlidingEnvelope,
+    /// Sliding envelope only serves non-z-normalized indexes (see
+    /// module docs); z-normalized windows go through the engine's own
+    /// normalize-then-envelope path.
+    use_sliding: bool,
+    znorm: IncZnorm,
+    rws: Option<RwsFilter>,
+    ws: DpWorkspace,
+    /// Staged query envelope halves.
+    qu: Vec<f64>,
+    ql: Vec<f64>,
+    /// Normalized-window scratch (RWS projection of z-normalized
+    /// indexes).
+    nbuf: Vec<f64>,
+    stats: StreamStats,
+    report: MatchReport,
+    have_report: bool,
+}
+
+impl StreamMonitor {
+    /// Monitor `engine`'s index for the top-`k` matches of every full
+    /// window.  `rws` switches the serving path to the approximate
+    /// pre-filter (reports stay flagged and audited; pass `None` for
+    /// the exact default).
+    pub fn new(engine: SearchEngine, k: usize, rws: Option<RwsConfig>) -> Result<StreamMonitor> {
+        if k == 0 {
+            return Err(Error::config("stream: k must be >= 1"));
+        }
+        if engine.index.is_empty() {
+            return Err(Error::config("stream: cannot monitor an empty index"));
+        }
+        let t = engine.index.t;
+        let radius = engine.index.radius;
+        let use_sliding = !engine.index.znormalized;
+        let rws = match rws {
+            Some(cfg) => Some(RwsFilter::build(&engine.index, cfg)?),
+            None => None,
+        };
+        // lint:allow(hot-alloc): constructor-time ring, reused forever.
+        let ring = vec![0.0; t];
+        let mut ws = DpWorkspace::new();
+        // Pre-size the per-window staging buffer: steady-state pushes
+        // never reallocate it.
+        ws.window.reserve(t);
+        let mut mon = StreamMonitor {
+            engine,
+            k,
+            t,
+            ring,
+            pushed: 0,
+            env: SlidingEnvelope::new(t, radius),
+            use_sliding,
+            znorm: IncZnorm::new(t),
+            rws,
+            ws,
+            qu: Vec::new(),   // lint:allow(hot-alloc): constructor
+            ql: Vec::new(),   // lint:allow(hot-alloc): constructor
+            nbuf: Vec::new(), // lint:allow(hot-alloc): constructor
+            stats: StreamStats::default(),
+            report: MatchReport::default(),
+            have_report: false,
+        };
+        mon.qu.reserve(t);
+        mon.ql.reserve(t);
+        mon.nbuf.reserve(t);
+        Ok(mon)
+    }
+
+    /// Window length (the indexed series length).
+    pub fn window_len(&self) -> usize {
+        self.t
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Whether the serving path is the RWS approximate pre-filter.
+    pub fn is_approx(&self) -> bool {
+        self.rws.is_some()
+    }
+
+    /// Whether enough samples arrived to evaluate windows.
+    pub fn ready(&self) -> bool {
+        self.pushed >= self.t
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// The most recent match report, if any window was evaluated.
+    pub fn last(&self) -> Option<&MatchReport> {
+        if self.have_report {
+            Some(&self.report)
+        } else {
+            None
+        }
+    }
+
+    pub fn engine(&self) -> &SearchEngine {
+        &self.engine
+    }
+
+    /// Ingest one sample.  Returns the match report for the window this
+    /// sample completes (None while the ring is still filling).
+    /// Non-finite values are rejected (the wire's `bad_input` class)
+    /// without perturbing monitor state.
+    pub fn push(&mut self, v: f64) -> Result<Option<&MatchReport>> {
+        if !v.is_finite() {
+            return Err(Error::data(format!(
+                "stream: non-finite sample '{v}' (NaN/inf are not valid series values)"
+            )));
+        }
+        let p = self.pushed;
+        let t = self.t;
+        let evicted = if p >= t { Some(self.ring[p % t]) } else { None };
+        self.ring[p % t] = v;
+        if self.use_sliding {
+            self.env.push(p, &self.ring);
+        }
+        self.znorm.push(v, evicted);
+        self.pushed = p + 1;
+        self.stats.samples += 1;
+        if self.pushed < t {
+            return Ok(None);
+        }
+        self.eval_window(p);
+        Ok(self.last())
+    }
+
+    /// Evaluate the window ending at absolute sample `p` and refresh
+    /// [`Self::last`].  Zero steady-state allocations outside the
+    /// engine's own per-query result vector.
+    fn eval_window(&mut self, p: usize) {
+        let t = self.t;
+        let start = p + 1 - t;
+        let mut win = std::mem::take(&mut self.ws.window);
+        win.clear();
+        for i in 0..t {
+            win.push(self.ring[(start + i) % t]);
+        }
+        let engine = &self.engine;
+        let znormed_index = engine.index.znormalized;
+        let (res, approx, recall) = match self.rws.as_mut() {
+            None => {
+                let res = if znormed_index {
+                    // Per-window re-normalization: the engine's own
+                    // batch path (bit-identity is by construction).
+                    engine.knn_values_with(&mut self.ws, &win, self.k)
+                } else {
+                    self.env.stage_into(p, &win, &mut self.qu, &mut self.ql);
+                    engine.knn_values_with_query_env(
+                        &mut self.ws,
+                        &win,
+                        self.k,
+                        &self.qu,
+                        &self.ql,
+                    )
+                };
+                (res, false, None)
+            }
+            Some(filter) => {
+                // Project in the domain the corpus was embedded in:
+                // the stored (possibly z-normalized) representation.
+                let probe: &[f64] = if znormed_index {
+                    self.nbuf.clear();
+                    self.nbuf.extend_from_slice(&win);
+                    znormalize_in_place(&mut self.nbuf);
+                    &self.nbuf
+                } else {
+                    &win
+                };
+                filter.project(&mut self.ws, probe);
+                let res = engine.knn_among_with(&mut self.ws, &win, self.k, filter.candidates());
+                let audit_every = filter.cfg.audit_every;
+                let recall = if audit_every > 0 && self.stats.windows % audit_every == 0 {
+                    let exact = engine.knn_values_with(&mut self.ws, &win, self.k);
+                    Some(recall_at_k(&res.neighbors, &exact.neighbors))
+                } else {
+                    None
+                };
+                (res, true, recall)
+            }
+        };
+        self.ws.window = win;
+        self.stats.windows += 1;
+        if approx {
+            self.stats.approx_windows += 1;
+        } else {
+            self.stats.exact_windows += 1;
+        }
+        self.stats.prune.merge(&res.stats);
+        if let Some(rc) = recall {
+            self.stats.rws_audits += 1;
+            self.stats.rws_recall_sum += rc;
+        }
+        self.stats.last_mean = self.znorm.mean();
+        self.stats.last_std = self.znorm.std();
+        self.report.window_start = start as u64;
+        self.report.approx = approx;
+        self.report.neighbors = res.neighbors;
+        self.report.stats = res.stats;
+        self.report.recall = recall;
+        self.have_report = true;
+    }
+}
+
+/// Fraction of the exact top-k present in the approximate result
+/// (matched by train index).
+pub fn recall_at_k(approx: &[Neighbor], exact: &[Neighbor]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let mut hit = 0usize;
+    for e in exact {
+        if approx.iter().any(|a| a.train_idx == e.train_idx) {
+            hit += 1;
+        }
+    }
+    hit as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::splits::from_pairs;
+    use crate::data::synthetic;
+    use crate::measures::lb_keogh::envelope_into;
+    use crate::search::{Cascade, Index};
+    use crate::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    /// Drive a SlidingEnvelope over a stream and compare every staged
+    /// window against a from-scratch `envelope_into`, bit for bit.
+    fn check_stream(values: &[f64], t: usize, r: usize) {
+        let mut env = SlidingEnvelope::new(t, r);
+        let mut ring = vec![0.0; t];
+        let mut win = Vec::new();
+        let (mut su, mut sl) = (Vec::new(), Vec::new());
+        let (mut bu, mut bl) = (Vec::new(), Vec::new());
+        let (mut maxq, mut minq) = (VecDeque::new(), VecDeque::new());
+        for (p, &v) in values.iter().enumerate() {
+            ring[p % t] = v;
+            env.push(p, &ring);
+            if p + 1 < t {
+                continue;
+            }
+            win.clear();
+            let start = p + 1 - t;
+            for i in 0..t {
+                win.push(ring[(start + i) % t]);
+            }
+            env.stage_into(p, &win, &mut su, &mut sl);
+            envelope_into(&win, r.min(t - 1), &mut bu, &mut bl, &mut maxq, &mut minq);
+            for i in 0..t {
+                assert_eq!(
+                    su[i].to_bits(),
+                    bu[i].to_bits(),
+                    "upper p={p} i={i} t={t} r={r}"
+                );
+                assert_eq!(
+                    sl[i].to_bits(),
+                    bl[i].to_bits(),
+                    "lower p={p} i={i} t={t} r={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_envelope_matches_batch_rebuild() {
+        let mut rng = Pcg64::new(11);
+        for t in [1usize, 2, 3, 5, 8, 16] {
+            for r in [0usize, 1, 2, 4, 9, 100] {
+                let vals: Vec<f64> = (0..3 * t + 5).map(|_| rng.normal()).collect();
+                check_stream(&vals, t, r);
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_envelope_matches_batch_with_ties() {
+        // quantized values force exact ties: the keep-latest rule must
+        // match envelope_into's deque everywhere, including ±0.0
+        let mut rng = Pcg64::new(23);
+        for t in [4usize, 7, 12] {
+            for r in [1usize, 3, 6] {
+                let vals: Vec<f64> = (0..4 * t)
+                    .map(|_| {
+                        let q = (rng.normal() * 2.0).round() / 2.0;
+                        if q == 0.0 && rng.below(2) == 0 {
+                            -0.0
+                        } else {
+                            q
+                        }
+                    })
+                    .collect();
+                check_stream(&vals, t, r);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_radius_uses_two_pass_rebuild() {
+        let env = SlidingEnvelope::new(6, 3);
+        assert!(!env.sliding());
+        let env = SlidingEnvelope::new(7, 3);
+        assert!(env.sliding());
+    }
+
+    #[test]
+    fn inc_znorm_tracks_batch_statistics() {
+        let mut rng = Pcg64::new(5);
+        let t = 32;
+        let mut z = IncZnorm::new(t);
+        let mut ring = vec![0.0; t];
+        for p in 0..200usize {
+            let v = rng.normal() * 3.0 + (p as f64) * 0.01;
+            let evicted = if p >= t { Some(ring[p % t]) } else { None };
+            ring[p % t] = v;
+            z.push(v, evicted);
+            if p + 1 < t {
+                continue;
+            }
+            let n = t as f64;
+            let mean: f64 = ring.iter().sum::<f64>() / n;
+            let var: f64 = ring.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+            assert!((z.mean() - mean).abs() < 1e-9, "p={p}");
+            assert!((z.std() - var.sqrt()).abs() < 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn monitor_matches_batch_engine_bitwise() {
+        let ds = synthetic::generate_scaled("CBF", 3, 12, 1).unwrap();
+        let t = ds.series_len();
+        let idx = Arc::new(Index::build(&ds.train, t / 10, 1));
+        let engine = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let mut mon = StreamMonitor::new(engine.clone(), 3, None).unwrap();
+        let mut rng = Pcg64::new(9);
+        let stream: Vec<f64> = (0..t + 40).map(|_| rng.normal()).collect();
+        let mut seen = 0;
+        for (p, &v) in stream.iter().enumerate() {
+            let got = mon.push(v).unwrap();
+            if p + 1 < t {
+                assert!(got.is_none());
+                continue;
+            }
+            let rep = got.expect("window full");
+            assert!(!rep.approx);
+            let want = engine.knn_values(&stream[p + 1 - t..=p], 3);
+            assert_eq!(rep.neighbors.len(), want.neighbors.len());
+            for (a, b) in rep.neighbors.iter().zip(&want.neighbors) {
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits());
+                assert_eq!(a.train_idx, b.train_idx);
+            }
+            assert_eq!(rep.stats, want.stats, "stats must match bitwise too");
+            seen += 1;
+        }
+        assert_eq!(seen, 41);
+        assert_eq!(mon.stats().windows, 41);
+        assert_eq!(mon.stats().exact_windows, 41);
+    }
+
+    #[test]
+    fn monitor_znormalized_index_matches_batch() {
+        let ds = synthetic::generate_scaled("Gun-Point", 7, 10, 1).unwrap();
+        let t = ds.series_len();
+        let idx = Arc::new(Index::build_znormalized(&ds.train, 6, 1));
+        let engine = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let mut mon = StreamMonitor::new(engine.clone(), 2, None).unwrap();
+        let mut rng = Pcg64::new(3);
+        let stream: Vec<f64> = (0..t + 10).map(|_| rng.normal() + 5.0).collect();
+        for (p, &v) in stream.iter().enumerate() {
+            if let Some(rep) = mon.push(v).unwrap() {
+                let want = engine.knn_values(&stream[p + 1 - t..=p], 2);
+                for (a, b) in rep.neighbors.iter().zip(&want.neighbors) {
+                    assert_eq!(a.dist.to_bits(), b.dist.to_bits());
+                    assert_eq!(a.train_idx, b.train_idx);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monitor_rejects_bad_inputs() {
+        let train = from_pairs(vec![(0, vec![0.0, 1.0, 2.0]), (1, vec![2.0, 1.0, 0.0])]);
+        let idx = Arc::new(Index::build(&train, 1, 1));
+        let engine = SearchEngine::new(idx, Cascade::default());
+        assert!(StreamMonitor::new(engine.clone(), 0, None).is_err());
+        let mut mon = StreamMonitor::new(engine, 1, None).unwrap();
+        assert!(mon.push(f64::NAN).is_err());
+        assert!(mon.push(f64::INFINITY).is_err());
+        // rejected samples must not advance the stream
+        assert_eq!(mon.stats().samples, 0);
+        assert!(mon.push(1.0).unwrap().is_none());
+        assert_eq!(mon.stats().samples, 1);
+    }
+
+    #[test]
+    fn exhaustive_candidate_budget_is_bit_exact() {
+        let ds = synthetic::generate_scaled("CBF", 17, 10, 1).unwrap();
+        let t = ds.series_len();
+        let idx = Arc::new(Index::build(&ds.train, 5, 1));
+        let engine = SearchEngine::new(Arc::clone(&idx), Cascade::default());
+        let cfg = RwsConfig {
+            d: 4,
+            len: 0,
+            candidates: idx.len(), // budget covers the corpus
+            seed: 3,
+            audit_every: 1,
+        };
+        let mut mon = StreamMonitor::new(engine.clone(), 2, Some(cfg)).unwrap();
+        let mut rng = Pcg64::new(41);
+        let stream: Vec<f64> = (0..t + 12).map(|_| rng.normal()).collect();
+        for (p, &v) in stream.iter().enumerate() {
+            if let Some(rep) = mon.push(v).unwrap() {
+                assert!(rep.approx, "RWS path must stay flagged");
+                assert_eq!(rep.recall, Some(1.0), "full budget must audit at 1.0");
+                let want = engine.knn_values(&stream[p + 1 - t..=p], 2);
+                for (a, b) in rep.neighbors.iter().zip(&want.neighbors) {
+                    assert_eq!(a.dist.to_bits(), b.dist.to_bits());
+                    assert_eq!(a.train_idx, b.train_idx);
+                }
+            }
+        }
+        assert_eq!(mon.stats().recall(), Some(1.0));
+        assert!(mon.stats().approx_windows > 0);
+    }
+
+    #[test]
+    fn stream_stats_report_mentions_sections() {
+        let s = StreamStats::default();
+        let r = s.report();
+        assert!(r.contains("samples") && r.contains("recall@k") && r.contains("windows"));
+    }
+}

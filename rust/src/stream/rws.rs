@@ -1,0 +1,297 @@
+//! Random Warping Series approximate pre-filter (arXiv 1809.05259).
+//!
+//! The RWS idea: draw `d` short random "warping series" and represent
+//! every series by its vector of (unconstrained) DTW distances to them.
+//! DTW structure is approximately preserved by the embedding, so a
+//! cheap squared-Euclidean scan in R^d ranks the corpus well enough to
+//! shortlist candidates for exact refinement.  The streaming monitor
+//! uses this as a *pre-filter only*: the shortlist goes back through
+//! the exact cascade (`SearchEngine::knn_among_with`), results stay
+//! flagged approximate, and a periodic audit measures recall@k against
+//! the exact full-corpus path.  With `candidates >= corpus size` the
+//! shortlist is the whole corpus and the refinement is bit-identical
+//! to the exact path — the anchor for the recall/speed dial.
+//!
+//! Everything is seeded ([`crate::util::rng::Pcg64`]): the same
+//! `RwsConfig` over the same index always yields the same embeddings,
+//! candidates, and audits.
+
+use crate::error::{Error, Result};
+use crate::measures::dtw::dtw_banded_into;
+use crate::measures::workspace::DpWorkspace;
+use crate::search::Index;
+use crate::util::rng::Pcg64;
+
+/// Knobs for the RWS pre-filter.  `candidates` is the recall/speed
+/// dial: small budgets scan few series per window (fast, lossy), a
+/// budget covering the corpus is exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RwsConfig {
+    /// Embedding dimension: number of random warping series (>= 1).
+    pub d: usize,
+    /// Warping-series length; 0 = auto (`t / 4`, at least 2).
+    pub len: usize,
+    /// Candidate budget per window (>= 1; clamped to the corpus size).
+    pub candidates: usize,
+    /// Seed for the warping-series draw.
+    pub seed: u64,
+    /// Audit cadence: every `audit_every`-th window also runs the exact
+    /// path and records recall@k.  0 disables audits.
+    pub audit_every: u64,
+}
+
+impl Default for RwsConfig {
+    fn default() -> RwsConfig {
+        RwsConfig {
+            d: 8,
+            len: 0,
+            candidates: 16,
+            seed: 7,
+            audit_every: 0,
+        }
+    }
+}
+
+impl RwsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.d == 0 {
+            return Err(Error::config("rws: embedding dimension d must be >= 1"));
+        }
+        if self.candidates == 0 {
+            return Err(Error::config("rws: candidate budget must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Effective warping-series length for window length `t`.
+    pub fn warp_len(&self, t: usize) -> usize {
+        if self.len == 0 {
+            (t / 4).clamp(2, t.max(2))
+        } else {
+            self.len
+        }
+    }
+}
+
+/// Seeded RWS embedding of one index's corpus plus per-window scratch.
+/// Build once per stream session ([`RwsFilter::build`]), then call
+/// [`RwsFilter::project`] per window and refine
+/// [`RwsFilter::candidates`] through the exact cascade.
+pub struct RwsFilter {
+    pub cfg: RwsConfig,
+    /// The `d` random warping series (random walks with normal steps).
+    warps: Vec<Vec<f64>>,
+    /// Corpus embeddings, row-major `n x d`.
+    emb: Vec<f64>,
+    n: usize,
+    /// Per-window scratch: query embedding, scored corpus, shortlist.
+    qemb: Vec<f64>,
+    scored: Vec<(f64, usize)>,
+    cand: Vec<usize>,
+}
+
+impl RwsFilter {
+    /// Embed `index`'s stored series (the cascade's comparison domain —
+    /// z-normalized if the index is).  O(n · d · t · len) DTW work,
+    /// once per session.
+    pub fn build(index: &Index, cfg: RwsConfig) -> Result<RwsFilter> {
+        cfg.validate()?;
+        if index.is_empty() {
+            return Err(Error::config("rws: cannot build over an empty index"));
+        }
+        let wlen = cfg.warp_len(index.t);
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut ws = DpWorkspace::new();
+        // lint:allow(hot-alloc): session-build time, not a per-step path.
+        let mut warps: Vec<Vec<f64>> = Vec::with_capacity(cfg.d);
+        for i in 0..cfg.d {
+            let mut child = rng.fork(i as u64);
+            // lint:allow(hot-alloc): session-build time (see above).
+            let mut w = Vec::with_capacity(wlen);
+            let mut level = 0.0;
+            for _ in 0..wlen {
+                level += child.normal();
+                w.push(level);
+            }
+            warps.push(w);
+        }
+        let n = index.len();
+        // lint:allow(hot-alloc): session-build time (see above).
+        let mut emb = vec![0.0; n * cfg.d];
+        for j in 0..n {
+            for (c, w) in warps.iter().enumerate() {
+                // Unconstrained DTW (rescaled diagonal handles the
+                // unequal lengths), as in the RWS formulation.
+                emb[j * cfg.d + c] = dtw_banded_into(&mut ws, &index.series[j], w, usize::MAX).value;
+            }
+        }
+        Ok(RwsFilter {
+            cfg,
+            warps,
+            emb,
+            n,
+            qemb: Vec::with_capacity(cfg.d), // lint:allow(hot-alloc): constructor
+            scored: Vec::with_capacity(n),   // lint:allow(hot-alloc): constructor
+            cand: Vec::with_capacity(cfg.candidates.min(n)), // lint:allow(hot-alloc): constructor
+        })
+    }
+
+    /// Corpus size the filter was built over.
+    pub fn corpus(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding dimension.
+    pub fn dims(&self) -> usize {
+        self.cfg.d
+    }
+
+    /// Embed `probe` (same domain as the corpus embeddings: pass the
+    /// z-normalized window for a z-normalized index) and select this
+    /// window's candidate shortlist — ascending embedding distance,
+    /// ties by train index, distinct.  Zero steady-state allocations.
+    pub fn project(&mut self, ws: &mut DpWorkspace, probe: &[f64]) {
+        let d = self.cfg.d;
+        self.qemb.clear();
+        for w in &self.warps {
+            self.qemb
+                .push(dtw_banded_into(ws, probe, w, usize::MAX).value);
+        }
+        self.scored.clear();
+        for j in 0..self.n {
+            let row = &self.emb[j * d..(j + 1) * d];
+            let mut s = 0.0;
+            for (a, b) in row.iter().zip(&self.qemb) {
+                let diff = a - b;
+                s += diff * diff;
+            }
+            self.scored.push((s, j));
+        }
+        let c = self.cfg.candidates.min(self.n);
+        self.scored
+            .select_nth_unstable_by(c - 1, |a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let top = &mut self.scored[..c];
+        top.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.cand.clear();
+        self.cand.extend(top.iter().map(|&(_, j)| j));
+    }
+
+    /// The shortlist selected by the last [`Self::project`] call
+    /// (ascending expected distance; distinct train indices).
+    pub fn candidates(&self) -> &[usize] {
+        &self.cand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::search::Index;
+
+    fn small_index() -> Index {
+        let ds = synthetic::generate_scaled("CBF", 19, 9, 1).unwrap();
+        Index::build(&ds.train, 4, 1)
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(RwsConfig {
+            d: 0,
+            ..RwsConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(RwsConfig {
+            candidates: 0,
+            ..RwsConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(RwsConfig::default().validate().is_ok());
+        assert_eq!(RwsConfig::default().warp_len(128), 32);
+        assert_eq!(RwsConfig::default().warp_len(3), 2);
+        assert_eq!(
+            RwsConfig {
+                len: 9,
+                ..RwsConfig::default()
+            }
+            .warp_len(128),
+            9
+        );
+    }
+
+    #[test]
+    fn same_seed_is_deterministic() {
+        let idx = small_index();
+        let cfg = RwsConfig {
+            d: 3,
+            candidates: 4,
+            seed: 99,
+            ..RwsConfig::default()
+        };
+        let mut a = RwsFilter::build(&idx, cfg).unwrap();
+        let mut b = RwsFilter::build(&idx, cfg).unwrap();
+        assert_eq!(a.emb.len(), idx.len() * 3);
+        for (x, y) in a.emb.iter().zip(&b.emb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut ws = DpWorkspace::new();
+        let probe: Vec<f64> = idx.series[0].clone();
+        a.project(&mut ws, &probe);
+        b.project(&mut ws, &probe);
+        assert_eq!(a.candidates(), b.candidates());
+    }
+
+    #[test]
+    fn candidates_are_sorted_distinct_and_capped() {
+        let idx = small_index();
+        let n = idx.len();
+        let cfg = RwsConfig {
+            d: 4,
+            candidates: 3,
+            seed: 5,
+            ..RwsConfig::default()
+        };
+        let mut f = RwsFilter::build(&idx, cfg).unwrap();
+        let mut ws = DpWorkspace::new();
+        f.project(&mut ws, &idx.series[1]);
+        let cand = f.candidates();
+        assert_eq!(cand.len(), 3.min(n));
+        for w in cand.windows(2) {
+            assert_ne!(w[0], w[1], "candidates must be distinct");
+        }
+        for &j in cand {
+            assert!(j < n);
+        }
+        // budget over the corpus clamps to n and covers everything
+        let cfg_all = RwsConfig {
+            candidates: n + 10,
+            ..cfg
+        };
+        let mut g = RwsFilter::build(&idx, cfg_all).unwrap();
+        g.project(&mut ws, &idx.series[1]);
+        let mut all: Vec<usize> = g.candidates().to_vec();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn self_probe_ranks_itself_first() {
+        // A corpus series' embedding distance to itself is exactly 0,
+        // and ties break by index, so probing with series j (on a
+        // non-z-normalized index) must shortlist j first unless another
+        // series has the identical embedding.
+        let idx = small_index();
+        let cfg = RwsConfig {
+            d: 6,
+            candidates: 2,
+            seed: 1,
+            ..RwsConfig::default()
+        };
+        let mut f = RwsFilter::build(&idx, cfg).unwrap();
+        let mut ws = DpWorkspace::new();
+        f.project(&mut ws, &idx.series[2]);
+        assert!(f.candidates().contains(&2));
+    }
+}

@@ -512,6 +512,39 @@ fn dispatch_line_matrix_returns_stable_codes_without_sockets() {
         // fuzz finding #2: an oversized grid request must be refused by
         // `GridSpec::validate`, not materialize O(t²) cells
         (huge_grid, "bad_request"),
+        // streaming op family: every malformed class answers the same
+        // typed code as its batch counterpart, without a session or an
+        // index ever being built.  Parse order is part of the contract:
+        // envelope shape (bad_request) before value domain (bad_input)
+        // before key resolution (not_found).
+        (r#"{"op":"stream_open"}"#.into(), "bad_request"),
+        (r#"{"op":"stream_open","index":"zero"}"#.into(), "bad_request"),
+        (r#"{"op":"stream_open","index":99,"k":1}"#.into(), "not_found"),
+        (r#"{"op":"stream_open","index":0,"rws":7}"#.into(), "bad_request"),
+        (
+            r#"{"op":"stream_open","index":0,"rws":{"d":"wide"}}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"op":"stream_open","index":0,"idle_timeout_ms":-5}"#.into(),
+            "bad_request",
+        ),
+        (r#"{"op":"stream_push","stream":0}"#.into(), "bad_request"),
+        (
+            r#"{"op":"stream_push","stream":0,"values":[1,"x"]}"#.into(),
+            "bad_request",
+        ),
+        (
+            r#"{"op":"stream_push","stream":0,"values":[1e999]}"#.into(),
+            "bad_input",
+        ),
+        (
+            r#"{"op":"stream_push","stream":99,"values":[1]}"#.into(),
+            "not_found",
+        ),
+        (r#"{"op":"stream_matches"}"#.into(), "bad_request"),
+        (r#"{"op":"stream_matches","stream":7}"#.into(), "not_found"),
+        (r#"{"op":"stream_close","stream":7}"#.into(), "not_found"),
     ];
     for (line, want_code) in cases {
         let r = dispatch_line(&line, &coord);

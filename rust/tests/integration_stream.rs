@@ -1,0 +1,242 @@
+//! End-to-end wire tests for the `stream_*` op family: an exact
+//! session over real TCP must answer every completed window
+//! bit-identically to the batch `search` op (neighbors AND prune
+//! counters), an `rws` session must be flagged `approx` and report its
+//! measured recall, idle sessions must be swept on the next open, and a
+//! `deadline_ms` expiring mid-push must keep the already-ingested
+//! prefix with the session still serviceable.
+
+use std::sync::Arc;
+
+use spdtw::config::CoordinatorConfig;
+use spdtw::coordinator::server::{Client, Server};
+use spdtw::coordinator::Coordinator;
+use spdtw::util::json::Json;
+
+fn start() -> (Server, Client) {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig::default(), None).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0").unwrap();
+    let client = Client::connect(&server.addr).unwrap();
+    (server, client)
+}
+
+fn call(client: &mut Client, req: &str) -> Json {
+    client.call(&Json::parse(req).unwrap()).unwrap()
+}
+
+/// Register the shared 4-series corpus and return its index key.
+fn register(client: &mut Client) -> usize {
+    let r = call(
+        client,
+        concat!(
+            r#"{"op":"register_index","band":1,"#,
+            r#""series":[[0,0,0,0],[5,5,5,5],[1,2,3,4],[4,3,2,1]],"#,
+            r#""labels":[0,1,0,1]}"#
+        ),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    r.req_usize("index").unwrap()
+}
+
+/// Assert the `stream_matches` neighbor list equals the batch `search`
+/// reply over the same window — distances bitwise, indexes exactly,
+/// and (for the exact path, where the visit order is identical) the
+/// prune counters exactly.  The RWS path refines candidates in
+/// embedding order, so its counters legitimately differ even when its
+/// answers are exact — `check_stats: false` skips only that part.
+fn assert_matches_batch(
+    client: &mut Client,
+    matches: &Json,
+    idx: usize,
+    window: &str,
+    k: usize,
+    check_stats: bool,
+) {
+    let want = call(
+        client,
+        &format!(r#"{{"op":"search","index":{idx},"k":{k},"x":{window}}}"#),
+    );
+    let got_ns = matches.req_arr("neighbors").unwrap();
+    let want_ns = want.req_arr("neighbors").unwrap();
+    assert_eq!(got_ns.len(), want_ns.len(), "window {window}");
+    for (g, w) in got_ns.iter().zip(want_ns) {
+        assert_eq!(
+            g.req_f64("dist").unwrap().to_bits(),
+            w.req_f64("dist").unwrap().to_bits(),
+            "window {window}"
+        );
+        assert_eq!(g.req_usize("idx").unwrap(), w.req_usize("idx").unwrap());
+        assert_eq!(g.req_usize("label").unwrap(), w.req_usize("label").unwrap());
+    }
+    if check_stats {
+        for field in ["pruned", "full_evals", "dp_cells"] {
+            assert_eq!(
+                matches.req_f64(field).unwrap(),
+                want.req_f64(field).unwrap(),
+                "prune counter {field} for window {window}"
+            );
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
+fn stream_exact_session_matches_search_op_bitwise() {
+    let (mut server, mut client) = start();
+    let idx = register(&mut client);
+
+    let r = call(&mut client, &format!(r#"{{"op":"stream_open","index":{idx},"k":2}}"#));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.req_usize("t").unwrap(), 4);
+    assert_eq!(r.get("approx"), Some(&Json::Bool(false)));
+    let s = r.req_usize("stream").unwrap();
+
+    // three samples: no full window yet
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{s},"values":[0,0,0]}}"#),
+    );
+    assert_eq!(r.req_usize("pushed").unwrap(), 3);
+    assert_eq!(r.req_usize("windows").unwrap(), 0);
+    assert_eq!(r.get("ready"), Some(&Json::Bool(false)));
+    let m = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{s}}}"#));
+    assert_eq!(m.get("ready"), Some(&Json::Bool(false)));
+    assert_eq!(m.req_usize("samples").unwrap(), 3);
+    assert!(m.get("neighbors").is_none(), "no window yet: {m:?}");
+
+    // fourth sample completes window [0,0,0,0]
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{s},"values":[0]}}"#),
+    );
+    assert_eq!(r.req_usize("windows").unwrap(), 1);
+    assert_eq!(r.get("ready"), Some(&Json::Bool(true)));
+    let m = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{s}}}"#));
+    assert_eq!(m.get("approx"), Some(&Json::Bool(false)));
+    assert_eq!(m.req_usize("window_start").unwrap(), 0);
+    assert!(m.get("recall").is_none(), "exact path never reports recall");
+    assert_matches_batch(&mut client, &m, idx, "[0,0,0,0]", 2, true);
+
+    // two more samples slide two more windows; the report is the latest
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{s},"values":[9,9]}}"#),
+    );
+    assert_eq!(r.req_usize("windows").unwrap(), 2);
+    let m = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{s}}}"#));
+    assert_eq!(m.req_usize("samples").unwrap(), 6);
+    assert_eq!(m.req_usize("windows").unwrap(), 3);
+    assert_eq!(m.req_usize("window_start").unwrap(), 2);
+    assert_matches_batch(&mut client, &m, idx, "[0,0,9,9]", 2, true);
+
+    // close returns the session totals; the key is dead afterwards
+    let r = call(&mut client, &format!(r#"{{"op":"stream_close","stream":{s}}}"#));
+    assert_eq!(r.get("closed"), Some(&Json::Bool(true)));
+    assert_eq!(r.req_usize("samples").unwrap(), 6);
+    assert_eq!(r.req_usize("windows").unwrap(), 3);
+    assert!(r.get("recall_at_k").is_none(), "exact session: {r:?}");
+    let r = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{s}}}"#));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.req_str("code").unwrap(), "not_found");
+
+    let m = call(&mut client, r#"{"op":"metrics"}"#);
+    assert_eq!(m.req_f64("streams_opened").unwrap(), 1.0);
+    assert_eq!(m.req_f64("streams_closed").unwrap(), 1.0);
+    assert_eq!(m.req_f64("stream_samples").unwrap(), 6.0);
+    assert_eq!(m.req_f64("stream_windows").unwrap(), 3.0);
+
+    server.stop();
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
+fn stream_rws_session_is_flagged_and_reports_recall() {
+    let (mut server, mut client) = start();
+    let idx = register(&mut client);
+
+    // candidate budget == corpus size: the pre-filter refines every
+    // series through the exact cascade, so recall@k must measure 1.0
+    let r = call(
+        &mut client,
+        &format!(
+            r#"{{"op":"stream_open","index":{idx},"k":2,"rws":{{"d":2,"candidates":4,"audit_every":1}}}}"#
+        ),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("approx"), Some(&Json::Bool(true)), "rws is never silent");
+    let s = r.req_usize("stream").unwrap();
+
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{s},"values":[1,2,3,4,4]}}"#),
+    );
+    assert_eq!(r.req_usize("windows").unwrap(), 2);
+    let m = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{s}}}"#));
+    assert_eq!(m.get("approx"), Some(&Json::Bool(true)));
+    assert_eq!(m.req_f64("recall").unwrap(), 1.0, "audited window: {m:?}");
+    assert_eq!(m.req_f64("recall_at_k").unwrap(), 1.0);
+    // full budget means the answers themselves are the exact ones
+    assert_matches_batch(&mut client, &m, idx, "[2,3,4,4]", 2, false);
+
+    let r = call(&mut client, &format!(r#"{{"op":"stream_close","stream":{s}}}"#));
+    assert_eq!(r.req_f64("recall_at_k").unwrap(), 1.0, "{r:?}");
+    server.stop();
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "opens TCP sockets; dispatch_line covers the protocol under Miri")]
+fn stream_idle_eviction_and_mid_push_deadline_keep_service_consistent() {
+    let (mut server, mut client) = start();
+    let idx = register(&mut client);
+
+    // a zero idle timeout expires immediately; the next open sweeps it
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_open","index":{idx},"k":1,"idle_timeout_ms":0}}"#),
+    );
+    let dead = r.req_usize("stream").unwrap();
+    let r = call(&mut client, &format!(r#"{{"op":"stream_open","index":{idx},"k":1}}"#));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    let live = r.req_usize("stream").unwrap();
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{dead},"values":[1]}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.req_str("code").unwrap(), "not_found");
+    let m = call(&mut client, r#"{"op":"metrics"}"#);
+    assert!(m.req_f64("streams_evicted").unwrap() >= 1.0);
+
+    // a 1ms deadline on a very large push expires mid-loop: the reply
+    // is the typed code, the ingested prefix is kept, and the session
+    // keeps serving
+    let mut big = String::from("[");
+    for i in 0..100_000 {
+        if i > 0 {
+            big.push(',');
+        }
+        big.push('1');
+    }
+    big.push(']');
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{live},"values":{big},"deadline_ms":1}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r:?}");
+    assert_eq!(r.req_str("code").unwrap(), "deadline_exceeded");
+    let m = call(&mut client, &format!(r#"{{"op":"stream_matches","stream":{live}}}"#));
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "session survives: {m:?}");
+    assert!(
+        m.req_usize("samples").unwrap() < 100_000,
+        "deadline must stop the loop early: {m:?}"
+    );
+
+    // an undeadlined push still lands and completes windows
+    let r = call(
+        &mut client,
+        &format!(r#"{{"op":"stream_push","stream":{live},"values":[1,2,3,4]}}"#),
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("ready"), Some(&Json::Bool(true)));
+    server.stop();
+}

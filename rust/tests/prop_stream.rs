@@ -1,0 +1,201 @@
+//! Property tests for the streaming subsystem (`spdtw::stream`): the
+//! sliding Lemire envelope must be *bit-identical* to a from-scratch
+//! `envelope` rebuild at every step (including forced ties and ±0.0),
+//! the incremental z-norm must track the batch statistics, a streaming
+//! monitor's per-window answers — neighbors AND prune counters — must
+//! equal a batch search over the same window, and the RWS pre-filter
+//! must reach recall@k = 1.0 whenever its candidate budget covers the
+//! whole corpus.
+
+use std::sync::Arc;
+
+use spdtw::data::splits::from_pairs;
+use spdtw::measures::lb_keogh::envelope;
+use spdtw::search::{Cascade, Index, SearchEngine};
+use spdtw::stream::{IncZnorm, RwsConfig, SlidingEnvelope, StreamMonitor};
+use spdtw::util::prop::{forall_vec, PropConfig};
+use spdtw::util::rng::Pcg64;
+
+/// Feed `stream` through a [`SlidingEnvelope`] of shape `(t, r)` and
+/// compare every full window's staged envelope bitwise against the
+/// batch rebuild.
+fn sliding_matches_batch(stream: &[f64], t: usize, r: usize) -> bool {
+    if stream.len() < t {
+        return true;
+    }
+    let mut env = SlidingEnvelope::new(t, r);
+    let mut ring = vec![0.0; t];
+    let mut window = vec![0.0; t];
+    let mut upper = Vec::new();
+    let mut lower = Vec::new();
+    for (p, &v) in stream.iter().enumerate() {
+        ring[p % t] = v;
+        env.push(p, &ring);
+        if p + 1 < t {
+            continue;
+        }
+        let start = p + 1 - t;
+        for i in 0..t {
+            window[i] = ring[(start + i) % t];
+        }
+        env.stage_into(p, &window, &mut upper, &mut lower);
+        let (bu, bl) = envelope(&window, r.min(t - 1));
+        for i in 0..t {
+            if upper[i].to_bits() != bu[i].to_bits() || lower[i].to_bits() != bl[i].to_bits() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn prop_sliding_envelope_bitwise_matches_batch() {
+    let cfg = PropConfig::default();
+    forall_vec(&cfg, 8, 80, 4.0, |xs| {
+        // shapes derived from the case so radii sweep the non-degenerate
+        // (2r < t), boundary and degenerate (2r >= t) regimes
+        let t = 2 + xs.len() % 13;
+        (0..=t).step_by(1 + t / 4).all(|r| sliding_matches_batch(xs, t, r))
+    });
+}
+
+#[test]
+fn prop_sliding_envelope_survives_ties_and_signed_zero() {
+    let cfg = PropConfig::default();
+    forall_vec(&cfg, 8, 64, 4.0, |xs| {
+        // quantize onto a 5-value grid containing both zero signs:
+        // repeated extrema (ties) now occur in nearly every window, the
+        // regime where a wrong tie-break picks a different bit pattern
+        let grid: Vec<f64> = xs
+            .iter()
+            .map(|&v| match (v.round() as i64).clamp(-2, 2) {
+                -2 => -1.0,
+                -1 => -0.0,
+                0 => 0.0,
+                1 => 1.0,
+                _ => 2.0,
+            })
+            .collect();
+        let t = 3 + xs.len() % 9;
+        [0, 1, t / 2, t].iter().all(|&r| sliding_matches_batch(&grid, t, r))
+    });
+}
+
+#[test]
+fn prop_inc_znorm_tracks_batch_statistics() {
+    let cfg = PropConfig::default();
+    forall_vec(&cfg, 4, 72, 5.0, |xs| {
+        let t = 2 + xs.len() % 11;
+        let mut inc = IncZnorm::new(t);
+        for (p, &v) in xs.iter().enumerate() {
+            let evicted = if p >= t { Some(xs[p - t]) } else { None };
+            inc.push(v, evicted);
+            let lo = (p + 1).saturating_sub(t);
+            let win = &xs[lo..=p];
+            let n = win.len() as f64;
+            let mean = win.iter().sum::<f64>() / n;
+            let var = (win.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).max(0.0);
+            if (inc.mean() - mean).abs() > 1e-9 || (inc.std() - var.sqrt()).abs() > 1e-8 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// A small deterministic corpus of window-length series (label = i % 2).
+fn tiny_index(t: usize, n: usize, seed: u64, znorm: bool) -> Arc<Index> {
+    let mut rng = Pcg64::new(seed);
+    let pairs: Vec<(usize, Vec<f64>)> = (0..n)
+        .map(|i| (i % 2, (0..t).map(|_| rng.normal()).collect()))
+        .collect();
+    let set = from_pairs(pairs);
+    let band = (t / 4).max(1);
+    Arc::new(if znorm {
+        Index::build_znormalized(&set, band, 1)
+    } else {
+        Index::build(&set, band, 1)
+    })
+}
+
+/// Every reported window must equal a batch `knn_values` over the same
+/// window — neighbor bits AND the full prune-counter accounting.
+fn monitor_matches_batch(stream: &[f64], index: &Arc<Index>, k: usize) -> bool {
+    let t = index.t;
+    if stream.len() < t {
+        return true;
+    }
+    let eng = SearchEngine::new(Arc::clone(index), Cascade::default());
+    let mut mon = StreamMonitor::new(SearchEngine::new(Arc::clone(index), Cascade::default()), k, None)
+        .unwrap();
+    for (p, &v) in stream.iter().enumerate() {
+        let rep = mon.push(v).unwrap();
+        if p + 1 < t {
+            if rep.is_some() {
+                return false;
+            }
+            continue;
+        }
+        let rep = match rep {
+            Some(r) => r,
+            None => return false,
+        };
+        let want = eng.knn_values(&stream[p + 1 - t..=p], k);
+        if rep.approx
+            || rep.window_start != (p + 1 - t) as u64
+            || rep.neighbors.len() != want.neighbors.len()
+            || rep.stats != want.stats
+        {
+            return false;
+        }
+        for (g, w) in rep.neighbors.iter().zip(&want.neighbors) {
+            if g.train_idx != w.train_idx || g.dist.to_bits() != w.dist.to_bits() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn prop_stream_monitor_bitwise_matches_batch_search() {
+    let cfg = PropConfig::default();
+    let raw = tiny_index(9, 7, 0xfeed, false);
+    let znormed = tiny_index(9, 7, 0xfeed, true);
+    forall_vec(&cfg, 9, 60, 3.0, |xs| {
+        monitor_matches_batch(xs, &raw, 3) && monitor_matches_batch(xs, &znormed, 3)
+    });
+}
+
+#[test]
+fn prop_rws_full_budget_has_perfect_recall() {
+    let cfg = PropConfig::default();
+    let index = tiny_index(8, 6, 0xbead, false);
+    let rws = RwsConfig {
+        d: 4,
+        candidates: index.len(), // budget covers the corpus: exact by construction
+        audit_every: 1,
+        ..RwsConfig::default()
+    };
+    forall_vec(&cfg, 8, 48, 3.0, |xs| {
+        let eng = SearchEngine::new(Arc::clone(&index), Cascade::default());
+        let mut mon =
+            StreamMonitor::new(SearchEngine::new(Arc::clone(&index), Cascade::default()), 2, Some(rws))
+                .unwrap();
+        for (p, &v) in xs.iter().enumerate() {
+            if let Some(rep) = mon.push(v).unwrap() {
+                if !rep.approx || rep.recall != Some(1.0) {
+                    return false;
+                }
+                let want = eng.knn_values(&xs[p + 1 - index.t..=p], 2);
+                for (g, w) in rep.neighbors.iter().zip(&want.neighbors) {
+                    if g.train_idx != w.train_idx || g.dist.to_bits() != w.dist.to_bits() {
+                        return false;
+                    }
+                }
+            }
+        }
+        mon.stats().recall().map_or(true, |r| r == 1.0)
+    });
+}

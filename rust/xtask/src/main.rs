@@ -11,7 +11,9 @@
 //!    `.to_vec()` inside the DP kernel hot paths: `rust/src/measures/`
 //!    (minus `workspace.rs`, which *is* the scratch allocator, and
 //!    `spec.rs`, which is config/serialization) plus
-//!    `rust/src/search/early.rs`.  Kernels must draw scratch from
+//!    `rust/src/search/early.rs`, `rust/src/search/lanes.rs`, and the
+//!    per-sample streaming monitor `rust/src/stream/`.  Kernels must
+//!    draw scratch from
 //!    `DpWorkspace`.  Documented reference implementations opt out with
 //!    `// lint:allow(hot-alloc): <why>` on the same line or up to two
 //!    lines above (one marker line covers a two-line allocation pair).
@@ -123,6 +125,12 @@ fn rel_of(root: &Path, path: &Path) -> String {
 
 fn hot_alloc_applies(rel: &str) -> bool {
     if rel == "rust/src/search/early.rs" || rel == "rust/src/search/lanes.rs" {
+        return true;
+    }
+    // the streaming monitor runs its cascade per ingested sample — the
+    // hottest path in the tree; every steady-state buffer must come
+    // from the session's reusable scratch
+    if rel.starts_with("rust/src/stream/") {
         return true;
     }
     match rel.strip_prefix("rust/src/measures/") {
@@ -792,6 +800,17 @@ fn lane_kernel(t: usize, lanes: usize) -> f64 {
 }
 "#;
 
+const FIX_HOT_ALLOC_STREAM: &str = r#"
+fn push(&mut self, v: f64) -> Option<Report> {
+    let window = self.ring.to_vec();
+    let mut upper = Vec::new();
+    let staged = vec![0.0; self.t];
+    // lint:allow(hot-alloc): fixture escape hatch for staging scratch.
+    let allowed = vec![0.0; self.t];
+    Some(Report { window, upper, staged, allowed })
+}
+"#;
+
 const FIX_SAFETY: &str = r#"
 struct P(*const u8);
 unsafe impl Send for P {}
@@ -869,6 +888,11 @@ fn self_test_cases() -> Vec<SelfTestCase> {
         FIX_HOT_ALLOC_LANE,
         &sanitize(FIX_HOT_ALLOC_LANE),
     );
+    let stream = check_hot_alloc(
+        "fixture_stream.rs",
+        FIX_HOT_ALLOC_STREAM,
+        &sanitize(FIX_HOT_ALLOC_STREAM),
+    );
     let safety = check_safety("fixture.rs", FIX_SAFETY, &sanitize(FIX_SAFETY));
     let err_ok = error_coverage_core(FIX_ERROR_OK, FIX_SERVER);
     let err_bad = error_coverage_core(FIX_ERROR_BAD, FIX_SERVER);
@@ -887,6 +911,11 @@ fn self_test_cases() -> Vec<SelfTestCase> {
             name: "hot-alloc fires on lane-kernel scratch, honors allow",
             expect: 3,
             found: lane.len(),
+        },
+        SelfTestCase {
+            name: "hot-alloc fires on per-sample stream push scratch, honors allow",
+            expect: 3,
+            found: stream.len(),
         },
         SelfTestCase {
             name: "safety-comment fires on uncovered unsafe only",
@@ -971,10 +1000,26 @@ mod tests {
     }
 
     #[test]
+    fn hot_alloc_stream_fixture_fires_outside_marker_window() {
+        let v = check_hot_alloc(
+            "f.rs",
+            FIX_HOT_ALLOC_STREAM,
+            &sanitize(FIX_HOT_ALLOC_STREAM),
+        );
+        let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+        // .to_vec window copy, Vec::new envelope, vec! staging — not
+        // the allowed vec! right under the marker.
+        assert_eq!(lines, vec![3, 4, 5]);
+    }
+
+    #[test]
     fn hot_alloc_scope_covers_lane_kernels() {
         assert!(hot_alloc_applies("rust/src/search/lanes.rs"));
         assert!(hot_alloc_applies("rust/src/search/early.rs"));
         assert!(hot_alloc_applies("rust/src/measures/dtw.rs"));
+        // the per-sample streaming monitor is all hot path
+        assert!(hot_alloc_applies("rust/src/stream/mod.rs"));
+        assert!(hot_alloc_applies("rust/src/stream/rws.rs"));
         // the engine assembles groups (cold per query), workspace/spec
         // are the arena and config layers — all out of scope
         assert!(!hot_alloc_applies("rust/src/search/engine.rs"));
